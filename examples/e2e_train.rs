@@ -1,0 +1,110 @@
+//! End-to-end validation driver (DESIGN.md §6).
+//!
+//! Trains the `e2e` preset (the largest exported model) on the synthetic
+//! math corpus with AdaGradSelect, logging the loss curve, running
+//! periodic held-out evals, and finishing with greedy-decode accuracy on
+//! both suites — proving L1 (Pallas kernels in the HLO), L2 (fwd/bwd) and
+//! L3 (selection/optimizer/residency/data/eval) compose. The reference
+//! run is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train -- --steps 400 --method adagradselect
+//! ```
+
+use std::path::PathBuf;
+
+use adagradselect::config::{Method, RunConfig};
+use adagradselect::data::{MathGen, Split, Suite};
+use adagradselect::eval::Evaluator;
+use adagradselect::runtime::Engine;
+use adagradselect::telemetry::CsvWriter;
+use adagradselect::train::Trainer;
+use adagradselect::util::cli::Args;
+use adagradselect::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&argv, &[])?;
+    let preset = args.str_or("preset", "e2e");
+    let steps = args.u64_or("steps", 400)?;
+    let pct = args.f64_or("pct", 30.0)?;
+    let method = args.str_or("method", "adagradselect");
+    let eval_every = args.u64_or("eval-every", 100)?;
+    let out = PathBuf::from(args.str_or("out", "results"));
+    args.finish()?;
+    std::fs::create_dir_all(&out).ok();
+
+    let engine = Engine::load("artifacts")?;
+    let mut cfg = RunConfig::preset_defaults(&preset);
+    cfg.method = match method.as_str() {
+        "full" => Method::Full,
+        "lora" => Method::Lora { double_rank: false },
+        "topk" => Method::TopK { pct },
+        _ => Method::ags(pct),
+    };
+    cfg.train.steps = steps;
+    cfg.train.steps_per_epoch = (steps / 3).max(1);
+    cfg.train.log_every = 0;
+    cfg.metrics_path = Some(out.join("e2e_metrics.jsonl"));
+
+    let preset_info = engine.manifest.preset(&preset)?;
+    println!(
+        "e2e: {} ({} params, {} blocks) · {} · {} steps",
+        preset,
+        preset_info.total_params,
+        preset_info.n_blocks(),
+        cfg.method.label(),
+        steps
+    );
+
+    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    let ev = Evaluator::new(&engine, &preset, 32)?;
+    let gsm_eval = MathGen::new(Suite::Gsm8kSim, Split::Eval, 0).problems(0, 64);
+
+    let mut curve = CsvWriter::create(out.join("e2e_loss_curve.csv"), &["step", "loss", "lr"])?;
+    let t0 = std::time::Instant::now();
+    let mut last = f32::NAN;
+    for step in 0..steps {
+        last = trainer.step_once()?;
+        let rec = trainer.metrics.records.last().unwrap();
+        curve.row(&[step.to_string(), format!("{:.4}", rec.loss), format!("{:.6}", rec.lr)])?;
+        if step % 20 == 0 {
+            println!("step {step:>5}  loss {last:.4}");
+        }
+        if eval_every > 0 && step > 0 && step % eval_every == 0 {
+            let acc = ev.accuracy(&trainer.eval_state()?, &gsm_eval)?;
+            println!(
+                "  [eval @ {step}] gsm8k-sim {:.1}% (format {:.0}%)",
+                acc.accuracy * 100.0,
+                acc.format_rate * 100.0
+            );
+        }
+    }
+    curve.flush()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let summary = trainer.summary(wall, last);
+
+    println!("\n== e2e summary ==");
+    println!("{}", summary.to_json().to_string());
+
+    let state = trainer.eval_state()?;
+    for suite in [Suite::Gsm8kSim, Suite::MathSim] {
+        let probs = MathGen::new(suite, Split::Eval, 0).problems(0, 128);
+        let res = ev.accuracy(&state, &probs)?;
+        println!(
+            "{}: {:.1}% ({}/{}), format rate {:.0}%",
+            suite.name(),
+            res.accuracy * 100.0,
+            res.n_correct,
+            res.n,
+            res.format_rate * 100.0
+        );
+    }
+    state.save(out.join("e2e_final.ckpt"))?;
+    println!(
+        "loss curve -> {:?}; checkpoint -> {:?}",
+        out.join("e2e_loss_curve.csv"),
+        out.join("e2e_final.ckpt")
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: fine-tune the tiny preset with AdaGradSelect and evaluate.
+//!
+//! ```bash
+//! make artifacts                       # once
+//! cargo run --release --example quickstart
+//! ```
+
+use adagradselect::data::{MathGen, Split, Suite};
+use adagradselect::prelude::*;
+
+fn main() -> Result<()> {
+    // 1. load the AOT artifacts (compiled once by `make artifacts`)
+    let engine = Engine::load("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. configure a run: AdaGradSelect updating 30% of blocks per step
+    let mut cfg = RunConfig::preset_defaults("test-tiny");
+    cfg.method = Method::ags(30.0);
+    cfg.train.steps = 120;
+    cfg.train.steps_per_epoch = 60;
+    cfg.train.log_every = 20;
+
+    // 3. train
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    let summary = trainer.run()?;
+    println!(
+        "\ntrained {} steps: loss {:.3} -> {:.3} (explore {} / exploit {})",
+        summary.steps,
+        trainer.metrics.records[0].loss,
+        summary.tail_loss,
+        summary.explore_steps,
+        summary.exploit_steps,
+    );
+    println!(
+        "optimizer VRAM: peak {:.1} KB (full FT would be {:.1} KB)",
+        summary.opt_vram_peak_bytes as f64 / 1e3,
+        (2 * trainer.preset.total_params * 2) as f64 / 1e3,
+    );
+    println!("selection histogram: {:?}", summary.selection_histogram);
+
+    // 4. evaluate with greedy decoding on the held-out suite
+    let ev = Evaluator::new(&engine, "test-tiny", 24)?;
+    let problems = MathGen::new(Suite::Gsm8kSim, Split::Eval, 0).problems(0, 32);
+    let res = ev.accuracy(&trainer.eval_state()?, &problems)?;
+    println!(
+        "gsm8k-sim accuracy after {} steps: {:.1}% ({} answers well-formed)",
+        summary.steps,
+        res.accuracy * 100.0,
+        (res.format_rate * res.n as f64) as usize,
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Serving-style example: batched greedy decoding with latency and
+//! throughput reporting.
+//!
+//! Loads a checkpoint (or quick-trains one when none is given), then
+//! pushes batches of math problems through the `decode_step` artifact the
+//! way a serving frontend would, reporting per-batch latency percentiles
+//! and end-to-end token throughput.
+//!
+//! ```bash
+//! cargo run --release --example serve_eval -- --requests 64
+//! cargo run --release --example serve_eval -- --checkpoint results/e2e_final.ckpt --preset e2e
+//! ```
+
+use adagradselect::config::{Method, RunConfig};
+use adagradselect::data::{extract_answer, MathGen, Split, Suite};
+use adagradselect::eval::Evaluator;
+use adagradselect::model::ModelState;
+use adagradselect::runtime::Engine;
+use adagradselect::train::Trainer;
+use adagradselect::util::cli::Args;
+use adagradselect::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&argv, &[])?;
+    let preset = args.str_or("preset", "test-tiny");
+    let requests = args.usize_or("requests", 64)?;
+    let max_new = args.usize_or("max-new", 24)?;
+    let checkpoint = args.str_opt("checkpoint");
+    let warm_steps = args.u64_or("warm-steps", 60)?;
+    args.finish()?;
+
+    let engine = Engine::load("artifacts")?;
+    let state: ModelState = match checkpoint {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            ModelState::load(path)?
+        }
+        None => {
+            println!("no checkpoint given; quick-training {warm_steps} steps first");
+            let mut cfg = RunConfig::preset_defaults(&preset);
+            cfg.method = Method::ags(30.0);
+            cfg.train.steps = warm_steps;
+            cfg.train.steps_per_epoch = (warm_steps / 2).max(1);
+            cfg.train.log_every = 0;
+            let mut t = Trainer::new(&engine, cfg)?;
+            t.run()?;
+            t.eval_state()?
+        }
+    };
+
+    let ev = Evaluator::new(&engine, &preset, max_new)?;
+    let p = engine.manifest.preset(&preset)?;
+    let batch = p.model.batch;
+    let problems = MathGen::new(Suite::Gsm8kSim, Split::Eval, 7).problems(1000, requests);
+
+    // serve batches, measuring per-batch latency
+    let device_blocks: Vec<xla::PjRtBuffer> =
+        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let tok = ev.tokenizer().clone();
+    let mut latencies = Vec::new();
+    let mut tokens_out = 0usize;
+    let mut correct = 0usize;
+    let t_all = std::time::Instant::now();
+    for chunk in problems.chunks(batch) {
+        let prompts: Vec<Vec<i32>> =
+            chunk.iter().map(|p| tok.encode(&p.prompt(), true, false)).collect();
+        let t0 = std::time::Instant::now();
+        let gens = ev.generate(&device_blocks, &prompts)?;
+        latencies.push(t0.elapsed().as_secs_f64());
+        for (p, g) in chunk.iter().zip(&gens) {
+            tokens_out += g.len();
+            if extract_answer(&tok.decode_until_eos(g)) == Some(p.answer) {
+                correct += 1;
+            }
+        }
+    }
+    let total_s = t_all.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+
+    println!("\n== serving report ({preset}, batch={batch}, max_new={max_new}) ==");
+    println!("requests:        {requests} ({} batches)", latencies.len());
+    println!("batch latency:   p50 {:.1} ms  p95 {:.1} ms", pct(0.5) * 1e3, pct(0.95) * 1e3);
+    println!(
+        "throughput:      {:.1} req/s, {:.0} generated tokens/s",
+        requests as f64 / total_s,
+        tokens_out as f64 / total_s
+    );
+    println!("exact match:     {correct}/{requests}");
+    Ok(())
+}

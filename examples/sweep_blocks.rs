@@ -1,0 +1,47 @@
+//! Fig.-3-style sweep: accuracy / loss vs % of blocks selected.
+//!
+//! Reproduces the paper's preliminary study (Gradient-Guided Block
+//! Selection, Algorithm 1) on any preset, printing one row per setting and
+//! writing the CSV the plotting side of Fig. 3 consumes.
+//!
+//! ```bash
+//! cargo run --release --example sweep_blocks -- --preset test-tiny --steps 60
+//! cargo run --release --example sweep_blocks -- --preset qwen-sim --steps 300
+//! ```
+
+use std::path::PathBuf;
+
+use adagradselect::experiments::{fig3_on, ExpOptions};
+use adagradselect::runtime::Engine;
+use adagradselect::util::cli::Args;
+use adagradselect::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&argv, &[])?;
+    let preset = args.str_or("preset", "test-tiny");
+    let steps = args.u64_or("steps", 60)?;
+    let eval_problems = args.usize_or("eval-problems", 64)?;
+    let pcts_raw = args.str_or("pcts", "10,20,30,50,75,100");
+    let out = args.str_or("out", "results");
+    args.finish()?;
+
+    let pcts: Vec<f64> =
+        pcts_raw.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    let engine = Engine::load("artifacts")?;
+    let opt = ExpOptions {
+        artifacts_dir: PathBuf::from("artifacts"),
+        out_dir: PathBuf::from(&out),
+        steps,
+        steps_per_epoch: (steps / 3).max(1),
+        eval_problems,
+        seed: 0,
+    };
+    println!("sweeping {preset} over pcts {pcts:?} ({steps} steps each)\n");
+    println!("{:>6} {:>12} {:>12}", "pct", "gsm8k-sim", "math-sim");
+    for (pct, gsm, math) in fig3_on(&engine, &opt, &preset, &pcts)? {
+        println!("{pct:>5}% {:>11.1}% {:>11.1}%", gsm * 100.0, math * 100.0);
+    }
+    println!("\nCSV written to {out}/fig3_accuracy_vs_pct.csv");
+    Ok(())
+}

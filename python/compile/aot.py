@@ -1,0 +1,174 @@
+"""AOT compile path: lower every L2 entrypoint to HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Run once via ``make artifacts``; the Rust binary is self-contained
+afterwards.  Outputs in ``artifacts/``:
+
+  {preset}_train_step.hlo.txt         loss + per-block grads (XLA attention)
+  {preset}_train_step_pallas.hlo.txt  same through the Pallas kernel
+  {preset}_train_step_lora.hlo.txt    loss + LoRA-adapter grads (r = preset rank)
+  {preset}_train_step_lora2.hlo.txt   same at rank*2 (the paper's r=256 analogue)
+  {preset}_eval_loss.hlo.txt          loss only
+  {preset}_decode_step.hlo.txt        full logits for greedy decoding
+  {preset}_lora_merge.hlo.txt         W += scale*A@B per layer (rank)
+  {preset}_lora_merge2.hlo.txt        merge at rank*2
+  adamw_update.hlo.txt                fused Pallas AdamW on a 64Ki chunk
+  grad_norm_sq.hlo.txt                Pallas sum(g^2) on a 64Ki chunk
+  manifest.json                       block tables, shapes, entrypoints
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, presets
+from .kernels import adamw as adamw_kernel
+from .kernels import grad_norm as grad_norm_kernel
+from . import tokenizer
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, specs, out_path: str) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return {
+        "file": os.path.basename(out_path),
+        "n_inputs": len(specs),
+        "bytes": len(text),
+        "lower_s": round(time.time() - t0, 2),
+    }
+
+
+def flat_specs(blocks):
+    return [jax.ShapeDtypeStruct((b.numel,), F32) for b in blocks]
+
+
+def export_preset(cfg: presets.ModelConfig, outdir: str, verbose: bool = True) -> dict:
+    b, s = cfg.batch, cfg.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), I32)
+    entry: dict = {}
+
+    def log(tag, info):
+        entry[tag] = info
+        if verbose:
+            print(f"  {cfg.name}/{tag}: {info['bytes']/1e6:.2f} MB "
+                  f"({info['lower_s']}s lower)", flush=True)
+
+    ts, blocks = model.make_train_step(cfg, "xla")
+    log("train_step", export(ts, flat_specs(blocks) + [tok, tok],
+                             f"{outdir}/{cfg.name}_train_step.hlo.txt"))
+
+    if cfg.name in presets.PALLAS_PRESETS:
+        tsp, _ = model.make_train_step(cfg, "pallas")
+        log("train_step_pallas", export(tsp, flat_specs(blocks) + [tok, tok],
+                                        f"{outdir}/{cfg.name}_train_step_pallas.hlo.txt"))
+
+    for suffix, rank in (("", cfg.lora_rank), ("2", cfg.lora_rank * 2)):
+        lts, _, lblocks = model.make_lora_train_step(cfg, rank, "xla")
+        log(f"train_step_lora{suffix}",
+            export(lts, flat_specs(blocks) + flat_specs(lblocks) + [tok, tok],
+                   f"{outdir}/{cfg.name}_train_step_lora{suffix}.hlo.txt"))
+        mg, layer_spec, lora_spec = model.make_lora_merge(cfg, rank)
+        log(f"lora_merge{suffix}",
+            export(mg, [jax.ShapeDtypeStruct((layer_spec.numel,), F32),
+                        jax.ShapeDtypeStruct((lora_spec.numel,), F32)],
+                   f"{outdir}/{cfg.name}_lora_merge{suffix}.hlo.txt"))
+
+    ev, _ = model.make_eval_loss(cfg, "xla")
+    log("eval_loss", export(ev, flat_specs(blocks) + [tok, tok],
+                            f"{outdir}/{cfg.name}_eval_loss.hlo.txt"))
+
+    dc, _ = model.make_decode_step(cfg, "xla")
+    log("decode_step", export(dc, flat_specs(blocks) + [tok],
+                              f"{outdir}/{cfg.name}_decode_step.hlo.txt"))
+
+    lblocks = presets.lora_block_table(cfg, cfg.lora_rank)
+    lblocks2 = presets.lora_block_table(cfg, cfg.lora_rank * 2)
+    return {
+        "model": cfg.to_json(),
+        "blocks": [bl.to_json() for bl in presets.block_table(cfg)],
+        "lora_blocks": [bl.to_json() for bl in lblocks],
+        "lora_blocks2": [bl.to_json() for bl in lblocks2],
+        "total_params": presets.total_params(cfg),
+        "artifacts": entry,
+    }
+
+
+def export_shared(outdir: str) -> dict:
+    c = adamw_kernel.CHUNK
+    vec = jax.ShapeDtypeStruct((c,), F32)
+    one = jax.ShapeDtypeStruct((1,), F32)
+
+    def adamw_fn(p, g, m, v, lr, step):
+        return adamw_kernel.adamw_update(p, g, m, v, lr, step)
+
+    def norm_fn(g):
+        return (grad_norm_kernel.grad_norm_sq(g),)
+
+    out = {}
+    out["adamw_update"] = export(adamw_fn, [vec] * 4 + [one, one],
+                                 f"{outdir}/adamw_update.hlo.txt")
+    out["grad_norm_sq"] = export(norm_fn, [vec], f"{outdir}/grad_norm_sq.hlo.txt")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--presets", default=",".join(presets.PRESETS),
+                    help="comma-separated preset names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = [n for n in args.presets.split(",") if n]
+    manifest = {
+        "version": 1,
+        "tokenizer": {
+            "chars": tokenizer.CHARS,
+            "vocab_size": tokenizer.VOCAB_SIZE,
+            "pad": tokenizer.PAD, "bos": tokenizer.BOS,
+            "eos": tokenizer.EOS, "unk": tokenizer.UNK,
+        },
+        "chunk_size": adamw_kernel.CHUNK,
+        "adamw": {"b1": adamw_kernel.B1, "b2": adamw_kernel.B2,
+                   "eps": adamw_kernel.EPS, "wd": adamw_kernel.WD},
+        "shared": export_shared(args.out),
+        "presets": {},
+    }
+    for name in names:
+        print(f"preset {name}:", flush=True)
+        manifest["presets"][name] = export_preset(presets.PRESETS[name], args.out)
+
+    with open(f"{args.out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json ({len(names)} presets)")
+
+
+if __name__ == "__main__":
+    main()

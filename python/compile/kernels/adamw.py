@@ -1,0 +1,87 @@
+"""Fused AdamW chunk update as a Pallas kernel.
+
+AdaGradSelect's custom selective AdamW (paper §3.3) touches only the
+parameters of the selected blocks each step.  The L3 coordinator stores
+each block as one flat f32 vector; updates stream through this kernel in
+fixed ``CHUNK``-sized pieces (64Ki elements = 8x128-lane friendly, pure
+VPU element-wise work — a single pass over p/g/m/v at HBM roofline on
+real hardware).
+
+The kernel is deliberately single-pass: m, v, bias correction, decoupled
+weight decay and the parameter write all happen on one VMEM-resident
+tile, so each selected parameter costs exactly 4 HBM reads + 3 writes.
+
+Exported standalone as ``adamw_update.hlo.txt`` (one executable reused
+for every block of every preset); the Rust hot path also has a native
+implementation — the two are parity-tested from Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 65536
+
+# AdamW hyperparameters are baked at trace time; lr and step stay dynamic
+# (the coordinator anneals lr and owns per-block step counts).
+B1 = 0.9
+B2 = 0.999
+EPS = 1e-8
+WD = 0.01
+
+
+def _adamw_kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, step_ref, po_ref, mo_ref, vo_ref,
+                  *, b1, b2, eps, wd):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    lr = lr_ref[0]
+    step = step_ref[0]
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - b1**step)
+    v_hat = v_new / (1.0 - b2**step)
+    po_ref[...] = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * p)
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+def adamw_update(p, g, m, v, lr, step, *, b1=B1, b2=B2, eps=EPS, wd=WD,
+                 interpret: bool = True):
+    """Fused AdamW on a flat f32 chunk.
+
+    Args:
+      p, g, m, v: ``f32[n]`` (any n; one grid step per CHUNK when n is a
+        CHUNK multiple, else a single whole-array block).
+      lr: ``f32[1]`` learning rate.
+      step: ``f32[1]`` post-increment step count (t >= 1) for bias
+        correction.
+
+    Returns:
+      ``(p_new, m_new, v_new)`` each ``f32[n]``.
+    """
+    (n,) = p.shape
+    lr = jnp.asarray(lr, jnp.float32).reshape(1)
+    step = jnp.asarray(step, jnp.float32).reshape(1)
+    if n % CHUNK == 0 and n > CHUNK:
+        grid = (n // CHUNK,)
+        vec = pl.BlockSpec((CHUNK,), lambda i: (i,))
+        scalar = pl.BlockSpec((1,), lambda i: (0,))
+    else:
+        grid = (1,)
+        vec = pl.BlockSpec((n,), lambda i: (0,))
+        scalar = pl.BlockSpec((1,), lambda i: (0,))
+    kernel = functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps, wd=wd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, scalar, scalar],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(p, g, m, v, lr, step)

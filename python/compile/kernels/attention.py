@@ -1,0 +1,310 @@
+"""Flash-attention-style fused attention as a Pallas kernel (fwd + bwd).
+
+This is the L1 compute hot-spot of the AdaGradSelect stack: the paper
+fine-tunes decoder-only SLMs whose step time is dominated by attention +
+MLP matmuls.  The CUDA world expresses the tiled online-softmax schedule
+with threadblocks over SRAM tiles; here the same schedule is expressed
+with a Pallas grid + ``BlockSpec`` over VMEM tiles (see DESIGN.md
+§Hardware-Adaptation):
+
+  * grid = (batch*heads, seq/block_q): one program instance owns one
+    ``[block_q, d_head]`` query tile resident in VMEM.
+  * K/V for the whole (small) sequence are staged into VMEM per instance;
+    the inner ``fori_loop`` walks ``block_k`` tiles performing the online
+    softmax (running max ``m``, normalizer ``l``, accumulator ``acc``) —
+    the classic flash-attention recurrence.
+  * matmuls accumulate in f32 and are shaped as ``[block_q, d] x [d,
+    block_k]`` — multiples of the MXU 128x128 tile once block sizes are
+    128 on real TPU; on CPU PJRT we run ``interpret=True`` so the kernel
+    lowers to plain HLO and the same artifact executes everywhere.
+
+VMEM footprint per instance (f32):
+  q tile  block_q*d + k,v  2*seq*d + acc block_q*d + stats 2*block_q
+  = (2*block_q + 2*seq)*d + 2*block_q floats; for seq=128, d=32,
+  block_q=32 this is ~13 KiB — far under the ~16 MiB VMEM budget, leaving
+  room to scale seq to 2k/d to 128 on real hardware.
+
+The backward pass uses the standard recomputation scheme (Dao et al.):
+the forward saves only ``o`` and the row logsumexp ``lse``; backward
+recomputes P tiles and produces dq (one kernel, grid over q tiles) and
+dk/dv (one kernel, grid over k tiles).  ``jax.custom_vjp`` wires both
+into the L2 model so ``jax.grad`` of the whole transformer flows through
+the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, sm_scale, block_k, causal):
+    """One program instance: one [block_q, d] query tile vs all K/V tiles."""
+    block_q, d = q_ref.shape
+    seq = k_ref.shape[0]
+    q_idx = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    q_pos = q_idx * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_tile = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k_tile.astype(jnp.float32).T  # [block_q, block_k]
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v_tile.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    n_kb = seq // block_k
+    if causal:
+        # tiles strictly above the diagonal contribute nothing; skip them.
+        n_kb = (q_idx + 1) * block_q // block_k
+        n_kb = jnp.maximum(n_kb, 1)
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m_i + jnp.log(l_i)
+
+
+def _fwd(q, k, v, *, causal, sm_scale, block_q, block_k, interpret):
+    b, h, s, d = q.shape
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    grid = (bh, s // block_q)
+    kernel = functools.partial(
+        _fwd_kernel, sm_scale=sm_scale, block_k=block_k, causal=causal
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return o.reshape(b, h, s, d), lse.reshape(b, h, s)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, sm_scale, block_k, causal
+):
+    block_q, d = q_ref.shape
+    seq = k_ref.shape[0]
+    q_idx = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    q_pos = q_idx * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, dq):
+        k_tile = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = (q @ k_tile.astype(jnp.float32).T) * sm_scale
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = do @ v_tile.astype(jnp.float32).T
+        ds = p * (dp - delta[:, None]) * sm_scale
+        return dq + ds @ k_tile.astype(jnp.float32)
+
+    n_kb = seq // block_k
+    if causal:
+        n_kb = jnp.maximum((q_idx + 1) * block_q // block_k, 1)
+    dq = jax.lax.fori_loop(0, n_kb, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, sm_scale, block_q, causal
+):
+    block_k, d = k_ref.shape
+    seq = q_ref.shape[0]
+    k_idx = pl.program_id(1)
+    k_tile = k_ref[...].astype(jnp.float32)
+    v_tile = v_ref[...].astype(jnp.float32)
+    k_pos = k_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def body(qb, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (pl.dslice(qb * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        do = pl.load(do_ref, (pl.dslice(qb * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        lse = pl.load(lse_ref, (pl.dslice(qb * block_q, block_q),))
+        delta = pl.load(delta_ref, (pl.dslice(qb * block_q, block_q),))
+        s = (q @ k_tile.T) * sm_scale
+        if causal:
+            q_pos = qb * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [block_q, block_k]
+        dv = dv + p.T @ do
+        dp = do @ v_tile.T
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    n_qb = seq // block_q
+    start = 0
+    if causal:
+        # q tiles strictly before this k tile's diagonal contribute nothing.
+        start = (k_idx * block_k) // block_q
+
+    zeros = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(start, n_qb, body, (zeros, zeros))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(causal, sm_scale, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    b, h, s, d = q.shape
+    bh = b * h
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # [b,h,s]
+
+    qf, kf, vf = (x.reshape(bh, s, d) for x in (q, k, v))
+    dof = do.reshape(bh, s, d)
+    lsef = lse.reshape(bh, s)
+    deltaf = delta.reshape(bh, s)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, sm_scale=sm_scale, block_k=block_k, causal=causal
+        ),
+        grid=(bh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((None, block_q), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, deltaf)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, sm_scale=sm_scale, block_q=block_q, causal=causal
+        ),
+        grid=(bh, s // block_k),
+        in_specs=[
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, deltaf)
+
+    unflat = lambda x: x.reshape(b, h, s, d)
+    return unflat(dq), unflat(dk), unflat(dv)
+
+
+# ---------------------------------------------------------------------------
+# public api
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q,
+    k,
+    v,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+):
+    """Fused causal attention via Pallas; differentiable (custom VJP).
+
+    Shapes: q, k, v ``f32[batch, heads, seq, d_head]`` with ``seq`` a
+    multiple of ``block_q`` and ``block_k``.  ``interpret=True`` is
+    mandatory on CPU PJRT (Mosaic custom-calls only run on real TPUs).
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, _ = _fwd(
+        q, k, v, causal=causal, sm_scale=sm_scale, block_q=block_q,
+        block_k=block_k, interpret=interpret,
+    )
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, lse = _fwd(
+        q, k, v, causal=causal, sm_scale=sm_scale, block_q=block_q,
+        block_k=block_k, interpret=interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, sm_scale, block_q, block_k, interpret, res, do):
+    if sm_scale is None:
+        sm_scale = 1.0 / (res[0].shape[-1] ** 0.5)
+    return _bwd(causal, sm_scale, block_q, block_k, interpret, res, do)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,51 @@
+"""Blockwise squared-L2 gradient-norm reduction as a Pallas kernel.
+
+Algorithm 1 (Gradient-Guided Block Selection) ranks blocks by the L2 norm
+of their gradients.  The coordinator accumulates ``sum(g*g)`` per block;
+this kernel computes one chunk's partial sum as a tree reduction over a
+VMEM-resident tile (VPU work; HBM-bandwidth bound — one read per element).
+
+Exported standalone as ``grad_norm_sq.hlo.txt``; parity-tested against the
+Rust native reduction used on the hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _norm_kernel(g_ref, o_ref):
+    i = pl.program_id(0)
+    g = g_ref[...].astype(jnp.float32)
+    part = jnp.sum(g * g)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = 0.0
+
+    o_ref[0] += part
+
+
+def grad_norm_sq(g, *, block: int = 65536, interpret: bool = True):
+    """``sum(g*g)`` over a flat vector -> ``f32[1]``.
+
+    Accumulates one VMEM tile per grid step into a single output cell
+    (sequential grid ⇒ the read-modify-write is race-free).
+    """
+    (n,) = g.shape
+    if n % block == 0 and n > block:
+        grid = (n // block,)
+        spec = pl.BlockSpec((block,), lambda i: (i,))
+    else:
+        grid = (1,)
+        spec = pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        _norm_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=interpret,
+    )(g)

@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only.  The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` across a hypothesis sweep of
+shapes/dtypes; the reference is also what the L2 model uses on its
+``kernel="xla"`` path (the fast path on CPU PJRT, where Pallas runs in
+interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Reference multi-head attention.
+
+    Args:
+      q, k, v: ``f32[batch, heads, seq, d_head]``.
+      causal: apply a causal (lower-triangular) mask.
+      sm_scale: softmax scale; defaults to ``1/sqrt(d_head)``.
+
+    Returns:
+      ``f32[batch, heads, seq, d_head]``.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * sm_scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def adamw_ref(p, g, m, v, lr, step, *, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    """Reference fused AdamW update on a flat chunk.
+
+    Matches the update AdaGradSelect's custom selective AdamW applies to a
+    *selected* block (decoupled weight decay, bias-corrected moments).
+
+    Args:
+      p, g, m, v: ``f32[n]`` parameter / gradient / first / second moment.
+      lr: scalar learning rate (array or python float).
+      step: scalar step count **after** increment (t >= 1).
+
+    Returns:
+      ``(p_new, m_new, v_new)``.
+    """
+    step = jnp.asarray(step, dtype=jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - b1**step)
+    v_hat = v_new / (1.0 - b2**step)
+    p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * p)
+    return p_new, m_new, v_new
+
+
+def grad_norm_sq_ref(g):
+    """Reference blockwise squared-L2 reduction: ``sum(g*g)`` -> f32[]."""
+    g = g.astype(jnp.float32)
+    return jnp.sum(g * g)

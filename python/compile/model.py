@@ -1,0 +1,210 @@
+"""L2: decoder-only transformer fwd/bwd over block-flat parameters.
+
+The architecture mirrors the paper's SLM families (Qwen2.5 / LLaMA3.2 /
+Phi4-mini): pre-RMSNorm, rotary attention, SwiGLU MLP, untied LM head.
+Every traced entrypoint takes one flat f32 vector per block (see
+``packing.py``) so the Rust coordinator stays shape-oblivious, plus i32
+token/target matrices, and returns loss and per-block gradients.
+
+Attention runs through either the Pallas flash-attention kernel
+(``attn_impl="pallas"``, interpret mode — the artifact that would be the
+fast path on real TPUs) or the pure-jnp reference (``attn_impl="xla"`` —
+the fast path on CPU PJRT).  Both lower into the same HLO artifact
+format; Rust picks which file to load.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.ref import attention_ref
+from .packing import BlockSpec
+from .presets import ModelConfig, block_table, lora_block_table, LORA_PROJS
+from .tokenizer import PAD
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, theta):
+    """Rotary position embedding over [b, h, s, d_head] (d_head even)."""
+    b, h, s, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [s, half]
+    cos = jnp.cos(angles)[None, None]
+    sin = jnp.sin(angles)[None, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, attn_impl):
+    if attn_impl == "pallas":
+        return flash_attention(q, k, v, True, None, 32, 32, True)
+    return attention_ref(q, k, v, causal=True)
+
+
+def layer_fwd(h, p, cfg: ModelConfig, attn_impl: str, lora=None, lora_scale=0.0):
+    """One transformer layer. ``p`` is the unpacked tensor dict; ``lora``
+    optionally carries adapter tensors applied as W + s*A@B."""
+
+    def proj(x, name):
+        y = x @ p[name]
+        if lora is not None:
+            y = y + (x @ lora[f"{name}_a"]) @ lora[f"{name}_b"] * lora_scale
+        return y
+
+    b, s, d = h.shape
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q = proj(x, "wq").reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = proj(x, "wk").reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = proj(x, "wv").reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    q = rope(q, cfg.rope_theta)
+    k = rope(k, cfg.rope_theta)
+    o = _attention(q, k, v, attn_impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    h = h + proj(o, "wo")
+
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    gate = jax.nn.silu(proj(x, "wg"))
+    up = proj(x, "wu")
+    h = h + proj(gate * up, "wd")
+    return h
+
+
+def forward(cfg: ModelConfig, blocks, flats, tokens, attn_impl="xla",
+            lora_blocks=None, lora_flats=None, lora_rank=0):
+    """Full forward: flat block vectors + tokens -> logits [b, s, vocab]."""
+    emb = blocks[0].unpack(flats[0])
+    h = emb["tok_emb"][tokens]
+    lora_scale = 2.0  # alpha/r with alpha=2r
+    for i in range(cfg.n_layers):
+        p = blocks[1 + i].unpack(flats[1 + i])
+        lora = None
+        if lora_flats is not None:
+            lora = lora_blocks[i].unpack(lora_flats[i])
+        h = layer_fwd(h, p, cfg, attn_impl, lora=lora, lora_scale=lora_scale)
+    head = blocks[-1].unpack(flats[-1])
+    h = rms_norm(h, head["ln_f"], cfg.norm_eps)
+    return h @ head["w_out"]
+
+
+def masked_ce_loss(logits, targets):
+    """Mean cross-entropy over non-pad target positions."""
+    mask = (targets != PAD).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# traced entrypoints (AOT-exported by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, attn_impl: str = "xla"):
+    """(flat_0..flat_n, tokens, targets) -> (loss, grad_0..grad_n)."""
+    blocks = block_table(cfg)
+    n = len(blocks)
+
+    def loss_fn(flats, tokens, targets):
+        logits = forward(cfg, blocks, flats, tokens, attn_impl)
+        return masked_ce_loss(logits, targets)
+
+    def train_step(*args):
+        flats = list(args[:n])
+        tokens, targets = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(loss_fn)(flats, tokens, targets)
+        return (loss, *grads)
+
+    return train_step, blocks
+
+
+def make_lora_train_step(cfg: ModelConfig, rank: int, attn_impl: str = "xla"):
+    """(base_0..base_n, lora_0..lora_L-1, tokens, targets) -> (loss, lora_grads...).
+
+    Base blocks are frozen: no gradients are computed or emitted for them —
+    exactly the LoRA training regime the paper benchmarks against."""
+    blocks = block_table(cfg)
+    lblocks = lora_block_table(cfg, rank)
+    n, nl = len(blocks), len(lblocks)
+
+    def loss_fn(lora_flats, base_flats, tokens, targets):
+        logits = forward(cfg, blocks, base_flats, tokens, attn_impl,
+                         lora_blocks=lblocks, lora_flats=lora_flats, lora_rank=rank)
+        return masked_ce_loss(logits, targets)
+
+    def train_step(*args):
+        base = list(args[:n])
+        lora = list(args[n : n + nl])
+        tokens, targets = args[n + nl], args[n + nl + 1]
+        loss, grads = jax.value_and_grad(loss_fn)(lora, base, tokens, targets)
+        return (loss, *grads)
+
+    return train_step, blocks, lblocks
+
+
+def make_eval_loss(cfg: ModelConfig, attn_impl: str = "xla"):
+    """(flat_0..flat_n, tokens, targets) -> loss (no gradients)."""
+    blocks = block_table(cfg)
+    n = len(blocks)
+
+    def eval_loss(*args):
+        flats = list(args[:n])
+        tokens, targets = args[n], args[n + 1]
+        logits = forward(cfg, blocks, flats, tokens, attn_impl)
+        return (masked_ce_loss(logits, targets),)
+
+    return eval_loss, blocks
+
+
+def make_decode_step(cfg: ModelConfig, attn_impl: str = "xla"):
+    """(flat_0..flat_n, tokens) -> logits f32[batch, seq, vocab].
+
+    The Rust greedy decoder indexes the position it cares about; returning
+    full logits keeps the artifact general (eval losses, sampling, etc.)."""
+    blocks = block_table(cfg)
+    n = len(blocks)
+
+    def decode_step(*args):
+        flats = list(args[:n])
+        tokens = args[n]
+        return (forward(cfg, blocks, flats, tokens, attn_impl),)
+
+    return decode_step, blocks
+
+
+def make_lora_merge(cfg: ModelConfig, rank: int):
+    """(layer_flat, lora_flat) -> merged layer_flat (W += scale * A @ B).
+
+    Used at eval time: the coordinator merges adapters into the base layer
+    vectors, then reuses the plain decode_step artifact."""
+    blocks = block_table(cfg)
+    lblocks = lora_block_table(cfg, rank)
+    layer_spec: BlockSpec = blocks[1]
+    lora_spec: BlockSpec = lblocks[0]
+    scale = 2.0
+
+    def merge(layer_flat, lora_flat):
+        p = layer_spec.unpack(layer_flat)
+        l = lora_spec.unpack(lora_flat)
+        pieces = []
+        for t in layer_spec.tensors:
+            w = p[t.name]
+            if t.name in LORA_PROJS:
+                w = w + scale * (l[f"{t.name}_a"] @ l[f"{t.name}_b"])
+            pieces.append(w.reshape(-1))
+        return (jnp.concatenate(pieces),)
+
+    return merge, layer_spec, lora_spec

@@ -1,0 +1,89 @@
+"""Block-flat parameter packing.
+
+The paper treats the model as a list of *blocks*: the embedding is a
+block, each transformer layer is a block, and the final norm (+ LM head,
+which we keep untied so the tail block carries real parameters) is a
+block.  AdaGradSelect selects, updates and tracks gradient norms at block
+granularity, so the whole Rust<->HLO interface is **one flat f32 vector
+per block**: the coordinator never needs to know tensor shapes, and grad
+norms / AdamW / residency all operate on contiguous slices.
+
+This module defines the layout (tensor name, shape, init spec, offset
+inside the flat vector) and the pack/unpack helpers used at trace time.
+Offsets are static, so ``unpack`` lowers to free slices/reshapes in HLO.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple[int, ...]
+    init: str  # "normal:<std>" | "ones" | "zeros"
+    offset: int = 0
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclass
+class BlockSpec:
+    """One paper-"block": a named list of tensors packed into a flat vector."""
+
+    name: str
+    tensors: list[TensorSpec] = field(default_factory=list)
+
+    def add(self, name: str, shape: tuple[int, ...], init: str) -> None:
+        off = self.numel
+        self.tensors.append(TensorSpec(name, tuple(shape), init, off))
+
+    @property
+    def numel(self) -> int:
+        return sum(t.numel for t in self.tensors)
+
+    def unpack(self, flat):
+        """flat f32[numel] -> dict name -> shaped array (static slices)."""
+        out = {}
+        for t in self.tensors:
+            out[t.name] = jnp.reshape(
+                jnp.asarray(flat)[t.offset : t.offset + t.numel], t.shape
+            )
+        return out
+
+    def init_flat(self, rng: np.random.Generator) -> np.ndarray:
+        """Numpy init following each tensor's init spec (tests only; the
+        Rust coordinator has an equivalent seeded initializer)."""
+        parts = []
+        for t in self.tensors:
+            if t.init == "ones":
+                parts.append(np.ones(t.numel, np.float32))
+            elif t.init == "zeros":
+                parts.append(np.zeros(t.numel, np.float32))
+            elif t.init.startswith("normal:"):
+                std = float(t.init.split(":")[1])
+                parts.append(rng.normal(0.0, std, t.numel).astype(np.float32))
+            else:
+                raise ValueError(f"unknown init {t.init}")
+        return np.concatenate(parts) if parts else np.zeros(0, np.float32)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "numel": self.numel,
+            "tensors": [
+                {
+                    "name": t.name,
+                    "shape": list(t.shape),
+                    "init": t.init,
+                    "offset": t.offset,
+                }
+                for t in self.tensors
+            ],
+        }

@@ -1,0 +1,139 @@
+"""Model presets mirroring the paper's three SLM families (scaled down).
+
+The paper fine-tunes Qwen2.5-0.5B (25 transformer blocks), LLaMA3.2-1B
+(18 blocks, per the paper) and Phi4-mini-3.8B (32 blocks).  Selection
+behaviour depends on *block count* and the relative per-block gradient
+signal, not on absolute width, so each sim preset keeps the paper's block
+count and scales width to what a CPU PJRT box trains in minutes
+(DESIGN.md §2 documents the substitution).
+
+``test-tiny`` is the fast preset used by unit/integration tests;
+``e2e`` is the larger model used by examples/e2e_train.rs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+from .packing import BlockSpec
+from . import tokenizer
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    batch: int
+    lora_rank: int  # "r=128-equivalent" scaled rank; r2 = 2*lora_rank is r=256-eq
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    init_std: float = 0.02
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+# Attention projections adapted by LoRA in the paper: Q, K, V, O, plus the
+# SwiGLU Up / Down / Gate — i.e. every weight matrix in a layer.
+LORA_PROJS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+def block_table(cfg: ModelConfig) -> list[BlockSpec]:
+    """The paper's block decomposition: embed | layer 0..L-1 | final norm+head."""
+    std = f"normal:{cfg.init_std}"
+    # residual-branch output projections get the depth-scaled init
+    out_std = f"normal:{cfg.init_std / (2 * cfg.n_layers) ** 0.5}"
+    blocks = []
+
+    emb = BlockSpec("embed")
+    emb.add("tok_emb", (cfg.vocab, cfg.d_model), std)
+    blocks.append(emb)
+
+    for i in range(cfg.n_layers):
+        b = BlockSpec(f"layer{i}")
+        b.add("ln1", (cfg.d_model,), "ones")
+        b.add("wq", (cfg.d_model, cfg.d_model), std)
+        b.add("wk", (cfg.d_model, cfg.d_model), std)
+        b.add("wv", (cfg.d_model, cfg.d_model), std)
+        b.add("wo", (cfg.d_model, cfg.d_model), out_std)
+        b.add("ln2", (cfg.d_model,), "ones")
+        b.add("wg", (cfg.d_model, cfg.d_ff), std)
+        b.add("wu", (cfg.d_model, cfg.d_ff), std)
+        b.add("wd", (cfg.d_ff, cfg.d_model), out_std)
+        blocks.append(b)
+
+    head = BlockSpec("head")
+    head.add("ln_f", (cfg.d_model,), "ones")
+    head.add("w_out", (cfg.d_model, cfg.vocab), std)
+    blocks.append(head)
+    return blocks
+
+
+def lora_block_table(cfg: ModelConfig, rank: int) -> list[BlockSpec]:
+    """One LoRA block per transformer layer (adapters for all projections).
+
+    W' = W + (alpha/rank) * A @ B with A:(in, r) ~ N(0, 1/r), B:(r, out) = 0,
+    alpha = 2*rank (so the scale is the constant 2, standard practice).
+    """
+    dims = {
+        "wq": (cfg.d_model, cfg.d_model),
+        "wk": (cfg.d_model, cfg.d_model),
+        "wv": (cfg.d_model, cfg.d_model),
+        "wo": (cfg.d_model, cfg.d_model),
+        "wg": (cfg.d_model, cfg.d_ff),
+        "wu": (cfg.d_model, cfg.d_ff),
+        "wd": (cfg.d_ff, cfg.d_model),
+    }
+    a_std = f"normal:{1.0 / rank ** 0.5}"
+    blocks = []
+    for i in range(cfg.n_layers):
+        b = BlockSpec(f"lora{i}")
+        for proj in LORA_PROJS:
+            d_in, d_out = dims[proj]
+            b.add(f"{proj}_a", (d_in, rank), a_std)
+            b.add(f"{proj}_b", (rank, d_out), "zeros")
+        blocks.append(b)
+    return blocks
+
+
+V = tokenizer.VOCAB_SIZE
+
+PRESETS: dict[str, ModelConfig] = {
+    # unit/integration-test preset: compiles + runs in well under a second
+    "test-tiny": ModelConfig("test-tiny", d_model=32, n_layers=2, n_heads=2,
+                             d_ff=96, vocab=V, seq_len=64, batch=4, lora_rank=4),
+    # Qwen2.5-0.5B stand-in: 25 transformer blocks (paper: 10% => 2 blocks).
+    # Widths are sized for the single-core CPU PJRT substrate (see
+    # DESIGN.md §2) — block count, not width, drives selection behaviour.
+    "qwen-sim": ModelConfig("qwen-sim", d_model=64, n_layers=25, n_heads=4,
+                            d_ff=176, vocab=V, seq_len=128, batch=8, lora_rank=8),
+    # LLaMA3.2-1B stand-in: 18 blocks (paper: 10% => a single block)
+    "llama-sim": ModelConfig("llama-sim", d_model=80, n_layers=18, n_heads=4,
+                             d_ff=216, vocab=V, seq_len=128, batch=8, lora_rank=10),
+    # Phi4-mini-3.8B stand-in: 32 blocks
+    "phi-sim": ModelConfig("phi-sim", d_model=96, n_layers=32, n_heads=4,
+                           d_ff=256, vocab=V, seq_len=128, batch=8, lora_rank=12),
+    # end-to-end example model (examples/e2e_train.rs): the largest model
+    # this box trains in minutes
+    "e2e": ModelConfig("e2e", d_model=160, n_layers=8, n_heads=5,
+                       d_ff=432, vocab=V, seq_len=128, batch=8, lora_rank=20),
+}
+
+# presets that additionally export the Pallas-attention train_step variant
+PALLAS_PRESETS = ("test-tiny", "qwen-sim")
+
+
+def total_params(cfg: ModelConfig) -> int:
+    return sum(b.numel for b in block_table(cfg))

@@ -1,0 +1,34 @@
+"""Shared tokenizer specification.
+
+Single source of truth for the char-level vocabulary used by both the
+build-time Python side (only for tests) and the Rust coordinator (which
+reads the vocab string out of ``artifacts/manifest.json``).  Token ids:
+
+  0 <pad>   1 <bos>   2 <eos>   3 <unk>   4.. one per char of CHARS
+
+The vocabulary is padded to ``VOCAB_SIZE`` (a multiple of 64 keeps the
+embedding/e lm-head matmuls lane-aligned on real hardware).
+"""
+
+from __future__ import annotations
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+CHARS = " 0123456789abcdefghijklmnopqrstuvwxyz+-*/=().,?#:'%$\n"
+VOCAB_SIZE = 64
+
+_CHAR_TO_ID = {c: 4 + i for i, c in enumerate(CHARS)}
+_ID_TO_CHAR = {4 + i: c for i, c in enumerate(CHARS)}
+
+assert 4 + len(CHARS) <= VOCAB_SIZE
+
+
+def encode(text: str, *, bos: bool = True, eos: bool = True) -> list[int]:
+    ids = [BOS] if bos else []
+    ids += [_CHAR_TO_ID.get(c, UNK) for c in text.lower()]
+    if eos:
+        ids.append(EOS)
+    return ids
+
+
+def decode(ids) -> str:
+    return "".join(_ID_TO_CHAR.get(int(i), "") for i in ids)

@@ -1,0 +1,205 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.  This is
+the CORE correctness signal for the compute layer — everything the Rust
+coordinator executes was lowered from these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.adamw import adamw_update
+from compile.kernels.attention import flash_attention
+from compile.kernels.grad_norm import grad_norm_sq
+from compile.kernels.ref import adamw_ref, attention_ref, grad_norm_sq_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+class TestAttentionForward:
+    @pytest.mark.parametrize("b,h,s,d", [(1, 1, 32, 16), (2, 3, 128, 32),
+                                         (1, 2, 64, 24), (2, 4, 96, 8)])
+    def test_matches_ref_causal(self, b, h, s, d):
+        q, k, v = rand(0, (b, h, s, d)), rand(1, (b, h, s, d)), rand(2, (b, h, s, d))
+        out = flash_attention(q, k, v)
+        ref = attention_ref(q, k, v)
+        assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_non_causal(self):
+        q, k, v = (rand(i, (2, 2, 64, 16)) for i in range(3))
+        out = flash_attention(q, k, v, False)
+        ref = attention_ref(q, k, v, causal=False)
+        assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_custom_scale(self):
+        q, k, v = (rand(i, (1, 2, 64, 16)) for i in range(3))
+        out = flash_attention(q, k, v, True, 0.5)
+        ref = attention_ref(q, k, v, sm_scale=0.5)
+        assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_block_shape_invariance(self):
+        """Output must not depend on the tiling schedule."""
+        q, k, v = (rand(i, (1, 2, 128, 16)) for i in range(3))
+        a = flash_attention(q, k, v, True, None, 32, 32)
+        b = flash_attention(q, k, v, True, None, 64, 16)
+        assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+    def test_large_logits_stable(self):
+        """Online softmax must survive large score magnitudes."""
+        q = rand(0, (1, 1, 64, 16), scale=30.0)
+        k = rand(1, (1, 1, 64, 16), scale=30.0)
+        v = rand(2, (1, 1, 64, 16))
+        out = flash_attention(q, k, v)
+        ref = attention_ref(q, k, v)
+        assert np.isfinite(np.asarray(out)).all()
+        assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_causal_first_row_is_v0(self):
+        """Row 0 of a causal attention can only attend to position 0."""
+        q, k, v = (rand(i, (1, 1, 64, 16)) for i in range(3))
+        out = flash_attention(q, k, v)
+        assert_allclose(out[0, 0, 0], v[0, 0, 0], atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        h=st.integers(1, 3),
+        s=st.sampled_from([32, 64, 96, 128]),
+        d=st.sampled_from([8, 16, 24, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, b, h, s, d, seed):
+        q = rand(seed, (b, h, s, d))
+        k = rand(seed + 1, (b, h, s, d))
+        v = rand(seed + 2, (b, h, s, d))
+        assert_allclose(
+            flash_attention(q, k, v), attention_ref(q, k, v), atol=3e-5, rtol=3e-5
+        )
+
+
+class TestAttentionBackward:
+    def _grads(self, fn, q, k, v):
+        return jax.grad(lambda *a: jnp.sum(jnp.tanh(fn(*a))), argnums=(0, 1, 2))(q, k, v)
+
+    @pytest.mark.parametrize("b,h,s,d", [(1, 1, 32, 16), (2, 2, 128, 32), (1, 2, 64, 24)])
+    def test_grads_match_ref(self, b, h, s, d):
+        q, k, v = rand(0, (b, h, s, d)), rand(1, (b, h, s, d)), rand(2, (b, h, s, d))
+        gk = self._grads(lambda q, k, v: flash_attention(q, k, v), q, k, v)
+        gr = self._grads(lambda q, k, v: attention_ref(q, k, v), q, k, v)
+        for a, b_ in zip(gk, gr):
+            assert_allclose(a, b_, atol=5e-5, rtol=5e-5)
+
+    def test_grads_noncausal(self):
+        q, k, v = (rand(i, (1, 2, 64, 16)) for i in range(3))
+        gk = self._grads(lambda q, k, v: flash_attention(q, k, v, False), q, k, v)
+        gr = self._grads(lambda q, k, v: attention_ref(q, k, v, causal=False), q, k, v)
+        for a, b_ in zip(gk, gr):
+            assert_allclose(a, b_, atol=5e-5, rtol=5e-5)
+
+    def test_grad_under_jit(self):
+        q, k, v = (rand(i, (1, 1, 64, 16)) for i in range(3))
+        f = jax.jit(jax.grad(lambda q: jnp.sum(flash_attention(q, k, v) ** 2)))
+        g = f(q)
+        gr = jax.grad(lambda q: jnp.sum(attention_ref(q, k, v) ** 2))(q)
+        assert_allclose(g, gr, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# adamw
+# ---------------------------------------------------------------------------
+
+
+class TestAdamW:
+    def _inputs(self, n, seed=0):
+        p = rand(seed, (n,))
+        g = rand(seed + 1, (n,))
+        m = rand(seed + 2, (n,), scale=0.1)
+        v = jnp.abs(rand(seed + 3, (n,), scale=0.1))
+        return p, g, m, v
+
+    @pytest.mark.parametrize("n", [8, 1000, 65536, 65536 * 2])
+    def test_matches_ref(self, n):
+        p, g, m, v = self._inputs(n)
+        out = adamw_update(p, g, m, v, 1e-3, 5.0)
+        ref = adamw_ref(p, g, m, v, 1e-3, 5.0)
+        for a, b in zip(out, ref):
+            assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+    def test_step_one_bias_correction(self):
+        """At t=1 with m=v=0 the update direction is -lr*sign(g) (+wd)."""
+        n = 64
+        p = jnp.zeros((n,))
+        g = rand(1, (n,))
+        out_p, _, _ = adamw_update(p, g, jnp.zeros((n,)), jnp.zeros((n,)), 0.01, 1.0)
+        expected = -0.01 * g / (jnp.abs(g) + 1e-8)
+        assert_allclose(out_p, expected, atol=1e-4, rtol=1e-3)
+
+    def test_weight_decay_decoupled(self):
+        """Zero gradient still shrinks weights by lr*wd*p."""
+        n = 32
+        p = rand(0, (n,))
+        z = jnp.zeros((n,))
+        out_p, out_m, out_v = adamw_update(p, z, z, z, 0.1, 1.0)
+        assert_allclose(out_p, p * (1 - 0.1 * 0.01), atol=1e-6, rtol=1e-6)
+        assert_allclose(out_m, z, atol=0)
+        assert_allclose(out_v, z, atol=0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([4, 128, 4096, 65536]),
+        lr=st.floats(1e-5, 1e-1),
+        step=st.integers(1, 10000),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, n, lr, step, seed):
+        p, g, m, v = self._inputs(n, seed)
+        out = adamw_update(p, g, m, v, lr, float(step))
+        ref = adamw_ref(p, g, m, v, lr, float(step))
+        for a, b in zip(out, ref):
+            assert_allclose(a, b, atol=1e-5, rtol=1e-4)
+
+    def test_moments_are_emas(self):
+        p, g, m, v = self._inputs(256)
+        _, m2, v2 = adamw_update(p, g, m, v, 1e-3, 3.0)
+        assert_allclose(m2, 0.9 * m + 0.1 * g, atol=1e-6, rtol=1e-5)
+        assert_allclose(v2, 0.999 * v + 0.001 * g * g, atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grad norm
+# ---------------------------------------------------------------------------
+
+
+class TestGradNorm:
+    @pytest.mark.parametrize("n", [4, 1000, 65536, 65536 * 4])
+    def test_matches_ref(self, n):
+        g = rand(7, (n,))
+        assert_allclose(
+            grad_norm_sq(g)[0], grad_norm_sq_ref(g), atol=1e-2, rtol=1e-5
+        )
+
+    def test_zeros(self):
+        assert float(grad_norm_sq(jnp.zeros(128))[0]) == 0.0
+
+    def test_ones(self):
+        assert float(grad_norm_sq(jnp.ones(4096))[0]) == 4096.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.sampled_from([16, 512, 65536]), seed=st.integers(0, 2**16),
+           scale=st.floats(0.01, 10.0))
+    def test_hypothesis_sweep(self, n, seed, scale):
+        g = rand(seed, (n,), scale=scale)
+        assert_allclose(grad_norm_sq(g)[0], grad_norm_sq_ref(g), rtol=1e-4)

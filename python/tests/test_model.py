@@ -1,0 +1,238 @@
+"""L2 model tests: shapes, packing, loss semantics, LoRA, parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model, presets, tokenizer
+from compile.packing import BlockSpec
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = presets.PRESETS["test-tiny"]
+
+
+@pytest.fixture(scope="module")
+def flats():
+    rng = np.random.default_rng(42)
+    return [jnp.asarray(b.init_flat(rng)) for b in presets.block_table(CFG)]
+
+
+def batch(seed=0, cfg=CFG):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(4, 50, (cfg.batch, cfg.seq_len)), jnp.int32)
+    tgts = jnp.asarray(rng.integers(4, 50, (cfg.batch, cfg.seq_len)), jnp.int32)
+    return toks, tgts
+
+
+class TestPacking:
+    def test_offsets_contiguous(self):
+        for b in presets.block_table(CFG):
+            off = 0
+            for t in b.tensors:
+                assert t.offset == off
+                off += t.numel
+            assert b.numel == off
+
+    def test_unpack_roundtrip(self):
+        b = presets.block_table(CFG)[1]
+        rng = np.random.default_rng(0)
+        flat = b.init_flat(rng)
+        d = b.unpack(jnp.asarray(flat))
+        rebuilt = np.concatenate([np.asarray(d[t.name]).reshape(-1) for t in b.tensors])
+        assert_allclose(rebuilt, flat)
+
+    def test_block_count_matches_paper_structure(self):
+        # embed + n_layers + head, the paper's block decomposition
+        assert len(presets.block_table(CFG)) == CFG.n_layers + 2
+
+    def test_init_spec_honored(self):
+        b = presets.block_table(CFG)[1]
+        rng = np.random.default_rng(0)
+        d = b.unpack(jnp.asarray(b.init_flat(rng)))
+        assert_allclose(d["ln1"], np.ones(CFG.d_model))
+        assert abs(float(jnp.std(d["wq"])) - CFG.init_std) < 0.01
+
+    def test_layer_blocks_identical_layout(self):
+        blocks = presets.block_table(CFG)
+        l0, l1 = blocks[1], blocks[2]
+        assert [(t.name, t.shape, t.offset) for t in l0.tensors] == [
+            (t.name, t.shape, t.offset) for t in l1.tensors
+        ]
+
+
+class TestForward:
+    def test_logits_shape(self, flats):
+        toks, _ = batch()
+        dc, _ = model.make_decode_step(CFG)
+        (logits,) = dc(*flats, toks)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_causality(self, flats):
+        """Changing a future token must not change past logits."""
+        toks, _ = batch()
+        dc, _ = model.make_decode_step(CFG)
+        (a,) = dc(*flats, toks)
+        toks2 = toks.at[:, -1].set((toks[:, -1] % 50) + 4)
+        (b,) = dc(*flats, toks2)
+        assert_allclose(a[:, :-1], b[:, :-1], atol=1e-5, rtol=1e-5)
+
+    def test_loss_at_init_near_uniform(self, flats):
+        toks, tgts = batch()
+        ev, _ = model.make_eval_loss(CFG)
+        (loss,) = ev(*flats, toks, tgts)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+    def test_pad_targets_masked(self, flats):
+        toks, tgts = batch()
+        ev, _ = model.make_eval_loss(CFG)
+        (full,) = ev(*flats, toks, tgts)
+        # padding half the targets changes the denominator, not to nan
+        tgts2 = tgts.at[:, ::2].set(tokenizer.PAD)
+        (half,) = ev(*flats, toks, tgts2)
+        assert np.isfinite(float(half))
+        # all-pad: loss must be 0 (guarded denominator), not nan
+        (zero,) = ev(*flats, toks, jnp.zeros_like(tgts))
+        assert float(zero) == 0.0
+        assert np.isfinite(float(full))
+
+
+class TestTrainStep:
+    def test_grad_count_and_shapes(self, flats):
+        toks, tgts = batch()
+        ts, blocks = model.make_train_step(CFG)
+        out = ts(*flats, toks, tgts)
+        assert len(out) == 1 + len(blocks)
+        for g, b in zip(out[1:], blocks):
+            assert g.shape == (b.numel,)
+
+    def test_grads_nonzero_everywhere(self, flats):
+        toks, tgts = batch()
+        ts, blocks = model.make_train_step(CFG)
+        out = ts(*flats, toks, tgts)
+        for g, b in zip(out[1:], blocks):
+            assert float(jnp.sum(jnp.abs(g))) > 0, b.name
+
+    def test_pallas_parity(self, flats):
+        """Pallas-attention artifact computes identical loss and grads."""
+        toks, tgts = batch()
+        ts_x, _ = model.make_train_step(CFG, "xla")
+        ts_p, _ = model.make_train_step(CFG, "pallas")
+        ox, op = ts_x(*flats, toks, tgts), ts_p(*flats, toks, tgts)
+        assert_allclose(float(ox[0]), float(op[0]), rtol=1e-6)
+        for a, b in zip(ox[1:], op[1:]):
+            assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+    def test_sgd_reduces_loss(self, flats):
+        toks, tgts = batch()
+        ts, _ = model.make_train_step(CFG)
+        f = list(flats)
+        first = float(ts(*f, toks, tgts)[0])
+        for _ in range(5):
+            out = ts(*f, toks, tgts)
+            f = [x - 0.5 * g for x, g in zip(f, out[1:])]
+        assert float(ts(*f, toks, tgts)[0]) < first - 0.1
+
+    def test_grad_matches_finite_difference(self, flats):
+        toks, tgts = batch()
+        ts, blocks = model.make_train_step(CFG)
+        ev, _ = model.make_eval_loss(CFG)
+        out = ts(*flats, toks, tgts)
+        g_head = np.asarray(out[-1])
+        i = int(np.argmax(np.abs(g_head)))
+        eps = 1e-3
+        bump = jnp.zeros(blocks[-1].numel).at[i].set(eps)
+        f_plus = flats[:-1] + [flats[-1] + bump]
+        f_minus = flats[:-1] + [flats[-1] - bump]
+        fd = (float(ev(*f_plus, toks, tgts)[0]) - float(ev(*f_minus, toks, tgts)[0])) / (2 * eps)
+        assert_allclose(fd, g_head[i], rtol=0.05, atol=1e-4)
+
+
+class TestLoRA:
+    def test_zero_b_means_base_forward(self, flats):
+        """With B=0 adapters, LoRA forward == base forward."""
+        toks, tgts = batch()
+        lts, blocks, lblocks = model.make_lora_train_step(CFG, CFG.lora_rank)
+        rng = np.random.default_rng(7)
+        lflats = [jnp.asarray(b.init_flat(rng)) for b in lblocks]
+        ev, _ = model.make_eval_loss(CFG)
+        out = lts(*flats, *lflats, toks, tgts)
+        (base_loss,) = ev(*flats, toks, tgts)
+        assert_allclose(float(out[0]), float(base_loss), rtol=1e-6)
+
+    def test_lora_grads_only(self, flats):
+        toks, tgts = batch()
+        lts, blocks, lblocks = model.make_lora_train_step(CFG, CFG.lora_rank)
+        rng = np.random.default_rng(7)
+        lflats = [jnp.asarray(b.init_flat(rng)) for b in lblocks]
+        out = lts(*flats, *lflats, toks, tgts)
+        assert len(out) == 1 + len(lblocks)
+        for g, b in zip(out[1:], lblocks):
+            assert g.shape == (b.numel,)
+            assert float(jnp.sum(jnp.abs(g))) > 0
+
+    def test_lora_sgd_reduces_loss(self, flats):
+        toks, tgts = batch()
+        lts, _, lblocks = model.make_lora_train_step(CFG, CFG.lora_rank)
+        rng = np.random.default_rng(7)
+        lf = [jnp.asarray(b.init_flat(rng)) for b in lblocks]
+        first = float(lts(*flats, *lf, toks, tgts)[0])
+        for _ in range(5):
+            out = lts(*flats, *lf, toks, tgts)
+            lf = [x - 0.5 * g for x, g in zip(lf, out[1:])]
+        assert float(lts(*flats, *lf, toks, tgts)[0]) < first
+
+    def test_merge_equivalence(self, flats):
+        """decode(merge(base, lora)) == lora-forward logits."""
+        toks, tgts = batch()
+        rank = CFG.lora_rank
+        lts, blocks, lblocks = model.make_lora_train_step(CFG, rank)
+        rng = np.random.default_rng(3)
+        lf = [jnp.asarray(b.init_flat(rng)) for b in lblocks]
+        # train adapters a bit so B != 0
+        for _ in range(3):
+            out = lts(*flats, *lf, toks, tgts)
+            lf = [x - 1.0 * g for x, g in zip(lf, out[1:])]
+        merge, _, _ = model.make_lora_merge(CFG, rank)
+        merged = list(flats)
+        for i in range(CFG.n_layers):
+            (merged[1 + i],) = merge(flats[1 + i], lf[i])
+        ev, _ = model.make_eval_loss(CFG)
+        (merged_loss,) = ev(*merged, toks, tgts)
+        lora_loss = float(lts(*flats, *lf, toks, tgts)[0])
+        assert_allclose(float(merged_loss), lora_loss, rtol=1e-5)
+
+
+class TestRope:
+    def test_norm_preserved(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 2, 16, 8)), jnp.float32)
+        y = model.rope(x, 10000.0)
+        assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+        )
+
+    def test_position_zero_identity(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 1, 4, 8)), jnp.float32)
+        y = model.rope(x, 10000.0)
+        assert_allclose(y[0, 0, 0], x[0, 0, 0], atol=1e-6)
+
+
+class TestTokenizer:
+    def test_roundtrip(self):
+        s = "alice has 3 apples. #### 42\n"
+        ids = tokenizer.encode(s)
+        assert ids[0] == tokenizer.BOS and ids[-1] == tokenizer.EOS
+        assert tokenizer.decode(ids[1:-1]) == s
+
+    def test_unknown_maps_to_unk(self):
+        assert tokenizer.encode("~", bos=False, eos=False) == [tokenizer.UNK]
+
+    def test_vocab_fits(self):
+        assert 4 + len(tokenizer.CHARS) <= tokenizer.VOCAB_SIZE
+
+    def test_ids_in_range(self):
+        ids = tokenizer.encode("9z+ #:'%$\n")
+        assert all(0 <= i < tokenizer.VOCAB_SIZE for i in ids)

@@ -1,0 +1,58 @@
+//! Optimizer benchmarks: fused native AdamW throughput (the L3 hot path),
+//! parallel selective updates, and the HLO/Pallas kernel path.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use adagradselect::optimizer::{AdamWParams, HloAdamW, SelectiveAdamW};
+use adagradselect::runtime::Engine;
+use adagradselect::util::bench::{bench, header};
+
+fn main() {
+    header("optimizer");
+    let budget = Duration::from_millis(400);
+
+    // native fused kernel across block sizes
+    for n in [6_144usize, 110_000, 1 << 20] {
+        let mut p = vec![0.1f32; n];
+        let g = vec![0.01f32; n];
+        let mut opt = SelectiveAdamW::new(&[n], AdamWParams::default());
+        let r = bench(&format!("adamw_native/n={n}"), budget, || {
+            opt.update_block(0, &mut p, &g, 1e-3);
+        });
+        println!(
+            "    -> {:.2} Gparam/s",
+            n as f64 / r.mean_s() / 1e9
+        );
+    }
+
+    // parallel selective update at qwen-sim shape: 8 of 27 blocks
+    let numels: Vec<usize> =
+        (0..27).map(|i| if i == 0 || i == 26 { 6_144 } else { 110_000 }).collect();
+    let mut flats: Vec<Vec<f32>> = numels.iter().map(|&n| vec![0.1; n]).collect();
+    let grads: Vec<Vec<f32>> = numels.iter().map(|&n| vec![0.01; n]).collect();
+    let mut opt = SelectiveAdamW::new(&numels, AdamWParams::default());
+    let selected: Vec<usize> = (0..8).collect();
+    bench("adamw_update_selected/8of27-blocks", budget, || {
+        opt.update_selected(&selected, &mut flats, &grads, 1e-3);
+    });
+    let all: Vec<usize> = (0..27).collect();
+    bench("adamw_update_selected/27of27-blocks(FFT)", budget, || {
+        opt.update_selected(&all, &mut flats, &grads, 1e-3);
+    });
+
+    // HLO (Pallas kernel) path — the accelerator-side equivalent
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::load(&artifacts).expect("artifacts; run `make artifacts`");
+    let hlo = HloAdamW::new(&engine).unwrap();
+    let n = engine.manifest.chunk_size;
+    let mut p = vec![0.1f32; n];
+    let g = vec![0.01f32; n];
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut step = 0u64;
+    bench(&format!("adamw_hlo_pallas/n={n}(chunk)"), budget, || {
+        step += 1;
+        hlo.update_block(&engine, &mut p, &g, &mut m, &mut v, 1e-3, step).unwrap();
+    });
+}

@@ -1,0 +1,71 @@
+//! Residency-manager benchmarks + the §6 PCIe-bottleneck sweep: simulated
+//! transfer/stall times per link model (PCIe Gen4 vs NVLink vs a starved
+//! Gen3 x4 link), the quantitative version of the paper's limitation
+//! analysis.
+
+use std::time::Duration;
+
+use adagradselect::optimizer::{PcieModel, ResidencyManager};
+use adagradselect::util::bench::{bench, header};
+use adagradselect::util::rng::Rng;
+
+fn qwen_numels() -> Vec<usize> {
+    (0..27).map(|i| if i == 0 || i == 26 { 6_144 } else { 110_000 }).collect()
+}
+
+fn main() {
+    header("residency");
+    let budget = Duration::from_millis(300);
+
+    // state-machine overhead per step (pure bookkeeping)
+    let numels = qwen_numels();
+    let mut mgr = ResidencyManager::new(&numels, 2, PcieModel::default(), true);
+    let mut rng = Rng::seed_from_u64(0);
+    bench("residency_step/27-blocks-random-k8", budget, || {
+        let mut sel: Vec<usize> = (0..27).collect();
+        for i in 0..8 {
+            let j = rng.gen_range(i, 27);
+            sel.swap(i, j);
+        }
+        let mut sel = sel[..8].to_vec();
+        sel.sort_unstable();
+        std::hint::black_box(mgr.step(&sel, 0.01));
+    });
+
+    // stable selection: the hit path (no transfers)
+    let mut mgr2 = ResidencyManager::new(&numels, 2, PcieModel::default(), true);
+    let stable: Vec<usize> = (0..8).collect();
+    mgr2.step(&stable, 0.01);
+    bench("residency_step/stable-selection-hit-path", budget, || {
+        std::hint::black_box(mgr2.step(&stable, 0.01));
+    });
+
+    // §6 sweep: how much stall each link model induces for a paper-scale
+    // model (Qwen2.5-0.5B: ~494M params, 27 blocks, bf16 states) under a
+    // worst-case selection churn (full turnover every step).
+    println!("\n-- §6 PCIe-bottleneck sweep (paper-scale 0.5B model, full churn) --");
+    let paper_numels: Vec<usize> = (0..27).map(|_| 494_000_000 / 27).collect();
+    for (name, link) in [
+        ("pcie4", PcieModel::default()),
+        ("nvlink", PcieModel::nvlink()),
+        ("pcie3x4", PcieModel::slow_gen3_x4()),
+    ] {
+        let mut m = ResidencyManager::new(&paper_numels, 2, link, true);
+        let compute_s = 0.150; // measured-regime step time
+        let mut total_stall = 0.0;
+        for step in 0..100u64 {
+            let sel: Vec<usize> = (0..8).map(|i| ((step as usize * 8) + i) % 27).collect();
+            let mut sel = sel;
+            sel.sort_unstable();
+            sel.dedup();
+            let t = m.step(&sel, compute_s);
+            total_stall += t.stall_s;
+        }
+        println!(
+            "  {name:<8} transfer {:>8.2} s  stall {:>8.3} s over 100 steps (hit rate {:.0}%)",
+            m.stats.transfer_s,
+            total_stall,
+            m.stats.hit_rate() * 100.0
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Selection-path micro-benchmarks: the per-step coordinator overhead the
+//! paper's method adds over plain full fine-tuning must be negligible
+//! relative to the train-step HLO (§Perf target: ≪ 1% of step time).
+
+use std::time::Duration;
+
+use adagradselect::selection::grad_norm::{top_k_indices, GradNormTracker};
+use adagradselect::selection::{
+    sample_dirichlet, weighted_sample_without_replacement, AdaGradSelect,
+    AdaGradSelectParams, SelectionCtx, SelectionStrategy,
+};
+use adagradselect::util::bench::{bench, header};
+use adagradselect::util::rng::Rng;
+
+fn main() {
+    header("selection");
+    let budget = Duration::from_millis(300);
+
+    for n_blocks in [27usize, 34, 128] {
+        let mut rng = Rng::seed_from_u64(0);
+        let alpha: Vec<f64> = (0..n_blocks).map(|_| rng.gen_range_f64(0.5, 50.0)).collect();
+        bench(&format!("dirichlet_sample/n={n_blocks}"), budget, || {
+            std::hint::black_box(sample_dirichlet(&alpha, &mut rng));
+        });
+
+        let p = vec![1.0 / n_blocks as f64; n_blocks];
+        let k = (n_blocks * 3 / 10).max(1);
+        bench(&format!("wswor/n={n_blocks},k={k}"), budget, || {
+            std::hint::black_box(weighted_sample_without_replacement(&p, k, &mut rng));
+        });
+
+        let norms: Vec<f64> = (0..n_blocks).map(|_| rng.gen_range_f64(0.0, 5.0)).collect();
+        bench(&format!("top_k/n={n_blocks},k={k}"), budget, || {
+            std::hint::black_box(top_k_indices(&norms, k));
+        });
+
+        let mut params = AdaGradSelectParams::new(k, 100);
+        params.seed = 1;
+        let mut ags = AdaGradSelect::new(n_blocks, params);
+        let mut step = 0u64;
+        bench(&format!("adagradselect_step/n={n_blocks},k={k}"), budget, || {
+            let ctx = SelectionCtx { step, epoch: 1 + (step / 100) as u32, grad_norms: &norms };
+            std::hint::black_box(ags.select(&ctx));
+            step += 1;
+        });
+    }
+
+    // per-block grad-norm reduction at qwen-sim scale (27 blocks, ~2.8M params)
+    let grads: Vec<Vec<f32>> = (0..27)
+        .map(|i| vec![0.01 * (i as f32 + 1.0); if i == 0 || i == 26 { 6144 } else { 110_000 }])
+        .collect();
+    let mut tracker = GradNormTracker::new(27);
+    bench("grad_norm_tracker/qwen-sim-shape (2.8M params)", budget, || {
+        std::hint::black_box(tracker.observe(&grads));
+    });
+}

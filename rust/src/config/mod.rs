@@ -1,0 +1,538 @@
+//! Typed configuration system (JSON files + programmatic defaults).
+//!
+//! A [`RunConfig`] fully describes one fine-tuning run: preset, method,
+//! optimizer/schedule, data generator, residency model and eval settings.
+//! Configs load from JSON (`agsel train --config run.json`), from CLI
+//! flags, or from [`RunConfig::preset_defaults`]. Validation enforces the
+//! paper's practitioner guideline (`min% >= 100/B` — at least one block
+//! per iteration).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::Preset;
+use crate::util::json::Value;
+
+/// Which fine-tuning method drives the run — one per paper baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// Full fine-tuning: every block every step.
+    Full,
+    /// Algorithm 1: top-k% by per-step gradient norm.
+    TopK { pct: f64 },
+    /// Algorithm 2: the paper's contribution.
+    AdaGradSelect {
+        pct: f64,
+        eps0: f64,
+        /// Decay rate λ; `None` derives "ε≈0.01 at epoch end" (paper's
+        /// "always explore at step 1, always exploit at step N").
+        lambda: Option<f64>,
+        delta: f64,
+        /// Ablation switches (off in the paper's method).
+        explore_after_epoch1: bool,
+        uniform_exploit: bool,
+    },
+    /// LoRA baseline; `double_rank` selects the r=256-analogue artifact.
+    Lora { double_rank: bool },
+    /// LISA-style uniform random layerwise sampling.
+    Random { pct: f64 },
+    /// Deterministic rotation baseline.
+    RoundRobin { pct: f64 },
+    /// UCB1 bandit (our MAB extension; see `selection::UcbSelector`).
+    Ucb { pct: f64, c: f64 },
+    /// Fixed subset probe (block indices).
+    Fixed { blocks: Vec<usize> },
+}
+
+impl Method {
+    /// The paper's default AdaGradSelect hyperparameters at a given pct.
+    pub fn ags(pct: f64) -> Method {
+        Method::AdaGradSelect {
+            pct,
+            eps0: 1.0,
+            lambda: None,
+            delta: 1.0,
+            explore_after_epoch1: false,
+            uniform_exploit: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            Method::Full => Value::obj(vec![("kind", Value::str("full"))]),
+            Method::TopK { pct } => {
+                Value::obj(vec![("kind", Value::str("topk")), ("pct", Value::num(*pct))])
+            }
+            Method::AdaGradSelect { pct, eps0, lambda, delta, explore_after_epoch1, uniform_exploit } => {
+                Value::obj(vec![
+                    ("kind", Value::str("adagradselect")),
+                    ("pct", Value::num(*pct)),
+                    ("eps0", Value::num(*eps0)),
+                    ("lambda", lambda.map(Value::num).unwrap_or(Value::Null)),
+                    ("delta", Value::num(*delta)),
+                    ("explore_after_epoch1", Value::Bool(*explore_after_epoch1)),
+                    ("uniform_exploit", Value::Bool(*uniform_exploit)),
+                ])
+            }
+            Method::Lora { double_rank } => Value::obj(vec![
+                ("kind", Value::str("lora")),
+                ("double_rank", Value::Bool(*double_rank)),
+            ]),
+            Method::Random { pct } => {
+                Value::obj(vec![("kind", Value::str("random")), ("pct", Value::num(*pct))])
+            }
+            Method::RoundRobin { pct } => {
+                Value::obj(vec![("kind", Value::str("round-robin")), ("pct", Value::num(*pct))])
+            }
+            Method::Ucb { pct, c } => Value::obj(vec![
+                ("kind", Value::str("ucb")),
+                ("pct", Value::num(*pct)),
+                ("c", Value::num(*c)),
+            ]),
+            Method::Fixed { blocks } => Value::obj(vec![
+                ("kind", Value::str("fixed")),
+                ("blocks", Value::arr_usize(blocks)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Method> {
+        let kind = v.get("kind")?.as_str()?;
+        let pct = || -> Result<f64> { v.get("pct")?.as_f64() };
+        Ok(match kind {
+            "full" => Method::Full,
+            "topk" => Method::TopK { pct: pct()? },
+            "adagradselect" | "ada-grad-select" => Method::AdaGradSelect {
+                pct: pct()?,
+                eps0: v.opt("eps0").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0),
+                lambda: match v.opt("lambda") {
+                    None | Some(Value::Null) => None,
+                    Some(x) => Some(x.as_f64()?),
+                },
+                delta: v.opt("delta").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0),
+                explore_after_epoch1: v
+                    .opt("explore_after_epoch1")
+                    .map(|x| x.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
+                uniform_exploit: v
+                    .opt("uniform_exploit")
+                    .map(|x| x.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
+            },
+            "lora" => Method::Lora {
+                double_rank: v
+                    .opt("double_rank")
+                    .map(|x| x.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
+            },
+            "random" | "lisa" => Method::Random { pct: pct()? },
+            "round-robin" => Method::RoundRobin { pct: pct()? },
+            "ucb" => Method::Ucb {
+                pct: pct()?,
+                c: v.opt("c").map(|x| x.as_f64()).transpose()?.unwrap_or(0.5),
+            },
+            "fixed" => Method::Fixed {
+                blocks: v
+                    .get("blocks")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+            },
+            other => bail!("unknown method kind {other:?}"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Method::Full => "full-ft".into(),
+            Method::TopK { pct } => format!("topk-{pct:.0}%"),
+            Method::AdaGradSelect { pct, .. } => format!("adagradselect-{pct:.0}%"),
+            Method::Lora { double_rank } => {
+                if *double_rank {
+                    "lora-r2".into()
+                } else {
+                    "lora-r1".into()
+                }
+            }
+            Method::Random { pct } => format!("random-{pct:.0}%"),
+            Method::RoundRobin { pct } => format!("round-robin-{pct:.0}%"),
+            Method::Ucb { pct, .. } => format!("ucb-{pct:.0}%"),
+            Method::Fixed { blocks } => format!("fixed-{blocks:?}"),
+        }
+    }
+
+    pub fn selection_pct(&self) -> Option<f64> {
+        match self {
+            Method::TopK { pct }
+            | Method::AdaGradSelect { pct, .. }
+            | Method::Random { pct }
+            | Method::RoundRobin { pct }
+            | Method::Ucb { pct, .. } => Some(*pct),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    pub steps: u64,
+    /// Steps per epoch (AdaGradSelect's explore window is epoch 1).
+    pub steps_per_epoch: u64,
+    pub lr: f32,
+    /// Linear warmup steps followed by cosine decay to `lr * min_lr_frac`.
+    pub warmup_steps: u64,
+    pub min_lr_frac: f32,
+    pub log_every: u64,
+    /// 0 disables periodic eval.
+    pub eval_every: u64,
+    pub grad_clip: Option<f32>,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            steps_per_epoch: 100,
+            lr: 1e-3,
+            warmup_steps: 20,
+            min_lr_frac: 0.1,
+            log_every: 10,
+            eval_every: 0,
+            grad_clip: Some(1.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DataParams {
+    /// `"mixed"` (MetaMathQA stand-in, default), `"gsm8k-sim"`, or
+    /// `"math-sim"`.
+    pub train_suite: String,
+    pub seed: u64,
+    /// Number of held-out problems per eval suite.
+    pub eval_problems: usize,
+    /// Max tokens generated per answer during greedy decode.
+    pub max_new_tokens: usize,
+}
+
+impl Default for DataParams {
+    fn default() -> Self {
+        Self {
+            train_suite: "mixed".into(),
+            seed: 0,
+            eval_problems: 128,
+            max_new_tokens: 32,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ResidencyParams {
+    /// `"pcie4" | "nvlink" | "pcie3x4"`.
+    pub link: String,
+    /// Bytes per parameter for optimizer state (2 = bf16 as in the paper).
+    pub bytes_per_param: usize,
+}
+
+impl Default for ResidencyParams {
+    fn default() -> Self {
+        Self { link: "pcie4".into(), bytes_per_param: 2 }
+    }
+}
+
+impl ResidencyParams {
+    pub fn pcie_model(&self) -> Result<crate::optimizer::PcieModel> {
+        use crate::optimizer::PcieModel;
+        Ok(match self.link.as_str() {
+            "pcie4" => PcieModel::default(),
+            "nvlink" => PcieModel::nvlink(),
+            "pcie3x4" => PcieModel::slow_gen3_x4(),
+            other => return Err(anyhow!("unknown link model {other:?}")),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub preset: String,
+    pub method: Method,
+    pub train: TrainParams,
+    pub data: DataParams,
+    pub residency: ResidencyParams,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+    /// Use the Pallas-attention train_step artifact when available.
+    pub pallas_kernel: bool,
+    /// Where JSONL metrics go (None = no file logging).
+    pub metrics_path: Option<PathBuf>,
+}
+
+fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+impl RunConfig {
+    /// Sane defaults for a preset with AdaGradSelect(30%).
+    pub fn preset_defaults(preset: &str) -> Self {
+        Self {
+            preset: preset.to_string(),
+            method: Method::AdaGradSelect {
+                pct: 30.0,
+                eps0: 1.0,
+                lambda: None,
+                delta: 1.0,
+                explore_after_epoch1: false,
+                uniform_exploit: false,
+            },
+            train: TrainParams::default(),
+            data: DataParams::default(),
+            residency: ResidencyParams::default(),
+            artifacts_dir: default_artifacts_dir(),
+            seed: 0,
+            pallas_kernel: false,
+            metrics_path: None,
+        }
+    }
+
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json_str(&text)
+    }
+
+    /// Parse a config; unspecified sections fall back to defaults. The
+    /// only required fields are `preset` and `method`.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Value::parse(text).context("parsing JSON config")?;
+        let mut cfg = RunConfig::preset_defaults(v.get("preset")?.as_str()?);
+        cfg.method = Method::from_json(v.get("method")?)?;
+        if let Some(t) = v.opt("train") {
+            let d = &mut cfg.train;
+            if let Some(x) = t.opt("steps") { d.steps = x.as_u64()?; }
+            if let Some(x) = t.opt("steps_per_epoch") { d.steps_per_epoch = x.as_u64()?; }
+            if let Some(x) = t.opt("lr") { d.lr = x.as_f32()?; }
+            if let Some(x) = t.opt("warmup_steps") { d.warmup_steps = x.as_u64()?; }
+            if let Some(x) = t.opt("min_lr_frac") { d.min_lr_frac = x.as_f32()?; }
+            if let Some(x) = t.opt("log_every") { d.log_every = x.as_u64()?; }
+            if let Some(x) = t.opt("eval_every") { d.eval_every = x.as_u64()?; }
+            if let Some(x) = t.opt("grad_clip") {
+                d.grad_clip = match x {
+                    Value::Null => None,
+                    x => Some(x.as_f32()?),
+                };
+            }
+        }
+        if let Some(t) = v.opt("data") {
+            let d = &mut cfg.data;
+            if let Some(x) = t.opt("train_suite") { d.train_suite = x.as_str()?.to_string(); }
+            if let Some(x) = t.opt("seed") { d.seed = x.as_u64()?; }
+            if let Some(x) = t.opt("eval_problems") { d.eval_problems = x.as_usize()?; }
+            if let Some(x) = t.opt("max_new_tokens") { d.max_new_tokens = x.as_usize()?; }
+        }
+        if let Some(t) = v.opt("residency") {
+            let d = &mut cfg.residency;
+            if let Some(x) = t.opt("link") { d.link = x.as_str()?.to_string(); }
+            if let Some(x) = t.opt("bytes_per_param") { d.bytes_per_param = x.as_usize()?; }
+        }
+        if let Some(x) = v.opt("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(x.as_str()?);
+        }
+        if let Some(x) = v.opt("seed") { cfg.seed = x.as_u64()?; }
+        if let Some(x) = v.opt("pallas_kernel") { cfg.pallas_kernel = x.as_bool()?; }
+        if let Some(x) = v.opt("metrics_path") {
+            cfg.metrics_path = match x {
+                Value::Null => None,
+                x => Some(PathBuf::from(x.as_str()?)),
+            };
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("preset", Value::str(&self.preset)),
+            ("method", self.method.to_json()),
+            (
+                "train",
+                Value::obj(vec![
+                    ("steps", Value::num(self.train.steps as f64)),
+                    ("steps_per_epoch", Value::num(self.train.steps_per_epoch as f64)),
+                    ("lr", Value::num(self.train.lr as f64)),
+                    ("warmup_steps", Value::num(self.train.warmup_steps as f64)),
+                    ("min_lr_frac", Value::num(self.train.min_lr_frac as f64)),
+                    ("log_every", Value::num(self.train.log_every as f64)),
+                    ("eval_every", Value::num(self.train.eval_every as f64)),
+                    (
+                        "grad_clip",
+                        self.train.grad_clip.map(|c| Value::num(c as f64)).unwrap_or(Value::Null),
+                    ),
+                ]),
+            ),
+            (
+                "data",
+                Value::obj(vec![
+                    ("train_suite", Value::str(&self.data.train_suite)),
+                    ("seed", Value::num(self.data.seed as f64)),
+                    ("eval_problems", Value::num(self.data.eval_problems as f64)),
+                    ("max_new_tokens", Value::num(self.data.max_new_tokens as f64)),
+                ]),
+            ),
+            (
+                "residency",
+                Value::obj(vec![
+                    ("link", Value::str(&self.residency.link)),
+                    ("bytes_per_param", Value::num(self.residency.bytes_per_param as f64)),
+                ]),
+            ),
+            ("artifacts_dir", Value::str(self.artifacts_dir.to_string_lossy())),
+            ("seed", Value::num(self.seed as f64)),
+            ("pallas_kernel", Value::Bool(self.pallas_kernel)),
+        ])
+    }
+
+    /// Validate against a concrete preset (block counts etc).
+    pub fn validate(&self, preset: &Preset) -> Result<()> {
+        if self.train.steps == 0 {
+            return Err(anyhow!("train.steps must be > 0"));
+        }
+        if self.train.steps_per_epoch == 0 {
+            return Err(anyhow!("train.steps_per_epoch must be > 0"));
+        }
+        if let Some(pct) = self.method.selection_pct() {
+            if !(0.0..=100.0).contains(&pct) {
+                return Err(anyhow!("selection pct {pct} out of (0, 100]"));
+            }
+            let min = preset.min_selection_pct();
+            if pct < min {
+                return Err(anyhow!(
+                    "selection pct {pct:.1}% < paper guideline min {min:.1}% \
+                     (must update at least one of {} blocks per iteration)",
+                    preset.n_blocks()
+                ));
+            }
+        }
+        if let Method::Fixed { blocks } = &self.method {
+            if blocks.is_empty() {
+                return Err(anyhow!("fixed method needs at least one block"));
+            }
+            if blocks.iter().any(|&b| b >= preset.n_blocks()) {
+                return Err(anyhow!("fixed block index out of range"));
+            }
+        }
+        if let Method::AdaGradSelect { eps0, delta, .. } = &self.method {
+            if !(0.0..=1.0).contains(eps0) {
+                return Err(anyhow!("eps0 must be in [0, 1]"));
+            }
+            if *delta <= 0.0 {
+                return Err(anyhow!("delta must be > 0"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Learning rate at a step: linear warmup then cosine decay.
+    pub fn lr_at(&self, step: u64) -> f32 {
+        let t = &self.train;
+        if t.warmup_steps > 0 && step < t.warmup_steps {
+            return t.lr * (step + 1) as f32 / t.warmup_steps as f32;
+        }
+        let total = t.steps.max(t.warmup_steps + 1);
+        let progress =
+            (step - t.warmup_steps) as f32 / (total - t.warmup_steps).max(1) as f32;
+        let progress = progress.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        t.lr * (t.min_lr_frac + (1.0 - t.min_lr_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn preset() -> Preset {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).unwrap().preset("qwen-sim").unwrap().clone()
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunConfig::preset_defaults("qwen-sim");
+        cfg.train.steps = 77;
+        cfg.train.grad_clip = None;
+        cfg.method = Method::Lora { double_rank: true };
+        let text = cfg.to_json().to_string();
+        let back = RunConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.preset, "qwen-sim");
+        assert_eq!(back.method, cfg.method);
+        assert_eq!(back.train.steps, 77);
+        assert_eq!(back.train.grad_clip, None);
+    }
+
+    #[test]
+    fn validates_min_pct_guideline() {
+        let p = preset();
+        let mut cfg = RunConfig::preset_defaults("qwen-sim");
+        cfg.method = Method::TopK { pct: 1.0 }; // below 100/27 ≈ 3.7%
+        assert!(cfg.validate(&p).is_err());
+        cfg.method = Method::TopK { pct: 10.0 };
+        cfg.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn validates_adagrad_params() {
+        let p = preset();
+        let mut cfg = RunConfig::preset_defaults("qwen-sim");
+        cfg.method = Method::AdaGradSelect {
+            pct: 20.0,
+            eps0: 1.5,
+            lambda: None,
+            delta: 1.0,
+            explore_after_epoch1: false,
+            uniform_exploit: false,
+        };
+        assert!(cfg.validate(&p).is_err());
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let mut cfg = RunConfig::preset_defaults("qwen-sim");
+        cfg.train.lr = 1.0;
+        cfg.train.warmup_steps = 10;
+        cfg.train.steps = 110;
+        cfg.train.min_lr_frac = 0.1;
+        assert!(cfg.lr_at(0) < 0.2);
+        assert!((cfg.lr_at(9) - 1.0).abs() < 1e-6);
+        assert!(cfg.lr_at(60) < 1.0);
+        assert!((cfg.lr_at(109) - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn method_labels_stable() {
+        assert_eq!(Method::Full.label(), "full-ft");
+        assert_eq!(Method::TopK { pct: 10.0 }.label(), "topk-10%");
+        assert_eq!(
+            Method::Lora { double_rank: true }.label(),
+            "lora-r2"
+        );
+    }
+
+    #[test]
+    fn parses_method_json() {
+        let text = r#"{"preset": "qwen-sim", "method": {"kind": "adagradselect", "pct": 20.0}}"#;
+        let cfg = RunConfig::from_json_str(text).unwrap();
+        match cfg.method {
+            Method::AdaGradSelect { pct, eps0, delta, .. } => {
+                assert_eq!(pct, 20.0);
+                assert_eq!(eps0, 1.0);
+                assert_eq!(delta, 1.0);
+            }
+            _ => panic!("wrong method"),
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Batching: problems → padded `[batch, seq]` token/target matrices.
+//!
+//! Each row is one problem: `<bos> q: … \na: … #### n <eos>` followed by
+//! PAD. Inputs are `seq[:-1]`-style (tokens), targets are the same row
+//! shifted left by one with PAD beyond the text — the L2 loss masks PAD
+//! targets, so padding positions contribute nothing.
+
+use super::mathgen::MathGen;
+use super::tokenizer::Tokenizer;
+
+/// One training batch, flattened row-major for upload.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Infinite deterministic batch stream over a generator.
+pub struct TrainBatcher {
+    gen: MathGen,
+    tok: Tokenizer,
+    batch: usize,
+    seq_len: usize,
+    cursor: u64,
+}
+
+impl TrainBatcher {
+    pub fn new(gen: MathGen, tok: Tokenizer, batch: usize, seq_len: usize) -> Self {
+        Self { gen, tok, batch, seq_len, cursor: 0 }
+    }
+
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Encode one problem row into (tokens, targets), both `seq_len` long.
+    pub fn encode_row(&self, text: &str) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = self.tok.encode(text, true, true);
+        ids.truncate(self.seq_len + 1); // keep one extra for the shift
+        let mut tokens = vec![self.tok.pad; self.seq_len];
+        let mut targets = vec![self.tok.pad; self.seq_len];
+        let n_in = (ids.len() - 1).min(self.seq_len);
+        tokens[..n_in].copy_from_slice(&ids[..n_in]);
+        let n_tg = (ids.len() - 1).min(self.seq_len);
+        targets[..n_tg].copy_from_slice(&ids[1..1 + n_tg]);
+        (tokens, targets)
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq_len);
+        let mut targets = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            let p = self.gen.problem(self.cursor);
+            self.cursor += 1;
+            let (t, g) = self.encode_row(&p.full_text());
+            tokens.extend(t);
+            targets.extend(g);
+        }
+        Batch { tokens, targets, batch: self.batch, seq_len: self.seq_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Split, Suite};
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn batcher() -> TrainBatcher {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).unwrap();
+        let tok = Tokenizer::from_spec(&m.tokenizer);
+        TrainBatcher::new(MathGen::new(Suite::Gsm8kSim, Split::Train, 0), tok, 4, 128)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut b = batcher();
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.len(), 4 * 128);
+        assert_eq!(batch.targets.len(), 4 * 128);
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let b = batcher();
+        let (t, g) = b.encode_row("q: 1 + 1?\na: 1 + 1 = 2 #### 2");
+        // where both defined: target[i] == token[i+1]
+        let text_len = t.iter().position(|&x| x == 0).unwrap();
+        for i in 0..text_len - 1 {
+            assert_eq!(g[i], t[i + 1], "pos {i}");
+        }
+        // last supervised target is EOS
+        assert_eq!(g[text_len - 1], 2);
+    }
+
+    #[test]
+    fn rows_start_with_bos_and_pad_tail() {
+        let b = batcher();
+        let (t, g) = b.encode_row("q: x?\na: 1 #### 1");
+        assert_eq!(t[0], 1); // BOS
+        assert_eq!(*t.last().unwrap(), 0);
+        assert_eq!(*g.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn stream_advances() {
+        let mut b = batcher();
+        let a = b.next_batch();
+        let c = b.next_batch();
+        assert_ne!(a.tokens, c.tokens);
+        assert_eq!(b.cursor(), 8);
+    }
+
+    #[test]
+    fn long_text_truncates_cleanly() {
+        let b = batcher();
+        let long = "q: ".to_string() + &"9 + ".repeat(100) + "1?\na: 1 #### 1";
+        let (t, g) = b.encode_row(&long);
+        assert_eq!(t.len(), 128);
+        assert_eq!(g.len(), 128);
+        assert!(t.iter().all(|&x| x >= 0 && x < 64));
+    }
+}

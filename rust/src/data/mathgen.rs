@@ -1,0 +1,385 @@
+//! Synthetic math-word-problem generator (MetaMathQA / GSM8K / MATH
+//! stand-in).
+//!
+//! Problems follow the GSM8K answer convention the paper's eval harness
+//! relies on: free-text reasoning terminated by `#### <integer>`. The
+//! generator is fully deterministic from `(suite, split, index)` so train
+//! and eval sets are reproducible and disjoint-by-construction (different
+//! seed namespaces; the eval extractor also never sees train indices).
+//!
+//! `gsm8k-sim`: 1–3 arithmetic steps over small operands, phrased as
+//! templated word problems — learnable by a char-level SLM in a few
+//! hundred steps, yet hard enough that untrained models score ~0.
+//! `math-sim`: 3–5 step expressions with larger operands, `mod` and
+//! squares — the harder benchmark where all methods score lower (matching
+//! the paper's GSM8K-vs-MATH gap).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Suite {
+    Gsm8kSim,
+    MathSim,
+    /// Interleaved gsm8k-sim + math-sim — the MetaMathQA-40K stand-in
+    /// (the paper's training set spans both problem families).
+    Mixed,
+}
+
+impl Suite {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "gsm8k-sim" | "gsm8k" => Some(Suite::Gsm8kSim),
+            "math-sim" | "math" => Some(Suite::MathSim),
+            "mixed" | "metamath-sim" => Some(Suite::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Gsm8kSim => "gsm8k-sim",
+            Suite::MathSim => "math-sim",
+            Suite::Mixed => "mixed",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Eval,
+}
+
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub question: String,
+    pub reasoning: String,
+    pub answer: i64,
+}
+
+impl Problem {
+    /// Full supervised text: `q: …\na: … #### n`.
+    pub fn full_text(&self) -> String {
+        format!("q: {}\na: {} #### {}", self.question, self.reasoning, self.answer)
+    }
+
+    /// Prompt shown at eval time (model must produce reasoning + answer).
+    pub fn prompt(&self) -> String {
+        format!("q: {}\na: ", self.question)
+    }
+}
+
+/// Extract the `#### <integer>` answer from generated text, if any.
+pub fn extract_answer(text: &str) -> Option<i64> {
+    let idx = text.rfind("####")?;
+    let tail = &text[idx + 4..];
+    let tail = tail.trim_start();
+    let end = tail
+        .char_indices()
+        .take_while(|(i, c)| c.is_ascii_digit() || (*i == 0 && *c == '-'))
+        .map(|(i, c)| i + c.len_utf8())
+        .last()?;
+    tail[..end].parse().ok()
+}
+
+const NAMES: [&str; 8] = ["alice", "ben", "carla", "dev", "emma", "farid", "gia", "hana"];
+const ITEMS: [&str; 8] =
+    ["apples", "books", "coins", "pens", "cards", "shells", "stamps", "marbles"];
+
+pub struct MathGen {
+    suite: Suite,
+    split: Split,
+    seed: u64,
+}
+
+impl MathGen {
+    pub fn new(suite: Suite, split: Split, seed: u64) -> Self {
+        Self { suite, split, seed }
+    }
+
+    fn rng_for(&self, index: u64) -> Rng {
+        // disjoint namespaces: split tag ^ suite tag ^ user seed ^ index
+        let split_tag: u64 = match self.split {
+            Split::Train => 0x5452_4149_4E00_0000,
+            Split::Eval => 0x4556_414C_0000_0000,
+        };
+        let suite_tag: u64 = match self.suite {
+            Suite::Gsm8kSim => 0x1111,
+            Suite::MathSim => 0x2222,
+            Suite::Mixed => unreachable!("mixed resolves to a concrete suite"),
+        };
+        Rng::seed_from_u64(
+            split_tag ^ suite_tag ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ index,
+        )
+    }
+
+    /// Deterministic problem #`index` of this (suite, split, seed).
+    pub fn problem(&self, index: u64) -> Problem {
+        // Mixed interleaves the two families with disjoint sub-indices.
+        let (suite, index) = match self.suite {
+            Suite::Mixed => (
+                if index % 2 == 0 { Suite::Gsm8kSim } else { Suite::MathSim },
+                index / 2,
+            ),
+            s => (s, index),
+        };
+        let mut rng = MathGen { suite, split: self.split, seed: self.seed }.rng_for(index);
+        match suite {
+            Suite::Gsm8kSim => gsm8k_problem(&mut rng),
+            Suite::MathSim => math_problem(&mut rng),
+            Suite::Mixed => unreachable!(),
+        }
+    }
+
+    pub fn problems(&self, start: u64, count: usize) -> Vec<Problem> {
+        (start..start + count as u64).map(|i| self.problem(i)).collect()
+    }
+}
+
+fn gsm8k_problem(rng: &mut Rng) -> Problem {
+    let name = NAMES[rng.gen_range(0, NAMES.len())];
+    let other = NAMES[rng.gen_range(0, NAMES.len())];
+    let item = ITEMS[rng.gen_range(0, ITEMS.len())];
+    match rng.gen_range(0, 6) as u32 {
+        0 => {
+            // gain
+            let a = rng.gen_range_i64(2, 10);
+            let b = rng.gen_range_i64(2, 10);
+            Problem {
+                question: format!(
+                    "{name} has {a} {item}. {other} gives {name} {b} more. how many {item} does {name} have?"
+                ),
+                reasoning: format!("{a} + {b} = {}", a + b),
+                answer: a + b,
+            }
+        }
+        1 => {
+            // loss
+            let a = rng.gen_range_i64(5, 15);
+            let b = rng.gen_range_i64(1, a);
+            Problem {
+                question: format!(
+                    "{name} has {a} {item}. {name} gives {b} to {other}. how many {item} are left?"
+                ),
+                reasoning: format!("{a} - {b} = {}", a - b),
+                answer: a - b,
+            }
+        }
+        2 => {
+            // multiply
+            let a = rng.gen_range_i64(2, 7);
+            let b = rng.gen_range_i64(2, 7);
+            Problem {
+                question: format!(
+                    "{name} has {a} bags with {b} {item} in each bag. how many {item} in total?"
+                ),
+                reasoning: format!("{a} * {b} = {}", a * b),
+                answer: a * b,
+            }
+        }
+        3 => {
+            // two-step: gain then loss
+            let a = rng.gen_range_i64(3, 10);
+            let b = rng.gen_range_i64(2, 8);
+            let c = rng.gen_range_i64(1, a + b);
+            Problem {
+                question: format!(
+                    "{name} has {a} {item}, buys {b} more, then loses {c}. how many {item} now?"
+                ),
+                reasoning: format!("{a} + {b} = {}. {} - {c} = {}", a + b, a + b, a + b - c),
+                answer: a + b - c,
+            }
+        }
+        4 => {
+            // two-step: multiply then add
+            let a = rng.gen_range_i64(2, 6);
+            let b = rng.gen_range_i64(2, 6);
+            let c = rng.gen_range_i64(1, 9);
+            Problem {
+                question: format!(
+                    "{name} has {a} boxes of {b} {item} and {c} loose {item}. how many {item} in total?"
+                ),
+                reasoning: format!("{a} * {b} = {}. {} + {c} = {}", a * b, a * b, a * b + c),
+                answer: a * b + c,
+            }
+        }
+        _ => {
+            // share equally
+            let b = rng.gen_range_i64(2, 6);
+            let q = rng.gen_range_i64(2, 8);
+            let a = b * q;
+            Problem {
+                question: format!(
+                    "{name} shares {a} {item} equally among {b} friends. how many {item} does each friend get?"
+                ),
+                reasoning: format!("{a} / {b} = {q}"),
+                answer: q,
+            }
+        }
+    }
+}
+
+fn math_problem(rng: &mut Rng) -> Problem {
+    match rng.gen_range(0, 4) as u32 {
+        0 => {
+            // (a*b + c) mod d
+            let a = rng.gen_range_i64(3, 13);
+            let b = rng.gen_range_i64(3, 13);
+            let c = rng.gen_range_i64(2, 20);
+            let d = rng.gen_range_i64(3, 10);
+            let t1 = a * b;
+            let t2 = t1 + c;
+            Problem {
+                question: format!("compute ({a} * {b} + {c}) mod {d}."),
+                reasoning: format!(
+                    "{a} * {b} = {t1}. {t1} + {c} = {t2}. {t2} mod {d} = {}",
+                    t2 % d
+                ),
+                answer: t2 % d,
+            }
+        }
+        1 => {
+            // a^2 - b
+            let a = rng.gen_range_i64(3, 12);
+            let b = rng.gen_range_i64(1, 25);
+            let t1 = a * a;
+            Problem {
+                question: format!("compute {a} * {a} - {b}."),
+                reasoning: format!("{a} * {a} = {t1}. {t1} - {b} = {}", t1 - b),
+                answer: t1 - b,
+            }
+        }
+        2 => {
+            // a*b - c*d
+            let a = rng.gen_range_i64(2, 10);
+            let b = rng.gen_range_i64(2, 10);
+            let c = rng.gen_range_i64(2, 6);
+            let d = rng.gen_range_i64(2, 6);
+            let (t1, t2) = (a * b, c * d);
+            Problem {
+                question: format!("compute {a} * {b} - {c} * {d}."),
+                reasoning: format!("{a} * {b} = {t1}. {c} * {d} = {t2}. {t1} - {t2} = {}", t1 - t2),
+                answer: t1 - t2,
+            }
+        }
+        _ => {
+            // ((a + b) * c) mod d, three steps
+            let a = rng.gen_range_i64(2, 15);
+            let b = rng.gen_range_i64(2, 15);
+            let c = rng.gen_range_i64(2, 7);
+            let d = rng.gen_range_i64(3, 11);
+            let t1 = a + b;
+            let t2 = t1 * c;
+            Problem {
+                question: format!("compute (({a} + {b}) * {c}) mod {d}."),
+                reasoning: format!(
+                    "{a} + {b} = {t1}. {t1} * {c} = {t2}. {t2} mod {d} = {}",
+                    t2 % d
+                ),
+                answer: t2 % d,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_interleaves_families() {
+        let g = MathGen::new(Suite::Mixed, Split::Train, 0);
+        let a = g.problem(0);
+        let b = g.problem(1);
+        // even indices are word problems, odd are compute expressions
+        assert!(!a.question.starts_with("compute"));
+        assert!(b.question.starts_with("compute"));
+        // sub-index mapping matches the concrete suites
+        let gs = MathGen::new(Suite::Gsm8kSim, Split::Train, 0);
+        assert_eq!(a.full_text(), gs.problem(0).full_text());
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let g = MathGen::new(Suite::Gsm8kSim, Split::Train, 0);
+        assert_eq!(g.problem(5).full_text(), g.problem(5).full_text());
+        assert_ne!(g.problem(5).full_text(), g.problem(6).full_text());
+    }
+
+    #[test]
+    fn train_eval_disjoint_streams() {
+        let tr = MathGen::new(Suite::Gsm8kSim, Split::Train, 0);
+        let ev = MathGen::new(Suite::Gsm8kSim, Split::Eval, 0);
+        let same = (0..50).filter(|&i| tr.problem(i).full_text() == ev.problem(i).full_text()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn reasoning_is_consistent_with_answer() {
+        for suite in [Suite::Gsm8kSim, Suite::MathSim] {
+            let g = MathGen::new(suite, Split::Train, 3);
+            for i in 0..200 {
+                let p = g.problem(i);
+                // last number in the reasoning must be the answer
+                let last_num: i64 = p
+                    .reasoning
+                    .split(|c: char| !(c.is_ascii_digit() || c == '-'))
+                    .filter(|s| !s.is_empty())
+                    .last()
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                assert_eq!(last_num, p.answer, "{suite:?} #{i}: {}", p.full_text());
+            }
+        }
+    }
+
+    #[test]
+    fn extract_answer_works() {
+        assert_eq!(extract_answer("3 + 4 = 7 #### 7"), Some(7));
+        assert_eq!(extract_answer("x #### -12\n"), Some(-12));
+        assert_eq!(extract_answer("#### 5 then #### 9!"), Some(9));
+        assert_eq!(extract_answer("no marker"), None);
+        assert_eq!(extract_answer("#### notanum"), None);
+    }
+
+    #[test]
+    fn answers_extractable_from_full_text() {
+        for suite in [Suite::Gsm8kSim, Suite::MathSim] {
+            let g = MathGen::new(suite, Split::Eval, 9);
+            for i in 0..100 {
+                let p = g.problem(i);
+                assert_eq!(extract_answer(&p.full_text()), Some(p.answer));
+            }
+        }
+    }
+
+    #[test]
+    fn problems_fit_sequence_budget() {
+        // all generated text must fit the smallest sim preset seq (128)
+        for suite in [Suite::Gsm8kSim, Suite::MathSim] {
+            let g = MathGen::new(suite, Split::Train, 1);
+            for i in 0..500 {
+                let p = g.problem(i);
+                assert!(
+                    p.full_text().len() + 2 <= 128,
+                    "{suite:?} #{i} too long: {} chars",
+                    p.full_text().len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn math_sim_is_harder_than_gsm8k_sim() {
+        // proxy: average reasoning step count
+        let steps = |suite| {
+            let g = MathGen::new(suite, Split::Train, 0);
+            (0..200)
+                .map(|i| g.problem(i).reasoning.matches('=').count())
+                .sum::<usize>() as f64
+                / 200.0
+        };
+        assert!(steps(Suite::MathSim) > steps(Suite::Gsm8kSim));
+    }
+}

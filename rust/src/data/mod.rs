@@ -1,0 +1,21 @@
+//! Data substrate: tokenizer, synthetic math corpus, batching.
+//!
+//! The paper fine-tunes on MetaMathQA-40K and evaluates on GSM8K/MATH —
+//! none of which are available in this environment (repro band 0). The
+//! substitution (DESIGN.md §2) is a deterministic generator of templated
+//! math word problems in the same format (`question → reasoning →
+//! `#### <answer>`), with two difficulty suites standing in for the two
+//! benchmarks:
+//!
+//! * `gsm8k-sim` — 1–3 step small-operand word problems;
+//! * `math-sim`  — 3–5 step expressions with larger operands, mod/square.
+//!
+//! Train and eval splits draw from disjoint seed namespaces.
+
+mod dataset;
+pub mod mathgen;
+mod tokenizer;
+
+pub use dataset::{Batch, TrainBatcher};
+pub use mathgen::{extract_answer, MathGen, Problem, Split, Suite};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,115 @@
+//! Char-level tokenizer, built from the manifest's vocabulary string so
+//! Rust and the build-time Python side can never drift.
+
+use crate::runtime::TokenizerSpec;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub unk: i32,
+    pub vocab_size: usize,
+    char_to_id: std::collections::HashMap<char, i32>,
+    id_to_char: Vec<Option<char>>,
+}
+
+impl Tokenizer {
+    pub fn from_spec(spec: &TokenizerSpec) -> Self {
+        let mut char_to_id = std::collections::HashMap::new();
+        let mut id_to_char = vec![None; spec.vocab_size];
+        for (i, c) in spec.chars.chars().enumerate() {
+            let id = 4 + i as i32;
+            char_to_id.insert(c, id);
+            id_to_char[id as usize] = Some(c);
+        }
+        Self {
+            pad: spec.pad,
+            bos: spec.bos,
+            eos: spec.eos,
+            unk: spec.unk,
+            vocab_size: spec.vocab_size,
+            char_to_id,
+            id_to_char,
+        }
+    }
+
+    pub fn encode(&self, text: &str, bos: bool, eos: bool) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(text.len() + 2);
+        if bos {
+            ids.push(self.bos);
+        }
+        for c in text.chars().flat_map(|c| c.to_lowercase()) {
+            ids.push(*self.char_to_id.get(&c).unwrap_or(&self.unk));
+        }
+        if eos {
+            ids.push(self.eos);
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&i| {
+                self.id_to_char.get(i as usize).copied().flatten()
+            })
+            .collect()
+    }
+
+    /// Decode stopping at the first EOS (for generated continuations).
+    pub fn decode_until_eos(&self, ids: &[i32]) -> String {
+        let end = ids.iter().position(|&i| i == self.eos).unwrap_or(ids.len());
+        self.decode(&ids[..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn tok() -> Tokenizer {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Tokenizer::from_spec(&Manifest::load(&dir).unwrap().tokenizer)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = tok();
+        let s = "alice has 3 apples. #### 42\n";
+        let ids = t.encode(s, true, true);
+        assert_eq!(ids[0], t.bos);
+        assert_eq!(*ids.last().unwrap(), t.eos);
+        assert_eq!(t.decode(&ids[1..ids.len() - 1]), s);
+    }
+
+    #[test]
+    fn unknown_char_is_unk() {
+        let t = tok();
+        assert_eq!(t.encode("~", false, false), vec![t.unk]);
+    }
+
+    #[test]
+    fn uppercase_folds() {
+        let t = tok();
+        assert_eq!(t.encode("AbC", false, false), t.encode("abc", false, false));
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let t = tok();
+        for id in t.encode("9z+ #:'%$\n", true, true) {
+            assert!((0..t.vocab_size as i32).contains(&id));
+        }
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let t = tok();
+        let mut ids = t.encode("12", false, false);
+        ids.push(t.eos);
+        ids.extend(t.encode("junk", false, false));
+        assert_eq!(t.decode_until_eos(&ids), "12");
+    }
+}

@@ -1,0 +1,192 @@
+//! Evaluation harness: batched greedy decoding + exact-match accuracy.
+//!
+//! Mirrors the paper's setup: zero-shot, no system prompt, greedy decoding
+//! (temperature 0 ⇒ deterministic, no variance across runs). A problem
+//! counts as correct iff the generated continuation contains
+//! `#### <answer>` with the exact integer answer.
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::data::mathgen::extract_answer;
+use crate::data::{Problem, Tokenizer};
+use crate::model::ModelState;
+use crate::runtime::{Engine, Preset};
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub n: usize,
+    pub n_correct: usize,
+    pub accuracy: f64,
+    /// Fraction of generations that produced *any* `#### n` marker.
+    pub format_rate: f64,
+    pub wallclock_s: f64,
+}
+
+pub struct Evaluator<'e> {
+    engine: &'e Engine,
+    exe_decode: std::rc::Rc<crate::runtime::Exe>,
+    exe_eval_loss: std::rc::Rc<crate::runtime::Exe>,
+    tok: Tokenizer,
+    preset: Preset,
+    pub max_new_tokens: usize,
+}
+
+impl<'e> Evaluator<'e> {
+    pub fn new(engine: &'e Engine, preset_name: &str, max_new_tokens: usize) -> Result<Self> {
+        let preset = engine.manifest.preset(preset_name)?.clone();
+        Ok(Self {
+            engine,
+            exe_decode: engine.load_preset_exe(preset_name, "decode_step")?,
+            exe_eval_loss: engine.load_preset_exe(preset_name, "eval_loss")?,
+            tok: Tokenizer::from_spec(&engine.manifest.tokenizer),
+            preset,
+            max_new_tokens,
+        })
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tok
+    }
+
+    fn upload_state(&self, state: &ModelState) -> Result<Vec<PjRtBuffer>> {
+        state.flats.iter().map(|f| self.engine.upload_f32(f)).collect()
+    }
+
+    /// Greedy-decode continuations for a slice of prompts (token rows).
+    ///
+    /// Returns, per row, the generated token ids (prompt excluded).
+    pub fn generate(
+        &self,
+        device_blocks: &[PjRtBuffer],
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.preset.model.batch;
+        let s = self.preset.model.seq_len;
+        let v = self.preset.model.vocab;
+        assert!(prompts.len() <= b, "at most one device batch per call");
+
+        let mut rows = vec![vec![self.tok.pad; s]; b];
+        let mut lens = vec![0usize; b];
+        let mut done = vec![false; b];
+        for (i, p) in prompts.iter().enumerate() {
+            let n = p.len().min(s);
+            rows[i][..n].copy_from_slice(&p[..n]);
+            lens[i] = n;
+        }
+        for i in prompts.len()..b {
+            done[i] = true;
+            lens[i] = 1; // keep indexing valid
+        }
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+
+        for _ in 0..self.max_new_tokens {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+            let tok_buf = self.engine.upload_i32(&flat, &[b, s])?;
+            let mut args: Vec<&PjRtBuffer> = device_blocks.iter().collect();
+            args.push(&tok_buf);
+            let out = self.exe_decode.run(&args)?;
+            let logits = out.vec_f32(0)?; // [b, s, v]
+            for i in 0..prompts.len() {
+                if done[i] {
+                    continue;
+                }
+                let pos = lens[i] - 1;
+                let off = (i * s + pos) * v;
+                let row = &logits[off..off + v];
+                let next = argmax(row) as i32;
+                if next == self.tok.eos || lens[i] >= s {
+                    done[i] = true;
+                    continue;
+                }
+                rows[i][lens[i]] = next;
+                lens[i] += 1;
+                generated[i].push(next);
+                if lens[i] >= s {
+                    done[i] = true;
+                }
+            }
+        }
+        Ok(generated)
+    }
+
+    /// Exact-match accuracy over a problem set.
+    pub fn accuracy(&self, state: &ModelState, problems: &[Problem]) -> Result<EvalResult> {
+        let t0 = std::time::Instant::now();
+        let device_blocks = self.upload_state(state)?;
+        let b = self.preset.model.batch;
+        let mut n_correct = 0usize;
+        let mut n_formatted = 0usize;
+
+        for chunk in problems.chunks(b) {
+            let prompts: Vec<Vec<i32>> = chunk
+                .iter()
+                .map(|p| self.tok.encode(&p.prompt(), true, false))
+                .collect();
+            let gens = self.generate(&device_blocks, &prompts)?;
+            for (p, g) in chunk.iter().zip(&gens) {
+                let text = self.tok.decode_until_eos(g);
+                if let Some(ans) = extract_answer(&text) {
+                    n_formatted += 1;
+                    if ans == p.answer {
+                        n_correct += 1;
+                    }
+                }
+            }
+        }
+        let n = problems.len();
+        Ok(EvalResult {
+            n,
+            n_correct,
+            accuracy: n_correct as f64 / n.max(1) as f64,
+            format_rate: n_formatted as f64 / n.max(1) as f64,
+            wallclock_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Mean eval loss over `n_batches` held-out batches (Fig. 4 series).
+    pub fn eval_loss(
+        &self,
+        state: &ModelState,
+        batcher: &mut crate::data::TrainBatcher,
+        n_batches: usize,
+    ) -> Result<f32> {
+        let device_blocks = self.upload_state(state)?;
+        let dims = [self.preset.model.batch, self.preset.model.seq_len];
+        let mut total = 0.0f32;
+        for _ in 0..n_batches {
+            let batch = batcher.next_batch();
+            let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
+            let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
+            let mut args: Vec<&PjRtBuffer> = device_blocks.iter().collect();
+            args.push(&tok_buf);
+            args.push(&tgt_buf);
+            total += self.exe_eval_loss.run(&args)?.scalar_f32(0)?;
+        }
+        Ok(total / n_batches.max(1) as f32)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(super::argmax(&[0.1, 3.0, -1.0, 3.0]), 1);
+        assert_eq!(super::argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! | entry | paper artifact |
+//! |---|---|
+//! | [`fig1`]   | Fig. 1 — training time vs avg GPU memory per method |
+//! | [`fig3`]   | Fig. 3 — accuracy vs % blocks selected (Algorithm 1) |
+//! | [`fig4`]   | Fig. 4 — loss convergence per method |
+//! | [`table1`] | Table 1 — GSM8K/MATH accuracy across the three models |
+//! | [`ablations`] | design-choice ablations called out in DESIGN.md §7 |
+//!
+//! Each function writes CSV series plus a markdown summary under
+//! `results/` and returns the rows for programmatic use.
+
+mod runs;
+
+pub use runs::{
+    ablations, all, fig1, fig1_write, fig3, fig3_on, fig4, fig4_write, paper_methods,
+    run_ladder, run_method, table1, table1_write, ExpOptions, MethodRun,
+};

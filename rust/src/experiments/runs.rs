@@ -1,0 +1,360 @@
+//! Concrete experiment drivers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{Method, RunConfig};
+use crate::data::{MathGen, Split, Suite};
+use crate::eval::Evaluator;
+use crate::runtime::Engine;
+use crate::telemetry::{markdown_table, CsvWriter};
+use crate::train::{TrainSummary, Trainer};
+
+/// Common knobs for all experiments (scaled-down defaults; the final
+/// numbers in EXPERIMENTS.md were produced with the values noted there).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub steps: u64,
+    pub steps_per_epoch: u64,
+    pub eval_problems: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            steps: 100,
+            steps_per_epoch: 50,
+            eval_problems: 24,
+            seed: 0,
+        }
+    }
+}
+
+/// One completed method run (training summary + eval accuracies).
+#[derive(Debug, Clone)]
+pub struct MethodRun {
+    pub summary: TrainSummary,
+    pub gsm8k_acc: f64,
+    pub math_acc: f64,
+    /// Per-step training losses (Fig. 4 series).
+    pub loss_curve: Vec<f32>,
+}
+
+fn base_cfg(opt: &ExpOptions, preset: &str, method: Method) -> RunConfig {
+    let mut cfg = RunConfig::preset_defaults(preset);
+    cfg.method = method;
+    cfg.train.steps = opt.steps;
+    cfg.train.steps_per_epoch = opt.steps_per_epoch;
+    cfg.train.log_every = 50;
+    cfg.artifacts_dir = opt.artifacts_dir.clone();
+    cfg.seed = opt.seed;
+    cfg
+}
+
+/// Train one method and evaluate on both suites.
+pub fn run_method(
+    engine: &Engine,
+    opt: &ExpOptions,
+    preset: &str,
+    method: Method,
+) -> Result<MethodRun> {
+    let cfg = base_cfg(opt, preset, method);
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let summary = trainer.run()?;
+    let loss_curve: Vec<f32> = trainer.metrics.records.iter().map(|r| r.loss).collect();
+    let state = trainer.eval_state()?;
+    let ev = Evaluator::new(engine, preset, 32)?;
+    let gsm = MathGen::new(Suite::Gsm8kSim, Split::Eval, opt.seed)
+        .problems(0, opt.eval_problems);
+    let math = MathGen::new(Suite::MathSim, Split::Eval, opt.seed)
+        .problems(0, opt.eval_problems);
+    let gsm_res = ev.accuracy(&state, &gsm)?;
+    let math_res = ev.accuracy(&state, &math)?;
+    crate::log_info!(
+        "run complete: {} on {preset}: gsm {:.3} math {:.3} tail_loss {:.3}",
+        summary.method,
+        gsm_res.accuracy,
+        math_res.accuracy,
+        summary.tail_loss
+    );
+    Ok(MethodRun {
+        summary,
+        gsm8k_acc: gsm_res.accuracy,
+        math_acc: math_res.accuracy,
+        loss_curve,
+    })
+}
+
+/// Run the full paper method ladder on one preset (shared by Fig. 1,
+/// Fig. 4 and Table 1 so each configuration trains exactly once).
+pub fn run_ladder(engine: &Engine, opt: &ExpOptions, preset: &str) -> Result<Vec<MethodRun>> {
+    paper_methods()
+        .into_iter()
+        .map(|m| run_method(engine, opt, preset, m))
+        .collect()
+}
+
+/// The method ladder used by Fig. 1 / Fig. 4 / Table 1.
+pub fn paper_methods() -> Vec<Method> {
+    vec![
+        Method::ags(10.0),
+        Method::ags(20.0),
+        Method::ags(30.0),
+        Method::Lora { double_rank: false },
+        Method::Lora { double_rank: true },
+        Method::Full,
+    ]
+}
+
+/// Fig. 1 — training time vs average GPU memory (qwen-sim).
+pub fn fig1(engine: &Engine, opt: &ExpOptions) -> Result<Vec<MethodRun>> {
+    let rows = run_ladder(engine, opt, "qwen-sim")?;
+    fig1_write(&rows, opt)?;
+    Ok(rows)
+}
+
+/// Emit the Fig. 1 CSV/markdown from completed runs.
+pub fn fig1_write(rows: &[MethodRun], opt: &ExpOptions) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opt.out_dir.join("fig1_time_vs_memory.csv"),
+        &[
+            "method",
+            "wallclock_s",
+            "sim_time_s",
+            "gpu_mem_total_mb",
+            "gpu_mem_optimizer_mb",
+            "opt_vram_avg_mb",
+            "opt_vram_peak_mb",
+            "pcie_stall_s",
+        ],
+    )?;
+    for run in rows {
+        let s = &run.summary;
+        csv.row(&[
+            s.method.clone(),
+            format!("{:.2}", s.wallclock_s),
+            format!("{:.4}", s.sim_total_s),
+            format!("{:.3}", s.memory.total() as f64 / 1e6),
+            format!("{:.3}", s.memory.optimizer as f64 / 1e6),
+            format!("{:.3}", s.opt_vram_avg_bytes / 1e6),
+            format!("{:.3}", s.opt_vram_peak_bytes as f64 / 1e6),
+            format!("{:.4}", s.pcie_stall_s),
+        ])?;
+    }
+    csv.flush()?;
+    write_fig1_md(rows, &opt.out_dir)?;
+    Ok(())
+}
+
+fn write_fig1_md(rows: &[MethodRun], out: &Path) -> Result<()> {
+    let header = ["method", "sim time (s)", "wallclock (s)", "GPU mem (MB)", "vs FFT"];
+    let fft_mem = rows
+        .iter()
+        .find(|r| r.summary.method == "full-ft")
+        .map(|r| r.summary.memory.total() as f64)
+        .unwrap_or(1.0);
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mem = r.summary.memory.total() as f64;
+            vec![
+                r.summary.method.clone(),
+                format!("{:.3}", r.summary.sim_total_s),
+                format!("{:.1}", r.summary.wallclock_s),
+                format!("{:.2}", mem / 1e6),
+                format!("{:+.1}%", (mem / fft_mem - 1.0) * 100.0),
+            ]
+        })
+        .collect();
+    std::fs::write(
+        out.join("fig1_time_vs_memory.md"),
+        format!("# Fig. 1 — training time vs GPU memory (qwen-sim)\n\n{}", markdown_table(&header, &body)),
+    )?;
+    Ok(())
+}
+
+/// Fig. 3 — accuracy vs % blocks selected (Algorithm 1 sweep, qwen-sim).
+pub fn fig3(engine: &Engine, opt: &ExpOptions, pcts: &[f64]) -> Result<Vec<(f64, f64, f64)>> {
+    fig3_on(engine, opt, "qwen-sim", pcts)
+}
+
+/// Fig. 3 sweep on an arbitrary preset (micro-scale tests use test-tiny).
+pub fn fig3_on(
+    engine: &Engine,
+    opt: &ExpOptions,
+    preset: &str,
+    pcts: &[f64],
+) -> Result<Vec<(f64, f64, f64)>> {
+    let mut out = Vec::new();
+    let mut csv = CsvWriter::create(
+        opt.out_dir.join("fig3_accuracy_vs_pct.csv"),
+        &["pct", "gsm8k_acc", "math_acc", "tail_loss", "sim_time_s"],
+    )?;
+    for &pct in pcts {
+        let run = run_method(engine, opt, preset, Method::TopK { pct })?;
+        csv.row(&[
+            format!("{pct}"),
+            format!("{:.4}", run.gsm8k_acc),
+            format!("{:.4}", run.math_acc),
+            format!("{:.4}", run.summary.tail_loss),
+            format!("{:.4}", run.summary.sim_total_s),
+        ])?;
+        out.push((pct, run.gsm8k_acc, run.math_acc));
+    }
+    csv.flush()?;
+    Ok(out)
+}
+
+/// Fig. 4 — loss convergence series for every method (qwen-sim).
+pub fn fig4(engine: &Engine, opt: &ExpOptions) -> Result<()> {
+    let rows = run_ladder(engine, opt, "qwen-sim")?;
+    fig4_write(&rows, opt)
+}
+
+/// Emit the Fig. 4 CSV from completed runs.
+pub fn fig4_write(rows: &[MethodRun], opt: &ExpOptions) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opt.out_dir.join("fig4_loss_convergence.csv"),
+        &["method", "step", "loss"],
+    )?;
+    for run in rows {
+        for (step, loss) in run.loss_curve.iter().enumerate() {
+            csv.row(&[run.summary.method.clone(), step.to_string(), format!("{loss:.4}")])?;
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Table 1 — accuracy across the three model families × methods × suites.
+pub fn table1(engine: &Engine, opt: &ExpOptions, presets: &[&str]) -> Result<Vec<MethodRun>> {
+    let ladders: Vec<(String, Vec<MethodRun>)> = presets
+        .iter()
+        .map(|&p| Ok((p.to_string(), run_ladder(engine, opt, p)?)))
+        .collect::<Result<_>>()?;
+    table1_write(&ladders, opt)?;
+    Ok(ladders.into_iter().flat_map(|(_, r)| r).collect())
+}
+
+/// Emit the Table 1 CSV/markdown from completed per-preset ladders.
+pub fn table1_write(ladders: &[(String, Vec<MethodRun>)], opt: &ExpOptions) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        opt.out_dir.join("table1_accuracy.csv"),
+        &["preset", "method", "gsm8k_acc", "math_acc", "tail_loss"],
+    )?;
+    let mut md_rows: Vec<Vec<String>> = Vec::new();
+    for (preset, runs) in ladders {
+        for run in runs {
+            csv.row(&[
+                preset.clone(),
+                run.summary.method.clone(),
+                format!("{:.4}", run.gsm8k_acc),
+                format!("{:.4}", run.math_acc),
+                format!("{:.4}", run.summary.tail_loss),
+            ])?;
+            md_rows.push(vec![
+                preset.clone(),
+                run.summary.method.clone(),
+                format!("{:.1}", run.gsm8k_acc * 100.0),
+                format!("{:.1}", run.math_acc * 100.0),
+            ]);
+        }
+    }
+    csv.flush()?;
+    std::fs::write(
+        opt.out_dir.join("table1_accuracy.md"),
+        format!(
+            "# Table 1 — accuracy (%) on gsm8k-sim / math-sim\n\n{}",
+            markdown_table(&["preset", "method", "gsm8k-sim", "math-sim"], &md_rows)
+        ),
+    )?;
+    Ok(())
+}
+
+/// Run everything, sharing the qwen-sim ladder across Fig. 1 / Fig. 4 /
+/// Table 1 so each configuration trains exactly once.
+pub fn all(engine: &Engine, opt: &ExpOptions, presets: &[&str], pcts: &[f64]) -> Result<()> {
+    let mut ladders: Vec<(String, Vec<MethodRun>)> = Vec::new();
+    for &preset in presets {
+        crate::log_info!("== ladder: {preset} ==");
+        ladders.push((preset.to_string(), run_ladder(engine, opt, preset)?));
+    }
+    if let Some((_, qwen)) = ladders.iter().find(|(p, _)| p == "qwen-sim") {
+        fig1_write(qwen, opt)?;
+        fig4_write(qwen, opt)?;
+    }
+    table1_write(&ladders, opt)?;
+    crate::log_info!("== fig3 sweep ==");
+    fig3(engine, opt, pcts)?;
+    crate::log_info!("== ablations ==");
+    ablations(engine, opt)?;
+    Ok(())
+}
+
+/// Design-choice ablations (DESIGN.md §7) on qwen-sim at 20%.
+pub fn ablations(engine: &Engine, opt: &ExpOptions) -> Result<Vec<MethodRun>> {
+    let preset = "qwen-sim";
+    let variants: Vec<(&str, Method)> = vec![
+        ("adagradselect", Method::ags(20.0)),
+        (
+            "uniform-exploit",
+            Method::AdaGradSelect {
+                pct: 20.0,
+                eps0: 1.0,
+                lambda: None,
+                delta: 1.0,
+                explore_after_epoch1: false,
+                uniform_exploit: true,
+            },
+        ),
+        (
+            "no-exploration",
+            Method::AdaGradSelect {
+                pct: 20.0,
+                eps0: 0.0,
+                lambda: None,
+                delta: 1.0,
+                explore_after_epoch1: false,
+                uniform_exploit: false,
+            },
+        ),
+        (
+            "delta-10",
+            Method::AdaGradSelect {
+                pct: 20.0,
+                eps0: 1.0,
+                lambda: None,
+                delta: 10.0,
+                explore_after_epoch1: false,
+                uniform_exploit: false,
+            },
+        ),
+        ("random-lisa", Method::Random { pct: 20.0 }),
+        ("topk-fresh", Method::TopK { pct: 20.0 }),
+        ("ucb-bandit", Method::Ucb { pct: 20.0, c: 0.5 }),
+    ];
+    let mut csv = CsvWriter::create(
+        opt.out_dir.join("ablations.csv"),
+        &["variant", "gsm8k_acc", "math_acc", "tail_loss", "explore_steps"],
+    )?;
+    let mut out = Vec::new();
+    for (name, method) in variants {
+        let run = run_method(engine, opt, preset, method)?;
+        csv.row(&[
+            name.to_string(),
+            format!("{:.4}", run.gsm8k_acc),
+            format!("{:.4}", run.math_acc),
+            format!("{:.4}", run.summary.tail_loss),
+            run.summary.explore_steps.to_string(),
+        ])?;
+        out.push(run);
+    }
+    csv.flush()?;
+    Ok(out)
+}

@@ -1,0 +1,56 @@
+//! # AdaGradSelect
+//!
+//! Production-oriented reproduction of *"AdaGradSelect: An adaptive
+//! gradient-guided layer selection method for efficient fine-tuning of
+//! SLMs"* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: training loop, the
+//!   AdaGradSelect bandit (Dirichlet exploitation + ε-greedy exploration),
+//!   the custom selective AdamW with CPU↔GPU optimizer-state residency
+//!   management, data pipeline, eval harness, memory accounting, and the
+//!   experiment harness that regenerates every table/figure in the paper.
+//! * **L2 (python/compile, build-time only)** — the transformer fwd/bwd as
+//!   JAX, lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spots (flash attention, fused AdamW, grad-norm reduction).
+//!
+//! Python never runs on the training path: the binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
+
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod lora;
+pub mod memory;
+pub mod model;
+pub mod optimizer;
+pub mod runtime;
+pub mod selection;
+pub mod telemetry;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, Context, Result};
+
+/// Lightweight stderr logger (the offline environment has no `tracing`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if std::env::var_os("AGSEL_QUIET").is_none() {
+            eprintln!("[agsel] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{Method, RunConfig};
+    pub use crate::data::{MathGen, Split, Tokenizer};
+    pub use crate::eval::Evaluator;
+    pub use crate::model::ModelState;
+    pub use crate::runtime::Engine;
+    pub use crate::selection::SelectionStrategy;
+    pub use crate::train::{Trainer, TrainSummary};
+    pub use crate::Result;
+}

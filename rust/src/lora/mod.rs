@@ -1,0 +1,84 @@
+//! LoRA coordinator support: adapter merging for evaluation.
+//!
+//! Training happens through the `train_step_lora*` artifacts (base frozen,
+//! adapter grads only). At eval time the adapters are folded into the base
+//! weights — `W' = W + (α/r)·A·B` — via the per-layer `lora_merge*` HLO
+//! artifact, after which the plain `decode_step` artifact serves the
+//! merged model. This mirrors deployment practice (merge-then-serve) and
+//! keeps a single decode path for every method.
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::runtime::Engine;
+
+/// Merge LoRA adapters into a copy of the base state.
+///
+/// `base` is the full block table (embed | layers | head); `lora` has one
+/// adapter block per transformer layer. Only layer blocks change.
+pub fn merge(
+    engine: &Engine,
+    preset_name: &str,
+    base: &ModelState,
+    lora: &ModelState,
+    double_rank: bool,
+) -> Result<ModelState> {
+    let preset = engine.manifest.preset(preset_name)?;
+    let entry = if double_rank { "lora_merge2" } else { "lora_merge" };
+    let exe = engine.load_preset_exe(preset_name, entry)?;
+
+    let mut merged = base.clone();
+    for layer in 0..preset.model.n_layers {
+        let block_idx = 1 + layer; // blocks: embed | layer0.. | head
+        let base_buf = engine.upload_f32(&base.flats[block_idx])?;
+        let lora_buf = engine.upload_f32(&lora.flats[layer])?;
+        let out = exe.run(&[&base_buf, &lora_buf])?;
+        merged.flats[block_idx] = out.vec_f32(0)?;
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn merge_with_zero_b_is_identity() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let engine = Engine::load(&dir).unwrap();
+        let preset = engine.manifest.preset("test-tiny").unwrap().clone();
+        let base = ModelState::init(&preset.blocks, 1);
+        // fresh adapters have B = 0 => merge must be a no-op
+        let lora = ModelState::init(&preset.lora_blocks, 2);
+        let merged = merge(&engine, "test-tiny", &base, &lora, false).unwrap();
+        for (a, b) in base.flats.iter().zip(&merged.flats) {
+            let max = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max < 1e-6, "max {max}");
+        }
+    }
+
+    #[test]
+    fn merge_with_nonzero_b_changes_layers_only() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let engine = Engine::load(&dir).unwrap();
+        let preset = engine.manifest.preset("test-tiny").unwrap().clone();
+        let base = ModelState::init(&preset.blocks, 1);
+        let mut lora = ModelState::init(&preset.lora_blocks, 2);
+        for f in lora.flats.iter_mut() {
+            for x in f.iter_mut() {
+                *x = 0.01; // make B nonzero
+            }
+        }
+        let merged = merge(&engine, "test-tiny", &base, &lora, false).unwrap();
+        // embed + head unchanged
+        assert_eq!(base.flats[0], merged.flats[0]);
+        assert_eq!(base.flats.last(), merged.flats.last());
+        // layers changed
+        assert_ne!(base.flats[1], merged.flats[1]);
+    }
+}

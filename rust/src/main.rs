@@ -1,0 +1,275 @@
+//! `agsel` — the AdaGradSelect launcher.
+//!
+//! ```text
+//! agsel <command> [flags]
+//!
+//! commands:
+//!   train          fine-tune a preset with a chosen method
+//!   eval           evaluate a saved checkpoint on the synthetic suites
+//!   memory-report  print the §3.3 deterministic memory table
+//!   exp <which>    regenerate paper experiments
+//!                  (fig1 | fig3 | fig4 | table1 | ablations | all)
+//!   inspect        list presets and their artifacts
+//!
+//! common flags: --artifacts DIR (default artifacts), --out DIR (results)
+//! train flags:  --preset P --method M --pct X --steps N --steps-per-epoch N
+//!               --seed S --metrics FILE --save FILE --config FILE.json
+//!               --pallas --no-eval
+//! exp flags:    --steps N --steps-per-epoch N --eval-problems N
+//!               --presets a,b,c --seed S
+//! ```
+
+use std::path::PathBuf;
+
+use adagradselect::config::{Method, RunConfig};
+use adagradselect::data::{MathGen, Split, Suite};
+use adagradselect::eval::Evaluator;
+use adagradselect::experiments::{self, ExpOptions};
+use adagradselect::memory::{method_memory, pct_reduction};
+use adagradselect::runtime::Engine;
+use adagradselect::telemetry::markdown_table;
+use adagradselect::train::Trainer;
+use adagradselect::util::cli::Args;
+use adagradselect::{anyhow, Result};
+
+const USAGE: &str = "usage: agsel <train|eval|memory-report|exp|inspect> [flags]; see `agsel help`";
+
+fn parse_method(name: &str, pct: f64) -> Result<Method> {
+    Ok(match name {
+        "full" | "fft" => Method::Full,
+        "topk" => Method::TopK { pct },
+        "adagradselect" | "ags" => Method::ags(pct),
+        "lora" => Method::Lora { double_rank: false },
+        "lora2" => Method::Lora { double_rank: true },
+        "random" | "lisa" => Method::Random { pct },
+        "round-robin" => Method::RoundRobin { pct },
+        "ucb" => Method::Ucb { pct, c: 0.5 },
+        other => return Err(anyhow!("unknown method {other:?}")),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&argv, &["pallas", "no-eval", "help"])?;
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out_dir).ok();
+
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "train" => cmd_train(&mut args, artifacts)?,
+        "eval" => cmd_eval(&mut args, artifacts)?,
+        "memory-report" => cmd_memory(&mut args, artifacts)?,
+        "exp" => cmd_exp(&mut args, artifacts, out_dir)?,
+        "inspect" => cmd_inspect(artifacts)?,
+        "help" | "--help" => println!("{USAGE}"),
+        other => return Err(anyhow!("unknown command {other:?}; {USAGE}")),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &mut Args, artifacts: PathBuf) -> Result<()> {
+    let preset = args.str_or("preset", "qwen-sim");
+    let method = args.str_or("method", "adagradselect");
+    let pct = args.f64_or("pct", 30.0)?;
+    let steps = args.u64_or("steps", 300)?;
+    let spe = args.u64_or("steps-per-epoch", 100)?;
+    let seed = args.u64_or("seed", 0)?;
+    let metrics = args.str_opt("metrics").map(PathBuf::from);
+    let save = args.str_opt("save").map(PathBuf::from);
+    let config = args.str_opt("config");
+    let pallas = args.bool_flag("pallas");
+    let no_eval = args.bool_flag("no-eval");
+    args.finish()?;
+
+    let mut cfg = match config {
+        Some(p) => RunConfig::from_json_file(p)?,
+        None => RunConfig::preset_defaults(&preset),
+    };
+    cfg.preset = preset;
+    cfg.method = parse_method(&method, pct)?;
+    cfg.train.steps = steps;
+    cfg.train.steps_per_epoch = spe;
+    cfg.artifacts_dir = artifacts;
+    cfg.metrics_path = metrics;
+    cfg.pallas_kernel = pallas;
+    cfg.seed = seed;
+
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    let summary = trainer.run()?;
+    println!("{}", summary.to_json().to_string());
+
+    let state = trainer.eval_state()?;
+    if let Some(path) = save {
+        state.save(&path)?;
+        println!("saved checkpoint to {path:?}");
+    }
+    if !no_eval {
+        let ev = Evaluator::new(&engine, &cfg.preset, cfg.data.max_new_tokens)?;
+        for suite in [Suite::Gsm8kSim, Suite::MathSim] {
+            let probs = MathGen::new(suite, Split::Eval, cfg.seed)
+                .problems(0, cfg.data.eval_problems as u64 as usize);
+            let res = ev.accuracy(&state, &probs)?;
+            println!(
+                "{}: accuracy {:.1}% ({}/{}), format rate {:.1}%",
+                suite.name(),
+                res.accuracy * 100.0,
+                res.n_correct,
+                res.n,
+                res.format_rate * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &mut Args, artifacts: PathBuf) -> Result<()> {
+    let preset = args.str_or("preset", "qwen-sim");
+    let checkpoint = args
+        .str_opt("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let problems = args.usize_or("problems", 128)?;
+    args.finish()?;
+
+    let engine = Engine::load(&artifacts)?;
+    let state = adagradselect::model::ModelState::load(&checkpoint)?;
+    let ev = Evaluator::new(&engine, &preset, 40)?;
+    for suite in [Suite::Gsm8kSim, Suite::MathSim] {
+        let probs = MathGen::new(suite, Split::Eval, 0).problems(0, problems);
+        let res = ev.accuracy(&state, &probs)?;
+        println!(
+            "{}: accuracy {:.1}% ({}/{})",
+            suite.name(),
+            res.accuracy * 100.0,
+            res.n_correct,
+            res.n
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &mut Args, artifacts: PathBuf) -> Result<()> {
+    let preset = args.str_or("preset", "qwen-sim");
+    let bpp = args.usize_or("bytes-per-param", 2)?;
+    args.finish()?;
+
+    let engine = Engine::load(&artifacts)?;
+    let p = engine.manifest.preset(&preset)?;
+    let full_opt = method_memory(p, &Method::Full, bpp).optimizer;
+    let mut rows = Vec::new();
+    for m in experiments::paper_methods() {
+        let rep = method_memory(p, &m, bpp);
+        rows.push(vec![
+            m.label(),
+            format!("{:.2}", rep.params as f64 / 1e6),
+            format!("{:.2}", rep.grads as f64 / 1e6),
+            format!("{:.2}", rep.optimizer as f64 / 1e6),
+            format!("{:.2}", rep.activations as f64 / 1e6),
+            format!("{:.2}", rep.total() as f64 / 1e6),
+            format!("{:.1}%", pct_reduction(rep.optimizer, full_opt)),
+        ]);
+    }
+    println!(
+        "memory report for {preset} at {bpp} bytes/param (paper §3.3)\n\n{}",
+        markdown_table(
+            &["method", "params MB", "grads MB", "optimizer MB", "acts MB", "total MB", "opt reduction vs FFT"],
+            &rows
+        )
+    );
+
+    // paper-scale projection (same formulas at the published model sizes)
+    let mut rows = Vec::new();
+    for m in adagradselect::memory::PAPER_MODELS {
+        for frac in [0.10, 0.30] {
+            let rep = m.selective_report(frac, 16, 1024, bpp);
+            rows.push(vec![
+                m.name.to_string(),
+                format!("ags-{:.0}%", frac * 100.0),
+                format!("{:.2}", rep.optimizer as f64 / 1e9),
+                format!("{:.2}", rep.total() as f64 / 1e9),
+                format!("{:.1}%", m.total_reduction_pct(frac, 16, 1024, bpp)),
+            ]);
+        }
+        let full = m.full_report(16, 1024, bpp);
+        rows.push(vec![
+            m.name.to_string(),
+            "full-ft".into(),
+            format!("{:.2}", full.optimizer as f64 / 1e9),
+            format!("{:.2}", full.total() as f64 / 1e9),
+            "0.0%".into(),
+        ]);
+    }
+    println!(
+        "paper-scale projection (batch 16, seq 1024, {bpp} B/param)\n\n{}",
+        markdown_table(
+            &["model", "method", "optimizer GB", "total GB", "total reduction"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &mut Args, artifacts: PathBuf, out_dir: PathBuf) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("exp needs a target: fig1|fig3|fig4|table1|ablations|all"))?;
+    let opt = ExpOptions {
+        artifacts_dir: artifacts.clone(),
+        out_dir: out_dir.clone(),
+        steps: args.u64_or("steps", 300)?,
+        steps_per_epoch: args.u64_or("steps-per-epoch", 100)?,
+        eval_problems: args.usize_or("eval-problems", 128)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let presets = args.str_or("presets", "qwen-sim,llama-sim,phi-sim");
+    let pcts_raw = args.str_or("pcts", "4,10,20,30,50,75,100");
+    args.finish()?;
+    let preset_list: Vec<&str> = presets.split(',').filter(|s| !s.is_empty()).collect();
+    let pcts: Vec<f64> = pcts_raw
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    let engine = Engine::load(&artifacts)?;
+    match which.as_str() {
+        "fig1" => {
+            experiments::fig1(&engine, &opt)?;
+        }
+        "fig3" => {
+            experiments::fig3(&engine, &opt, &pcts)?;
+        }
+        "fig4" => experiments::fig4(&engine, &opt)?,
+        "table1" => {
+            experiments::table1(&engine, &opt, &preset_list)?;
+        }
+        "ablations" => {
+            experiments::ablations(&engine, &opt)?;
+        }
+        "all" => experiments::all(&engine, &opt, &preset_list, &pcts)?,
+        other => return Err(anyhow!("unknown experiment {other:?}")),
+    }
+    println!("experiment outputs written to {out_dir:?}");
+    Ok(())
+}
+
+fn cmd_inspect(artifacts: PathBuf) -> Result<()> {
+    let engine = Engine::load(&artifacts)?;
+    let mut names: Vec<_> = engine.manifest.presets.keys().collect();
+    names.sort();
+    for name in names {
+        let p = &engine.manifest.presets[name];
+        let mut arts: Vec<_> = p.artifacts.keys().cloned().collect();
+        arts.sort();
+        println!(
+            "{name}: {} blocks, {} params, d={}, L={}, artifacts: {arts:?}",
+            p.n_blocks(),
+            p.total_params,
+            p.model.d_model,
+            p.model.n_layers,
+        );
+    }
+    Ok(())
+}

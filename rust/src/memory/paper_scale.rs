@@ -1,0 +1,127 @@
+//! Paper-scale memory projection.
+//!
+//! The sim presets are CPU-sized, so their *total*-memory deltas are
+//! compressed (activations dominate at toy scale). This module evaluates
+//! the same §3.3 formulas at the paper's actual model sizes, reproducing
+//! the Fig. 1 memory axis quantitatively — it needs no hardware, exactly
+//! like the paper's own deterministic calculation.
+
+use super::{optimizer_bytes, MemoryReport};
+
+/// Published geometry of the paper's three SLMs (decoder blocks exclude
+/// the embed/head "blocks" the paper also counts for selection).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub total_params: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+pub const QWEN25_05B: PaperModel = PaperModel {
+    name: "Qwen2.5-0.5B",
+    total_params: 494_000_000,
+    n_layers: 24, // paper treats it as 25 selection blocks (+embed/head)
+    d_model: 896,
+    d_ff: 4864,
+    vocab: 151_936,
+};
+
+pub const LLAMA32_1B: PaperModel = PaperModel {
+    name: "LLaMA3.2-1B",
+    total_params: 1_236_000_000,
+    n_layers: 16, // paper reports 18 blocks
+    d_model: 2048,
+    d_ff: 8192,
+    vocab: 128_256,
+};
+
+pub const PHI4_MINI_38B: PaperModel = PaperModel {
+    name: "Phi4-mini-3.8B",
+    total_params: 3_840_000_000,
+    n_layers: 32,
+    d_model: 3072,
+    d_ff: 8192,
+    vocab: 200_064,
+};
+
+pub const PAPER_MODELS: [PaperModel; 3] = [QWEN25_05B, LLAMA32_1B, PHI4_MINI_38B];
+
+impl PaperModel {
+    /// Activation bytes for one step. Unlike the toy presets, production
+    /// SLM trainers (a) checkpoint activations — only each layer's input
+    /// (`d_model`/token) persists, one layer's activations are live during
+    /// recompute — and (b) never materialize full `[batch, seq, vocab]`
+    /// logits for 150k vocabularies (chunked cross-entropy, 128-position
+    /// chunks here).
+    pub fn activation_bytes(&self, batch: usize, seq: usize, bpp: usize) -> usize {
+        let checkpoints = batch * seq * self.d_model * self.n_layers;
+        let live_layer = batch * seq * (4 * self.d_model + 2 * self.d_ff);
+        let logits_chunk = batch * 128.min(seq) * self.vocab;
+        (checkpoints + live_layer + logits_chunk) * bpp
+    }
+
+    /// §3.3 projection for a selective method updating `frac` of params.
+    pub fn selective_report(&self, frac: f64, batch: usize, seq: usize, bpp: usize) -> MemoryReport {
+        let p_sel = (self.total_params as f64 * frac) as usize;
+        MemoryReport {
+            params: self.total_params * bpp,
+            grads: self.total_params * bpp,
+            optimizer: optimizer_bytes(p_sel, bpp),
+            activations: self.activation_bytes(batch, seq, bpp),
+        }
+    }
+
+    pub fn full_report(&self, batch: usize, seq: usize, bpp: usize) -> MemoryReport {
+        self.selective_report(1.0, batch, seq, bpp)
+    }
+
+    /// Whole-GPU reduction of a selective method vs full fine-tuning —
+    /// the paper's "~35% less GPU memory" claim at k=10–30%.
+    pub fn total_reduction_pct(&self, frac: f64, batch: usize, seq: usize, bpp: usize) -> f64 {
+        let full = self.full_report(batch, seq, bpp).total() as f64;
+        let sel = self.selective_report(frac, batch, seq, bpp).total() as f64;
+        (1.0 - sel / full) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_reduction_matches_claims() {
+        // paper: ~35% lower GPU usage at the 10-30% settings on the 0.5B
+        // model; the optimizer states are half the non-activation footprint
+        // (params + grads + 2x optimizer), so selective-30% saves
+        // 0.7 * (2P) / (4P + acts) of total.
+        let m = QWEN25_05B;
+        let red10 = m.total_reduction_pct(0.10, 16, 1024, 2);
+        let red30 = m.total_reduction_pct(0.30, 16, 1024, 2);
+        assert!(red10 > red30, "less selected => more saved");
+        assert!(
+            (20.0..50.0).contains(&red10),
+            "10% setting saves {red10:.1}% (paper: ~35%)"
+        );
+        assert!((15.0..45.0).contains(&red30), "30% saves {red30:.1}%");
+    }
+
+    #[test]
+    fn optimizer_component_is_exact_formula() {
+        let m = LLAMA32_1B;
+        let r = m.selective_report(0.2, 8, 512, 2);
+        assert_eq!(r.optimizer, 2 * ((m.total_params as f64 * 0.2) as usize) * 2);
+        assert_eq!(r.params, m.total_params * 2);
+    }
+
+    #[test]
+    fn scales_monotonically_with_model_size() {
+        let full: Vec<usize> = PAPER_MODELS
+            .iter()
+            .map(|m| m.full_report(16, 1024, 2).total())
+            .collect();
+        assert!(full[0] < full[1] && full[1] < full[2]);
+    }
+}

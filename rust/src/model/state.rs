@@ -1,0 +1,197 @@
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use crate::runtime::BlockSpec;
+use crate::util::rng::Rng;
+use crate::selection::sampling::standard_normal;
+
+/// Per-block flat parameter vectors.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub flats: Vec<Vec<f32>>,
+    block_names: Vec<String>,
+}
+
+/// Simple summary statistics of one block (used by telemetry / tests).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockStats {
+    pub numel: usize,
+    pub l2: f64,
+    pub mean_abs: f64,
+}
+
+const CKPT_MAGIC: u32 = 0x4147_5331; // "AGS1"
+
+impl ModelState {
+    /// Initialize from a manifest block table with a deterministic seed.
+    ///
+    /// Each tensor draws from its own PRNG stream keyed by
+    /// `(seed, block_idx, tensor_idx)` so init is order-independent.
+    pub fn init(blocks: &[BlockSpec], seed: u64) -> Self {
+        let flats = blocks
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let mut flat = vec![0.0f32; b.numel];
+                for (ti, t) in b.tensors.iter().enumerate() {
+                    let numel: usize = t.shape.iter().product();
+                    let dst = &mut flat[t.offset..t.offset + numel];
+                    Self::fill(dst, &t.init, seed, bi as u64, ti as u64);
+                }
+                flat
+            })
+            .collect();
+        let block_names = blocks.iter().map(|b| b.name.clone()).collect();
+        Self { flats, block_names }
+    }
+
+    fn fill(dst: &mut [f32], init: &str, seed: u64, bi: u64, ti: u64) {
+        if init == "ones" {
+            dst.fill(1.0);
+        } else if init == "zeros" {
+            dst.fill(0.0);
+        } else if let Some(std) = init.strip_prefix("normal:") {
+            let std: f32 = std.parse().expect("bad init spec std");
+            let mut rng = Rng::seed_from_u64(
+                seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ bi.wrapping_mul(0xD1B5_4A32_D192_ED03)
+                    ^ ti.wrapping_add(0x1234_5678),
+            );
+            for x in dst.iter_mut() {
+                *x = (standard_normal(&mut rng) as f32) * std;
+            }
+        } else {
+            panic!("unknown init spec {init:?}");
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.flats.len()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.flats.iter().map(|f| f.len()).sum()
+    }
+
+    pub fn block_name(&self, idx: usize) -> &str {
+        &self.block_names[idx]
+    }
+
+    pub fn stats(&self, idx: usize) -> BlockStats {
+        let f = &self.flats[idx];
+        let l2: f64 = f.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let mean_abs = f.iter().map(|&x| (x as f64).abs()).sum::<f64>() / f.len().max(1) as f64;
+        BlockStats { numel: f.len(), l2, mean_abs }
+    }
+
+    /// Save all blocks to a single binary checkpoint.
+    ///
+    /// Format: magic u32 | n_blocks u32 | per block (name_len u32, name
+    /// bytes, numel u64, f32 LE data). Endianness is little throughout.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {:?}", path.as_ref()))?,
+        );
+        w.write_all(&CKPT_MAGIC.to_le_bytes())?;
+        w.write_all(&(self.flats.len() as u32).to_le_bytes())?;
+        for (name, flat) in self.block_names.iter().zip(&self.flats) {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(flat.len() as u64).to_le_bytes())?;
+            // safety: f32 slice as bytes (LE on all supported targets)
+            let bytes =
+                unsafe { std::slice::from_raw_parts(flat.as_ptr() as *const u8, flat.len() * 4) };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {:?}", path.as_ref()))?,
+        );
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u32buf)?;
+        if u32::from_le_bytes(u32buf) != CKPT_MAGIC {
+            return Err(anyhow!("bad checkpoint magic"));
+        }
+        r.read_exact(&mut u32buf)?;
+        let n = u32::from_le_bytes(u32buf) as usize;
+        let mut flats = Vec::with_capacity(n);
+        let mut names = Vec::with_capacity(n);
+        for _ in 0..n {
+            r.read_exact(&mut u32buf)?;
+            let name_len = u32::from_le_bytes(u32buf) as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            names.push(String::from_utf8(name).context("block name utf8")?);
+            r.read_exact(&mut u64buf)?;
+            let numel = u64::from_le_bytes(u64buf) as usize;
+            let mut flat = vec![0.0f32; numel];
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(flat.as_mut_ptr() as *mut u8, numel * 4)
+            };
+            r.read_exact(bytes)?;
+            flats.push(flat);
+        }
+        Ok(Self { flats, block_names: names })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn blocks() -> Vec<BlockSpec> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).unwrap().preset("test-tiny").unwrap().blocks.clone()
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let b = blocks();
+        let a = ModelState::init(&b, 7);
+        let c = ModelState::init(&b, 7);
+        assert_eq!(a.flats, c.flats);
+        let d = ModelState::init(&b, 8);
+        assert_ne!(a.flats, d.flats);
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let b = blocks();
+        let s = ModelState::init(&b, 0);
+        // layer blocks start with ln1 = ones
+        let layer = &b[1];
+        let ln1 = &layer.tensors[0];
+        assert_eq!(ln1.name, "ln1");
+        for &x in &s.flats[1][ln1.offset..ln1.offset + 32] {
+            assert_eq!(x, 1.0);
+        }
+        // wq ~ N(0, 0.02): std should be close
+        let wq = &layer.tensors[1];
+        let numel: usize = wq.shape.iter().product();
+        let slice = &s.flats[1][wq.offset..wq.offset + numel];
+        let var: f64 =
+            slice.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / numel as f64;
+        assert!((var.sqrt() - 0.02).abs() < 0.005, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let b = blocks();
+        let s = ModelState::init(&b, 3);
+        let tmp = std::env::temp_dir().join(format!("agsel-ckpt-{}.bin", std::process::id()));
+        s.save(&tmp).unwrap();
+        let l = ModelState::load(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(s.flats, l.flats);
+        assert_eq!(s.block_names, l.block_names);
+    }
+}

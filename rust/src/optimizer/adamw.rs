@@ -1,0 +1,210 @@
+//! Native fused selective AdamW.
+//!
+//! One pass over (p, g, m, v) per selected block: moment EMAs, bias
+//! correction, decoupled weight decay, parameter write. Unselected blocks
+//! are untouched — their moments never move, their step counts never
+//! advance (each block carries its own `t`, which is exactly what a
+//! selective optimizer induces).
+
+use crate::runtime::AdamWHyper;
+use crate::util::par::par_for_each_mut;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWParams {
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    pub wd: f32,
+}
+
+impl From<AdamWHyper> for AdamWParams {
+    fn from(h: AdamWHyper) -> Self {
+        Self { b1: h.b1, b2: h.b2, eps: h.eps, wd: h.wd }
+    }
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        Self { b1: 0.9, b2: 0.999, eps: 1e-8, wd: 0.01 }
+    }
+}
+
+/// Moments + step count for one block.
+#[derive(Debug, Clone)]
+pub struct BlockOptState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl BlockOptState {
+    pub fn zeros(numel: usize) -> Self {
+        Self { m: vec![0.0; numel], v: vec![0.0; numel], step: 0 }
+    }
+
+    pub fn bytes(&self, bytes_per_param: usize) -> usize {
+        2 * self.m.len() * bytes_per_param
+    }
+}
+
+/// Selective AdamW over a block table.
+pub struct SelectiveAdamW {
+    pub params: AdamWParams,
+    pub states: Vec<BlockOptState>,
+}
+
+impl SelectiveAdamW {
+    pub fn new(block_numels: &[usize], params: AdamWParams) -> Self {
+        Self { params, states: block_numels.iter().map(|&n| BlockOptState::zeros(n)).collect() }
+    }
+
+    /// Total updates applied (sum of per-block step counts).
+    pub fn total_updates(&self) -> u64 {
+        self.states.iter().map(|s| s.step).sum()
+    }
+
+    /// Apply AdamW to one block in place.
+    pub fn update_block(&mut self, idx: usize, p: &mut [f32], g: &[f32], lr: f32) {
+        let st = &mut self.states[idx];
+        st.step += 1;
+        fused_adamw(p, g, &mut st.m, &mut st.v, lr, st.step, self.params);
+    }
+
+    /// Apply AdamW to a set of blocks, parallelized across blocks.
+    ///
+    /// `flats` and `grads` are the full block tables; only `selected`
+    /// entries are touched.
+    pub fn update_selected(
+        &mut self,
+        selected: &[usize],
+        flats: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) {
+        // split off disjoint &mut views of the selected states/flats so the
+        // per-block updates can run on worker threads
+        let params = self.params;
+        let mut jobs: Vec<(usize, &mut BlockOptState, &mut Vec<f32>)> =
+            Vec::with_capacity(selected.len());
+        {
+            let mut states: &mut [BlockOptState] = &mut self.states;
+            let mut fl: &mut [Vec<f32>] = flats;
+            let mut base = 0usize;
+            for &idx in selected {
+                assert!(idx >= base, "selected must be sorted/deduped");
+                let (_, rest_s) = states.split_at_mut(idx - base);
+                let (s, rest_s) = rest_s.split_first_mut().expect("idx in range");
+                let (_, rest_f) = fl.split_at_mut(idx - base);
+                let (f, rest_f) = rest_f.split_first_mut().expect("idx in range");
+                jobs.push((idx, s, f));
+                states = rest_s;
+                fl = rest_f;
+                base = idx + 1;
+            }
+        }
+        par_for_each_mut(&mut jobs, |_, (idx, st, flat)| {
+            st.step += 1;
+            fused_adamw(flat, &grads[*idx], &mut st.m, &mut st.v, lr, st.step, params);
+        });
+    }
+}
+
+/// The fused kernel: identical math to `python/compile/kernels/adamw.py`.
+pub fn fused_adamw(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    step: u64,
+    hp: AdamWParams,
+) {
+    assert!(p.len() == g.len() && p.len() == m.len() && p.len() == v.len());
+    let bc1 = 1.0 - hp.b1.powi(step as i32);
+    let bc2 = 1.0 - hp.b2.powi(step as i32);
+    let (b1, b2) = (hp.b1, hp.b2);
+    let (one_m_b1, one_m_b2) = (1.0 - b1, 1.0 - b2);
+    for i in 0..p.len() {
+        let gi = g[i];
+        let mi = b1 * m[i] + one_m_b1 * gi;
+        let vi = b2 * v[i] + one_m_b2 * gi * gi;
+        m[i] = mi;
+        v[i] = vi;
+        let m_hat = mi / bc1;
+        let v_hat = vi / bc2;
+        p[i] -= lr * (m_hat / (v_hat.sqrt() + hp.eps) + hp.wd * p[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hp() -> AdamWParams {
+        AdamWParams::default()
+    }
+
+    #[test]
+    fn zero_grad_is_pure_weight_decay() {
+        let mut p = vec![1.0f32, -2.0, 0.5];
+        let g = vec![0.0f32; 3];
+        let mut opt = SelectiveAdamW::new(&[3], hp());
+        opt.update_block(0, &mut p, &g, 0.1);
+        for (x, x0) in p.iter().zip([1.0f32, -2.0, 0.5]) {
+            assert!((x - x0 * (1.0 - 0.1 * 0.01)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn first_step_is_signed_unit_update() {
+        let mut p = vec![0.0f32; 4];
+        let g = vec![1.0f32, -1.0, 2.0, -0.5];
+        let mut opt = SelectiveAdamW::new(&[4], hp());
+        opt.update_block(0, &mut p, &g, 0.01);
+        for (x, gi) in p.iter().zip(&g) {
+            assert!((x + 0.01 * gi.signum()).abs() < 1e-4, "{x} {gi}");
+        }
+    }
+
+    #[test]
+    fn unselected_blocks_untouched() {
+        let mut flats = vec![vec![1.0f32; 8], vec![1.0f32; 8], vec![1.0f32; 8]];
+        let grads = vec![vec![1.0f32; 8]; 3];
+        let mut opt = SelectiveAdamW::new(&[8, 8, 8], hp());
+        opt.update_selected(&[0, 2], &mut flats, &grads, 0.01);
+        assert_ne!(flats[0], vec![1.0f32; 8]);
+        assert_eq!(flats[1], vec![1.0f32; 8]);
+        assert_ne!(flats[2], vec![1.0f32; 8]);
+        assert_eq!(opt.states[0].step, 1);
+        assert_eq!(opt.states[1].step, 0);
+        assert_eq!(opt.states[2].step, 1);
+    }
+
+    #[test]
+    fn update_selected_matches_update_block() {
+        let mut a = vec![vec![0.3f32; 16], vec![-0.2f32; 16]];
+        let mut b = a.clone();
+        let grads = vec![vec![0.5f32; 16], vec![-0.1f32; 16]];
+        let mut opt_a = SelectiveAdamW::new(&[16, 16], hp());
+        let mut opt_b = SelectiveAdamW::new(&[16, 16], hp());
+        for _ in 0..5 {
+            opt_a.update_selected(&[0, 1], &mut a, &grads, 0.01);
+            let (g0, g1) = (grads[0].clone(), grads[1].clone());
+            opt_b.update_block(0, &mut b[0], &g0, 0.01);
+            opt_b.update_block(1, &mut b[1], &g1, 0.01);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(p) = 0.5*(p - 3)^2 with AdamW (wd pulls slightly to 0)
+        let mut p = vec![0.0f32];
+        let mut opt = SelectiveAdamW::new(&[1], hp());
+        for _ in 0..2000 {
+            let g = vec![p[0] - 3.0];
+            opt.update_block(0, &mut p, &g, 0.01);
+        }
+        assert!((p[0] - 3.0).abs() < 0.1, "p {}", p[0]);
+    }
+}

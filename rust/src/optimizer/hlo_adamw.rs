@@ -1,0 +1,109 @@
+//! Artifact-backed AdamW: drives the Pallas `adamw_update` kernel through
+//! PJRT in fixed-size chunks.
+//!
+//! On real accelerators this *is* the hot path (the states live on device
+//! and the fused kernel streams them at HBM roofline); on this CPU
+//! substrate the native implementation in `adamw.rs` wins, so the trainer
+//! defaults to native and this path exists for (a) parity tests proving
+//! the Rust math equals the L1 kernel bit-for-bit-ish, and (b) the
+//! `cargo bench --bench optimizer` comparison.
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+
+use super::adamw::AdamWParams;
+
+pub struct HloAdamW {
+    exe: std::rc::Rc<crate::runtime::Exe>,
+    chunk: usize,
+}
+
+impl HloAdamW {
+    pub fn new(engine: &Engine) -> Result<Self> {
+        Ok(Self {
+            exe: engine.load_shared_exe("adamw_update")?,
+            chunk: engine.manifest.chunk_size,
+        })
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    /// Apply one AdamW step to a flat block via the HLO kernel.
+    ///
+    /// Arbitrary lengths are handled by chunking and zero-padding the tail
+    /// (padding never leaks: only the first `len` elements are copied out).
+    pub fn update_block(
+        &self,
+        engine: &Engine,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        lr: f32,
+        step: u64,
+    ) -> Result<()> {
+        assert!(p.len() == g.len() && p.len() == m.len() && p.len() == v.len());
+        let n = p.len();
+        let lr_buf = engine.upload_f32(&[lr])?;
+        let step_buf = engine.upload_f32(&[step as f32])?;
+        let mut scratch = vec![0.0f32; self.chunk];
+
+        let mut off = 0;
+        while off < n {
+            let len = (n - off).min(self.chunk);
+            let range = off..off + len;
+
+            let upload = |src: &[f32], scratch: &mut Vec<f32>| -> Result<xla::PjRtBuffer> {
+                if len == self.chunk {
+                    engine.upload_f32(&src[range.clone()])
+                } else {
+                    scratch[..len].copy_from_slice(&src[range.clone()]);
+                    scratch[len..].fill(0.0);
+                    engine.upload_f32(scratch)
+                }
+            };
+            let pb = upload(p, &mut scratch)?;
+            let gb = upload(g, &mut scratch)?;
+            let mb = upload(m, &mut scratch)?;
+            let vb = upload(v, &mut scratch)?;
+
+            let out = self.exe.run(&[&pb, &gb, &mb, &vb, &lr_buf, &step_buf])?;
+            let (po, mo, vo) = (out.vec_f32(0)?, out.vec_f32(1)?, out.vec_f32(2)?);
+            p[range.clone()].copy_from_slice(&po[..len]);
+            m[range.clone()].copy_from_slice(&mo[..len]);
+            v[range].copy_from_slice(&vo[..len]);
+            off += len;
+        }
+        Ok(())
+    }
+}
+
+/// Parity harness shared by tests and benches: native vs HLO on the same
+/// inputs. Returns the max abs diff across (p, m, v).
+pub fn native_hlo_parity(
+    engine: &Engine,
+    n: usize,
+    seed: u64,
+    steps: u64,
+) -> Result<f32> {
+    let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+    let mut p1: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+    let mut m1 = vec![0.0f32; n];
+    let mut v1 = vec![0.0f32; n];
+    let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+
+    let hlo = HloAdamW::new(engine)?;
+    let hp = AdamWParams::from(engine.manifest.adamw);
+    for t in 1..=steps {
+        super::adamw::fused_adamw(&mut p1, &g, &mut m1, &mut v1, 1e-3, t, hp);
+        hlo.update_block(engine, &mut p2, &g, &mut m2, &mut v2, 1e-3, t)?;
+    }
+    let max = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    };
+    Ok(max(&p1, &p2).max(max(&m1, &m2)).max(max(&v1, &v2)))
+}

@@ -1,0 +1,22 @@
+//! Custom selective AdamW + CPU↔GPU optimizer-state residency (§3.3).
+//!
+//! The paper's "custom AdamW" updates only the parameters of the selected
+//! blocks each step and keeps the AdamW moments of *unselected* blocks in
+//! CPU RAM, asynchronously prefetching/evicting states as the selected set
+//! changes. Here:
+//!
+//! * [`SelectiveAdamW`] — per-block (m, v, t) state + the fused native
+//!   update on the hot path (the Pallas `adamw_update` HLO artifact is the
+//!   accelerator-side equivalent; both are parity-tested).
+//! * [`HloAdamW`] — the artifact-backed update path.
+//! * [`ResidencyManager`] — the §3.3 prefetch/evict state machine with a
+//!   PCIe transfer model and VRAM ledger; virtual-time by default so runs
+//!   are deterministic, with an async (tokio) demonstration mode.
+
+mod adamw;
+mod hlo_adamw;
+mod residency;
+
+pub use adamw::{fused_adamw, AdamWParams, BlockOptState, SelectiveAdamW};
+pub use hlo_adamw::{native_hlo_parity as hlo_adamw_parity, HloAdamW};
+pub use residency::{PcieModel, ResidencyManager, ResidencyStats, StepTransfers};

@@ -1,0 +1,290 @@
+//! Typed view of `artifacts/manifest.json`, the contract between the
+//! build-time Python side (`python/compile/aot.py`) and this coordinator.
+//!
+//! The manifest is the *single source of truth* for model topology: block
+//! tables (tensor names/shapes/offsets inside each flat block vector),
+//! tokenizer vocabulary, AdamW hyperparameters baked into the kernels, and
+//! the artifact filename for every entrypoint. The Rust side never
+//! hardcodes any of these.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub tokenizer: TokenizerSpec,
+    /// Flat chunk size used by the shared AdamW / grad-norm artifacts.
+    pub chunk_size: usize,
+    pub adamw: AdamWHyper,
+    pub shared: HashMap<String, ArtifactInfo>,
+    pub presets: HashMap<String, Preset>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizerSpec {
+    pub chars: String,
+    pub vocab_size: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub unk: i32,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWHyper {
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    pub wd: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub model: ModelSpec,
+    pub blocks: Vec<BlockSpec>,
+    pub lora_blocks: Vec<BlockSpec>,
+    /// LoRA block table at rank*2 (the paper's r=256 analogue).
+    pub lora_blocks2: Vec<BlockSpec>,
+    pub total_params: usize,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lora_rank: usize,
+    pub d_head: usize,
+    pub norm_eps: f32,
+    pub rope_theta: f32,
+    pub init_std: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockSpec {
+    pub name: String,
+    pub numel: usize,
+    pub tensors: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"normal:<std>" | "ones" | "zeros"` — mirrored by `ModelState::init`.
+    pub init: String,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub n_inputs: usize,
+    pub bytes: usize,
+    pub lower_s: f64,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&v).context("decoding manifest.json")
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let tok = v.get("tokenizer")?;
+        let adamw = v.get("adamw")?;
+        let mut shared = HashMap::new();
+        for (k, a) in v.get("shared")?.as_obj()? {
+            shared.insert(k.clone(), artifact_from_json(a)?);
+        }
+        let mut presets = HashMap::new();
+        for (k, pv) in v.get("presets")?.as_obj()? {
+            presets.insert(k.clone(), preset_from_json(pv)?);
+        }
+        Ok(Manifest {
+            version: v.get("version")?.as_usize()? as u32,
+            tokenizer: TokenizerSpec {
+                chars: tok.get("chars")?.as_str()?.to_string(),
+                vocab_size: tok.get("vocab_size")?.as_usize()?,
+                pad: tok.get("pad")?.as_i64()? as i32,
+                bos: tok.get("bos")?.as_i64()? as i32,
+                eos: tok.get("eos")?.as_i64()? as i32,
+                unk: tok.get("unk")?.as_i64()? as i32,
+            },
+            chunk_size: v.get("chunk_size")?.as_usize()?,
+            adamw: AdamWHyper {
+                b1: adamw.get("b1")?.as_f32()?,
+                b2: adamw.get("b2")?.as_f32()?,
+                eps: adamw.get("eps")?.as_f32()?,
+                wd: adamw.get("wd")?.as_f32()?,
+            },
+            shared,
+            presets,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&Preset> {
+        self.presets.get(name).ok_or_else(|| {
+            let known: Vec<_> = self.presets.keys().cloned().collect();
+            anyhow!("unknown preset {name:?}; manifest has {known:?}")
+        })
+    }
+}
+
+fn artifact_from_json(v: &Value) -> Result<ArtifactInfo> {
+    Ok(ArtifactInfo {
+        file: v.get("file")?.as_str()?.to_string(),
+        n_inputs: v.get("n_inputs")?.as_usize()?,
+        bytes: v.get("bytes")?.as_usize()?,
+        lower_s: v.opt("lower_s").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0),
+    })
+}
+
+fn tensor_from_json(v: &Value) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v.get("shape")?.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?,
+        init: v.get("init")?.as_str()?.to_string(),
+        offset: v.get("offset")?.as_usize()?,
+    })
+}
+
+fn block_from_json(v: &Value) -> Result<BlockSpec> {
+    Ok(BlockSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        numel: v.get("numel")?.as_usize()?,
+        tensors: v.get("tensors")?.as_arr()?.iter().map(tensor_from_json).collect::<Result<_>>()?,
+    })
+}
+
+fn blocks_from_json(v: &Value) -> Result<Vec<BlockSpec>> {
+    v.as_arr()?.iter().map(block_from_json).collect()
+}
+
+fn preset_from_json(v: &Value) -> Result<Preset> {
+    let m = v.get("model")?;
+    let mut artifacts = HashMap::new();
+    for (k, a) in v.get("artifacts")?.as_obj()? {
+        artifacts.insert(k.clone(), artifact_from_json(a)?);
+    }
+    Ok(Preset {
+        model: ModelSpec {
+            name: m.get("name")?.as_str()?.to_string(),
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            vocab: m.get("vocab")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            batch: m.get("batch")?.as_usize()?,
+            lora_rank: m.get("lora_rank")?.as_usize()?,
+            d_head: m.get("d_head")?.as_usize()?,
+            norm_eps: m.get("norm_eps")?.as_f32()?,
+            rope_theta: m.get("rope_theta")?.as_f32()?,
+            init_std: m.get("init_std")?.as_f32()?,
+        },
+        blocks: blocks_from_json(v.get("blocks")?)?,
+        lora_blocks: blocks_from_json(v.get("lora_blocks")?)?,
+        lora_blocks2: blocks_from_json(v.get("lora_blocks2")?)?,
+        total_params: v.get("total_params")?.as_usize()?,
+        artifacts,
+    })
+}
+
+impl Preset {
+    /// Number of paper-"blocks" (embed + layers + head).
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn artifact(&self, entry: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(entry).ok_or_else(|| {
+            anyhow!(
+                "preset {} has no artifact {entry:?} (have: {:?})",
+                self.model.name,
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, dir: &Path, entry: &str) -> Result<PathBuf> {
+        Ok(dir.join(&self.artifact(entry)?.file))
+    }
+
+    /// Block sizes in elements, in block order.
+    pub fn block_numels(&self) -> Vec<usize> {
+        self.blocks.iter().map(|b| b.numel).collect()
+    }
+
+    /// The paper's practitioner guideline: min selection percentage that
+    /// still updates at least one block every iteration (`min% >= 100/B`).
+    pub fn min_selection_pct(&self) -> f64 {
+        100.0 / self.n_blocks() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_and_has_presets() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        for name in ["test-tiny", "qwen-sim", "llama-sim", "phi-sim", "e2e"] {
+            let p = m.preset(name).unwrap();
+            assert_eq!(p.n_blocks(), p.model.n_layers + 2, "{name}");
+            assert_eq!(
+                p.total_params,
+                p.blocks.iter().map(|b| b.numel).sum::<usize>()
+            );
+        }
+    }
+
+    #[test]
+    fn qwen_sim_matches_paper_block_count() {
+        // Qwen2.5-0.5B has 25 transformer blocks in the paper.
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        assert_eq!(m.preset("qwen-sim").unwrap().model.n_layers, 25);
+        assert_eq!(m.preset("llama-sim").unwrap().model.n_layers, 18);
+        assert_eq!(m.preset("phi-sim").unwrap().model.n_layers, 32);
+    }
+
+    #[test]
+    fn tensor_offsets_contiguous() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        for b in &m.preset("qwen-sim").unwrap().blocks {
+            let mut off = 0;
+            for t in &b.tensors {
+                assert_eq!(t.offset, off, "{}/{}", b.name, t.name);
+                off += t.shape.iter().product::<usize>();
+            }
+            assert_eq!(off, b.numel);
+        }
+    }
+
+    #[test]
+    fn min_selection_pct_guideline() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let p = m.preset("qwen-sim").unwrap();
+        // 27 blocks (embed + 25 + head) => ~3.7%
+        assert!((p.min_selection_pct() - 100.0 / 27.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it works in terms of flat `Vec<f32>` block vectors and `Vec<i32>` token
+//! matrices. HLO *text* is the interchange format (see
+//! `python/compile/aot.py` for why not serialized protos).
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, Exe, HostOutputs};
+pub use manifest::{
+    AdamWHyper, ArtifactInfo, BlockSpec, Manifest, ModelSpec, Preset, TensorSpec, TokenizerSpec,
+};

@@ -1,0 +1,119 @@
+//! Dirichlet sampling + weighted sampling without replacement.
+//!
+//! AdaGradSelect models block-selection probabilities as
+//! `p ~ Dirichlet(f + δ)` where `f` are historical selection frequencies.
+//! A Dirichlet draw is k independent `Gamma(α_i, 1)` draws normalized to
+//! the simplex (Marsaglia–Tsang under the hood via `rand_distr`).
+//!
+//! Sampling k blocks *without replacement* according to `p` uses the
+//! Efraimidis–Spirakis exponential-keys trick: draw `key_i = u_i^(1/p_i)`
+//! and take the k largest keys — equivalent to sequential draws with
+//! renormalization, in O(n log n) with no renormalization loop.
+
+use crate::util::rng::Rng;
+
+use super::sampling::gamma;
+
+/// Draw `p ~ Dirichlet(alpha)`. Requires every `alpha_i > 0`.
+pub fn sample_dirichlet(alpha: &[f64], rng: &mut Rng) -> Vec<f64> {
+    assert!(!alpha.is_empty(), "empty alpha");
+    let mut draws: Vec<f64> = alpha
+        .iter()
+        .map(|&a| {
+            assert!(a > 0.0, "alpha must be positive, got {a}");
+            // Gamma(a) can underflow to exactly 0.0 for tiny a; clamp so
+            // the normalized vector stays inside the open simplex.
+            gamma(a, rng).max(1e-300)
+        })
+        .collect();
+    let sum: f64 = draws.iter().sum();
+    for d in draws.iter_mut() {
+        *d /= sum;
+    }
+    draws
+}
+
+/// Sample `k` distinct indices according to probabilities `p` (must sum to
+/// ~1, all non-negative; zeros are never selected unless forced by k).
+pub fn weighted_sample_without_replacement(p: &[f64], k: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k <= p.len(), "k={k} > n={}", p.len());
+    // Efraimidis–Spirakis: key = ln(u)/w, take k largest (w=0 -> -inf).
+    let mut keyed: Vec<(f64, usize)> = p
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            let u: f64 = rng.gen_range_f64(1e-12, 1.0);
+            let key = if w > 0.0 { u.ln() / w } else { f64::NEG_INFINITY };
+            (key, i)
+        })
+        .collect();
+    keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut out: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirichlet_is_on_simplex() {
+        let mut rng = Rng::seed_from_u64(0);
+        for alpha in [vec![1.0; 5], vec![0.1, 10.0, 0.5], vec![100.0, 1.0]] {
+            let p = sample_dirichlet(&alpha, &mut rng);
+            assert_eq!(p.len(), alpha.len());
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentrates_on_large_alpha() {
+        let mut rng = Rng::seed_from_u64(1);
+        let alpha = vec![500.0, 1.0, 1.0, 1.0];
+        let mean: f64 = (0..200)
+            .map(|_| sample_dirichlet(&alpha, &mut rng)[0])
+            .sum::<f64>()
+            / 200.0;
+        // E[p_0] = 500/503
+        assert!((mean - 500.0 / 503.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn wswor_returns_k_distinct_sorted() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = vec![0.1; 10];
+        for k in [1, 3, 10] {
+            let s = weighted_sample_without_replacement(&p, k, &mut rng);
+            assert_eq!(s.len(), k);
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn wswor_respects_weights() {
+        let mut rng = Rng::seed_from_u64(3);
+        // index 0 has 100x the weight of the others; with k=1 it should
+        // dominate the draws.
+        let mut p = vec![0.001; 11];
+        p[0] = 0.1;
+        let hits = (0..500)
+            .filter(|_| weighted_sample_without_replacement(&p, 1, &mut rng)[0] == 0)
+            .count();
+        assert!(hits > 400, "hits {hits}");
+    }
+
+    #[test]
+    fn wswor_zero_weight_excluded() {
+        let mut rng = Rng::seed_from_u64(4);
+        let p = vec![0.5, 0.0, 0.5, 0.0];
+        for _ in 0..100 {
+            let s = weighted_sample_without_replacement(&p, 2, &mut rng);
+            assert_eq!(s, vec![0, 2]);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Block-selection strategies — the paper's core contribution (L3).
+//!
+//! Every fine-tuning method in the paper is expressed as a
+//! [`SelectionStrategy`]: given the current step/epoch and (optionally) the
+//! per-block gradient norms of this step, return the set of block indices
+//! whose parameters the optimizer updates.
+//!
+//! * [`TopKSelector`] — Algorithm 1, *Gradient-Guided Block Selection*.
+//! * [`AdaGradSelect`] — Algorithm 2: Dirichlet exploitation over
+//!   historical selection frequencies + ε-greedy gradient-norm exploration
+//!   during epoch 1, with exponentially decaying ε.
+//! * Baselines: [`FullSelector`] (full fine-tuning), [`RandomSelector`]
+//!   (LISA-style uniform layerwise sampling), [`RoundRobinSelector`],
+//!   [`FixedSubsetSelector`].
+
+mod adagrad;
+mod dirichlet;
+pub mod grad_norm;
+pub mod sampling;
+mod strategies;
+mod ucb;
+
+pub use adagrad::{AdaGradSelect, AdaGradSelectParams};
+pub use dirichlet::{sample_dirichlet, weighted_sample_without_replacement};
+pub use grad_norm::GradNormTracker;
+pub use strategies::{
+    FixedSubsetSelector, FullSelector, RandomSelector, RoundRobinSelector, TopKSelector,
+};
+pub use ucb::UcbSelector;
+
+/// Per-step context handed to a strategy.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectionCtx<'a> {
+    /// Global step index, 0-based.
+    pub step: u64,
+    /// Epoch index, **1-based** to match the paper ("epoch == 1" explores).
+    pub epoch: u32,
+    /// This step's per-block gradient L2 norms (squared norms are tracked
+    /// separately; these are `sqrt` values). Empty when the caller knows
+    /// the strategy doesn't need them.
+    pub grad_norms: &'a [f64],
+}
+
+/// A block-selection policy.
+pub trait SelectionStrategy: Send {
+    /// Choose the set of blocks to update this step (sorted, deduped).
+    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize>;
+
+    /// Whether `select` consumes `ctx.grad_norms` at this step. The trainer
+    /// can skip norm computation when this is false *and* telemetry does
+    /// not ask for norms.
+    fn needs_grad_norms(&self, _ctx: &SelectionCtx) -> bool {
+        false
+    }
+
+    /// Human-readable name for logs / results tables.
+    fn name(&self) -> String;
+
+    /// Historical per-block selection counts, if the strategy tracks them.
+    fn frequencies(&self) -> Option<&[u64]> {
+        None
+    }
+
+    /// Bandit telemetry: last decision label ("explore"/"exploit") and the
+    /// ε in effect at that step. `None` for non-bandit strategies.
+    fn last_decision(&self) -> Option<(&'static str, f64)> {
+        None
+    }
+
+    /// Bandit telemetry: cumulative (explore, exploit) step counts.
+    fn bandit_counts(&self) -> Option<(u64, u64)> {
+        None
+    }
+}
+
+/// `k = max(1, floor(pct/100 * n_blocks))` — the paper selects the top-k%
+/// of blocks and observes 10% of 25 transformer blocks => 2 blocks.
+pub fn k_from_pct(n_blocks: usize, pct: f64) -> usize {
+    ((pct / 100.0) * n_blocks as f64).floor().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_from_pct_matches_paper_examples() {
+        // Paper: 10% of Qwen2.5-0.5B's 25 transformer blocks = 2 blocks.
+        assert_eq!(k_from_pct(25, 10.0), 2);
+        // LLaMA3.2-1B: 18 blocks, 10% => a single block per iteration.
+        assert_eq!(k_from_pct(18, 10.0), 1);
+        assert_eq!(k_from_pct(27, 100.0), 27);
+        // never zero
+        assert_eq!(k_from_pct(8, 1.0), 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Scalar samplers: standard normal (Box–Muller) and Gamma(α, 1)
+//! (Marsaglia–Tsang), self-contained so the coordinator has no external
+//! distribution dependencies.
+//!
+//! Marsaglia, G. and Tsang, W.W. (2000), "A simple method for generating
+//! gamma variables": for α ≥ 1, with d = α − 1/3, c = 1/sqrt(9d), draw
+//! x ~ N(0,1), v = (1+cx)^3, accept when ln(u) < x²/2 + d − dv + d·ln(v).
+//! For α < 1 use the boost Gamma(α) = Gamma(α+1) · U^(1/α).
+
+use crate::util::rng::Rng;
+
+/// Standard normal via Box–Muller (polar-free, two uniforms per pair; we
+/// discard the second — simplicity over throughput, this is not hot).
+pub fn standard_normal(rng: &mut Rng) -> f64 {
+    let u1: f64 = rng.gen_range_f64(f64::MIN_POSITIVE, 1.0);
+    let u2: f64 = rng.gen_f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Gamma(shape, scale=1) via Marsaglia–Tsang.
+pub fn gamma(shape: f64, rng: &mut Rng) -> f64 {
+    assert!(shape > 0.0, "gamma shape must be positive");
+    if shape < 1.0 {
+        // boosting: Gamma(a) = Gamma(a + 1) * U^{1/a}
+        let u: f64 = rng.gen_range_f64(f64::MIN_POSITIVE, 1.0);
+        return gamma(shape + 1.0, rng) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = standard_normal(rng);
+        let t = 1.0 + c * x;
+        if t <= 0.0 {
+            continue;
+        }
+        let v = t * t * t;
+        let u: f64 = rng.gen_range_f64(f64::MIN_POSITIVE, 1.0);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from_u64(0);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| standard_normal(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Rng::seed_from_u64(1);
+        for shape in [0.5f64, 1.0, 2.5, 10.0, 100.0] {
+            let n = 20_000;
+            let xs: Vec<f64> = (0..n).map(|_| gamma(shape, &mut rng)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            // Gamma(a,1): mean a, var a
+            assert!((mean - shape).abs() / shape < 0.05, "shape {shape} mean {mean}");
+            assert!((var - shape).abs() / shape < 0.15, "shape {shape} var {var}");
+        }
+    }
+
+    #[test]
+    fn gamma_always_positive() {
+        let mut rng = Rng::seed_from_u64(2);
+        for _ in 0..5000 {
+            assert!(gamma(0.1, &mut rng) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Baseline selection strategies: Algorithm 1 plus the comparison points
+//! used by the experiment harness.
+
+use crate::util::rng::Rng;
+
+use super::grad_norm::top_k_indices;
+use super::{SelectionCtx, SelectionStrategy};
+
+/// Full fine-tuning: every block, every step.
+pub struct FullSelector {
+    n_blocks: usize,
+}
+
+impl FullSelector {
+    pub fn new(n_blocks: usize) -> Self {
+        Self { n_blocks }
+    }
+}
+
+impl SelectionStrategy for FullSelector {
+    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
+        (0..self.n_blocks).collect()
+    }
+
+    fn name(&self) -> String {
+        "full".into()
+    }
+}
+
+/// Algorithm 1 — Gradient-Guided Block Selection: top-k blocks by this
+/// step's gradient norms (or by cumulative norms, the paper's phrasing for
+/// the preliminary study; both are exposed for the ablation harness).
+pub struct TopKSelector {
+    k: usize,
+    use_cumulative: bool,
+    cumulative: Vec<f64>,
+}
+
+impl TopKSelector {
+    pub fn new(n_blocks: usize, k: usize) -> Self {
+        Self { k, use_cumulative: false, cumulative: vec![0.0; n_blocks] }
+    }
+
+    pub fn cumulative(n_blocks: usize, k: usize) -> Self {
+        Self { k, use_cumulative: true, cumulative: vec![0.0; n_blocks] }
+    }
+}
+
+impl SelectionStrategy for TopKSelector {
+    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+        assert_eq!(ctx.grad_norms.len(), self.cumulative.len(),
+                   "TopKSelector needs per-block grad norms");
+        for (c, g) in self.cumulative.iter_mut().zip(ctx.grad_norms) {
+            *c += *g;
+        }
+        if self.use_cumulative {
+            top_k_indices(&self.cumulative, self.k)
+        } else {
+            top_k_indices(ctx.grad_norms, self.k)
+        }
+    }
+
+    fn needs_grad_norms(&self, _ctx: &SelectionCtx) -> bool {
+        true
+    }
+
+    fn name(&self) -> String {
+        if self.use_cumulative {
+            format!("topk-cum(k={})", self.k)
+        } else {
+            format!("topk(k={})", self.k)
+        }
+    }
+}
+
+/// LISA-style uniform random layerwise sampling (no gradient signal).
+pub struct RandomSelector {
+    n_blocks: usize,
+    k: usize,
+    rng: Rng,
+}
+
+impl RandomSelector {
+    pub fn new(n_blocks: usize, k: usize, seed: u64) -> Self {
+        Self { n_blocks, k, rng: Rng::seed_from_u64(seed) }
+    }
+}
+
+impl SelectionStrategy for RandomSelector {
+    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.n_blocks).collect();
+        // partial Fisher-Yates for the first k
+        for i in 0..self.k {
+            let j = self.rng.gen_range(i, self.n_blocks);
+            idx.swap(i, j);
+        }
+        let mut out = idx[..self.k].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    fn name(&self) -> String {
+        format!("random(k={})", self.k)
+    }
+}
+
+/// Deterministic rotation over contiguous windows of k blocks.
+pub struct RoundRobinSelector {
+    n_blocks: usize,
+    k: usize,
+    cursor: usize,
+}
+
+impl RoundRobinSelector {
+    pub fn new(n_blocks: usize, k: usize) -> Self {
+        Self { n_blocks, k, cursor: 0 }
+    }
+}
+
+impl SelectionStrategy for RoundRobinSelector {
+    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
+        let mut out: Vec<usize> =
+            (0..self.k).map(|i| (self.cursor + i) % self.n_blocks).collect();
+        self.cursor = (self.cursor + self.k) % self.n_blocks;
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn name(&self) -> String {
+        format!("round-robin(k={})", self.k)
+    }
+}
+
+/// Always the same subset (e.g. "first two layers" probes).
+pub struct FixedSubsetSelector {
+    subset: Vec<usize>,
+}
+
+impl FixedSubsetSelector {
+    pub fn new(mut subset: Vec<usize>) -> Self {
+        subset.sort_unstable();
+        subset.dedup();
+        Self { subset }
+    }
+}
+
+impl SelectionStrategy for FixedSubsetSelector {
+    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
+        self.subset.clone()
+    }
+
+    fn name(&self) -> String {
+        format!("fixed({:?})", self.subset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(norms: &'a [f64]) -> SelectionCtx<'a> {
+        SelectionCtx { step: 0, epoch: 1, grad_norms: norms }
+    }
+
+    #[test]
+    fn full_selects_everything() {
+        let mut s = FullSelector::new(5);
+        assert_eq!(s.select(&ctx(&[])), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn topk_fresh_ranks_by_step_norms() {
+        let mut s = TopKSelector::new(4, 2);
+        let norms = [0.1, 5.0, 0.2, 4.0];
+        assert_eq!(s.select(&ctx(&norms)), vec![1, 3]);
+    }
+
+    #[test]
+    fn topk_cumulative_remembers_history() {
+        let mut s = TopKSelector::cumulative(3, 1);
+        assert_eq!(s.select(&ctx(&[10.0, 0.0, 0.0])), vec![0]);
+        // fresh norms favour 1, but cumulative still favours 0
+        assert_eq!(s.select(&ctx(&[0.0, 6.0, 0.0])), vec![0]);
+        assert_eq!(s.select(&ctx(&[0.0, 6.0, 0.0])), vec![1]);
+    }
+
+    #[test]
+    fn random_selects_k_distinct_and_varies() {
+        let mut s = RandomSelector::new(10, 3, 0);
+        let a = s.select(&ctx(&[]));
+        assert_eq!(a.len(), 3);
+        let distinct: std::collections::HashSet<_> =
+            (0..20).map(|_| s.select(&ctx(&[]))).collect();
+        assert!(distinct.len() > 5);
+    }
+
+    #[test]
+    fn round_robin_covers_all_blocks() {
+        let mut s = RoundRobinSelector::new(7, 2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..7 {
+            for b in s.select(&ctx(&[])) {
+                seen.insert(b);
+            }
+        }
+        assert_eq!(seen.len(), 7);
+    }
+
+    #[test]
+    fn fixed_subset_stable_and_deduped() {
+        let mut s = FixedSubsetSelector::new(vec![3, 1, 3]);
+        assert_eq!(s.select(&ctx(&[])), vec![1, 3]);
+        assert_eq!(s.select(&ctx(&[])), vec![1, 3]);
+    }
+}

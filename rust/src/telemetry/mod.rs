@@ -1,0 +1,249 @@
+//! Metrics: per-step records, JSONL logging, timing breakdowns, CSV
+//! writers for the experiment harness.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// One training-step record (JSONL row).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub epoch: u32,
+    pub loss: f32,
+    pub lr: f32,
+    pub selected: Vec<usize>,
+    /// `explore`, `exploit`, or `-` for non-bandit methods.
+    pub decision: String,
+    pub epsilon: f64,
+    /// HLO execute wallclock (s).
+    pub t_execute: f64,
+    /// grads download + host processing (s).
+    pub t_host: f64,
+    /// optimizer update wallclock (s).
+    pub t_optimizer: f64,
+    /// parameter re-upload wallclock (s).
+    pub t_upload: f64,
+    /// simulated PCIe transfer / stall for optimizer states (s).
+    pub t_transfer_sim: f64,
+    pub t_stall_sim: f64,
+    /// simulated accelerator step time from the cost model (s).
+    pub t_step_sim: f64,
+    /// bytes of optimizer state resident after the step (simulated VRAM).
+    pub vram_opt_bytes: usize,
+}
+
+/// Aggregated wallclock buckets over a run.
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    pub execute_s: f64,
+    pub host_s: f64,
+    pub optimizer_s: f64,
+    pub upload_s: f64,
+    pub transfer_sim_s: f64,
+    pub stall_sim_s: f64,
+    pub step_sim_s: f64,
+    pub total_s: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("step", Value::num(self.step as f64)),
+            ("epoch", Value::num(self.epoch as f64)),
+            ("loss", Value::num(self.loss as f64)),
+            ("lr", Value::num(self.lr as f64)),
+            ("selected", Value::arr_usize(&self.selected)),
+            ("decision", Value::str(&self.decision)),
+            ("epsilon", Value::num(self.epsilon)),
+            ("t_execute", Value::num(self.t_execute)),
+            ("t_host", Value::num(self.t_host)),
+            ("t_optimizer", Value::num(self.t_optimizer)),
+            ("t_upload", Value::num(self.t_upload)),
+            ("t_transfer_sim", Value::num(self.t_transfer_sim)),
+            ("t_stall_sim", Value::num(self.t_stall_sim)),
+            ("t_step_sim", Value::num(self.t_step_sim)),
+            ("vram_opt_bytes", Value::num(self.vram_opt_bytes as f64)),
+        ])
+    }
+}
+
+impl Timing {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("execute_s", Value::num(self.execute_s)),
+            ("host_s", Value::num(self.host_s)),
+            ("optimizer_s", Value::num(self.optimizer_s)),
+            ("upload_s", Value::num(self.upload_s)),
+            ("transfer_sim_s", Value::num(self.transfer_sim_s)),
+            ("stall_sim_s", Value::num(self.stall_sim_s)),
+            ("step_sim_s", Value::num(self.step_sim_s)),
+            ("total_s", Value::num(self.total_s)),
+        ])
+    }
+}
+
+/// Collects step records, optionally streaming them to a JSONL file.
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    writer: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl MetricsLog {
+    pub fn new(path: Option<&Path>) -> Result<Self> {
+        let writer = match path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir).ok();
+                }
+                Some(std::io::BufWriter::new(
+                    std::fs::File::create(p).with_context(|| format!("creating {p:?}"))?,
+                ))
+            }
+            None => None,
+        };
+        Ok(Self { records: Vec::new(), writer })
+    }
+
+    pub fn push(&mut self, rec: StepRecord) -> Result<()> {
+        if let Some(w) = &mut self.writer {
+            w.write_all(rec.to_json().to_string().as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(w) = &mut self.writer {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    pub fn timing(&self) -> Timing {
+        let mut t = Timing::default();
+        for r in &self.records {
+            t.execute_s += r.t_execute;
+            t.host_s += r.t_host;
+            t.optimizer_s += r.t_optimizer;
+            t.upload_s += r.t_upload;
+            t.transfer_sim_s += r.t_transfer_sim;
+            t.stall_sim_s += r.t_stall_sim;
+            t.step_sim_s += r.t_step_sim;
+        }
+        t.total_s = t.execute_s + t.host_s + t.optimizer_s + t.upload_s;
+        t
+    }
+
+    /// Mean loss over the last `n` records.
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Per-block selection frequency histogram.
+    pub fn selection_histogram(&self, n_blocks: usize) -> Vec<u64> {
+        let mut h = vec![0u64; n_blocks];
+        for r in &self.records {
+            for &b in &r.selected {
+                h[b] += 1;
+            }
+        }
+        h
+    }
+}
+
+/// Minimal CSV writer used by the experiment harness.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {:?}", path.as_ref()))?,
+        );
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Pretty-print a markdown table (also used for EXPERIMENTS.md snippets).
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", header.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32, selected: Vec<usize>) -> StepRecord {
+        StepRecord {
+            step,
+            epoch: 1,
+            loss,
+            lr: 1e-3,
+            selected,
+            decision: "-".into(),
+            epsilon: 0.0,
+            t_execute: 0.1,
+            t_host: 0.01,
+            t_optimizer: 0.02,
+            t_upload: 0.03,
+            t_transfer_sim: 0.0,
+            t_stall_sim: 0.0,
+            t_step_sim: 0.05,
+            vram_opt_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn jsonl_written_and_aggregates() {
+        let tmp = std::env::temp_dir().join(format!("agsel-metrics-{}.jsonl", std::process::id()));
+        let mut log = MetricsLog::new(Some(&tmp)).unwrap();
+        log.push(rec(0, 4.0, vec![0, 1])).unwrap();
+        log.push(rec(1, 3.0, vec![1])).unwrap();
+        log.flush().unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(text.lines().count(), 2);
+        let t = log.timing();
+        assert!((t.execute_s - 0.2).abs() < 1e-9);
+        assert!((log.tail_loss(1) - 3.0).abs() < 1e-9);
+        assert_eq!(log.selection_histogram(3), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn markdown_table_format() {
+        let md = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

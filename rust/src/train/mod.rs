@@ -1,0 +1,20 @@
+//! The training loop: HLO train-step execution, selection, selective
+//! AdamW, residency accounting, metrics.
+//!
+//! One [`Trainer`] drives one run. The hot loop is pure Rust + PJRT:
+//!
+//! 1. next batch (deterministic generator) → upload tokens/targets;
+//! 2. re-upload only *dirty* parameter blocks (those the optimizer touched
+//!    last step — the device-side mirror of selective updates);
+//! 3. execute the fused train-step HLO → loss + per-block grads;
+//! 4. per-block grad norms (rayon) → optional global clip;
+//! 5. `SelectionStrategy::select` → set of blocks to update;
+//! 6. residency manager prefetch/evict accounting (§3.3);
+//! 7. selective AdamW on the chosen blocks;
+//! 8. metrics (measured wallclock buckets + modeled accelerator time).
+
+mod costmodel;
+mod trainer;
+
+pub use costmodel::{CostModel, CostModelParams};
+pub use trainer::{Trainer, TrainSummary};

@@ -1,0 +1,420 @@
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::PjRtBuffer;
+
+use crate::config::{Method, RunConfig};
+use crate::data::{MathGen, Split, Suite, Tokenizer, TrainBatcher};
+use crate::memory::{method_memory, MemoryReport};
+use crate::model::ModelState;
+use crate::optimizer::{AdamWParams, ResidencyManager, SelectiveAdamW};
+use crate::runtime::{Engine, Exe, Preset};
+use crate::selection::{
+    k_from_pct, AdaGradSelect, AdaGradSelectParams, FixedSubsetSelector, FullSelector,
+    GradNormTracker, RandomSelector, RoundRobinSelector, SelectionCtx, SelectionStrategy,
+    TopKSelector, UcbSelector,
+};
+use crate::telemetry::{MetricsLog, StepRecord, Timing};
+
+use super::costmodel::{CostModel, CostModelParams};
+
+/// End-of-run summary (everything the experiment harness consumes).
+#[derive(Debug, Clone)]
+pub struct TrainSummary {
+    pub method: String,
+    pub preset: String,
+    pub steps: u64,
+    pub final_loss: f32,
+    /// Mean loss over the last 20 steps (smoother comparison metric).
+    pub tail_loss: f32,
+    pub wallclock_s: f64,
+    pub timing: Timing,
+    /// Modeled accelerator time for the whole run (s).
+    pub sim_total_s: f64,
+    /// Static memory report (paper §3.3 formulas).
+    pub memory: MemoryReport,
+    /// Observed average/peak optimizer VRAM from the residency manager.
+    pub opt_vram_avg_bytes: f64,
+    pub opt_vram_peak_bytes: usize,
+    pub residency_hit_rate: f64,
+    pub pcie_stall_s: f64,
+    pub selection_histogram: Vec<u64>,
+    pub explore_steps: u64,
+    pub exploit_steps: u64,
+}
+
+impl TrainSummary {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("method", Value::str(&self.method)),
+            ("preset", Value::str(&self.preset)),
+            ("steps", Value::num(self.steps as f64)),
+            ("final_loss", Value::num(self.final_loss as f64)),
+            ("tail_loss", Value::num(self.tail_loss as f64)),
+            ("wallclock_s", Value::num(self.wallclock_s)),
+            ("timing", self.timing.to_json()),
+            ("sim_total_s", Value::num(self.sim_total_s)),
+            ("memory", self.memory.to_json()),
+            ("opt_vram_avg_bytes", Value::num(self.opt_vram_avg_bytes)),
+            ("opt_vram_peak_bytes", Value::num(self.opt_vram_peak_bytes as f64)),
+            ("residency_hit_rate", Value::num(self.residency_hit_rate)),
+            ("pcie_stall_s", Value::num(self.pcie_stall_s)),
+            ("selection_histogram", Value::arr_u64(&self.selection_histogram)),
+            ("explore_steps", Value::num(self.explore_steps as f64)),
+            ("exploit_steps", Value::num(self.exploit_steps as f64)),
+        ])
+    }
+}
+
+/// Which parameter table is being trained.
+enum Mode {
+    /// Base blocks trained (full / selective methods).
+    Base,
+    /// LoRA adapters trained; base blocks frozen on device.
+    Lora { base_device: Vec<PjRtBuffer>, double_rank: bool },
+}
+
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub cfg: RunConfig,
+    pub preset: Preset,
+    /// Trainable parameter table (base blocks, or adapters under LoRA).
+    pub state: ModelState,
+    /// Frozen base state under LoRA (equals `state` otherwise).
+    pub base_state: Option<ModelState>,
+    mode: Mode,
+    opt: SelectiveAdamW,
+    strategy: Box<dyn SelectionStrategy>,
+    tracker: GradNormTracker,
+    residency: ResidencyManager,
+    batcher: TrainBatcher,
+    exe_train: Rc<Exe>,
+    device_blocks: Vec<PjRtBuffer>,
+    dirty: Vec<bool>,
+    pub metrics: MetricsLog,
+    cost: CostModel,
+    grads_host: Vec<Vec<f32>>,
+    step: u64,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: RunConfig) -> Result<Self> {
+        let preset = engine.manifest.preset(&cfg.preset)?.clone();
+        cfg.validate(&preset)?;
+        let tok = Tokenizer::from_spec(&engine.manifest.tokenizer);
+        let suite = Suite::parse(&cfg.data.train_suite)
+            .ok_or_else(|| anyhow!("unknown suite {:?}", cfg.data.train_suite))?;
+        let gen = MathGen::new(suite, Split::Train, cfg.data.seed);
+        let batcher =
+            TrainBatcher::new(gen, tok, preset.model.batch, preset.model.seq_len);
+
+        let adamw: AdamWParams = engine.manifest.adamw.into();
+        let pcie = cfg.residency.pcie_model()?;
+        let cost = CostModel::new(&preset, CostModelParams::default(), preset.model.lora_rank);
+
+        let (mode, state, base_state, exe_train, trainable_numels, selective) =
+            match &cfg.method {
+                Method::Lora { double_rank } => {
+                    let entry = if *double_rank { "train_step_lora2" } else { "train_step_lora" };
+                    let exe = engine.load_preset_exe(&cfg.preset, entry)?;
+                    let base = ModelState::init(&preset.blocks, cfg.seed);
+                    let ltable =
+                        if *double_rank { &preset.lora_blocks2 } else { &preset.lora_blocks };
+                    let lora = ModelState::init(ltable, cfg.seed ^ 0x1017A);
+                    let base_device: Vec<PjRtBuffer> = base
+                        .flats
+                        .iter()
+                        .map(|f| engine.upload_f32(f))
+                        .collect::<Result<_>>()?;
+                    let numels: Vec<usize> = ltable.iter().map(|b| b.numel).collect();
+                    (
+                        Mode::Lora { base_device, double_rank: *double_rank },
+                        lora,
+                        Some(base),
+                        exe,
+                        numels,
+                        false,
+                    )
+                }
+                _ => {
+                    let entry = if cfg.pallas_kernel { "train_step_pallas" } else { "train_step" };
+                    let exe = engine.load_preset_exe(&cfg.preset, entry)?;
+                    let state = ModelState::init(&preset.blocks, cfg.seed);
+                    let numels = preset.block_numels();
+                    let selective = !matches!(cfg.method, Method::Full);
+                    (Mode::Base, state, None, exe, numels, selective)
+                }
+            };
+
+        let n_trainable = trainable_numels.len();
+        let strategy = build_strategy(&cfg, n_trainable)?;
+        let opt = SelectiveAdamW::new(&trainable_numels, adamw);
+        let residency = ResidencyManager::new(
+            &trainable_numels,
+            cfg.residency.bytes_per_param,
+            pcie,
+            selective,
+        );
+        let device_blocks: Vec<PjRtBuffer> =
+            state.flats.iter().map(|f| engine.upload_f32(f)).collect::<Result<_>>()?;
+        let metrics = MetricsLog::new(cfg.metrics_path.as_deref())?;
+        let grads_host = trainable_numels.iter().map(|&n| vec![0.0f32; n]).collect();
+
+        Ok(Self {
+            engine,
+            cfg,
+            preset,
+            state,
+            base_state,
+            mode,
+            opt,
+            strategy,
+            tracker: GradNormTracker::new(n_trainable),
+            residency,
+            batcher,
+            exe_train,
+            device_blocks,
+            dirty: vec![false; n_trainable],
+            metrics,
+            cost,
+            grads_host,
+            step: 0,
+        })
+    }
+
+    pub fn epoch(&self) -> u32 {
+        1 + (self.step / self.cfg.train.steps_per_epoch.max(1)) as u32
+    }
+
+    pub fn strategy_name(&self) -> String {
+        self.strategy.name()
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn step_once(&mut self) -> Result<f32> {
+        let batch = self.batcher.next_batch();
+        let dims = [batch.batch, batch.seq_len];
+
+        // 1. upload batch + dirty parameter blocks
+        let t0 = Instant::now();
+        let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
+        let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
+        for (i, dirty) in self.dirty.iter_mut().enumerate() {
+            if *dirty {
+                self.device_blocks[i] = self.engine.upload_f32(&self.state.flats[i])?;
+                *dirty = false;
+            }
+        }
+        let t_upload = t0.elapsed().as_secs_f64();
+
+        // 2. execute the fused train step
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.device_blocks.len() + 34);
+        if let Mode::Lora { base_device, .. } = &self.mode {
+            args.extend(base_device.iter());
+        }
+        args.extend(self.device_blocks.iter());
+        args.push(&tok_buf);
+        args.push(&tgt_buf);
+        let out = self.exe_train.run(&args)?;
+        let loss = out.scalar_f32(0)?;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {}: {loss}", self.step));
+        }
+
+        // 3. gradients to host
+        let t1 = Instant::now();
+        for (i, g) in self.grads_host.iter_mut().enumerate() {
+            *g = out.vec_f32(1 + i)?;
+        }
+        let t_host = t1.elapsed().as_secs_f64() + out.download_s;
+
+        // 4. block norms + optional global clip
+        let t2 = Instant::now();
+        self.tracker.observe(&self.grads_host);
+        if let Some(clip) = self.cfg.train.grad_clip {
+            let global: f64 =
+                self.tracker.last.iter().map(|&n| n * n).sum::<f64>().sqrt();
+            if global > clip as f64 {
+                let scale = (clip as f64 / global) as f32;
+                for g in self.grads_host.iter_mut() {
+                    for x in g.iter_mut() {
+                        *x *= scale;
+                    }
+                }
+                for n in self.tracker.last.iter_mut() {
+                    *n *= scale as f64;
+                }
+            }
+        }
+
+        // 5. select blocks
+        let epoch = self.epoch();
+        let ctx = SelectionCtx {
+            step: self.step,
+            epoch,
+            grad_norms: &self.tracker.last,
+        };
+        let selected = self.strategy.select(&ctx);
+
+        // 6. modeled accelerator compute time + residency accounting
+        let t_step_sim = match (&self.mode, &self.cfg.method) {
+            (Mode::Lora { double_rank, .. }, _) => self
+                .cost
+                .lora_step_s(self.preset.model.n_layers, if *double_rank { 2.0 } else { 1.0 }),
+            (_, Method::Full) => self.cost.full_step_s(),
+            _ => self.cost.selective_step_s(&selected),
+        };
+        let transfers = self.residency.step(&selected, t_step_sim);
+
+        // 7. selective AdamW
+        let lr = self.cfg.lr_at(self.step);
+        let t3 = Instant::now();
+        self.opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
+        for &b in &selected {
+            self.dirty[b] = true;
+        }
+        let t_optimizer = t3.elapsed().as_secs_f64();
+        let t_hostproc = t2.elapsed().as_secs_f64() - t_optimizer;
+
+        // 8. metrics
+        let (decision, epsilon) = self.decision_label();
+        self.metrics.push(StepRecord {
+            step: self.step,
+            epoch,
+            loss,
+            lr,
+            selected,
+            decision,
+            epsilon,
+            t_execute: out.execute_s,
+            t_host: t_host + t_hostproc.max(0.0),
+            t_optimizer,
+            t_upload,
+            t_transfer_sim: transfers.transfer_s,
+            t_stall_sim: transfers.stall_s,
+            t_step_sim: t_step_sim + transfers.stall_s,
+            vram_opt_bytes: self.residency.vram_used(),
+        })?;
+
+        self.step += 1;
+        Ok(loss)
+    }
+
+    fn decision_label(&self) -> (String, f64) {
+        match self.strategy.last_decision() {
+            Some((label, eps)) => (label.into(), eps),
+            None => ("-".into(), 0.0),
+        }
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self) -> Result<TrainSummary> {
+        let total = self.cfg.train.steps;
+        let t0 = Instant::now();
+        let mut last = f32::NAN;
+        while self.step < total {
+            last = self.step_once()?;
+            if self.cfg.train.log_every > 0 && self.step % self.cfg.train.log_every == 0 {
+                crate::log_info!(
+                    "train {} step {} loss {:.4}",
+                    self.cfg.method.label(),
+                    self.step,
+                    last
+                );
+            }
+        }
+        self.metrics.flush()?;
+        let wallclock_s = t0.elapsed().as_secs_f64();
+        Ok(self.summary(wallclock_s, last))
+    }
+
+    pub fn summary(&self, wallclock_s: f64, final_loss: f32) -> TrainSummary {
+        let timing = self.metrics.timing();
+        let stats = &self.residency.stats;
+        let (explore, exploit) = self.strategy.bandit_counts().unwrap_or((0, 0));
+        TrainSummary {
+            method: self.cfg.method.label(),
+            preset: self.cfg.preset.clone(),
+            steps: self.step,
+            final_loss,
+            tail_loss: self.metrics.tail_loss(20),
+            wallclock_s,
+            sim_total_s: timing.step_sim_s,
+            timing,
+            memory: method_memory(
+                &self.preset,
+                &self.cfg.method,
+                self.cfg.residency.bytes_per_param,
+            ),
+            opt_vram_avg_bytes: stats.avg_vram_bytes(),
+            opt_vram_peak_bytes: stats.peak_vram_bytes,
+            residency_hit_rate: stats.hit_rate(),
+            pcie_stall_s: stats.stall_s,
+            selection_histogram: self.metrics.selection_histogram(self.dirty.len()),
+            explore_steps: explore,
+            exploit_steps: exploit,
+        }
+    }
+
+    /// Device buffers of the *effective* model for evaluation: merged
+    /// base+LoRA under LoRA, the live base blocks otherwise.
+    pub fn eval_state(&self) -> Result<ModelState> {
+        match &self.mode {
+            Mode::Base => Ok(self.state.clone()),
+            Mode::Lora { double_rank, .. } => crate::lora::merge(
+                self.engine,
+                &self.cfg.preset,
+                self.base_state.as_ref().expect("lora has base"),
+                &self.state,
+                *double_rank,
+            ),
+        }
+    }
+
+    pub fn frequencies(&self) -> Option<&[u64]> {
+        self.strategy.frequencies()
+    }
+}
+
+fn build_strategy(cfg: &RunConfig, n_blocks: usize) -> Result<Box<dyn SelectionStrategy>> {
+    Ok(match &cfg.method {
+        Method::Full | Method::Lora { .. } => Box::new(FullSelector::new(n_blocks)),
+        Method::TopK { pct } => {
+            Box::new(TopKSelector::new(n_blocks, k_from_pct(n_blocks, *pct)))
+        }
+        Method::Random { pct } => Box::new(RandomSelector::new(
+            n_blocks,
+            k_from_pct(n_blocks, *pct),
+            cfg.seed ^ 0x5EED,
+        )),
+        Method::RoundRobin { pct } => {
+            Box::new(RoundRobinSelector::new(n_blocks, k_from_pct(n_blocks, *pct)))
+        }
+        Method::Fixed { blocks } => Box::new(FixedSubsetSelector::new(blocks.clone())),
+        Method::Ucb { pct, c } => {
+            Box::new(UcbSelector::new(n_blocks, k_from_pct(n_blocks, *pct), *c))
+        }
+        Method::AdaGradSelect {
+            pct,
+            eps0,
+            lambda,
+            delta,
+            explore_after_epoch1,
+            uniform_exploit,
+        } => {
+            let mut p =
+                AdaGradSelectParams::new(k_from_pct(n_blocks, *pct), cfg.train.steps_per_epoch);
+            p.eps0 = *eps0;
+            if let Some(l) = lambda {
+                p.lambda = *l;
+            }
+            p.delta = *delta;
+            p.seed = cfg.seed;
+            p.explore_after_epoch1 = *explore_after_epoch1;
+            p.uniform_exploit = *uniform_exploit;
+            Box::new(AdaGradSelect::new(n_blocks, p))
+        }
+    })
+}

@@ -1,0 +1,121 @@
+//! Micro-benchmark harness (the in-tree stand-in for criterion).
+//!
+//! `cargo bench` targets are plain `main()` binaries (harness = false)
+//! that call [`bench`]: warmup, adaptive iteration count targeting a
+//! fixed measurement budget, then trimmed mean / p50 / p95 over per-batch
+//! timings. Output is one aligned text row per case plus a machine-
+//! readable JSONL file when `BENCH_JSON` is set.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, printing a human row and returning the stats.
+///
+/// `budget` is the total measurement time target (excludes warmup).
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().max(Duration::from_nanos(50));
+    let warm = (Duration::from_millis(50).as_nanos() / first.as_nanos()).clamp(0, 20) as u64;
+    for _ in 0..warm {
+        f();
+    }
+
+    // choose a batch size so one batch is ~1-10ms, then run batches
+    let per_iter = first.as_nanos() as f64;
+    let batch = ((2e6 / per_iter).ceil() as u64).clamp(1, 10_000);
+    let mut samples: Vec<f64> = Vec::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        iters += batch;
+        if samples.len() >= 2000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // trimmed mean (drop top/bottom 10%)
+    let lo = samples.len() / 10;
+    let hi = samples.len() - lo;
+    let trimmed = &samples[lo..hi.max(lo + 1)];
+    let mean_ns = trimmed.iter().sum::<f64>() / trimmed.len() as f64;
+    let p50_ns = samples[samples.len() / 2];
+    let p95_ns = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+
+    let r = BenchResult { name: name.to_string(), iters, mean_ns, p50_ns, p95_ns };
+    println!(
+        "{:<48} {:>12}  p50 {:>12}  p95 {:>12}  ({} iters)",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
+        r.iters
+    );
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        use crate::util::json::Value;
+        let row = Value::obj(vec![
+            ("name", Value::str(&r.name)),
+            ("mean_ns", Value::num(r.mean_ns)),
+            ("p50_ns", Value::num(r.p50_ns)),
+            ("p95_ns", Value::num(r.p95_ns)),
+            ("iters", Value::num(r.iters as f64)),
+        ]);
+        if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            use std::io::Write;
+            let _ = writeln!(fh, "{}", row.to_string());
+        }
+    }
+    r
+}
+
+/// Standard per-target preamble.
+pub fn header(target: &str) {
+    println!("\n== bench: {target} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(30), || {
+            std::hint::black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+        assert!(r.iters > 100);
+    }
+}

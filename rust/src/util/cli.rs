@@ -1,0 +1,138 @@
+//! Minimal CLI flag parser for the `agsel` launcher and examples.
+//!
+//! Supports `subcommand --flag value --bool-flag positional` shapes:
+//! flags may appear in any order; `--flag=value` is accepted; unknown
+//! flags are an error (surfaced with the known-flag list).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `bool_flags` take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let t = &argv[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    a.bools.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    a.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    fn mark(&mut self, name: &str) {
+        if !self.known.iter().any(|k| k == name) {
+            self.known.push(name.to_string());
+        }
+    }
+
+    pub fn str_opt(&mut self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn u64_or(&mut self, name: &str, default: u64) -> Result<u64> {
+        match self.str_opt(name) {
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&mut self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&mut self, name: &str, default: f64) -> Result<f64> {
+        match self.str_opt(name) {
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_flag(&mut self, name: &str) -> bool {
+        self.mark(name);
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Error on unrecognized flags (call after reading all known flags).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.flags.keys() {
+            if !self.known.iter().any(|n| n == k) {
+                bail!("unknown flag --{k}; known: {:?}", self.known);
+            }
+        }
+        for b in &self.bools {
+            if !self.known.iter().any(|n| n == b) {
+                bail!("unknown flag --{b}; known: {:?}", self.known);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_flags() {
+        let mut a = Args::parse(&argv("train --steps 100 --pallas --pct=12.5 fig1"), &["pallas"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["train", "fig1"]);
+        assert_eq!(a.u64_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("pct", 0.0).unwrap(), 12.5);
+        assert!(a.bool_flag("pallas"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("--steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected_at_finish() {
+        let mut a = Args::parse(&argv("--bogus 1"), &[]).unwrap();
+        let _ = a.u64_or("steps", 5);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(&argv(""), &[]).unwrap();
+        assert_eq!(a.str_or("preset", "qwen-sim"), "qwen-sim");
+        assert_eq!(a.u64_or("steps", 300).unwrap(), 300);
+        assert!(!a.bool_flag("pallas"));
+    }
+}

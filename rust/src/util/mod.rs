@@ -1,0 +1,19 @@
+//! In-tree substrates.
+//!
+//! The build image is fully offline with only the `xla` PJRT bindings and
+//! `anyhow` vendored, so the utility layer a framework normally imports is
+//! implemented here (and tested like everything else):
+//!
+//! * [`json`] — recursive-descent JSON parser + emitter (manifest,
+//!   configs, JSONL metrics).
+//! * [`rng`] — seeded xoshiro256++ PRNG with uniform/range helpers.
+//! * [`par`] — scoped-thread parallel-for / parallel-map.
+//! * [`cli`] — minimal flag parser for the `agsel` launcher and examples.
+//! * [`bench`] — micro-benchmark harness (warmup + trimmed statistics),
+//!   used by the `cargo bench` targets.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;

@@ -1,0 +1,119 @@
+//! Scoped-thread data parallelism (the in-tree stand-in for rayon).
+//!
+//! The coordinator's host-side hot loops — per-block grad-norm reductions
+//! and selective AdamW updates — are embarrassingly parallel across
+//! blocks. `par_map_mut`/`par_map` fan work over `std::thread::scope`
+//! threads with a simple atomic work queue; for small inputs they fall
+//! back to the serial path to avoid spawn overhead.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (max cpus, capped).
+pub fn workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Parallel map over a slice (order-preserving).
+pub fn par_map<T: Sync, R: Send + Default + Clone>(
+    items: &[T],
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    let nw = workers().min(n.max(1));
+    if n < 2 || nw < 2 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut out = vec![R::default(); n];
+    let cursor = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..nw {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // safety: each index is claimed exactly once
+                unsafe { *out_ptr.get().add(i) = r };
+            });
+        }
+    });
+    out
+}
+
+/// Run `f(i, &mut items[i])` for every index, in parallel.
+pub fn par_for_each_mut<T: Send>(items: &mut [T], f: impl Fn(usize, &mut T) + Sync) {
+    let n = items.len();
+    let nw = workers().min(n.max(1));
+    if n < 2 || nw < 2 {
+        for (i, t) in items.iter_mut().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let base = SendPtr(items.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..nw {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // safety: each index claimed exactly once => disjoint &mut
+                let item = unsafe { &mut *base.get().add(i) };
+                f(i, item);
+            });
+        }
+    });
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor so closures capture `&SendPtr` (Sync) rather than the raw
+    /// pointer field itself (edition-2021 disjoint capture would otherwise
+    /// capture the non-Sync `*mut T`).
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_small_input() {
+        assert_eq!(par_map(&[7usize], |_, &x| x + 1), vec![8]);
+        assert_eq!(par_map::<usize, usize>(&[], |_, &x| x), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_for_each_mut_touches_every_item() {
+        let mut items = vec![0u64; 500];
+        par_for_each_mut(&mut items, |i, x| *x = i as u64 + 1);
+        for (i, &x) in items.iter().enumerate() {
+            assert_eq!(x, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn par_map_heavy_work_matches_serial() {
+        let items: Vec<u64> = (0..64).collect();
+        let heavy = |x: u64| (0..10_000u64).fold(x, |a, b| a.wrapping_mul(31).wrapping_add(b));
+        let par = par_map(&items, |_, &x| heavy(x));
+        let ser: Vec<u64> = items.iter().map(|&x| heavy(x)).collect();
+        assert_eq!(par, ser);
+    }
+}

@@ -1,0 +1,76 @@
+//! Integration: the experiment harness end-to-end at micro scale.
+//!
+//! Runs each paper-figure driver on `test-tiny` with a handful of steps to
+//! prove the full pipeline (train → eval → CSV/markdown emission) holds
+//! together; the real numbers come from `agsel exp … --steps 300` and are
+//! recorded in EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+use adagradselect::config::Method;
+use adagradselect::experiments::{run_method, ExpOptions};
+use adagradselect::runtime::Engine;
+
+fn opts(tag: &str) -> ExpOptions {
+    let out = std::env::temp_dir().join(format!("agsel-exp-{tag}-{}", std::process::id()));
+    ExpOptions {
+        artifacts_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        out_dir: out,
+        steps: 12,
+        steps_per_epoch: 6,
+        eval_problems: 8,
+        seed: 0,
+    }
+}
+
+#[test]
+fn run_method_produces_full_result() {
+    let opt = opts("rm");
+    let engine = Engine::load(&opt.artifacts_dir).unwrap();
+    let run = run_method(&engine, &opt, "test-tiny", Method::ags(30.0)).unwrap();
+    assert_eq!(run.summary.steps, 12);
+    assert!(run.summary.tail_loss.is_finite());
+    assert!(run.gsm8k_acc >= 0.0 && run.math_acc >= 0.0);
+    assert!(run.summary.sim_total_s > 0.0);
+    std::fs::remove_dir_all(&opt.out_dir).ok();
+}
+
+#[test]
+fn method_ladder_relative_properties() {
+    // The three paper-shape properties that must hold *even at micro
+    // scale* because they're structural, not learned:
+    //  1. AGS uses less optimizer memory than FFT,
+    //  2. LoRA simulated step time exceeds FFT's (adapter overhead),
+    //  3. AGS simulated step time is below FFT's.
+    let opt = opts("ladder");
+    let engine = Engine::load(&opt.artifacts_dir).unwrap();
+    let ags = run_method(&engine, &opt, "test-tiny", Method::ags(30.0)).unwrap();
+    let fft = run_method(&engine, &opt, "test-tiny", Method::Full).unwrap();
+    let lora = run_method(&engine, &opt, "test-tiny", Method::Lora { double_rank: false })
+        .unwrap();
+    assert!(ags.summary.memory.optimizer < fft.summary.memory.optimizer);
+    assert!(ags.summary.memory.total() < fft.summary.memory.total());
+    assert!(ags.summary.sim_total_s < fft.summary.sim_total_s);
+    assert!(lora.summary.sim_total_s > fft.summary.sim_total_s);
+    std::fs::remove_dir_all(&opt.out_dir).ok();
+}
+
+#[test]
+fn csv_outputs_written() {
+    let opt = opts("csv");
+    let engine = Engine::load(&opt.artifacts_dir).unwrap();
+    // fig3 micro-sweep over two points on test-tiny is the cheapest driver
+    // that exercises CsvWriter + eval
+    let rows = adagradselect::experiments::fig3_on(
+        &engine,
+        &opt,
+        "test-tiny",
+        &[30.0, 100.0],
+    )
+    .unwrap();
+    assert_eq!(rows.len(), 2);
+    let csv = std::fs::read_to_string(opt.out_dir.join("fig3_accuracy_vs_pct.csv")).unwrap();
+    assert!(csv.lines().count() == 3, "{csv}");
+    assert!(csv.starts_with("pct,"));
+    std::fs::remove_dir_all(&opt.out_dir).ok();
+}

@@ -1,0 +1,228 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! The offline build image has no proptest crate, so these are hand-rolled
+//! property tests: each property is checked over a few hundred randomized
+//! cases drawn from the in-tree seeded PRNG, with the failing seed printed
+//! on assertion failure (set `AGSEL_PROP_CASES` to widen the sweep).
+
+use adagradselect::optimizer::{
+    AdamWParams, PcieModel, ResidencyManager, SelectiveAdamW,
+};
+use adagradselect::selection::sampling::{gamma, standard_normal};
+use adagradselect::selection::{
+    k_from_pct, sample_dirichlet, weighted_sample_without_replacement, AdaGradSelect,
+    AdaGradSelectParams, SelectionCtx, SelectionStrategy,
+};
+use adagradselect::selection::grad_norm::{block_norm_sq, top_k_indices};
+use adagradselect::util::json::Value;
+use adagradselect::util::rng::Rng;
+
+fn cases() -> u64 {
+    std::env::var("AGSEL_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(300)
+}
+
+#[test]
+fn prop_dirichlet_always_on_simplex() {
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = rng.gen_range(1, 40);
+        let alpha: Vec<f64> =
+            (0..n).map(|_| rng.gen_range_f64(1e-3, 50.0)).collect();
+        let p = sample_dirichlet(&alpha, &mut rng);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "seed {seed}: sum {sum}");
+        assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0), "seed {seed}: {p:?}");
+    }
+}
+
+#[test]
+fn prop_wswor_k_distinct_in_range() {
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xBEEF);
+        let n = rng.gen_range(1, 30);
+        let k = rng.gen_range(1, n + 1);
+        let p: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(0.0, 1.0)).collect();
+        // guarantee at least k strictly-positive weights
+        let mut p = p;
+        for i in 0..k {
+            p[i] = p[i].max(1e-6);
+        }
+        let s = weighted_sample_without_replacement(&p, k, &mut rng);
+        assert_eq!(s.len(), k, "seed {seed}");
+        assert!(s.windows(2).all(|w| w[0] < w[1]), "seed {seed}: not sorted/distinct");
+        assert!(s.iter().all(|&i| i < n), "seed {seed}: out of range");
+    }
+}
+
+#[test]
+fn prop_topk_returns_largest() {
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x70D0);
+        let n = rng.gen_range(1, 50);
+        let k = rng.gen_range(0, n + 1);
+        let v: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-10.0, 10.0)).collect();
+        let sel = top_k_indices(&v, k);
+        assert_eq!(sel.len(), k.min(n));
+        if k > 0 && k < n {
+            let min_sel = sel.iter().map(|&i| v[i]).fold(f64::INFINITY, f64::min);
+            let max_unsel = (0..n)
+                .filter(|i| !sel.contains(i))
+                .map(|i| v[i])
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert!(min_sel >= max_unsel, "seed {seed}: {v:?} -> {sel:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_adagrad_selects_exactly_k_valid_blocks() {
+    for seed in 0..cases() / 3 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA6);
+        let n = rng.gen_range(2, 40);
+        let k = rng.gen_range(1, n + 1);
+        let mut params = AdaGradSelectParams::new(k, 20);
+        params.seed = seed;
+        let mut s = AdaGradSelect::new(n, params);
+        let norms: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(0.0, 5.0)).collect();
+        for step in 0..40u64 {
+            let sel = s.select(&SelectionCtx {
+                step,
+                epoch: 1 + (step / 20) as u32,
+                grad_norms: &norms,
+            });
+            assert_eq!(sel.len(), k, "seed {seed} step {step}");
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "distinct+sorted");
+            assert!(sel.iter().all(|&b| b < n));
+        }
+        // frequencies must total k per step
+        assert_eq!(s.frequencies().unwrap().iter().sum::<u64>(), 40 * k as u64);
+    }
+}
+
+#[test]
+fn prop_residency_ledger_consistent_under_random_sequences() {
+    for seed in 0..cases() / 3 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x4E5);
+        let n = rng.gen_range(1, 12);
+        let numels: Vec<usize> = (0..n).map(|_| rng.gen_range(10, 5000)).collect();
+        let mut m = ResidencyManager::new(&numels, 2, PcieModel::default(), true);
+        let mut h2d_total = 0u64;
+        let mut d2h_total = 0u64;
+        for _ in 0..30 {
+            let k = rng.gen_range(0, n + 1);
+            let mut sel: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = rng.gen_range(i, n);
+                sel.swap(i, j);
+            }
+            let mut sel = sel[..k].to_vec();
+            sel.sort_unstable();
+            let t = m.step(&sel, rng.gen_range_f64(0.0, 0.01));
+            h2d_total += t.h2d_bytes as u64;
+            d2h_total += t.d2h_bytes as u64;
+            // resident set equals the selected set after the step
+            assert_eq!(m.resident_blocks(), sel, "seed {seed}");
+            // ledger equals sum of resident block bytes
+            let expect: usize = sel.iter().map(|&b| 2 * 2 * numels[b]).sum();
+            assert_eq!(m.vram_used(), expect, "seed {seed}");
+        }
+        // conservation: everything uploaded was either evicted or resident
+        assert_eq!(h2d_total, d2h_total + m.vram_used() as u64, "seed {seed}");
+        assert_eq!(m.stats.h2d_bytes, h2d_total);
+    }
+}
+
+#[test]
+fn prop_adamw_matches_scalar_reference() {
+    // fused kernel == straightforward scalar AdamW on random inputs
+    for seed in 0..cases() / 3 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xADA);
+        let n = rng.gen_range(1, 300);
+        let lr = rng.gen_range_f64(1e-5, 1e-1) as f32;
+        let hp = AdamWParams::default();
+        let mut p: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let mut opt = SelectiveAdamW::new(&[n], hp);
+        let p0 = p.clone();
+        opt.update_block(0, &mut p, &g, lr);
+        for i in 0..n {
+            let m = 0.1 * g[i];
+            let v = 0.001 * g[i] * g[i];
+            let m_hat = m / (1.0 - 0.9f32);
+            let v_hat = v / (1.0 - 0.999f32);
+            let expect = p0[i] - lr * (m_hat / (v_hat.sqrt() + hp.eps) + hp.wd * p0[i]);
+            assert!((p[i] - expect).abs() < 1e-5, "seed {seed} i {i}: {} vs {expect}", p[i]);
+        }
+    }
+}
+
+#[test]
+fn prop_block_norm_matches_f64_reference() {
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x4042);
+        let n = rng.gen_range(0, 10_000);
+        let g: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0) as f32).collect();
+        let naive: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let fast = block_norm_sq(&g);
+        let tol = naive.max(1.0) * 1e-6;
+        assert!((fast - naive).abs() <= tol, "seed {seed}: {fast} vs {naive}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 3 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.gen_bool(0.5)),
+            2 => Value::Num((rng.gen_range_i64(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => {
+                let len = rng.gen_range(0, 12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.gen_range(0, 96) as u8 + 32;
+                        if c == b'\\' { 'x' } else { c as char }
+                    })
+                    .collect();
+                Value::Str(s + "\"\n\\é")
+            }
+            4 => Value::Arr((0..rng.gen_range(0, 5)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.gen_range(0, 5) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth + 1));
+                }
+                Value::Obj(m)
+            }
+        }
+    }
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x1503);
+        let v = gen_value(&mut rng, 0);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_k_from_pct_bounds() {
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x46);
+        let n = rng.gen_range(1, 200);
+        let pct = rng.gen_range_f64(0.1, 100.0);
+        let k = k_from_pct(n, pct);
+        assert!(k >= 1 && k <= n, "n={n} pct={pct} k={k}");
+    }
+}
+
+#[test]
+fn prop_samplers_produce_finite_values() {
+    let mut rng = Rng::seed_from_u64(99);
+    for _ in 0..20_000 {
+        assert!(standard_normal(&mut rng).is_finite());
+        let a = rng.gen_range_f64(0.01, 100.0);
+        let g = gamma(a, &mut rng);
+        assert!(g.is_finite() && g > 0.0);
+    }
+}

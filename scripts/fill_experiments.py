@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholders from results/*.csv (run after `make exp`)."""
+
+import csv
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results"
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def read(name):
+    path = RESULTS / name
+    if not path.exists():
+        return None
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def md_table(rows, cols, fmt=None):
+    fmt = fmt or {}
+    out = ["| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for r in rows:
+        out.append("| " + " | ".join(fmt.get(c, str)(r[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def pct(x):
+    return f"{float(x) * 100:.1f}%"
+
+
+def fill(text, marker, content):
+    if content is None:
+        return text
+    return text.replace(marker, content)
+
+
+def main():
+    text = EXP.read_text()
+
+    t1 = read("table1_accuracy.csv")
+    if t1:
+        text = fill(text, "<!-- TABLE1 -->", md_table(
+            t1, ["preset", "method", "gsm8k_acc", "math_acc", "tail_loss"],
+            {"gsm8k_acc": pct, "math_acc": pct}))
+
+    f1 = read("fig1_time_vs_memory.csv")
+    if f1:
+        text = fill(text, "<!-- FIG1 -->", md_table(
+            f1, ["method", "sim_time_s", "wallclock_s", "gpu_mem_total_mb",
+                 "gpu_mem_optimizer_mb", "opt_vram_avg_mb", "pcie_stall_s"]))
+
+    f3 = read("fig3_accuracy_vs_pct.csv")
+    if f3:
+        text = fill(text, "<!-- FIG3 -->", md_table(
+            f3, ["pct", "gsm8k_acc", "math_acc", "tail_loss"],
+            {"gsm8k_acc": pct, "math_acc": pct}))
+
+    f4 = read("fig4_loss_convergence.csv")
+    if f4:
+        # final-20-step mean per method
+        per = {}
+        for r in f4:
+            per.setdefault(r["method"], []).append(float(r["loss"]))
+        rows = [
+            {"method": m, "first loss": f"{ls[0]:.3f}",
+             "final-20 mean": f"{sum(ls[-20:]) / len(ls[-20:]):.3f}"}
+            for m, ls in per.items()
+        ]
+        text = fill(text, "<!-- FIG4 -->",
+                    md_table(rows, ["method", "first loss", "final-20 mean"]))
+
+    ab = read("ablations.csv")
+    if ab:
+        text = fill(text, "<!-- ABLATIONS -->", md_table(
+            ab, ["variant", "gsm8k_acc", "math_acc", "tail_loss", "explore_steps"],
+            {"gsm8k_acc": pct, "math_acc": pct}))
+
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
