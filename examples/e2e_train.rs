@@ -3,8 +3,8 @@
 //! Trains the `e2e` preset (the largest exported model) on the synthetic
 //! math corpus with AdaGradSelect, logging the loss curve, running
 //! periodic held-out evals, and finishing with greedy-decode accuracy on
-//! both suites — proving L1 (Pallas kernels in the HLO), L2 (fwd/bwd) and
-//! L3 (selection/optimizer/residency/data/eval) compose. The reference
+//! both suites — proving the backend (native fwd/bwd) and the coordinator
+//! (selection/optimizer/residency/data/eval) compose. The reference
 //! run is recorded in EXPERIMENTS.md.
 //!
 //! ```bash
@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{MathGen, Split, Suite};
 use adagradselect::eval::Evaluator;
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::{Backend, ReferenceBackend};
 use adagradselect::telemetry::CsvWriter;
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
@@ -34,7 +34,7 @@ fn main() -> Result<()> {
     args.finish()?;
     std::fs::create_dir_all(&out).ok();
 
-    let engine = Engine::load("artifacts")?;
+    let engine = ReferenceBackend::new();
     let mut cfg = RunConfig::preset_defaults(&preset);
     cfg.method = match method.as_str() {
         "full" => Method::Full,
@@ -47,7 +47,7 @@ fn main() -> Result<()> {
     cfg.train.log_every = 0;
     cfg.metrics_path = Some(out.join("e2e_metrics.jsonl"));
 
-    let preset_info = engine.manifest.preset(&preset)?;
+    let preset_info = engine.manifest().preset(&preset)?;
     println!(
         "e2e: {} ({} params, {} blocks) · {} · {} steps",
         preset,
@@ -85,7 +85,7 @@ fn main() -> Result<()> {
     let summary = trainer.summary(wall, last);
 
     println!("\n== e2e summary ==");
-    println!("{}", summary.to_json().to_string());
+    println!("{}", summary.to_json());
 
     let state = trainer.eval_state()?;
     for suite in [Suite::Gsm8kSim, Suite::MathSim] {

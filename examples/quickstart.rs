@@ -1,7 +1,7 @@
-//! Quickstart: fine-tune the tiny preset with AdaGradSelect and evaluate.
+//! Quickstart: fine-tune the tiny preset with AdaGradSelect on the
+//! pure-Rust reference backend and evaluate — no Python, no artifacts.
 //!
 //! ```bash
-//! make artifacts                       # once
 //! cargo run --release --example quickstart
 //! ```
 
@@ -9,9 +9,9 @@ use adagradselect::data::{MathGen, Split, Suite};
 use adagradselect::prelude::*;
 
 fn main() -> Result<()> {
-    // 1. load the AOT artifacts (compiled once by `make artifacts`)
-    let engine = Engine::load("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
+    // 1. the reference backend ships its preset catalog built in
+    let engine = ReferenceBackend::new();
+    println!("backend: {}", engine.platform());
 
     // 2. configure a run: AdaGradSelect updating 30% of blocks per step
     let mut cfg = RunConfig::preset_defaults("test-tiny");
@@ -23,10 +23,11 @@ fn main() -> Result<()> {
     // 3. train
     let mut trainer = Trainer::new(&engine, cfg)?;
     let summary = trainer.run()?;
+    let first_loss = trainer.metrics.records[0].loss;
     println!(
         "\ntrained {} steps: loss {:.3} -> {:.3} (explore {} / exploit {})",
         summary.steps,
-        trainer.metrics.records[0].loss,
+        first_loss,
         summary.tail_loss,
         summary.explore_steps,
         summary.exploit_steps,
@@ -37,6 +38,11 @@ fn main() -> Result<()> {
         (2 * trainer.preset.total_params * 2) as f64 / 1e3,
     );
     println!("selection histogram: {:?}", summary.selection_histogram);
+    assert!(
+        summary.tail_loss < first_loss,
+        "training did not reduce the loss ({first_loss} -> {})",
+        summary.tail_loss
+    );
 
     // 4. evaluate with greedy decoding on the held-out suite
     let ev = Evaluator::new(&engine, "test-tiny", 24)?;

@@ -15,7 +15,7 @@ use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{extract_answer, MathGen, Split, Suite};
 use adagradselect::eval::Evaluator;
 use adagradselect::model::ModelState;
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::{Backend, ReferenceBackend};
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
 use adagradselect::Result;
@@ -30,7 +30,7 @@ fn main() -> Result<()> {
     let warm_steps = args.u64_or("warm-steps", 60)?;
     args.finish()?;
 
-    let engine = Engine::load("artifacts")?;
+    let engine = ReferenceBackend::new();
     let state: ModelState = match checkpoint {
         Some(path) => {
             println!("loading checkpoint {path}");
@@ -50,13 +50,13 @@ fn main() -> Result<()> {
     };
 
     let ev = Evaluator::new(&engine, &preset, max_new)?;
-    let p = engine.manifest.preset(&preset)?;
+    let p = engine.manifest().preset(&preset)?;
     let batch = p.model.batch;
     let problems = MathGen::new(Suite::Gsm8kSim, Split::Eval, 7).problems(1000, requests);
 
     // serve batches, measuring per-batch latency
-    let device_blocks: Vec<xla::PjRtBuffer> =
-        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let device_blocks: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f)).collect::<Result<_>>()?;
     let tok = ev.tokenizer().clone();
     let mut latencies = Vec::new();
     let mut tokens_out = 0usize;

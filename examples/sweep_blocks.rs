@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use adagradselect::experiments::{fig3_on, ExpOptions};
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::ReferenceBackend;
 use adagradselect::util::cli::Args;
 use adagradselect::Result;
 
@@ -28,7 +28,7 @@ fn main() -> Result<()> {
 
     let pcts: Vec<f64> =
         pcts_raw.split(',').filter_map(|s| s.trim().parse().ok()).collect();
-    let engine = Engine::load("artifacts")?;
+    let engine = ReferenceBackend::new();
     let opt = ExpOptions {
         artifacts_dir: PathBuf::from("artifacts"),
         out_dir: PathBuf::from(&out),

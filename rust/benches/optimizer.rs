@@ -1,11 +1,10 @@
 //! Optimizer benchmarks: fused native AdamW throughput (the L3 hot path),
 //! parallel selective updates, and the HLO/Pallas kernel path.
 
-use std::path::PathBuf;
 use std::time::Duration;
 
 use adagradselect::optimizer::{AdamWParams, HloAdamW, SelectiveAdamW};
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::{Backend, ReferenceBackend};
 use adagradselect::util::bench::{bench, header};
 
 fn main() {
@@ -41,17 +40,17 @@ fn main() {
         opt.update_selected(&all, &mut flats, &grads, 1e-3);
     });
 
-    // HLO (Pallas kernel) path — the accelerator-side equivalent
-    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine = Engine::load(&artifacts).expect("artifacts; run `make artifacts`");
+    // kernel-entrypoint path through the Backend trait (chunked driver +
+    // upload/download overhead vs the in-place native loop)
+    let engine = ReferenceBackend::new();
     let hlo = HloAdamW::new(&engine).unwrap();
-    let n = engine.manifest.chunk_size;
+    let n = engine.manifest().chunk_size;
     let mut p = vec![0.1f32; n];
     let g = vec![0.01f32; n];
     let mut m = vec![0.0f32; n];
     let mut v = vec![0.0f32; n];
     let mut step = 0u64;
-    bench(&format!("adamw_hlo_pallas/n={n}(chunk)"), budget, || {
+    bench(&format!("adamw_kernel_entry/n={n}(chunk)"), budget, || {
         step += 1;
         hlo.update_block(&engine, &mut p, &g, &mut m, &mut v, 1e-3, step).unwrap();
     });

@@ -14,7 +14,13 @@ use adagradselect::util::rng::Rng;
 
 fn main() {
     header("selection");
-    let budget = Duration::from_millis(300);
+    // CI's bench-smoke job shrinks the measurement budget via
+    // AGSEL_BENCH_BUDGET_MS and collects JSONL rows via BENCH_JSON.
+    let budget_ms = std::env::var("AGSEL_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let budget = Duration::from_millis(budget_ms);
 
     for n_blocks in [27usize, 34, 128] {
         let mut rng = Rng::seed_from_u64(0);

@@ -1,32 +1,30 @@
 //! End-to-end step benchmarks — one per paper table/figure row:
 //!
-//! * HLO execute latency per preset and entrypoint (the Fig. 1 wallclock
-//!   numerator on this substrate);
+//! * reference-backend execute latency per preset and entrypoint (the
+//!   Fig. 1 wallclock numerator on this substrate);
 //! * full trainer step per method on qwen-sim (measured CPU wallclock +
 //!   modeled accelerator time side by side — the Fig. 1 / §5.3 source);
 //! * decode-step latency (the serving path).
+//!
+//! Runs on the default (reference) backend; point the harness at a PJRT
+//! `Engine` under `--features pjrt` for artifact timings.
 
-use std::path::PathBuf;
 use std::time::Duration;
 
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::model::ModelState;
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::{Backend, ReferenceBackend};
 use adagradselect::train::Trainer;
 use adagradselect::util::bench::{bench, header};
 
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn bench_exe(engine: &Engine, preset: &str, entry: &str, budget: Duration) {
-    let p = engine.manifest.preset(preset).unwrap().clone();
+fn bench_exe<B: Backend>(engine: &B, preset: &str, entry: &str, budget: Duration) {
+    let p = engine.manifest().preset(preset).unwrap().clone();
     let exe = match engine.load_preset_exe(preset, entry) {
         Ok(e) => e,
         Err(_) => return, // entrypoint not exported for this preset
     };
     let state = ModelState::init(&p.blocks, 0);
-    let mut blocks: Vec<xla::PjRtBuffer> =
+    let mut blocks: Vec<B::Buffer> =
         state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
     if entry.starts_with("train_step_lora") {
         // adapter inputs follow the base blocks
@@ -37,56 +35,38 @@ fn bench_exe(engine: &Engine, preset: &str, entry: &str, budget: Duration) {
     let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 50) as i32).collect();
     let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
     let tgt = engine.upload_i32(&tokens, &[b, s]).unwrap();
-    let mut args: Vec<&xla::PjRtBuffer> = blocks.iter().collect();
+    let mut args: Vec<&B::Buffer> = blocks.iter().collect();
     args.push(&tok);
     if entry != "decode_step" {
         args.push(&tgt);
     }
-    bench(&format!("hlo_execute/{preset}/{entry}"), budget, || {
-        std::hint::black_box(exe.run(&args).unwrap());
+    bench(&format!("execute/{preset}/{entry}"), budget, || {
+        std::hint::black_box(engine.execute(&exe, &args).unwrap());
     });
 }
 
 fn main() {
     header("train_step");
-    let budget = Duration::from_millis(1500);
-    let engine = Engine::load(artifacts()).expect("run `make artifacts` first");
+    let quick = std::env::var_os("AGSEL_BENCH_QUICK").is_some();
+    let budget = Duration::from_millis(if quick { 150 } else { 1500 });
+    let engine = ReferenceBackend::new();
 
-    for preset in ["test-tiny", "qwen-sim", "llama-sim", "phi-sim", "e2e"] {
+    let presets: &[&str] = if quick {
+        &["test-tiny"]
+    } else {
+        &["test-tiny", "qwen-sim", "llama-sim", "phi-sim", "e2e"]
+    };
+    for preset in presets {
         bench_exe(&engine, preset, "train_step", budget);
     }
-    bench_exe(&engine, "qwen-sim", "train_step_pallas", budget);
-    bench_exe(&engine, "qwen-sim", "train_step_lora", budget);
-    bench_exe(&engine, "qwen-sim", "eval_loss", budget);
-    bench_exe(&engine, "qwen-sim", "decode_step", budget);
-
-    // §Perf before/after: literal inputs (host->device copy of *all*
-    // params every call — the naive loop) vs device-resident buffers with
-    // dirty-block re-upload (the trainer's hot path).
-    {
-        let p = engine.manifest.preset("qwen-sim").unwrap().clone();
-        let exe = engine.load_preset_exe("qwen-sim", "train_step").unwrap();
-        let state = ModelState::init(&p.blocks, 0);
-        let (b, s) = (p.model.batch, p.model.seq_len);
-        let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 50) as i32).collect();
-        let mut lits: Vec<xla::Literal> = state
-            .flats
-            .iter()
-            .map(|f| xla::Literal::vec1(f))
-            .collect();
-        lits.push(
-            xla::Literal::vec1(&tokens).reshape(&[b as i64, s as i64]).unwrap(),
-        );
-        lits.push(
-            xla::Literal::vec1(&tokens).reshape(&[b as i64, s as i64]).unwrap(),
-        );
-        bench("hlo_execute/qwen-sim/train_step_literal_inputs", budget, || {
-            std::hint::black_box(exe.run_literals(&lits).unwrap());
-        });
-    }
+    let heavy = if quick { "test-tiny" } else { "qwen-sim" };
+    bench_exe(&engine, heavy, "train_step_pallas", budget);
+    bench_exe(&engine, heavy, "train_step_lora", budget);
+    bench_exe(&engine, heavy, "eval_loss", budget);
+    bench_exe(&engine, heavy, "decode_step", budget);
 
     // full coordinator step per method (the Fig. 1 comparison, measured)
-    println!("\n-- trainer step per method (qwen-sim): measured CPU + modeled accel --");
+    println!("\n-- trainer step per method ({heavy}): measured CPU + modeled accel --");
     for method in [
         Method::Full,
         Method::ags(10.0),
@@ -95,11 +75,10 @@ fn main() {
         Method::Lora { double_rank: false },
         Method::Lora { double_rank: true },
     ] {
-        let mut cfg = RunConfig::preset_defaults("qwen-sim");
+        let mut cfg = RunConfig::preset_defaults(heavy);
         cfg.method = method.clone();
         cfg.train.steps = u64::MAX;
         cfg.train.log_every = 0;
-        cfg.artifacts_dir = artifacts();
         let mut t = Trainer::new(&engine, cfg).unwrap();
         t.step_once().unwrap(); // warm
         let r = bench(&format!("trainer_step/{}", method.label()), budget, || {

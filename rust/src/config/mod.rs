@@ -456,8 +456,7 @@ mod tests {
     use crate::runtime::Manifest;
 
     fn preset() -> Preset {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Manifest::load(&dir).unwrap().preset("qwen-sim").unwrap().clone()
+        Manifest::builtin().preset("qwen-sim").unwrap().clone()
     }
 
     #[test]

@@ -67,12 +67,9 @@ mod tests {
     use super::*;
     use crate::data::{Split, Suite};
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     fn batcher() -> TrainBatcher {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).unwrap();
-        let tok = Tokenizer::from_spec(&m.tokenizer);
+        let tok = Tokenizer::from_spec(&Manifest::builtin().tokenizer);
         TrainBatcher::new(MathGen::new(Suite::Gsm8kSim, Split::Train, 0), tok, 4, 128)
     }
 

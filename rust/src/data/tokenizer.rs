@@ -67,11 +67,9 @@ impl Tokenizer {
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     fn tok() -> Tokenizer {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Tokenizer::from_spec(&Manifest::load(&dir).unwrap().tokenizer)
+        Tokenizer::from_spec(&Manifest::builtin().tokenizer)
     }
 
     #[test]

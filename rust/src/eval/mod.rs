@@ -3,15 +3,18 @@
 //! Mirrors the paper's setup: zero-shot, no system prompt, greedy decoding
 //! (temperature 0 ⇒ deterministic, no variance across runs). A problem
 //! counts as correct iff the generated continuation contains
-//! `#### <answer>` with the exact integer answer.
+//! `#### <answer>` with the exact integer answer. Generic over the
+//! compute [`Backend`], so the same harness scores reference-backend and
+//! PJRT checkpoints.
+
+use std::rc::Rc;
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
 use crate::data::mathgen::extract_answer;
 use crate::data::{Problem, Tokenizer};
 use crate::model::ModelState;
-use crate::runtime::{Engine, Preset};
+use crate::runtime::{Backend, Preset};
 
 #[derive(Debug, Clone)]
 pub struct EvalResult {
@@ -23,23 +26,23 @@ pub struct EvalResult {
     pub wallclock_s: f64,
 }
 
-pub struct Evaluator<'e> {
-    engine: &'e Engine,
-    exe_decode: std::rc::Rc<crate::runtime::Exe>,
-    exe_eval_loss: std::rc::Rc<crate::runtime::Exe>,
+pub struct Evaluator<'e, B: Backend> {
+    engine: &'e B,
+    exe_decode: Rc<B::Exe>,
+    exe_eval_loss: Rc<B::Exe>,
     tok: Tokenizer,
     preset: Preset,
     pub max_new_tokens: usize,
 }
 
-impl<'e> Evaluator<'e> {
-    pub fn new(engine: &'e Engine, preset_name: &str, max_new_tokens: usize) -> Result<Self> {
-        let preset = engine.manifest.preset(preset_name)?.clone();
+impl<'e, B: Backend> Evaluator<'e, B> {
+    pub fn new(engine: &'e B, preset_name: &str, max_new_tokens: usize) -> Result<Self> {
+        let preset = engine.manifest().preset(preset_name)?.clone();
         Ok(Self {
             engine,
             exe_decode: engine.load_preset_exe(preset_name, "decode_step")?,
             exe_eval_loss: engine.load_preset_exe(preset_name, "eval_loss")?,
-            tok: Tokenizer::from_spec(&engine.manifest.tokenizer),
+            tok: Tokenizer::from_spec(&engine.manifest().tokenizer),
             preset,
             max_new_tokens,
         })
@@ -49,7 +52,7 @@ impl<'e> Evaluator<'e> {
         &self.tok
     }
 
-    fn upload_state(&self, state: &ModelState) -> Result<Vec<PjRtBuffer>> {
+    pub fn upload_state(&self, state: &ModelState) -> Result<Vec<B::Buffer>> {
         state.flats.iter().map(|f| self.engine.upload_f32(f)).collect()
     }
 
@@ -58,7 +61,7 @@ impl<'e> Evaluator<'e> {
     /// Returns, per row, the generated token ids (prompt excluded).
     pub fn generate(
         &self,
-        device_blocks: &[PjRtBuffer],
+        device_blocks: &[B::Buffer],
         prompts: &[Vec<i32>],
     ) -> Result<Vec<Vec<i32>>> {
         let b = self.preset.model.batch;
@@ -86,9 +89,9 @@ impl<'e> Evaluator<'e> {
             }
             let flat: Vec<i32> = rows.iter().flatten().copied().collect();
             let tok_buf = self.engine.upload_i32(&flat, &[b, s])?;
-            let mut args: Vec<&PjRtBuffer> = device_blocks.iter().collect();
+            let mut args: Vec<&B::Buffer> = device_blocks.iter().collect();
             args.push(&tok_buf);
-            let out = self.exe_decode.run(&args)?;
+            let out = self.engine.execute(&self.exe_decode, &args)?;
             let logits = out.vec_f32(0)?; // [b, s, v]
             for i in 0..prompts.len() {
                 if done[i] {
@@ -161,10 +164,10 @@ impl<'e> Evaluator<'e> {
             let batch = batcher.next_batch();
             let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
             let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
-            let mut args: Vec<&PjRtBuffer> = device_blocks.iter().collect();
+            let mut args: Vec<&B::Buffer> = device_blocks.iter().collect();
             args.push(&tok_buf);
             args.push(&tgt_buf);
-            total += self.exe_eval_loss.run(&args)?.scalar_f32(0)?;
+            total += self.engine.execute(&self.exe_eval_loss, &args)?.scalar_f32(0)?;
         }
         Ok(total / n_batches.max(1) as f32)
     }

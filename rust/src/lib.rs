@@ -2,20 +2,24 @@
 //!
 //! Production-oriented reproduction of *"AdaGradSelect: An adaptive
 //! gradient-guided layer selection method for efficient fine-tuning of
-//! SLMs"* as a three-layer Rust + JAX + Pallas stack:
+//! SLMs"* with a pluggable compute backend:
 //!
-//! * **L3 (this crate)** — the coordinator: training loop, the
-//!   AdaGradSelect bandit (Dirichlet exploitation + ε-greedy exploration),
-//!   the custom selective AdamW with CPU↔GPU optimizer-state residency
-//!   management, data pipeline, eval harness, memory accounting, and the
-//!   experiment harness that regenerates every table/figure in the paper.
-//! * **L2 (python/compile, build-time only)** — the transformer fwd/bwd as
-//!   JAX, lowered once to HLO text (`make artifacts`).
-//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
-//!   hot-spots (flash attention, fused AdamW, grad-norm reduction).
+//! * **Coordinator (this crate)** — the training loop, the AdaGradSelect
+//!   bandit (Dirichlet exploitation + ε-greedy exploration), the custom
+//!   selective AdamW with CPU↔GPU optimizer-state residency management,
+//!   data pipeline, eval harness, memory accounting, and the experiment
+//!   harness that regenerates every table/figure in the paper.
+//! * **[`runtime::ReferenceBackend`] (default)** — a pure-Rust CPU
+//!   executor: native transformer fwd/bwd ([`model::forward`]) over the
+//!   built-in preset catalog. Builds, trains and is verified everywhere —
+//!   no Python, no artifacts, no external crates.
+//! * **[`runtime::Engine`] (cargo feature `pjrt`)** — the PJRT path that
+//!   loads HLO-text artifacts lowered once from the JAX/Pallas side
+//!   (`python/compile`, `make artifacts`) through the `xla` crate.
 //!
-//! Python never runs on the training path: the binary loads
-//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and is self-contained.
+//! Both backends implement [`runtime::Backend`]; everything above them is
+//! generic, and the backend-parity test suite holds the reference
+//! executor to the JAX-derived golden trajectories.
 
 pub mod config;
 pub mod data;
@@ -49,7 +53,9 @@ pub mod prelude {
     pub use crate::data::{MathGen, Split, Tokenizer};
     pub use crate::eval::Evaluator;
     pub use crate::model::ModelState;
+    #[cfg(feature = "pjrt")]
     pub use crate::runtime::Engine;
+    pub use crate::runtime::{Backend, ReferenceBackend};
     pub use crate::selection::SelectionStrategy;
     pub use crate::train::{Trainer, TrainSummary};
     pub use crate::Result;

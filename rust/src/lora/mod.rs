@@ -1,39 +1,40 @@
 //! LoRA coordinator support: adapter merging for evaluation.
 //!
-//! Training happens through the `train_step_lora*` artifacts (base frozen,
-//! adapter grads only). At eval time the adapters are folded into the base
-//! weights — `W' = W + (α/r)·A·B` — via the per-layer `lora_merge*` HLO
-//! artifact, after which the plain `decode_step` artifact serves the
-//! merged model. This mirrors deployment practice (merge-then-serve) and
-//! keeps a single decode path for every method.
+//! Training happens through the `train_step_lora*` entrypoints (base
+//! frozen, adapter grads only). At eval time the adapters are folded into
+//! the base weights — `W' = W + (α/r)·A·B` — via the per-layer
+//! `lora_merge*` entrypoint, after which the plain `decode_step` serves
+//! the merged model. This mirrors deployment practice (merge-then-serve)
+//! and keeps a single decode path for every method and backend.
 
 use anyhow::Result;
 
 use crate::model::ModelState;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// Merge LoRA adapters into a copy of the base state.
 ///
 /// `base` is the full block table (embed | layers | head); `lora` has one
 /// adapter block per transformer layer. Only layer blocks change.
-pub fn merge(
-    engine: &Engine,
+pub fn merge<B: Backend>(
+    engine: &B,
     preset_name: &str,
     base: &ModelState,
     lora: &ModelState,
     double_rank: bool,
 ) -> Result<ModelState> {
-    let preset = engine.manifest.preset(preset_name)?;
+    let preset = engine.manifest().preset(preset_name)?;
+    let n_layers = preset.model.n_layers;
     let entry = if double_rank { "lora_merge2" } else { "lora_merge" };
     let exe = engine.load_preset_exe(preset_name, entry)?;
 
     let mut merged = base.clone();
-    for layer in 0..preset.model.n_layers {
+    for layer in 0..n_layers {
         let block_idx = 1 + layer; // blocks: embed | layer0.. | head
         let base_buf = engine.upload_f32(&base.flats[block_idx])?;
         let lora_buf = engine.upload_f32(&lora.flats[layer])?;
-        let out = exe.run(&[&base_buf, &lora_buf])?;
-        merged.flats[block_idx] = out.vec_f32(0)?;
+        let mut out = engine.execute(&exe, &[&base_buf, &lora_buf])?;
+        merged.flats[block_idx] = out.take_vec(0)?;
     }
     Ok(merged)
 }
@@ -41,13 +42,12 @@ pub fn merge(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
+    use crate::runtime::ReferenceBackend;
 
     #[test]
     fn merge_with_zero_b_is_identity() {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let engine = Engine::load(&dir).unwrap();
-        let preset = engine.manifest.preset("test-tiny").unwrap().clone();
+        let engine = ReferenceBackend::new();
+        let preset = engine.manifest().preset("test-tiny").unwrap().clone();
         let base = ModelState::init(&preset.blocks, 1);
         // fresh adapters have B = 0 => merge must be a no-op
         let lora = ModelState::init(&preset.lora_blocks, 2);
@@ -64,9 +64,8 @@ mod tests {
 
     #[test]
     fn merge_with_nonzero_b_changes_layers_only() {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let engine = Engine::load(&dir).unwrap();
-        let preset = engine.manifest.preset("test-tiny").unwrap().clone();
+        let engine = ReferenceBackend::new();
+        let preset = engine.manifest().preset("test-tiny").unwrap().clone();
         let base = ModelState::init(&preset.blocks, 1);
         let mut lora = ModelState::init(&preset.lora_blocks, 2);
         for f in lora.flats.iter_mut() {

@@ -11,7 +11,8 @@
 //!                  (fig1 | fig3 | fig4 | table1 | ablations | all)
 //!   inspect        list presets and their artifacts
 //!
-//! common flags: --artifacts DIR (default artifacts), --out DIR (results)
+//! common flags: --backend reference|pjrt (default reference)
+//!               --artifacts DIR (pjrt only) --out DIR (results)
 //! train flags:  --preset P --method M --pct X --steps N --steps-per-epoch N
 //!               --seed S --metrics FILE --save FILE --config FILE.json
 //!               --pallas --no-eval
@@ -26,7 +27,7 @@ use adagradselect::data::{MathGen, Split, Suite};
 use adagradselect::eval::Evaluator;
 use adagradselect::experiments::{self, ExpOptions};
 use adagradselect::memory::{method_memory, pct_reduction};
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::{Backend, ReferenceBackend};
 use adagradselect::telemetry::markdown_table;
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
@@ -51,24 +52,51 @@ fn parse_method(name: &str, pct: f64) -> Result<Method> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut args = Args::parse(&argv, &["pallas", "no-eval", "help"])?;
+    let backend = args.str_or("backend", "reference");
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let out_dir = PathBuf::from(args.str_or("out", "results"));
     std::fs::create_dir_all(&out_dir).ok();
 
+    match backend.as_str() {
+        "reference" | "cpu" | "native" => {
+            dispatch(&ReferenceBackend::new(), &mut args, artifacts, out_dir)
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => dispatch(
+            &adagradselect::runtime::Engine::load(&artifacts)?,
+            &mut args,
+            artifacts.clone(),
+            out_dir,
+        ),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => Err(anyhow!(
+            "this binary was built without the `pjrt` feature; \
+             rebuild with `cargo build --features pjrt`"
+        )),
+        other => Err(anyhow!("unknown backend {other:?} (reference|pjrt)")),
+    }
+}
+
+fn dispatch<B: Backend>(
+    backend: &B,
+    args: &mut Args,
+    artifacts: PathBuf,
+    out_dir: PathBuf,
+) -> Result<()> {
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
-        "train" => cmd_train(&mut args, artifacts)?,
-        "eval" => cmd_eval(&mut args, artifacts)?,
-        "memory-report" => cmd_memory(&mut args, artifacts)?,
-        "exp" => cmd_exp(&mut args, artifacts, out_dir)?,
-        "inspect" => cmd_inspect(artifacts)?,
+        "train" => cmd_train(backend, args, artifacts)?,
+        "eval" => cmd_eval(backend, args)?,
+        "memory-report" => cmd_memory(backend, args)?,
+        "exp" => cmd_exp(backend, args, artifacts, out_dir)?,
+        "inspect" => cmd_inspect(backend)?,
         "help" | "--help" => println!("{USAGE}"),
         other => return Err(anyhow!("unknown command {other:?}; {USAGE}")),
     }
     Ok(())
 }
 
-fn cmd_train(args: &mut Args, artifacts: PathBuf) -> Result<()> {
+fn cmd_train<B: Backend>(backend: &B, args: &mut Args, artifacts: PathBuf) -> Result<()> {
     let preset = args.str_or("preset", "qwen-sim");
     let method = args.str_or("method", "adagradselect");
     let pct = args.f64_or("pct", 30.0)?;
@@ -95,10 +123,9 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> Result<()> {
     cfg.pallas_kernel = pallas;
     cfg.seed = seed;
 
-    let engine = Engine::load(&cfg.artifacts_dir)?;
-    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    let mut trainer = Trainer::new(backend, cfg.clone())?;
     let summary = trainer.run()?;
-    println!("{}", summary.to_json().to_string());
+    println!("{}", summary.to_json());
 
     let state = trainer.eval_state()?;
     if let Some(path) = save {
@@ -106,10 +133,10 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> Result<()> {
         println!("saved checkpoint to {path:?}");
     }
     if !no_eval {
-        let ev = Evaluator::new(&engine, &cfg.preset, cfg.data.max_new_tokens)?;
+        let ev = Evaluator::new(backend, &cfg.preset, cfg.data.max_new_tokens)?;
         for suite in [Suite::Gsm8kSim, Suite::MathSim] {
             let probs = MathGen::new(suite, Split::Eval, cfg.seed)
-                .problems(0, cfg.data.eval_problems as u64 as usize);
+                .problems(0, cfg.data.eval_problems);
             let res = ev.accuracy(&state, &probs)?;
             println!(
                 "{}: accuracy {:.1}% ({}/{}), format rate {:.1}%",
@@ -124,7 +151,7 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &mut Args, artifacts: PathBuf) -> Result<()> {
+fn cmd_eval<B: Backend>(backend: &B, args: &mut Args) -> Result<()> {
     let preset = args.str_or("preset", "qwen-sim");
     let checkpoint = args
         .str_opt("checkpoint")
@@ -132,9 +159,8 @@ fn cmd_eval(args: &mut Args, artifacts: PathBuf) -> Result<()> {
     let problems = args.usize_or("problems", 128)?;
     args.finish()?;
 
-    let engine = Engine::load(&artifacts)?;
     let state = adagradselect::model::ModelState::load(&checkpoint)?;
-    let ev = Evaluator::new(&engine, &preset, 40)?;
+    let ev = Evaluator::new(backend, &preset, 40)?;
     for suite in [Suite::Gsm8kSim, Suite::MathSim] {
         let probs = MathGen::new(suite, Split::Eval, 0).problems(0, problems);
         let res = ev.accuracy(&state, &probs)?;
@@ -149,13 +175,12 @@ fn cmd_eval(args: &mut Args, artifacts: PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_memory(args: &mut Args, artifacts: PathBuf) -> Result<()> {
+fn cmd_memory<B: Backend>(backend: &B, args: &mut Args) -> Result<()> {
     let preset = args.str_or("preset", "qwen-sim");
     let bpp = args.usize_or("bytes-per-param", 2)?;
     args.finish()?;
 
-    let engine = Engine::load(&artifacts)?;
-    let p = engine.manifest.preset(&preset)?;
+    let p = backend.manifest().preset(&preset)?;
     let full_opt = method_memory(p, &Method::Full, bpp).optimizer;
     let mut rows = Vec::new();
     for m in experiments::paper_methods() {
@@ -210,14 +235,19 @@ fn cmd_memory(args: &mut Args, artifacts: PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_exp(args: &mut Args, artifacts: PathBuf, out_dir: PathBuf) -> Result<()> {
+fn cmd_exp<B: Backend>(
+    backend: &B,
+    args: &mut Args,
+    artifacts: PathBuf,
+    out_dir: PathBuf,
+) -> Result<()> {
     let which = args
         .positional
         .get(1)
         .cloned()
         .ok_or_else(|| anyhow!("exp needs a target: fig1|fig3|fig4|table1|ablations|all"))?;
     let opt = ExpOptions {
-        artifacts_dir: artifacts.clone(),
+        artifacts_dir: artifacts,
         out_dir: out_dir.clone(),
         steps: args.u64_or("steps", 300)?,
         steps_per_epoch: args.u64_or("steps-per-epoch", 100)?,
@@ -233,34 +263,34 @@ fn cmd_exp(args: &mut Args, artifacts: PathBuf, out_dir: PathBuf) -> Result<()> 
         .filter_map(|s| s.trim().parse().ok())
         .collect();
 
-    let engine = Engine::load(&artifacts)?;
     match which.as_str() {
         "fig1" => {
-            experiments::fig1(&engine, &opt)?;
+            experiments::fig1(backend, &opt)?;
         }
         "fig3" => {
-            experiments::fig3(&engine, &opt, &pcts)?;
+            experiments::fig3(backend, &opt, &pcts)?;
         }
-        "fig4" => experiments::fig4(&engine, &opt)?,
+        "fig4" => experiments::fig4(backend, &opt)?,
         "table1" => {
-            experiments::table1(&engine, &opt, &preset_list)?;
+            experiments::table1(backend, &opt, &preset_list)?;
         }
         "ablations" => {
-            experiments::ablations(&engine, &opt)?;
+            experiments::ablations(backend, &opt)?;
         }
-        "all" => experiments::all(&engine, &opt, &preset_list, &pcts)?,
+        "all" => experiments::all(backend, &opt, &preset_list, &pcts)?,
         other => return Err(anyhow!("unknown experiment {other:?}")),
     }
     println!("experiment outputs written to {out_dir:?}");
     Ok(())
 }
 
-fn cmd_inspect(artifacts: PathBuf) -> Result<()> {
-    let engine = Engine::load(&artifacts)?;
-    let mut names: Vec<_> = engine.manifest.presets.keys().collect();
+fn cmd_inspect<B: Backend>(backend: &B) -> Result<()> {
+    println!("backend: {}", backend.platform());
+    let manifest = backend.manifest();
+    let mut names: Vec<_> = manifest.presets.keys().collect();
     names.sort();
     for name in names {
-        let p = &engine.manifest.presets[name];
+        let p = &manifest.presets[name];
         let mut arts: Vec<_> = p.artifacts.keys().cloned().collect();
         arts.sort();
         println!(

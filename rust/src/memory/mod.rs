@@ -135,11 +135,9 @@ pub fn method_memory(preset: &Preset, method: &Method, bytes_per_param: usize) -
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     fn preset() -> Preset {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Manifest::load(&dir).unwrap().preset("qwen-sim").unwrap().clone()
+        Manifest::builtin().preset("qwen-sim").unwrap().clone()
     }
 
     #[test]

@@ -1,0 +1,1229 @@
+//! Pure-Rust reference transformer: forward, backward, LoRA and merge.
+//!
+//! This is the compute core of `runtime::ReferenceBackend` — a native f32
+//! port of the L2 JAX model (`python/compile/model.py` with the
+//! `kernels/ref.py` attention): pre-RMSNorm, rotary attention, SwiGLU MLP,
+//! untied LM head, masked cross-entropy, and a hand-derived backward pass
+//! that emits one flat gradient vector per paper-block. LoRA adapters
+//! (`W + 2·A·B` on every projection) are supported on the same code path
+//! with the base weights frozen, mirroring `make_lora_train_step`.
+//!
+//! Everything operates on row-major `[rows, cols]` slices; matmuls are
+//! parallelized across output rows via `util::par` once they are large
+//! enough to amortize the fan-out. Gradient correctness is pinned three
+//! ways: finite-difference checks in this module, causality/shape tests in
+//! `tests/integration_runtime.rs`, and golden trajectories lowered from
+//! the JAX reference in `tests/backend_parity.rs`.
+
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{BlockSpec, ModelSpec};
+use crate::util::par::par_for_each_mut;
+
+/// LoRA output scale: `alpha / r` with `alpha = 2r`.
+pub const LORA_SCALE: f32 = 2.0;
+
+/// Below this many FLOPs a matmul runs serially (thread fan-out costs
+/// more than it saves).
+const PAR_FLOPS_MIN: usize = 1 << 16;
+
+// ---------------------------------------------------------------------------
+// tensor lookup inside block-flat vectors
+// ---------------------------------------------------------------------------
+
+fn tensor_spec<'a>(block: &'a BlockSpec, name: &str) -> Result<&'a crate::runtime::TensorSpec> {
+    block
+        .tensors
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| anyhow!("block {} has no tensor {name:?}", block.name))
+}
+
+fn tensor<'a>(flat: &'a [f32], block: &BlockSpec, name: &str) -> Result<&'a [f32]> {
+    let t = tensor_spec(block, name)?;
+    let n: usize = t.shape.iter().product();
+    flat.get(t.offset..t.offset + n)
+        .ok_or_else(|| anyhow!("block {} flat too short for tensor {name:?}", block.name))
+}
+
+fn write_tensor(flat: &mut [f32], block: &BlockSpec, name: &str, data: &[f32]) -> Result<()> {
+    let t = tensor_spec(block, name)?;
+    let n: usize = t.shape.iter().product();
+    if data.len() != n {
+        return Err(anyhow!(
+            "gradient size {} != tensor {name:?} numel {n} in block {}",
+            data.len(),
+            block.name
+        ));
+    }
+    flat[t.offset..t.offset + n].copy_from_slice(data);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// matmul kernels (row-parallel)
+// ---------------------------------------------------------------------------
+
+fn par_over_rows(out: &mut [f32], cols: usize, flops: usize, f: impl Fn(usize, &mut [f32]) + Sync) {
+    if flops >= PAR_FLOPS_MIN && out.len() > cols {
+        let mut rows: Vec<(usize, &mut [f32])> = out.chunks_mut(cols).enumerate().collect();
+        par_for_each_mut(&mut rows, |_, job| f(job.0, &mut *job.1));
+    } else {
+        for (i, row) in out.chunks_mut(cols).enumerate() {
+            f(i, row);
+        }
+    }
+}
+
+/// `out[m,n] += scale * a[m,k] @ b[k,n]`
+fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, scale: f32) {
+    assert_eq!(a.len(), m * k, "matmul_acc: a shape");
+    assert_eq!(b.len(), k * n, "matmul_acc: b shape");
+    assert_eq!(out.len(), m * n, "matmul_acc: out shape");
+    par_over_rows(out, n, m * k * n, |i, orow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (p, &av) in arow.iter().enumerate() {
+            let av = av * scale;
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    });
+}
+
+/// `a[m,k] @ b[k,n]`
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_acc(&mut out, a, b, m, k, n, 1.0);
+    out
+}
+
+/// `scale * aᵀ[k,m] @ dy[m,n]` — the weight-gradient product `xᵀ·dy`.
+fn matmul_ta(a: &[f32], dy: &[f32], m: usize, k: usize, n: usize, scale: f32) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_ta: a shape");
+    assert_eq!(dy.len(), m * n, "matmul_ta: dy shape");
+    let mut out = vec![0.0f32; k * n];
+    par_over_rows(&mut out, n, m * k * n, |j, orow| {
+        for i in 0..m {
+            let av = a[i * k + j] * scale;
+            let dyrow = &dy[i * n..(i + 1) * n];
+            for (o, &dv) in orow.iter_mut().zip(dyrow) {
+                *o += av * dv;
+            }
+        }
+    });
+    out
+}
+
+/// `out[m,k] += scale * dy[m,n] @ wᵀ` with `w[k,n]` — the input-gradient
+/// product `dy·Wᵀ`.
+fn matmul_tb_acc(out: &mut [f32], dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, scale: f32) {
+    assert_eq!(dy.len(), m * n, "matmul_tb_acc: dy shape");
+    assert_eq!(w.len(), k * n, "matmul_tb_acc: w shape");
+    assert_eq!(out.len(), m * k, "matmul_tb_acc: out shape");
+    par_over_rows(out, k, m * k * n, |i, orow| {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[j * n..(j + 1) * n];
+            let mut dot = 0.0f32;
+            for (&dv, &wv) in dyrow.iter().zip(wrow) {
+                dot += dv * wv;
+            }
+            *o += scale * dot;
+        }
+    });
+}
+
+fn matmul_tb(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, scale: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    matmul_tb_acc(&mut out, dy, w, m, k, n, scale);
+    out
+}
+
+fn add_into(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// normalization, rotary embedding, attention, activations
+// ---------------------------------------------------------------------------
+
+/// RMSNorm forward: `y = x * rsqrt(mean(x²) + eps) * w`. Returns `(y,
+/// inv)` where `inv[r]` is the per-row reciprocal RMS cached for backward.
+fn rmsnorm_fwd(x: &[f32], w: &[f32], eps: f32, rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let iv = 1.0 / (ms + eps).sqrt();
+        inv[r] = iv;
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * iv * w[j];
+        }
+    }
+    (y, inv)
+}
+
+/// RMSNorm backward. `dw` (when given) receives `Σ_r dy·x·inv` per
+/// coordinate; the return value is `dx`.
+fn rmsnorm_bwd(
+    x: &[f32],
+    w: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    mut dw: Option<&mut [f32]>,
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let iv = inv[r];
+        let mut s = 0.0f32;
+        for j in 0..d {
+            s += dyr[j] * w[j] * xr[j];
+        }
+        let c = iv * iv * iv * s / d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            dxr[j] = dyr[j] * w[j] * iv - xr[j] * c;
+        }
+        if let Some(dw) = dw.as_deref_mut() {
+            for j in 0..d {
+                dw[j] += dyr[j] * xr[j] * iv;
+            }
+        }
+    }
+    dx
+}
+
+/// Precomputed rotary tables: `cos/sin[pos * half + j]` for
+/// `angle = pos · theta^(−j/half)`.
+struct RopeTables {
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    half: usize,
+}
+
+fn rope_tables(s: usize, d_head: usize, theta: f32) -> RopeTables {
+    assert!(d_head % 2 == 0, "rotary embedding needs an even head dim");
+    let half = d_head / 2;
+    let freqs: Vec<f32> =
+        (0..half).map(|j| theta.powf(-(j as f32) / half as f32)).collect();
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    for pos in 0..s {
+        for j in 0..half {
+            let angle = pos as f32 * freqs[j];
+            cos[pos * half + j] = angle.cos();
+            sin[pos * half + j] = angle.sin();
+        }
+    }
+    RopeTables { cos, sin, half }
+}
+
+/// Apply (or, with `inverse`, transpose-apply) rotary embedding in place
+/// on `x: [b·s, n_heads·d_head]`.
+fn rope_apply(x: &mut [f32], s: usize, n_heads: usize, d_head: usize, t: &RopeTables, inverse: bool) {
+    let d = n_heads * d_head;
+    let half = t.half;
+    let rows = x.len() / d;
+    for row in 0..rows {
+        let pos = row % s;
+        for h in 0..n_heads {
+            let off = row * d + h * d_head;
+            for j in 0..half {
+                let c = t.cos[pos * half + j];
+                let sn = if inverse { -t.sin[pos * half + j] } else { t.sin[pos * half + j] };
+                let x1 = x[off + j];
+                let x2 = x[off + half + j];
+                x[off + j] = x1 * c - x2 * sn;
+                x[off + half + j] = x1 * sn + x2 * c;
+            }
+        }
+    }
+}
+
+/// Causal softmax attention over `[b·s, d]` head-concatenated q/k/v
+/// (q and k already rotary-encoded). Returns the head-concatenated
+/// context `[b·s, d]` and the cached probabilities `[b, h, s, s]`
+/// (strictly lower-triangular rows; masked entries are exactly 0).
+fn attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    s: usize,
+    n_heads: usize,
+    d_head: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = n_heads * d_head;
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut att = vec![0.0f32; b * s * d];
+    let mut probs = vec![0.0f32; b * n_heads * s * s];
+
+    let mut jobs: Vec<(usize, &mut [f32], &mut [f32])> = att
+        .chunks_mut(s * d)
+        .zip(probs.chunks_mut(n_heads * s * s))
+        .enumerate()
+        .map(|(bi, (a, p))| (bi, a, p))
+        .collect();
+    par_for_each_mut(&mut jobs, |_, job| {
+        let bi = job.0;
+        let att_b: &mut [f32] = &mut *job.1;
+        let probs_b: &mut [f32] = &mut *job.2;
+        let base = bi * s;
+        for h in 0..n_heads {
+            let off = h * d_head;
+            for i in 0..s {
+                let qrow = &q[(base + i) * d + off..(base + i) * d + off + d_head];
+                let prow = &mut probs_b[(h * s + i) * s..(h * s + i) * s + s];
+                let mut maxv = f32::NEG_INFINITY;
+                for (j, pj) in prow.iter_mut().enumerate().take(i + 1) {
+                    let krow = &k[(base + j) * d + off..(base + j) * d + off + d_head];
+                    let mut dot = 0.0f32;
+                    for t in 0..d_head {
+                        dot += qrow[t] * krow[t];
+                    }
+                    let logit = dot * scale;
+                    *pj = logit;
+                    if logit > maxv {
+                        maxv = logit;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for pj in prow.iter_mut().take(i + 1) {
+                    let e = (*pj - maxv).exp();
+                    *pj = e;
+                    sum += e;
+                }
+                let isum = 1.0 / sum;
+                for pj in prow.iter_mut().take(i + 1) {
+                    *pj *= isum;
+                }
+                let orow = &mut att_b[i * d + off..i * d + off + d_head];
+                for (j, &pj) in prow.iter().enumerate().take(i + 1) {
+                    let vrow = &v[(base + j) * d + off..(base + j) * d + off + d_head];
+                    for t in 0..d_head {
+                        orow[t] += pj * vrow[t];
+                    }
+                }
+            }
+        }
+    });
+    (att, probs)
+}
+
+/// Backward of [`attention_fwd`]: gradients w.r.t. the rotary-encoded q/k
+/// and w.r.t. v, all `[b·s, d]`.
+#[allow(clippy::too_many_arguments)]
+fn attention_bwd(
+    d_att: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    b: usize,
+    s: usize,
+    n_heads: usize,
+    d_head: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d = n_heads * d_head;
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut dq = vec![0.0f32; b * s * d];
+    let mut dk = vec![0.0f32; b * s * d];
+    let mut dv = vec![0.0f32; b * s * d];
+
+    let mut jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> = dq
+        .chunks_mut(s * d)
+        .zip(dk.chunks_mut(s * d))
+        .zip(dv.chunks_mut(s * d))
+        .enumerate()
+        .map(|(bi, ((a, c), e))| (bi, a, c, e))
+        .collect();
+    par_for_each_mut(&mut jobs, |_, job| {
+        let bi = job.0;
+        let dq_b: &mut [f32] = &mut *job.1;
+        let dk_b: &mut [f32] = &mut *job.2;
+        let dv_b: &mut [f32] = &mut *job.3;
+        let base = bi * s;
+        let mut dp = vec![0.0f32; s];
+        for h in 0..n_heads {
+            let off = h * d_head;
+            for i in 0..s {
+                let dorow = &d_att[(base + i) * d + off..(base + i) * d + off + d_head];
+                let prow = &probs[((bi * n_heads + h) * s + i) * s..((bi * n_heads + h) * s + i) * s + s];
+                // dv[j] += p[i,j]·do[i];  dp[j] = do[i]·v[j]
+                for j in 0..=i {
+                    let vrow = &v[(base + j) * d + off..(base + j) * d + off + d_head];
+                    let dvrow = &mut dv_b[j * d + off..j * d + off + d_head];
+                    let pj = prow[j];
+                    let mut dot = 0.0f32;
+                    for t in 0..d_head {
+                        dot += dorow[t] * vrow[t];
+                        dvrow[t] += pj * dorow[t];
+                    }
+                    dp[j] = dot;
+                }
+                // softmax backward on the masked row
+                let mut dot_p = 0.0f32;
+                for j in 0..=i {
+                    dot_p += prow[j] * dp[j];
+                }
+                let qrow = &q[(base + i) * d + off..(base + i) * d + off + d_head];
+                let dqrow_base = i * d + off;
+                for j in 0..=i {
+                    let dl = prow[j] * (dp[j] - dot_p) * scale;
+                    let krow = &k[(base + j) * d + off..(base + j) * d + off + d_head];
+                    let dkrow = &mut dk_b[j * d + off..j * d + off + d_head];
+                    for t in 0..d_head {
+                        dq_b[dqrow_base + t] += dl * krow[t];
+                        dkrow[t] += dl * qrow[t];
+                    }
+                }
+            }
+        }
+    });
+    (dq, dk, dv)
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+#[inline]
+fn silu_grad(x: f32) -> f32 {
+    let sg = sigmoid(x);
+    sg * (1.0 + x * (1.0 - sg))
+}
+
+// ---------------------------------------------------------------------------
+// masked cross-entropy
+// ---------------------------------------------------------------------------
+
+/// Mean cross-entropy over non-pad target positions, plus `dL/dlogits`.
+fn masked_ce(
+    logits: &[f32],
+    targets: &[i32],
+    rows: usize,
+    vocab: usize,
+    pad: i32,
+) -> Result<(f32, Vec<f32>)> {
+    let mut dlogits = vec![0.0f32; rows * vocab];
+    let n_mask = targets.iter().filter(|&&t| t != pad).count().max(1) as f32;
+    let inv = 1.0 / n_mask;
+    let mut loss_sum = 0.0f64;
+    for r in 0..rows {
+        let t = targets[r];
+        if t == pad {
+            continue; // gradient row stays zero
+        }
+        if t < 0 || t as usize >= vocab {
+            return Err(anyhow!("target id {t} out of vocab range 0..{vocab}"));
+        }
+        let lrow = &logits[r * vocab..(r + 1) * vocab];
+        let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &x in lrow {
+            sum += (x - maxv).exp();
+        }
+        let logz = maxv + sum.ln();
+        loss_sum -= (lrow[t as usize] - logz) as f64;
+        let drow = &mut dlogits[r * vocab..(r + 1) * vocab];
+        for (dj, &x) in drow.iter_mut().zip(lrow) {
+            *dj = (x - maxv).exp() / sum * inv;
+        }
+        drow[t as usize] -= inv;
+    }
+    Ok(((loss_sum / n_mask as f64) as f32, dlogits))
+}
+
+// ---------------------------------------------------------------------------
+// layer parameters / adapters / caches
+// ---------------------------------------------------------------------------
+
+/// Projection order used throughout: q, k, v, o, gate, up, down.
+const PROJS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+struct LayerParams<'a> {
+    ln1: &'a [f32],
+    ln2: &'a [f32],
+    /// Weight matrices in [`PROJS`] order, with `(d_in, d_out)`.
+    w: [(&'a [f32], usize, usize); 7],
+}
+
+fn layer_params<'a>(flat: &'a [f32], spec: &BlockSpec) -> Result<LayerParams<'a>> {
+    let mut w = [(&[] as &[f32], 0usize, 0usize); 7];
+    for (slot, name) in PROJS.iter().enumerate() {
+        let t = tensor_spec(spec, name)?;
+        if t.shape.len() != 2 {
+            return Err(anyhow!("tensor {name} is not a matrix"));
+        }
+        w[slot] = (tensor(flat, spec, name)?, t.shape[0], t.shape[1]);
+    }
+    Ok(LayerParams { ln1: tensor(flat, spec, "ln1")?, ln2: tensor(flat, spec, "ln2")?, w })
+}
+
+/// One layer's LoRA adapters: `(A, B, rank)` per projection.
+struct LoraParams<'a> {
+    ab: [(&'a [f32], &'a [f32], usize); 7],
+}
+
+fn lora_params<'a>(flat: &'a [f32], spec: &BlockSpec) -> Result<LoraParams<'a>> {
+    let mut ab = [(&[] as &[f32], &[] as &[f32], 0usize); 7];
+    for (slot, name) in PROJS.iter().enumerate() {
+        let a_spec = tensor_spec(spec, &format!("{name}_a"))?;
+        let rank = *a_spec
+            .shape
+            .get(1)
+            .ok_or_else(|| anyhow!("adapter {name}_a is not a matrix"))?;
+        ab[slot] = (
+            tensor(flat, spec, &format!("{name}_a"))?,
+            tensor(flat, spec, &format!("{name}_b"))?,
+            rank,
+        );
+    }
+    Ok(LoraParams { ab })
+}
+
+/// Forward activations cached for the backward pass (one per layer).
+struct LayerCache {
+    h_in: Vec<f32>,
+    x1: Vec<f32>,
+    inv1: Vec<f32>,
+    qr: Vec<f32>,
+    kr: Vec<f32>,
+    v: Vec<f32>,
+    probs: Vec<f32>,
+    att: Vec<f32>,
+    h_mid: Vec<f32>,
+    x2: Vec<f32>,
+    inv2: Vec<f32>,
+    gp: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+    /// `x @ A` per projection when adapters are present.
+    xa: [Option<Vec<f32>>; 7],
+}
+
+/// `y = x@W (+ 2·(x@A)@B)`; returns `(y, x@A)`.
+fn proj_fwd(
+    x: &[f32],
+    w: (&[f32], usize, usize),
+    lora: Option<(&[f32], &[f32], usize)>,
+    m: usize,
+) -> (Vec<f32>, Option<Vec<f32>>) {
+    let (wm, d_in, d_out) = w;
+    let mut y = matmul(x, wm, m, d_in, d_out);
+    match lora {
+        None => (y, None),
+        Some((a, bm, r)) => {
+            let xa = matmul(x, a, m, d_in, r);
+            matmul_acc(&mut y, &xa, bm, m, r, d_out, LORA_SCALE);
+            (y, Some(xa))
+        }
+    }
+}
+
+/// Backward through [`proj_fwd`]: accumulates `dx`, optionally emits the
+/// base weight gradient and the adapter gradients.
+#[allow(clippy::too_many_arguments)]
+fn proj_bwd(
+    dy: &[f32],
+    x: &[f32],
+    xa: Option<&[f32]>,
+    w: (&[f32], usize, usize),
+    lora: Option<(&[f32], &[f32], usize)>,
+    m: usize,
+    dx: &mut [f32],
+    dw: Option<&mut [f32]>,
+    dab: Option<(&mut [f32], &mut [f32])>,
+) {
+    let (wm, d_in, d_out) = w;
+    matmul_tb_acc(dx, dy, wm, m, d_in, d_out, 1.0);
+    if let Some(dw) = dw {
+        dw.copy_from_slice(&matmul_ta(x, dy, m, d_in, d_out, 1.0));
+    }
+    if let (Some((a, bm, r)), Some(xa), Some((da, db))) = (lora, xa, dab) {
+        // d(xa) = 2 · dy @ Bᵀ; dx += d(xa) @ Aᵀ; dA = xᵀ d(xa); dB = 2·xaᵀ dy
+        let d_xa = matmul_tb(dy, bm, m, r, d_out, LORA_SCALE);
+        matmul_tb_acc(dx, &d_xa, a, m, d_in, r, 1.0);
+        da.copy_from_slice(&matmul_ta(x, &d_xa, m, d_in, r, 1.0));
+        db.copy_from_slice(&matmul_ta(xa, dy, m, r, d_out, LORA_SCALE));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layer forward / backward
+// ---------------------------------------------------------------------------
+
+struct Dims {
+    b: usize,
+    s: usize,
+    d: usize,
+    n_heads: usize,
+    d_head: usize,
+    d_ff: usize,
+    vocab: usize,
+    norm_eps: f32,
+}
+
+impl Dims {
+    fn from_spec(m: &ModelSpec) -> Self {
+        Self {
+            b: m.batch,
+            s: m.seq_len,
+            d: m.d_model,
+            n_heads: m.n_heads,
+            d_head: m.d_head,
+            d_ff: m.d_ff,
+            vocab: m.vocab,
+            norm_eps: m.norm_eps,
+        }
+    }
+
+    fn rows(&self) -> usize {
+        self.b * self.s
+    }
+}
+
+fn layer_fwd(
+    h: Vec<f32>,
+    p: &LayerParams,
+    lora: Option<&LoraParams>,
+    dims: &Dims,
+    rope: &RopeTables,
+    want_cache: bool,
+) -> (Vec<f32>, Option<LayerCache>) {
+    let m = dims.rows();
+    let (d, f) = (dims.d, dims.d_ff);
+    let lt = |slot: usize| lora.map(|l| l.ab[slot]);
+
+    let (x1, inv1) = rmsnorm_fwd(&h, p.ln1, dims.norm_eps, m, d);
+    let (mut q, xa_q) = proj_fwd(&x1, p.w[0], lt(0), m);
+    let (mut k, xa_k) = proj_fwd(&x1, p.w[1], lt(1), m);
+    let (v, xa_v) = proj_fwd(&x1, p.w[2], lt(2), m);
+    rope_apply(&mut q, dims.s, dims.n_heads, dims.d_head, rope, false);
+    rope_apply(&mut k, dims.s, dims.n_heads, dims.d_head, rope, false);
+    let (att, probs) = attention_fwd(&q, &k, &v, dims.b, dims.s, dims.n_heads, dims.d_head);
+    let (attn_out, xa_o) = proj_fwd(&att, p.w[3], lt(3), m);
+
+    // keep the exact layer input for the backward pass (inv1 was computed
+    // from it; reconstructing it from h_mid would differ by rounding)
+    let h_in = if want_cache { Some(h.clone()) } else { None };
+    let mut h_mid = h;
+    add_into(&mut h_mid, &attn_out);
+    let (x2, inv2) = rmsnorm_fwd(&h_mid, p.ln2, dims.norm_eps, m, d);
+    let (gp, xa_g) = proj_fwd(&x2, p.w[4], lt(4), m);
+    let (up, xa_u) = proj_fwd(&x2, p.w[5], lt(5), m);
+    let mut act = vec![0.0f32; m * f];
+    for i in 0..m * f {
+        act[i] = silu(gp[i]) * up[i];
+    }
+    let (mlp_out, xa_d) = proj_fwd(&act, p.w[6], lt(6), m);
+
+    if !want_cache {
+        let mut h_out = h_mid;
+        add_into(&mut h_out, &mlp_out);
+        return (h_out, None);
+    }
+    let mut h_out = h_mid.clone();
+    add_into(&mut h_out, &mlp_out);
+    let cache = LayerCache {
+        h_in: h_in.expect("cached when want_cache"),
+        x1,
+        inv1,
+        qr: q,
+        kr: k,
+        v,
+        probs,
+        att,
+        h_mid,
+        x2,
+        inv2,
+        gp,
+        up,
+        act,
+        xa: [xa_q, xa_k, xa_v, xa_o, xa_g, xa_u, xa_d],
+    };
+    (h_out, Some(cache))
+}
+
+/// Targets for one layer's gradients: the base block flat and/or the
+/// adapter block flat.
+struct LayerGrads<'a> {
+    base: Option<(&'a mut [f32], &'a BlockSpec)>,
+    lora: Option<(&'a mut [f32], &'a BlockSpec)>,
+}
+
+fn layer_bwd(
+    dh_out: Vec<f32>,
+    c: &LayerCache,
+    p: &LayerParams,
+    lora: Option<&LoraParams>,
+    dims: &Dims,
+    rope: &RopeTables,
+    grads: &mut LayerGrads,
+) -> Result<Vec<f32>> {
+    let m = dims.rows();
+    let (d, f) = (dims.d, dims.d_ff);
+    let lt = |slot: usize| lora.map(|l| l.ab[slot]);
+
+    // Scratch buffers for per-projection weight/adapter grads, then copied
+    // into the flat gradient vectors (keeps the borrow story simple).
+    let mut dw_buf: Vec<f32> = Vec::new();
+    let mut da_buf: Vec<f32> = Vec::new();
+    let mut db_buf: Vec<f32> = Vec::new();
+    let want_base = grads.base.is_some();
+    let want_lora = grads.lora.is_some();
+
+    // One projection backward, routing grads to the right flats.
+    macro_rules! back_proj {
+        ($slot:expr, $dy:expr, $x:expr, $dx:expr) => {{
+            let (wm, d_in, d_out) = p.w[$slot];
+            let lo = lt($slot);
+            if want_base {
+                dw_buf.resize(d_in * d_out, 0.0);
+            }
+            if want_lora {
+                let r = lo.map(|l| l.2).unwrap_or(0);
+                da_buf.resize(d_in * r, 0.0);
+                db_buf.resize(r * d_out, 0.0);
+            }
+            proj_bwd(
+                $dy,
+                $x,
+                c.xa[$slot].as_deref(),
+                (wm, d_in, d_out),
+                lo,
+                m,
+                $dx,
+                if want_base { Some(&mut dw_buf[..]) } else { None },
+                if want_lora { Some((&mut da_buf[..], &mut db_buf[..])) } else { None },
+            );
+            if let Some((flat, spec)) = grads.base.as_mut() {
+                write_tensor(flat, spec, PROJS[$slot], &dw_buf)?;
+            }
+            if let Some((flat, spec)) = grads.lora.as_mut() {
+                write_tensor(flat, spec, &format!("{}_a", PROJS[$slot]), &da_buf)?;
+                write_tensor(flat, spec, &format!("{}_b", PROJS[$slot]), &db_buf)?;
+            }
+        }};
+    }
+
+    // ---- MLP branch ----
+    let mut d_act = vec![0.0f32; m * f];
+    back_proj!(6, &dh_out, &c.act, &mut d_act);
+    let mut d_gp = vec![0.0f32; m * f];
+    let mut d_up = vec![0.0f32; m * f];
+    for i in 0..m * f {
+        d_up[i] = d_act[i] * silu(c.gp[i]);
+        d_gp[i] = d_act[i] * c.up[i] * silu_grad(c.gp[i]);
+    }
+    let mut dx2 = vec![0.0f32; m * d];
+    back_proj!(4, &d_gp, &c.x2, &mut dx2);
+    back_proj!(5, &d_up, &c.x2, &mut dx2);
+    let mut ln_buf = vec![0.0f32; d];
+    let dh_norm2 = rmsnorm_bwd(
+        &c.h_mid,
+        p.ln2,
+        &c.inv2,
+        &dx2,
+        m,
+        d,
+        if want_base { Some(&mut ln_buf[..]) } else { None },
+    );
+    if let Some((flat, spec)) = grads.base.as_mut() {
+        write_tensor(flat, spec, "ln2", &ln_buf)?;
+    }
+    let mut dh_mid = dh_out;
+    add_into(&mut dh_mid, &dh_norm2);
+
+    // ---- attention branch ----
+    let mut d_att = vec![0.0f32; m * d];
+    back_proj!(3, &dh_mid, &c.att, &mut d_att);
+    let (mut dq, mut dk, dv) =
+        attention_bwd(&d_att, &c.qr, &c.kr, &c.v, &c.probs, dims.b, dims.s, dims.n_heads, dims.d_head);
+    rope_apply(&mut dq, dims.s, dims.n_heads, dims.d_head, rope, true);
+    rope_apply(&mut dk, dims.s, dims.n_heads, dims.d_head, rope, true);
+    let mut dx1 = vec![0.0f32; m * d];
+    back_proj!(0, &dq, &c.x1, &mut dx1);
+    back_proj!(1, &dk, &c.x1, &mut dx1);
+    back_proj!(2, &dv, &c.x1, &mut dx1);
+    ln_buf.fill(0.0);
+    let dh_norm1 = rmsnorm_bwd(
+        &c.h_in,
+        p.ln1,
+        &c.inv1,
+        &dx1,
+        m,
+        d,
+        if want_base { Some(&mut ln_buf[..]) } else { None },
+    );
+    if let Some((flat, spec)) = grads.base.as_mut() {
+        write_tensor(flat, spec, "ln1", &ln_buf)?;
+    }
+    let mut dh_in = dh_mid;
+    add_into(&mut dh_in, &dh_norm1);
+    Ok(dh_in)
+}
+
+// ---------------------------------------------------------------------------
+// public entrypoints
+// ---------------------------------------------------------------------------
+
+fn check_shapes(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+) -> Result<()> {
+    if flats.len() != blocks.len() {
+        return Err(anyhow!(
+            "expected {} block inputs, got {}",
+            blocks.len(),
+            flats.len()
+        ));
+    }
+    for (b, f) in blocks.iter().zip(flats) {
+        if f.len() != b.numel {
+            return Err(anyhow!(
+                "block {} expects {} elements, got {}",
+                b.name,
+                b.numel,
+                f.len()
+            ));
+        }
+    }
+    let rows = spec.batch * spec.seq_len;
+    if tokens.len() != rows {
+        return Err(anyhow!(
+            "token matrix has {} elements, expected batch*seq = {rows}",
+            tokens.len()
+        ));
+    }
+    Ok(())
+}
+
+fn embed_fwd(emb: &[f32], tokens: &[i32], d: usize, vocab: usize) -> Result<Vec<f32>> {
+    let mut h = vec![0.0f32; tokens.len() * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        if t < 0 || t as usize >= vocab {
+            return Err(anyhow!("token id {t} out of vocab range 0..{vocab}"));
+        }
+        let src = &emb[t as usize * d..(t as usize + 1) * d];
+        h[r * d..(r + 1) * d].copy_from_slice(src);
+    }
+    Ok(h)
+}
+
+/// Shared forward: returns final-hidden `h`, plus caches when training.
+struct ForwardOut {
+    h: Vec<f32>,
+    caches: Vec<LayerCache>,
+}
+
+fn forward(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    lora: Option<(&[BlockSpec], &[&[f32]])>,
+    tokens: &[i32],
+    want_cache: bool,
+) -> Result<ForwardOut> {
+    check_shapes(spec, blocks, flats, tokens)?;
+    let dims = Dims::from_spec(spec);
+    let rope = rope_tables(dims.s, dims.d_head, spec.rope_theta);
+    let emb = tensor(flats[0], &blocks[0], "tok_emb")?;
+    let mut h = embed_fwd(emb, tokens, dims.d, dims.vocab)?;
+    let mut caches = Vec::new();
+    for l in 0..spec.n_layers {
+        let p = layer_params(flats[1 + l], &blocks[1 + l])?;
+        let lp = match lora {
+            Some((lspecs, lflats)) => Some(lora_params(lflats[l], &lspecs[l])?),
+            None => None,
+        };
+        let (h_out, cache) = layer_fwd(h, &p, lp.as_ref(), &dims, &rope, want_cache);
+        h = h_out;
+        if let Some(c) = cache {
+            caches.push(c);
+        }
+    }
+    Ok(ForwardOut { h, caches })
+}
+
+fn head_logits(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    h: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let dims = Dims::from_spec(spec);
+    let m = dims.rows();
+    let head_spec = blocks.last().expect("blocks nonempty");
+    let head_flat = flats[flats.len() - 1];
+    let ln_f = tensor(head_flat, head_spec, "ln_f")?;
+    let w_out = tensor(head_flat, head_spec, "w_out")?;
+    let (xf, invf) = rmsnorm_fwd(h, ln_f, dims.norm_eps, m, dims.d);
+    let logits = matmul(&xf, w_out, m, dims.d, dims.vocab);
+    Ok((logits, xf, invf))
+}
+
+/// Full train step: `(loss, one gradient per block)`. Mirrors the
+/// `train_step` HLO artifact's output tuple.
+pub fn train_step(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    run_train_step(spec, blocks, flats, None, tokens, targets, pad)
+}
+
+/// LoRA train step: base blocks frozen, gradients only for the adapter
+/// blocks. Mirrors the `train_step_lora*` artifacts.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_lora(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    lora_blocks: &[BlockSpec],
+    base_flats: &[&[f32]],
+    lora_flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    if lora_flats.len() != lora_blocks.len() {
+        return Err(anyhow!(
+            "expected {} adapter inputs, got {}",
+            lora_blocks.len(),
+            lora_flats.len()
+        ));
+    }
+    run_train_step(
+        spec,
+        blocks,
+        base_flats,
+        Some((lora_blocks, lora_flats)),
+        tokens,
+        targets,
+        pad,
+    )
+}
+
+fn run_train_step(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    lora: Option<(&[BlockSpec], &[&[f32]])>,
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let dims = Dims::from_spec(spec);
+    let m = dims.rows();
+    if targets.len() != tokens.len() {
+        return Err(anyhow!("tokens/targets length mismatch"));
+    }
+    let fwd = forward(spec, blocks, flats, lora, tokens, true)?;
+    let (logits, xf, invf) = head_logits(spec, blocks, flats, &fwd.h)?;
+    let (loss, dlogits) = masked_ce(&logits, targets, m, dims.vocab, pad)?;
+
+    let want_base = lora.is_none();
+    let rope = rope_tables(dims.s, dims.d_head, spec.rope_theta);
+    let mut grads: Vec<Vec<f32>> = match lora {
+        None => blocks.iter().map(|b| vec![0.0f32; b.numel]).collect(),
+        Some((lb, _)) => lb.iter().map(|b| vec![0.0f32; b.numel]).collect(),
+    };
+
+    // ---- head ----
+    let head_spec = blocks.last().expect("blocks nonempty");
+    let head_flat = flats[flats.len() - 1];
+    let ln_f = tensor(head_flat, head_spec, "ln_f")?;
+    let w_out = tensor(head_flat, head_spec, "w_out")?;
+    let dxf = matmul_tb(&dlogits, w_out, m, dims.d, dims.vocab, 1.0);
+    let mut ln_buf = vec![0.0f32; dims.d];
+    let mut dh = rmsnorm_bwd(
+        &fwd.h,
+        ln_f,
+        &invf,
+        &dxf,
+        m,
+        dims.d,
+        if want_base { Some(&mut ln_buf[..]) } else { None },
+    );
+    if want_base {
+        let d_w_out = matmul_ta(&xf, &dlogits, m, dims.d, dims.vocab, 1.0);
+        let last = grads.len() - 1;
+        write_tensor(&mut grads[last], head_spec, "w_out", &d_w_out)?;
+        write_tensor(&mut grads[last], head_spec, "ln_f", &ln_buf)?;
+    }
+
+    // ---- layers, top to bottom ----
+    for l in (0..spec.n_layers).rev() {
+        let p = layer_params(flats[1 + l], &blocks[1 + l])?;
+        let lp = match lora {
+            Some((lspecs, lflats)) => Some(lora_params(lflats[l], &lspecs[l])?),
+            None => None,
+        };
+        // borrow the right grads entry mutably for this layer
+        let mut lg = if want_base {
+            LayerGrads { base: Some((grads[1 + l].as_mut_slice(), &blocks[1 + l])), lora: None }
+        } else {
+            let (lspecs, _) = lora.expect("lora present");
+            LayerGrads { base: None, lora: Some((grads[l].as_mut_slice(), &lspecs[l])) }
+        };
+        dh = layer_bwd(dh, &fwd.caches[l], &p, lp.as_ref(), &dims, &rope, &mut lg)?;
+    }
+
+    // ---- embedding ----
+    if want_base {
+        let emb_spec = tensor_spec(&blocks[0], "tok_emb")?;
+        let demb = &mut grads[0][emb_spec.offset..emb_spec.offset + dims.vocab * dims.d];
+        for (r, &t) in tokens.iter().enumerate() {
+            let dst = &mut demb[t as usize * dims.d..(t as usize + 1) * dims.d];
+            let src = &dh[r * dims.d..(r + 1) * dims.d];
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o += v;
+            }
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// Loss-only evaluation (the `eval_loss` artifact).
+pub fn eval_loss(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<f32> {
+    let fwd = forward(spec, blocks, flats, None, tokens, false)?;
+    let (logits, _, _) = head_logits(spec, blocks, flats, &fwd.h)?;
+    let dims = Dims::from_spec(spec);
+    let (loss, _) = masked_ce(&logits, targets, dims.rows(), dims.vocab, pad)?;
+    Ok(loss)
+}
+
+/// Full logits `[batch, seq, vocab]` (the `decode_step` artifact).
+pub fn decode_logits(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let fwd = forward(spec, blocks, flats, None, tokens, false)?;
+    let (logits, _, _) = head_logits(spec, blocks, flats, &fwd.h)?;
+    Ok(logits)
+}
+
+/// Merge adapters into one layer flat: `W += 2·A·B` per projection
+/// (the `lora_merge*` artifacts).
+pub fn lora_merge(
+    layer_spec: &BlockSpec,
+    lora_spec: &BlockSpec,
+    layer_flat: &[f32],
+    lora_flat: &[f32],
+) -> Result<Vec<f32>> {
+    if layer_flat.len() != layer_spec.numel || lora_flat.len() != lora_spec.numel {
+        return Err(anyhow!("lora_merge: flat sizes do not match the block specs"));
+    }
+    let mut merged = layer_flat.to_vec();
+    for proj in PROJS {
+        let t = tensor_spec(layer_spec, proj)?;
+        let (d_in, d_out) = (t.shape[0], t.shape[1]);
+        let a = tensor(lora_flat, lora_spec, &format!("{proj}_a"))?;
+        let b = tensor(lora_flat, lora_spec, &format!("{proj}_b"))?;
+        let a_spec = tensor_spec(lora_spec, &format!("{proj}_a"))?;
+        let r = a_spec.shape[1];
+        let dst = &mut merged[t.offset..t.offset + d_in * d_out];
+        matmul_acc(dst, a, b, d_in, r, d_out, LORA_SCALE);
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelState;
+    use crate::runtime::presets::{block_table, lora_block_table};
+    use crate::runtime::Manifest;
+
+    fn tiny_spec() -> ModelSpec {
+        let mut m = Manifest::builtin().preset("test-tiny").unwrap().model.clone();
+        // shrink further: the finite-difference sweep is O(params · step)
+        m.d_model = 8;
+        m.n_heads = 2;
+        m.d_head = 4;
+        m.d_ff = 12;
+        m.vocab = 11;
+        m.seq_len = 5;
+        m.batch = 2;
+        m.n_layers = 2;
+        m
+    }
+
+    fn tokens_for(spec: &ModelSpec, pad_tail: usize) -> (Vec<i32>, Vec<i32>) {
+        let rows = spec.batch * spec.seq_len;
+        let tokens: Vec<i32> = (0..rows).map(|i| 1 + (i as i32 * 3) % (spec.vocab as i32 - 1)).collect();
+        let mut targets: Vec<i32> =
+            (0..rows).map(|i| 1 + (i as i32 * 5) % (spec.vocab as i32 - 1)).collect();
+        for r in 0..spec.batch {
+            for t in targets[r * spec.seq_len..(r + 1) * spec.seq_len].iter_mut().rev().take(pad_tail)
+            {
+                *t = 0;
+            }
+        }
+        (tokens, targets)
+    }
+
+    fn loss_of(spec: &ModelSpec, blocks: &[BlockSpec], flats: &[Vec<f32>], tok: &[i32], tgt: &[i32]) -> f64 {
+        let refs: Vec<&[f32]> = flats.iter().map(|f| f.as_slice()).collect();
+        eval_loss(spec, blocks, &refs, tok, tgt, 0).unwrap() as f64
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 7);
+        let (tok, tgt) = tokens_for(&spec, 1);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let (loss, grads) = train_step(&spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+
+        // probe a few coordinates in every block
+        let eps = 3e-3f32;
+        for (bi, block) in blocks.iter().enumerate() {
+            for probe in 0..4usize {
+                let idx = (probe * 97 + bi * 31) % block.numel;
+                let mut plus = state.flats.clone();
+                plus[bi][idx] += eps;
+                let mut minus = state.flats.clone();
+                minus[bi][idx] -= eps;
+                let fd = (loss_of(&spec, &blocks, &plus, &tok, &tgt)
+                    - loss_of(&spec, &blocks, &minus, &tok, &tgt))
+                    / (2.0 * eps as f64);
+                let an = grads[bi][idx] as f64;
+                let tol = 2e-2 * fd.abs().max(an.abs()).max(1e-3);
+                assert!(
+                    (fd - an).abs() < tol,
+                    "block {bi} ({}) idx {idx}: fd {fd:.6} vs analytic {an:.6}",
+                    block.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lora_grad_matches_finite_difference() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let lblocks = lora_block_table(&spec, 3);
+        let base = ModelState::init(&blocks, 3);
+        let mut lora = ModelState::init(&lblocks, 4);
+        // make B nonzero so both A and B see curvature
+        for f in lora.flats.iter_mut() {
+            for (i, x) in f.iter_mut().enumerate() {
+                if *x == 0.0 {
+                    *x = 0.01 * ((i % 7) as f32 - 3.0);
+                }
+            }
+        }
+        let (tok, tgt) = tokens_for(&spec, 1);
+        let base_refs: Vec<&[f32]> = base.flats.iter().map(|f| f.as_slice()).collect();
+        let lrefs: Vec<&[f32]> = lora.flats.iter().map(|f| f.as_slice()).collect();
+        let (loss, grads) =
+            train_step_lora(&spec, &blocks, &lblocks, &base_refs, &lrefs, &tok, &tgt, 0).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(grads.len(), lblocks.len());
+
+        let eps = 3e-3f32;
+        let lora_loss = |lflats: &[Vec<f32>]| -> f64 {
+            let lrefs: Vec<&[f32]> = lflats.iter().map(|f| f.as_slice()).collect();
+            let (l, _) = train_step_lora(
+                &spec, &blocks, &lblocks, &base_refs, &lrefs, &tok, &tgt, 0,
+            )
+            .unwrap();
+            l as f64
+        };
+        for (bi, block) in lblocks.iter().enumerate() {
+            for probe in 0..4usize {
+                let idx = (probe * 131 + bi * 17) % block.numel;
+                let mut plus = lora.flats.clone();
+                plus[bi][idx] += eps;
+                let mut minus = lora.flats.clone();
+                minus[bi][idx] -= eps;
+                let fd = (lora_loss(&plus) - lora_loss(&minus)) / (2.0 * eps as f64);
+                let an = grads[bi][idx] as f64;
+                let tol = 2e-2 * fd.abs().max(an.abs()).max(1e-3);
+                assert!(
+                    (fd - an).abs() < tol,
+                    "lora block {bi} idx {idx}: fd {fd:.6} vs analytic {an:.6}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_adapters_do_not_change_forward() {
+        // B = 0 ⇒ LoRA forward must equal the base forward exactly.
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let lblocks = lora_block_table(&spec, 3);
+        let base = ModelState::init(&blocks, 5);
+        let lora = ModelState::init(&lblocks, 6);
+        let (tok, tgt) = tokens_for(&spec, 0);
+        let base_refs: Vec<&[f32]> = base.flats.iter().map(|f| f.as_slice()).collect();
+        let lrefs: Vec<&[f32]> = lora.flats.iter().map(|f| f.as_slice()).collect();
+        let plain = eval_loss(&spec, &blocks, &base_refs, &tok, &tgt, 0).unwrap();
+        let (with_lora, _) =
+            train_step_lora(&spec, &blocks, &lblocks, &base_refs, &lrefs, &tok, &tgt, 0).unwrap();
+        assert!((plain - with_lora).abs() < 1e-6, "{plain} vs {with_lora}");
+    }
+
+    #[test]
+    fn merge_is_identity_for_zero_b() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let lblocks = lora_block_table(&spec, 3);
+        let base = ModelState::init(&blocks, 1);
+        let lora = ModelState::init(&lblocks, 2);
+        let merged = lora_merge(&blocks[1], &lblocks[0], &base.flats[1], &lora.flats[0]).unwrap();
+        assert_eq!(merged, base.flats[1]);
+    }
+
+    #[test]
+    fn pad_targets_do_not_contribute() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 9);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let (tok, tgt) = tokens_for(&spec, 0);
+        let mut tgt_all_pad = tgt.clone();
+        for t in tgt_all_pad.iter_mut() {
+            *t = 0;
+        }
+        let loss = eval_loss(&spec, &blocks, &refs, &tok, &tgt_all_pad, 0).unwrap();
+        assert_eq!(loss, 0.0, "all-pad targets must produce zero loss");
+    }
+}

@@ -1,13 +1,17 @@
-//! Rust-side parameter store: per-block flat vectors + seeded init +
-//! checkpointing.
+//! Rust-side model substrate: parameter store + the reference transformer.
 //!
 //! The coordinator is deliberately shape-oblivious: a model is a list of
 //! paper-"blocks" (embed | layer 0..L-1 | final norm + head), each one flat
 //! `Vec<f32>` whose internal tensor layout is described by the manifest.
 //! Initialization follows each tensor's init spec (`normal:<std>`, `ones`,
-//! `zeros`) with a per-tensor ChaCha stream so results are reproducible and
+//! `zeros`) with a per-tensor seeded stream so results are reproducible and
 //! independent of block iteration order.
+//!
+//! [`forward`] holds the pure-Rust transformer forward/backward that backs
+//! `runtime::ReferenceBackend` — the dense correctness reference every
+//! selective method is validated against.
 
+pub mod forward;
 mod state;
 
 pub use state::{BlockStats, ModelState};

@@ -146,11 +146,9 @@ impl ModelState {
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     fn blocks() -> Vec<BlockSpec> {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Manifest::load(&dir).unwrap().preset("test-tiny").unwrap().blocks.clone()
+        Manifest::builtin().preset("test-tiny").unwrap().blocks.clone()
     }
 
     #[test]

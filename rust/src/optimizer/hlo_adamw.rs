@@ -1,29 +1,29 @@
-//! Artifact-backed AdamW: drives the Pallas `adamw_update` kernel through
-//! PJRT in fixed-size chunks.
+//! Kernel-backed AdamW: drives the shared `adamw_update` entrypoint
+//! through any [`Backend`] in fixed-size chunks.
 //!
 //! On real accelerators this *is* the hot path (the states live on device
-//! and the fused kernel streams them at HBM roofline); on this CPU
-//! substrate the native implementation in `adamw.rs` wins, so the trainer
-//! defaults to native and this path exists for (a) parity tests proving
-//! the Rust math equals the L1 kernel bit-for-bit-ish, and (b) the
+//! and the fused Pallas kernel streams them at HBM roofline); on CPU
+//! substrates the native implementation in `adamw.rs` wins, so the
+//! trainer defaults to native and this path exists for (a) parity tests
+//! proving the Rust math equals the kernel's across backends, and (b) the
 //! `cargo bench --bench optimizer` comparison.
 
 use anyhow::Result;
 
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 use super::adamw::AdamWParams;
 
-pub struct HloAdamW {
-    exe: std::rc::Rc<crate::runtime::Exe>,
+pub struct HloAdamW<B: Backend> {
+    exe: std::rc::Rc<B::Exe>,
     chunk: usize,
 }
 
-impl HloAdamW {
-    pub fn new(engine: &Engine) -> Result<Self> {
+impl<B: Backend> HloAdamW<B> {
+    pub fn new(engine: &B) -> Result<Self> {
         Ok(Self {
             exe: engine.load_shared_exe("adamw_update")?,
-            chunk: engine.manifest.chunk_size,
+            chunk: engine.manifest().chunk_size,
         })
     }
 
@@ -31,13 +31,14 @@ impl HloAdamW {
         self.chunk
     }
 
-    /// Apply one AdamW step to a flat block via the HLO kernel.
+    /// Apply one AdamW step to a flat block via the kernel entrypoint.
     ///
     /// Arbitrary lengths are handled by chunking and zero-padding the tail
     /// (padding never leaks: only the first `len` elements are copied out).
+    #[allow(clippy::too_many_arguments)]
     pub fn update_block(
         &self,
-        engine: &Engine,
+        engine: &B,
         p: &mut [f32],
         g: &[f32],
         m: &mut [f32],
@@ -56,7 +57,7 @@ impl HloAdamW {
             let len = (n - off).min(self.chunk);
             let range = off..off + len;
 
-            let upload = |src: &[f32], scratch: &mut Vec<f32>| -> Result<xla::PjRtBuffer> {
+            let upload = |src: &[f32], scratch: &mut Vec<f32>| -> Result<B::Buffer> {
                 if len == self.chunk {
                     engine.upload_f32(&src[range.clone()])
                 } else {
@@ -70,21 +71,20 @@ impl HloAdamW {
             let mb = upload(m, &mut scratch)?;
             let vb = upload(v, &mut scratch)?;
 
-            let out = self.exe.run(&[&pb, &gb, &mb, &vb, &lr_buf, &step_buf])?;
-            let (po, mo, vo) = (out.vec_f32(0)?, out.vec_f32(1)?, out.vec_f32(2)?);
-            p[range.clone()].copy_from_slice(&po[..len]);
-            m[range.clone()].copy_from_slice(&mo[..len]);
-            v[range].copy_from_slice(&vo[..len]);
+            let out = engine.execute(&self.exe, &[&pb, &gb, &mb, &vb, &lr_buf, &step_buf])?;
+            p[range.clone()].copy_from_slice(&out.vec_f32(0)?[..len]);
+            m[range.clone()].copy_from_slice(&out.vec_f32(1)?[..len]);
+            v[range].copy_from_slice(&out.vec_f32(2)?[..len]);
             off += len;
         }
         Ok(())
     }
 }
 
-/// Parity harness shared by tests and benches: native vs HLO on the same
-/// inputs. Returns the max abs diff across (p, m, v).
-pub fn native_hlo_parity(
-    engine: &Engine,
+/// Parity harness shared by tests and benches: native vs kernel path on
+/// the same inputs. Returns the max abs diff across (p, m, v).
+pub fn native_hlo_parity<B: Backend>(
+    engine: &B,
     n: usize,
     seed: u64,
     steps: u64,
@@ -97,7 +97,7 @@ pub fn native_hlo_parity(
     let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
 
     let hlo = HloAdamW::new(engine)?;
-    let hp = AdamWParams::from(engine.manifest.adamw);
+    let hp = AdamWParams::from(engine.manifest().adamw);
     for t in 1..=steps {
         super::adamw::fused_adamw(&mut p1, &g, &mut m1, &mut v1, 1e-3, t, hp);
         hlo.update_block(engine, &mut p2, &g, &mut m2, &mut v2, 1e-3, t)?;

@@ -8,7 +8,8 @@
 //! * [`SelectiveAdamW`] — per-block (m, v, t) state + the fused native
 //!   update on the hot path (the Pallas `adamw_update` HLO artifact is the
 //!   accelerator-side equivalent; both are parity-tested).
-//! * [`HloAdamW`] — the artifact-backed update path.
+//! * [`HloAdamW`] — the kernel-entrypoint update path, generic over the
+//!   compute [`crate::runtime::Backend`].
 //! * [`ResidencyManager`] — the §3.3 prefetch/evict state machine with a
 //!   PCIe transfer model and VRAM ledger; virtual-time by default so runs
 //!   are deterministic, with an async (tokio) demonstration mode.

@@ -1,0 +1,124 @@
+//! The pluggable compute-backend abstraction.
+//!
+//! Everything above this layer (trainer, optimizer, evaluator, experiment
+//! harness) is generic over [`Backend`]: an executor that can load an
+//! entrypoint (a "compiled executable"), hold uploaded tensors as opaque
+//! device buffers, and execute an entrypoint over buffers, returning the
+//! outputs as flat host `f32` vectors.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::ReferenceBackend`] — the default: a pure-Rust CPU
+//!   executor whose "executables" dispatch to the native transformer
+//!   fwd/bwd in [`crate::model::forward`]. No artifacts, no Python, no
+//!   external crates; this is what CI builds and tests.
+//! * [`crate::runtime::Engine`] (cargo feature `pjrt`) — the PJRT path
+//!   that loads AOT-lowered HLO-text artifacts through the `xla` crate.
+//!
+//! Entry names are shared between backends (`train_step`, `eval_loss`,
+//! `decode_step`, `train_step_lora[2]`, `lora_merge[2]`, and the shared
+//! `adamw_update` / `grad_norm_sq` kernels), so a `Trainer<B>` behaves
+//! identically up to floating-point on either executor — the property the
+//! backend-parity test suite pins down.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+
+/// Host-side copy of an executable's output tuple, backend-neutral: one
+/// flat `f32` vector per output (scalars are length-1 vectors).
+pub struct HostOutputs {
+    pub outputs: Vec<Vec<f32>>,
+    /// Wallclock of the execute call (device compute + sync).
+    pub execute_s: f64,
+    /// Wallclock of the device→host copy of the outputs (0 for host
+    /// backends, where outputs are produced in place).
+    pub download_s: f64,
+}
+
+impl HostOutputs {
+    pub fn new(outputs: Vec<Vec<f32>>, execute_s: f64, download_s: f64) -> Self {
+        Self { outputs, execute_s, download_s }
+    }
+
+    fn check(&self, idx: usize) -> Result<()> {
+        if idx >= self.outputs.len() {
+            return Err(anyhow!(
+                "output index {idx} out of range (executable produced {})",
+                self.outputs.len()
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn scalar_f32(&self, idx: usize) -> Result<f32> {
+        self.check(idx)?;
+        self.outputs[idx]
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("output {idx} is empty, expected a scalar"))
+    }
+
+    /// Borrow output `idx` as a flat slice.
+    pub fn vec_f32(&self, idx: usize) -> Result<&[f32]> {
+        self.check(idx)?;
+        Ok(&self.outputs[idx])
+    }
+
+    /// Move output `idx` out (leaves an empty vector behind) — avoids a
+    /// copy when the caller owns the downstream buffer anyway.
+    pub fn take_vec(&mut self, idx: usize) -> Result<Vec<f32>> {
+        self.check(idx)?;
+        Ok(std::mem::take(&mut self.outputs[idx]))
+    }
+}
+
+/// A compute executor the training stack can run on.
+///
+/// `Buffer` is an opaque device-resident tensor (host vectors for the
+/// reference backend, `PjRtBuffer` for PJRT); `Exe` is a loaded
+/// entrypoint. Executables are cached by the backend, so `load_*_exe` is
+/// cheap after the first call for a given entry.
+pub trait Backend {
+    type Buffer;
+    type Exe;
+
+    /// Human-readable platform tag (e.g. `"reference-cpu"`, `"cpu"`).
+    fn platform(&self) -> String;
+
+    /// Model topology / tokenizer / hyperparameter source of truth.
+    fn manifest(&self) -> &Manifest;
+
+    /// Load the executable for a preset entrypoint (e.g. `"train_step"`).
+    fn load_preset_exe(&self, preset: &str, entry: &str) -> Result<Rc<Self::Exe>>;
+
+    /// Load a shared (preset-independent) executable, e.g. `"adamw_update"`.
+    fn load_shared_exe(&self, entry: &str) -> Result<Rc<Self::Exe>>;
+
+    /// Upload a flat f32 vector.
+    fn upload_f32(&self, data: &[f32]) -> Result<Self::Buffer>;
+
+    /// Upload an i32 matrix (row-major) of shape `dims`.
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Self::Buffer>;
+
+    /// Execute an entrypoint and return all outputs on the host.
+    fn execute(&self, exe: &Self::Exe, args: &[&Self::Buffer]) -> Result<HostOutputs>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_outputs_accessors() {
+        let mut out = HostOutputs::new(vec![vec![2.5], vec![1.0, 2.0]], 0.0, 0.0);
+        assert_eq!(out.scalar_f32(0).unwrap(), 2.5);
+        assert_eq!(out.vec_f32(1).unwrap(), &[1.0, 2.0]);
+        let taken = out.take_vec(1).unwrap();
+        assert_eq!(taken, vec![1.0, 2.0]);
+        assert!(out.vec_f32(1).unwrap().is_empty());
+        assert!(out.scalar_f32(9).is_err());
+    }
+}

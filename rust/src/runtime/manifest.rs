@@ -96,6 +96,13 @@ pub struct ArtifactInfo {
 }
 
 impl Manifest {
+    /// The built-in preset catalog (no artifacts directory needed) — the
+    /// topology source for [`crate::runtime::ReferenceBackend`]. Identical
+    /// layout rules to the AOT-exported `manifest.json`.
+    pub fn builtin() -> Self {
+        super::presets::builtin_manifest()
+    }
+
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let path = artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -241,13 +248,9 @@ impl Preset {
 mod tests {
     use super::*;
 
-    fn manifest_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     #[test]
-    fn loads_and_has_presets() {
-        let m = Manifest::load(&manifest_dir()).unwrap();
+    fn builtin_has_presets() {
+        let m = Manifest::builtin();
         for name in ["test-tiny", "qwen-sim", "llama-sim", "phi-sim", "e2e"] {
             let p = m.preset(name).unwrap();
             assert_eq!(p.n_blocks(), p.model.n_layers + 2, "{name}");
@@ -261,7 +264,7 @@ mod tests {
     #[test]
     fn qwen_sim_matches_paper_block_count() {
         // Qwen2.5-0.5B has 25 transformer blocks in the paper.
-        let m = Manifest::load(&manifest_dir()).unwrap();
+        let m = Manifest::builtin();
         assert_eq!(m.preset("qwen-sim").unwrap().model.n_layers, 25);
         assert_eq!(m.preset("llama-sim").unwrap().model.n_layers, 18);
         assert_eq!(m.preset("phi-sim").unwrap().model.n_layers, 32);
@@ -269,7 +272,7 @@ mod tests {
 
     #[test]
     fn tensor_offsets_contiguous() {
-        let m = Manifest::load(&manifest_dir()).unwrap();
+        let m = Manifest::builtin();
         for b in &m.preset("qwen-sim").unwrap().blocks {
             let mut off = 0;
             for t in &b.tensors {
@@ -282,9 +285,16 @@ mod tests {
 
     #[test]
     fn min_selection_pct_guideline() {
-        let m = Manifest::load(&manifest_dir()).unwrap();
+        let m = Manifest::builtin();
         let p = m.preset("qwen-sim").unwrap();
         // 27 blocks (embed + 25 + head) => ~3.7%
         assert!((p.min_selection_pct() - 100.0 / 27.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_manifest_reports_helpful_error() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("make artifacts"), "{msg}");
     }
 }

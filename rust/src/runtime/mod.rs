@@ -1,14 +1,48 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Compute runtimes: the [`Backend`] abstraction and its implementations.
 //!
-//! This is the only module that touches the `xla` crate. Everything above
-//! it works in terms of flat `Vec<f32>` block vectors and `Vec<i32>` token
-//! matrices. HLO *text* is the interchange format (see
-//! `python/compile/aot.py` for why not serialized protos).
+//! # The `Backend` trait
+//!
+//! The coordinator never talks to an executor directly — everything goes
+//! through [`Backend`]: load an entrypoint ([`Backend::load_preset_exe`] /
+//! [`Backend::load_shared_exe`]), move tensors ([`Backend::upload_f32`] /
+//! [`Backend::upload_i32`]), run ([`Backend::execute`]) and read the
+//! outputs back as flat `f32` vectors ([`HostOutputs`]). `Trainer`,
+//! `Evaluator`, the selective-AdamW kernel driver and the experiment
+//! harness are all generic over `B: Backend`.
+//!
+//! # Implementations
+//!
+//! * [`ReferenceBackend`] — **default**: pure-Rust CPU executor. The
+//!   transformer fwd/bwd lives in [`crate::model::forward`]; model
+//!   topology comes from the built-in preset catalog
+//!   ([`Manifest::builtin`], mirroring `python/compile/presets.py`), so no
+//!   artifacts, Python or HLO files are needed. This is what CI builds,
+//!   tests and trains end-to-end.
+//! * [`Engine`] — the PJRT path, behind the **`pjrt` cargo feature**: it
+//!   loads AOT-lowered HLO-text artifacts (`make artifacts`) through the
+//!   `xla` crate and keeps parameters device-resident between steps.
+//!   Default builds never compile or link `xla`; the feature is
+//!   type-checked in CI against the in-tree `rust/vendor/xla` API stub and
+//!   runs for real when the path dependency points at actual bindings.
+//!
+//! Both backends expose the same entry names (`train_step`,
+//! `train_step_lora[2]`, `eval_loss`, `decode_step`, `lora_merge[2]`, and
+//! the shared `adamw_update` / `grad_norm_sq` kernels) with identical
+//! argument/output layouts, so checkpoints, configs and metrics are
+//! portable across them and the parity suite can hold one against the
+//! other.
 
+mod backend;
+#[cfg(feature = "pjrt")]
 mod engine;
 mod manifest;
+pub mod presets;
+mod reference;
 
-pub use engine::{Engine, Exe, HostOutputs};
+pub use backend::{Backend, HostOutputs};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Exe};
 pub use manifest::{
     AdamWHyper, ArtifactInfo, BlockSpec, Manifest, ModelSpec, Preset, TensorSpec, TokenizerSpec,
 };
+pub use reference::{RefBuffer, RefExe, ReferenceBackend};

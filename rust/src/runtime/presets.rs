@@ -1,0 +1,249 @@
+//! Built-in model presets — the native mirror of `python/compile/presets.py`.
+//!
+//! The reference backend needs the full model topology (block tables,
+//! tokenizer, AdamW hyperparameters) without any `artifacts/manifest.json`
+//! on disk, so the preset catalog is constructed here in Rust. The layout
+//! rules are identical to the Python side (same tensor order, shapes and
+//! init specs), which is what keeps the two backends' parameter vectors
+//! bit-compatible: a checkpoint trained on one backend loads on the other.
+
+use std::collections::HashMap;
+
+use super::manifest::{
+    AdamWHyper, ArtifactInfo, BlockSpec, Manifest, ModelSpec, Preset, TensorSpec, TokenizerSpec,
+};
+
+/// Char-level vocabulary shared with `python/compile/tokenizer.py`.
+pub const TOKENIZER_CHARS: &str = " 0123456789abcdefghijklmnopqrstuvwxyz+-*/=().,?#:'%$\n";
+pub const VOCAB_SIZE: usize = 64;
+
+/// Flat chunk size of the shared AdamW / grad-norm kernels
+/// (`python/compile/kernels/adamw.py`).
+pub const CHUNK_SIZE: usize = 65536;
+
+/// Projections adapted by LoRA: every weight matrix in a layer.
+const LORA_PROJS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+struct BlockBuilder {
+    spec: BlockSpec,
+}
+
+impl BlockBuilder {
+    fn new(name: &str) -> Self {
+        Self { spec: BlockSpec { name: name.to_string(), numel: 0, tensors: Vec::new() } }
+    }
+
+    fn add(mut self, name: &str, shape: &[usize], init: &str) -> Self {
+        let numel: usize = shape.iter().product();
+        self.spec.tensors.push(TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            init: init.to_string(),
+            offset: self.spec.numel,
+        });
+        self.spec.numel += numel;
+        self
+    }
+
+    fn build(self) -> BlockSpec {
+        self.spec
+    }
+}
+
+/// The paper's block decomposition: embed | layer 0..L-1 | final norm+head.
+pub fn block_table(m: &ModelSpec) -> Vec<BlockSpec> {
+    let std = format!("normal:{}", m.init_std);
+    // residual-branch output projections get the depth-scaled init
+    let out_std = format!(
+        "normal:{}",
+        m.init_std as f64 / (2.0 * m.n_layers as f64).sqrt()
+    );
+    let mut blocks = Vec::with_capacity(m.n_layers + 2);
+
+    blocks.push(BlockBuilder::new("embed").add("tok_emb", &[m.vocab, m.d_model], &std).build());
+
+    for i in 0..m.n_layers {
+        blocks.push(
+            BlockBuilder::new(&format!("layer{i}"))
+                .add("ln1", &[m.d_model], "ones")
+                .add("wq", &[m.d_model, m.d_model], &std)
+                .add("wk", &[m.d_model, m.d_model], &std)
+                .add("wv", &[m.d_model, m.d_model], &std)
+                .add("wo", &[m.d_model, m.d_model], &out_std)
+                .add("ln2", &[m.d_model], "ones")
+                .add("wg", &[m.d_model, m.d_ff], &std)
+                .add("wu", &[m.d_model, m.d_ff], &std)
+                .add("wd", &[m.d_ff, m.d_model], &out_std)
+                .build(),
+        );
+    }
+
+    blocks.push(
+        BlockBuilder::new("head")
+            .add("ln_f", &[m.d_model], "ones")
+            .add("w_out", &[m.d_model, m.vocab], &std)
+            .build(),
+    );
+    blocks
+}
+
+/// One LoRA block per transformer layer: `W' = W + 2·A·B` with
+/// `A: (in, r) ~ N(0, 1/√r)`, `B: (r, out) = 0`.
+pub fn lora_block_table(m: &ModelSpec, rank: usize) -> Vec<BlockSpec> {
+    let a_std = format!("normal:{}", 1.0 / (rank as f64).sqrt());
+    let dims = |proj: &str| -> (usize, usize) {
+        match proj {
+            "wg" | "wu" => (m.d_model, m.d_ff),
+            "wd" => (m.d_ff, m.d_model),
+            _ => (m.d_model, m.d_model),
+        }
+    };
+    (0..m.n_layers)
+        .map(|i| {
+            let mut b = BlockBuilder::new(&format!("lora{i}"));
+            for proj in LORA_PROJS {
+                let (d_in, d_out) = dims(proj);
+                b = b
+                    .add(&format!("{proj}_a"), &[d_in, rank], &a_std)
+                    .add(&format!("{proj}_b"), &[rank, d_out], "zeros");
+            }
+            b.build()
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn model_spec(
+    name: &str,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    seq_len: usize,
+    batch: usize,
+    lora_rank: usize,
+) -> ModelSpec {
+    assert!(d_model % n_heads == 0, "{name}: d_model must divide by heads");
+    ModelSpec {
+        name: name.to_string(),
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        vocab: VOCAB_SIZE,
+        seq_len,
+        batch,
+        lora_rank,
+        d_head: d_model / n_heads,
+        norm_eps: 1e-5,
+        rope_theta: 10000.0,
+        init_std: 0.02,
+    }
+}
+
+fn artifact(file: String, n_inputs: usize) -> ArtifactInfo {
+    ArtifactInfo { file, n_inputs, bytes: 0, lower_s: 0.0 }
+}
+
+fn preset(model: ModelSpec, pallas: bool) -> Preset {
+    let blocks = block_table(&model);
+    let lora_blocks = lora_block_table(&model, model.lora_rank);
+    let lora_blocks2 = lora_block_table(&model, model.lora_rank * 2);
+    let total_params = blocks.iter().map(|b| b.numel).sum();
+    let n = blocks.len();
+    let nl = model.n_layers;
+    let name = &model.name;
+
+    let mut artifacts = HashMap::new();
+    let mut add = |entry: &str, n_inputs: usize| {
+        artifacts.insert(
+            entry.to_string(),
+            artifact(format!("{name}_{entry}.hlo.txt"), n_inputs),
+        );
+    };
+    add("train_step", n + 2);
+    if pallas {
+        add("train_step_pallas", n + 2);
+    }
+    add("train_step_lora", n + nl + 2);
+    add("train_step_lora2", n + nl + 2);
+    add("lora_merge", 2);
+    add("lora_merge2", 2);
+    add("eval_loss", n + 2);
+    add("decode_step", n + 1);
+
+    Preset { model, blocks, lora_blocks, lora_blocks2, total_params, artifacts }
+}
+
+/// The full built-in catalog (same five presets the AOT path exports).
+pub(crate) fn builtin_manifest() -> Manifest {
+    let mut presets = HashMap::new();
+    // unit/integration-test preset: runs in well under a second
+    let tiny = model_spec("test-tiny", 32, 2, 2, 96, 64, 4, 4);
+    // Qwen2.5-0.5B stand-in: 25 transformer blocks (paper: 10% => 2 blocks)
+    let qwen = model_spec("qwen-sim", 64, 25, 4, 176, 128, 8, 8);
+    // LLaMA3.2-1B stand-in: 18 blocks (paper: 10% => a single block)
+    let llama = model_spec("llama-sim", 80, 18, 4, 216, 128, 8, 10);
+    // Phi4-mini-3.8B stand-in: 32 blocks
+    let phi = model_spec("phi-sim", 96, 32, 4, 256, 128, 8, 12);
+    // end-to-end example model (examples/e2e_train.rs)
+    let e2e = model_spec("e2e", 160, 8, 5, 432, 128, 8, 20);
+
+    for (m, pallas) in [(tiny, true), (qwen, true), (llama, false), (phi, false), (e2e, false)] {
+        presets.insert(m.name.clone(), preset(m, pallas));
+    }
+
+    let mut shared = HashMap::new();
+    shared.insert("adamw_update".to_string(), artifact("adamw_update.hlo.txt".into(), 6));
+    shared.insert("grad_norm_sq".to_string(), artifact("grad_norm_sq.hlo.txt".into(), 1));
+
+    Manifest {
+        version: 1,
+        tokenizer: TokenizerSpec {
+            chars: TOKENIZER_CHARS.to_string(),
+            vocab_size: VOCAB_SIZE,
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            unk: 3,
+        },
+        chunk_size: CHUNK_SIZE,
+        adamw: AdamWHyper { b1: 0.9, b2: 0.999, eps: 1e-8, wd: 0.01 },
+        shared,
+        presets,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_covers_chars() {
+        assert!(4 + TOKENIZER_CHARS.chars().count() <= VOCAB_SIZE);
+    }
+
+    #[test]
+    fn layer_tensor_order_is_stable() {
+        let m = model_spec("t", 8, 1, 2, 16, 4, 1, 2);
+        let blocks = block_table(&m);
+        let names: Vec<&str> = blocks[1].tensors.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"]);
+        assert_eq!(blocks[0].tensors[0].name, "tok_emb");
+        assert_eq!(blocks[2].tensors[0].name, "ln_f");
+        assert_eq!(blocks[2].tensors[1].name, "w_out");
+    }
+
+    #[test]
+    fn lora_block_has_all_projections() {
+        let m = model_spec("t", 8, 2, 2, 16, 4, 1, 2);
+        let lb = lora_block_table(&m, 2);
+        assert_eq!(lb.len(), 2);
+        assert_eq!(lb[0].tensors.len(), 14);
+        assert_eq!(lb[0].tensors[0].name, "wq_a");
+        assert_eq!(lb[0].tensors[1].name, "wq_b");
+        // A rows carry N(0, 1/sqrt(r)), B rows are zeros
+        assert!(lb[0].tensors[0].init.starts_with("normal:"));
+        assert_eq!(lb[0].tensors[1].init, "zeros");
+    }
+}

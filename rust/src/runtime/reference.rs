@@ -1,0 +1,338 @@
+//! Pure-Rust CPU reference backend.
+//!
+//! Implements [`Backend`] with no artifacts, no Python and no external
+//! crates: "executables" are dispatch tags into the native transformer
+//! fwd/bwd (`model::forward`) and the fused AdamW / grad-norm kernels, and
+//! "device buffers" are plain host vectors. Entry names and argument
+//! layouts are byte-for-byte the PJRT engine's, so the trainer, evaluator
+//! and benches run unchanged on either backend.
+//!
+//! This is the trusted dense reference the selection methods are
+//! validated against (GRASS / BlockLLM-style parity methodology): CI
+//! trains real models through this backend on every push.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::forward;
+use crate::optimizer::{fused_adamw, AdamWParams};
+use crate::selection::grad_norm::block_norm_sq;
+
+use super::backend::{Backend, HostOutputs};
+use super::manifest::{Manifest, Preset};
+
+/// Host-side "device buffer" for the reference backend.
+pub enum RefBuffer {
+    F32(Vec<f32>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl RefBuffer {
+    fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            RefBuffer::F32(v) => Ok(v),
+            RefBuffer::I32(..) => Err(anyhow!("expected an f32 buffer, got i32")),
+        }
+    }
+
+    fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            RefBuffer::I32(v, _) => Ok(v),
+            RefBuffer::F32(_) => Err(anyhow!("expected an i32 buffer, got f32")),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Entry {
+    TrainStep,
+    TrainStepLora { double: bool },
+    EvalLoss,
+    DecodeStep,
+    LoraMerge { double: bool },
+    AdamWUpdate,
+    GradNormSq,
+}
+
+/// A "loaded executable": an entry tag bound to a preset (or shared).
+pub struct RefExe {
+    pub name: String,
+    entry: Entry,
+    preset: Option<String>,
+}
+
+/// The pure-Rust CPU executor (the crate's default backend).
+pub struct ReferenceBackend {
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<RefExe>>>,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReferenceBackend {
+    /// Backend over the built-in preset catalog (no artifacts needed).
+    pub fn new() -> Self {
+        Self::with_manifest(Manifest::builtin())
+    }
+
+    /// Backend over an explicit manifest (e.g. one loaded from an
+    /// artifacts directory, for strict topology parity with a PJRT run).
+    pub fn with_manifest(manifest: Manifest) -> Self {
+        Self { manifest, cache: RefCell::new(HashMap::new()) }
+    }
+
+    fn parse_entry(entry: &str) -> Result<Entry> {
+        Ok(match entry {
+            // the Pallas-attention artifact computes the same function;
+            // the reference backend has exactly one attention path
+            "train_step" | "train_step_pallas" => Entry::TrainStep,
+            "train_step_lora" => Entry::TrainStepLora { double: false },
+            "train_step_lora2" => Entry::TrainStepLora { double: true },
+            "eval_loss" => Entry::EvalLoss,
+            "decode_step" => Entry::DecodeStep,
+            "lora_merge" => Entry::LoraMerge { double: false },
+            "lora_merge2" => Entry::LoraMerge { double: true },
+            "adamw_update" => Entry::AdamWUpdate,
+            "grad_norm_sq" => Entry::GradNormSq,
+            other => return Err(anyhow!("reference backend has no entrypoint {other:?}")),
+        })
+    }
+
+    fn preset(&self, exe: &RefExe) -> Result<&Preset> {
+        let name = exe
+            .preset
+            .as_deref()
+            .ok_or_else(|| anyhow!("{}: entry needs a preset", exe.name))?;
+        self.manifest.preset(name)
+    }
+
+    fn run(&self, exe: &RefExe, args: &[&RefBuffer]) -> Result<Vec<Vec<f32>>> {
+        let want = |n: usize| -> Result<()> {
+            if args.len() != n {
+                return Err(anyhow!("{}: expected {n} inputs, got {}", exe.name, args.len()));
+            }
+            Ok(())
+        };
+        let pad = self.manifest.tokenizer.pad;
+        match exe.entry {
+            Entry::TrainStep => {
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                want(n + 2)?;
+                let flats: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let tokens = args[n].as_i32()?;
+                let targets = args[n + 1].as_i32()?;
+                let (loss, grads) =
+                    forward::train_step(&p.model, &p.blocks, &flats, tokens, targets, pad)?;
+                let mut out = vec![vec![loss]];
+                out.extend(grads);
+                Ok(out)
+            }
+            Entry::TrainStepLora { double } => {
+                let p = self.preset(exe)?;
+                let lblocks = if double { &p.lora_blocks2 } else { &p.lora_blocks };
+                let (n, nl) = (p.blocks.len(), lblocks.len());
+                want(n + nl + 2)?;
+                let base: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let lora: Vec<&[f32]> =
+                    args[n..n + nl].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let tokens = args[n + nl].as_i32()?;
+                let targets = args[n + nl + 1].as_i32()?;
+                let (loss, grads) = forward::train_step_lora(
+                    &p.model, &p.blocks, lblocks, &base, &lora, tokens, targets, pad,
+                )?;
+                let mut out = vec![vec![loss]];
+                out.extend(grads);
+                Ok(out)
+            }
+            Entry::EvalLoss => {
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                want(n + 2)?;
+                let flats: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let loss = forward::eval_loss(
+                    &p.model,
+                    &p.blocks,
+                    &flats,
+                    args[n].as_i32()?,
+                    args[n + 1].as_i32()?,
+                    pad,
+                )?;
+                Ok(vec![vec![loss]])
+            }
+            Entry::DecodeStep => {
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                want(n + 1)?;
+                let flats: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let logits =
+                    forward::decode_logits(&p.model, &p.blocks, &flats, args[n].as_i32()?)?;
+                Ok(vec![logits])
+            }
+            Entry::LoraMerge { double } => {
+                let p = self.preset(exe)?;
+                want(2)?;
+                let lblocks = if double { &p.lora_blocks2 } else { &p.lora_blocks };
+                if p.model.n_layers == 0 {
+                    return Err(anyhow!("{}: preset has no layers", exe.name));
+                }
+                let merged = forward::lora_merge(
+                    &p.blocks[1],
+                    &lblocks[0],
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                )?;
+                Ok(vec![merged])
+            }
+            Entry::AdamWUpdate => {
+                want(6)?;
+                let mut p = args[0].as_f32()?.to_vec();
+                let g = args[1].as_f32()?;
+                let mut m = args[2].as_f32()?.to_vec();
+                let mut v = args[3].as_f32()?.to_vec();
+                let lr = *args[4]
+                    .as_f32()?
+                    .first()
+                    .ok_or_else(|| anyhow!("adamw_update: empty lr input"))?;
+                let step_f = *args[5]
+                    .as_f32()?
+                    .first()
+                    .ok_or_else(|| anyhow!("adamw_update: empty step input"))?;
+                if g.len() != p.len() || m.len() != p.len() || v.len() != p.len() {
+                    return Err(anyhow!("adamw_update: p/g/m/v length mismatch"));
+                }
+                let hp = AdamWParams::from(self.manifest.adamw);
+                fused_adamw(&mut p, g, &mut m, &mut v, lr, step_f.round() as u64, hp);
+                Ok(vec![p, m, v])
+            }
+            Entry::GradNormSq => {
+                want(1)?;
+                let g = args[0].as_f32()?;
+                Ok(vec![vec![block_norm_sq(g) as f32]])
+            }
+        }
+    }
+}
+
+impl Backend for ReferenceBackend {
+    type Buffer = RefBuffer;
+    type Exe = RefExe;
+
+    fn platform(&self) -> String {
+        "reference-cpu".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_preset_exe(&self, preset: &str, entry: &str) -> Result<Rc<RefExe>> {
+        // mirror the PJRT engine: loading fails for entries the preset
+        // does not export (e.g. train_step_pallas on non-Pallas presets)
+        self.manifest.preset(preset)?.artifact(entry)?;
+        let key = format!("{preset}:{entry}");
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(RefExe {
+            name: key.clone(),
+            entry: Self::parse_entry(entry)?,
+            preset: Some(preset.to_string()),
+        });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn load_shared_exe(&self, entry: &str) -> Result<Rc<RefExe>> {
+        self.manifest
+            .shared
+            .get(entry)
+            .ok_or_else(|| anyhow!("no shared artifact {entry:?}"))?;
+        let key = format!("shared:{entry}");
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(RefExe {
+            name: key.clone(),
+            entry: Self::parse_entry(entry)?,
+            preset: None,
+        });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn upload_f32(&self, data: &[f32]) -> Result<RefBuffer> {
+        Ok(RefBuffer::F32(data.to_vec()))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<RefBuffer> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            return Err(anyhow!("upload i32: {} elements vs dims {dims:?}", data.len()));
+        }
+        Ok(RefBuffer::I32(data.to_vec(), dims.to_vec()))
+    }
+
+    fn execute(&self, exe: &RefExe, args: &[&RefBuffer]) -> Result<HostOutputs> {
+        let t0 = Instant::now();
+        let outputs = self.run(exe, args)?;
+        Ok(HostOutputs::new(outputs, t0.elapsed().as_secs_f64(), 0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exe_cache_dedups() {
+        let b = ReferenceBackend::new();
+        let a = b.load_shared_exe("adamw_update").unwrap();
+        let c = b.load_shared_exe("adamw_update").unwrap();
+        assert!(Rc::ptr_eq(&a, &c));
+        let t1 = b.load_preset_exe("test-tiny", "train_step").unwrap();
+        let t2 = b.load_preset_exe("test-tiny", "train_step").unwrap();
+        assert!(Rc::ptr_eq(&t1, &t2));
+    }
+
+    #[test]
+    fn unknown_entries_rejected() {
+        let b = ReferenceBackend::new();
+        assert!(b.load_preset_exe("test-tiny", "nope").is_err());
+        assert!(b.load_preset_exe("no-such-preset", "train_step").is_err());
+        assert!(b.load_shared_exe("nope").is_err());
+        // pallas artifact exists only for the pallas presets
+        assert!(b.load_preset_exe("test-tiny", "train_step_pallas").is_ok());
+        assert!(b.load_preset_exe("e2e", "train_step_pallas").is_err());
+    }
+
+    #[test]
+    fn grad_norm_sq_entry_matches_native() {
+        let b = ReferenceBackend::new();
+        let exe = b.load_shared_exe("grad_norm_sq").unwrap();
+        let g = vec![2.0f32; 1000];
+        let buf = b.upload_f32(&g).unwrap();
+        let out = b.execute(&exe, &[&buf]).unwrap();
+        let norm = out.scalar_f32(0).unwrap();
+        assert!((norm - 4000.0).abs() < 1e-3, "{norm}");
+    }
+
+    #[test]
+    fn upload_i32_validates_dims() {
+        let b = ReferenceBackend::new();
+        assert!(b.upload_i32(&[1, 2, 3], &[2, 2]).is_err());
+        assert!(b.upload_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+    }
+}

@@ -196,11 +196,9 @@ impl CostModel {
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     fn model() -> CostModel {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).unwrap();
+        let m = Manifest::builtin();
         let p = m.preset("qwen-sim").unwrap();
         CostModel::new(p, CostModelParams::default(), p.model.lora_rank)
     }

@@ -1,7 +1,8 @@
-//! The training loop: HLO train-step execution, selection, selective
+//! The training loop: backend train-step execution, selection, selective
 //! AdamW, residency accounting, metrics.
 //!
-//! One [`Trainer`] drives one run. The hot loop is pure Rust + PJRT:
+//! One [`Trainer`] drives one run on any `runtime::Backend` (the pure-Rust
+//! reference executor by default, PJRT under the `pjrt` feature):
 //!
 //! 1. next batch (deterministic generator) → upload tokens/targets;
 //! 2. re-upload only *dirty* parameter blocks (those the optimizer touched

@@ -2,14 +2,13 @@ use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
-use xla::PjRtBuffer;
 
 use crate::config::{Method, RunConfig};
 use crate::data::{MathGen, Split, Suite, Tokenizer, TrainBatcher};
 use crate::memory::{method_memory, MemoryReport};
 use crate::model::ModelState;
 use crate::optimizer::{AdamWParams, ResidencyManager, SelectiveAdamW};
-use crate::runtime::{Engine, Exe, Preset};
+use crate::runtime::{Backend, Preset};
 use crate::selection::{
     k_from_pct, AdaGradSelect, AdaGradSelectParams, FixedSubsetSelector, FullSelector,
     GradNormTracker, RandomSelector, RoundRobinSelector, SelectionCtx, SelectionStrategy,
@@ -69,29 +68,30 @@ impl TrainSummary {
 }
 
 /// Which parameter table is being trained.
-enum Mode {
+enum Mode<B: Backend> {
     /// Base blocks trained (full / selective methods).
     Base,
     /// LoRA adapters trained; base blocks frozen on device.
-    Lora { base_device: Vec<PjRtBuffer>, double_rank: bool },
+    Lora { base_device: Vec<B::Buffer>, double_rank: bool },
 }
 
-pub struct Trainer<'e> {
-    engine: &'e Engine,
+/// One fine-tuning run on any [`Backend`].
+pub struct Trainer<'e, B: Backend> {
+    engine: &'e B,
     pub cfg: RunConfig,
     pub preset: Preset,
     /// Trainable parameter table (base blocks, or adapters under LoRA).
     pub state: ModelState,
     /// Frozen base state under LoRA (equals `state` otherwise).
     pub base_state: Option<ModelState>,
-    mode: Mode,
+    mode: Mode<B>,
     opt: SelectiveAdamW,
     strategy: Box<dyn SelectionStrategy>,
     tracker: GradNormTracker,
     residency: ResidencyManager,
     batcher: TrainBatcher,
-    exe_train: Rc<Exe>,
-    device_blocks: Vec<PjRtBuffer>,
+    exe_train: Rc<B::Exe>,
+    device_blocks: Vec<B::Buffer>,
     dirty: Vec<bool>,
     pub metrics: MetricsLog,
     cost: CostModel,
@@ -99,18 +99,18 @@ pub struct Trainer<'e> {
     step: u64,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, cfg: RunConfig) -> Result<Self> {
-        let preset = engine.manifest.preset(&cfg.preset)?.clone();
+impl<'e, B: Backend> Trainer<'e, B> {
+    pub fn new(engine: &'e B, cfg: RunConfig) -> Result<Self> {
+        let preset = engine.manifest().preset(&cfg.preset)?.clone();
         cfg.validate(&preset)?;
-        let tok = Tokenizer::from_spec(&engine.manifest.tokenizer);
+        let tok = Tokenizer::from_spec(&engine.manifest().tokenizer);
         let suite = Suite::parse(&cfg.data.train_suite)
             .ok_or_else(|| anyhow!("unknown suite {:?}", cfg.data.train_suite))?;
         let gen = MathGen::new(suite, Split::Train, cfg.data.seed);
         let batcher =
             TrainBatcher::new(gen, tok, preset.model.batch, preset.model.seq_len);
 
-        let adamw: AdamWParams = engine.manifest.adamw.into();
+        let adamw: AdamWParams = engine.manifest().adamw.into();
         let pcie = cfg.residency.pcie_model()?;
         let cost = CostModel::new(&preset, CostModelParams::default(), preset.model.lora_rank);
 
@@ -123,7 +123,7 @@ impl<'e> Trainer<'e> {
                     let ltable =
                         if *double_rank { &preset.lora_blocks2 } else { &preset.lora_blocks };
                     let lora = ModelState::init(ltable, cfg.seed ^ 0x1017A);
-                    let base_device: Vec<PjRtBuffer> = base
+                    let base_device: Vec<B::Buffer> = base
                         .flats
                         .iter()
                         .map(|f| engine.upload_f32(f))
@@ -157,7 +157,7 @@ impl<'e> Trainer<'e> {
             pcie,
             selective,
         );
-        let device_blocks: Vec<PjRtBuffer> =
+        let device_blocks: Vec<B::Buffer> =
             state.flats.iter().map(|f| engine.upload_f32(f)).collect::<Result<_>>()?;
         let metrics = MetricsLog::new(cfg.metrics_path.as_deref())?;
         let grads_host = trainable_numels.iter().map(|&n| vec![0.0f32; n]).collect();
@@ -210,14 +210,14 @@ impl<'e> Trainer<'e> {
         let t_upload = t0.elapsed().as_secs_f64();
 
         // 2. execute the fused train step
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.device_blocks.len() + 34);
+        let mut args: Vec<&B::Buffer> = Vec::with_capacity(self.device_blocks.len() + 34);
         if let Mode::Lora { base_device, .. } = &self.mode {
             args.extend(base_device.iter());
         }
         args.extend(self.device_blocks.iter());
         args.push(&tok_buf);
         args.push(&tgt_buf);
-        let out = self.exe_train.run(&args)?;
+        let mut out = self.engine.execute(&self.exe_train, &args)?;
         let loss = out.scalar_f32(0)?;
         if !loss.is_finite() {
             return Err(anyhow!("non-finite loss at step {}: {loss}", self.step));
@@ -226,7 +226,7 @@ impl<'e> Trainer<'e> {
         // 3. gradients to host
         let t1 = Instant::now();
         for (i, g) in self.grads_host.iter_mut().enumerate() {
-            *g = out.vec_f32(1 + i)?;
+            *g = out.take_vec(1 + i)?;
         }
         let t_host = t1.elapsed().as_secs_f64() + out.download_s;
 
@@ -358,8 +358,8 @@ impl<'e> Trainer<'e> {
         }
     }
 
-    /// Device buffers of the *effective* model for evaluation: merged
-    /// base+LoRA under LoRA, the live base blocks otherwise.
+    /// The *effective* model for evaluation: merged base+LoRA under LoRA,
+    /// the live base blocks otherwise.
     pub fn eval_state(&self) -> Result<ModelState> {
         match &self.mode {
             Mode::Base => Ok(self.state.clone()),

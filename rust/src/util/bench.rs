@@ -94,7 +94,7 @@ pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
         ]);
         if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
             use std::io::Write;
-            let _ = writeln!(fh, "{}", row.to_string());
+            let _ = writeln!(fh, "{row}");
         }
     }
     r

@@ -134,12 +134,6 @@ impl Value {
 
     // -- emission ------------------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Value::Null => out.push_str("null"),
@@ -175,6 +169,14 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -9,12 +9,12 @@ use std::path::PathBuf;
 
 use adagradselect::config::Method;
 use adagradselect::experiments::{run_method, ExpOptions};
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::ReferenceBackend;
 
 fn opts(tag: &str) -> ExpOptions {
     let out = std::env::temp_dir().join(format!("agsel-exp-{tag}-{}", std::process::id()));
     ExpOptions {
-        artifacts_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        artifacts_dir: PathBuf::from("artifacts"),
         out_dir: out,
         steps: 12,
         steps_per_epoch: 6,
@@ -26,7 +26,7 @@ fn opts(tag: &str) -> ExpOptions {
 #[test]
 fn run_method_produces_full_result() {
     let opt = opts("rm");
-    let engine = Engine::load(&opt.artifacts_dir).unwrap();
+    let engine = ReferenceBackend::new();
     let run = run_method(&engine, &opt, "test-tiny", Method::ags(30.0)).unwrap();
     assert_eq!(run.summary.steps, 12);
     assert!(run.summary.tail_loss.is_finite());
@@ -43,7 +43,7 @@ fn method_ladder_relative_properties() {
     //  2. LoRA simulated step time exceeds FFT's (adapter overhead),
     //  3. AGS simulated step time is below FFT's.
     let opt = opts("ladder");
-    let engine = Engine::load(&opt.artifacts_dir).unwrap();
+    let engine = ReferenceBackend::new();
     let ags = run_method(&engine, &opt, "test-tiny", Method::ags(30.0)).unwrap();
     let fft = run_method(&engine, &opt, "test-tiny", Method::Full).unwrap();
     let lora = run_method(&engine, &opt, "test-tiny", Method::Lora { double_rank: false })
@@ -58,7 +58,7 @@ fn method_ladder_relative_properties() {
 #[test]
 fn csv_outputs_written() {
     let opt = opts("csv");
-    let engine = Engine::load(&opt.artifacts_dir).unwrap();
+    let engine = ReferenceBackend::new();
     // fig3 micro-sweep over two points on test-tiny is the cheapest driver
     // that exercises CsvWriter + eval
     let rows = adagradselect::experiments::fig3_on(

@@ -1,16 +1,15 @@
 //! Integration: full training runs on the `test-tiny` preset for every
-//! method, exercising trainer × selection × optimizer × residency × eval.
-
-use std::path::PathBuf;
+//! method, exercising trainer × selection × optimizer × residency × eval
+//! on the pure-Rust reference backend (no artifacts required).
 
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{MathGen, Split, Suite};
 use adagradselect::eval::Evaluator;
-use adagradselect::runtime::Engine;
+use adagradselect::runtime::ReferenceBackend;
 use adagradselect::train::Trainer;
 
-fn engine() -> Engine {
-    Engine::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")).unwrap()
+fn engine() -> ReferenceBackend {
+    ReferenceBackend::new()
 }
 
 fn cfg(method: Method, steps: u64) -> RunConfig {
@@ -19,7 +18,6 @@ fn cfg(method: Method, steps: u64) -> RunConfig {
     cfg.train.steps = steps;
     cfg.train.steps_per_epoch = steps / 2;
     cfg.train.log_every = 0;
-    cfg.artifacts_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     cfg
 }
 

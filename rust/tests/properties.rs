@@ -217,6 +217,58 @@ fn prop_k_from_pct_bounds() {
 }
 
 #[test]
+fn prop_dirichlet_deterministic_under_fixed_seed() {
+    // same util::rng seed ⇒ bit-identical draws, run after run — the
+    // property every "deterministic given seed" trainer guarantee rests on
+    for seed in 0..cases() / 10 {
+        let alpha: Vec<f64> = (1..=12).map(|i| 0.25 * i as f64).collect();
+        let draw = |s: u64| {
+            let mut rng = Rng::seed_from_u64(s);
+            (0..5).map(|_| sample_dirichlet(&alpha, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(seed), draw(seed), "seed {seed}");
+        assert_ne!(draw(seed), draw(seed ^ 0xFFFF), "seed {seed}: distinct seeds collide");
+    }
+}
+
+#[test]
+fn prop_wswor_deterministic_under_fixed_seed() {
+    for seed in 0..cases() / 10 {
+        let p: Vec<f64> = (1..=20).map(|i| i as f64 / 210.0).collect();
+        let draw = |s: u64| {
+            let mut rng = Rng::seed_from_u64(s);
+            (0..8)
+                .map(|k| weighted_sample_without_replacement(&p, 1 + (k % 5), &mut rng))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draw(seed), draw(seed), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_adagrad_full_trajectory_deterministic() {
+    // the composed bandit (dirichlet + wswor + ε decisions) must replay
+    // exactly from its seed, including across explore/exploit boundaries
+    let norms: Vec<f64> = (0..10).map(|i| (i as f64 * 0.37).sin().abs() + 0.1).collect();
+    let run = |seed: u64| {
+        let mut params = AdaGradSelectParams::new(3, 25);
+        params.seed = seed;
+        let mut s = AdaGradSelect::new(10, params);
+        (0..75u64)
+            .map(|t| {
+                s.select(&SelectionCtx {
+                    step: t,
+                    epoch: 1 + (t / 25) as u32,
+                    grad_norms: &norms,
+                })
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(123), run(123));
+    assert_ne!(run(123), run(124));
+}
+
+#[test]
 fn prop_samplers_produce_finite_values() {
     let mut rng = Rng::seed_from_u64(99);
     for _ in 0..20_000 {

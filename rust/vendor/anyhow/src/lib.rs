@@ -1,0 +1,195 @@
+//! In-tree stand-in for the `anyhow` crate.
+//!
+//! The offline build image vendors no registry crates, so the subset of
+//! `anyhow` this repository uses is implemented here with the same
+//! surface: `Error`, `Result`, the `anyhow!` / `bail!` / `ensure!`
+//! macros, and the `Context` extension trait for `Result`. Error values
+//! carry a context chain that `{:?}` prints `anyhow`-style
+//! ("Caused by:" sections), which is what `fn main() -> Result<()>`
+//! shows on failure.
+
+use std::fmt;
+
+/// A context-carrying error. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: Error>` conversion below
+/// stays coherent (the same trick the real crate uses).
+pub struct Error(Box<ErrorImpl>);
+
+struct ErrorImpl {
+    msg: String,
+    cause: Option<Error>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error(Box::new(ErrorImpl { msg: message.to_string(), cause: None }))
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Error(Box::new(ErrorImpl { msg: context.to_string(), cause: Some(self) }))
+    }
+
+    /// The outermost message plus each `Caused by` message, outer first.
+    pub fn chain_messages(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.0.msg.as_str());
+            cur = e.0.cause.as_ref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        let mut cause = self.0.cause.as_ref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {}", e.0.msg)?;
+            cause = e.0.cause.as_ref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion used by [`super::Context`]: implemented for both
+    /// standard errors and [`super::Error`] itself, mirroring the real
+    /// crate's `ext::StdError` arrangement.
+    pub trait IntoError {
+        fn into_err(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_err(self) -> super::Error {
+            super::Error::msg(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_err(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_err().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_err().context(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_debug_prints_causes() {
+        let err = io_fail().context("reading config").unwrap_err();
+        assert_eq!(err.chain_messages(), vec!["reading config", "gone"]);
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        let base: Result<()> = Err(anyhow!("inner {}", 7));
+        let err = base.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{err}"), "outer 1");
+        assert_eq!(err.chain_messages().last().copied(), Some("inner 7"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let n = 3;
+        let b = anyhow!("value {n} and {}", 4);
+        assert_eq!(format!("{b}"), "value 3 and 4");
+        fn bails() -> Result<()> {
+            bail!("stop {}", "now");
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "stop now");
+        fn ensures(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(ensures(1).is_ok());
+        assert!(ensures(-1).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! API stub for the `xla` PJRT bindings.
+//!
+//! The offline build image has no PJRT runtime, but the coordinator's
+//! `pjrt` cargo feature must always *type-check* so the engine code can't
+//! rot. This crate mirrors the subset of the real `xla` crate's API that
+//! `runtime::engine` uses; every entrypoint that would touch PJRT returns
+//! [`Error::Unavailable`] and every runtime value type is uninhabited, so
+//! the stub compiles everywhere and can never be executed by accident.
+//!
+//! On a PJRT-enabled host, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the real bindings instead; no coordinator code
+//! changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub build has no PJRT runtime behind it.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable => write!(
+                f,
+                "xla stub: PJRT runtime not available in this build \
+                 (point the `xla` path dependency at the real bindings)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Uninhabited marker: stub runtime values can never exist.
+enum Void {}
+
+impl Void {
+    fn unreachable(&self) -> ! {
+        match *self {}
+    }
+}
+
+/// Element types accepted by [`PjRtClient::buffer_from_host_buffer`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.0.unreachable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        self.0.unreachable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        self.0.unreachable()
+    }
+}
+
+/// Parsed HLO module (stub: cannot be constructed).
+pub struct HloModuleProto(Void);
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(Void);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        proto.0.unreachable()
+    }
+}
+
+/// Compiled executable handle (stub: cannot be constructed).
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    /// Execute with device-resident buffers; outputs stay on device.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.0.unreachable()
+    }
+}
+
+/// Device buffer handle (stub: cannot be constructed).
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        self.0.unreachable()
+    }
+}
+
+/// Host-side tensor value (stub: cannot be constructed).
+pub struct Literal(Void);
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        self.0.unreachable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.0.unreachable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructors_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let msg = format!("{}", Error::Unavailable);
+        assert!(msg.contains("stub"));
+    }
+}

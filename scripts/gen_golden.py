@@ -1,0 +1,300 @@
+"""Generate the backend-parity golden fixtures from the JAX reference.
+
+Produces ``rust/tests/fixtures/golden_test_tiny.json``, consumed by
+``rust/tests/backend_parity.rs``:
+
+* a 24-step full-fine-tuning loss trajectory of the ``test-tiny`` preset,
+  computed with the L2 JAX model (``python/compile/model.py``, i.e. the
+  ``kernels/ref.py`` semantics) + the reference AdamW update — the
+  pure-Rust backend must reproduce it to 1e-4;
+* step-0 per-block gradient L2 norms (same tolerance, relative);
+* expected block selections for ``TopKSelector`` and ``AdaGradSelect``
+  on fixed gradient-norm inputs, from a bit-exact Python port of the
+  coordinator's xoshiro256++/Dirichlet/E-S sampling stack.
+
+Initial parameters come from a bit-exact port of the Rust
+``ModelState::init`` (xoshiro256++ + SplitMix64 + Box–Muller), so both
+sides start from the same f32 weights.
+
+Run from the repo root: ``python3 scripts/gen_golden.py``
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+import jax
+import jax.numpy as jnp
+
+from compile import model, presets  # noqa: E402
+
+F = np.float32
+M64 = (1 << 64) - 1
+MIN_POSITIVE = 2.2250738585072014e-308  # f64::MIN_POSITIVE
+
+
+# ---------------------------------------------------------------------------
+# bit-exact port of rust/src/util/rng.rs + selection/sampling.rs
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    """xoshiro256++ with SplitMix64 seeding (mirrors util::rng::Rng)."""
+
+    def __init__(self, seed: int):
+        x = seed & M64
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & M64
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        x = (s[0] + s[3]) & M64
+        result = (((x << 23) | (x >> 41)) & M64) + s[0] & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & M64
+        return result
+
+    def gen_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gen_range_f64(self, lo: float, hi: float) -> float:
+        return lo + self.gen_f64() * (hi - lo)
+
+    def gen_bool(self, p: float) -> bool:
+        return self.gen_f64() < p
+
+
+def standard_normal(rng: Rng) -> float:
+    u1 = rng.gen_range_f64(MIN_POSITIVE, 1.0)
+    u2 = rng.gen_f64()
+    return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+def gamma(shape: float, rng: Rng) -> float:
+    assert shape > 0.0
+    if shape < 1.0:
+        u = rng.gen_range_f64(MIN_POSITIVE, 1.0)
+        return gamma(shape + 1.0, rng) * (u ** (1.0 / shape))
+    d = shape - 1.0 / 3.0
+    c = 1.0 / math.sqrt(9.0 * d)
+    while True:
+        x = standard_normal(rng)
+        t = 1.0 + c * x
+        if t <= 0.0:
+            continue
+        v = t * t * t
+        u = rng.gen_range_f64(MIN_POSITIVE, 1.0)
+        if math.log(u) < 0.5 * x * x + d - d * v + d * math.log(v):
+            return d * v
+
+
+def sample_dirichlet(alpha, rng: Rng):
+    draws = [max(gamma(a, rng), 1e-300) for a in alpha]
+    total = sum(draws)
+    return [x / total for x in draws]
+
+
+def wswor(p, k, rng: Rng):
+    keyed = []
+    for i, w in enumerate(p):
+        u = rng.gen_range_f64(1e-12, 1.0)
+        key = math.log(u) / w if w > 0.0 else float("-inf")
+        keyed.append((key, i))
+    keyed.sort(key=lambda kv: -kv[0])
+    return sorted(i for _, i in keyed[:k])
+
+
+def top_k_indices(values, k):
+    idx = sorted(range(len(values)), key=lambda i: (-values[i], i))
+    return sorted(idx[: min(k, len(values))])
+
+
+# ---------------------------------------------------------------------------
+# bit-exact port of model/state.rs ModelState::init
+# ---------------------------------------------------------------------------
+
+
+def init_flats(blocks, seed: int):
+    flats = []
+    for bi, b in enumerate(blocks):
+        flat = np.zeros(b.numel, F)
+        for ti, t in enumerate(b.tensors):
+            if t.init == "ones":
+                flat[t.offset : t.offset + t.numel] = 1.0
+            elif t.init == "zeros":
+                pass
+            elif t.init.startswith("normal:"):
+                std = np.float32(float(t.init.split(":", 1)[1]))
+                s = (
+                    (seed * 0x9E3779B97F4A7C15) & M64
+                ) ^ ((bi * 0xD1B54A32D192ED03) & M64) ^ ((ti + 0x12345678) & M64)
+                rng = Rng(s)
+                vals = np.array(
+                    [standard_normal(rng) for _ in range(t.numel)], dtype=F
+                )
+                flat[t.offset : t.offset + t.numel] = vals * std
+            else:
+                raise ValueError(t.init)
+        flats.append(flat)
+    return flats
+
+
+# ---------------------------------------------------------------------------
+# golden trajectory: JAX fwd/bwd + reference AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(p, g, m, v, lr, t):
+    b1, b2, eps, wd = F(0.9), F(0.999), F(1e-8), F(0.01)
+    one = F(1.0)
+    m = (b1 * m + (one - b1) * g).astype(F)
+    v = (b2 * v + (one - b2) * g * g).astype(F)
+    m_hat = (m / (one - b1 ** F(t))).astype(F)
+    v_hat = (v / (one - b2 ** F(t))).astype(F)
+    p = (p - F(lr) * (m_hat / (np.sqrt(v_hat) + eps) + wd * p)).astype(F)
+    return p, m, v
+
+
+def fixture_tokens(cfg, pad_tail=6):
+    """Deterministic token/target matrices with a PAD tail per row."""
+    rows = cfg.batch * cfg.seq_len
+    tokens = [4 + (i * 7) % 50 for i in range(rows)]
+    targets = [4 + (i * 11) % 50 for i in range(rows)]
+    for r in range(cfg.batch):
+        for j in range(cfg.seq_len - pad_tail, cfg.seq_len):
+            targets[r * cfg.seq_len + j] = 0
+    return tokens, targets
+
+
+def golden_trajectory(steps=24, lr=1e-3, seed=42):
+    cfg = presets.PRESETS["test-tiny"]
+    blocks = presets.block_table(cfg)
+    flats = init_flats(blocks, seed)
+    tokens, targets = fixture_tokens(cfg)
+    tok = jnp.asarray(np.array(tokens, np.int32).reshape(cfg.batch, cfg.seq_len))
+    tgt = jnp.asarray(np.array(targets, np.int32).reshape(cfg.batch, cfg.seq_len))
+
+    ts, _ = model.make_train_step(cfg, "xla")
+    step_fn = jax.jit(ts)
+
+    ms = [np.zeros_like(f) for f in flats]
+    vs = [np.zeros_like(f) for f in flats]
+    losses = []
+    grad_norms0 = []
+    for t in range(steps):
+        out = step_fn(*[jnp.asarray(f) for f in flats], tok, tgt)
+        loss = float(np.asarray(out[0]))
+        grads = [np.asarray(g) for g in out[1:]]
+        if t == 0:
+            grad_norms0 = [
+                float(math.sqrt(float(np.sum(g.astype(np.float64) ** 2))))
+                for g in grads
+            ]
+        losses.append(loss)
+        for i in range(len(flats)):
+            flats[i], ms[i], vs[i] = adamw_update(
+                flats[i], grads[i], ms[i], vs[i], lr, t + 1
+            )
+    return {
+        "preset": "test-tiny",
+        "seed": seed,
+        "steps": steps,
+        "lr": lr,
+        "tokens": tokens,
+        "targets": targets,
+        "losses": losses,
+        "grad_norms_step0": grad_norms0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# selector goldens (ports of selection/{grad_norm,adagrad}.rs)
+# ---------------------------------------------------------------------------
+
+
+def selector_goldens():
+    n = 8
+    # deterministic norm sequence shared with the Rust test
+    norm_seq = [
+        [abs(math.sin(0.37 * (step * n + i))) + 0.05 for i in range(n)]
+        for step in range(20)
+    ]
+    topk = [top_k_indices(norms, 3) for norms in norm_seq]
+
+    # AdaGradSelect port: seed, k=3, steps_per_epoch=10, 20 steps (2 epochs)
+    seed = 7
+    spe = 10
+    k = 3
+    eps0, delta = 1.0, 1.0
+    lam = math.log(100.0) / (spe - 1.0)
+    rng = Rng((seed + 0xA6A6) & M64)
+    freq = [0] * n
+    ags = []
+    for step in range(20):
+        epoch = 1 + step // spe
+        if epoch <= 1:
+            t_in = step % spe
+            eps = eps0 * math.exp(-lam * t_in)
+            if rng.gen_f64() < eps:
+                sel = top_k_indices(norm_seq[step], k)
+            else:
+                alpha = [f + delta for f in freq]
+                p = sample_dirichlet(alpha, rng)
+                sel = wswor(p, k, rng)
+        else:
+            alpha = [f + delta for f in freq]
+            p = sample_dirichlet(alpha, rng)
+            sel = wswor(p, k, rng)
+        for b in sel:
+            freq[b] += 1
+        ags.append(sel)
+    return {
+        "n_blocks": n,
+        "k": k,
+        "steps_per_epoch": spe,
+        "ags_seed": seed,
+        "norms": norm_seq,
+        "topk_selected": topk,
+        "ags_selected": ags,
+    }
+
+
+def main():
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
+        "golden_test_tiny.json",
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    fixture = {
+        "comment": "generated by scripts/gen_golden.py from the JAX reference",
+        "trajectory": golden_trajectory(),
+        "selectors": selector_goldens(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(fixture, f, indent=1)
+    traj = fixture["trajectory"]
+    print(f"wrote {out_path}")
+    print(f"losses: {traj['losses'][0]:.6f} -> {traj['losses'][-1]:.6f}")
+    print(f"grad norms step0: {[round(x, 4) for x in traj['grad_norms_step0']]}")
+
+
+if __name__ == "__main__":
+    main()
