@@ -9,7 +9,13 @@ use adagradselect::util::bench::{bench, header};
 
 fn main() {
     header("optimizer");
-    let budget = Duration::from_millis(400);
+    // CI's bench-smoke job shrinks the measurement budget via
+    // AGSEL_BENCH_BUDGET_MS (same contract as the other bench targets)
+    let budget_ms: u64 = std::env::var("AGSEL_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let budget = Duration::from_millis(budget_ms);
 
     // native fused kernel across block sizes
     for n in [6_144usize, 110_000, 1 << 20] {

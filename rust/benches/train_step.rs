@@ -1,10 +1,22 @@
 //! End-to-end step benchmarks — one per paper table/figure row:
 //!
+//! * naive-oracle vs blocked GEMM kernels at the `test-tiny` (golden
+//!   parity) projection shapes and a paper-scale (`qwen-sim`) shape — the
+//!   "before/after" for the kernel rewrite;
 //! * reference-backend execute latency per preset and entrypoint (the
 //!   Fig. 1 wallclock numerator on this substrate);
 //! * full trainer step per method on qwen-sim (measured CPU wallclock +
 //!   modeled accelerator time side by side — the Fig. 1 / §5.3 source);
-//! * decode-step latency (the serving path).
+//! * decode-step latency (the serving path);
+//! * a steady-state allocation probe over the backend's workspace arena.
+//!
+//! Besides the human-readable rows, the run writes a machine-readable
+//! summary to `BENCH_train_step.json` (override with
+//! `AGSEL_BENCH_TRAIN_JSON`): per-case mean/p50/p95 latency, the
+//! kernel-level speedups, and the arena's high-water bytes plus the
+//! number of slab allocations performed by the steady-state step loop
+//! (expected: 0). CI uploads the file next to `BENCH_selection.json`, and
+//! `scripts/bench_compare` diffs it against the checked-in baseline.
 //!
 //! Runs on the default (reference) backend; point the harness at a PJRT
 //! `Engine` under `--features pjrt` for artifact timings.
@@ -15,13 +27,22 @@ use adagradselect::config::{Method, RunConfig};
 use adagradselect::model::ModelState;
 use adagradselect::runtime::{Backend, ReferenceBackend};
 use adagradselect::train::Trainer;
-use adagradselect::util::bench::{bench, header};
+use adagradselect::util::bench::{bench, header, BenchResult};
+use adagradselect::util::gemm::{gemm_nn, gemm_tn, oracle};
+use adagradselect::util::json::Value;
+use adagradselect::util::rng::Rng;
+use adagradselect::util::workspace::Workspace;
 
-fn bench_exe<B: Backend>(engine: &B, preset: &str, entry: &str, budget: Duration) {
+fn bench_exe<B: Backend>(
+    engine: &B,
+    preset: &str,
+    entry: &str,
+    budget: Duration,
+) -> Option<BenchResult> {
     let p = engine.manifest().preset(preset).unwrap().clone();
     let exe = match engine.load_preset_exe(preset, entry) {
         Ok(e) => e,
-        Err(_) => return, // entrypoint not exported for this preset
+        Err(_) => return None, // entrypoint not exported for this preset
     };
     let state = ModelState::init(&p.blocks, 0);
     let mut blocks: Vec<B::Buffer> =
@@ -40,32 +61,155 @@ fn bench_exe<B: Backend>(engine: &B, preset: &str, entry: &str, budget: Duration
     if entry != "decode_step" {
         args.push(&tgt);
     }
-    bench(&format!("execute/{preset}/{entry}"), budget, || {
+    Some(bench(&format!("execute/{preset}/{entry}"), budget, || {
         std::hint::black_box(engine.execute(&exe, &args).unwrap());
+    }))
+}
+
+/// Naive-oracle vs blocked kernel at one GEMM shape; returns a JSON row.
+/// The oracle preserves the pre-PR kernel's exact loop semantics but runs
+/// single-threaded; at the test-tiny shapes the blocked kernel is below
+/// its parallel threshold too, so that comparison is apples-to-apples.
+#[allow(clippy::too_many_arguments)]
+fn bench_gemm_pair(
+    label: &str,
+    tn: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+    budget: Duration,
+    results: &mut Vec<BenchResult>,
+) -> Value {
+    let mut rng = Rng::seed_from_u64(42);
+    // operand storage: [m,k] for NN, [k,m] for the transposed-A product
+    let a: Vec<f32> = (0..m * k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+    let mut out = vec![0.0f32; m * n];
+    let naive = bench(&format!("gemm_naive/{label}"), budget, || {
+        if tn {
+            oracle::matmul_tn(std::hint::black_box(&mut out), &a, &b, m, k, n, 1.0, false);
+        } else {
+            oracle::matmul_nn(std::hint::black_box(&mut out), &a, &b, m, k, n, 1.0, false);
+        }
     });
+    let mut ws = Workspace::new();
+    let blocked = bench(&format!("gemm_blocked/{label}"), budget, || {
+        if tn {
+            gemm_tn(&mut ws, std::hint::black_box(&mut out), &a, &b, m, k, n, 1.0, false);
+        } else {
+            gemm_nn(&mut ws, std::hint::black_box(&mut out), &a, &b, m, k, n, 1.0, false);
+        }
+    });
+    let speedup = naive.mean_ns / blocked.mean_ns;
+    // above this many muladds the blocked kernel fans out over threads
+    // while the oracle stays serial — flag those rows so the JSON never
+    // passes a thread-count win off as a kernel win
+    let blocked_parallel = m * k * n >= 1 << 20;
+    println!(
+        "    -> blocked is {speedup:.2}x vs serial naive at ({m},{k},{n}){}",
+        if blocked_parallel { "  [blocked ran multi-threaded]" } else { "" }
+    );
+    let row = Value::obj(vec![
+        ("shape", Value::str(format!("{label} ({m}x{k}x{n})"))),
+        ("naive_mean_ns", Value::num(naive.mean_ns)),
+        ("blocked_mean_ns", Value::num(blocked.mean_ns)),
+        ("speedup_vs_serial_naive", Value::num(speedup)),
+        ("blocked_ran_parallel", Value::Bool(blocked_parallel)),
+    ]);
+    results.push(naive);
+    results.push(blocked);
+    row
+}
+
+fn result_row(r: &BenchResult) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(&r.name)),
+        ("mean_ns", Value::num(r.mean_ns)),
+        ("p50_ns", Value::num(r.p50_ns)),
+        ("p95_ns", Value::num(r.p95_ns)),
+        ("iters", Value::num(r.iters as f64)),
+    ])
 }
 
 fn main() {
     header("train_step");
     let quick = std::env::var_os("AGSEL_BENCH_QUICK").is_some();
-    let budget = Duration::from_millis(if quick { 150 } else { 1500 });
+    let budget_ms: u64 = std::env::var("AGSEL_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 150 } else { 1500 });
+    let budget = Duration::from_millis(budget_ms);
     let engine = ReferenceBackend::new();
+    let mut results: Vec<BenchResult> = Vec::new();
 
+    // --- kernel before/after: naive oracle vs blocked GEMM ---
+    println!("\n-- GEMM kernels: naive (pre-PR baseline) vs blocked --");
+    let mut kernel_rows: Vec<Value> = Vec::new();
+    // (label, transposed-A product, m, k, n) in product dims; the TN rows
+    // are the xᵀ·dy weight-gradient shape where the naive kernel's
+    // column-strided reads hurt most
+    let shapes: &[(&str, bool, usize, usize, usize)] = &[
+        ("test-tiny/qkv", false, 256, 32, 32),
+        ("test-tiny/mlp-up", false, 256, 32, 96),
+        ("test-tiny/mlp-down", false, 256, 96, 32),
+        ("test-tiny/head", false, 256, 32, 64),
+        ("test-tiny/wgrad-ta", true, 32, 256, 96),
+        ("qwen-sim/mlp-up", false, 1024, 64, 176),
+        ("qwen-sim/wgrad-ta", true, 64, 1024, 176),
+    ];
+    for &(label, tn, m, k, n) in shapes {
+        if quick && m.max(k) > 256 {
+            continue;
+        }
+        kernel_rows.push(bench_gemm_pair(label, tn, m, k, n, budget, &mut results));
+    }
+
+    // --- backend execute latency per preset/entry ---
+    println!();
     let presets: &[&str] = if quick {
         &["test-tiny"]
     } else {
         &["test-tiny", "qwen-sim", "llama-sim", "phi-sim", "e2e"]
     };
     for preset in presets {
-        bench_exe(&engine, preset, "train_step", budget);
+        results.extend(bench_exe(&engine, preset, "train_step", budget));
     }
     let heavy = if quick { "test-tiny" } else { "qwen-sim" };
-    bench_exe(&engine, heavy, "train_step_pallas", budget);
-    bench_exe(&engine, heavy, "train_step_lora", budget);
-    bench_exe(&engine, heavy, "eval_loss", budget);
-    bench_exe(&engine, heavy, "decode_step", budget);
+    results.extend(bench_exe(&engine, heavy, "train_step_pallas", budget));
+    results.extend(bench_exe(&engine, heavy, "train_step_lora", budget));
+    results.extend(bench_exe(&engine, heavy, "eval_loss", budget));
+    results.extend(bench_exe(&engine, heavy, "decode_step", budget));
 
-    // full coordinator step per method (the Fig. 1 comparison, measured)
+    // --- steady-state allocation probe over the workspace arena ---
+    let steady_grows = {
+        let p = engine.manifest().preset("test-tiny").unwrap().clone();
+        let exe = engine.load_preset_exe("test-tiny", "train_step").unwrap();
+        let state = ModelState::init(&p.blocks, 0);
+        let bufs: Vec<_> =
+            state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+        let (b, s) = (p.model.batch, p.model.seq_len);
+        let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 50) as i32).collect();
+        let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
+        let mut args: Vec<_> = bufs.iter().collect();
+        args.push(&tok);
+        args.push(&tok);
+        // one warm-up step: the decode benches above disowned their logits
+        // buffers (outputs leave the arena), so the pool must refill once
+        std::hint::black_box(engine.execute(&exe, &args).unwrap());
+        let warm = engine.workspace_stats();
+        for _ in 0..10 {
+            std::hint::black_box(engine.execute(&exe, &args).unwrap());
+        }
+        engine.workspace_stats().grows - warm.grows
+    };
+    let steady = engine.workspace_stats();
+    println!(
+        "\n-- workspace arena: high-water {:.2} MiB, steady-state slab allocations over 10 \
+         steps: {steady_grows} --",
+        steady.high_water_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    // --- full coordinator step per method (the Fig. 1 comparison) ---
     println!("\n-- trainer step per method ({heavy}): measured CPU + modeled accel --");
     for method in [
         Method::Full,
@@ -92,5 +236,33 @@ fn main() {
             r.mean_s() * 1e3,
             sim * 1e3
         );
+        results.push(r);
     }
+
+    // --- machine-readable summary next to BENCH_selection.json ---
+    let ws_stats = engine.workspace_stats();
+    let summary = Value::obj(vec![
+        ("schema", Value::num(1.0)),
+        ("quick", Value::Bool(quick)),
+        ("budget_ms", Value::num(budget_ms as f64)),
+        // a raw run is never a calibrated baseline; only
+        // `scripts/bench_compare --write-baseline` stamps calibrated:true
+        ("calibrated", Value::Bool(false)),
+        ("results", Value::Arr(results.iter().map(result_row).collect())),
+        ("kernel_speedups", Value::Arr(kernel_rows)),
+        (
+            "workspace",
+            Value::obj(vec![
+                ("high_water_bytes", Value::num(ws_stats.high_water_bytes as f64)),
+                ("capacity_bytes", Value::num(ws_stats.capacity_bytes as f64)),
+                ("grows_total", Value::num(ws_stats.grows as f64)),
+                ("takes_total", Value::num(ws_stats.takes as f64)),
+                ("steady_state_grows_10_steps", Value::num(steady_grows as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("AGSEL_BENCH_TRAIN_JSON")
+        .unwrap_or_else(|_| "BENCH_train_step.json".to_string());
+    std::fs::write(&path, format!("{summary}\n")).expect("write bench summary");
+    println!("\nwrote {path}");
 }

@@ -9,6 +9,14 @@
 //! like the paper's own §3.3 calculation); the residency manager
 //! additionally *observes* the optimizer component at runtime and the two
 //! are cross-checked in tests.
+//!
+//! Since the reference backend runs every step out of a recycling
+//! [`Workspace`](crate::util::workspace::Workspace) arena, the activation
+//! component can also be *measured*: the arena's high-water mark is the
+//! real peak scratch/activation footprint of a step. Use
+//! [`MemoryReport::with_observed_activations`] with
+//! `ReferenceBackend::workspace_stats()` to replace the modeled estimate
+//! with the measured number in selective-vs-full comparisons.
 
 mod paper_scale;
 
@@ -30,6 +38,15 @@ pub struct MemoryReport {
 impl MemoryReport {
     pub fn total(&self) -> usize {
         self.params + self.grads + self.optimizer + self.activations
+    }
+
+    /// Replace the modeled activation estimate with a measured number —
+    /// typically the reference backend's workspace high-water mark
+    /// (`ReferenceBackend::workspace_stats().high_water_bytes`), which is
+    /// the real peak activation + scratch footprint of a training step.
+    pub fn with_observed_activations(mut self, observed_bytes: usize) -> Self {
+        self.activations = observed_bytes;
+        self
     }
 
     pub fn to_json(&self) -> crate::util::json::Value {
@@ -192,6 +209,42 @@ mod tests {
         let b = method_memory(&p, &Method::Lora { double_rank: true }, 2);
         assert!(b.params > a.params);
         assert!(b.optimizer > a.optimizer);
+    }
+
+    #[test]
+    fn observed_activations_come_from_the_arena_high_water() {
+        use crate::model::ModelState;
+        use crate::runtime::{Backend, ReferenceBackend};
+
+        let engine = ReferenceBackend::new();
+        let p = engine.manifest().preset("test-tiny").unwrap().clone();
+        let exe = engine.load_preset_exe("test-tiny", "train_step").unwrap();
+        let state = ModelState::init(&p.blocks, 5);
+        let blocks: Vec<_> =
+            state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+        let (b, s) = (p.model.batch, p.model.seq_len);
+        let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 40) as i32).collect();
+        let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
+        let mut args: Vec<_> = blocks.iter().collect();
+        args.push(&tok);
+        args.push(&tok);
+        engine.execute(&exe, &args).unwrap();
+
+        let observed = engine.workspace_stats().high_water_bytes;
+        assert!(observed > 0);
+        let modeled = method_memory(&p, &Method::Full, 4);
+        let report = modeled.with_observed_activations(observed);
+        assert_eq!(report.activations, observed);
+        assert_eq!(report.params, modeled.params);
+        // the static estimate and the measurement must agree on the order
+        // of magnitude (the estimate ignores attention probs and GEMM pack
+        // scratch; the arena sees everything)
+        let est = modeled.activations as f64;
+        let obs = observed as f64;
+        assert!(
+            obs / est < 32.0 && est / obs < 32.0,
+            "estimate {est:.0}B vs observed {obs:.0}B diverge wildly"
+        );
     }
 
     #[test]

@@ -8,11 +8,32 @@
 //! (`W + 2·A·B` on every projection) are supported on the same code path
 //! with the base weights frozen, mirroring `make_lora_train_step`.
 //!
-//! Everything operates on row-major `[rows, cols]` slices; matmuls are
-//! parallelized across output rows via `util::par` once they are large
-//! enough to amortize the fan-out. Gradient correctness is pinned three
-//! ways: finite-difference checks in this module, causality/shape tests in
-//! `tests/integration_runtime.rs`, and golden trajectories lowered from
+//! Everything operates on row-major `[rows, cols]` slices. All matrix
+//! products run through the cache-blocked packed kernels in
+//! [`crate::util::gemm`] (`NN` plus fused `TN`/`NT` transpose variants, so
+//! the gradient products `xᵀ·dy` and `dy·Wᵀ` never materialize a
+//! transposed copy), and every intermediate buffer comes from a
+//! [`Workspace`] arena threaded through the whole fwd/bwd path: after one
+//! warm-up step, a train step performs zero slab allocations — the only
+//! remaining heap traffic is O(n_layers) bookkeeping and the gradient
+//! vectors returned to the caller, which are the API boundary.
+//!
+//! **Workspace lifetime rules** (see `util::workspace` for the arena
+//! itself): every internal buffer is `take`n from the arena and `give`n
+//! back when it dies; forward caches live until their layer's backward
+//! pass consumes them ([`LayerCache::recycle`]); buffers returned to the
+//! caller (decoded logits) are `disown`ed instead of recycled. All
+//! data-dependent input validation (shapes, token/target ranges) runs
+//! **before** the first arena take, so bad inputs cannot skew the
+//! accounting; a mid-step structural error (e.g. a malformed block spec)
+//! drops the in-flight buffers — the arena stays usable, it just
+//! re-grows on the next step.
+//!
+//! Gradient correctness is pinned four ways: finite-difference checks for
+//! the full step *and* for the individual kernels (`attention_bwd`,
+//! `rmsnorm_bwd`, `proj_bwd`) in this module, causality/shape tests in
+//! `tests/integration_runtime.rs`, GEMM property tests against naive
+//! oracles in `tests/gemm_props.rs`, and golden trajectories lowered from
 //! the JAX reference in `tests/backend_parity.rs`.
 
 #![allow(clippy::needless_range_loop)]
@@ -20,14 +41,12 @@
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{BlockSpec, ModelSpec};
-use crate::util::par::par_for_each_mut;
+use crate::util::gemm::{gemm_nn, gemm_nt, gemm_tn};
+use crate::util::par::{par_for_each_index, SendPtr};
+use crate::util::workspace::Workspace;
 
 /// LoRA output scale: `alpha / r` with `alpha = 2r`.
 pub const LORA_SCALE: f32 = 2.0;
-
-/// Below this many FLOPs a matmul runs serially (thread fan-out costs
-/// more than it saves).
-const PAR_FLOPS_MIN: usize = 1 << 16;
 
 // ---------------------------------------------------------------------------
 // tensor lookup inside block-flat vectors
@@ -63,84 +82,80 @@ fn write_tensor(flat: &mut [f32], block: &BlockSpec, name: &str, data: &[f32]) -
 }
 
 // ---------------------------------------------------------------------------
-// matmul kernels (row-parallel)
+// matmul entrypoints (thin wrappers over the blocked GEMM kernels, keeping
+// the historical reference-kernel signatures so the call sites read the
+// same as the math)
 // ---------------------------------------------------------------------------
 
-fn par_over_rows(out: &mut [f32], cols: usize, flops: usize, f: impl Fn(usize, &mut [f32]) + Sync) {
-    if flops >= PAR_FLOPS_MIN && out.len() > cols {
-        let mut rows: Vec<(usize, &mut [f32])> = out.chunks_mut(cols).enumerate().collect();
-        par_for_each_mut(&mut rows, |_, job| f(job.0, &mut *job.1));
-    } else {
-        for (i, row) in out.chunks_mut(cols).enumerate() {
-            f(i, row);
-        }
-    }
-}
-
 /// `out[m,n] += scale * a[m,k] @ b[k,n]`
-fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, scale: f32) {
-    assert_eq!(a.len(), m * k, "matmul_acc: a shape");
-    assert_eq!(b.len(), k * n, "matmul_acc: b shape");
-    assert_eq!(out.len(), m * n, "matmul_acc: out shape");
-    par_over_rows(out, n, m * k * n, |i, orow| {
-        let arow = &a[i * k..(i + 1) * k];
-        for (p, &av) in arow.iter().enumerate() {
-            let av = av * scale;
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    });
+#[allow(clippy::too_many_arguments)]
+fn matmul_acc(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+) {
+    gemm_nn(ws, out, a, b, m, k, n, scale, true);
 }
 
-/// `a[m,k] @ b[k,n]`
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    matmul_acc(&mut out, a, b, m, k, n, 1.0);
+/// `a[m,k] @ b[k,n]` into a fresh workspace buffer.
+fn matmul(ws: &mut Workspace, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = ws.take(m * n);
+    gemm_nn(ws, &mut out, a, b, m, k, n, 1.0, false);
     out
 }
 
-/// `scale * aᵀ[k,m] @ dy[m,n]` — the weight-gradient product `xᵀ·dy`.
-fn matmul_ta(a: &[f32], dy: &[f32], m: usize, k: usize, n: usize, scale: f32) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul_ta: a shape");
-    assert_eq!(dy.len(), m * n, "matmul_ta: dy shape");
-    let mut out = vec![0.0f32; k * n];
-    par_over_rows(&mut out, n, m * k * n, |j, orow| {
-        for i in 0..m {
-            let av = a[i * k + j] * scale;
-            let dyrow = &dy[i * n..(i + 1) * n];
-            for (o, &dv) in orow.iter_mut().zip(dyrow) {
-                *o += av * dv;
-            }
-        }
-    });
-    out
+/// `out[k,n] = scale * aᵀ[k,m] @ dy[m,n]` with `a[m,k]` — the
+/// weight-gradient product `xᵀ·dy`, fused transpose (no copy of `aᵀ`).
+#[allow(clippy::too_many_arguments)]
+fn matmul_ta_into(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    a: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+) {
+    // product dims: M=k, K=m, N=n; `a` is stored [m,k] = [K,M] row-major
+    gemm_tn(ws, out, a, dy, k, m, n, scale, false);
 }
 
 /// `out[m,k] += scale * dy[m,n] @ wᵀ` with `w[k,n]` — the input-gradient
-/// product `dy·Wᵀ`.
-fn matmul_tb_acc(out: &mut [f32], dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, scale: f32) {
-    assert_eq!(dy.len(), m * n, "matmul_tb_acc: dy shape");
-    assert_eq!(w.len(), k * n, "matmul_tb_acc: w shape");
-    assert_eq!(out.len(), m * k, "matmul_tb_acc: out shape");
-    par_over_rows(out, k, m * k * n, |i, orow| {
-        let dyrow = &dy[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let wrow = &w[j * n..(j + 1) * n];
-            let mut dot = 0.0f32;
-            for (&dv, &wv) in dyrow.iter().zip(wrow) {
-                dot += dv * wv;
-            }
-            *o += scale * dot;
-        }
-    });
+/// product `dy·Wᵀ`, fused transpose (no copy of `wᵀ`).
+#[allow(clippy::too_many_arguments)]
+fn matmul_tb_acc(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+) {
+    // product dims: M=m, K=n, N=k; `w` is stored [k,n] = [N,K] row-major
+    gemm_nt(ws, out, dy, w, m, n, k, scale, true);
 }
 
-fn matmul_tb(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, scale: f32) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * k];
-    matmul_tb_acc(&mut out, dy, w, m, k, n, scale);
-    out
+/// Assigning variant of [`matmul_tb_acc`] (`out = ...` instead of `+=`).
+#[allow(clippy::too_many_arguments)]
+fn matmul_tb_into(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+) {
+    gemm_nt(ws, out, dy, w, m, n, k, scale, false);
 }
 
 fn add_into(out: &mut [f32], x: &[f32]) {
@@ -156,9 +171,16 @@ fn add_into(out: &mut [f32], x: &[f32]) {
 
 /// RMSNorm forward: `y = x * rsqrt(mean(x²) + eps) * w`. Returns `(y,
 /// inv)` where `inv[r]` is the per-row reciprocal RMS cached for backward.
-fn rmsnorm_fwd(x: &[f32], w: &[f32], eps: f32, rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut y = vec![0.0f32; rows * d];
-    let mut inv = vec![0.0f32; rows];
+fn rmsnorm_fwd(
+    ws: &mut Workspace,
+    x: &[f32],
+    w: &[f32],
+    eps: f32,
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut y = ws.take(rows * d);
+    let mut inv = ws.take(rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
@@ -174,7 +196,9 @@ fn rmsnorm_fwd(x: &[f32], w: &[f32], eps: f32, rows: usize, d: usize) -> (Vec<f3
 
 /// RMSNorm backward. `dw` (when given) receives `Σ_r dy·x·inv` per
 /// coordinate; the return value is `dx`.
+#[allow(clippy::too_many_arguments)]
 fn rmsnorm_bwd(
+    ws: &mut Workspace,
     x: &[f32],
     w: &[f32],
     inv: &[f32],
@@ -183,7 +207,7 @@ fn rmsnorm_bwd(
     d: usize,
     mut dw: Option<&mut [f32]>,
 ) -> Vec<f32> {
-    let mut dx = vec![0.0f32; rows * d];
+    let mut dx = ws.take(rows * d);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -207,20 +231,30 @@ fn rmsnorm_bwd(
 }
 
 /// Precomputed rotary tables: `cos/sin[pos * half + j]` for
-/// `angle = pos · theta^(−j/half)`.
+/// `angle = pos · theta^(−j/half)`. The tables borrow slabs from the
+/// workspace; callers return them via [`RopeTables::recycle`].
 struct RopeTables {
     cos: Vec<f32>,
     sin: Vec<f32>,
     half: usize,
 }
 
-fn rope_tables(s: usize, d_head: usize, theta: f32) -> RopeTables {
+impl RopeTables {
+    fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.cos);
+        ws.give(self.sin);
+    }
+}
+
+fn rope_tables(ws: &mut Workspace, s: usize, d_head: usize, theta: f32) -> RopeTables {
     assert!(d_head % 2 == 0, "rotary embedding needs an even head dim");
     let half = d_head / 2;
-    let freqs: Vec<f32> =
-        (0..half).map(|j| theta.powf(-(j as f32) / half as f32)).collect();
-    let mut cos = vec![0.0f32; s * half];
-    let mut sin = vec![0.0f32; s * half];
+    let mut freqs = ws.take(half);
+    for (j, fr) in freqs.iter_mut().enumerate() {
+        *fr = theta.powf(-(j as f32) / half as f32);
+    }
+    let mut cos = ws.take(s * half);
+    let mut sin = ws.take(s * half);
     for pos in 0..s {
         for j in 0..half {
             let angle = pos as f32 * freqs[j];
@@ -228,6 +262,7 @@ fn rope_tables(s: usize, d_head: usize, theta: f32) -> RopeTables {
             sin[pos * half + j] = angle.sin();
         }
     }
+    ws.give(freqs);
     RopeTables { cos, sin, half }
 }
 
@@ -257,7 +292,11 @@ fn rope_apply(x: &mut [f32], s: usize, n_heads: usize, d_head: usize, t: &RopeTa
 /// (q and k already rotary-encoded). Returns the head-concatenated
 /// context `[b·s, d]` and the cached probabilities `[b, h, s, s]`
 /// (strictly lower-triangular rows; masked entries are exactly 0).
+/// Parallel over batch entries; each batch owns a disjoint slice of the
+/// outputs, with no per-call job vector.
+#[allow(clippy::too_many_arguments)]
 fn attention_fwd(
+    ws: &mut Workspace,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -268,19 +307,22 @@ fn attention_fwd(
 ) -> (Vec<f32>, Vec<f32>) {
     let d = n_heads * d_head;
     let scale = 1.0 / (d_head as f32).sqrt();
-    let mut att = vec![0.0f32; b * s * d];
-    let mut probs = vec![0.0f32; b * n_heads * s * s];
+    let mut att = ws.take_zeroed(b * s * d);
+    let mut probs = ws.take_zeroed(b * n_heads * s * s);
 
-    let mut jobs: Vec<(usize, &mut [f32], &mut [f32])> = att
-        .chunks_mut(s * d)
-        .zip(probs.chunks_mut(n_heads * s * s))
-        .enumerate()
-        .map(|(bi, (a, p))| (bi, a, p))
-        .collect();
-    par_for_each_mut(&mut jobs, |_, job| {
-        let bi = job.0;
-        let att_b: &mut [f32] = &mut *job.1;
-        let probs_b: &mut [f32] = &mut *job.2;
+    let att_ptr = SendPtr(att.as_mut_ptr());
+    let probs_ptr = SendPtr(probs.as_mut_ptr());
+    par_for_each_index(b, true, |bi| {
+        // safety: each batch index owns disjoint stripes of att/probs
+        let att_b = unsafe {
+            std::slice::from_raw_parts_mut(att_ptr.get().add(bi * s * d), s * d)
+        };
+        let probs_b = unsafe {
+            std::slice::from_raw_parts_mut(
+                probs_ptr.get().add(bi * n_heads * s * s),
+                n_heads * s * s,
+            )
+        };
         let base = bi * s;
         for h in 0..n_heads {
             let off = h * d_head;
@@ -327,6 +369,7 @@ fn attention_fwd(
 /// and w.r.t. v, all `[b·s, d]`.
 #[allow(clippy::too_many_arguments)]
 fn attention_bwd(
+    ws: &mut Workspace,
     d_att: &[f32],
     q: &[f32],
     k: &[f32],
@@ -339,24 +382,27 @@ fn attention_bwd(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let d = n_heads * d_head;
     let scale = 1.0 / (d_head as f32).sqrt();
-    let mut dq = vec![0.0f32; b * s * d];
-    let mut dk = vec![0.0f32; b * s * d];
-    let mut dv = vec![0.0f32; b * s * d];
+    let mut dq = ws.take_zeroed(b * s * d);
+    let mut dk = ws.take_zeroed(b * s * d);
+    let mut dv = ws.take_zeroed(b * s * d);
+    // per-batch softmax scratch rows (each batch writes dp[0..=i] before
+    // reading it, so stale contents are never observed)
+    let mut dp_all = ws.take(b * s);
 
-    let mut jobs: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> = dq
-        .chunks_mut(s * d)
-        .zip(dk.chunks_mut(s * d))
-        .zip(dv.chunks_mut(s * d))
-        .enumerate()
-        .map(|(bi, ((a, c), e))| (bi, a, c, e))
-        .collect();
-    par_for_each_mut(&mut jobs, |_, job| {
-        let bi = job.0;
-        let dq_b: &mut [f32] = &mut *job.1;
-        let dk_b: &mut [f32] = &mut *job.2;
-        let dv_b: &mut [f32] = &mut *job.3;
+    let dq_ptr = SendPtr(dq.as_mut_ptr());
+    let dk_ptr = SendPtr(dk.as_mut_ptr());
+    let dv_ptr = SendPtr(dv.as_mut_ptr());
+    let dp_ptr = SendPtr(dp_all.as_mut_ptr());
+    par_for_each_index(b, true, |bi| {
+        // safety: each batch index owns disjoint stripes of dq/dk/dv/dp
+        let dq_b =
+            unsafe { std::slice::from_raw_parts_mut(dq_ptr.get().add(bi * s * d), s * d) };
+        let dk_b =
+            unsafe { std::slice::from_raw_parts_mut(dk_ptr.get().add(bi * s * d), s * d) };
+        let dv_b =
+            unsafe { std::slice::from_raw_parts_mut(dv_ptr.get().add(bi * s * d), s * d) };
+        let dp = unsafe { std::slice::from_raw_parts_mut(dp_ptr.get().add(bi * s), s) };
         let base = bi * s;
-        let mut dp = vec![0.0f32; s];
         for h in 0..n_heads {
             let off = h * d_head;
             for i in 0..s {
@@ -393,6 +439,7 @@ fn attention_bwd(
             }
         }
     });
+    ws.give(dp_all);
     (dq, dk, dv)
 }
 
@@ -416,15 +463,30 @@ fn silu_grad(x: f32) -> f32 {
 // masked cross-entropy
 // ---------------------------------------------------------------------------
 
-/// Mean cross-entropy over non-pad target positions, plus `dL/dlogits`.
+/// Reject out-of-range target ids (pad is always legal). Like
+/// [`check_tokens`], runs before any arena take on the entry paths.
+fn check_targets(targets: &[i32], vocab: usize, pad: i32) -> Result<()> {
+    for &t in targets {
+        if t != pad && (t < 0 || t as usize >= vocab) {
+            return Err(anyhow!("target id {t} out of vocab range 0..{vocab}"));
+        }
+    }
+    Ok(())
+}
+
+/// Mean cross-entropy over non-pad target positions; with `want_grad`,
+/// also `dL/dlogits` (in a workspace buffer).
 fn masked_ce(
+    ws: &mut Workspace,
     logits: &[f32],
     targets: &[i32],
     rows: usize,
     vocab: usize,
     pad: i32,
-) -> Result<(f32, Vec<f32>)> {
-    let mut dlogits = vec![0.0f32; rows * vocab];
+    want_grad: bool,
+) -> Result<(f32, Option<Vec<f32>>)> {
+    check_targets(targets, vocab, pad)?;
+    let mut dlogits = if want_grad { Some(ws.take_zeroed(rows * vocab)) } else { None };
     let n_mask = targets.iter().filter(|&&t| t != pad).count().max(1) as f32;
     let inv = 1.0 / n_mask;
     let mut loss_sum = 0.0f64;
@@ -432,9 +494,6 @@ fn masked_ce(
         let t = targets[r];
         if t == pad {
             continue; // gradient row stays zero
-        }
-        if t < 0 || t as usize >= vocab {
-            return Err(anyhow!("target id {t} out of vocab range 0..{vocab}"));
         }
         let lrow = &logits[r * vocab..(r + 1) * vocab];
         let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -444,11 +503,13 @@ fn masked_ce(
         }
         let logz = maxv + sum.ln();
         loss_sum -= (lrow[t as usize] - logz) as f64;
-        let drow = &mut dlogits[r * vocab..(r + 1) * vocab];
-        for (dj, &x) in drow.iter_mut().zip(lrow) {
-            *dj = (x - maxv).exp() / sum * inv;
+        if let Some(dl) = dlogits.as_deref_mut() {
+            let drow = &mut dl[r * vocab..(r + 1) * vocab];
+            for (dj, &x) in drow.iter_mut().zip(lrow) {
+                *dj = (x - maxv).exp() / sum * inv;
+            }
+            drow[t as usize] -= inv;
         }
-        drow[t as usize] -= inv;
     }
     Ok(((loss_sum / n_mask as f64) as f32, dlogits))
 }
@@ -501,7 +562,9 @@ fn lora_params<'a>(flat: &'a [f32], spec: &BlockSpec) -> Result<LoraParams<'a>> 
     Ok(LoraParams { ab })
 }
 
-/// Forward activations cached for the backward pass (one per layer).
+/// Forward activations cached for the backward pass (one per layer). All
+/// buffers are workspace slabs; [`LayerCache::recycle`] returns them once
+/// the layer's backward pass has consumed them.
 struct LayerCache {
     h_in: Vec<f32>,
     x1: Vec<f32>,
@@ -521,29 +584,60 @@ struct LayerCache {
     xa: [Option<Vec<f32>>; 7],
 }
 
+impl LayerCache {
+    fn recycle(self, ws: &mut Workspace) {
+        let LayerCache {
+            h_in,
+            x1,
+            inv1,
+            qr,
+            kr,
+            v,
+            probs,
+            att,
+            h_mid,
+            x2,
+            inv2,
+            gp,
+            up,
+            act,
+            xa,
+        } = self;
+        for buf in [h_in, x1, inv1, qr, kr, v, probs, att, h_mid, x2, inv2, gp, up, act] {
+            ws.give(buf);
+        }
+        for buf in xa.into_iter().flatten() {
+            ws.give(buf);
+        }
+    }
+}
+
 /// `y = x@W (+ 2·(x@A)@B)`; returns `(y, x@A)`.
 fn proj_fwd(
+    ws: &mut Workspace,
     x: &[f32],
     w: (&[f32], usize, usize),
     lora: Option<(&[f32], &[f32], usize)>,
     m: usize,
 ) -> (Vec<f32>, Option<Vec<f32>>) {
     let (wm, d_in, d_out) = w;
-    let mut y = matmul(x, wm, m, d_in, d_out);
+    let mut y = matmul(ws, x, wm, m, d_in, d_out);
     match lora {
         None => (y, None),
         Some((a, bm, r)) => {
-            let xa = matmul(x, a, m, d_in, r);
-            matmul_acc(&mut y, &xa, bm, m, r, d_out, LORA_SCALE);
+            let xa = matmul(ws, x, a, m, d_in, r);
+            matmul_acc(ws, &mut y, &xa, bm, m, r, d_out, LORA_SCALE);
             (y, Some(xa))
         }
     }
 }
 
 /// Backward through [`proj_fwd`]: accumulates `dx`, optionally emits the
-/// base weight gradient and the adapter gradients.
+/// base weight gradient and the adapter gradients (both written in
+/// assign mode — no pre-zeroed buffers needed).
 #[allow(clippy::too_many_arguments)]
 fn proj_bwd(
+    ws: &mut Workspace,
     dy: &[f32],
     x: &[f32],
     xa: Option<&[f32]>,
@@ -555,16 +649,18 @@ fn proj_bwd(
     dab: Option<(&mut [f32], &mut [f32])>,
 ) {
     let (wm, d_in, d_out) = w;
-    matmul_tb_acc(dx, dy, wm, m, d_in, d_out, 1.0);
+    matmul_tb_acc(ws, dx, dy, wm, m, d_in, d_out, 1.0);
     if let Some(dw) = dw {
-        dw.copy_from_slice(&matmul_ta(x, dy, m, d_in, d_out, 1.0));
+        matmul_ta_into(ws, dw, x, dy, m, d_in, d_out, 1.0);
     }
     if let (Some((a, bm, r)), Some(xa), Some((da, db))) = (lora, xa, dab) {
         // d(xa) = 2 · dy @ Bᵀ; dx += d(xa) @ Aᵀ; dA = xᵀ d(xa); dB = 2·xaᵀ dy
-        let d_xa = matmul_tb(dy, bm, m, r, d_out, LORA_SCALE);
-        matmul_tb_acc(dx, &d_xa, a, m, d_in, r, 1.0);
-        da.copy_from_slice(&matmul_ta(x, &d_xa, m, d_in, r, 1.0));
-        db.copy_from_slice(&matmul_ta(xa, dy, m, r, d_out, LORA_SCALE));
+        let mut d_xa = ws.take(m * r);
+        matmul_tb_into(ws, &mut d_xa, dy, bm, m, r, d_out, LORA_SCALE);
+        matmul_tb_acc(ws, dx, &d_xa, a, m, d_in, r, 1.0);
+        matmul_ta_into(ws, da, x, &d_xa, m, d_in, r, 1.0);
+        matmul_ta_into(ws, db, xa, dy, m, r, d_out, LORA_SCALE);
+        ws.give(d_xa);
     }
 }
 
@@ -603,6 +699,7 @@ impl Dims {
 }
 
 fn layer_fwd(
+    ws: &mut Workspace,
     h: Vec<f32>,
     p: &LayerParams,
     lora: Option<&LoraParams>,
@@ -614,36 +711,51 @@ fn layer_fwd(
     let (d, f) = (dims.d, dims.d_ff);
     let lt = |slot: usize| lora.map(|l| l.ab[slot]);
 
-    let (x1, inv1) = rmsnorm_fwd(&h, p.ln1, dims.norm_eps, m, d);
-    let (mut q, xa_q) = proj_fwd(&x1, p.w[0], lt(0), m);
-    let (mut k, xa_k) = proj_fwd(&x1, p.w[1], lt(1), m);
-    let (v, xa_v) = proj_fwd(&x1, p.w[2], lt(2), m);
+    let (x1, inv1) = rmsnorm_fwd(ws, &h, p.ln1, dims.norm_eps, m, d);
+    let (mut q, xa_q) = proj_fwd(ws, &x1, p.w[0], lt(0), m);
+    let (mut k, xa_k) = proj_fwd(ws, &x1, p.w[1], lt(1), m);
+    let (v, xa_v) = proj_fwd(ws, &x1, p.w[2], lt(2), m);
     rope_apply(&mut q, dims.s, dims.n_heads, dims.d_head, rope, false);
     rope_apply(&mut k, dims.s, dims.n_heads, dims.d_head, rope, false);
-    let (att, probs) = attention_fwd(&q, &k, &v, dims.b, dims.s, dims.n_heads, dims.d_head);
-    let (attn_out, xa_o) = proj_fwd(&att, p.w[3], lt(3), m);
+    let (att, probs) = attention_fwd(ws, &q, &k, &v, dims.b, dims.s, dims.n_heads, dims.d_head);
+    let (attn_out, xa_o) = proj_fwd(ws, &att, p.w[3], lt(3), m);
 
     // keep the exact layer input for the backward pass (inv1 was computed
     // from it; reconstructing it from h_mid would differ by rounding)
-    let h_in = if want_cache { Some(h.clone()) } else { None };
+    let h_in = if want_cache {
+        let mut copy = ws.take(h.len());
+        copy.copy_from_slice(&h);
+        Some(copy)
+    } else {
+        None
+    };
     let mut h_mid = h;
     add_into(&mut h_mid, &attn_out);
-    let (x2, inv2) = rmsnorm_fwd(&h_mid, p.ln2, dims.norm_eps, m, d);
-    let (gp, xa_g) = proj_fwd(&x2, p.w[4], lt(4), m);
-    let (up, xa_u) = proj_fwd(&x2, p.w[5], lt(5), m);
-    let mut act = vec![0.0f32; m * f];
+    ws.give(attn_out);
+    let (x2, inv2) = rmsnorm_fwd(ws, &h_mid, p.ln2, dims.norm_eps, m, d);
+    let (gp, xa_g) = proj_fwd(ws, &x2, p.w[4], lt(4), m);
+    let (up, xa_u) = proj_fwd(ws, &x2, p.w[5], lt(5), m);
+    let mut act = ws.take(m * f);
     for i in 0..m * f {
         act[i] = silu(gp[i]) * up[i];
     }
-    let (mlp_out, xa_d) = proj_fwd(&act, p.w[6], lt(6), m);
+    let (mlp_out, xa_d) = proj_fwd(ws, &act, p.w[6], lt(6), m);
 
     if !want_cache {
         let mut h_out = h_mid;
         add_into(&mut h_out, &mlp_out);
+        for buf in [mlp_out, act, up, gp, x2, inv2, att, probs, q, k, v, x1, inv1] {
+            ws.give(buf);
+        }
+        for buf in [xa_q, xa_k, xa_v, xa_o, xa_g, xa_u, xa_d].into_iter().flatten() {
+            ws.give(buf);
+        }
         return (h_out, None);
     }
-    let mut h_out = h_mid.clone();
+    let mut h_out = ws.take(h_mid.len());
+    h_out.copy_from_slice(&h_mid);
     add_into(&mut h_out, &mlp_out);
+    ws.give(mlp_out);
     let cache = LayerCache {
         h_in: h_in.expect("cached when want_cache"),
         x1,
@@ -671,7 +783,9 @@ struct LayerGrads<'a> {
     lora: Option<(&'a mut [f32], &'a BlockSpec)>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn layer_bwd(
+    ws: &mut Workspace,
     dh_out: Vec<f32>,
     c: &LayerCache,
     p: &LayerParams,
@@ -683,29 +797,26 @@ fn layer_bwd(
     let m = dims.rows();
     let (d, f) = (dims.d, dims.d_ff);
     let lt = |slot: usize| lora.map(|l| l.ab[slot]);
-
-    // Scratch buffers for per-projection weight/adapter grads, then copied
-    // into the flat gradient vectors (keeps the borrow story simple).
-    let mut dw_buf: Vec<f32> = Vec::new();
-    let mut da_buf: Vec<f32> = Vec::new();
-    let mut db_buf: Vec<f32> = Vec::new();
     let want_base = grads.base.is_some();
     let want_lora = grads.lora.is_some();
 
-    // One projection backward, routing grads to the right flats.
+    // One projection backward, routing grads to the right flats. The
+    // per-projection weight/adapter gradient buffers are workspace slabs
+    // written in assign mode and recycled immediately after the copy into
+    // the flat gradient vector.
     macro_rules! back_proj {
         ($slot:expr, $dy:expr, $x:expr, $dx:expr) => {{
             let (wm, d_in, d_out) = p.w[$slot];
             let lo = lt($slot);
-            if want_base {
-                dw_buf.resize(d_in * d_out, 0.0);
-            }
-            if want_lora {
+            let mut dw_buf = if want_base { Some(ws.take(d_in * d_out)) } else { None };
+            let mut ab_buf = if want_lora {
                 let r = lo.map(|l| l.2).unwrap_or(0);
-                da_buf.resize(d_in * r, 0.0);
-                db_buf.resize(r * d_out, 0.0);
-            }
+                Some((ws.take(d_in * r), ws.take(r * d_out)))
+            } else {
+                None
+            };
             proj_bwd(
+                ws,
                 $dy,
                 $x,
                 c.xa[$slot].as_deref(),
@@ -713,33 +824,44 @@ fn layer_bwd(
                 lo,
                 m,
                 $dx,
-                if want_base { Some(&mut dw_buf[..]) } else { None },
-                if want_lora { Some((&mut da_buf[..], &mut db_buf[..])) } else { None },
+                dw_buf.as_deref_mut(),
+                ab_buf.as_mut().map(|(a, b)| (&mut a[..], &mut b[..])),
             );
-            if let Some((flat, spec)) = grads.base.as_mut() {
-                write_tensor(flat, spec, PROJS[$slot], &dw_buf)?;
+            if let (Some((flat, spec)), Some(dw)) = (grads.base.as_mut(), dw_buf.as_ref()) {
+                write_tensor(flat, spec, PROJS[$slot], dw)?;
             }
-            if let Some((flat, spec)) = grads.lora.as_mut() {
-                write_tensor(flat, spec, &format!("{}_a", PROJS[$slot]), &da_buf)?;
-                write_tensor(flat, spec, &format!("{}_b", PROJS[$slot]), &db_buf)?;
+            if let (Some((flat, spec)), Some((da, db))) = (grads.lora.as_mut(), ab_buf.as_ref()) {
+                write_tensor(flat, spec, &format!("{}_a", PROJS[$slot]), da)?;
+                write_tensor(flat, spec, &format!("{}_b", PROJS[$slot]), db)?;
+            }
+            if let Some(buf) = dw_buf {
+                ws.give(buf);
+            }
+            if let Some((a, b)) = ab_buf {
+                ws.give(a);
+                ws.give(b);
             }
         }};
     }
 
     // ---- MLP branch ----
-    let mut d_act = vec![0.0f32; m * f];
+    let mut d_act = ws.take_zeroed(m * f);
     back_proj!(6, &dh_out, &c.act, &mut d_act);
-    let mut d_gp = vec![0.0f32; m * f];
-    let mut d_up = vec![0.0f32; m * f];
+    let mut d_gp = ws.take(m * f);
+    let mut d_up = ws.take(m * f);
     for i in 0..m * f {
         d_up[i] = d_act[i] * silu(c.gp[i]);
         d_gp[i] = d_act[i] * c.up[i] * silu_grad(c.gp[i]);
     }
-    let mut dx2 = vec![0.0f32; m * d];
+    ws.give(d_act);
+    let mut dx2 = ws.take_zeroed(m * d);
     back_proj!(4, &d_gp, &c.x2, &mut dx2);
     back_proj!(5, &d_up, &c.x2, &mut dx2);
-    let mut ln_buf = vec![0.0f32; d];
+    ws.give(d_gp);
+    ws.give(d_up);
+    let mut ln_buf = ws.take_zeroed(d);
     let dh_norm2 = rmsnorm_bwd(
+        ws,
         &c.h_mid,
         p.ln2,
         &c.inv2,
@@ -748,25 +870,33 @@ fn layer_bwd(
         d,
         if want_base { Some(&mut ln_buf[..]) } else { None },
     );
+    ws.give(dx2);
     if let Some((flat, spec)) = grads.base.as_mut() {
         write_tensor(flat, spec, "ln2", &ln_buf)?;
     }
     let mut dh_mid = dh_out;
     add_into(&mut dh_mid, &dh_norm2);
+    ws.give(dh_norm2);
 
     // ---- attention branch ----
-    let mut d_att = vec![0.0f32; m * d];
+    let mut d_att = ws.take_zeroed(m * d);
     back_proj!(3, &dh_mid, &c.att, &mut d_att);
-    let (mut dq, mut dk, dv) =
-        attention_bwd(&d_att, &c.qr, &c.kr, &c.v, &c.probs, dims.b, dims.s, dims.n_heads, dims.d_head);
+    let (mut dq, mut dk, dv) = attention_bwd(
+        ws, &d_att, &c.qr, &c.kr, &c.v, &c.probs, dims.b, dims.s, dims.n_heads, dims.d_head,
+    );
+    ws.give(d_att);
     rope_apply(&mut dq, dims.s, dims.n_heads, dims.d_head, rope, true);
     rope_apply(&mut dk, dims.s, dims.n_heads, dims.d_head, rope, true);
-    let mut dx1 = vec![0.0f32; m * d];
+    let mut dx1 = ws.take_zeroed(m * d);
     back_proj!(0, &dq, &c.x1, &mut dx1);
     back_proj!(1, &dk, &c.x1, &mut dx1);
     back_proj!(2, &dv, &c.x1, &mut dx1);
+    ws.give(dq);
+    ws.give(dk);
+    ws.give(dv);
     ln_buf.fill(0.0);
     let dh_norm1 = rmsnorm_bwd(
+        ws,
         &c.h_in,
         p.ln1,
         &c.inv1,
@@ -775,11 +905,14 @@ fn layer_bwd(
         d,
         if want_base { Some(&mut ln_buf[..]) } else { None },
     );
+    ws.give(dx1);
     if let Some((flat, spec)) = grads.base.as_mut() {
         write_tensor(flat, spec, "ln1", &ln_buf)?;
     }
+    ws.give(ln_buf);
     let mut dh_in = dh_mid;
     add_into(&mut dh_in, &dh_norm1);
+    ws.give(dh_norm1);
     Ok(dh_in)
 }
 
@@ -820,12 +953,28 @@ fn check_shapes(
     Ok(())
 }
 
-fn embed_fwd(emb: &[f32], tokens: &[i32], d: usize, vocab: usize) -> Result<Vec<f32>> {
-    let mut h = vec![0.0f32; tokens.len() * d];
-    for (r, &t) in tokens.iter().enumerate() {
+/// Reject out-of-range token ids. Called by the entrypoints **before**
+/// any workspace buffer is taken, so data-dependent input errors cannot
+/// leave lent-out capacity behind in the arena accounting.
+fn check_tokens(tokens: &[i32], vocab: usize) -> Result<()> {
+    for &t in tokens {
         if t < 0 || t as usize >= vocab {
             return Err(anyhow!("token id {t} out of vocab range 0..{vocab}"));
         }
+    }
+    Ok(())
+}
+
+fn embed_fwd(
+    ws: &mut Workspace,
+    emb: &[f32],
+    tokens: &[i32],
+    d: usize,
+    vocab: usize,
+) -> Result<Vec<f32>> {
+    check_tokens(tokens, vocab)?;
+    let mut h = ws.take(tokens.len() * d);
+    for (r, &t) in tokens.iter().enumerate() {
         let src = &emb[t as usize * d..(t as usize + 1) * d];
         h[r * d..(r + 1) * d].copy_from_slice(src);
     }
@@ -838,27 +987,29 @@ struct ForwardOut {
     caches: Vec<LayerCache>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn forward(
+    ws: &mut Workspace,
     spec: &ModelSpec,
     blocks: &[BlockSpec],
     flats: &[&[f32]],
     lora: Option<(&[BlockSpec], &[&[f32]])>,
     tokens: &[i32],
+    rope: &RopeTables,
     want_cache: bool,
 ) -> Result<ForwardOut> {
     check_shapes(spec, blocks, flats, tokens)?;
     let dims = Dims::from_spec(spec);
-    let rope = rope_tables(dims.s, dims.d_head, spec.rope_theta);
     let emb = tensor(flats[0], &blocks[0], "tok_emb")?;
-    let mut h = embed_fwd(emb, tokens, dims.d, dims.vocab)?;
-    let mut caches = Vec::new();
+    let mut h = embed_fwd(ws, emb, tokens, dims.d, dims.vocab)?;
+    let mut caches = Vec::with_capacity(if want_cache { spec.n_layers } else { 0 });
     for l in 0..spec.n_layers {
         let p = layer_params(flats[1 + l], &blocks[1 + l])?;
         let lp = match lora {
             Some((lspecs, lflats)) => Some(lora_params(lflats[l], &lspecs[l])?),
             None => None,
         };
-        let (h_out, cache) = layer_fwd(h, &p, lp.as_ref(), &dims, &rope, want_cache);
+        let (h_out, cache) = layer_fwd(ws, h, &p, lp.as_ref(), &dims, rope, want_cache);
         h = h_out;
         if let Some(c) = cache {
             caches.push(c);
@@ -868,6 +1019,7 @@ fn forward(
 }
 
 fn head_logits(
+    ws: &mut Workspace,
     spec: &ModelSpec,
     blocks: &[BlockSpec],
     flats: &[&[f32]],
@@ -879,13 +1031,14 @@ fn head_logits(
     let head_flat = flats[flats.len() - 1];
     let ln_f = tensor(head_flat, head_spec, "ln_f")?;
     let w_out = tensor(head_flat, head_spec, "w_out")?;
-    let (xf, invf) = rmsnorm_fwd(h, ln_f, dims.norm_eps, m, dims.d);
-    let logits = matmul(&xf, w_out, m, dims.d, dims.vocab);
+    let (xf, invf) = rmsnorm_fwd(ws, h, ln_f, dims.norm_eps, m, dims.d);
+    let logits = matmul(ws, &xf, w_out, m, dims.d, dims.vocab);
     Ok((logits, xf, invf))
 }
 
 /// Full train step: `(loss, one gradient per block)`. Mirrors the
-/// `train_step` HLO artifact's output tuple.
+/// `train_step` HLO artifact's output tuple. Allocates a private
+/// workspace; hot loops should hold one and call [`train_step_in`].
 pub fn train_step(
     spec: &ModelSpec,
     blocks: &[BlockSpec],
@@ -894,13 +1047,56 @@ pub fn train_step(
     targets: &[i32],
     pad: i32,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
-    run_train_step(spec, blocks, flats, None, tokens, targets, pad)
+    let mut ws = Workspace::new();
+    run_train_step(&mut ws, spec, blocks, flats, None, tokens, targets, pad)
+}
+
+/// [`train_step`] against a caller-held [`Workspace`]: after the first
+/// (warm-up) call every internal buffer is recycled and the step performs
+/// zero slab allocations.
+pub fn train_step_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad)
 }
 
 /// LoRA train step: base blocks frozen, gradients only for the adapter
 /// blocks. Mirrors the `train_step_lora*` artifacts.
 #[allow(clippy::too_many_arguments)]
 pub fn train_step_lora(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    lora_blocks: &[BlockSpec],
+    base_flats: &[&[f32]],
+    lora_flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let mut ws = Workspace::new();
+    train_step_lora_in(
+        &mut ws,
+        spec,
+        blocks,
+        lora_blocks,
+        base_flats,
+        lora_flats,
+        tokens,
+        targets,
+        pad,
+    )
+}
+
+/// [`train_step_lora`] against a caller-held [`Workspace`].
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_lora_in(
+    ws: &mut Workspace,
     spec: &ModelSpec,
     blocks: &[BlockSpec],
     lora_blocks: &[BlockSpec],
@@ -918,6 +1114,7 @@ pub fn train_step_lora(
         ));
     }
     run_train_step(
+        ws,
         spec,
         blocks,
         base_flats,
@@ -928,7 +1125,9 @@ pub fn train_step_lora(
     )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_train_step(
+    ws: &mut Workspace,
     spec: &ModelSpec,
     blocks: &[BlockSpec],
     flats: &[&[f32]],
@@ -942,12 +1141,21 @@ fn run_train_step(
     if targets.len() != tokens.len() {
         return Err(anyhow!("tokens/targets length mismatch"));
     }
-    let fwd = forward(spec, blocks, flats, lora, tokens, true)?;
-    let (logits, xf, invf) = head_logits(spec, blocks, flats, &fwd.h)?;
-    let (loss, dlogits) = masked_ce(&logits, targets, m, dims.vocab, pad)?;
+    // validate every input before the first arena take (see check_tokens)
+    check_shapes(spec, blocks, flats, tokens)?;
+    check_tokens(tokens, dims.vocab)?;
+    check_targets(targets, dims.vocab, pad)?;
+    let rope = rope_tables(ws, dims.s, dims.d_head, spec.rope_theta);
+    let ForwardOut { h, mut caches } =
+        forward(ws, spec, blocks, flats, lora, tokens, &rope, true)?;
+    let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
+    let (loss, dlogits) = masked_ce(ws, &logits, targets, m, dims.vocab, pad, true)?;
+    let dlogits = dlogits.expect("want_grad");
+    ws.give(logits);
 
     let want_base = lora.is_none();
-    let rope = rope_tables(dims.s, dims.d_head, spec.rope_theta);
+    // The gradient vectors are the step's outputs — fresh allocations that
+    // the caller keeps (the workspace only recycles internal buffers).
     let mut grads: Vec<Vec<f32>> = match lora {
         None => blocks.iter().map(|b| vec![0.0f32; b.numel]).collect(),
         Some((lb, _)) => lb.iter().map(|b| vec![0.0f32; b.numel]).collect(),
@@ -958,10 +1166,12 @@ fn run_train_step(
     let head_flat = flats[flats.len() - 1];
     let ln_f = tensor(head_flat, head_spec, "ln_f")?;
     let w_out = tensor(head_flat, head_spec, "w_out")?;
-    let dxf = matmul_tb(&dlogits, w_out, m, dims.d, dims.vocab, 1.0);
-    let mut ln_buf = vec![0.0f32; dims.d];
+    let mut dxf = ws.take(m * dims.d);
+    matmul_tb_into(ws, &mut dxf, &dlogits, w_out, m, dims.d, dims.vocab, 1.0);
+    let mut ln_buf = ws.take_zeroed(dims.d);
     let mut dh = rmsnorm_bwd(
-        &fwd.h,
+        ws,
+        &h,
         ln_f,
         &invf,
         &dxf,
@@ -970,11 +1180,19 @@ fn run_train_step(
         if want_base { Some(&mut ln_buf[..]) } else { None },
     );
     if want_base {
-        let d_w_out = matmul_ta(&xf, &dlogits, m, dims.d, dims.vocab, 1.0);
+        let mut d_w_out = ws.take(dims.d * dims.vocab);
+        matmul_ta_into(ws, &mut d_w_out, &xf, &dlogits, m, dims.d, dims.vocab, 1.0);
         let last = grads.len() - 1;
         write_tensor(&mut grads[last], head_spec, "w_out", &d_w_out)?;
         write_tensor(&mut grads[last], head_spec, "ln_f", &ln_buf)?;
+        ws.give(d_w_out);
     }
+    ws.give(ln_buf);
+    ws.give(dxf);
+    ws.give(dlogits);
+    ws.give(xf);
+    ws.give(invf);
+    ws.give(h);
 
     // ---- layers, top to bottom ----
     for l in (0..spec.n_layers).rev() {
@@ -983,6 +1201,7 @@ fn run_train_step(
             Some((lspecs, lflats)) => Some(lora_params(lflats[l], &lspecs[l])?),
             None => None,
         };
+        let cache = caches.pop().expect("one cache per layer");
         // borrow the right grads entry mutably for this layer
         let mut lg = if want_base {
             LayerGrads { base: Some((grads[1 + l].as_mut_slice(), &blocks[1 + l])), lora: None }
@@ -990,7 +1209,8 @@ fn run_train_step(
             let (lspecs, _) = lora.expect("lora present");
             LayerGrads { base: None, lora: Some((grads[l].as_mut_slice(), &lspecs[l])) }
         };
-        dh = layer_bwd(dh, &fwd.caches[l], &p, lp.as_ref(), &dims, &rope, &mut lg)?;
+        dh = layer_bwd(ws, dh, &cache, &p, lp.as_ref(), &dims, &rope, &mut lg)?;
+        cache.recycle(ws);
     }
 
     // ---- embedding ----
@@ -1005,6 +1225,8 @@ fn run_train_step(
             }
         }
     }
+    ws.give(dh);
+    rope.recycle(ws);
     Ok((loss, grads))
 }
 
@@ -1017,10 +1239,39 @@ pub fn eval_loss(
     targets: &[i32],
     pad: i32,
 ) -> Result<f32> {
-    let fwd = forward(spec, blocks, flats, None, tokens, false)?;
-    let (logits, _, _) = head_logits(spec, blocks, flats, &fwd.h)?;
+    let mut ws = Workspace::new();
+    eval_loss_in(&mut ws, spec, blocks, flats, tokens, targets, pad)
+}
+
+/// [`eval_loss`] against a caller-held [`Workspace`].
+pub fn eval_loss_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+) -> Result<f32> {
     let dims = Dims::from_spec(spec);
-    let (loss, _) = masked_ce(&logits, targets, dims.rows(), dims.vocab, pad)?;
+    if targets.len() != tokens.len() {
+        return Err(anyhow!("tokens/targets length mismatch"));
+    }
+    check_shapes(spec, blocks, flats, tokens)?;
+    check_tokens(tokens, dims.vocab)?;
+    check_targets(targets, dims.vocab, pad)?;
+    let rope = rope_tables(ws, dims.s, dims.d_head, spec.rope_theta);
+    let ForwardOut { h, caches } =
+        forward(ws, spec, blocks, flats, None, tokens, &rope, false)?;
+    debug_assert!(caches.is_empty());
+    let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
+    let (loss, dlogits) = masked_ce(ws, &logits, targets, dims.rows(), dims.vocab, pad, false)?;
+    debug_assert!(dlogits.is_none());
+    ws.give(logits);
+    ws.give(xf);
+    ws.give(invf);
+    ws.give(h);
+    rope.recycle(ws);
     Ok(loss)
 }
 
@@ -1031,8 +1282,30 @@ pub fn decode_logits(
     flats: &[&[f32]],
     tokens: &[i32],
 ) -> Result<Vec<f32>> {
-    let fwd = forward(spec, blocks, flats, None, tokens, false)?;
-    let (logits, _, _) = head_logits(spec, blocks, flats, &fwd.h)?;
+    let mut ws = Workspace::new();
+    decode_logits_in(&mut ws, spec, blocks, flats, tokens)
+}
+
+/// [`decode_logits`] against a caller-held [`Workspace`]. The returned
+/// logits buffer leaves the arena for good (it belongs to the caller).
+pub fn decode_logits_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let dims = Dims::from_spec(spec);
+    check_shapes(spec, blocks, flats, tokens)?;
+    check_tokens(tokens, dims.vocab)?;
+    let rope = rope_tables(ws, dims.s, dims.d_head, spec.rope_theta);
+    let ForwardOut { h, .. } = forward(ws, spec, blocks, flats, None, tokens, &rope, false)?;
+    let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
+    ws.give(xf);
+    ws.give(invf);
+    ws.give(h);
+    rope.recycle(ws);
+    ws.disown_cap(logits.capacity());
     Ok(logits)
 }
 
@@ -1047,6 +1320,7 @@ pub fn lora_merge(
     if layer_flat.len() != layer_spec.numel || lora_flat.len() != lora_spec.numel {
         return Err(anyhow!("lora_merge: flat sizes do not match the block specs"));
     }
+    let mut ws = Workspace::new();
     let mut merged = layer_flat.to_vec();
     for proj in PROJS {
         let t = tensor_spec(layer_spec, proj)?;
@@ -1056,7 +1330,7 @@ pub fn lora_merge(
         let a_spec = tensor_spec(lora_spec, &format!("{proj}_a"))?;
         let r = a_spec.shape[1];
         let dst = &mut merged[t.offset..t.offset + d_in * d_out];
-        matmul_acc(dst, a, b, d_in, r, d_out, LORA_SCALE);
+        matmul_acc(&mut ws, dst, a, b, d_in, r, d_out, LORA_SCALE);
     }
     Ok(merged)
 }
@@ -1067,6 +1341,7 @@ mod tests {
     use crate::model::ModelState;
     use crate::runtime::presets::{block_table, lora_block_table};
     use crate::runtime::Manifest;
+    use crate::util::rng::Rng;
 
     fn tiny_spec() -> ModelSpec {
         let mut m = Manifest::builtin().preset("test-tiny").unwrap().model.clone();
@@ -1225,5 +1500,184 @@ mod tests {
         }
         let loss = eval_loss(&spec, &blocks, &refs, &tok, &tgt_all_pad, 0).unwrap();
         assert_eq!(loss, 0.0, "all-pad targets must produce zero loss");
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_deterministic() {
+        // the same step through a shared arena must produce bit-identical
+        // results on every call — stale slab contents must never leak
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 13);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let (tok, tgt) = tokens_for(&spec, 1);
+        let mut ws = Workspace::new();
+        let (loss0, grads0) = train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+        for _ in 0..3 {
+            let (loss, grads) =
+                train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+            assert_eq!(loss.to_bits(), loss0.to_bits());
+            assert_eq!(grads, grads0);
+        }
+        // warm arena: repeat steps must not allocate new slabs
+        let grows = ws.stats().grows;
+        let _ = train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+        assert_eq!(ws.stats().grows, grows, "steady-state step must not grow the arena");
+        assert!(ws.stats().high_water_bytes > 0);
+    }
+
+    // --- per-kernel finite-difference checks (satellite guards so kernel
+    // --- rewrites can't silently corrupt the backward pass)
+
+    fn rand_vec(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_range_f64(lo, hi) as f32).collect()
+    }
+
+    fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let (rows, d) = (3usize, 5usize);
+        let mut rng = Rng::seed_from_u64(21);
+        let x = rand_vec(&mut rng, rows * d, -1.0, 1.0);
+        let w = rand_vec(&mut rng, d, 0.5, 1.5);
+        let cvec = rand_vec(&mut rng, rows * d, -1.0, 1.0);
+        let eps_norm = 1e-5f32;
+        let loss = |x: &[f32], w: &[f32]| -> f64 {
+            let mut ws = Workspace::new();
+            let (y, _inv) = rmsnorm_fwd(&mut ws, x, w, eps_norm, rows, d);
+            dot_f64(&y, &cvec)
+        };
+
+        let mut ws = Workspace::new();
+        let (_y, inv) = rmsnorm_fwd(&mut ws, &x, &w, eps_norm, rows, d);
+        let mut dw = vec![0.0f32; d];
+        let dx = rmsnorm_bwd(&mut ws, &x, &w, &inv, &cvec, rows, d, Some(&mut dw[..]));
+
+        let h = 1e-3f32;
+        for i in 0..rows * d {
+            let mut plus = x.clone();
+            plus[i] += h;
+            let mut minus = x.clone();
+            minus[i] -= h;
+            let fd = (loss(&plus, &w) - loss(&minus, &w)) / (2.0 * h as f64);
+            let an = dx[i] as f64;
+            let tol = 2e-2 * fd.abs().max(an.abs()).max(1e-3);
+            assert!((fd - an).abs() < tol, "dx[{i}]: fd {fd:.6} vs analytic {an:.6}");
+        }
+        for j in 0..d {
+            let mut plus = w.clone();
+            plus[j] += h;
+            let mut minus = w.clone();
+            minus[j] -= h;
+            let fd = (loss(&x, &plus) - loss(&x, &minus)) / (2.0 * h as f64);
+            let an = dw[j] as f64;
+            let tol = 2e-2 * fd.abs().max(an.abs()).max(1e-3);
+            assert!((fd - an).abs() < tol, "dw[{j}]: fd {fd:.6} vs analytic {an:.6}");
+        }
+    }
+
+    #[test]
+    fn attention_bwd_matches_finite_difference() {
+        let (b, s, nh, dh) = (2usize, 4usize, 2usize, 4usize);
+        let d = nh * dh;
+        let n = b * s * d;
+        let mut rng = Rng::seed_from_u64(22);
+        let q = rand_vec(&mut rng, n, -1.0, 1.0);
+        let k = rand_vec(&mut rng, n, -1.0, 1.0);
+        let v = rand_vec(&mut rng, n, -1.0, 1.0);
+        let cvec = rand_vec(&mut rng, n, -1.0, 1.0);
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            let mut ws = Workspace::new();
+            let (att, _probs) = attention_fwd(&mut ws, q, k, v, b, s, nh, dh);
+            dot_f64(&att, &cvec)
+        };
+
+        let mut ws = Workspace::new();
+        let (_att, probs) = attention_fwd(&mut ws, &q, &k, &v, b, s, nh, dh);
+        let (dq, dk, dv) = attention_bwd(&mut ws, &cvec, &q, &k, &v, &probs, b, s, nh, dh);
+
+        let h = 1e-3f32;
+        let check = |name: &str, base: &[f32], an: &[f32], which: usize| {
+            for i in 0..n {
+                let mut plus = base.to_vec();
+                plus[i] += h;
+                let mut minus = base.to_vec();
+                minus[i] -= h;
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    1 => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let fd = (lp - lm) / (2.0 * h as f64);
+                let a = an[i] as f64;
+                let tol = 2e-2 * fd.abs().max(a.abs()).max(1e-3);
+                assert!((fd - a).abs() < tol, "{name}[{i}]: fd {fd:.6} vs analytic {a:.6}");
+            }
+        };
+        check("dq", &q, &dq, 0);
+        check("dk", &k, &dk, 1);
+        check("dv", &v, &dv, 2);
+    }
+
+    #[test]
+    fn proj_bwd_with_lora_matches_finite_difference() {
+        let (m, d_in, d_out, r) = (3usize, 4usize, 5usize, 2usize);
+        let mut rng = Rng::seed_from_u64(23);
+        let x = rand_vec(&mut rng, m * d_in, -1.0, 1.0);
+        let wm = rand_vec(&mut rng, d_in * d_out, -0.5, 0.5);
+        let a = rand_vec(&mut rng, d_in * r, -0.5, 0.5);
+        let bm = rand_vec(&mut rng, r * d_out, -0.5, 0.5);
+        let cvec = rand_vec(&mut rng, m * d_out, -1.0, 1.0);
+        let loss = |x: &[f32], wm: &[f32], a: &[f32], bm: &[f32]| -> f64 {
+            let mut ws = Workspace::new();
+            let (y, _xa) = proj_fwd(&mut ws, x, (wm, d_in, d_out), Some((a, bm, r)), m);
+            dot_f64(&y, &cvec)
+        };
+
+        let mut ws = Workspace::new();
+        let (_y, xa) = proj_fwd(&mut ws, &x, (&wm, d_in, d_out), Some((&a, &bm, r)), m);
+        let mut dx = vec![0.0f32; m * d_in];
+        let mut dw = vec![0.0f32; d_in * d_out];
+        let mut da = vec![0.0f32; d_in * r];
+        let mut db = vec![0.0f32; r * d_out];
+        proj_bwd(
+            &mut ws,
+            &cvec,
+            &x,
+            xa.as_deref(),
+            (&wm, d_in, d_out),
+            Some((&a, &bm, r)),
+            m,
+            &mut dx,
+            Some(&mut dw[..]),
+            Some((&mut da[..], &mut db[..])),
+        );
+
+        let h = 1e-3f32;
+        let probe = |name: &str, base: &[f32], an: &[f32], which: usize| {
+            for i in 0..base.len() {
+                let mut plus = base.to_vec();
+                plus[i] += h;
+                let mut minus = base.to_vec();
+                minus[i] -= h;
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &wm, &a, &bm), loss(&minus, &wm, &a, &bm)),
+                    1 => (loss(&x, &plus, &a, &bm), loss(&x, &minus, &a, &bm)),
+                    2 => (loss(&x, &wm, &plus, &bm), loss(&x, &wm, &minus, &bm)),
+                    _ => (loss(&x, &wm, &a, &plus), loss(&x, &wm, &a, &minus)),
+                };
+                let fd = (lp - lm) / (2.0 * h as f64);
+                let g = an[i] as f64;
+                let tol = 2e-2 * fd.abs().max(g.abs()).max(1e-3);
+                assert!((fd - g).abs() < tol, "{name}[{i}]: fd {fd:.6} vs analytic {g:.6}");
+            }
+        };
+        probe("dx", &x, &dx, 0);
+        probe("dw", &wm, &dw, 1);
+        probe("da", &a, &da, 2);
+        probe("db", &bm, &db, 3);
     }
 }

@@ -10,6 +10,14 @@
 //! This is the trusted dense reference the selection methods are
 //! validated against (GRASS / BlockLLM-style parity methodology): CI
 //! trains real models through this backend on every push.
+//!
+//! The backend owns a [`Workspace`] arena shared by every entrypoint it
+//! executes: the first step warms the slab pool, after which the compute
+//! path (GEMMs, activations, attention scratch, per-projection gradient
+//! staging) performs zero heap allocations per step. The arena's
+//! high-water mark — the real per-step buffer footprint — is exposed via
+//! [`ReferenceBackend::workspace_stats`] and surfaced through the
+//! `memory` accounting and the `train_step` bench JSON.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -21,6 +29,7 @@ use anyhow::{anyhow, Result};
 use crate::model::forward;
 use crate::optimizer::{fused_adamw, AdamWParams};
 use crate::selection::grad_norm::block_norm_sq;
+use crate::util::workspace::{Workspace, WorkspaceStats};
 
 use super::backend::{Backend, HostOutputs};
 use super::manifest::{Manifest, Preset};
@@ -69,6 +78,9 @@ pub struct RefExe {
 pub struct ReferenceBackend {
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<RefExe>>>,
+    /// Step-scoped buffer arena shared by all entrypoints (warm after the
+    /// first execute; steady-state steps allocate nothing).
+    ws: RefCell<Workspace>,
 }
 
 impl Default for ReferenceBackend {
@@ -86,7 +98,19 @@ impl ReferenceBackend {
     /// Backend over an explicit manifest (e.g. one loaded from an
     /// artifacts directory, for strict topology parity with a PJRT run).
     pub fn with_manifest(manifest: Manifest) -> Self {
-        Self { manifest, cache: RefCell::new(HashMap::new()) }
+        Self {
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            ws: RefCell::new(Workspace::new()),
+        }
+    }
+
+    /// Snapshot of the compute arena's accounting: high-water bytes (the
+    /// measured per-step activation/scratch footprint) and the slab-grow
+    /// counter (unchanged between two snapshots ⇒ the interval ran
+    /// allocation-free).
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.ws.borrow().stats()
     }
 
     fn parse_entry(entry: &str) -> Result<Entry> {
@@ -131,8 +155,10 @@ impl ReferenceBackend {
                     args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
                 let tokens = args[n].as_i32()?;
                 let targets = args[n + 1].as_i32()?;
-                let (loss, grads) =
-                    forward::train_step(&p.model, &p.blocks, &flats, tokens, targets, pad)?;
+                let mut ws = self.ws.borrow_mut();
+                let (loss, grads) = forward::train_step_in(
+                    &mut ws, &p.model, &p.blocks, &flats, tokens, targets, pad,
+                )?;
                 let mut out = vec![vec![loss]];
                 out.extend(grads);
                 Ok(out)
@@ -148,8 +174,9 @@ impl ReferenceBackend {
                     args[n..n + nl].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
                 let tokens = args[n + nl].as_i32()?;
                 let targets = args[n + nl + 1].as_i32()?;
-                let (loss, grads) = forward::train_step_lora(
-                    &p.model, &p.blocks, lblocks, &base, &lora, tokens, targets, pad,
+                let mut ws = self.ws.borrow_mut();
+                let (loss, grads) = forward::train_step_lora_in(
+                    &mut ws, &p.model, &p.blocks, lblocks, &base, &lora, tokens, targets, pad,
                 )?;
                 let mut out = vec![vec![loss]];
                 out.extend(grads);
@@ -161,7 +188,9 @@ impl ReferenceBackend {
                 want(n + 2)?;
                 let flats: Vec<&[f32]> =
                     args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
-                let loss = forward::eval_loss(
+                let mut ws = self.ws.borrow_mut();
+                let loss = forward::eval_loss_in(
+                    &mut ws,
                     &p.model,
                     &p.blocks,
                     &flats,
@@ -177,8 +206,10 @@ impl ReferenceBackend {
                 want(n + 1)?;
                 let flats: Vec<&[f32]> =
                     args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
-                let logits =
-                    forward::decode_logits(&p.model, &p.blocks, &flats, args[n].as_i32()?)?;
+                let mut ws = self.ws.borrow_mut();
+                let logits = forward::decode_logits_in(
+                    &mut ws, &p.model, &p.blocks, &flats, args[n].as_i32()?,
+                )?;
                 Ok(vec![logits])
             }
             Entry::LoraMerge { double } => {
@@ -327,6 +358,31 @@ mod tests {
         let out = b.execute(&exe, &[&buf]).unwrap();
         let norm = out.scalar_f32(0).unwrap();
         assert!((norm - 4000.0).abs() < 1e-3, "{norm}");
+    }
+
+    #[test]
+    fn workspace_reaches_steady_state_after_warmup() {
+        let b = ReferenceBackend::new();
+        let p = b.manifest().preset("test-tiny").unwrap().clone();
+        let exe = b.load_preset_exe("test-tiny", "train_step").unwrap();
+        let state = crate::model::ModelState::init(&p.blocks, 2);
+        let blocks: Vec<_> = state.flats.iter().map(|f| b.upload_f32(f).unwrap()).collect();
+        let (bb, ss) = (p.model.batch, p.model.seq_len);
+        let tokens: Vec<i32> = (0..bb * ss).map(|i| 4 + (i % 40) as i32).collect();
+        let tok = b.upload_i32(&tokens, &[bb, ss]).unwrap();
+        let mut args: Vec<_> = blocks.iter().collect();
+        args.push(&tok);
+        args.push(&tok);
+        let out0 = b.execute(&exe, &args).unwrap();
+        let warm = b.workspace_stats();
+        assert!(warm.high_water_bytes > 0);
+        for _ in 0..3 {
+            let out = b.execute(&exe, &args).unwrap();
+            assert_eq!(out.outputs, out0.outputs, "arena reuse must stay bit-deterministic");
+        }
+        let steady = b.workspace_stats();
+        assert_eq!(steady.grows, warm.grows, "steady-state steps must not allocate slabs");
+        assert_eq!(steady.high_water_bytes, warm.high_water_bytes);
     }
 
     #[test]

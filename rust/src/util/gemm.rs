@@ -1,0 +1,508 @@
+//! Cache-blocked GEMM kernels for the reference backend.
+//!
+//! The reference executor's projections used to run through naive
+//! triple-loop matmuls that streamed whole operands through cache for
+//! every output row and materialized transposed copies for the `xᵀ·dy` /
+//! `dy·Wᵀ` gradient products. This module replaces them with one blocked
+//! kernel in the GotoBLAS/BLIS shape, in plain Rust the autovectorizer
+//! handles well:
+//!
+//! * **Loop structure** `jc → pc → ic`: column blocks of `NC`, depth
+//!   blocks of `KC`, row blocks of `MC`. The `B` panel for one
+//!   `(pc, jc)` block is packed once and shared read-only by every row
+//!   stripe; each `ic` stripe packs its own `A` block.
+//! * **Packing** lays both operands out panel-major (`MR`-row panels of
+//!   `A`, `NR`-column panels of `B`, contiguous along `k`), so the inner
+//!   kernel reads both operands with stride 1 regardless of the logical
+//!   layout — the `TN` and `NT` transpose variants differ **only** in the
+//!   pack step's index arithmetic and never materialize a transposed
+//!   matrix.
+//! * **Microkernel**: an `MR×NR` register tile accumulated over one `KC`
+//!   slice. `MR`/`NR` are compile-time constants and the `j` loop is a
+//!   straight independent-lane FMA, which LLVM vectorizes without
+//!   fast-math (summation order over `k` stays sequential, matching the
+//!   naive kernels' rounding to within a few ulps).
+//! * **Parallelism**: row stripes (`ic` blocks) fan out over
+//!   [`par_for_each_index`] — block-level instead of per-row jobs, with
+//!   no per-call job vector. Small problems stay serial.
+//! * **Ragged tails**: pack zero-pads partial panels, the microkernel
+//!   always computes a full `MR×NR` tile, and writeback clips to the
+//!   valid `mr×nr` corner — `m`, `k`, `n` need not be multiples of
+//!   anything.
+//!
+//! Pack buffers come from the caller's [`Workspace`] arena, so
+//! steady-state GEMM calls allocate nothing. Correctness is pinned by the
+//! in-module tests and by `tests/gemm_props.rs`, which sweeps randomized
+//! shapes (including tails) against the [`oracle`] kernels.
+
+use crate::util::par::{par_for_each_index, SendPtr};
+use crate::util::workspace::Workspace;
+
+/// Microkernel register-tile rows.
+pub const MR: usize = 4;
+/// Microkernel register-tile columns (one or two SIMD vectors wide).
+pub const NR: usize = 16;
+/// Row-block size: one `A` pack block is `MC×KC` (L2-resident).
+pub const MC: usize = 64;
+/// Depth-block size.
+pub const KC: usize = 256;
+/// Column-block size (multiple of `NR`); one `B` pack block is `KC×NC`.
+pub const NC: usize = 512;
+
+/// Below this many multiply-adds the row-stripe fan-out costs more than
+/// it saves and the kernel runs serially.
+const GEMM_PAR_MIN_MULADDS: usize = 1 << 20;
+
+/// Strided read-only view: element `(r, c)` lives at `data[r·rs + c·cs]`.
+/// This is how the transpose variants reuse one pack routine.
+#[derive(Clone, Copy)]
+struct View<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl View<'_> {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c * self.cs]
+    }
+}
+
+/// `out[m,n] (+)= scale · a[m,k] @ b[k,n]` — both row-major.
+/// `acc = false` overwrites `out`, `true` accumulates into it.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    acc: bool,
+) {
+    assert_eq!(a.len(), m * k, "gemm_nn: a shape");
+    assert_eq!(b.len(), k * n, "gemm_nn: b shape");
+    let av = View { data: a, rs: k, cs: 1 };
+    let bv = View { data: b, rs: n, cs: 1 };
+    gemm_view(ws, out, av, bv, m, k, n, scale, acc);
+}
+
+/// `out[m,n] (+)= scale · aᵀ @ b` with `a` stored `[k,m]` row-major and
+/// `b` stored `[k,n]` row-major — the weight-gradient product `xᵀ·dy`
+/// without materializing `xᵀ`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    acc: bool,
+) {
+    assert_eq!(a.len(), k * m, "gemm_tn: a shape");
+    assert_eq!(b.len(), k * n, "gemm_tn: b shape");
+    let av = View { data: a, rs: 1, cs: m };
+    let bv = View { data: b, rs: n, cs: 1 };
+    gemm_view(ws, out, av, bv, m, k, n, scale, acc);
+}
+
+/// `out[m,n] (+)= scale · a @ bᵀ` with `a` stored `[m,k]` row-major and
+/// `b` stored `[n,k]` row-major — the input-gradient product `dy·Wᵀ`
+/// without materializing `Wᵀ`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    acc: bool,
+) {
+    assert_eq!(a.len(), m * k, "gemm_nt: a shape");
+    assert_eq!(b.len(), n * k, "gemm_nt: b shape");
+    let av = View { data: a, rs: k, cs: 1 };
+    let bv = View { data: b, rs: 1, cs: k };
+    gemm_view(ws, out, av, bv, m, k, n, scale, acc);
+}
+
+/// Pack the `A` block rows `i0..i0+mc` × depth `p0..p0+kc` into `MR`-row
+/// panels, zero-padding the last partial panel.
+fn pack_a(av: View, apack: &mut [f32], i0: usize, mc: usize, p0: usize, kc: usize) {
+    for r0 in (0..mc).step_by(MR) {
+        let panel = &mut apack[(r0 / MR) * MR * kc..(r0 / MR + 1) * MR * kc];
+        for p in 0..kc {
+            let dst = &mut panel[p * MR..(p + 1) * MR];
+            for (i, d) in dst.iter_mut().enumerate() {
+                let r = r0 + i;
+                *d = if r < mc { av.at(i0 + r, p0 + p) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack the `B` block depth `p0..p0+kc` × cols `j0..j0+nc` into `NR`-col
+/// panels, zero-padding the last partial panel.
+fn pack_b(bv: View, bpack: &mut [f32], p0: usize, kc: usize, j0: usize, nc: usize) {
+    for c0 in (0..nc).step_by(NR) {
+        let panel = &mut bpack[(c0 / NR) * NR * kc..(c0 / NR + 1) * NR * kc];
+        for p in 0..kc {
+            let dst = &mut panel[p * NR..(p + 1) * NR];
+            for (j, d) in dst.iter_mut().enumerate() {
+                let c = c0 + j;
+                *d = if c < nc { bv.at(p0 + p, j0 + c) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// `MR×NR` register tile accumulated over one packed `KC` slice. The `j`
+/// loop is a fixed-width independent-lane multiply-add the autovectorizer
+/// turns into SIMD FMAs; the `p` loop stays sequential, preserving the
+/// naive kernels' summation order.
+#[inline]
+fn micro_kernel(kc: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [f32; MR * NR]) {
+    debug_assert!(apanel.len() >= kc * MR && bpanel.len() >= kc * NR);
+    for p in 0..kc {
+        let a = &apanel[p * MR..p * MR + MR];
+        let b = &bpanel[p * NR..p * NR + NR];
+        for i in 0..MR {
+            let ai = a[i];
+            let row = &mut acc[i * NR..i * NR + NR];
+            for (o, &bv) in row.iter_mut().zip(b) {
+                *o += ai * bv;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_view(
+    ws: &mut Workspace,
+    out: &mut [f32],
+    av: View,
+    bv: View,
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: f32,
+    acc: bool,
+) {
+    assert_eq!(out.len(), m * n, "gemm: out shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            out.fill(0.0);
+        }
+        return;
+    }
+
+    let par = m * k * n >= GEMM_PAR_MIN_MULADDS;
+    let n_ic = m.div_ceil(MC);
+    // pack buffers sized to the actual problem (clipped to one block),
+    // padded to whole panels. The serial path reuses a single A region
+    // across row stripes (they run sequentially); the parallel path needs
+    // one region per stripe job because jobs carry no worker identity —
+    // an acceptable reservation while n_ic ≤ workers() (true for every
+    // preset: m ≤ 1024 ⇒ ≤ 16 regions). Revisit with per-worker loops if
+    // row counts ever outgrow that.
+    let kc_max = k.min(KC);
+    let nc_pad = n.min(NC).div_ceil(NR) * NR;
+    let mc_pad = m.min(MC).div_ceil(MR) * MR;
+    let apack_stride = mc_pad * kc_max;
+    let n_regions = if par { n_ic } else { 1 };
+    let mut apack_all = ws.take(n_regions * apack_stride);
+    let mut bpack = ws.take(kc_max * nc_pad);
+
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let apack_ptr = SendPtr(apack_all.as_mut_ptr());
+
+    for jc in (0..n).step_by(NC) {
+        let nc_eff = (n - jc).min(NC);
+        for pc in (0..k).step_by(KC) {
+            let kc_eff = (k - pc).min(KC);
+            // the first depth block either assigns (acc=false) or
+            // accumulates; later depth blocks always accumulate
+            let assign = !acc && pc == 0;
+            pack_b(bv, &mut bpack, pc, kc_eff, jc, nc_eff);
+            let bpack_ref: &[f32] = &bpack;
+            par_for_each_index(n_ic, par, |ji| {
+                let i0 = ji * MC;
+                let mc_eff = (m - i0).min(MC);
+                // safety: in the parallel case each ji owns a disjoint
+                // apack region; in the serial case stripes run one at a
+                // time and share region 0. Row stripes of `out` are
+                // disjoint either way.
+                let region = if par { ji } else { 0 };
+                let apack = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        apack_ptr.get().add(region * apack_stride),
+                        apack_stride,
+                    )
+                };
+                pack_a(av, apack, i0, mc_eff, pc, kc_eff);
+                for r0 in (0..mc_eff).step_by(MR) {
+                    let mr = (mc_eff - r0).min(MR);
+                    let apanel = &apack[(r0 / MR) * MR * kc_eff..(r0 / MR + 1) * MR * kc_eff];
+                    for j0 in (0..nc_eff).step_by(NR) {
+                        let nr = (nc_eff - j0).min(NR);
+                        let bpanel =
+                            &bpack_ref[(j0 / NR) * NR * kc_eff..(j0 / NR + 1) * NR * kc_eff];
+                        let mut tile = [0.0f32; MR * NR];
+                        micro_kernel(kc_eff, apanel, bpanel, &mut tile);
+                        for i in 0..mr {
+                            let row = i0 + r0 + i;
+                            // safety: rows of this stripe belong to ji only
+                            let crow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    out_ptr.get().add(row * n + jc + j0),
+                                    nr,
+                                )
+                            };
+                            let trow = &tile[i * NR..i * NR + nr];
+                            if assign {
+                                for (o, &v) in crow.iter_mut().zip(trow) {
+                                    *o = scale * v;
+                                }
+                            } else {
+                                for (o, &v) in crow.iter_mut().zip(trow) {
+                                    *o += scale * v;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    ws.give(bpack);
+    ws.give(apack_all);
+}
+
+/// Naive triple-loop kernels with the exact semantics (including
+/// summation order and `scale` placement) of the pre-blocking reference
+/// implementation. They exist as correctness oracles for the property
+/// suite and as the "before" side of the kernel benchmarks — never call
+/// them from the model's compute path.
+#[doc(hidden)]
+pub mod oracle {
+    /// `out[m,n] (+)= scale · a[m,k] @ b[k,n]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_nn(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        scale: f32,
+        acc: bool,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(out.len(), m * n);
+        if !acc {
+            out.fill(0.0);
+        }
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in 0..k {
+                let av = a[i * k + p] * scale;
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// `out[m,n] (+)= scale · aᵀ @ b`, `a` stored `[k,m]` row-major.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_tn(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        scale: f32,
+        acc: bool,
+    ) {
+        assert_eq!(a.len(), k * m);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(out.len(), m * n);
+        if !acc {
+            out.fill(0.0);
+        }
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            for i in 0..m {
+                let av = a[p * m + i] * scale;
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    /// `out[m,n] (+)= scale · a @ bᵀ`, `b` stored `[n,k]` row-major.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_nt(
+        out: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        scale: f32,
+        acc: bool,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k);
+        assert_eq!(out.len(), m * n);
+        if !acc {
+            out.fill(0.0);
+        }
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut dot = 0.0f32;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    dot += x * y;
+                }
+                out[i * n + j] += scale * dot;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn nn_matches_oracle_exactly_for_unit_scale() {
+        // same k summation order and scale placement ⇒ tiny diffs only
+        let mut ws = Workspace::new();
+        let mut rng = Rng::seed_from_u64(1);
+        for &(m, k, n) in &[(1, 1, 1), (4, 16, 16), (5, 3, 17), (65, 257, 33), (128, 64, 96)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut got = vec![f32::NAN; m * n];
+            let mut want = vec![0.0f32; m * n];
+            gemm_nn(&mut ws, &mut got, &a, &b, m, k, n, 1.0, false);
+            oracle::matmul_nn(&mut want, &a, &b, m, k, n, 1.0, false);
+            let d = max_abs_diff(&got, &want);
+            assert!(d <= 1e-5, "({m},{k},{n}): max abs diff {d}");
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_oracle_with_ragged_tails() {
+        let mut ws = Workspace::new();
+        let mut rng = Rng::seed_from_u64(2);
+        for &(m, k, n) in &[(7, 5, 19), (33, 70, 18), (130, 300, 21)] {
+            let a_tn = rand_vec(&mut rng, k * m);
+            let b_tn = rand_vec(&mut rng, k * n);
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            gemm_tn(&mut ws, &mut got, &a_tn, &b_tn, m, k, n, 0.5, false);
+            oracle::matmul_tn(&mut want, &a_tn, &b_tn, m, k, n, 0.5, false);
+            // scale≠1 and k>KC change the rounding path slightly; the
+            // strict 1e-5 bound lives in tests/gemm_props.rs with k ≤ 128
+            let d = max_abs_diff(&got, &want);
+            assert!(d <= 5e-5, "tn ({m},{k},{n}): {d}");
+
+            let a_nt = rand_vec(&mut rng, m * k);
+            let b_nt = rand_vec(&mut rng, n * k);
+            let mut got = rand_vec(&mut rng, m * n);
+            let mut want = got.clone();
+            gemm_nt(&mut ws, &mut got, &a_nt, &b_nt, m, k, n, -1.25, true);
+            oracle::matmul_nt(&mut want, &a_nt, &b_nt, m, k, n, -1.25, true);
+            let d = max_abs_diff(&got, &want);
+            assert!(d <= 5e-5, "nt acc ({m},{k},{n}): {d}");
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_onto_existing_output() {
+        let mut ws = Workspace::new();
+        let a = vec![1.0f32; 6]; // 2x3
+        let b = vec![2.0f32; 12]; // 3x4
+        let mut out = vec![10.0f32; 8]; // 2x4
+        gemm_nn(&mut ws, &mut out, &a, &b, 2, 3, 4, 1.0, true);
+        for &v in &out {
+            assert_eq!(v, 10.0 + 6.0);
+        }
+        // assign mode overwrites stale contents entirely
+        let mut out = vec![f32::NAN; 8];
+        gemm_nn(&mut ws, &mut out, &a, &b, 2, 3, 4, 1.0, false);
+        for &v in &out {
+            assert_eq!(v, 6.0);
+        }
+    }
+
+    #[test]
+    fn zero_k_assign_clears_and_acc_is_noop() {
+        let mut ws = Workspace::new();
+        let mut out = vec![3.0f32; 6];
+        gemm_nn(&mut ws, &mut out, &[], &[], 2, 0, 3, 1.0, true);
+        assert!(out.iter().all(|&v| v == 3.0));
+        gemm_nn(&mut ws, &mut out, &[], &[], 2, 0, 3, 1.0, false);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn large_parallel_shape_matches_oracle() {
+        // crosses the parallel threshold: m·k·n = 1024·128·24 ≈ 3.1M
+        let mut ws = Workspace::new();
+        let mut rng = Rng::seed_from_u64(3);
+        let (m, k, n) = (1024, 128, 24);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        gemm_nn(&mut ws, &mut got, &a, &b, m, k, n, 1.0, false);
+        oracle::matmul_nn(&mut want, &a, &b, m, k, n, 1.0, false);
+        let d = max_abs_diff(&got, &want);
+        assert!(d <= 1e-5, "parallel ({m},{k},{n}): {d}");
+    }
+
+    #[test]
+    fn steady_state_gemm_does_not_grow_the_arena() {
+        let mut ws = Workspace::new();
+        let mut rng = Rng::seed_from_u64(4);
+        let (m, k, n) = (96, 40, 72);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut out = vec![0.0f32; m * n];
+        gemm_nn(&mut ws, &mut out, &a, &b, m, k, n, 1.0, false);
+        let grows = ws.stats().grows;
+        for _ in 0..5 {
+            gemm_nn(&mut ws, &mut out, &a, &b, m, k, n, 1.0, false);
+        }
+        assert_eq!(ws.stats().grows, grows, "pack buffers must be recycled");
+    }
+}

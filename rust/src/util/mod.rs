@@ -8,12 +8,19 @@
 //!   configs, JSONL metrics).
 //! * [`rng`] — seeded xoshiro256++ PRNG with uniform/range helpers.
 //! * [`par`] — scoped-thread parallel-for / parallel-map.
+//! * [`gemm`] — cache-blocked packed GEMM kernels (NN/TN/NT) with a
+//!   register-tiled microkernel; the reference backend's matmul engine.
+//! * [`workspace`] — step-scoped recycling arena for `f32` buffers; makes
+//!   steady-state train steps allocation-free and reports the real
+//!   high-water activation footprint.
 //! * [`cli`] — minimal flag parser for the `agsel` launcher and examples.
 //! * [`bench`] — micro-benchmark harness (warmup + trimmed statistics),
 //!   used by the `cargo bench` targets.
 
 pub mod bench;
 pub mod cli;
+pub mod gemm;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod workspace;

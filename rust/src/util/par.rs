@@ -1,11 +1,17 @@
 //! Scoped-thread data parallelism (the in-tree stand-in for rayon).
 //!
-//! The coordinator's host-side hot loops — per-block grad-norm reductions
-//! and selective AdamW updates — are embarrassingly parallel across
-//! blocks. `par_map_mut`/`par_map` fan work over `std::thread::scope`
-//! threads with a simple atomic work queue; for small inputs they fall
-//! back to the serial path to avoid spawn overhead.
+//! The coordinator's host-side hot loops — per-block grad-norm reductions,
+//! selective AdamW updates, and the blocked GEMM kernels' row-stripe
+//! fan-out — are embarrassingly parallel. The helpers here distribute work
+//! over `std::thread::scope` threads with a simple atomic work queue; for
+//! small inputs they fall back to the serial path to avoid spawn overhead.
+//!
+//! [`par_map`] writes results through `MaybeUninit` slots (each index is
+//! claimed exactly once), so result types need no `Default + Clone` bound
+//! and there is no pre-zeroing pass over the output — kernel tiles and
+//! other large results pay only for the writes they actually do.
 
+use std::mem::{ManuallyDrop, MaybeUninit};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use (max cpus, capped).
@@ -14,16 +20,15 @@ pub fn workers() -> usize {
 }
 
 /// Parallel map over a slice (order-preserving).
-pub fn par_map<T: Sync, R: Send + Default + Clone>(
-    items: &[T],
-    f: impl Fn(usize, &T) -> R + Sync,
-) -> Vec<R> {
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync) -> Vec<R> {
     let n = items.len();
     let nw = workers().min(n.max(1));
     if n < 2 || nw < 2 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
-    let mut out = vec![R::default(); n];
+    let mut out: Vec<MaybeUninit<R>> = Vec::with_capacity(n);
+    // safety: MaybeUninit<R> requires no initialization
+    unsafe { out.set_len(n) };
     let cursor = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
     std::thread::scope(|scope| {
@@ -35,11 +40,15 @@ pub fn par_map<T: Sync, R: Send + Default + Clone>(
                 }
                 let r = f(i, &items[i]);
                 // safety: each index is claimed exactly once
-                unsafe { *out_ptr.get().add(i) = r };
+                unsafe { out_ptr.get().add(i).write(MaybeUninit::new(r)) };
             });
         }
     });
-    out
+    // safety: the scope joined all workers and the cursor handed out every
+    // index in 0..n exactly once, so all n slots are initialized.
+    // MaybeUninit<R> and R have identical layout.
+    let mut out = ManuallyDrop::new(out);
+    unsafe { Vec::from_raw_parts(out.as_mut_ptr() as *mut R, out.len(), out.capacity()) }
 }
 
 /// Run `f(i, &mut items[i])` for every index, in parallel.
@@ -69,7 +78,39 @@ pub fn par_for_each_mut<T: Send>(items: &mut [T], f: impl Fn(usize, &mut T) + Sy
     });
 }
 
-struct SendPtr<T>(*mut T);
+/// Run `f(i)` for every `i in 0..n`, in parallel when `par` is set (and
+/// the machine has more than one worker), serially otherwise.
+///
+/// This is the block-level fan-out used by the GEMM kernels: the closure
+/// claims whole cache blocks by index instead of the caller materializing
+/// a per-row job vector, so the dispatch itself performs no heap
+/// allocation. The closure is responsible for making the per-index work
+/// disjoint (e.g. each index owns one row stripe of the output).
+pub fn par_for_each_index(n: usize, par: bool, f: impl Fn(usize) + Sync) {
+    let nw = workers().min(n.max(1));
+    if !par || n < 2 || nw < 2 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..nw {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// A raw pointer that asserts Send+Sync so scoped workers can write to
+/// disjoint regions of one buffer. Callers guarantee disjointness.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -77,7 +118,7 @@ impl<T> SendPtr<T> {
     /// Accessor so closures capture `&SendPtr` (Sync) rather than the raw
     /// pointer field itself (edition-2021 disjoint capture would otherwise
     /// capture the non-Sync `*mut T`).
-    fn get(&self) -> *mut T {
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }
@@ -100,6 +141,21 @@ mod tests {
     }
 
     #[test]
+    fn par_map_works_without_default_or_clone() {
+        // a result type that is neither Default nor Clone
+        struct NoDefault(String);
+        let items: Vec<usize> = (0..200).collect();
+        let out = par_map(&items, |i, &x| NoDefault(format!("{i}:{x}")));
+        assert_eq!(out.len(), 200);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.0, format!("{i}:{i}"));
+        }
+        // drops run exactly once per element (no double-free / leak of the
+        // MaybeUninit transmute) — String's allocator would abort on UAF,
+        // and miri-style issues would show as garbled contents above.
+    }
+
+    #[test]
     fn par_for_each_mut_touches_every_item() {
         let mut items = vec![0u64; 500];
         par_for_each_mut(&mut items, |i, x| *x = i as u64 + 1);
@@ -115,5 +171,45 @@ mod tests {
         let par = par_map(&items, |_, &x| heavy(x));
         let ser: Vec<u64> = items.iter().map(|&x| heavy(x)).collect();
         assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn par_for_each_index_covers_range() {
+        use std::sync::atomic::AtomicU64;
+        for par in [false, true] {
+            let hits: Vec<AtomicU64> = (0..300).map(|_| AtomicU64::new(0)).collect();
+            par_for_each_index(hits.len(), par, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} (par={par})");
+            }
+        }
+        // empty and single-element ranges
+        par_for_each_index(0, true, |_| panic!("must not be called"));
+        let one = AtomicUsize::new(0);
+        par_for_each_index(1, true, |i| {
+            one.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn par_for_each_index_disjoint_writes_via_sendptr() {
+        let mut buf = vec![0.0f32; 1024];
+        let n_blocks = 8;
+        let stride = buf.len() / n_blocks;
+        let ptr = SendPtr(buf.as_mut_ptr());
+        par_for_each_index(n_blocks, true, |b| {
+            // safety: each index owns a disjoint stride of the buffer
+            let chunk =
+                unsafe { std::slice::from_raw_parts_mut(ptr.get().add(b * stride), stride) };
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (b * stride + j) as f32;
+            }
+        });
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
     }
 }

@@ -1,0 +1,235 @@
+//! Step-scoped buffer arena for the reference backend's compute path.
+//!
+//! The naive executor allocated a fresh `Vec<f32>` for every activation,
+//! gradient and GEMM pack buffer on every training step, so the hot loop
+//! was dominated by allocator traffic on top of the FLOPs. [`Workspace`]
+//! is a recycling pool of `f32` slabs: [`Workspace::take`] hands out a
+//! buffer (best-fit from the free list, or a fresh heap allocation when
+//! the pool has nothing large enough) and [`Workspace::give`] returns it.
+//! After one warm-up step every buffer the step loop needs is resident,
+//! so steady-state steps perform **zero** slab allocations — the
+//! [`WorkspaceStats::grows`] counter is how the bench harness and the
+//! arena tests verify that.
+//!
+//! # Lifetime rules
+//!
+//! * Buffers are plain owned `Vec<f32>`s — the borrow checker stays out
+//!   of the picture; discipline is by convention, checked by accounting:
+//!   every `take` must be paired with exactly one `give` (recycle) or one
+//!   [`Workspace::disown_cap`] (the buffer leaves the arena for good,
+//!   e.g. an output returned to the caller).
+//! * [`Workspace::take`] returns a buffer with **unspecified contents**
+//!   (initialized, but stale); callers must fully overwrite it before
+//!   reading. Use [`Workspace::take_zeroed`] for accumulator buffers.
+//! * Only `give` back buffers that came from `take` — foreign vectors
+//!   would skew the capacity accounting.
+//!
+//! The high-water mark ([`WorkspaceStats::high_water_bytes`]) is the peak
+//! number of bytes lent out at once: the real per-step activation /
+//! scratch footprint, surfaced through `memory::MemoryReport` so the
+//! selective-vs-full accounting can use measured rather than modeled
+//! buffer usage.
+
+/// Snapshot of the arena's accounting counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Peak bytes lent out simultaneously since creation.
+    pub high_water_bytes: usize,
+    /// Total bytes of slab capacity owned by the arena (free + lent).
+    pub capacity_bytes: usize,
+    /// Bytes currently lent out.
+    pub outstanding_bytes: usize,
+    /// Number of fresh heap allocations performed (0 growth between two
+    /// snapshots ⇒ the interval ran entirely out of recycled slabs).
+    pub grows: u64,
+    /// Number of `take`/`take_zeroed` calls served.
+    pub takes: u64,
+}
+
+/// Recycling pool of `f32` slabs (see the module docs).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Recycled slabs, sorted by capacity (ascending) for best-fit takes.
+    free: Vec<Vec<f32>>,
+    /// `f32`s currently lent out (by slab capacity).
+    outstanding: usize,
+    /// Peak of `outstanding`.
+    high_water: usize,
+    /// Total `f32` capacity owned (free + lent).
+    capacity: usize,
+    grows: u64,
+    takes: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a buffer of exactly `n` elements with unspecified (but
+    /// initialized) contents; the caller must fully overwrite it before
+    /// reading. Prefers the smallest free slab that fits.
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        self.takes += 1;
+        let idx = self.free.partition_point(|v| v.capacity() < n);
+        let mut v = if idx < self.free.len() {
+            self.free.remove(idx)
+        } else {
+            self.grows += 1;
+            let fresh = vec![0.0f32; n];
+            self.capacity += fresh.capacity();
+            fresh
+        };
+        if v.len() > n {
+            v.truncate(n);
+        } else {
+            // pads only the never-before-used tail with zeros
+            v.resize(n, 0.0);
+        }
+        self.outstanding += v.capacity();
+        if self.outstanding > self.high_water {
+            self.high_water = self.outstanding;
+        }
+        v
+    }
+
+    /// Borrow an all-zeros buffer of `n` elements (for accumulators).
+    pub fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.take(n);
+        v.fill(0.0);
+        v
+    }
+
+    /// Return a buffer obtained from [`Workspace::take`] to the pool.
+    pub fn give(&mut self, v: Vec<f32>) {
+        let cap = v.capacity();
+        if cap == 0 {
+            return;
+        }
+        self.outstanding = self.outstanding.saturating_sub(cap);
+        let idx = self.free.partition_point(|x| x.capacity() < cap);
+        self.free.insert(idx, v);
+    }
+
+    /// Record that a taken buffer of capacity `cap` permanently left the
+    /// arena (it was handed to the caller as an output instead of being
+    /// recycled), so the accounting does not ratchet upward forever.
+    pub fn disown_cap(&mut self, cap: usize) {
+        self.outstanding = self.outstanding.saturating_sub(cap);
+        self.capacity = self.capacity.saturating_sub(cap);
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            high_water_bytes: self.high_water * 4,
+            capacity_bytes: self.capacity * 4,
+            outstanding_bytes: self.outstanding * 4,
+            grows: self.grows,
+            takes: self.takes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_recycles_without_regrowing() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100);
+        let grows_after_first = ws.stats().grows;
+        assert_eq!(grows_after_first, 1);
+        ws.give(a);
+        for _ in 0..10 {
+            let b = ws.take(100);
+            assert_eq!(b.len(), 100);
+            ws.give(b);
+        }
+        assert_eq!(ws.stats().grows, grows_after_first, "steady state must not grow");
+        assert_eq!(ws.stats().takes, 11);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_slab() {
+        let mut ws = Workspace::new();
+        let small = ws.take(10);
+        let big = ws.take(1000);
+        let (small_cap, big_cap) = (small.capacity(), big.capacity());
+        ws.give(small);
+        ws.give(big);
+        let v = ws.take(5);
+        assert_eq!(v.capacity(), small_cap, "should reuse the small slab");
+        ws.give(v);
+        let v = ws.take(500);
+        assert_eq!(v.capacity(), big_cap, "should reuse the big slab");
+        ws.give(v);
+        assert_eq!(ws.stats().grows, 2);
+    }
+
+    #[test]
+    fn take_zeroed_is_zero_even_after_dirty_reuse() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(64);
+        for x in a.iter_mut() {
+            *x = 3.5;
+        }
+        ws.give(a);
+        let b = ws.take_zeroed(64);
+        assert!(b.iter().all(|&x| x == 0.0));
+        ws.give(b);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_outstanding() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100);
+        let b = ws.take(200);
+        let peak = ws.stats().outstanding_bytes;
+        assert_eq!(ws.stats().high_water_bytes, peak);
+        ws.give(a);
+        ws.give(b);
+        assert_eq!(ws.stats().outstanding_bytes, 0);
+        assert_eq!(ws.stats().high_water_bytes, peak, "high water persists");
+        // re-borrowing the same buffers must not raise the peak
+        let a = ws.take(200);
+        let b = ws.take(100);
+        assert_eq!(ws.stats().high_water_bytes, peak);
+        ws.give(a);
+        ws.give(b);
+    }
+
+    #[test]
+    fn disown_shrinks_accounting() {
+        let mut ws = Workspace::new();
+        let a = ws.take(128);
+        let cap = a.capacity();
+        ws.disown_cap(cap);
+        drop(a); // buffer now belongs to the caller
+        assert_eq!(ws.stats().outstanding_bytes, 0);
+        assert_eq!(ws.stats().capacity_bytes, 0);
+        // the arena keeps working afterwards
+        let b = ws.take(16);
+        assert_eq!(b.len(), 16);
+        ws.give(b);
+    }
+
+    #[test]
+    fn varying_sizes_settle_into_reuse() {
+        let mut ws = Workspace::new();
+        // warm-up pass over a realistic mixed-size pattern
+        let sizes = [64usize, 256, 64, 1024, 16, 256];
+        let mut held: Vec<Vec<f32>> = sizes.iter().map(|&n| ws.take(n)).collect();
+        for v in held.drain(..) {
+            ws.give(v);
+        }
+        let grows = ws.stats().grows;
+        for _ in 0..5 {
+            let mut held: Vec<Vec<f32>> = sizes.iter().map(|&n| ws.take(n)).collect();
+            for v in held.drain(..) {
+                ws.give(v);
+            }
+        }
+        assert_eq!(ws.stats().grows, grows, "repeat pattern must be allocation-free");
+    }
+}

@@ -1,0 +1,158 @@
+//! Property tests for the blocked GEMM kernels: every layout (`NN`,
+//! `TN`, `NT`), with and without accumulate and scale, over randomized
+//! shapes including ragged tails (m, k, n deliberately not multiples of
+//! the register-tile or cache-block sizes), against the naive triple-loop
+//! oracles that the pre-blocking reference backend used.
+//!
+//! k is capped at one depth block (`KC`) and operands are drawn from
+//! [-0.5, 0.5], which keeps the two summation paths' rounding within a
+//! few ulps — the max-abs-diff bound is a strict 1e-5.
+
+use adagradselect::util::gemm::{gemm_nn, gemm_nt, gemm_tn, oracle, MC, MR, NR};
+use adagradselect::util::rng::Rng;
+use adagradselect::util::workspace::Workspace;
+
+fn cases() -> u64 {
+    std::env::var("AGSEL_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(50)
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_f64(-0.5, 0.5) as f32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// One randomized comparison of the blocked kernel against its oracle.
+fn check_case(ws: &mut Workspace, rng: &mut Rng, seed: u64) {
+    // shape menu: tiny degenerate, tile-exact, ragged, and block-crossing
+    let m = match rng.gen_range(0, 4) {
+        0 => rng.gen_range(1, 4),
+        1 => MR * rng.gen_range(1, 9),            // exact MR multiples
+        2 => MR * rng.gen_range(1, 9) + rng.gen_range(1, MR), // ragged tail
+        _ => rng.gen_range(MC, 2 * MC + 3),       // crosses the MC row block
+    };
+    let k = match rng.gen_range(0, 3) {
+        0 => rng.gen_range(1, 5),
+        1 => rng.gen_range(5, 64),
+        _ => rng.gen_range(64, 129),
+    };
+    let n = match rng.gen_range(0, 4) {
+        0 => rng.gen_range(1, 4),
+        1 => NR * rng.gen_range(1, 5),            // exact NR multiples
+        2 => NR * rng.gen_range(1, 5) + rng.gen_range(1, NR), // ragged tail
+        _ => rng.gen_range(1, 71),
+    };
+    let layout = rng.gen_range(0, 3);
+    let acc = rng.gen_bool(0.5);
+    let scale = match rng.gen_range(0, 4) {
+        0 | 1 => 1.0f32,
+        2 => 0.5,
+        _ => -1.5,
+    };
+
+    let (a_len, b_len) = match layout {
+        0 => (m * k, k * n), // NN
+        1 => (k * m, k * n), // TN
+        _ => (m * k, n * k), // NT
+    };
+    let a = rand_vec(rng, a_len);
+    let b = rand_vec(rng, b_len);
+    // acc mode starts from a shared random output; assign mode must
+    // overwrite stale contents, so seed `got` with garbage
+    let base = rand_vec(rng, m * n);
+    let mut got = if acc { base.clone() } else { vec![f32::NAN; m * n] };
+    let mut want = if acc { base } else { vec![0.0f32; m * n] };
+
+    match layout {
+        0 => {
+            gemm_nn(ws, &mut got, &a, &b, m, k, n, scale, acc);
+            oracle::matmul_nn(&mut want, &a, &b, m, k, n, scale, acc);
+        }
+        1 => {
+            gemm_tn(ws, &mut got, &a, &b, m, k, n, scale, acc);
+            oracle::matmul_tn(&mut want, &a, &b, m, k, n, scale, acc);
+        }
+        _ => {
+            gemm_nt(ws, &mut got, &a, &b, m, k, n, scale, acc);
+            oracle::matmul_nt(&mut want, &a, &b, m, k, n, scale, acc);
+        }
+    }
+    let d = max_abs_diff(&got, &want);
+    assert!(
+        d <= 1e-5,
+        "seed {seed}: layout {layout} m={m} k={k} n={n} scale={scale} acc={acc}: \
+         max abs diff {d:.3e}"
+    );
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive_oracles() {
+    let mut ws = Workspace::new();
+    for seed in 0..cases() {
+        let mut rng = Rng::seed_from_u64(0xb10c + seed);
+        check_case(&mut ws, &mut rng, seed);
+    }
+}
+
+#[test]
+fn prop_parallel_path_matches_oracle() {
+    // shapes big enough to cross the parallel fan-out threshold
+    let mut ws = Workspace::new();
+    for (seed, &(m, k, n)) in [(1024usize, 128usize, 24usize), (700, 96, 40)].iter().enumerate() {
+        let mut rng = Rng::seed_from_u64(7000 + seed as u64);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        gemm_nn(&mut ws, &mut got, &a, &b, m, k, n, 1.0, false);
+        oracle::matmul_nn(&mut want, &a, &b, m, k, n, 1.0, false);
+        let d = max_abs_diff(&got, &want);
+        assert!(d <= 1e-5, "parallel ({m},{k},{n}): max abs diff {d:.3e}");
+    }
+}
+
+#[test]
+fn prop_unit_scale_single_block_is_bitwise_identical() {
+    // scale=1, assign mode, k within one depth block: the blocked kernel
+    // performs the exact same f32 operation sequence per output element
+    // as the naive oracle, so results must match bit for bit
+    let mut ws = Workspace::new();
+    for seed in 0..cases().min(20) {
+        let mut rng = Rng::seed_from_u64(0xe4ac7 + seed);
+        let (m, k, n) = (rng.gen_range(1, 90), rng.gen_range(1, 129), rng.gen_range(1, 50));
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut got = vec![f32::NAN; m * n];
+        let mut want = vec![0.0f32; m * n];
+        gemm_nn(&mut ws, &mut got, &a, &b, m, k, n, 1.0, false);
+        oracle::matmul_nn(&mut want, &a, &b, m, k, n, 1.0, false);
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "seed {seed}: ({m},{k},{n}) element {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_gemm_steady_state_is_allocation_free() {
+    let mut ws = Workspace::new();
+    let mut rng = Rng::seed_from_u64(99);
+    let (m, k, n) = (96usize, 64usize, 48usize);
+    let a = rand_vec(&mut rng, m * k);
+    let b = rand_vec(&mut rng, k * n);
+    let mut out = vec![0.0f32; m * n];
+    gemm_nn(&mut ws, &mut out, &a, &b, m, k, n, 1.0, false);
+    // prime a second, smaller shape so the pool holds mixed slab sizes
+    let mut out2 = vec![0.0f32; 32 * 8];
+    gemm_nn(&mut ws, &mut out2, &a[..32 * 16], &b[..16 * 8], 32, 16, 8, 1.0, false);
+    let grows = ws.stats().grows;
+    for _ in 0..10 {
+        gemm_nn(&mut ws, &mut out, &a, &b, m, k, n, 1.0, false);
+    }
+    assert_eq!(ws.stats().grows, grows, "repeat GEMMs must recycle pack buffers");
+}

@@ -1,0 +1,182 @@
+//! Integration tests for the step workspace arena wired through the
+//! reference backend: steady-state execution must be allocation-free and
+//! bit-deterministic across every entrypoint, the high-water mark must be
+//! stable (no per-step ratchet), and the arena-backed path must agree
+//! exactly with the one-shot public API that allocates a private arena.
+
+use adagradselect::model::ModelState;
+use adagradselect::model::forward;
+use adagradselect::runtime::{Backend, ReferenceBackend};
+use adagradselect::util::workspace::Workspace;
+
+fn tokens_for(b: usize, s: usize) -> Vec<i32> {
+    (0..b * s).map(|i| 4 + ((i * 7) % 45) as i32).collect()
+}
+
+/// Run a set of preset entrypoints once each; returns the raw outputs.
+fn run_entries(engine: &ReferenceBackend, entries: &[&str]) -> Vec<Vec<Vec<f32>>> {
+    let p = engine.manifest().preset("test-tiny").unwrap().clone();
+    let (b, s) = (p.model.batch, p.model.seq_len);
+    let state = ModelState::init(&p.blocks, 11);
+    let lora = ModelState::init(&p.lora_blocks, 12);
+    let base_bufs: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let lora_bufs: Vec<_> =
+        lora.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let tokens = tokens_for(b, s);
+    let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
+
+    let mut outs = Vec::new();
+    for entry in entries {
+        let exe = engine.load_preset_exe("test-tiny", entry).unwrap();
+        let mut args: Vec<_> = base_bufs.iter().collect();
+        if *entry == "train_step_lora" {
+            args.extend(lora_bufs.iter());
+        }
+        args.push(&tok);
+        if *entry != "decode_step" {
+            args.push(&tok);
+        }
+        let out = engine.execute(&exe, &args).unwrap();
+        outs.push(out.outputs);
+    }
+    outs
+}
+
+/// Entrypoints whose outputs are copied out of the arena: after warm-up
+/// the mix must run with ZERO slab allocations and a frozen high-water
+/// mark, while staying bit-deterministic.
+#[test]
+fn decode_free_entry_mix_is_exactly_steady() {
+    const MIX: &[&str] = &["train_step", "eval_loss", "train_step_lora"];
+    let engine = ReferenceBackend::new();
+    let first = run_entries(&engine, MIX); // warm-up: slabs get allocated
+    let warm = engine.workspace_stats();
+    assert!(warm.high_water_bytes > 0);
+    assert!(warm.grows > 0);
+    for pass in 0..3 {
+        let outs = run_entries(&engine, MIX);
+        assert_eq!(outs, first, "pass {pass}: arena reuse must not change any output bit");
+        let st = engine.workspace_stats();
+        assert_eq!(st.grows, warm.grows, "pass {pass}: mix must be allocation-free");
+        assert_eq!(
+            st.high_water_bytes, warm.high_water_bytes,
+            "pass {pass}: high-water mark must not creep"
+        );
+        assert_eq!(st.outstanding_bytes, 0, "pass {pass}: every buffer returned");
+    }
+}
+
+/// `decode_step`'s logits leave the arena each call (disowned outputs are
+/// the API boundary), so passes containing decode may refill the pool —
+/// but the growth must stay bounded per pass and the high-water mark must
+/// never exceed the warm peak (no ratchet).
+#[test]
+fn decode_outputs_leave_the_arena_without_ratchet() {
+    const MIX: &[&str] = &["train_step", "eval_loss", "decode_step", "train_step_lora"];
+    let engine = ReferenceBackend::new();
+    let first = run_entries(&engine, MIX);
+    let warm = engine.workspace_stats();
+    let mut prev_grows = warm.grows;
+    for pass in 0..4 {
+        let outs = run_entries(&engine, MIX);
+        assert_eq!(outs, first, "pass {pass}: outputs must stay bit-identical");
+        let st = engine.workspace_stats();
+        // at most the disowned-logits refill (plus one best-fit
+        // substitution ripple) per pass
+        assert!(
+            st.grows - prev_grows <= 2,
+            "pass {pass}: grew {} slabs, expected <= 2",
+            st.grows - prev_grows
+        );
+        // best-fit substitution after a disown can momentarily serve a
+        // request from a larger slab; allow that jitter but no ratchet
+        assert!(
+            st.high_water_bytes <= warm.high_water_bytes + warm.high_water_bytes / 10,
+            "pass {pass}: high-water ratcheted {} -> {}",
+            warm.high_water_bytes,
+            st.high_water_bytes
+        );
+        assert_eq!(st.outstanding_bytes, 0, "pass {pass}: every buffer returned");
+        prev_grows = st.grows;
+    }
+}
+
+#[test]
+fn train_step_alone_is_allocation_free_after_warmup() {
+    let engine = ReferenceBackend::new();
+    let p = engine.manifest().preset("test-tiny").unwrap().clone();
+    let (b, s) = (p.model.batch, p.model.seq_len);
+    let state = ModelState::init(&p.blocks, 3);
+    let bufs: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let tokens = tokens_for(b, s);
+    let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
+    let exe = engine.load_preset_exe("test-tiny", "train_step").unwrap();
+    let mut args: Vec<_> = bufs.iter().collect();
+    args.push(&tok);
+    args.push(&tok);
+
+    engine.execute(&exe, &args).unwrap();
+    let warm = engine.workspace_stats();
+    for _ in 0..5 {
+        engine.execute(&exe, &args).unwrap();
+    }
+    let steady = engine.workspace_stats();
+    assert_eq!(steady.grows, warm.grows, "train_step must be slab-allocation-free when warm");
+    assert_eq!(steady.high_water_bytes, warm.high_water_bytes);
+    assert!(steady.takes > warm.takes, "the arena is actually being used");
+}
+
+#[test]
+fn shared_arena_matches_one_shot_api_bitwise() {
+    let engine = ReferenceBackend::new();
+    let p = engine.manifest().preset("test-tiny").unwrap().clone();
+    let (b, s) = (p.model.batch, p.model.seq_len);
+    let state = ModelState::init(&p.blocks, 21);
+    let flats: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+    let tokens = tokens_for(b, s);
+
+    // one-shot API: private arena per call
+    let (loss_one, grads_one) =
+        forward::train_step(&p.model, &p.blocks, &flats, &tokens, &tokens, 0).unwrap();
+    // shared arena, called twice (second call runs on recycled slabs)
+    let mut ws = Workspace::new();
+    let (l1, g1) =
+        forward::train_step_in(&mut ws, &p.model, &p.blocks, &flats, &tokens, &tokens, 0).unwrap();
+    let (l2, g2) =
+        forward::train_step_in(&mut ws, &p.model, &p.blocks, &flats, &tokens, &tokens, 0).unwrap();
+    assert_eq!(loss_one.to_bits(), l1.to_bits());
+    assert_eq!(l1.to_bits(), l2.to_bits());
+    assert_eq!(grads_one, g1);
+    assert_eq!(g1, g2);
+
+    let el =
+        forward::eval_loss_in(&mut ws, &p.model, &p.blocks, &flats, &tokens, &tokens, 0).unwrap();
+    let el_one = forward::eval_loss(&p.model, &p.blocks, &flats, &tokens, &tokens, 0).unwrap();
+    assert_eq!(el.to_bits(), el_one.to_bits());
+
+    let dl =
+        forward::decode_logits_in(&mut ws, &p.model, &p.blocks, &flats, &tokens).unwrap();
+    let dl_one = forward::decode_logits(&p.model, &p.blocks, &flats, &tokens).unwrap();
+    assert_eq!(dl, dl_one);
+}
+
+#[test]
+fn workspace_public_api_contract() {
+    let mut ws = Workspace::new();
+    let a = ws.take(1000);
+    assert_eq!(a.len(), 1000);
+    let z = ws.take_zeroed(500);
+    assert!(z.iter().all(|&x| x == 0.0));
+    let peak = ws.stats().high_water_bytes;
+    assert_eq!(peak, (a.capacity() + z.capacity()) * 4);
+    ws.give(a);
+    ws.give(z);
+    assert_eq!(ws.stats().outstanding_bytes, 0);
+    assert_eq!(ws.stats().high_water_bytes, peak);
+    assert_eq!(ws.stats().grows, 2);
+    // recycled takes do not grow
+    let b = ws.take(900);
+    assert_eq!(ws.stats().grows, 2);
+    ws.give(b);
+}
