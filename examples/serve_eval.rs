@@ -1,33 +1,51 @@
-//! Serving-style example: batched greedy decoding with latency and
-//! throughput reporting.
+//! Serving front end over the KV-cached continuous-batching engine.
 //!
 //! Loads a checkpoint (or quick-trains one when none is given), then
-//! pushes batches of math problems through the `decode_step` artifact the
-//! way a serving frontend would, reporting per-batch latency percentiles
-//! and end-to-end token throughput.
+//! replays an open-loop Poisson arrival trace through `serve::ServeEngine`:
+//! prompts are admitted into freed KV slots mid-decode, every iteration
+//! advances all resident sequences by one token, and the report shows
+//! per-request TTFT / end-to-end latency percentiles, per-token decode
+//! latency, aggregate token throughput, KV-cache footprint and exact-match
+//! accuracy. `--oracle` additionally times the pre-KV full-reforward
+//! decode loop on the same problems for a measured speedup.
 //!
 //! ```bash
-//! cargo run --release --example serve_eval -- --requests 64
+//! cargo run --release --example serve_eval -- --requests 64 --rate 8
 //! cargo run --release --example serve_eval -- --checkpoint results/e2e_final.ckpt --preset e2e
+//! cargo run --release --example serve_eval -- --requests 16 --oracle
 //! ```
 
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{extract_answer, MathGen, Split, Suite};
 use adagradselect::eval::Evaluator;
+use adagradselect::memory::kv_cache_bytes;
 use adagradselect::model::ModelState;
 use adagradselect::runtime::{Backend, ReferenceBackend};
+use adagradselect::serve::{Response, ServeConfig, ServeEngine};
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
+use adagradselect::util::rng::Rng;
 use adagradselect::Result;
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q) as usize]
+}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let mut args = Args::parse(&argv, &[])?;
+    let mut args = Args::parse(&argv, &["oracle"])?;
     let preset = args.str_or("preset", "test-tiny");
     let requests = args.usize_or("requests", 64)?;
     let max_new = args.usize_or("max-new", 24)?;
     let checkpoint = args.str_opt("checkpoint");
     let warm_steps = args.u64_or("warm-steps", 60)?;
+    let slots = args.usize_or("slots", 0)?;
+    let rate = args.f64_or("rate", 0.0)?; // Poisson arrivals per second; 0 = all at t=0
+    let seed = args.u64_or("seed", 7)?;
+    let compare_oracle = args.bool_flag("oracle");
     args.finish()?;
 
     let engine = ReferenceBackend::new();
@@ -49,44 +67,134 @@ fn main() -> Result<()> {
         }
     };
 
+    let p = engine.manifest().preset(&preset)?.clone();
+    let slots = if slots == 0 { p.model.batch } else { slots };
     let ev = Evaluator::new(&engine, &preset, max_new)?;
-    let p = engine.manifest().preset(&preset)?;
-    let batch = p.model.batch;
-    let problems = MathGen::new(Suite::Gsm8kSim, Split::Eval, 7).problems(1000, requests);
-
-    // serve batches, measuring per-batch latency
-    let device_blocks: Vec<_> =
-        state.flats.iter().map(|f| engine.upload_f32(f)).collect::<Result<_>>()?;
     let tok = ev.tokenizer().clone();
-    let mut latencies = Vec::new();
-    let mut tokens_out = 0usize;
-    let mut correct = 0usize;
+    let problems = MathGen::new(Suite::Gsm8kSim, Split::Eval, seed).problems(1000, requests);
+
+    // open-loop Poisson trace: exponential inter-arrival gaps
+    let mut srv = ServeEngine::new(
+        &engine,
+        &preset,
+        &state,
+        ServeConfig { slots, max_new_tokens: max_new },
+    )?;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut arrival = 0.0f64;
+    let mut ids = Vec::with_capacity(requests);
+    for prob in &problems {
+        if rate > 0.0 {
+            arrival += -(1.0 - rng.gen_f64()).ln() / rate;
+        }
+        ids.push(srv.submit(tok.encode(&prob.prompt(), true, false), 0, arrival));
+    }
+
     let t_all = std::time::Instant::now();
-    for chunk in problems.chunks(batch) {
-        let prompts: Vec<Vec<i32>> =
-            chunk.iter().map(|p| tok.encode(&p.prompt(), true, false)).collect();
-        let t0 = std::time::Instant::now();
-        let gens = ev.generate(&device_blocks, &prompts)?;
-        latencies.push(t0.elapsed().as_secs_f64());
-        for (p, g) in chunk.iter().zip(&gens) {
-            tokens_out += g.len();
-            if extract_answer(&tok.decode_until_eos(g)) == Some(p.answer) {
-                correct += 1;
-            }
+    let responses = srv.run_until_idle()?;
+    let wall_s = t_all.elapsed().as_secs_f64();
+    let stats = srv.stats();
+
+    // score + latency distributions
+    let by_id = |id: u64| ids.iter().position(|&x| x == id).expect("own request");
+    let mut correct = 0usize;
+    let mut truncated = 0usize;
+    let mut gen_tokens = 0usize;
+    let mut ttft: Vec<f64> = Vec::new();
+    let mut latency: Vec<f64> = Vec::new();
+    for r in &responses {
+        if r.truncated {
+            truncated += 1;
+            continue;
+        }
+        gen_tokens += r.tokens.len();
+        ttft.push(r.ttft_s());
+        latency.push(r.latency_s());
+        if extract_answer(&tok.decode_until_eos(&r.tokens)) == Some(problems[by_id(r.id)].answer)
+        {
+            correct += 1;
         }
     }
-    let total_s = t_all.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latency.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
-    println!("\n== serving report ({preset}, batch={batch}, max_new={max_new}) ==");
-    println!("requests:        {requests} ({} batches)", latencies.len());
-    println!("batch latency:   p50 {:.1} ms  p95 {:.1} ms", pct(0.5) * 1e3, pct(0.95) * 1e3);
+    println!("\n== serving report ({preset}, slots={slots}, max_new={max_new}, rate={rate}/s) ==");
+    println!(
+        "requests:        {requests} ({} served, {truncated} rejected over-length)",
+        requests - truncated
+    );
+    println!(
+        "ttft:            p50 {:.2} ms  p95 {:.2} ms",
+        pct(&ttft, 0.5) * 1e3,
+        pct(&ttft, 0.95) * 1e3
+    );
+    println!(
+        "latency:         p50 {:.2} ms  p95 {:.2} ms",
+        pct(&latency, 0.5) * 1e3,
+        pct(&latency, 0.95) * 1e3
+    );
+    if stats.decode_tokens > 0 {
+        println!(
+            "decode:          {:.3} ms/token ({} steps, mean batch {:.1}, peak {} slots)",
+            stats.decode_s / stats.decode_tokens as f64 * 1e3,
+            stats.decode_steps,
+            stats.decode_tokens as f64 / stats.decode_steps.max(1) as f64,
+            stats.peak_active
+        );
+    }
+    println!(
+        "prefill:         {:.2} ms/prompt ({} prompts, {} tokens)",
+        stats.prefill_s / stats.n_prefills.max(1) as f64 * 1e3,
+        stats.n_prefills,
+        stats.prefill_tokens
+    );
     println!(
         "throughput:      {:.1} req/s, {:.0} generated tokens/s",
-        requests as f64 / total_s,
-        tokens_out as f64 / total_s
+        (requests - truncated) as f64 / wall_s,
+        gen_tokens as f64 / wall_s
+    );
+    println!(
+        "kv cache:        {:.2} MiB resident ({} slots x {} rows; formula {:.2} MiB)",
+        stats.kv_bytes as f64 / (1024.0 * 1024.0),
+        slots,
+        p.model.seq_len,
+        kv_cache_bytes(&p.model, slots, 4) as f64 / (1024.0 * 1024.0)
     );
     println!("exact match:     {correct}/{requests}");
+
+    if compare_oracle {
+        // the retained full-reforward loop on the same problems, one
+        // padded batch at a time — the pre-KV serving path
+        let device = ev.upload_state(&state)?;
+        let mut oracle_tokens = 0usize;
+        let t0 = std::time::Instant::now();
+        let mut oracle_gens: Vec<Vec<i32>> = Vec::with_capacity(requests);
+        for chunk in problems.chunks(p.model.batch) {
+            let prompts: Vec<Vec<i32>> =
+                chunk.iter().map(|pr| tok.encode(&pr.prompt(), true, false)).collect();
+            for g in ev.generate_oracle(&device, &prompts)? {
+                oracle_tokens += g.len();
+                oracle_gens.push(g);
+            }
+        }
+        let oracle_s = t0.elapsed().as_secs_f64();
+        println!("\n-- oracle (full reforward per token) on the same problems --");
+        println!(
+            "throughput:      {:.0} generated tokens/s ({:.2}s total)",
+            oracle_tokens as f64 / oracle_s,
+            oracle_s
+        );
+        println!(
+            "speedup:         {:.1}x tokens/s (cached {:.0} vs reforward {:.0})",
+            (gen_tokens as f64 / wall_s) / (oracle_tokens as f64 / oracle_s).max(1e-9),
+            gen_tokens as f64 / wall_s,
+            oracle_tokens as f64 / oracle_s
+        );
+        // token-for-token parity spot check
+        let mismatch = responses.iter().filter(|r| !r.truncated).any(|r: &Response| {
+            oracle_gens.get(by_id(r.id)).map(|g| g != &r.tokens).unwrap_or(true)
+        });
+        println!("parity:          {}", if mismatch { "MISMATCH" } else { "token-for-token ok" });
+    }
     Ok(())
 }

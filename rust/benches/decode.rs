@@ -1,0 +1,207 @@
+//! Serving-path benchmarks — the before/after for the KV-cache rewrite:
+//!
+//! * **prefill latency** per preset (one full prompt forward, cache fill);
+//! * **per-token decode latency**: one batched `decode_step_kv` over a
+//!   full slot set vs. the oracle `decode_step` full reforward, both
+//!   normalized to per-generated-token cost;
+//! * **cached-vs-reforward speedup** (the asymptotic win: O(s·layers) per
+//!   token instead of O(s²·layers)) — recorded as a machine-independent
+//!   invariant (`>= 5x at seq_len >= 128`) that `scripts/bench_compare`
+//!   enforces unconditionally;
+//! * **KV bytes**: pool backing store + the §capacity formula;
+//! * **steady-state allocation probe**: 10 decode steps through the warm
+//!   arena must perform zero slab allocations (same key the train-step
+//!   gate uses, enforced by `scripts/bench_compare`).
+//!
+//! Writes `BENCH_decode.json` (override with `AGSEL_BENCH_DECODE_JSON`);
+//! CI uploads it next to `BENCH_train_step.json` and diffs it against
+//! `rust/benches/baselines/BENCH_decode.baseline.json`.
+
+use std::time::Duration;
+
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, RefBuffer, ReferenceBackend};
+use adagradselect::serve::{KvBackend, KvPool};
+use adagradselect::util::bench::{bench, header, BenchResult};
+use adagradselect::util::json::Value;
+
+fn result_row(r: &BenchResult) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(&r.name)),
+        ("mean_ns", Value::num(r.mean_ns)),
+        ("p50_ns", Value::num(r.p50_ns)),
+        ("p95_ns", Value::num(r.p95_ns)),
+        ("iters", Value::num(r.iters as f64)),
+    ])
+}
+
+struct DecodeCase {
+    row: Value,
+    speedup: f64,
+    seq_len: usize,
+    steady_grows: u64,
+}
+
+/// Bench one preset end to end; returns its JSON row and the measured
+/// cached-vs-reforward per-token speedup.
+fn bench_preset(
+    engine: &ReferenceBackend,
+    name: &str,
+    budget: Duration,
+    results: &mut Vec<BenchResult>,
+) -> DecodeCase {
+    let p = engine.manifest().preset(name).unwrap().clone();
+    let (b, s, d) = (p.model.batch, p.model.seq_len, p.model.n_heads * p.model.d_head);
+    let state = ModelState::init(&p.blocks, 0);
+    let blocks: Vec<RefBuffer> =
+        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+
+    let prompt_len = s / 2;
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| 4 + (i % 50) as i32).collect();
+
+    // --- prefill: prompt forward + cache fill (slot reset each iter by
+    // --- never committing a length, so pos stays 0)
+    let mut pool = KvPool::new(&p.model, b);
+    let slots: Vec<usize> = (0..b).map(|_| pool.alloc().unwrap()).collect();
+    let prefill = bench(&format!("prefill/{name}/t{prompt_len}"), budget, || {
+        let mut views = pool.views(&slots[..1]).unwrap();
+        std::hint::black_box(
+            engine.kv_prefill(&p, &blocks, &prompt, &mut views[0]).unwrap(),
+        );
+    });
+
+    // --- cached decode: one batched step over b resident sequences
+    // (positions frozen mid-context so every iteration costs the same)
+    for &slot in &slots {
+        let mut views = pool.views(&[slot]).unwrap();
+        engine.kv_prefill(&p, &blocks, &prompt, &mut views[0]).unwrap();
+        pool.set_len(slot, prompt_len);
+    }
+    let toks: Vec<i32> = (0..b as i32).map(|i| 5 + i).collect();
+    let cached = bench(&format!("decode_kv/{name}/b{b}"), budget, || {
+        let mut views = pool.views(&slots).unwrap();
+        std::hint::black_box(
+            engine.kv_decode_step(&p, &blocks, &toks, &mut views).unwrap(),
+        );
+    });
+
+    // --- steady-state allocation probe: 10 further decode steps, with
+    // positions actually advancing, must not grow the arena
+    let warm = engine.workspace_stats();
+    for _ in 0..10 {
+        {
+            let mut views = pool.views(&slots).unwrap();
+            std::hint::black_box(
+                engine.kv_decode_step(&p, &blocks, &toks, &mut views).unwrap(),
+            );
+        }
+        for &slot in &slots {
+            pool.advance(slot);
+        }
+    }
+    let steady_grows = engine.workspace_stats().grows - warm.grows;
+
+    // --- oracle: the pre-KV path, one full [b, s] reforward per token
+    let exe = engine.load_preset_exe(name, "decode_step").unwrap();
+    let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 50) as i32).collect();
+    let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
+    let mut args: Vec<&RefBuffer> = blocks.iter().collect();
+    args.push(&tok);
+    let oracle = bench(&format!("decode_reforward/{name}/b{b}"), budget, || {
+        std::hint::black_box(engine.execute(&exe, &args).unwrap());
+    });
+
+    // per generated token: both paths produce one token per sequence per
+    // call, so per-token cost = call latency / batch
+    let per_token_cached = cached.mean_ns / b as f64;
+    let per_token_oracle = oracle.mean_ns / b as f64;
+    let speedup = per_token_oracle / per_token_cached;
+    let kv_pool_bytes = pool.bytes();
+    let kv_modeled = adagradselect::memory::kv_cache_bytes(&p.model, b, 4);
+    println!(
+        "    -> {name}: cached {:.1} µs/token vs reforward {:.1} µs/token = {speedup:.1}x; \
+         kv {:.2} MiB; steady-state decode grows {steady_grows}",
+        per_token_cached / 1e3,
+        per_token_oracle / 1e3,
+        kv_pool_bytes as f64 / (1024.0 * 1024.0),
+    );
+
+    let row = Value::obj(vec![
+        ("preset", Value::str(name)),
+        ("batch", Value::num(b as f64)),
+        ("seq_len", Value::num(s as f64)),
+        ("d", Value::num(d as f64)),
+        ("prompt_len", Value::num(prompt_len as f64)),
+        ("prefill_mean_ns", Value::num(prefill.mean_ns)),
+        ("decode_step_mean_ns", Value::num(cached.mean_ns)),
+        ("per_token_ns_cached", Value::num(per_token_cached)),
+        ("per_token_ns_reforward", Value::num(per_token_oracle)),
+        ("tokens_per_s_cached", Value::num(1e9 / per_token_cached)),
+        ("tokens_per_s_reforward", Value::num(1e9 / per_token_oracle)),
+        ("cached_vs_reforward_speedup", Value::num(speedup)),
+        ("kv_bytes_pool", Value::num(kv_pool_bytes as f64)),
+        ("kv_bytes_modeled", Value::num(kv_modeled as f64)),
+        ("steady_state_decode_grows_10_steps", Value::num(steady_grows as f64)),
+    ]);
+    results.push(prefill);
+    results.push(cached);
+    results.push(oracle);
+    DecodeCase { row, speedup, seq_len: s, steady_grows }
+}
+
+fn main() {
+    header("decode");
+    let quick = std::env::var_os("AGSEL_BENCH_QUICK").is_some();
+    let budget_ms: u64 = std::env::var("AGSEL_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 150 } else { 1500 });
+    let budget = Duration::from_millis(budget_ms);
+    let engine = ReferenceBackend::new();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // qwen-sim (seq_len 128) runs even in quick mode: it carries the
+    // >= 5x-at-seq>=128 acceptance invariant
+    let presets: &[&str] =
+        if quick { &["test-tiny", "qwen-sim"] } else { &["test-tiny", "qwen-sim", "e2e"] };
+    let mut rows = Vec::new();
+    let mut invariants = Vec::new();
+    let mut total_steady_grows = 0.0f64;
+    for name in presets {
+        let case = bench_preset(&engine, name, budget, &mut results);
+        if case.seq_len >= 128 {
+            invariants.push(Value::obj(vec![
+                ("name", Value::str(format!("{name}/cached_vs_reforward_speedup"))),
+                ("value", Value::num(case.speedup)),
+                ("min", Value::num(5.0)),
+            ]));
+        }
+        total_steady_grows += case.steady_grows as f64;
+        rows.push(case.row);
+    }
+
+    let ws = engine.workspace_stats();
+    let summary = Value::obj(vec![
+        ("schema", Value::num(1.0)),
+        ("quick", Value::Bool(quick)),
+        ("budget_ms", Value::num(budget_ms as f64)),
+        ("calibrated", Value::Bool(false)),
+        ("results", Value::Arr(results.iter().map(result_row).collect())),
+        ("decode", Value::Arr(rows)),
+        ("invariants", Value::Arr(invariants)),
+        (
+            "workspace",
+            Value::obj(vec![
+                ("high_water_bytes", Value::num(ws.high_water_bytes as f64)),
+                ("capacity_bytes", Value::num(ws.capacity_bytes as f64)),
+                ("grows_total", Value::num(ws.grows as f64)),
+                ("takes_total", Value::num(ws.takes as f64)),
+                ("steady_state_grows_10_steps", Value::num(total_steady_grows)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("AGSEL_BENCH_DECODE_JSON")
+        .unwrap_or_else(|_| "BENCH_decode.json".to_string());
+    std::fs::write(&path, format!("{summary}\n")).expect("write bench summary");
+    println!("\nwrote {path}");
+}

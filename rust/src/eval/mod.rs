@@ -1,11 +1,24 @@
-//! Evaluation harness: batched greedy decoding + exact-match accuracy.
+//! Evaluation harness: KV-cached greedy decoding + exact-match accuracy.
 //!
 //! Mirrors the paper's setup: zero-shot, no system prompt, greedy decoding
 //! (temperature 0 ⇒ deterministic, no variance across runs). A problem
 //! counts as correct iff the generated continuation contains
-//! `#### <answer>` with the exact integer answer. Generic over the
-//! compute [`Backend`], so the same harness scores reference-backend and
-//! PJRT checkpoints.
+//! `#### <answer>` with the exact integer answer.
+//!
+//! Generation runs through the serving subsystem ([`crate::serve`]): one
+//! prefill per prompt filling per-layer K/V caches, then one single-token
+//! batched decode step per generated token — and [`Evaluator::accuracy`]
+//! streams the whole problem set through the continuous-batching
+//! [`ServeEngine`], so finished rows stop burning compute and freed slots
+//! are refilled mid-decode instead of padding every chunk to the preset
+//! batch. The pre-KV full-reforward loop is retained as
+//! [`Evaluator::generate_oracle`]: it is the parity oracle the cached
+//! path is held token-for-token identical to (`tests/serve_decode.rs`).
+//!
+//! Prompts longer than the model context are **not** silently truncated
+//! and scored (the pre-PR behavior): they are detected, skipped, and
+//! surfaced via [`EvalResult::n_truncated`] — they still count against
+//! accuracy's denominator, they just can never be scored correct.
 
 use std::rc::Rc;
 
@@ -15,6 +28,7 @@ use crate::data::mathgen::extract_answer;
 use crate::data::{Problem, Tokenizer};
 use crate::model::ModelState;
 use crate::runtime::{Backend, Preset};
+use crate::serve::{greedy_step, KvBackend, KvPool, ServeConfig, ServeEngine};
 
 #[derive(Debug, Clone)]
 pub struct EvalResult {
@@ -23,6 +37,9 @@ pub struct EvalResult {
     pub accuracy: f64,
     /// Fraction of generations that produced *any* `#### n` marker.
     pub format_rate: f64,
+    /// Prompts longer than the model context: skipped (never generated
+    /// for, never scored correct), but still part of `n`.
+    pub n_truncated: usize,
     pub wallclock_s: f64,
 }
 
@@ -56,10 +73,15 @@ impl<'e, B: Backend> Evaluator<'e, B> {
         state.flats.iter().map(|f| self.engine.upload_f32(f)).collect()
     }
 
-    /// Greedy-decode continuations for a slice of prompts (token rows).
+    /// Greedy-decode continuations by re-running the **full** `[batch,
+    /// seq]` forward (the `decode_step` artifact) for every generated
+    /// token — O(seq²·layers) per token. Kept as the parity oracle for
+    /// the KV-cached path; use [`Evaluator::generate`] for real work.
     ///
     /// Returns, per row, the generated token ids (prompt excluded).
-    pub fn generate(
+    /// Prompts longer than `seq_len` (which this path would silently
+    /// truncate) produce an empty row, matching [`Evaluator::generate`].
+    pub fn generate_oracle(
         &self,
         device_blocks: &[B::Buffer],
         prompts: &[Vec<i32>],
@@ -73,13 +95,17 @@ impl<'e, B: Backend> Evaluator<'e, B> {
         let mut lens = vec![0usize; b];
         let mut done = vec![false; b];
         for (i, p) in prompts.iter().enumerate() {
-            let n = p.len().min(s);
-            rows[i][..n].copy_from_slice(&p[..n]);
-            lens[i] = n;
+            if p.is_empty() || p.len() > s {
+                done[i] = true;
+                lens[i] = 1; // keep indexing valid
+                continue;
+            }
+            rows[i][..p.len()].copy_from_slice(p);
+            lens[i] = p.len();
         }
         for i in prompts.len()..b {
             done[i] = true;
-            lens[i] = 1; // keep indexing valid
+            lens[i] = 1;
         }
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
 
@@ -99,8 +125,13 @@ impl<'e, B: Backend> Evaluator<'e, B> {
                 }
                 let pos = lens[i] - 1;
                 let off = (i * s + pos) * v;
-                let row = &logits[off..off + v];
-                let next = argmax(row) as i32;
+                let next = match argmax(&logits[off..off + v]) {
+                    Some(nx) => nx as i32,
+                    None => {
+                        done[i] = true; // NaN-poisoned row: stop, emit nothing
+                        continue;
+                    }
+                };
                 if next == self.tok.eos || lens[i] >= s {
                     done[i] = true;
                     continue;
@@ -114,40 +145,6 @@ impl<'e, B: Backend> Evaluator<'e, B> {
             }
         }
         Ok(generated)
-    }
-
-    /// Exact-match accuracy over a problem set.
-    pub fn accuracy(&self, state: &ModelState, problems: &[Problem]) -> Result<EvalResult> {
-        let t0 = std::time::Instant::now();
-        let device_blocks = self.upload_state(state)?;
-        let b = self.preset.model.batch;
-        let mut n_correct = 0usize;
-        let mut n_formatted = 0usize;
-
-        for chunk in problems.chunks(b) {
-            let prompts: Vec<Vec<i32>> = chunk
-                .iter()
-                .map(|p| self.tok.encode(&p.prompt(), true, false))
-                .collect();
-            let gens = self.generate(&device_blocks, &prompts)?;
-            for (p, g) in chunk.iter().zip(&gens) {
-                let text = self.tok.decode_until_eos(g);
-                if let Some(ans) = extract_answer(&text) {
-                    n_formatted += 1;
-                    if ans == p.answer {
-                        n_correct += 1;
-                    }
-                }
-            }
-        }
-        let n = problems.len();
-        Ok(EvalResult {
-            n,
-            n_correct,
-            accuracy: n_correct as f64 / n.max(1) as f64,
-            format_rate: n_formatted as f64 / n.max(1) as f64,
-            wallclock_s: t0.elapsed().as_secs_f64(),
-        })
     }
 
     /// Mean eval loss over `n_batches` held-out batches (Fig. 4 series).
@@ -173,13 +170,154 @@ impl<'e, B: Backend> Evaluator<'e, B> {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
+impl<'e, B: KvBackend> Evaluator<'e, B> {
+    /// Greedy-decode continuations with per-layer KV caches: one prefill
+    /// per prompt, then one batched single-token decode step per
+    /// generated token. Token-for-token identical to
+    /// [`Evaluator::generate_oracle`] (see `tests/serve_decode.rs`).
+    ///
+    /// Prompts that are empty or longer than `seq_len` produce an empty
+    /// row — the caller counts them (see [`EvalResult::n_truncated`]).
+    pub fn generate(
+        &self,
+        device_blocks: &[B::Buffer],
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        let s = self.preset.model.seq_len;
+        let v = self.preset.model.vocab;
+        let mut pool = KvPool::new(&self.preset.model, prompts.len().max(1));
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+
+        struct Row {
+            idx: usize,
+            slot: usize,
+            last: i32,
+        }
+        let mut active: Vec<Row> = Vec::new();
+        for (idx, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > s {
+                continue; // flagged by the caller as truncated
+            }
+            let slot = pool.alloc().expect("one slot per prompt");
+            let logits = {
+                let mut views = pool.views(&[slot])?;
+                self.engine.kv_prefill(&self.preset, device_blocks, p, &mut views[0])?
+            };
+            pool.set_len(slot, p.len());
+            let (emit, finished) = greedy_step(
+                argmax(&logits),
+                self.tok.eos,
+                pool.len(slot),
+                pool.capacity(),
+                0,
+                self.max_new_tokens,
+            );
+            if let Some(t) = emit {
+                generated[idx].push(t);
+            }
+            if finished {
+                pool.release(slot);
+            } else {
+                active.push(Row { idx, slot, last: emit.expect("unfinished rows emitted") });
+            }
+        }
+
+        while !active.is_empty() {
+            let tokens: Vec<i32> = active.iter().map(|r| r.last).collect();
+            let slots: Vec<usize> = active.iter().map(|r| r.slot).collect();
+            let logits = {
+                let mut views = pool.views(&slots)?;
+                self.engine.kv_decode_step(&self.preset, device_blocks, &tokens, &mut views)?
+            };
+            let mut still = Vec::with_capacity(active.len());
+            for (j, mut r) in active.drain(..).enumerate() {
+                pool.advance(r.slot);
+                let (emit, finished) = greedy_step(
+                    argmax(&logits[j * v..(j + 1) * v]),
+                    self.tok.eos,
+                    pool.len(r.slot),
+                    pool.capacity(),
+                    generated[r.idx].len(),
+                    self.max_new_tokens,
+                );
+                if let Some(t) = emit {
+                    generated[r.idx].push(t);
+                    r.last = t;
+                }
+                if finished {
+                    pool.release(r.slot);
+                } else {
+                    still.push(r);
+                }
+            }
+            active = still;
+        }
+        Ok(generated)
+    }
+
+    /// Exact-match accuracy over a problem set, served through the
+    /// continuous-batching engine: all problems are enqueued at once and
+    /// stream through `batch` KV slots — no padding to the preset batch,
+    /// finished rows free their slot for the next problem mid-decode.
+    pub fn accuracy(&self, state: &ModelState, problems: &[Problem]) -> Result<EvalResult> {
+        let t0 = std::time::Instant::now();
+        let slots = self.preset.model.batch.max(1);
+        let mut srv = ServeEngine::new(
+            self.engine,
+            &self.preset.model.name,
+            state,
+            ServeConfig { slots, max_new_tokens: self.max_new_tokens },
+        )?;
+        let ids: Vec<u64> = problems
+            .iter()
+            .map(|p| srv.submit(self.tok.encode(&p.prompt(), true, false), 0, 0.0))
+            .collect();
+        let responses = srv.run_until_idle()?;
+
+        let mut n_correct = 0usize;
+        let mut n_formatted = 0usize;
+        let mut n_truncated = 0usize;
+        for r in &responses {
+            let idx = ids.iter().position(|&id| id == r.id).expect("response for our request");
+            if r.truncated {
+                n_truncated += 1;
+                continue;
+            }
+            let text = self.tok.decode_until_eos(&r.tokens);
+            if let Some(ans) = extract_answer(&text) {
+                n_formatted += 1;
+                if ans == problems[idx].answer {
+                    n_correct += 1;
+                }
+            }
+        }
+        let n = problems.len();
+        Ok(EvalResult {
+            n,
+            n_correct,
+            accuracy: n_correct as f64 / n.max(1) as f64,
+            format_rate: n_formatted as f64 / n.max(1) as f64,
+            n_truncated,
+            wallclock_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Index of the largest non-NaN logit, ties broken toward the lowest
+/// index. NaN entries are skipped instead of poisoning the scan (the
+/// pre-hardening loop let a NaN-free prefix decide, but an all-NaN row
+/// silently produced token 0); `None` means the row had no comparable
+/// value at all, which callers treat as end-of-sequence.
+pub fn argmax(xs: &[f32]) -> Option<usize> {
+    let mut best = None;
     let mut bv = f32::NEG_INFINITY;
     for (i, &x) in xs.iter().enumerate() {
-        if x > bv {
+        if x.is_nan() {
+            continue;
+        }
+        if best.is_none() || x > bv {
             bv = x;
-            best = i;
+            best = Some(i);
         }
     }
     best
@@ -187,9 +325,25 @@ fn argmax(xs: &[f32]) -> usize {
 
 #[cfg(test)]
 mod tests {
+    use super::argmax;
+
     #[test]
-    fn argmax_basic() {
-        assert_eq!(super::argmax(&[0.1, 3.0, -1.0, 3.0]), 1);
-        assert_eq!(super::argmax(&[-5.0]), 0);
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 3.0]), Some(1), "ties pick the lowest index");
+        assert_eq!(argmax(&[-5.0]), Some(0));
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), Some(0));
+    }
+
+    #[test]
+    fn argmax_skips_nan() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), Some(2), "NaN prefix must not win");
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), Some(0));
+        assert_eq!(argmax(&[f32::NAN, f32::NAN, -7.0]), Some(2));
+    }
+
+    #[test]
+    fn argmax_all_nan_or_empty_is_none() {
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), None, "all-NaN must not emit token 0");
+        assert_eq!(argmax(&[]), None);
     }
 }

@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::config::{Method, RunConfig};
 use crate::data::{MathGen, Split, Suite};
 use crate::eval::Evaluator;
-use crate::runtime::Backend;
+use crate::serve::KvBackend;
 use crate::telemetry::{markdown_table, CsvWriter};
 use crate::train::{TrainSummary, Trainer};
 
@@ -58,7 +58,7 @@ fn base_cfg(opt: &ExpOptions, preset: &str, method: Method) -> RunConfig {
 }
 
 /// Train one method and evaluate on both suites.
-pub fn run_method<B: Backend>(
+pub fn run_method<B: KvBackend>(
     engine: &B,
     opt: &ExpOptions,
     preset: &str,
@@ -93,7 +93,7 @@ pub fn run_method<B: Backend>(
 
 /// Run the full paper method ladder on one preset (shared by Fig. 1,
 /// Fig. 4 and Table 1 so each configuration trains exactly once).
-pub fn run_ladder<B: Backend>(engine: &B, opt: &ExpOptions, preset: &str) -> Result<Vec<MethodRun>> {
+pub fn run_ladder<B: KvBackend>(engine: &B, opt: &ExpOptions, preset: &str) -> Result<Vec<MethodRun>> {
     paper_methods()
         .into_iter()
         .map(|m| run_method(engine, opt, preset, m))
@@ -113,7 +113,7 @@ pub fn paper_methods() -> Vec<Method> {
 }
 
 /// Fig. 1 — training time vs average GPU memory (qwen-sim).
-pub fn fig1<B: Backend>(engine: &B, opt: &ExpOptions) -> Result<Vec<MethodRun>> {
+pub fn fig1<B: KvBackend>(engine: &B, opt: &ExpOptions) -> Result<Vec<MethodRun>> {
     let rows = run_ladder(engine, opt, "qwen-sim")?;
     fig1_write(&rows, opt)?;
     Ok(rows)
@@ -180,12 +180,12 @@ fn write_fig1_md(rows: &[MethodRun], out: &Path) -> Result<()> {
 }
 
 /// Fig. 3 — accuracy vs % blocks selected (Algorithm 1 sweep, qwen-sim).
-pub fn fig3<B: Backend>(engine: &B, opt: &ExpOptions, pcts: &[f64]) -> Result<Vec<(f64, f64, f64)>> {
+pub fn fig3<B: KvBackend>(engine: &B, opt: &ExpOptions, pcts: &[f64]) -> Result<Vec<(f64, f64, f64)>> {
     fig3_on(engine, opt, "qwen-sim", pcts)
 }
 
 /// Fig. 3 sweep on an arbitrary preset (micro-scale tests use test-tiny).
-pub fn fig3_on<B: Backend>(
+pub fn fig3_on<B: KvBackend>(
     engine: &B,
     opt: &ExpOptions,
     preset: &str,
@@ -212,7 +212,7 @@ pub fn fig3_on<B: Backend>(
 }
 
 /// Fig. 4 — loss convergence series for every method (qwen-sim).
-pub fn fig4<B: Backend>(engine: &B, opt: &ExpOptions) -> Result<()> {
+pub fn fig4<B: KvBackend>(engine: &B, opt: &ExpOptions) -> Result<()> {
     let rows = run_ladder(engine, opt, "qwen-sim")?;
     fig4_write(&rows, opt)
 }
@@ -233,7 +233,7 @@ pub fn fig4_write(rows: &[MethodRun], opt: &ExpOptions) -> Result<()> {
 }
 
 /// Table 1 — accuracy across the three model families × methods × suites.
-pub fn table1<B: Backend>(engine: &B, opt: &ExpOptions, presets: &[&str]) -> Result<Vec<MethodRun>> {
+pub fn table1<B: KvBackend>(engine: &B, opt: &ExpOptions, presets: &[&str]) -> Result<Vec<MethodRun>> {
     let ladders: Vec<(String, Vec<MethodRun>)> = presets
         .iter()
         .map(|&p| Ok((p.to_string(), run_ladder(engine, opt, p)?)))
@@ -279,7 +279,7 @@ pub fn table1_write(ladders: &[(String, Vec<MethodRun>)], opt: &ExpOptions) -> R
 
 /// Run everything, sharing the qwen-sim ladder across Fig. 1 / Fig. 4 /
 /// Table 1 so each configuration trains exactly once.
-pub fn all<B: Backend>(engine: &B, opt: &ExpOptions, presets: &[&str], pcts: &[f64]) -> Result<()> {
+pub fn all<B: KvBackend>(engine: &B, opt: &ExpOptions, presets: &[&str], pcts: &[f64]) -> Result<()> {
     let mut ladders: Vec<(String, Vec<MethodRun>)> = Vec::new();
     for &preset in presets {
         crate::log_info!("== ladder: {preset} ==");
@@ -298,7 +298,7 @@ pub fn all<B: Backend>(engine: &B, opt: &ExpOptions, presets: &[&str], pcts: &[f
 }
 
 /// Design-choice ablations (DESIGN.md §7) on qwen-sim at 20%.
-pub fn ablations<B: Backend>(engine: &B, opt: &ExpOptions) -> Result<Vec<MethodRun>> {
+pub fn ablations<B: KvBackend>(engine: &B, opt: &ExpOptions) -> Result<Vec<MethodRun>> {
     let preset = "qwen-sim";
     let variants: Vec<(&str, Method)> = vec![
         ("adagradselect", Method::ags(20.0)),

@@ -7,8 +7,10 @@
 //! * **Coordinator (this crate)** — the training loop, the AdaGradSelect
 //!   bandit (Dirichlet exploitation + ε-greedy exploration), the custom
 //!   selective AdamW with CPU↔GPU optimizer-state residency management,
-//!   data pipeline, eval harness, memory accounting, and the experiment
-//!   harness that regenerates every table/figure in the paper.
+//!   data pipeline, eval harness, memory accounting, the KV-cached
+//!   serving engine with a continuous-batching scheduler ([`serve`]), and
+//!   the experiment harness that regenerates every table/figure in the
+//!   paper.
 //! * **[`runtime::ReferenceBackend`] (default)** — a pure-Rust CPU
 //!   executor: native transformer fwd/bwd ([`model::forward`]) over the
 //!   built-in preset catalog. Builds, trains and is verified everywhere —
@@ -31,6 +33,7 @@ pub mod model;
 pub mod optimizer;
 pub mod runtime;
 pub mod selection;
+pub mod serve;
 pub mod telemetry;
 pub mod train;
 pub mod util;
@@ -57,6 +60,7 @@ pub mod prelude {
     pub use crate::runtime::Engine;
     pub use crate::runtime::{Backend, ReferenceBackend};
     pub use crate::selection::SelectionStrategy;
+    pub use crate::serve::{KvBackend, ServeConfig, ServeEngine};
     pub use crate::train::{Trainer, TrainSummary};
     pub use crate::Result;
 }

@@ -27,7 +27,8 @@ use adagradselect::data::{MathGen, Split, Suite};
 use adagradselect::eval::Evaluator;
 use adagradselect::experiments::{self, ExpOptions};
 use adagradselect::memory::{method_memory, pct_reduction};
-use adagradselect::runtime::{Backend, ReferenceBackend};
+use adagradselect::runtime::ReferenceBackend;
+use adagradselect::serve::KvBackend;
 use adagradselect::telemetry::markdown_table;
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
@@ -77,7 +78,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn dispatch<B: Backend>(
+fn dispatch<B: KvBackend>(
     backend: &B,
     args: &mut Args,
     artifacts: PathBuf,
@@ -96,7 +97,7 @@ fn dispatch<B: Backend>(
     Ok(())
 }
 
-fn cmd_train<B: Backend>(backend: &B, args: &mut Args, artifacts: PathBuf) -> Result<()> {
+fn cmd_train<B: KvBackend>(backend: &B, args: &mut Args, artifacts: PathBuf) -> Result<()> {
     let preset = args.str_or("preset", "qwen-sim");
     let method = args.str_or("method", "adagradselect");
     let pct = args.f64_or("pct", 30.0)?;
@@ -139,19 +140,20 @@ fn cmd_train<B: Backend>(backend: &B, args: &mut Args, artifacts: PathBuf) -> Re
                 .problems(0, cfg.data.eval_problems);
             let res = ev.accuracy(&state, &probs)?;
             println!(
-                "{}: accuracy {:.1}% ({}/{}), format rate {:.1}%",
+                "{}: accuracy {:.1}% ({}/{}), format rate {:.1}%, {} over-length skipped",
                 suite.name(),
                 res.accuracy * 100.0,
                 res.n_correct,
                 res.n,
-                res.format_rate * 100.0
+                res.format_rate * 100.0,
+                res.n_truncated
             );
         }
     }
     Ok(())
 }
 
-fn cmd_eval<B: Backend>(backend: &B, args: &mut Args) -> Result<()> {
+fn cmd_eval<B: KvBackend>(backend: &B, args: &mut Args) -> Result<()> {
     let preset = args.str_or("preset", "qwen-sim");
     let checkpoint = args
         .str_opt("checkpoint")
@@ -165,17 +167,18 @@ fn cmd_eval<B: Backend>(backend: &B, args: &mut Args) -> Result<()> {
         let probs = MathGen::new(suite, Split::Eval, 0).problems(0, problems);
         let res = ev.accuracy(&state, &probs)?;
         println!(
-            "{}: accuracy {:.1}% ({}/{})",
+            "{}: accuracy {:.1}% ({}/{}), {} over-length skipped",
             suite.name(),
             res.accuracy * 100.0,
             res.n_correct,
-            res.n
+            res.n,
+            res.n_truncated
         );
     }
     Ok(())
 }
 
-fn cmd_memory<B: Backend>(backend: &B, args: &mut Args) -> Result<()> {
+fn cmd_memory<B: KvBackend>(backend: &B, args: &mut Args) -> Result<()> {
     let preset = args.str_or("preset", "qwen-sim");
     let bpp = args.usize_or("bytes-per-param", 2)?;
     args.finish()?;
@@ -235,7 +238,7 @@ fn cmd_memory<B: Backend>(backend: &B, args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_exp<B: Backend>(
+fn cmd_exp<B: KvBackend>(
     backend: &B,
     args: &mut Args,
     artifacts: PathBuf,
@@ -284,7 +287,7 @@ fn cmd_exp<B: Backend>(
     Ok(())
 }
 
-fn cmd_inspect<B: Backend>(backend: &B) -> Result<()> {
+fn cmd_inspect<B: KvBackend>(backend: &B) -> Result<()> {
     println!("backend: {}", backend.platform());
     let manifest = backend.manifest();
     let mut names: Vec<_> = manifest.presets.keys().collect();

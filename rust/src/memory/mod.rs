@@ -23,7 +23,7 @@ mod paper_scale;
 pub use paper_scale::{PaperModel, LLAMA32_1B, PAPER_MODELS, PHI4_MINI_38B, QWEN25_05B};
 
 use crate::config::Method;
-use crate::runtime::Preset;
+use crate::runtime::{ModelSpec, Preset};
 use crate::selection::k_from_pct;
 
 /// Static memory breakdown for one method on one preset (bytes).
@@ -33,11 +33,14 @@ pub struct MemoryReport {
     pub grads: usize,
     pub optimizer: usize,
     pub activations: usize,
+    /// Serving-time K/V cache capacity (0 for pure-training reports; set
+    /// via [`MemoryReport::with_kv_cache`]).
+    pub kv_cache: usize,
 }
 
 impl MemoryReport {
     pub fn total(&self) -> usize {
-        self.params + self.grads + self.optimizer + self.activations
+        self.params + self.grads + self.optimizer + self.activations + self.kv_cache
     }
 
     /// Replace the modeled activation estimate with a measured number —
@@ -49,6 +52,14 @@ impl MemoryReport {
         self
     }
 
+    /// Account a serving-time K/V cache — either the modeled
+    /// [`kv_cache_bytes`] or the measured `serve::KvPool::bytes()` (the
+    /// two agree by construction at `bytes_per_param = 4`).
+    pub fn with_kv_cache(mut self, kv_bytes: usize) -> Self {
+        self.kv_cache = kv_bytes;
+        self
+    }
+
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
         Value::obj(vec![
@@ -56,9 +67,17 @@ impl MemoryReport {
             ("grads", Value::num(self.grads as f64)),
             ("optimizer", Value::num(self.optimizer as f64)),
             ("activations", Value::num(self.activations as f64)),
+            ("kv_cache", Value::num(self.kv_cache as f64)),
             ("total", Value::num(self.total() as f64)),
         ])
     }
+}
+
+/// Serving-time K/V cache capacity: `2 (K and V) · n_layers · slots ·
+/// seq_len · n_heads·d_head · bytes`. This is exactly the backing store
+/// `serve::KvPool` allocates for `slots` concurrently resident sequences.
+pub fn kv_cache_bytes(m: &ModelSpec, slots: usize, bytes_per_param: usize) -> usize {
+    2 * m.n_layers * slots * m.seq_len * m.n_heads * m.d_head * bytes_per_param
 }
 
 /// §3.3: optimizer bytes for a selected parameter count.
@@ -107,6 +126,7 @@ pub fn method_memory(preset: &Preset, method: &Method, bytes_per_param: usize) -
             grads: p_total * bytes_per_param,
             optimizer: optimizer_bytes(p_total, bytes_per_param),
             activations,
+            kv_cache: 0,
         },
         Method::Lora { double_rank } => {
             let p_lora = lora_params(preset, *double_rank);
@@ -117,6 +137,7 @@ pub fn method_memory(preset: &Preset, method: &Method, bytes_per_param: usize) -
                 grads: p_lora * bytes_per_param,
                 optimizer: optimizer_bytes(p_lora, bytes_per_param),
                 activations,
+                kv_cache: 0,
             }
         }
         Method::Fixed { blocks } => {
@@ -126,6 +147,7 @@ pub fn method_memory(preset: &Preset, method: &Method, bytes_per_param: usize) -
                 grads: p_total * bytes_per_param,
                 optimizer: optimizer_bytes(p_sel, bytes_per_param),
                 activations,
+                kv_cache: 0,
             }
         }
         // all selective policies: k blocks resident at peak
@@ -143,6 +165,7 @@ pub fn method_memory(preset: &Preset, method: &Method, bytes_per_param: usize) -
                 grads: p_total * bytes_per_param,
                 optimizer: optimizer_bytes(p_sel, bytes_per_param),
                 activations,
+                kv_cache: 0,
             }
         }
     }
@@ -155,6 +178,20 @@ mod tests {
 
     fn preset() -> Preset {
         Manifest::builtin().preset("qwen-sim").unwrap().clone()
+    }
+
+    #[test]
+    fn kv_formula_matches_pool_backing_store() {
+        use crate::serve::KvPool;
+        let p = preset();
+        let slots = 6;
+        let pool = KvPool::new(&p.model, slots);
+        assert_eq!(kv_cache_bytes(&p.model, slots, 4), pool.bytes());
+        // and it rolls into the report total through the builder
+        let rep = method_memory(&p, &Method::Full, 2);
+        let with_kv = rep.with_kv_cache(pool.bytes());
+        assert_eq!(with_kv.total(), rep.total() + pool.bytes());
+        assert_eq!(rep.kv_cache, 0, "training reports carry no cache");
     }
 
     #[test]

@@ -71,6 +71,7 @@ impl PaperModel {
             grads: self.total_params * bpp,
             optimizer: optimizer_bytes(p_sel, bpp),
             activations: self.activation_bytes(batch, seq, bpp),
+            kv_cache: 0,
         }
     }
 

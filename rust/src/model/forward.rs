@@ -8,6 +8,16 @@
 //! (`W + 2·A·B` on every projection) are supported on the same code path
 //! with the base weights frozen, mirroring `make_lora_train_step`.
 //!
+//! Besides the training entrypoints, this module holds the **incremental
+//! decoding** kernels behind the serving subsystem (`crate::serve`):
+//! [`prefill_in`] runs a prompt once and fills per-layer K/V caches
+//! ([`SeqKv`]), and [`decode_step_kv_in`] advances a whole batch of
+//! independent sequences by one token each, attending over their caches —
+//! one full forward per prompt plus one single-token step per generated
+//! token, instead of the `decode_step` oracle's full reforward per token.
+//! Both reuse the oracle path's per-row arithmetic unchanged, so cached
+//! greedy decode is token-for-token identical to the reforward loop.
+//!
 //! Everything operates on row-major `[rows, cols]` slices. All matrix
 //! products run through the cache-blocked packed kernels in
 //! [`crate::util::gemm`] (`NN` plus fused `TN`/`NT` transpose variants, so
@@ -279,6 +289,28 @@ fn rope_apply(x: &mut [f32], s: usize, n_heads: usize, d_head: usize, t: &RopeTa
             for j in 0..half {
                 let c = t.cos[pos * half + j];
                 let sn = if inverse { -t.sin[pos * half + j] } else { t.sin[pos * half + j] };
+                let x1 = x[off + j];
+                let x2 = x[off + half + j];
+                x[off + j] = x1 * c - x2 * sn;
+                x[off + half + j] = x1 * sn + x2 * c;
+            }
+        }
+    }
+}
+
+/// Rotary-apply one row per sequence at that row's own absolute position
+/// (the KV-decode path: row `i` of `x` is the newest token of sequence
+/// `i`, living at position `positions[i]` of that sequence). Same math as
+/// [`rope_apply`] with `inverse = false`.
+fn rope_apply_at(x: &mut [f32], positions: &[usize], n_heads: usize, d_head: usize, t: &RopeTables) {
+    let d = n_heads * d_head;
+    let half = t.half;
+    for (row, &pos) in positions.iter().enumerate() {
+        for h in 0..n_heads {
+            let off = row * d + h * d_head;
+            for j in 0..half {
+                let c = t.cos[pos * half + j];
+                let sn = t.sin[pos * half + j];
                 let x1 = x[off + j];
                 let x2 = x[off + half + j];
                 x[off + j] = x1 * c - x2 * sn;
@@ -920,12 +952,7 @@ fn layer_bwd(
 // public entrypoints
 // ---------------------------------------------------------------------------
 
-fn check_shapes(
-    spec: &ModelSpec,
-    blocks: &[BlockSpec],
-    flats: &[&[f32]],
-    tokens: &[i32],
-) -> Result<()> {
+fn check_blocks(blocks: &[BlockSpec], flats: &[&[f32]]) -> Result<()> {
     if flats.len() != blocks.len() {
         return Err(anyhow!(
             "expected {} block inputs, got {}",
@@ -943,6 +970,16 @@ fn check_shapes(
             ));
         }
     }
+    Ok(())
+}
+
+fn check_shapes(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+) -> Result<()> {
+    check_blocks(blocks, flats)?;
     let rows = spec.batch * spec.seq_len;
     if tokens.len() != rows {
         return Err(anyhow!(
@@ -1309,6 +1346,333 @@ pub fn decode_logits_in(
     Ok(logits)
 }
 
+// ---------------------------------------------------------------------------
+// incremental decoding: prefill + KV-cached single-token steps
+// ---------------------------------------------------------------------------
+
+/// One layer's K/V cache for a single sequence: **rotary-encoded** keys
+/// and raw values, `[capacity, d]` row-major with `d = n_heads·d_head`.
+/// Rows `0..pos` of the owning [`SeqKv`] are valid.
+pub struct KvLayer<'a> {
+    pub k: &'a mut [f32],
+    pub v: &'a mut [f32],
+}
+
+/// One sequence's per-layer cache views plus its current length. Views
+/// are ephemeral — they are rebuilt from the owning pool for every kernel
+/// call (`serve::KvPool::views`); the kernels advance `pos` on the view,
+/// and the pool's lengths are advanced by the caller after a successful
+/// step.
+pub struct SeqKv<'a> {
+    /// Exactly `n_layers` entries, all planes the same size.
+    pub layers: Vec<KvLayer<'a>>,
+    /// Tokens already cached (the next token's K/V land at row `pos`).
+    pub pos: usize,
+}
+
+impl SeqKv<'_> {
+    /// Rows available per layer plane (`plane_len / d`).
+    pub fn capacity(&self, d: usize) -> usize {
+        self.layers.first().map(|l| l.k.len() / d).unwrap_or(0)
+    }
+}
+
+/// Validate one sequence's cache views against the model spec; returns
+/// the per-sequence row capacity. Runs before any arena take.
+fn check_seq_kv(seq: &SeqKv<'_>, spec: &ModelSpec, d: usize) -> Result<usize> {
+    if seq.layers.len() != spec.n_layers {
+        return Err(anyhow!(
+            "kv cache has {} layer planes, model has {} layers",
+            seq.layers.len(),
+            spec.n_layers
+        ));
+    }
+    let cap = seq.capacity(d);
+    for (l, lv) in seq.layers.iter().enumerate() {
+        if lv.k.len() != lv.v.len() || lv.k.len() % d != 0 || lv.k.len() / d != cap {
+            return Err(anyhow!(
+                "kv cache layer {l}: inconsistent plane sizes (k {}, v {}, d {d})",
+                lv.k.len(),
+                lv.v.len()
+            ));
+        }
+    }
+    Ok(cap)
+}
+
+/// Above this many multiply-adds the per-sequence attention loop of a
+/// decode step fans out over threads; below it the spawn overhead wins.
+const DECODE_ATTN_PAR_MIN_MULADDS: usize = 1 << 18;
+
+/// Causal attention of one fresh query row per sequence over that
+/// sequence's cache rows `0..=pos` (which already hold the new token's
+/// K/V at row `pos`). Mirrors [`attention_fwd`]'s per-row arithmetic —
+/// same dot, max, exp, normalize and accumulate order — so KV-cached
+/// decode stays bit-identical to the full-reforward oracle.
+#[allow(clippy::too_many_arguments)]
+fn attention_decode(
+    ws: &mut Workspace,
+    q: &[f32],
+    seqs: &[SeqKv<'_>],
+    layer: usize,
+    positions: &[usize],
+    n_heads: usize,
+    d_head: usize,
+    cap: usize,
+) -> Vec<f32> {
+    let d = n_heads * d_head;
+    let n = positions.len();
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut att = ws.take_zeroed(n * d);
+    // scratch rows sized to the full cache capacity so steady-state decode
+    // steps reuse one slab no matter how far each sequence has decoded
+    let mut prow_all = ws.take(n * cap);
+
+    let max_pos = positions.iter().copied().max().unwrap_or(0);
+    let par = n * (max_pos + 1) * d >= DECODE_ATTN_PAR_MIN_MULADDS;
+    let att_ptr = SendPtr(att.as_mut_ptr());
+    let prow_ptr = SendPtr(prow_all.as_mut_ptr());
+    par_for_each_index(n, par, |i| {
+        let pos = positions[i];
+        let lkv = &seqs[i].layers[layer];
+        // safety: each sequence index owns a disjoint stripe of att/prow
+        let orow =
+            unsafe { std::slice::from_raw_parts_mut(att_ptr.get().add(i * d), d) };
+        let prow =
+            unsafe { std::slice::from_raw_parts_mut(prow_ptr.get().add(i * cap), cap) };
+        for h in 0..n_heads {
+            let off = h * d_head;
+            let qrow = &q[i * d + off..i * d + off + d_head];
+            let mut maxv = f32::NEG_INFINITY;
+            for (j, pj) in prow.iter_mut().enumerate().take(pos + 1) {
+                let krow = &lkv.k[j * d + off..j * d + off + d_head];
+                let mut dot = 0.0f32;
+                for t in 0..d_head {
+                    dot += qrow[t] * krow[t];
+                }
+                let logit = dot * scale;
+                *pj = logit;
+                if logit > maxv {
+                    maxv = logit;
+                }
+            }
+            let mut sum = 0.0f32;
+            for pj in prow.iter_mut().take(pos + 1) {
+                let e = (*pj - maxv).exp();
+                *pj = e;
+                sum += e;
+            }
+            let isum = 1.0 / sum;
+            for pj in prow.iter_mut().take(pos + 1) {
+                *pj *= isum;
+            }
+            let ocol = &mut orow[off..off + d_head];
+            for (j, &pj) in prow.iter().enumerate().take(pos + 1) {
+                let vrow = &lkv.v[j * d + off..j * d + off + d_head];
+                for t in 0..d_head {
+                    ocol[t] += pj * vrow[t];
+                }
+            }
+        }
+    });
+    ws.give(prow_all);
+    att
+}
+
+/// Run a prompt once through the model, filling `seq`'s per-layer K/V
+/// caches (rows `0..t`), and return the **last position's** logits
+/// `[vocab]` (the only row greedy decoding needs). The `prefill`
+/// artifact; one call replaces the first full forward of the reforward
+/// decode loop.
+///
+/// Bit-parity contract: the returned logits equal row `t-1` of the
+/// `decode_step` artifact's output on the same (padded) token row, and
+/// the cached K/V equal what any later full reforward would recompute —
+/// every kernel here reuses the oracle path's per-row arithmetic
+/// unchanged, and per-row results are independent of the number of rows
+/// in the batch (pinned by `tests/serve_decode.rs`).
+pub fn prefill_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    seq: &mut SeqKv<'_>,
+) -> Result<Vec<f32>> {
+    let dims = Dims::from_spec(spec);
+    let (d, f) = (dims.d, dims.d_ff);
+    let t = tokens.len();
+    // validate everything before the first arena take (see check_tokens)
+    check_blocks(blocks, flats)?;
+    check_tokens(tokens, dims.vocab)?;
+    let cap = check_seq_kv(seq, spec, d)?;
+    if t == 0 || t > cap {
+        return Err(anyhow!("prefill: prompt length {t} outside 1..={cap}"));
+    }
+    if seq.pos != 0 {
+        return Err(anyhow!("prefill: sequence already holds {} cached tokens", seq.pos));
+    }
+
+    let rope = rope_tables(ws, t, dims.d_head, spec.rope_theta);
+    let emb = tensor(flats[0], &blocks[0], "tok_emb")?;
+    let mut h = embed_fwd(ws, emb, tokens, d, dims.vocab)?;
+    for l in 0..spec.n_layers {
+        let p = layer_params(flats[1 + l], &blocks[1 + l])?;
+        let (x1, inv1) = rmsnorm_fwd(ws, &h, p.ln1, dims.norm_eps, t, d);
+        let (mut q, _) = proj_fwd(ws, &x1, p.w[0], None, t);
+        let (mut k, _) = proj_fwd(ws, &x1, p.w[1], None, t);
+        let (v, _) = proj_fwd(ws, &x1, p.w[2], None, t);
+        rope_apply(&mut q, t, dims.n_heads, dims.d_head, &rope, false);
+        rope_apply(&mut k, t, dims.n_heads, dims.d_head, &rope, false);
+        let lkv = &mut seq.layers[l];
+        lkv.k[..t * d].copy_from_slice(&k);
+        lkv.v[..t * d].copy_from_slice(&v);
+        let (att, probs) = attention_fwd(ws, &q, &k, &v, 1, t, dims.n_heads, dims.d_head);
+        let (attn_out, _) = proj_fwd(ws, &att, p.w[3], None, t);
+        add_into(&mut h, &attn_out);
+        for buf in [attn_out, att, probs, q, k, v, x1, inv1] {
+            ws.give(buf);
+        }
+        let (x2, inv2) = rmsnorm_fwd(ws, &h, p.ln2, dims.norm_eps, t, d);
+        let (gp, _) = proj_fwd(ws, &x2, p.w[4], None, t);
+        let (up, _) = proj_fwd(ws, &x2, p.w[5], None, t);
+        let mut act = ws.take(t * f);
+        for i in 0..t * f {
+            act[i] = silu(gp[i]) * up[i];
+        }
+        let (mlp_out, _) = proj_fwd(ws, &act, p.w[6], None, t);
+        add_into(&mut h, &mlp_out);
+        for buf in [mlp_out, act, up, gp, x2, inv2] {
+            ws.give(buf);
+        }
+    }
+
+    // head logits for the last prompt position only
+    let head_spec = blocks.last().expect("blocks nonempty");
+    let head_flat = flats[flats.len() - 1];
+    let ln_f = tensor(head_flat, head_spec, "ln_f")?;
+    let w_out = tensor(head_flat, head_spec, "w_out")?;
+    let h_last = &h[(t - 1) * d..t * d];
+    let (xf, invf) = rmsnorm_fwd(ws, h_last, ln_f, dims.norm_eps, 1, d);
+    // the logits are the call's output — a fresh API-boundary allocation
+    // (like train_step's gradient vectors), so the arena's slab pool
+    // stays closed and steady-state serving stays allocation-free inside
+    // the arena
+    let mut logits = vec![0.0f32; dims.vocab];
+    gemm_nn(ws, &mut logits, &xf, w_out, 1, d, dims.vocab, 1.0, false);
+    ws.give(xf);
+    ws.give(invf);
+    ws.give(h);
+    rope.recycle(ws);
+    seq.pos = t;
+    Ok(logits)
+}
+
+/// One KV-cached decode step for a batch of independent sequences: feed
+/// one new token per sequence (each at its own position `seqs[i].pos`),
+/// append its K/V to the cache, attend over the cache, and return the
+/// next-token logits `[n, vocab]`. The `decode_step_kv` artifact.
+///
+/// All projections run as one `[n, ·]` batched GEMM across sequences —
+/// the continuous-batching payoff — while attention stays per-sequence
+/// over each cache. Per-row results are independent of which other
+/// sequences share the batch (and of their order), which is what makes
+/// scheduler output independent of arrival interleaving.
+///
+/// Steady-state allocation contract: all position-dependent scratch
+/// (rotary tables, attention probability rows) is sized to the cache
+/// **capacity**, not the current position, so repeated decode steps
+/// through a warm [`Workspace`] perform zero slab allocations no matter
+/// how far each sequence has decoded.
+pub fn decode_step_kv_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    seqs: &mut [SeqKv<'_>],
+) -> Result<Vec<f32>> {
+    let dims = Dims::from_spec(spec);
+    let (d, f) = (dims.d, dims.d_ff);
+    let n = tokens.len();
+    if n == 0 || n != seqs.len() {
+        return Err(anyhow!("decode_step_kv: {n} tokens for {} sequences", seqs.len()));
+    }
+    check_blocks(blocks, flats)?;
+    check_tokens(tokens, dims.vocab)?;
+    let mut cap = 0usize;
+    for (i, seq) in seqs.iter().enumerate() {
+        let c = check_seq_kv(seq, spec, d)?;
+        if i == 0 {
+            cap = c;
+        } else if c != cap {
+            return Err(anyhow!("decode_step_kv: mixed cache capacities ({cap} vs {c})"));
+        }
+        if seq.pos >= c {
+            return Err(anyhow!("decode_step_kv: sequence {i} cache full ({} of {c})", seq.pos));
+        }
+    }
+
+    // capacity-sized tables: bit-identical to the oracle's (per-position
+    // values do not depend on the table length) and fixed-size so decode
+    // progress never grows the arena
+    let rope = rope_tables(ws, cap, dims.d_head, spec.rope_theta);
+    let emb = tensor(flats[0], &blocks[0], "tok_emb")?;
+    let mut h = embed_fwd(ws, emb, tokens, d, dims.vocab)?;
+    let positions: Vec<usize> = seqs.iter().map(|s| s.pos).collect();
+    for l in 0..spec.n_layers {
+        let p = layer_params(flats[1 + l], &blocks[1 + l])?;
+        let (x1, inv1) = rmsnorm_fwd(ws, &h, p.ln1, dims.norm_eps, n, d);
+        let (mut q, _) = proj_fwd(ws, &x1, p.w[0], None, n);
+        let (mut k, _) = proj_fwd(ws, &x1, p.w[1], None, n);
+        let (v, _) = proj_fwd(ws, &x1, p.w[2], None, n);
+        rope_apply_at(&mut q, &positions, dims.n_heads, dims.d_head, &rope);
+        rope_apply_at(&mut k, &positions, dims.n_heads, dims.d_head, &rope);
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            let pos = positions[i];
+            let lkv = &mut seq.layers[l];
+            lkv.k[pos * d..(pos + 1) * d].copy_from_slice(&k[i * d..(i + 1) * d]);
+            lkv.v[pos * d..(pos + 1) * d].copy_from_slice(&v[i * d..(i + 1) * d]);
+        }
+        let att =
+            attention_decode(ws, &q, seqs, l, &positions, dims.n_heads, dims.d_head, cap);
+        let (attn_out, _) = proj_fwd(ws, &att, p.w[3], None, n);
+        add_into(&mut h, &attn_out);
+        for buf in [attn_out, att, q, k, v, x1, inv1] {
+            ws.give(buf);
+        }
+        let (x2, inv2) = rmsnorm_fwd(ws, &h, p.ln2, dims.norm_eps, n, d);
+        let (gp, _) = proj_fwd(ws, &x2, p.w[4], None, n);
+        let (up, _) = proj_fwd(ws, &x2, p.w[5], None, n);
+        let mut act = ws.take(n * f);
+        for i in 0..n * f {
+            act[i] = silu(gp[i]) * up[i];
+        }
+        let (mlp_out, _) = proj_fwd(ws, &act, p.w[6], None, n);
+        add_into(&mut h, &mlp_out);
+        for buf in [mlp_out, act, up, gp, x2, inv2] {
+            ws.give(buf);
+        }
+    }
+
+    let head_spec = blocks.last().expect("blocks nonempty");
+    let head_flat = flats[flats.len() - 1];
+    let ln_f = tensor(head_flat, head_spec, "ln_f")?;
+    let w_out = tensor(head_flat, head_spec, "w_out")?;
+    let (xf, invf) = rmsnorm_fwd(ws, &h, ln_f, dims.norm_eps, n, d);
+    // fresh output allocation, not an arena slab — see prefill_in
+    let mut logits = vec![0.0f32; n * dims.vocab];
+    gemm_nn(ws, &mut logits, &xf, w_out, n, d, dims.vocab, 1.0, false);
+    ws.give(xf);
+    ws.give(invf);
+    ws.give(h);
+    rope.recycle(ws);
+    for seq in seqs.iter_mut() {
+        seq.pos += 1;
+    }
+    Ok(logits)
+}
+
 /// Merge adapters into one layer flat: `W += 2·A·B` per projection
 /// (the `lora_merge*` artifacts).
 pub fn lora_merge(
@@ -1524,6 +1888,157 @@ mod tests {
         let _ = train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
         assert_eq!(ws.stats().grows, grows, "steady-state step must not grow the arena");
         assert!(ws.stats().high_water_bytes > 0);
+    }
+
+    // --- incremental decoding: prefill / decode_step_kv vs the
+    // --- full-reforward oracle (decode_logits)
+
+    fn kv_storage(spec: &ModelSpec, cap: usize) -> (Vec<f32>, Vec<f32>) {
+        let plane = cap * spec.d_model;
+        (vec![0.0f32; spec.n_layers * plane], vec![0.0f32; spec.n_layers * plane])
+    }
+
+    fn kv_views<'a>(
+        spec: &ModelSpec,
+        cap: usize,
+        k: &'a mut [f32],
+        v: &'a mut [f32],
+        pos: usize,
+    ) -> SeqKv<'a> {
+        let plane = cap * spec.d_model;
+        let layers = k
+            .chunks_mut(plane)
+            .zip(v.chunks_mut(plane))
+            .map(|(k, v)| KvLayer { k, v })
+            .collect();
+        SeqKv { layers, pos }
+    }
+
+    #[test]
+    fn prefill_and_decode_kv_match_full_reforward() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 17);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let (s, v) = (spec.seq_len, spec.vocab);
+
+        // one full sequence; row 1 of the oracle batch holds unrelated
+        // tokens (causality makes them irrelevant to row 0)
+        let seq_tokens: Vec<i32> = vec![1, 4, 7, 5, 9];
+        assert_eq!(seq_tokens.len(), s);
+        let mut full = seq_tokens.clone();
+        full.extend((0..s).map(|i| 2 + (i as i32 % 7)));
+        let oracle = decode_logits(&spec, &blocks, &refs, &full).unwrap();
+
+        let t = 3; // prompt length
+        let cap = s;
+        let (mut kc, mut vc) = kv_storage(&spec, cap);
+        let mut ws = Workspace::new();
+        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 0);
+        let logits =
+            prefill_in(&mut ws, &spec, &blocks, &refs, &seq_tokens[..t], &mut seq).unwrap();
+        assert_eq!(seq.pos, t);
+        let want = &oracle[(t - 1) * v..t * v];
+        // empirically bit-identical (same per-row arithmetic); the hard
+        // contract — token-for-token greedy parity — is pinned in
+        // tests/serve_decode.rs
+        let diff = logits.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(diff < 1e-6, "prefill logits diverge from oracle: {diff}");
+
+        // feed the remaining tokens one at a time through the cache
+        for (step, &tok) in seq_tokens[t..].iter().enumerate() {
+            let pos = t + step;
+            let logits = {
+                let mut seqs = [kv_views(&spec, cap, &mut kc, &mut vc, pos)];
+                decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[tok], &mut seqs).unwrap()
+            };
+            assert_eq!(logits.len(), v);
+            let want = &oracle[pos * v..(pos + 1) * v];
+            let diff =
+                logits.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(diff < 1e-6, "decode step at pos {pos} diverges from oracle: {diff}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_rows_are_independent_of_batchmates() {
+        // the continuous-batching contract: a sequence's logits do not
+        // depend on which other sequences share the decode batch
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 23);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let cap = spec.seq_len;
+        let mut ws = Workspace::new();
+
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4, 5], &[6]];
+        let mut stores: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..3).map(|_| kv_storage(&spec, cap)).collect();
+        for (p, (kc, vc)) in prompts.iter().zip(stores.iter_mut()) {
+            let mut seq = kv_views(&spec, cap, kc, vc, 0);
+            prefill_in(&mut ws, &spec, &blocks, &refs, p, &mut seq).unwrap();
+        }
+        // solo decode of sequence 0 vs the same step inside a 3-batch
+        let (mut kc0, mut vc0) = (stores[0].0.clone(), stores[0].1.clone());
+        let solo = {
+            let mut seqs = [kv_views(&spec, cap, &mut kc0, &mut vc0, prompts[0].len())];
+            decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[8], &mut seqs).unwrap()
+        };
+        let batched = {
+            let mut seqs: Vec<SeqKv> = stores
+                .iter_mut()
+                .zip(prompts.iter())
+                .map(|((kc, vc), p)| kv_views(&spec, cap, kc, vc, p.len()))
+                .collect();
+            decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[8, 9, 10], &mut seqs).unwrap()
+        };
+        assert_eq!(solo, batched[..spec.vocab].to_vec(), "row 0 changed with batchmates");
+        assert_eq!(kc0, stores[0].0, "row 0 cache changed with batchmates");
+    }
+
+    #[test]
+    fn kv_kernels_reject_bad_inputs() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 2);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let cap = 4usize;
+        let (mut kc, mut vc) = kv_storage(&spec, cap);
+        let mut ws = Workspace::new();
+        // prompt longer than capacity
+        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 0);
+        assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1, 2, 3, 4, 5], &mut seq).is_err());
+        // prefill into a non-empty sequence
+        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 2);
+        assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1], &mut seq).is_err());
+        // decode with a full cache
+        let mut seqs = [kv_views(&spec, cap, &mut kc, &mut vc, cap)];
+        assert!(decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[1], &mut seqs).is_err());
+        // token / sequence count mismatch
+        let mut seqs = [kv_views(&spec, cap, &mut kc, &mut vc, 0)];
+        assert!(decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[1, 2], &mut seqs).is_err());
+        // wrong layer count
+        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 0);
+        seq.layers.pop();
+        assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1], &mut seq).is_err());
+    }
+
+    #[test]
+    fn rope_apply_at_matches_rope_apply() {
+        let (s, nh, dh) = (6usize, 2usize, 4usize);
+        let d = nh * dh;
+        let mut rng = Rng::seed_from_u64(31);
+        let base = rand_vec(&mut rng, s * d, -1.0, 1.0);
+        let mut ws = Workspace::new();
+        let tables = rope_tables(&mut ws, s, dh, 10000.0);
+        let mut all = base.clone();
+        rope_apply(&mut all, s, nh, dh, &tables, false);
+        // applying row-by-row at explicit positions must agree exactly
+        for pos in 0..s {
+            let mut row = base[pos * d..(pos + 1) * d].to_vec();
+            rope_apply_at(&mut row, &[pos], nh, dh, &tables);
+            assert_eq!(row, all[pos * d..(pos + 1) * d].to_vec(), "pos {pos}");
+        }
     }
 
     // --- per-kernel finite-difference checks (satellite guards so kernel

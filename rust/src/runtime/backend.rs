@@ -16,10 +16,14 @@
 //!   that loads AOT-lowered HLO-text artifacts through the `xla` crate.
 //!
 //! Entry names are shared between backends (`train_step`, `eval_loss`,
-//! `decode_step`, `train_step_lora[2]`, `lora_merge[2]`, and the shared
-//! `adamw_update` / `grad_norm_sq` kernels), so a `Trainer<B>` behaves
-//! identically up to floating-point on either executor — the property the
-//! backend-parity test suite pins down.
+//! `decode_step`, the serving pair `prefill` / `decode_step_kv`,
+//! `train_step_lora[2]`, `lora_merge[2]`, and the shared `adamw_update` /
+//! `grad_norm_sq` kernels), so a `Trainer<B>` behaves identically up to
+//! floating-point on either executor — the property the backend-parity
+//! test suite pins down. Backends that additionally implement
+//! [`crate::serve::KvBackend`] expose the serving pair as in-place
+//! kernels over slot-pooled caches; through plain [`Backend::execute`]
+//! the pair runs in its stateless cache-in/cache-out form.
 
 use std::rc::Rc;
 

@@ -26,11 +26,14 @@
 //!   runs for real when the path dependency points at actual bindings.
 //!
 //! Both backends expose the same entry names (`train_step`,
-//! `train_step_lora[2]`, `eval_loss`, `decode_step`, `lora_merge[2]`, and
-//! the shared `adamw_update` / `grad_norm_sq` kernels) with identical
+//! `train_step_lora[2]`, `eval_loss`, `decode_step`, the serving pair
+//! `prefill` / `decode_step_kv`, `lora_merge[2]`, and the shared
+//! `adamw_update` / `grad_norm_sq` kernels) with identical
 //! argument/output layouts, so checkpoints, configs and metrics are
 //! portable across them and the parity suite can hold one against the
-//! other.
+//! other. The serving subsystem built on top of these entries —
+//! KV-cache slot pool, continuous-batching scheduler, engine — lives in
+//! [`crate::serve`].
 
 mod backend;
 #[cfg(feature = "pjrt")]

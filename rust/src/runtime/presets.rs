@@ -171,6 +171,10 @@ fn preset(model: ModelSpec, pallas: bool) -> Preset {
     add("lora_merge2", 2);
     add("eval_loss", n + 2);
     add("decode_step", n + 1);
+    // serving entries: prompt prefill (blocks + tokens) and one KV-cached
+    // decode step (blocks + k + v + token + position)
+    add("prefill", n + 1);
+    add("decode_step_kv", n + 4);
 
     Preset { model, blocks, lora_blocks, lora_blocks2, total_params, artifacts }
 }

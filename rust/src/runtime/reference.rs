@@ -18,6 +18,13 @@
 //! high-water mark — the real per-step buffer footprint — is exposed via
 //! [`ReferenceBackend::workspace_stats`] and surfaced through the
 //! `memory` accounting and the `train_step` bench JSON.
+//!
+//! The serving entries (`prefill`, `decode_step_kv`) are exposed here in
+//! their stateless functional form (caches as explicit inputs/outputs,
+//! the shape an XLA lowering has). The serving engine itself
+//! (`crate::serve`) bypasses `execute` and runs the same kernels in-place
+//! against slot-pooled caches through the backend's arena — that is the
+//! zero-copy, zero-steady-state-allocation path.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -62,6 +69,8 @@ enum Entry {
     TrainStepLora { double: bool },
     EvalLoss,
     DecodeStep,
+    Prefill,
+    DecodeStepKv,
     LoraMerge { double: bool },
     AdamWUpdate,
     GradNormSq,
@@ -113,6 +122,15 @@ impl ReferenceBackend {
         self.ws.borrow().stats()
     }
 
+    /// Run `f` against the backend's shared workspace arena — the hook
+    /// the serving fast path (`serve::KvBackend`) uses to execute the
+    /// in-place prefill/decode kernels without going through the
+    /// stateless `execute` interface, while still sharing the warm slab
+    /// pool with every other entrypoint.
+    pub(crate) fn with_workspace<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        f(&mut self.ws.borrow_mut())
+    }
+
     fn parse_entry(entry: &str) -> Result<Entry> {
         Ok(match entry {
             // the Pallas-attention artifact computes the same function;
@@ -122,6 +140,8 @@ impl ReferenceBackend {
             "train_step_lora2" => Entry::TrainStepLora { double: true },
             "eval_loss" => Entry::EvalLoss,
             "decode_step" => Entry::DecodeStep,
+            "prefill" => Entry::Prefill,
+            "decode_step_kv" => Entry::DecodeStepKv,
             "lora_merge" => Entry::LoraMerge { double: false },
             "lora_merge2" => Entry::LoraMerge { double: true },
             "adamw_update" => Entry::AdamWUpdate,
@@ -211,6 +231,85 @@ impl ReferenceBackend {
                     &mut ws, &p.model, &p.blocks, &flats, args[n].as_i32()?,
                 )?;
                 Ok(vec![logits])
+            }
+            // The two serving entries in their stateless functional form
+            // (cache-in/cache-out, mirroring what an XLA lowering returns):
+            // the high-throughput path bypasses `execute` and runs the
+            // in-place kernels against slot-pooled caches (`serve`).
+            Entry::Prefill => {
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                want(n + 1)?;
+                let flats: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let tokens = args[n].as_i32()?;
+                let m = &p.model;
+                let d = m.n_heads * m.d_head;
+                let t = tokens.len();
+                if t == 0 {
+                    return Err(anyhow!("{}: empty prompt", exe.name));
+                }
+                // functional form: cache capacity == prompt length
+                let mut k_store = vec![0.0f32; m.n_layers * t * d];
+                let mut v_store = vec![0.0f32; m.n_layers * t * d];
+                let logits = {
+                    let layers = k_store
+                        .chunks_mut(t * d)
+                        .zip(v_store.chunks_mut(t * d))
+                        .map(|(k, v)| forward::KvLayer { k, v })
+                        .collect();
+                    let mut seq = forward::SeqKv { layers, pos: 0 };
+                    let mut ws = self.ws.borrow_mut();
+                    forward::prefill_in(&mut ws, m, &p.blocks, &flats, tokens, &mut seq)?
+                };
+                Ok(vec![logits, k_store, v_store])
+            }
+            Entry::DecodeStepKv => {
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                want(n + 4)?;
+                let flats: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let m = &p.model;
+                let d = m.n_heads * m.d_head;
+                let mut k_store = args[n].as_f32()?.to_vec();
+                let mut v_store = args[n + 1].as_f32()?.to_vec();
+                let token = *args[n + 2]
+                    .as_i32()?
+                    .first()
+                    .ok_or_else(|| anyhow!("{}: empty token input", exe.name))?;
+                let pos = *args[n + 3]
+                    .as_i32()?
+                    .first()
+                    .ok_or_else(|| anyhow!("{}: empty position input", exe.name))?;
+                if pos < 0 {
+                    return Err(anyhow!("{}: negative position {pos}", exe.name));
+                }
+                if k_store.is_empty()
+                    || k_store.len() != v_store.len()
+                    || m.n_layers == 0
+                    || k_store.len() % (m.n_layers * d) != 0
+                {
+                    return Err(anyhow!(
+                        "{}: cache size {} does not tile into {} layer planes of width {d}",
+                        exe.name,
+                        k_store.len(),
+                        m.n_layers
+                    ));
+                }
+                let plane = k_store.len() / m.n_layers;
+                let logits = {
+                    let layers = k_store
+                        .chunks_mut(plane)
+                        .zip(v_store.chunks_mut(plane))
+                        .map(|(k, v)| forward::KvLayer { k, v })
+                        .collect();
+                    let seq = forward::SeqKv { layers, pos: pos as usize };
+                    let mut seqs = [seq];
+                    let mut ws = self.ws.borrow_mut();
+                    forward::decode_step_kv_in(&mut ws, m, &p.blocks, &flats, &[token], &mut seqs)?
+                };
+                Ok(vec![logits, k_store, v_store])
             }
             Entry::LoraMerge { double } => {
                 let p = self.preset(exe)?;

@@ -1,0 +1,341 @@
+//! The continuous-batching serving engine.
+//!
+//! One [`ServeEngine`] owns the uploaded model weights, a [`KvPool`] of
+//! per-sequence caches, and a [`Scheduler`] request queue. Every
+//! [`ServeEngine::step`] is one **mixed iteration**:
+//!
+//! 1. **Admission** — freed slots are filled with arrived prompts; each
+//!    admitted prompt runs one [`prefill`](crate::model::forward::prefill_in)
+//!    (filling its cache and producing its first token — TTFT ends here);
+//! 2. **Decode** — all active sequences advance by exactly one token via a
+//!    single batched [`decode_step_kv`](crate::model::forward::decode_step_kv_in)
+//!    call; finished sequences release their slot immediately, so the next
+//!    iteration's admission can reuse it mid-stream.
+//!
+//! Requests therefore join and leave the batch continuously — no padding
+//! to a preset batch size and no head-of-batch stragglers burning compute
+//! for finished rows. Per-row kernel results are independent of
+//! batch-mates, so each request's token stream is identical to what a
+//! dedicated single-sequence decode (or the full-reforward oracle) would
+//! produce, regardless of arrival interleaving.
+//!
+//! The engine clock is wallclock-based but skips idle gaps: when nothing
+//! is active and the next arrival is in the future, the clock
+//! fast-forwards instead of sleeping, so open-loop (Poisson) arrival
+//! traces replay at full speed while latency accounting stays faithful.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::argmax;
+use crate::model::ModelState;
+use crate::runtime::Preset;
+
+use super::kv::KvPool;
+use super::scheduler::{Request, Scheduler};
+use super::{greedy_step, KvBackend};
+
+/// Engine construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Concurrently resident sequences (KV slots).
+    pub slots: usize,
+    /// Per-request generation cap when `submit` is given `0`.
+    pub max_new_tokens: usize,
+}
+
+/// One finished request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Generated token ids (prompt and EOS excluded) — token-for-token
+    /// what the full-reforward oracle would produce.
+    pub tokens: Vec<i32>,
+    pub n_prompt: usize,
+    /// Prompt was empty or longer than the KV capacity: rejected at
+    /// admission, nothing was generated (the `n_truncated` signal).
+    pub truncated: bool,
+    pub arrival_s: f64,
+    /// Engine-clock time the first token (or the rejection) was produced.
+    pub first_token_s: f64,
+    pub finish_s: f64,
+}
+
+impl Response {
+    /// Time to first token.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// End-to-end request latency.
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Aggregate engine counters (monotone over the engine's lifetime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub n_prefills: u64,
+    pub prefill_tokens: usize,
+    pub prefill_s: f64,
+    pub decode_steps: u64,
+    /// Sequence-steps summed over all batched decode calls (= generated
+    /// tokens sampled through the decode path).
+    pub decode_tokens: usize,
+    pub decode_s: f64,
+    /// KV backing-store bytes (constant; allocated at construction).
+    pub kv_bytes: usize,
+    pub peak_active: usize,
+}
+
+struct ActiveSeq {
+    id: u64,
+    slot: usize,
+    last: i32,
+    generated: Vec<i32>,
+    n_prompt: usize,
+    max_new: usize,
+    arrival_s: f64,
+    first_token_s: f64,
+}
+
+/// KV-cached continuous-batching engine over any [`KvBackend`].
+pub struct ServeEngine<'e, B: KvBackend> {
+    backend: &'e B,
+    preset: Preset,
+    blocks: Vec<B::Buffer>,
+    pool: KvPool,
+    sched: Scheduler,
+    active: Vec<ActiveSeq>,
+    max_new_default: usize,
+    eos: i32,
+    t0: Instant,
+    skip_s: f64,
+    stats: ServeStats,
+}
+
+impl<'e, B: KvBackend> ServeEngine<'e, B> {
+    pub fn new(
+        backend: &'e B,
+        preset_name: &str,
+        state: &ModelState,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        let preset = backend.manifest().preset(preset_name)?.clone();
+        if state.n_blocks() != preset.blocks.len() {
+            return Err(anyhow!(
+                "checkpoint has {} blocks, preset {preset_name} expects {}",
+                state.n_blocks(),
+                preset.blocks.len()
+            ));
+        }
+        let blocks =
+            state.flats.iter().map(|f| backend.upload_f32(f)).collect::<Result<Vec<_>>>()?;
+        let pool = KvPool::new(&preset.model, cfg.slots.max(1));
+        let kv_bytes = pool.bytes();
+        Ok(Self {
+            backend,
+            preset,
+            blocks,
+            pool,
+            sched: Scheduler::new(),
+            active: Vec::new(),
+            max_new_default: cfg.max_new_tokens,
+            eos: backend.manifest().tokenizer.eos,
+            t0: Instant::now(),
+            skip_s: 0.0,
+            stats: ServeStats { kv_bytes, ..Default::default() },
+        })
+    }
+
+    /// Engine-clock seconds since construction: wallclock plus any idle
+    /// gaps [`ServeEngine::run_until_idle`] fast-forwarded across.
+    pub fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() + self.skip_s
+    }
+
+    /// Enqueue a prompt arriving at `arrival_s` on the engine clock
+    /// (`max_new == 0` uses the engine default). Returns the request id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, arrival_s: f64) -> u64 {
+        let max_new = if max_new == 0 { self.max_new_default } else { max_new };
+        self.sched.submit(prompt, max_new, arrival_s)
+    }
+
+    /// Enqueue a prompt arriving now.
+    pub fn submit_now(&mut self, prompt: Vec<i32>) -> u64 {
+        let now = self.now_s();
+        self.submit(prompt, 0, now)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.sched.n_pending() == 0
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.sched.n_pending()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let mut s = self.stats;
+        s.peak_active = self.pool.peak_in_use();
+        s
+    }
+
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    fn response(a: ActiveSeq, finish_s: f64) -> Response {
+        Response {
+            id: a.id,
+            tokens: a.generated,
+            n_prompt: a.n_prompt,
+            truncated: false,
+            arrival_s: a.arrival_s,
+            first_token_s: a.first_token_s,
+            finish_s,
+        }
+    }
+
+    /// One mixed prefill+decode iteration; returns the requests that
+    /// finished during it.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        let mut done = Vec::new();
+
+        // --- admission: fill freed slots with arrived prompts. Rejected
+        // (over-length/empty) requests never occupy a slot, so the outer
+        // loop re-asks the scheduler until the free slots are actually
+        // spent or nothing admissible is left — a burst of bad prompts
+        // must not delay a valid one behind it by a decode iteration.
+        let now = self.now_s();
+        loop {
+            let batch = self.sched.admit(now, self.pool.n_free());
+            if batch.is_empty() {
+                break;
+            }
+            for req in batch {
+                let Request { id, prompt, max_new, arrival_s } = req;
+                if prompt.is_empty() || prompt.len() > self.pool.capacity() {
+                    done.push(Response {
+                        id,
+                        tokens: Vec::new(),
+                        n_prompt: prompt.len(),
+                        truncated: true,
+                        arrival_s,
+                        first_token_s: now,
+                        finish_s: now,
+                    });
+                    continue;
+                }
+                let slot = self.pool.alloc().expect("admit() never exceeds free slots");
+                let t_pre = Instant::now();
+                let logits = {
+                    let mut views = self.pool.views(&[slot])?;
+                    self.backend.kv_prefill(&self.preset, &self.blocks, &prompt, &mut views[0])?
+                };
+                self.pool.set_len(slot, prompt.len());
+                self.stats.prefill_s += t_pre.elapsed().as_secs_f64();
+                self.stats.n_prefills += 1;
+                self.stats.prefill_tokens += prompt.len();
+
+                let first_token_s = self.now_s();
+                let mut a = ActiveSeq {
+                    id,
+                    slot,
+                    last: 0,
+                    generated: Vec::new(),
+                    n_prompt: prompt.len(),
+                    max_new,
+                    arrival_s,
+                    first_token_s,
+                };
+                let (emit, finished) = greedy_step(
+                    argmax(&logits),
+                    self.eos,
+                    self.pool.len(slot),
+                    self.pool.capacity(),
+                    0,
+                    max_new,
+                );
+                if let Some(tok) = emit {
+                    a.generated.push(tok);
+                    a.last = tok;
+                }
+                if finished {
+                    self.pool.release(slot);
+                    done.push(Self::response(a, first_token_s));
+                } else {
+                    self.active.push(a);
+                }
+            }
+        }
+
+        // --- one batched decode iteration over every active sequence ---
+        if !self.active.is_empty() {
+            let t_dec = Instant::now();
+            let tokens: Vec<i32> = self.active.iter().map(|a| a.last).collect();
+            let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
+            let logits = {
+                let mut views = self.pool.views(&slots)?;
+                self.backend.kv_decode_step(&self.preset, &self.blocks, &tokens, &mut views)?
+            };
+            self.stats.decode_s += t_dec.elapsed().as_secs_f64();
+            self.stats.decode_steps += 1;
+            self.stats.decode_tokens += self.active.len();
+
+            let vocab = self.preset.model.vocab;
+            let now = self.now_s();
+            let mut still = Vec::with_capacity(self.active.len());
+            for (i, mut a) in self.active.drain(..).enumerate() {
+                self.pool.advance(a.slot); // the fed token is now cached
+                let (emit, finished) = greedy_step(
+                    argmax(&logits[i * vocab..(i + 1) * vocab]),
+                    self.eos,
+                    self.pool.len(a.slot),
+                    self.pool.capacity(),
+                    a.generated.len(),
+                    a.max_new,
+                );
+                if let Some(tok) = emit {
+                    a.generated.push(tok);
+                    a.last = tok;
+                }
+                if finished {
+                    self.pool.release(a.slot);
+                    done.push(Self::response(a, now));
+                } else {
+                    still.push(a);
+                }
+            }
+            self.active = still;
+        }
+        Ok(done)
+    }
+
+    /// Drive mixed iterations until queue and batch are empty,
+    /// fast-forwarding the clock across idle gaps between arrivals.
+    pub fn run_until_idle(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        loop {
+            if self.active.is_empty() {
+                match self.sched.next_arrival_s() {
+                    None => break,
+                    Some(t) => {
+                        let now = self.now_s();
+                        if t > now {
+                            self.skip_s += t - now;
+                        }
+                    }
+                }
+            }
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,247 @@
+//! Slot-pooled K/V cache storage for the serving engine.
+//!
+//! One [`KvPool`] owns the K/V backing store for every concurrently
+//! resident sequence: `n_slots` slots, each holding `n_layers` planes of
+//! `[capacity, d]` rotary-encoded keys and raw values (`d = n_heads ·
+//! d_head`). Storage is allocated once up front — admission, decoding and
+//! eviction never touch the allocator, they only move slot ids between
+//! the free stack and the active set.
+//!
+//! The pool is the single source of truth for per-slot lengths. Kernel
+//! calls borrow ephemeral [`SeqKv`] views ([`KvPool::views`]) that are
+//! rebuilt from the pool's lengths each step; after a successful step the
+//! caller syncs the pool via [`KvPool::set_len`] (prefill) or
+//! [`KvPool::advance`] (decode).
+//!
+//! Memory: `bytes() = 2 · n_slots · n_layers · capacity · d · 4` — the
+//! same quantity [`crate::memory::kv_cache_bytes`] models and
+//! `MemoryReport::with_kv_cache` surfaces in the capacity accounting.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::forward::{KvLayer, SeqKv};
+use crate::runtime::ModelSpec;
+
+/// Fixed-capacity pool of per-sequence K/V cache slots.
+pub struct KvPool {
+    n_layers: usize,
+    d: usize,
+    capacity: usize,
+    n_slots: usize,
+    /// `[slot, layer, capacity, d]` row-major (one slot's planes are
+    /// contiguous).
+    k: Vec<f32>,
+    v: Vec<f32>,
+    lens: Vec<usize>,
+    in_use: Vec<bool>,
+    free: Vec<usize>,
+    peak_in_use: usize,
+}
+
+impl KvPool {
+    /// Pool with per-slot capacity equal to the model context length.
+    pub fn new(model: &ModelSpec, n_slots: usize) -> Self {
+        Self::with_capacity(model, n_slots, model.seq_len)
+    }
+
+    /// Pool with an explicit per-slot row capacity.
+    pub fn with_capacity(model: &ModelSpec, n_slots: usize, capacity: usize) -> Self {
+        let d = model.n_heads * model.d_head;
+        let total = n_slots * model.n_layers * capacity * d;
+        Self {
+            n_layers: model.n_layers,
+            d,
+            capacity,
+            n_slots,
+            k: vec![0.0; total],
+            v: vec![0.0; total],
+            lens: vec![0; n_slots],
+            in_use: vec![false; n_slots],
+            // pop order: lowest slot id first (purely cosmetic/determinism)
+            free: (0..n_slots).rev().collect(),
+            peak_in_use: 0,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Rows (tokens) each slot can hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Cached tokens in a slot.
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.lens[slot] == 0
+    }
+
+    /// Highest number of slots simultaneously in use since creation.
+    pub fn peak_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Backing-store bytes (K + V), the measured KV footprint.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Claim a free slot (length reset to 0), or `None` when the pool is
+    /// fully occupied.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.lens[slot] = 0;
+        self.in_use[slot] = true;
+        let active = self.n_slots - self.free.len();
+        if active > self.peak_in_use {
+            self.peak_in_use = active;
+        }
+        Some(slot)
+    }
+
+    /// Return a finished sequence's slot to the pool.
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.in_use[slot], "release of a slot that is not in use");
+        self.in_use[slot] = false;
+        self.lens[slot] = 0;
+        self.free.push(slot);
+    }
+
+    /// Record that `slot` now caches `len` tokens (after a prefill).
+    pub fn set_len(&mut self, slot: usize, len: usize) {
+        assert!(self.in_use[slot] && len <= self.capacity);
+        self.lens[slot] = len;
+    }
+
+    /// Record one more cached token (after a decode step).
+    pub fn advance(&mut self, slot: usize) {
+        assert!(self.in_use[slot] && self.lens[slot] < self.capacity);
+        self.lens[slot] += 1;
+    }
+
+    fn plane_elems(&self) -> usize {
+        self.capacity * self.d
+    }
+
+    /// Build per-layer mutable cache views for a set of **distinct**,
+    /// in-use slots (one [`SeqKv`] per slot, `pos` taken from the pool's
+    /// lengths). The views borrow the pool mutably, so they must be
+    /// dropped before the lengths are synced back.
+    pub fn views(&mut self, slots: &[usize]) -> Result<Vec<SeqKv<'_>>> {
+        let mut seen = vec![false; self.n_slots];
+        for &s in slots {
+            if s >= self.n_slots {
+                return Err(anyhow!("kv pool: slot {s} out of range 0..{}", self.n_slots));
+            }
+            if !self.in_use[s] {
+                return Err(anyhow!("kv pool: slot {s} is not allocated"));
+            }
+            if seen[s] {
+                return Err(anyhow!("kv pool: slot {s} requested twice"));
+            }
+            seen[s] = true;
+        }
+        let plane = self.plane_elems();
+        let kp = self.k.as_mut_ptr();
+        let vp = self.v.as_mut_ptr();
+        Ok(slots
+            .iter()
+            .map(|&s| {
+                let layers = (0..self.n_layers)
+                    .map(|l| {
+                        let off = (s * self.n_layers + l) * plane;
+                        // safety: slots are distinct and in range (checked
+                        // above), so every (slot, layer) plane is a disjoint
+                        // subslice of k/v; lifetimes are tied to &mut self
+                        unsafe {
+                            KvLayer {
+                                k: std::slice::from_raw_parts_mut(kp.add(off), plane),
+                                v: std::slice::from_raw_parts_mut(vp.add(off), plane),
+                            }
+                        }
+                    })
+                    .collect();
+                SeqKv { layers, pos: self.lens[s] }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn model() -> ModelSpec {
+        Manifest::builtin().preset("test-tiny").unwrap().model.clone()
+    }
+
+    #[test]
+    fn alloc_release_cycles_slots() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        assert_eq!(pool.n_free(), 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.alloc().is_none(), "pool exhausted");
+        pool.set_len(a, 5);
+        assert_eq!(pool.len(a), 5);
+        pool.release(a);
+        assert_eq!(pool.n_free(), 1);
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a, "freed slot is reused");
+        assert_eq!(pool.len(c), 0, "reused slot starts empty");
+        assert_eq!(pool.peak_in_use(), 2);
+    }
+
+    #[test]
+    fn views_are_disjoint_and_sized() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        pool.set_len(b, 3);
+        let d = m.n_heads * m.d_head;
+        let mut views = pool.views(&[a, b]).unwrap();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].layers.len(), m.n_layers);
+        assert_eq!(views[0].pos, 0);
+        assert_eq!(views[1].pos, 3);
+        assert_eq!(views[0].capacity(d), m.seq_len);
+        // writes through one view land in that slot only
+        views[0].layers[0].k[0] = 7.0;
+        views[1].layers[0].k[0] = 9.0;
+        drop(views);
+        let views = pool.views(&[a]).unwrap();
+        assert_eq!(views[0].layers[0].k[0], 7.0);
+    }
+
+    #[test]
+    fn views_reject_bad_slot_sets() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let a = pool.alloc().unwrap();
+        assert!(pool.views(&[a, a]).is_err(), "duplicate slot");
+        assert!(pool.views(&[9]).is_err(), "out of range");
+        let b = 1 - a;
+        assert!(pool.views(&[b]).is_err(), "unallocated slot");
+    }
+
+    #[test]
+    fn bytes_match_layout() {
+        let m = model();
+        let pool = KvPool::new(&m, 4);
+        let d = m.n_heads * m.d_head;
+        assert_eq!(pool.bytes(), 2 * 4 * m.n_layers * m.seq_len * d * 4);
+    }
+}

@@ -1,0 +1,246 @@
+//! KV-cached serving subsystem: prefill/decode split + continuous
+//! batching.
+//!
+//! Three layers (bottom-up):
+//!
+//! * **Incremental kernels** — [`crate::model::forward::prefill_in`] and
+//!   [`crate::model::forward::decode_step_kv_in`]: one full forward per
+//!   prompt, then one single-token batched step per generated token,
+//!   attending over per-layer K/V caches. Exposed across backends as the
+//!   `prefill` / `decode_step_kv` artifact entries.
+//! * **[`KvPool`]** (`serve::kv`) — slot-pooled cache storage with
+//!   allocation, per-slot lengths and eviction on completion; its
+//!   footprint feeds `MemoryReport::with_kv_cache`.
+//! * **[`Scheduler`] + [`ServeEngine`]** (`serve::scheduler` /
+//!   `serve::engine`) — a request queue and a mixed prefill+decode
+//!   iteration loop that admits new prompts into freed slots mid-decode
+//!   and reports TTFT / per-token latency / throughput.
+//!
+//! The [`KvBackend`] trait is the seam between the engine and a compute
+//! backend. [`crate::runtime::ReferenceBackend`] implements it in-place
+//! over its workspace arena (zero steady-state decode allocations); the
+//! PJRT [`crate::runtime::Engine`] implements it functionally through the
+//! lowered `prefill` / `decode_step_kv` artifacts (cache-in/cache-out,
+//! pending device-resident caches).
+//!
+//! Parity contract: KV-cached greedy decode is **token-for-token
+//! identical** to the retained full-reforward oracle
+//! (`Evaluator::generate_oracle` over the `decode_step` artifact), and
+//! per-row results are independent of batch-mates — so scheduler output
+//! does not depend on arrival interleaving. Both properties are pinned in
+//! `tests/serve_decode.rs`.
+
+pub mod engine;
+pub mod kv;
+pub mod scheduler;
+
+pub use engine::{Response, ServeConfig, ServeEngine, ServeStats};
+pub use kv::KvPool;
+pub use scheduler::{Request, Scheduler};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::forward::{self, SeqKv};
+use crate::runtime::{Backend, Preset, RefBuffer, ReferenceBackend};
+
+/// A compute backend that can run the KV-cached serving path.
+///
+/// `blocks` are the uploaded model weights (same buffers `execute` takes);
+/// cache views come from a host-side [`KvPool`]. Implementations must
+/// keep the greedy parity contract: logits bit-equal to what the
+/// full-reforward `decode_step` entry produces for the same sequence.
+pub trait KvBackend: Backend {
+    /// Run `prompt` once, filling `seq`'s per-layer caches; returns the
+    /// last position's logits `[vocab]`. Advances `seq.pos` to the prompt
+    /// length (the caller syncs its pool).
+    fn kv_prefill(
+        &self,
+        preset: &Preset,
+        blocks: &[Self::Buffer],
+        prompt: &[i32],
+        seq: &mut SeqKv<'_>,
+    ) -> Result<Vec<f32>>;
+
+    /// Advance each sequence by one token (`tokens[i]` lands at
+    /// `seqs[i].pos`); returns next-token logits `[n, vocab]`. Advances
+    /// each `seq.pos` by one.
+    fn kv_decode_step(
+        &self,
+        preset: &Preset,
+        blocks: &[Self::Buffer],
+        tokens: &[i32],
+        seqs: &mut [SeqKv<'_>],
+    ) -> Result<Vec<f32>>;
+}
+
+fn ref_flats<'a>(blocks: &'a [RefBuffer]) -> Result<Vec<&'a [f32]>> {
+    blocks
+        .iter()
+        .map(|b| match b {
+            RefBuffer::F32(v) => Ok(v.as_slice()),
+            RefBuffer::I32(..) => Err(anyhow!("expected f32 weight buffers")),
+        })
+        .collect()
+}
+
+/// In-place fast path: the kernels run directly against the backend's
+/// workspace arena, so steady-state decode steps allocate nothing.
+impl KvBackend for ReferenceBackend {
+    fn kv_prefill(
+        &self,
+        preset: &Preset,
+        blocks: &[RefBuffer],
+        prompt: &[i32],
+        seq: &mut SeqKv<'_>,
+    ) -> Result<Vec<f32>> {
+        let flats = ref_flats(blocks)?;
+        self.with_workspace(|ws| {
+            forward::prefill_in(ws, &preset.model, &preset.blocks, &flats, prompt, seq)
+        })
+    }
+
+    fn kv_decode_step(
+        &self,
+        preset: &Preset,
+        blocks: &[RefBuffer],
+        tokens: &[i32],
+        seqs: &mut [SeqKv<'_>],
+    ) -> Result<Vec<f32>> {
+        let flats = ref_flats(blocks)?;
+        self.with_workspace(|ws| {
+            forward::decode_step_kv_in(ws, &preset.model, &preset.blocks, &flats, tokens, seqs)
+        })
+    }
+}
+
+/// Functional path over the lowered `prefill` / `decode_step_kv`
+/// artifacts: caches round-trip host↔device per call (XLA-style
+/// cache-in/cache-out until device-resident cache buffers land). Compiled
+/// against the in-tree `xla` stub in CI; runs for real only with actual
+/// PJRT bindings.
+#[cfg(feature = "pjrt")]
+impl KvBackend for crate::runtime::Engine {
+    fn kv_prefill(
+        &self,
+        preset: &Preset,
+        blocks: &[Self::Buffer],
+        prompt: &[i32],
+        seq: &mut SeqKv<'_>,
+    ) -> Result<Vec<f32>> {
+        let d = preset.model.n_heads * preset.model.d_head;
+        let t = prompt.len();
+        // mirror the reference impl's contract: an over-long (or empty)
+        // prompt is an error, not a panic in the cache scatter below
+        let cap = seq.capacity(d);
+        if t == 0 || t > cap {
+            return Err(anyhow!("prefill: prompt length {t} outside 1..={cap}"));
+        }
+        let exe = self.load_preset_exe(&preset.model.name, "prefill")?;
+        let tok = self.upload_i32(prompt, &[1, t])?;
+        let mut args: Vec<&Self::Buffer> = blocks.iter().collect();
+        args.push(&tok);
+        let mut out = self.execute(&exe, &args)?;
+        let logits = out.take_vec(0)?;
+        let k = out.take_vec(1)?;
+        let v = out.take_vec(2)?;
+        for (l, layer) in seq.layers.iter_mut().enumerate() {
+            layer.k[..t * d].copy_from_slice(&k[l * t * d..(l + 1) * t * d]);
+            layer.v[..t * d].copy_from_slice(&v[l * t * d..(l + 1) * t * d]);
+        }
+        seq.pos = t;
+        Ok(logits)
+    }
+
+    fn kv_decode_step(
+        &self,
+        preset: &Preset,
+        blocks: &[Self::Buffer],
+        tokens: &[i32],
+        seqs: &mut [SeqKv<'_>],
+    ) -> Result<Vec<f32>> {
+        let exe = self.load_preset_exe(&preset.model.name, "decode_step_kv")?;
+        let mut all = Vec::with_capacity(tokens.len() * preset.model.vocab);
+        for (&tok, seq) in tokens.iter().zip(seqs.iter_mut()) {
+            let k_flat: Vec<f32> =
+                seq.layers.iter().flat_map(|l| l.k.iter().copied()).collect();
+            let v_flat: Vec<f32> =
+                seq.layers.iter().flat_map(|l| l.v.iter().copied()).collect();
+            let k_buf = self.upload_f32(&k_flat)?;
+            let v_buf = self.upload_f32(&v_flat)?;
+            let tok_buf = self.upload_i32(&[tok], &[1])?;
+            let pos_buf = self.upload_i32(&[seq.pos as i32], &[1])?;
+            let mut args: Vec<&Self::Buffer> = blocks.iter().collect();
+            args.extend([&k_buf, &v_buf, &tok_buf, &pos_buf]);
+            let mut out = self.execute(&exe, &args)?;
+            all.extend(out.take_vec(0)?);
+            let k_new = out.take_vec(1)?;
+            let v_new = out.take_vec(2)?;
+            let plane = k_new.len() / seq.layers.len().max(1);
+            for (l, layer) in seq.layers.iter_mut().enumerate() {
+                layer.k.copy_from_slice(&k_new[l * plane..(l + 1) * plane]);
+                layer.v.copy_from_slice(&v_new[l * plane..(l + 1) * plane]);
+            }
+            seq.pos += 1;
+        }
+        Ok(all)
+    }
+}
+
+/// Decide the fate of a freshly-sampled greedy token — the stop
+/// conditions of the full-reforward oracle loop, written once and shared
+/// by the serving engine and `Evaluator::generate` so cached decode can
+/// never drift from `generate_oracle`:
+///
+/// * a row that already emitted `max_new` tokens samples nothing more;
+/// * a NaN-poisoned row (`next == None`) or an EOS stops without emitting;
+/// * a full context (`cached >= capacity`) stops without emitting;
+/// * otherwise the token is emitted, and the row finishes when it was the
+///   `max_new`-th token or the context has no room to feed it back.
+///
+/// Returns `(token to emit, sequence finished)`; `cached` is the number
+/// of tokens fed to the model so far (prompt + emitted predecessors).
+pub fn greedy_step(
+    next: Option<usize>,
+    eos: i32,
+    cached: usize,
+    capacity: usize,
+    n_generated: usize,
+    max_new: usize,
+) -> (Option<i32>, bool) {
+    if n_generated >= max_new {
+        return (None, true);
+    }
+    let next = match next {
+        None => return (None, true),
+        Some(n) => n as i32,
+    };
+    if next == eos || cached >= capacity {
+        return (None, true);
+    }
+    let finished = n_generated + 1 >= max_new || cached + 1 >= capacity;
+    (Some(next), finished)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_step_mirrors_oracle_stop_conditions() {
+        let eos = 2;
+        // plain emission, room to continue
+        assert_eq!(greedy_step(Some(7), eos, 4, 10, 0, 5), (Some(7), false));
+        // EOS never emitted
+        assert_eq!(greedy_step(Some(2), eos, 4, 10, 0, 5), (None, true));
+        // NaN-poisoned row (no finite argmax) stops
+        assert_eq!(greedy_step(None, eos, 4, 10, 0, 5), (None, true));
+        // full context: nothing can be placed
+        assert_eq!(greedy_step(Some(7), eos, 10, 10, 0, 5), (None, true));
+        // last placeable token is still emitted, then the row finishes
+        assert_eq!(greedy_step(Some(7), eos, 9, 10, 0, 5), (Some(7), true));
+        // max_new-th token is emitted, then the row finishes
+        assert_eq!(greedy_step(Some(7), eos, 4, 10, 4, 5), (Some(7), true));
+        // budget already spent (max_new == 0) samples nothing
+        assert_eq!(greedy_step(Some(7), eos, 4, 10, 0, 0), (None, true));
+    }
+}

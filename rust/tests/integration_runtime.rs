@@ -163,7 +163,15 @@ fn manifest_covers_all_presets_and_entries() {
     let engine = backend();
     for name in ["test-tiny", "qwen-sim", "llama-sim", "phi-sim", "e2e"] {
         let p = engine.manifest().preset(name).unwrap();
-        for entry in ["train_step", "train_step_lora", "eval_loss", "decode_step", "lora_merge"] {
+        for entry in [
+            "train_step",
+            "train_step_lora",
+            "eval_loss",
+            "decode_step",
+            "prefill",
+            "decode_step_kv",
+            "lora_merge",
+        ] {
             p.artifact(entry).unwrap_or_else(|_| panic!("{name}/{entry} missing"));
             engine
                 .load_preset_exe(name, entry)
@@ -171,4 +179,70 @@ fn manifest_covers_all_presets_and_entries() {
         }
     }
     assert_eq!(engine.platform(), "reference-cpu");
+}
+
+#[test]
+fn prefill_and_decode_kv_entries_match_decode_step() {
+    // the stateless functional forms of the serving pair, through the
+    // same `execute` interface a PJRT lowering would use: prefill a
+    // prompt, take one KV decode step, and hold both logits rows against
+    // the full-reforward `decode_step` oracle
+    let engine = backend();
+    let preset = engine.manifest().preset("test-tiny").unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 6);
+    let (b, s, v) = (preset.model.batch, preset.model.seq_len, preset.model.vocab);
+    let blocks: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+
+    let t = 7usize;
+    let seq_tokens: Vec<i32> = (0..t + 1).map(|i| 4 + ((i * 5) % 40) as i32).collect();
+
+    // oracle: full [b, s] reforward, rows beyond the sequence are pad-ish
+    let mut full = seq_tokens.clone();
+    full.resize(b * s, 4);
+    let exe_decode = engine.load_preset_exe("test-tiny", "decode_step").unwrap();
+    let tok = engine.upload_i32(&full, &[b, s]).unwrap();
+    let mut args: Vec<_> = blocks.iter().collect();
+    args.push(&tok);
+    let oracle = engine.execute(&exe_decode, &args).unwrap().take_vec(0).unwrap();
+
+    // prefill entry over the prompt prefix
+    let exe_prefill = engine.load_preset_exe("test-tiny", "prefill").unwrap();
+    let tok = engine.upload_i32(&seq_tokens[..t], &[1, t]).unwrap();
+    let mut args: Vec<_> = blocks.iter().collect();
+    args.push(&tok);
+    let mut out = engine.execute(&exe_prefill, &args).unwrap();
+    let logits = out.take_vec(0).unwrap();
+    let k_cache = out.take_vec(1).unwrap();
+    let v_cache = out.take_vec(2).unwrap();
+    assert_eq!(logits.len(), v);
+    assert_eq!(k_cache.len(), preset.model.n_layers * t * preset.model.d_model);
+    let want = &oracle[(t - 1) * v..t * v];
+    let diff = logits.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(diff < 1e-6, "prefill entry diverges from decode_step: {diff}");
+
+    // decode_step_kv entry: feed the next token at position t. The
+    // functional cache has capacity t, so grow it by one row per layer
+    // first (the slot-pooled path pre-allocates instead).
+    let plane = t * preset.model.d_model;
+    let grow = |flat: &[f32]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(flat.len() + preset.model.n_layers * preset.model.d_model);
+        for l in 0..preset.model.n_layers {
+            out.extend_from_slice(&flat[l * plane..(l + 1) * plane]);
+            out.resize(out.len() + preset.model.d_model, 0.0);
+        }
+        out
+    };
+    let exe_kv = engine.load_preset_exe("test-tiny", "decode_step_kv").unwrap();
+    let k_buf = engine.upload_f32(&grow(&k_cache)).unwrap();
+    let v_buf = engine.upload_f32(&grow(&v_cache)).unwrap();
+    let tok = engine.upload_i32(&seq_tokens[t..t + 1], &[1]).unwrap();
+    let pos = engine.upload_i32(&[t as i32], &[1]).unwrap();
+    let mut args: Vec<_> = blocks.iter().collect();
+    args.extend([&k_buf, &v_buf, &tok, &pos]);
+    let mut out = engine.execute(&exe_kv, &args).unwrap();
+    let logits = out.take_vec(0).unwrap();
+    assert_eq!(logits.len(), v);
+    let want = &oracle[t * v..(t + 1) * v];
+    let diff = logits.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(diff < 1e-6, "decode_step_kv entry diverges from decode_step: {diff}");
 }

@@ -1,0 +1,263 @@
+//! Serving-path contracts:
+//!
+//! * **Decode parity** — KV-cached greedy decode is token-for-token
+//!   identical to the retained full-reforward oracle
+//!   (`Evaluator::generate_oracle`) on the `test-tiny` golden preset;
+//! * **Scheduler properties** — random arrivals and slot churn never mix
+//!   rows or drop requests, and each request's output is independent of
+//!   arrival interleaving;
+//! * **Steady-state allocations** — repeated decode steps through the
+//!   backend's warm workspace arena perform zero slab allocations.
+
+use adagradselect::data::Problem;
+use adagradselect::eval::Evaluator;
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, RefBuffer, ReferenceBackend};
+use adagradselect::serve::{KvBackend, KvPool, ServeConfig, ServeEngine};
+use adagradselect::util::rng::Rng;
+
+const PRESET: &str = "test-tiny";
+
+fn engine() -> ReferenceBackend {
+    ReferenceBackend::new()
+}
+
+/// Deterministic prompt of `len` in-vocab tokens.
+fn prompt(len: usize, salt: u64) -> Vec<i32> {
+    (0..len).map(|i| 4 + ((i as u64 * 7 + salt * 13) % 50) as i32).collect()
+}
+
+#[test]
+fn kv_generate_matches_oracle_token_for_token() {
+    let engine = engine();
+    let state = ModelState::init(
+        &engine.manifest().preset(PRESET).unwrap().blocks,
+        3,
+    );
+    let ev = Evaluator::new(&engine, PRESET, 16).unwrap();
+    let device = ev.upload_state(&state).unwrap();
+    let s = engine.manifest().preset(PRESET).unwrap().model.seq_len;
+
+    // varied lengths, including a full-context prompt (nothing to
+    // generate) and an over-long one (skipped by both paths)
+    let lengths = [1usize, 3, 9, 30, s - 1, s, s + 8];
+    for chunk in lengths.chunks(4) {
+        // the oracle runs one preset batch at a time
+        let prompts: Vec<Vec<i32>> =
+            chunk.iter().enumerate().map(|(i, &l)| prompt(l, i as u64)).collect();
+        let cached = ev.generate(&device, &prompts).unwrap();
+        let oracle = ev.generate_oracle(&device, &prompts).unwrap();
+        assert_eq!(
+            cached, oracle,
+            "KV-cached decode diverged from the reforward oracle for lengths {chunk:?}"
+        );
+    }
+}
+
+/// Per-request oracle outputs keyed by prompt, for the engine tests.
+fn oracle_outputs(
+    ev: &Evaluator<'_, ReferenceBackend>,
+    device: &[RefBuffer],
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<i32>> {
+    prompts
+        .iter()
+        .map(|p| ev.generate_oracle(device, std::slice::from_ref(p)).unwrap().remove(0))
+        .collect()
+}
+
+#[test]
+fn serve_engine_never_mixes_rows_and_is_interleaving_independent() {
+    let engine = engine();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 5);
+    let max_new = 8usize;
+    let ev = Evaluator::new(&engine, PRESET, max_new).unwrap();
+    let device = ev.upload_state(&state).unwrap();
+
+    // 12 requests over 3 slots forces mid-decode admission (slot churn)
+    let mut rng = Rng::seed_from_u64(41);
+    let prompts: Vec<Vec<i32>> =
+        (0..12).map(|i| prompt(1 + rng.gen_range(0, preset.model.seq_len - 1), i)).collect();
+    let want = oracle_outputs(&ev, &device, &prompts);
+
+    // interleaving A: submission order; interleaving B: reversed order
+    // (same arrival time ⇒ reversed admission, different batch-mates and
+    // slot assignments throughout)
+    for reversed in [false, true] {
+        let mut srv = ServeEngine::new(
+            &engine,
+            PRESET,
+            &state,
+            ServeConfig { slots: 3, max_new_tokens: max_new },
+        )
+        .unwrap();
+        let order: Vec<usize> =
+            if reversed { (0..12).rev().collect() } else { (0..12).collect() };
+        // id -> prompt index
+        let mut by_id = vec![usize::MAX; 12];
+        for &pi in &order {
+            let id = srv.submit(prompts[pi].clone(), 0, 0.0);
+            by_id[id as usize] = pi;
+        }
+        let responses = srv.run_until_idle().unwrap();
+        assert_eq!(responses.len(), 12, "every request completes exactly once");
+        let mut seen = vec![false; 12];
+        for r in &responses {
+            let pi = by_id[r.id as usize];
+            assert!(!seen[pi], "request {pi} completed twice");
+            seen[pi] = true;
+            assert!(!r.truncated);
+            assert_eq!(
+                r.tokens, want[pi],
+                "request {pi} (reversed={reversed}) diverged from its isolated oracle"
+            );
+            assert!(r.finish_s >= r.first_token_s && r.first_token_s >= r.arrival_s);
+        }
+        assert!(seen.iter().all(|&x| x), "no request may be dropped");
+        let stats = srv.stats();
+        assert_eq!(stats.n_prefills, 12);
+        assert!(stats.peak_active <= 3, "never more sequences than slots");
+        assert!(stats.kv_bytes > 0);
+    }
+}
+
+#[test]
+fn serve_engine_respects_staggered_arrivals() {
+    let engine = engine();
+    let state =
+        ModelState::init(&engine.manifest().preset(PRESET).unwrap().blocks, 7);
+    let mut srv = ServeEngine::new(
+        &engine,
+        PRESET,
+        &state,
+        ServeConfig { slots: 2, max_new_tokens: 4 },
+    )
+    .unwrap();
+    // one immediate, one far-future arrival: the idle engine must
+    // fast-forward its clock rather than dropping or reordering
+    srv.submit(prompt(5, 0), 0, 0.0);
+    srv.submit(prompt(5, 1), 0, 3600.0);
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 2);
+    assert!(srv.is_idle());
+    assert!(srv.now_s() >= 3600.0, "clock fast-forwarded across the idle gap");
+    let late = responses.iter().find(|r| r.arrival_s == 3600.0).unwrap();
+    assert!(late.ttft_s() < 3600.0, "ttft measured from arrival, not engine start");
+}
+
+#[test]
+fn truncated_and_empty_prompts_are_flagged_not_scored() {
+    let engine = engine();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 9);
+    let mut srv = ServeEngine::new(
+        &engine,
+        PRESET,
+        &state,
+        ServeConfig { slots: 2, max_new_tokens: 4 },
+    )
+    .unwrap();
+    let long = srv.submit(prompt(preset.model.seq_len + 40, 0), 0, 0.0);
+    let empty = srv.submit(Vec::new(), 0, 0.0);
+    let ok = srv.submit(prompt(6, 1), 0, 0.0);
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 3);
+    for r in &responses {
+        if r.id == long || r.id == empty {
+            assert!(r.truncated, "over-long/empty prompts must be flagged");
+            assert!(r.tokens.is_empty());
+        } else {
+            assert_eq!(r.id, ok);
+            assert!(!r.truncated);
+        }
+    }
+
+    // ...and the evaluator surfaces the count instead of silently scoring
+    let ev = Evaluator::new(&engine, PRESET, 4).unwrap();
+    let problems = vec![
+        Problem {
+            question: "x".repeat(4 * preset.model.seq_len),
+            reasoning: String::new(),
+            answer: 1,
+        },
+        Problem { question: "1+1".into(), reasoning: String::new(), answer: 2 },
+    ];
+    let res = ev.accuracy(&state, &problems).unwrap();
+    assert_eq!(res.n, 2);
+    assert_eq!(res.n_truncated, 1, "the over-long prompt must be counted");
+    assert!(res.accuracy <= 0.5, "a truncated prompt can never score correct");
+}
+
+#[test]
+fn rejected_prompts_do_not_consume_admission_slots() {
+    // a burst of over-length prompts ahead of a valid one must not delay
+    // its admission: rejections never occupy a slot, so the same step()
+    // keeps admitting until the free slots are actually spent
+    let engine = engine();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 11);
+    let mut srv = ServeEngine::new(
+        &engine,
+        PRESET,
+        &state,
+        ServeConfig { slots: 1, max_new_tokens: 4 },
+    )
+    .unwrap();
+    srv.submit(prompt(preset.model.seq_len + 5, 0), 0, 0.0);
+    srv.submit(prompt(preset.model.seq_len + 6, 1), 0, 0.0);
+    let good = srv.submit(prompt(4, 2), 0, 0.0);
+    let done = srv.step().unwrap();
+    let rejected = done.iter().filter(|r| r.truncated).count();
+    assert_eq!(rejected, 2, "both bad prompts rejected in the first step");
+    let good_started = srv.n_active() == 1
+        || done.iter().any(|r| r.id == good && !r.truncated);
+    assert!(good_started, "the valid prompt must be admitted in the same step");
+}
+
+#[test]
+fn steady_state_decode_performs_zero_slab_allocations() {
+    let engine = engine();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 1);
+    let blocks: Vec<RefBuffer> =
+        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+
+    let n = 4usize;
+    let mut pool = KvPool::new(&preset.model, n);
+    let slots: Vec<usize> = (0..n).map(|_| pool.alloc().unwrap()).collect();
+    let p = prompt(8, 2);
+    for &s in &slots {
+        let mut views = pool.views(&[s]).unwrap();
+        engine.kv_prefill(&preset, &blocks, &p, &mut views[0]).unwrap();
+        pool.set_len(s, p.len());
+    }
+    let feed = |pool: &mut KvPool, tok: i32| {
+        let toks = vec![tok; n];
+        let mut views = pool.views(&slots).unwrap();
+        engine.kv_decode_step(&preset, &blocks, &toks, &mut views).unwrap();
+        drop(views);
+        for &s in &slots {
+            pool.advance(s);
+        }
+    };
+    feed(&mut pool, 5); // warm: first decode step may grow the arena
+    let warm = engine.workspace_stats();
+    for step in 0..20 {
+        feed(&mut pool, 6 + (step % 40));
+    }
+    let steady = engine.workspace_stats();
+    assert_eq!(
+        steady.grows, warm.grows,
+        "decode steps after warm-up must not allocate arena slabs (even as positions grow)"
+    );
+    assert!(steady.takes > warm.takes, "the steps did run through the arena");
+
+    // shrinking the active batch must also stay allocation-free
+    let toks = vec![7i32; 2];
+    let two = [slots[0], slots[2]];
+    let mut views = pool.views(&two).unwrap();
+    engine.kv_decode_step(&preset, &blocks, &toks, &mut views).unwrap();
+    drop(views);
+    assert_eq!(engine.workspace_stats().grows, steady.grows);
+}
