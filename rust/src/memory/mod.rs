@@ -17,6 +17,29 @@
 //! [`MemoryReport::with_observed_activations`] with
 //! `ReferenceBackend::workspace_stats()` to replace the modeled estimate
 //! with the measured number in selective-vs-full comparisons.
+//!
+//! # Explore/exploit compute asymmetry
+//!
+//! Selective training has **two** step shapes, and their footprints
+//! differ:
+//!
+//! * **Explore** (ε-greedy epoch-1 steps, top-k, UCB): the policy ranks
+//!   on this step's gradient norms, so the backward computes and stores
+//!   everything — full activation caches, all gradient flats. Footprint
+//!   == full fine-tuning's.
+//! * **Exploit** (Dirichlet steps, random/round-robin/fixed): the blocks
+//!   are known *before* the backward, so the masked kernel
+//!   (`model::forward::train_step_masked_in`) caches activations only
+//!   from the shallowest selected block upward and materializes only the
+//!   selected gradient flats. [`masked_activation_bytes`] models that
+//!   reduced footprint; the measured counterpart is the arena high-water
+//!   mark across `ReferenceBackend::reset_workspace_high_water()` —
+//!   `benches/train_step.rs` records both full- and masked-step
+//!   high-water bytes in `BENCH_train_step.json`.
+//!
+//! After early epoch 1 AdaGradSelect is almost purely exploit steps, so
+//! the *sustained* activation/gradient footprint is the masked one; the
+//! full footprint recurs only on the rare explore step.
 
 mod paper_scale;
 
@@ -106,6 +129,25 @@ pub fn activation_bytes(preset: &Preset, bytes_per_param: usize) -> usize {
     let per_layer = m.batch * m.seq_len * (4 * m.d_model + 2 * m.d_ff);
     let logits = m.batch * m.seq_len * m.vocab;
     (per_layer * m.n_layers + logits) * bytes_per_param
+}
+
+/// Activation bytes estimate for one **masked** (exploit) step given the
+/// shallowest selected block index (block 0 = embed, `1+l` = layer `l`,
+/// last = head). The masked kernel caches activations only for layers the
+/// d-stream reaches (`l >= lowest_block - 1`); layers below run
+/// forward-only with transient scratch (not modeled, same as the full
+/// estimate's omissions). `lowest_block == 0` degenerates to
+/// [`activation_bytes`].
+pub fn masked_activation_bytes(
+    preset: &Preset,
+    lowest_block: usize,
+    bytes_per_param: usize,
+) -> usize {
+    let m = &preset.model;
+    let cache_from = lowest_block.saturating_sub(1).min(m.n_layers);
+    let per_layer = m.batch * m.seq_len * (4 * m.d_model + 2 * m.d_ff);
+    let logits = m.batch * m.seq_len * m.vocab;
+    (per_layer * (m.n_layers - cache_from) + logits) * bytes_per_param
 }
 
 fn lora_params(preset: &Preset, double_rank: bool) -> usize {
@@ -281,6 +323,28 @@ mod tests {
         assert!(
             obs / est < 32.0 && est / obs < 32.0,
             "estimate {est:.0}B vs observed {obs:.0}B diverge wildly"
+        );
+    }
+
+    #[test]
+    fn masked_activations_shrink_with_shallowest_selected_block() {
+        let p = preset();
+        let full = activation_bytes(&p, 4);
+        // embed selected => the d-stream reaches the bottom: no savings
+        assert_eq!(masked_activation_bytes(&p, 0, 4), full);
+        // monotone: the higher the shallowest selected block, the fewer
+        // layers cache activations
+        let mut prev = full;
+        for b in 1..p.n_blocks() {
+            let cur = masked_activation_bytes(&p, b, 4);
+            assert!(cur <= prev, "block {b}: {cur} > {prev}");
+            prev = cur;
+        }
+        // head-only selection keeps just the logits term
+        let m = &p.model;
+        assert_eq!(
+            masked_activation_bytes(&p, p.n_blocks() - 1, 4),
+            m.batch * m.seq_len * m.vocab * 4
         );
     }
 

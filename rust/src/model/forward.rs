@@ -8,6 +8,14 @@
 //! (`W + 2·A·B` on every projection) are supported on the same code path
 //! with the base weights frozen, mirroring `make_lora_train_step`.
 //!
+//! Selective fine-tuning runs through [`train_step_masked_in`], the
+//! kernel that makes block selection actually gate compute: unselected
+//! blocks get no weight-gradient GEMMs, the d-stream stops at the
+//! shallowest selected block (layers below it run forward-only and cache
+//! nothing), and only the selected blocks' gradient flats are returned.
+//! Selected gradients are bit-identical to the full step's — pinned by
+//! the property suite in `tests/masked_backward.rs`.
+//!
 //! Besides the training entrypoints, this module holds the **incremental
 //! decoding** kernels behind the serving subsystem (`crate::serve`):
 //! [`prefill_in`] runs a prompt once and fills per-layer K/V caches
@@ -1024,6 +1032,12 @@ struct ForwardOut {
     caches: Vec<LayerCache>,
 }
 
+/// `cache_from` is the first layer index whose activations are kept for
+/// the backward pass (`spec.n_layers` ⇒ inference, nothing cached; `0` ⇒
+/// a full train step). A masked train step passes the shallowest layer
+/// the d-stream will reach, so unselected layers below it never store
+/// activations — this is where the masked step's activation-memory win
+/// comes from (visible in the workspace high-water mark).
 #[allow(clippy::too_many_arguments)]
 fn forward(
     ws: &mut Workspace,
@@ -1033,20 +1047,20 @@ fn forward(
     lora: Option<(&[BlockSpec], &[&[f32]])>,
     tokens: &[i32],
     rope: &RopeTables,
-    want_cache: bool,
+    cache_from: usize,
 ) -> Result<ForwardOut> {
     check_shapes(spec, blocks, flats, tokens)?;
     let dims = Dims::from_spec(spec);
     let emb = tensor(flats[0], &blocks[0], "tok_emb")?;
     let mut h = embed_fwd(ws, emb, tokens, dims.d, dims.vocab)?;
-    let mut caches = Vec::with_capacity(if want_cache { spec.n_layers } else { 0 });
+    let mut caches = Vec::with_capacity(spec.n_layers.saturating_sub(cache_from));
     for l in 0..spec.n_layers {
         let p = layer_params(flats[1 + l], &blocks[1 + l])?;
         let lp = match lora {
             Some((lspecs, lflats)) => Some(lora_params(lflats[l], &lspecs[l])?),
             None => None,
         };
-        let (h_out, cache) = layer_fwd(ws, h, &p, lp.as_ref(), &dims, rope, want_cache);
+        let (h_out, cache) = layer_fwd(ws, h, &p, lp.as_ref(), &dims, rope, l >= cache_from);
         h = h_out;
         if let Some(c) = cache {
             caches.push(c);
@@ -1085,7 +1099,7 @@ pub fn train_step(
     pad: i32,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     let mut ws = Workspace::new();
-    run_train_step(&mut ws, spec, blocks, flats, None, tokens, targets, pad)
+    run_train_step(&mut ws, spec, blocks, flats, None, tokens, targets, pad, None)
 }
 
 /// [`train_step`] against a caller-held [`Workspace`]: after the first
@@ -1100,7 +1114,53 @@ pub fn train_step_in(
     targets: &[i32],
     pad: i32,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
-    run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad)
+    run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, None)
+}
+
+/// Masked train step — the compute-gating kernel behind selective
+/// fine-tuning (the `train_step_masked` artifact). `mask[b]` says whether
+/// block `b` (embed | layer0.. | head) is selected this step. Relative to
+/// the full step it
+///
+/// 1. skips the weight-gradient GEMMs (`dW = xᵀ·dy`) of every unselected
+///    block,
+/// 2. stops d-stream propagation entirely below the shallowest selected
+///    block (layers under it run forward-only, storing no activations),
+/// 3. returns gradient flats **only for the selected blocks**, in
+///    ascending block order — unselected gradients are never materialized,
+///    so they cannot cross the backend boundary.
+///
+/// Selected blocks' gradients are bit-identical to the full step's: the
+/// d-stream arithmetic above the cutoff is unchanged, and the skipped
+/// `dW` products never feed back into it.
+pub fn train_step_masked(
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+    mask: &[bool],
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let mut ws = Workspace::new();
+    run_train_step(&mut ws, spec, blocks, flats, None, tokens, targets, pad, Some(mask))
+}
+
+/// [`train_step_masked`] against a caller-held [`Workspace`]. Steady
+/// state holds per mask shape: repeating a mask (or alternating a warm
+/// set of masks) performs zero slab allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_masked_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+    mask: &[bool],
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, Some(mask))
 }
 
 /// LoRA train step: base blocks frozen, gradients only for the adapter
@@ -1159,9 +1219,15 @@ pub fn train_step_lora_in(
         tokens,
         targets,
         pad,
+        None,
     )
 }
 
+/// Core fused train step. With `mask: Some(..)` the backward pass is
+/// gated on the selected blocks (see [`train_step_masked`]); with `None`
+/// every block's gradient is produced. The returned vector holds exactly
+/// the requested gradient flats in ascending block order (all blocks for
+/// the full/LoRA paths, the selected subset for the masked path).
 #[allow(clippy::too_many_arguments)]
 fn run_train_step(
     ws: &mut Workspace,
@@ -1172,6 +1238,7 @@ fn run_train_step(
     tokens: &[i32],
     targets: &[i32],
     pad: i32,
+    mask: Option<&[bool]>,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     let dims = Dims::from_spec(spec);
     let m = dims.rows();
@@ -1182,23 +1249,54 @@ fn run_train_step(
     check_shapes(spec, blocks, flats, tokens)?;
     check_tokens(tokens, dims.vocab)?;
     check_targets(targets, dims.vocab, pad)?;
+    if let Some(mask) = mask {
+        if lora.is_some() {
+            return Err(anyhow!("masked train step does not apply to LoRA adapters"));
+        }
+        if mask.len() != blocks.len() {
+            return Err(anyhow!(
+                "mask has {} entries for {} blocks",
+                mask.len(),
+                blocks.len()
+            ));
+        }
+        if !mask.iter().any(|&b| b) {
+            return Err(anyhow!("masked train step needs at least one selected block"));
+        }
+    }
+    let want_base = lora.is_none();
+    // shallowest block whose weight gradients are wanted: the d-stream
+    // never propagates below it, and layers under it store no activations
+    let lowest = match mask {
+        Some(mask) => mask.iter().position(|&b| b).expect("mask has a selected block"),
+        None => 0,
+    };
+    let block_wanted = |b: usize| mask.map(|m| m[b]).unwrap_or(true);
+    let cache_from = lowest.saturating_sub(1);
+
     let rope = rope_tables(ws, dims.s, dims.d_head, spec.rope_theta);
     let ForwardOut { h, mut caches } =
-        forward(ws, spec, blocks, flats, lora, tokens, &rope, true)?;
+        forward(ws, spec, blocks, flats, lora, tokens, &rope, cache_from)?;
     let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
     let (loss, dlogits) = masked_ce(ws, &logits, targets, m, dims.vocab, pad, true)?;
     let dlogits = dlogits.expect("want_grad");
     ws.give(logits);
 
-    let want_base = lora.is_none();
     // The gradient vectors are the step's outputs — fresh allocations that
     // the caller keeps (the workspace only recycles internal buffers).
-    let mut grads: Vec<Vec<f32>> = match lora {
-        None => blocks.iter().map(|b| vec![0.0f32; b.numel]).collect(),
-        Some((lb, _)) => lb.iter().map(|b| vec![0.0f32; b.numel]).collect(),
+    // Unrequested slots stay None: those buffers are never materialized.
+    let mut grads: Vec<Option<Vec<f32>>> = match lora {
+        None => blocks
+            .iter()
+            .enumerate()
+            .map(|(b, bs)| block_wanted(b).then(|| vec![0.0f32; bs.numel]))
+            .collect(),
+        Some((lb, _)) => lb.iter().map(|b| Some(vec![0.0f32; b.numel])).collect(),
     };
 
     // ---- head ----
+    let head_idx = blocks.len() - 1;
+    let want_head = want_base && block_wanted(head_idx);
     let head_spec = blocks.last().expect("blocks nonempty");
     let head_flat = flats[flats.len() - 1];
     let ln_f = tensor(head_flat, head_spec, "ln_f")?;
@@ -1214,14 +1312,14 @@ fn run_train_step(
         &dxf,
         m,
         dims.d,
-        if want_base { Some(&mut ln_buf[..]) } else { None },
+        if want_head { Some(&mut ln_buf[..]) } else { None },
     );
-    if want_base {
+    if want_head {
         let mut d_w_out = ws.take(dims.d * dims.vocab);
         matmul_ta_into(ws, &mut d_w_out, &xf, &dlogits, m, dims.d, dims.vocab, 1.0);
-        let last = grads.len() - 1;
-        write_tensor(&mut grads[last], head_spec, "w_out", &d_w_out)?;
-        write_tensor(&mut grads[last], head_spec, "ln_f", &ln_buf)?;
+        let hg = grads[head_idx].as_mut().expect("head grads requested");
+        write_tensor(hg, head_spec, "w_out", &d_w_out)?;
+        write_tensor(hg, head_spec, "ln_f", &ln_buf)?;
         ws.give(d_w_out);
     }
     ws.give(ln_buf);
@@ -1231,29 +1329,40 @@ fn run_train_step(
     ws.give(invf);
     ws.give(h);
 
-    // ---- layers, top to bottom ----
-    for l in (0..spec.n_layers).rev() {
+    // ---- layers, top to bottom; the d-stream stops at layer
+    // ---- `cache_from` (the layer owning the shallowest selected block,
+    // ---- or layer 0 on an unmasked step) — layers below it never ran
+    // ---- a cacheable forward and never see a backward
+    for l in (cache_from..spec.n_layers).rev() {
         let p = layer_params(flats[1 + l], &blocks[1 + l])?;
         let lp = match lora {
             Some((lspecs, lflats)) => Some(lora_params(lflats[l], &lspecs[l])?),
             None => None,
         };
-        let cache = caches.pop().expect("one cache per layer");
+        let cache = caches.pop().expect("one cache per backward layer");
         // borrow the right grads entry mutably for this layer
         let mut lg = if want_base {
-            LayerGrads { base: Some((grads[1 + l].as_mut_slice(), &blocks[1 + l])), lora: None }
+            LayerGrads {
+                base: grads[1 + l].as_mut().map(|g| (g.as_mut_slice(), &blocks[1 + l])),
+                lora: None,
+            }
         } else {
             let (lspecs, _) = lora.expect("lora present");
-            LayerGrads { base: None, lora: Some((grads[l].as_mut_slice(), &lspecs[l])) }
+            LayerGrads {
+                base: None,
+                lora: Some((grads[l].as_mut().expect("lora grads").as_mut_slice(), &lspecs[l])),
+            }
         };
         dh = layer_bwd(ws, dh, &cache, &p, lp.as_ref(), &dims, &rope, &mut lg)?;
         cache.recycle(ws);
     }
+    debug_assert!(caches.is_empty(), "every cached layer must be consumed");
 
     // ---- embedding ----
-    if want_base {
+    if want_base && block_wanted(0) {
         let emb_spec = tensor_spec(&blocks[0], "tok_emb")?;
-        let demb = &mut grads[0][emb_spec.offset..emb_spec.offset + dims.vocab * dims.d];
+        let demb_full = grads[0].as_mut().expect("embed grads requested");
+        let demb = &mut demb_full[emb_spec.offset..emb_spec.offset + dims.vocab * dims.d];
         for (r, &t) in tokens.iter().enumerate() {
             let dst = &mut demb[t as usize * dims.d..(t as usize + 1) * dims.d];
             let src = &dh[r * dims.d..(r + 1) * dims.d];
@@ -1264,7 +1373,7 @@ fn run_train_step(
     }
     ws.give(dh);
     rope.recycle(ws);
-    Ok((loss, grads))
+    Ok((loss, grads.into_iter().flatten().collect()))
 }
 
 /// Loss-only evaluation (the `eval_loss` artifact).
@@ -1299,7 +1408,7 @@ pub fn eval_loss_in(
     check_targets(targets, dims.vocab, pad)?;
     let rope = rope_tables(ws, dims.s, dims.d_head, spec.rope_theta);
     let ForwardOut { h, caches } =
-        forward(ws, spec, blocks, flats, None, tokens, &rope, false)?;
+        forward(ws, spec, blocks, flats, None, tokens, &rope, spec.n_layers)?;
     debug_assert!(caches.is_empty());
     let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
     let (loss, dlogits) = masked_ce(ws, &logits, targets, dims.rows(), dims.vocab, pad, false)?;
@@ -1336,7 +1445,8 @@ pub fn decode_logits_in(
     check_shapes(spec, blocks, flats, tokens)?;
     check_tokens(tokens, dims.vocab)?;
     let rope = rope_tables(ws, dims.s, dims.d_head, spec.rope_theta);
-    let ForwardOut { h, .. } = forward(ws, spec, blocks, flats, None, tokens, &rope, false)?;
+    let ForwardOut { h, .. } =
+        forward(ws, spec, blocks, flats, None, tokens, &rope, spec.n_layers)?;
     let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
     ws.give(xf);
     ws.give(invf);
@@ -1771,6 +1881,89 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn masked_grads_bit_match_full_backward() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 7);
+        let (tok, tgt) = tokens_for(&spec, 1);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let (loss_full, grads_full) = train_step(&spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+
+        let n = blocks.len();
+        let masks: Vec<Vec<bool>> = vec![
+            vec![true; n],                                    // all = full
+            (0..n).map(|b| b == 0).collect(),                 // embed only (deepest)
+            (0..n).map(|b| b == n - 1).collect(),             // head only (shallowest)
+            (0..n).map(|b| b == 1).collect(),                 // single layer
+            (0..n).map(|b| b == 1 || b == n - 1).collect(),   // layer + head
+        ];
+        for mask in &masks {
+            let (loss, grads) =
+                train_step_masked(&spec, &blocks, &refs, &tok, &tgt, 0, mask).unwrap();
+            assert_eq!(loss.to_bits(), loss_full.to_bits(), "mask {mask:?}");
+            let selected: Vec<usize> =
+                (0..n).filter(|&b| mask[b]).collect();
+            assert_eq!(grads.len(), selected.len(), "mask {mask:?}");
+            for (g, &b) in grads.iter().zip(&selected) {
+                assert_eq!(g, &grads_full[b], "mask {mask:?} block {b} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_step_grad_matches_finite_difference() {
+        // independent of the full-backward oracle: probe the masked
+        // step's gradients directly against central differences
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 11);
+        let (tok, tgt) = tokens_for(&spec, 1);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let n = blocks.len();
+        // select layer1 + head: the d-stream must stop below block 2
+        let mask: Vec<bool> = (0..n).map(|b| b == 2 || b == n - 1).collect();
+        let (loss, grads) =
+            train_step_masked(&spec, &blocks, &refs, &tok, &tgt, 0, &mask).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let selected: Vec<usize> = (0..n).filter(|&b| mask[b]).collect();
+
+        let eps = 3e-3f32;
+        for (gi, &bi) in selected.iter().enumerate() {
+            for probe in 0..4usize {
+                let idx = (probe * 97 + bi * 31) % blocks[bi].numel;
+                let mut plus = state.flats.clone();
+                plus[bi][idx] += eps;
+                let mut minus = state.flats.clone();
+                minus[bi][idx] -= eps;
+                let fd = (loss_of(&spec, &blocks, &plus, &tok, &tgt)
+                    - loss_of(&spec, &blocks, &minus, &tok, &tgt))
+                    / (2.0 * eps as f64);
+                let an = grads[gi][idx] as f64;
+                let tol = 2e-2 * fd.abs().max(an.abs()).max(1e-3);
+                assert!(
+                    (fd - an).abs() < tol,
+                    "block {bi} idx {idx}: fd {fd:.6} vs analytic {an:.6}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_step_rejects_bad_masks() {
+        let spec = tiny_spec();
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 3);
+        let (tok, tgt) = tokens_for(&spec, 0);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        // nothing selected
+        let none = vec![false; blocks.len()];
+        assert!(train_step_masked(&spec, &blocks, &refs, &tok, &tgt, 0, &none).is_err());
+        // wrong length
+        let short = vec![true; blocks.len() - 1];
+        assert!(train_step_masked(&spec, &blocks, &refs, &tok, &tgt, 0, &short).is_err());
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //!   trainer reports the compute time; stall = `max(0, t_transfer −
 //!   t_compute)` models prefetch hidden behind the backward pass, and the
 //!   stall totals feed the paper's PCIe-bottleneck limitation analysis
-//!   (§6).
+//!   (§6). The compute window is step-shape aware: masked (exploit)
+//!   steps hand in `CostModel::selective_step_s` — a *shorter* window,
+//!   so the same prefetch traffic hides less easily behind a masked step
+//!   than behind an explore step's full backward
+//!   (`CostModel::explore_step_s`). That coupling is the §6 trade-off:
+//!   the faster the selective step gets, the more the PCIe link shows.
 
 use std::collections::HashSet;
 

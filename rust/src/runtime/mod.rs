@@ -25,7 +25,9 @@
 //!   type-checked in CI against the in-tree `rust/vendor/xla` API stub and
 //!   runs for real when the path dependency points at actual bindings.
 //!
-//! Both backends expose the same entry names (`train_step`,
+//! Both backends expose the same entry names (`train_step`, the
+//! selection-gated `train_step_masked` (blocks + tokens + targets + block
+//! mask, returning loss + the *selected* blocks' gradient flats only),
 //! `train_step_lora[2]`, `eval_loss`, `decode_step`, the serving pair
 //! `prefill` / `decode_step_kv`, `lora_merge[2]`, and the shared
 //! `adamw_update` / `grad_norm_sq` kernels) with identical

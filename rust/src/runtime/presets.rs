@@ -162,6 +162,12 @@ fn preset(model: ModelSpec, pallas: bool) -> Preset {
         );
     };
     add("train_step", n + 2);
+    // selection-gated backward: blocks + tokens + targets + block mask.
+    // Output arity is mask-dependent (loss + one grad flat per *selected*
+    // block), which the reference backend handles natively; an XLA
+    // lowering would pad to fixed arity, so the AOT export keeps this
+    // entry reference-backend-first.
+    add("train_step_masked", n + 3);
     if pallas {
         add("train_step_pallas", n + 2);
     }

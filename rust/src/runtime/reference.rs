@@ -66,6 +66,7 @@ impl RefBuffer {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Entry {
     TrainStep,
+    TrainStepMasked,
     TrainStepLora { double: bool },
     EvalLoss,
     DecodeStep,
@@ -122,6 +123,16 @@ impl ReferenceBackend {
         self.ws.borrow().stats()
     }
 
+    /// Restart the arena's peak tracking (see
+    /// [`Workspace::reset_high_water`]) so the next
+    /// [`ReferenceBackend::workspace_stats`] reports the footprint of
+    /// just the steps executed since — how the bench measures the masked
+    /// (exploit) step's reduced activation footprint separately from the
+    /// full step's.
+    pub fn reset_workspace_high_water(&self) {
+        self.ws.borrow_mut().reset_high_water();
+    }
+
     /// Run `f` against the backend's shared workspace arena — the hook
     /// the serving fast path (`serve::KvBackend`) uses to execute the
     /// in-place prefill/decode kernels without going through the
@@ -136,6 +147,7 @@ impl ReferenceBackend {
             // the Pallas-attention artifact computes the same function;
             // the reference backend has exactly one attention path
             "train_step" | "train_step_pallas" => Entry::TrainStep,
+            "train_step_masked" => Entry::TrainStepMasked,
             "train_step_lora" => Entry::TrainStepLora { double: false },
             "train_step_lora2" => Entry::TrainStepLora { double: true },
             "eval_loss" => Entry::EvalLoss,
@@ -178,6 +190,29 @@ impl ReferenceBackend {
                 let mut ws = self.ws.borrow_mut();
                 let (loss, grads) = forward::train_step_in(
                     &mut ws, &p.model, &p.blocks, &flats, tokens, targets, pad,
+                )?;
+                let mut out = vec![vec![loss]];
+                out.extend(grads);
+                Ok(out)
+            }
+            Entry::TrainStepMasked => {
+                // blocks..., tokens, targets, mask (i32[n_blocks], nonzero
+                // = selected). Outputs: loss + one gradient flat per
+                // *selected* block in ascending block order — unselected
+                // gradients never exist, so they cannot cross this
+                // boundary.
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                want(n + 3)?;
+                let flats: Vec<&[f32]> =
+                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let tokens = args[n].as_i32()?;
+                let targets = args[n + 1].as_i32()?;
+                let mask_raw = args[n + 2].as_i32()?;
+                let mask: Vec<bool> = mask_raw.iter().map(|&x| x != 0).collect();
+                let mut ws = self.ws.borrow_mut();
+                let (loss, grads) = forward::train_step_masked_in(
+                    &mut ws, &p.model, &p.blocks, &flats, tokens, targets, pad, &mask,
                 )?;
                 let mut out = vec![vec![loss]];
                 out.extend(grads);

@@ -18,7 +18,7 @@ use crate::util::rng::Rng;
 
 use super::dirichlet::{sample_dirichlet, weighted_sample_without_replacement};
 use super::grad_norm::top_k_indices;
-use super::{SelectionCtx, SelectionStrategy};
+use super::{SelectionCtx, SelectionStrategy, StepPlan};
 
 #[derive(Debug, Clone)]
 pub struct AdaGradSelectParams {
@@ -104,9 +104,13 @@ impl AdaGradSelect {
         (self.n_explore, self.n_exploit)
     }
 
-    /// ε at a given step *within epoch 1* (t is the step inside the epoch).
-    pub fn epsilon_at(&self, t_in_epoch: u64) -> f64 {
-        self.params.eps0 * (-self.params.lambda * t_in_epoch as f64).exp()
+    /// ε at a given step. For the paper's method this is only evaluated
+    /// during epoch 1, where the global step *is* the step within the
+    /// epoch; with the `explore_after_epoch1` ablation the decay simply
+    /// continues across epoch boundaries (ε keeps shrinking instead of
+    /// sawtoothing back to ε₀ every epoch).
+    pub fn epsilon_at(&self, step: u64) -> f64 {
+        self.params.eps0 * (-self.params.lambda * step as f64).exp()
     }
 
     fn exploit(&mut self) -> Vec<usize> {
@@ -119,41 +123,51 @@ impl AdaGradSelect {
         };
         weighted_sample_without_replacement(&p, self.params.k, &mut self.rng)
     }
+
+    fn record(&mut self, selected: &[usize]) {
+        for &b in selected {
+            self.freq[b] += 1;
+        }
+    }
 }
 
 impl SelectionStrategy for AdaGradSelect {
-    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+    fn decide(&mut self, ctx: &SelectionCtx) -> StepPlan {
         let in_epoch1 = ctx.epoch <= 1;
         let explore_allowed = in_epoch1 || self.params.explore_after_epoch1;
 
-        let selected = if explore_allowed {
-            let t_in_epoch = ctx.step % self.params.steps_per_epoch.max(1);
-            let eps = self.epsilon_at(t_in_epoch);
+        if explore_allowed {
+            let eps = self.epsilon_at(ctx.step);
             self.last_epsilon = eps;
             if self.rng.gen_f64() < eps {
+                // exploration ranks on this step's norms — full backward
                 self.last_decision = Some(Decision::Explore);
                 self.n_explore += 1;
-                assert_eq!(
-                    ctx.grad_norms.len(),
-                    self.freq.len(),
-                    "exploration step needs grad norms"
-                );
-                top_k_indices(ctx.grad_norms, self.params.k)
-            } else {
-                self.last_decision = Some(Decision::Exploit);
-                self.n_exploit += 1;
-                self.exploit()
+                return StepPlan::NeedsNorms;
             }
         } else {
             self.last_epsilon = 0.0;
-            self.last_decision = Some(Decision::Exploit);
-            self.n_exploit += 1;
-            self.exploit()
-        };
-
-        for &b in &selected {
-            self.freq[b] += 1;
         }
+        // exploitation: Dirichlet(f+δ) over the frequency history — the
+        // paper's "avoids gradient access" phase. Deciding here, before
+        // the backward pass, is what lets the trainer run the masked step.
+        self.last_decision = Some(Decision::Exploit);
+        self.n_exploit += 1;
+        let selected = self.exploit();
+        self.record(&selected);
+        StepPlan::Decided(selected)
+    }
+
+    fn choose(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+        // only reached after decide() returned NeedsNorms (explore)
+        debug_assert_eq!(self.last_decision, Some(Decision::Explore));
+        assert_eq!(
+            ctx.grad_norms.len(),
+            self.freq.len(),
+            "exploration step needs grad norms"
+        );
+        let selected = top_k_indices(ctx.grad_norms, self.params.k);
+        self.record(&selected);
         selected
     }
 
@@ -274,6 +288,61 @@ mod tests {
             seen.extend(s.select(&ctx(step, 2, &[])));
         }
         assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn ablation_epsilon_decays_across_epochs_without_sawtooth() {
+        // regression: `explore_after_epoch1` used to reset ε to ε₀ at
+        // every epoch boundary (t % steps_per_epoch); the decay must
+        // continue across epochs instead
+        let norms = vec![1.0; 4];
+        let mut p = params(1, 10, 0);
+        p.explore_after_epoch1 = true;
+        let mut s = AdaGradSelect::new(4, p);
+        let mut eps_seen = Vec::new();
+        for step in 0..30u64 {
+            let epoch = 1 + (step / 10) as u32;
+            s.select(&ctx(step, epoch, &norms));
+            eps_seen.push(s.last_epsilon);
+        }
+        for (i, w) in eps_seen.windows(2).enumerate() {
+            assert!(w[1] < w[0], "epsilon rose at step {}: {:?}", i + 1, eps_seen);
+        }
+        // first step of epoch 2 continues the decay (the old bug put it
+        // back at ε₀ = 1)
+        assert!(eps_seen[10] < eps_seen[9]);
+        assert!(eps_seen[29] < 1e-4);
+    }
+
+    #[test]
+    fn decide_choose_composition_matches_select() {
+        let norms: Vec<f64> = (0..6).map(|i| (i as f64 * 0.7).cos().abs()).collect();
+        let mut a = AdaGradSelect::new(6, params(2, 15, 11));
+        let mut b = AdaGradSelect::new(6, params(2, 15, 11));
+        for step in 0..45u64 {
+            let epoch = 1 + (step / 15) as u32;
+            let got = a.select(&ctx(step, epoch, &norms));
+            let want = match b.decide(&ctx(step, epoch, &[])) {
+                StepPlan::Decided(sel) => sel,
+                StepPlan::NeedsNorms => b.choose(&ctx(step, epoch, &norms)),
+            };
+            assert_eq!(got, want, "step {step}");
+            assert_eq!(a.last_decision, b.last_decision);
+        }
+        assert_eq!(a.explore_exploit_counts(), b.explore_exploit_counts());
+    }
+
+    #[test]
+    fn exploit_steps_decide_without_norms() {
+        // epoch ≥ 2: the plan is fully decided pre-backward with empty
+        // norms — the property that lets the trainer skip gradient work
+        let mut s = AdaGradSelect::new(5, params(2, 10, 3));
+        for step in 0..40u64 {
+            match s.decide(&ctx(step, 2, &[])) {
+                StepPlan::Decided(sel) => assert_eq!(sel.len(), 2),
+                StepPlan::NeedsNorms => panic!("exploit step demanded norms"),
+            }
+        }
     }
 
     #[test]

@@ -10,32 +10,79 @@ use crate::util::par::par_map;
 
 #[derive(Debug, Clone)]
 pub struct GradNormTracker {
-    /// Most recent per-step block norms.
+    /// Most recent per-step block norms. On masked (exploit) steps only
+    /// the selected entries are refreshed; the rest hold the last value
+    /// observed when that block's gradient existed.
     pub last: Vec<f64>,
-    /// Cumulative (summed over steps) block norms.
+    /// Cumulative (summed over steps) block norms. Accumulates exactly
+    /// what [`GradNormTracker::record`]/[`GradNormTracker::record_selected`]
+    /// were handed — i.e. post-clip norms, the values selection and
+    /// clipping actually saw.
     pub cumulative: Vec<f64>,
     steps: u64,
+    reduced_blocks: u64,
 }
 
 impl GradNormTracker {
     pub fn new(n_blocks: usize) -> Self {
-        Self { last: vec![0.0; n_blocks], cumulative: vec![0.0; n_blocks], steps: 0 }
+        Self {
+            last: vec![0.0; n_blocks],
+            cumulative: vec![0.0; n_blocks],
+            steps: 0,
+            reduced_blocks: 0,
+        }
     }
 
     /// Compute per-block norms from flat gradient slices and accumulate.
+    /// Equivalent to [`block_norms`] + [`GradNormTracker::record`]; the
+    /// trainer uses the split form so it can clip *before* accumulating.
     pub fn observe<S: AsRef<[f32]> + Sync>(&mut self, grads: &[S]) -> &[f64] {
-        assert_eq!(grads.len(), self.last.len());
-        self.last = par_map(grads, |_, g| block_norm(g.as_ref()));
-        for (c, l) in self.cumulative.iter_mut().zip(&self.last) {
+        let norms = block_norms(grads);
+        self.record(&norms);
+        &self.last
+    }
+
+    /// Fold one full set of per-block norms (already clipped, if clipping
+    /// is on) into `last`/`cumulative`.
+    pub fn record(&mut self, norms: &[f64]) {
+        assert_eq!(norms.len(), self.last.len());
+        self.last.copy_from_slice(norms);
+        for (c, l) in self.cumulative.iter_mut().zip(norms) {
             *c += *l;
         }
         self.steps += 1;
-        &self.last
+        self.reduced_blocks += norms.len() as u64;
+    }
+
+    /// Masked-step variant: `norms[i]` is the norm of block
+    /// `selected[i]`; unselected blocks had no gradient this step, so
+    /// neither `last` nor `cumulative` move for them.
+    pub fn record_selected(&mut self, selected: &[usize], norms: &[f64]) {
+        assert_eq!(selected.len(), norms.len());
+        for (&b, &n) in selected.iter().zip(norms) {
+            self.last[b] = n;
+            self.cumulative[b] += n;
+        }
+        self.steps += 1;
+        self.reduced_blocks += selected.len() as u64;
     }
 
     pub fn steps(&self) -> u64 {
         self.steps
     }
+
+    /// Total per-block norm reductions performed (the work the paper's
+    /// exploitation phase avoids) — the bench's zero-norm-reduction
+    /// invariant counts this.
+    pub fn reduced_blocks(&self) -> u64 {
+        self.reduced_blocks
+    }
+}
+
+/// Per-block L2 norms of flat gradient slices (rayon-style across blocks;
+/// the reduction is memory-bound and the blocks are independent).
+pub fn block_norms<S: AsRef<[f32]> + Sync>(grads: &[S]) -> Vec<f64> {
+    par_map(grads, |_, g| block_norm(g.as_ref()))
 }
 
 /// `sqrt(sum(g^2))` in f64 accumulation (the blocks are small enough that
@@ -98,6 +145,27 @@ mod tests {
         assert!((t.cumulative[0] - 10.0).abs() < 1e-9);
         assert!((t.cumulative[1] - 1.0).abs() < 1e-9);
         assert_eq!(t.steps(), 2);
+    }
+
+    #[test]
+    fn record_selected_leaves_unselected_untouched() {
+        let mut t = GradNormTracker::new(3);
+        t.record(&[1.0, 2.0, 3.0]);
+        t.record_selected(&[1], &[5.0]);
+        assert_eq!(t.last, vec![1.0, 5.0, 3.0]);
+        assert_eq!(t.cumulative, vec![1.0, 7.0, 3.0]);
+        assert_eq!(t.steps(), 2);
+        assert_eq!(t.reduced_blocks(), 4);
+    }
+
+    #[test]
+    fn cumulative_accumulates_exactly_what_was_recorded() {
+        // the clip-before-accumulate contract: the tracker never sees
+        // pre-clip norms, so cumulative == sum of recorded values
+        let mut t = GradNormTracker::new(2);
+        t.record(&[0.5, 0.25]); // e.g. post-clip
+        t.record(&[0.5, 0.25]);
+        assert_eq!(t.cumulative, vec![1.0, 0.5]);
     }
 
     #[test]

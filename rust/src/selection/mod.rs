@@ -36,19 +36,69 @@ pub struct SelectionCtx<'a> {
     /// Epoch index, **1-based** to match the paper ("epoch == 1" explores).
     pub epoch: u32,
     /// This step's per-block gradient L2 norms (squared norms are tracked
-    /// separately; these are `sqrt` values). Empty when the caller knows
+    /// separately; these are `sqrt` values). Empty during the pre-step
+    /// [`SelectionStrategy::decide`] call and whenever the caller knows
     /// the strategy doesn't need them.
     pub grad_norms: &'a [f64],
 }
 
-/// A block-selection policy.
-pub trait SelectionStrategy: Send {
-    /// Choose the set of blocks to update this step (sorted, deduped).
-    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize>;
+/// Outcome of the pre-step [`SelectionStrategy::decide`] call.
+///
+/// This is the split that lets selection actually *gate* compute: a
+/// [`StepPlan::Decided`] step knows its blocks before the backward pass
+/// runs, so the trainer can execute a masked backward that skips the
+/// weight-gradient GEMMs of every unselected block, never propagates the
+/// d-stream below the shallowest selected block, and downloads only the
+/// selected gradient flats. Only a [`StepPlan::NeedsNorms`] step (ε-greedy
+/// exploration, top-k, UCB) pays for the full backward.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepPlan {
+    /// Selection is already known without this step's gradients (Dirichlet
+    /// exploitation, random/round-robin/fixed/full policies).
+    Decided(Vec<usize>),
+    /// The strategy needs this step's per-block gradient norms: run the
+    /// full backward, reduce the norms, then call
+    /// [`SelectionStrategy::choose`].
+    NeedsNorms,
+}
 
-    /// Whether `select` consumes `ctx.grad_norms` at this step. The trainer
-    /// can skip norm computation when this is false *and* telemetry does
-    /// not ask for norms.
+/// A block-selection policy.
+///
+/// The per-step protocol is two-phase: [`SelectionStrategy::decide`] runs
+/// *before* the backward pass (with `ctx.grad_norms` empty) and either
+/// commits to a selection or demands this step's gradient norms;
+/// [`SelectionStrategy::choose`] runs *after* the norm reduction for
+/// steps where `decide` returned [`StepPlan::NeedsNorms`]. The provided
+/// [`SelectionStrategy::select`] composes the two for callers that always
+/// have norms at hand (tests, benches, the golden-parity harness).
+pub trait SelectionStrategy: Send {
+    /// Pre-backward decision (sorted, deduped block indices when decided).
+    /// `ctx.grad_norms` is empty at this point.
+    fn decide(&mut self, ctx: &SelectionCtx) -> StepPlan;
+
+    /// Post-norms choice for steps where [`SelectionStrategy::decide`]
+    /// returned [`StepPlan::NeedsNorms`]; `ctx.grad_norms` now holds this
+    /// step's per-block norms. Strategies that never demand norms keep
+    /// the default (unreachable) implementation.
+    fn choose(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+        let _ = ctx;
+        unreachable!("{}: choose() called but decide() never returns NeedsNorms", self.name())
+    }
+
+    /// Choose the set of blocks to update this step (sorted, deduped),
+    /// given that `ctx.grad_norms` is already populated. Equivalent to
+    /// `decide` + `choose` — one strategy-RNG trajectory either way.
+    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+        match self.decide(ctx) {
+            StepPlan::Decided(sel) => sel,
+            StepPlan::NeedsNorms => self.choose(ctx),
+        }
+    }
+
+    /// Advisory: whether [`SelectionStrategy::decide`] *may* return
+    /// [`StepPlan::NeedsNorms`] at this ctx (i.e. whether this step might
+    /// touch gradients at all). Telemetry/capacity planning only — the
+    /// trainer gates the norm reduction on the actual `decide` outcome.
     fn needs_grad_norms(&self, _ctx: &SelectionCtx) -> bool {
         false
     }

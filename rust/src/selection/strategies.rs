@@ -4,7 +4,7 @@
 use crate::util::rng::Rng;
 
 use super::grad_norm::top_k_indices;
-use super::{SelectionCtx, SelectionStrategy};
+use super::{SelectionCtx, SelectionStrategy, StepPlan};
 
 /// Full fine-tuning: every block, every step.
 pub struct FullSelector {
@@ -18,8 +18,8 @@ impl FullSelector {
 }
 
 impl SelectionStrategy for FullSelector {
-    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
-        (0..self.n_blocks).collect()
+    fn decide(&mut self, _ctx: &SelectionCtx) -> StepPlan {
+        StepPlan::Decided((0..self.n_blocks).collect())
     }
 
     fn name(&self) -> String {
@@ -47,7 +47,13 @@ impl TopKSelector {
 }
 
 impl SelectionStrategy for TopKSelector {
-    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+    fn decide(&mut self, _ctx: &SelectionCtx) -> StepPlan {
+        // Algorithm 1 ranks on this step's norms — it can never skip the
+        // backward pass (the cost AdaGradSelect's exploitation avoids).
+        StepPlan::NeedsNorms
+    }
+
+    fn choose(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
         assert_eq!(ctx.grad_norms.len(), self.cumulative.len(),
                    "TopKSelector needs per-block grad norms");
         for (c, g) in self.cumulative.iter_mut().zip(ctx.grad_norms) {
@@ -87,7 +93,7 @@ impl RandomSelector {
 }
 
 impl SelectionStrategy for RandomSelector {
-    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
+    fn decide(&mut self, _ctx: &SelectionCtx) -> StepPlan {
         let mut idx: Vec<usize> = (0..self.n_blocks).collect();
         // partial Fisher-Yates for the first k
         for i in 0..self.k {
@@ -96,7 +102,7 @@ impl SelectionStrategy for RandomSelector {
         }
         let mut out = idx[..self.k].to_vec();
         out.sort_unstable();
-        out
+        StepPlan::Decided(out)
     }
 
     fn name(&self) -> String {
@@ -118,13 +124,13 @@ impl RoundRobinSelector {
 }
 
 impl SelectionStrategy for RoundRobinSelector {
-    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
+    fn decide(&mut self, _ctx: &SelectionCtx) -> StepPlan {
         let mut out: Vec<usize> =
             (0..self.k).map(|i| (self.cursor + i) % self.n_blocks).collect();
         self.cursor = (self.cursor + self.k) % self.n_blocks;
         out.sort_unstable();
         out.dedup();
-        out
+        StepPlan::Decided(out)
     }
 
     fn name(&self) -> String {
@@ -146,8 +152,8 @@ impl FixedSubsetSelector {
 }
 
 impl SelectionStrategy for FixedSubsetSelector {
-    fn select(&mut self, _ctx: &SelectionCtx) -> Vec<usize> {
-        self.subset.clone()
+    fn decide(&mut self, _ctx: &SelectionCtx) -> StepPlan {
+        StepPlan::Decided(self.subset.clone())
     }
 
     fn name(&self) -> String {
@@ -205,6 +211,19 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 7);
+    }
+
+    #[test]
+    fn norm_free_strategies_decide_before_the_backward() {
+        // every policy that doesn't rank on this step's gradients must
+        // commit pre-backward, so the trainer can run the masked step
+        let c = ctx(&[]);
+        assert!(matches!(FullSelector::new(3).decide(&c), StepPlan::Decided(_)));
+        assert!(matches!(RandomSelector::new(5, 2, 0).decide(&c), StepPlan::Decided(_)));
+        assert!(matches!(RoundRobinSelector::new(5, 2).decide(&c), StepPlan::Decided(_)));
+        assert!(matches!(FixedSubsetSelector::new(vec![1]).decide(&c), StepPlan::Decided(_)));
+        // Algorithm 1 cannot: it needs the fresh norms
+        assert_eq!(TopKSelector::new(3, 1).decide(&c), StepPlan::NeedsNorms);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! just played, which the trainer already has.
 
 use super::grad_norm::top_k_indices;
-use super::{SelectionCtx, SelectionStrategy};
+use super::{SelectionCtx, SelectionStrategy, StepPlan};
 
 pub struct UcbSelector {
     k: usize,
@@ -72,7 +72,12 @@ impl UcbSelector {
 }
 
 impl SelectionStrategy for UcbSelector {
-    fn select(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
+    fn decide(&mut self, _ctx: &SelectionCtx) -> StepPlan {
+        // rewards for the arms just played come from this step's norms
+        StepPlan::NeedsNorms
+    }
+
+    fn choose(&mut self, ctx: &SelectionCtx) -> Vec<usize> {
         self.observe(ctx.grad_norms);
         self.t += 1;
         let sel = top_k_indices(&self.scores(), self.k);

@@ -19,6 +19,9 @@ pub struct StepRecord {
     /// `explore`, `exploit`, or `-` for non-bandit methods.
     pub decision: String,
     pub epsilon: f64,
+    /// Whether this step ran the masked (selection-gated) backward kernel
+    /// instead of the full train step.
+    pub masked: bool,
     /// HLO execute wallclock (s).
     pub t_execute: f64,
     /// grads download + host processing (s).
@@ -59,6 +62,7 @@ impl StepRecord {
             ("selected", Value::arr_usize(&self.selected)),
             ("decision", Value::str(&self.decision)),
             ("epsilon", Value::num(self.epsilon)),
+            ("masked", Value::Bool(self.masked)),
             ("t_execute", Value::num(self.t_execute)),
             ("t_host", Value::num(self.t_host)),
             ("t_optimizer", Value::num(self.t_optimizer)),
@@ -213,6 +217,7 @@ mod tests {
             selected,
             decision: "-".into(),
             epsilon: 0.0,
+            masked: false,
             t_execute: 0.1,
             t_host: 0.01,
             t_optimizer: 0.02,

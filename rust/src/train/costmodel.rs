@@ -150,10 +150,15 @@ impl CostModel {
         (self.fwd.iter().sum(), self.kernels_fwd.iter().sum())
     }
 
-    /// Simulated accelerator step time for a selective-update step.
+    /// Simulated accelerator step time for a **masked** (exploit-style)
+    /// step — the `train_step_masked` kernel's cost shape.
     ///
     /// `selected` are the trainable-block indices updated this step;
-    /// backprop-through runs for every block above the lowest selected.
+    /// backprop-through runs for every block above the lowest selected
+    /// (the d-stream is truncated below it) and weight gradients are
+    /// computed only for the selected blocks. Steps that need every
+    /// block's gradient norms (exploration, top-k, UCB) cannot take this
+    /// shape — use [`CostModel::explore_step_s`] for those.
     pub fn selective_step_s(&self, selected: &[usize]) -> f64 {
         let (f_fwd, k_fwd) = self.base_fwd();
         let lowest = selected.iter().copied().min().unwrap_or(0);
@@ -170,6 +175,23 @@ impl CostModel {
     pub fn full_step_s(&self) -> f64 {
         let all: Vec<usize> = (0..self.fwd.len()).collect();
         self.selective_step_s(&all)
+    }
+
+    /// Exploration / norm-ranking step: the policy needs **this step's**
+    /// gradient norms for every block (Algorithm 1 top-k, AdaGradSelect's
+    /// ε-branch, UCB rewards), so the backward computes every weight
+    /// gradient exactly like full fine-tuning — only the optimizer update
+    /// stays selective. This is the compute asymmetry the paper's
+    /// Algorithm 2 is built around: exploitation avoids gradient access,
+    /// exploration pays full price.
+    pub fn explore_step_s(&self, selected: &[usize]) -> f64 {
+        let (f_fwd, k_fwd) = self.base_fwd();
+        let f_through: f64 = self.bwd_through.iter().sum();
+        let f_weight: f64 = self.bwd_weight.iter().sum();
+        let p_sel: f64 = selected.iter().map(|&b| self.numel[b]).sum();
+        let flops = f_fwd + f_through + f_weight + self.params.opt_flops_per_param * p_sel;
+        let kernels = k_fwd * 3.0 + selected.len() as f64;
+        flops / self.params.flops_per_s + kernels * self.params.launch_s
     }
 
     /// LoRA step: base forward + adapter forward everywhere, backward
@@ -237,6 +259,21 @@ mod tests {
         let a = c.selective_step_s(&[5, 6]);
         let b = c.selective_step_s(&[5, 6, 7, 8]);
         assert!(b > a);
+    }
+
+    #[test]
+    fn explore_costs_full_backward_exploit_does_not() {
+        let c = model();
+        let sel: Vec<usize> = (20..26).collect();
+        let explore = c.explore_step_s(&sel);
+        let exploit = c.selective_step_s(&sel);
+        // exploration runs every weight-grad GEMM; exploitation skips them
+        assert!(explore > exploit, "explore {explore} vs exploit {exploit}");
+        // but the selective optimizer still undercuts a full step
+        assert!(explore < c.full_step_s());
+        // selecting everything erases the asymmetry
+        let all: Vec<usize> = (0..c.fwd.len()).collect();
+        assert!((c.explore_step_s(&all) - c.selective_step_s(&all)).abs() < 1e-12);
     }
 
     #[test]

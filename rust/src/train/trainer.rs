@@ -10,9 +10,9 @@ use crate::model::ModelState;
 use crate::optimizer::{AdamWParams, ResidencyManager, SelectiveAdamW};
 use crate::runtime::{Backend, Preset};
 use crate::selection::{
-    k_from_pct, AdaGradSelect, AdaGradSelectParams, FixedSubsetSelector, FullSelector,
-    GradNormTracker, RandomSelector, RoundRobinSelector, SelectionCtx, SelectionStrategy,
-    TopKSelector, UcbSelector,
+    grad_norm, k_from_pct, AdaGradSelect, AdaGradSelectParams, FixedSubsetSelector,
+    FullSelector, GradNormTracker, RandomSelector, RoundRobinSelector, SelectionCtx,
+    SelectionStrategy, StepPlan, TopKSelector, UcbSelector,
 };
 use crate::telemetry::{MetricsLog, StepRecord, Timing};
 
@@ -41,6 +41,12 @@ pub struct TrainSummary {
     pub selection_histogram: Vec<u64>,
     pub explore_steps: u64,
     pub exploit_steps: u64,
+    /// Steps that ran the masked (selection-gated) backward kernel.
+    pub masked_steps: u64,
+    /// Total per-block gradient-norm reductions performed across the run
+    /// (0 for a pure-exploit run with clipping off — the paper's
+    /// "avoids gradient access" property, observed).
+    pub norm_reduced_blocks: u64,
 }
 
 impl TrainSummary {
@@ -63,6 +69,8 @@ impl TrainSummary {
             ("selection_histogram", Value::arr_u64(&self.selection_histogram)),
             ("explore_steps", Value::num(self.explore_steps as f64)),
             ("exploit_steps", Value::num(self.exploit_steps as f64)),
+            ("masked_steps", Value::num(self.masked_steps as f64)),
+            ("norm_reduced_blocks", Value::num(self.norm_reduced_blocks as f64)),
         ])
     }
 }
@@ -91,12 +99,17 @@ pub struct Trainer<'e, B: Backend> {
     residency: ResidencyManager,
     batcher: TrainBatcher,
     exe_train: Rc<B::Exe>,
+    /// Selection-gated kernel (base mode only; `None` when the backend's
+    /// manifest does not export `train_step_masked` — the trainer then
+    /// falls back to the full backward for every step).
+    exe_train_masked: Option<Rc<B::Exe>>,
     device_blocks: Vec<B::Buffer>,
     dirty: Vec<bool>,
     pub metrics: MetricsLog,
     cost: CostModel,
     grads_host: Vec<Vec<f32>>,
     step: u64,
+    masked_steps: u64,
 }
 
 impl<'e, B: Backend> Trainer<'e, B> {
@@ -148,6 +161,13 @@ impl<'e, B: Backend> Trainer<'e, B> {
                 }
             };
 
+        // the masked kernel only applies to the base parameter table;
+        // older artifact dirs without the entry degrade to full backward
+        let exe_train_masked = match &mode {
+            Mode::Base => engine.load_preset_exe(&cfg.preset, "train_step_masked").ok(),
+            Mode::Lora { .. } => None,
+        };
+
         let n_trainable = trainable_numels.len();
         let strategy = build_strategy(&cfg, n_trainable)?;
         let opt = SelectiveAdamW::new(&trainable_numels, adamw);
@@ -175,12 +195,14 @@ impl<'e, B: Backend> Trainer<'e, B> {
             residency,
             batcher,
             exe_train,
+            exe_train_masked,
             device_blocks,
             dirty: vec![false; n_trainable],
             metrics,
             cost,
             grads_host,
             step: 0,
+            masked_steps: 0,
         })
     }
 
@@ -193,11 +215,35 @@ impl<'e, B: Backend> Trainer<'e, B> {
     }
 
     /// Run one training step; returns the loss.
+    ///
+    /// The step is selection-gated: [`SelectionStrategy::decide`] runs
+    /// *before* the backward pass, and any pre-decided (exploit-style)
+    /// step takes the masked kernel — weight-gradient GEMMs, d-stream
+    /// depth, activation caching, gradient download and norm reductions
+    /// all restricted to the selected blocks. Only norm-ranking steps
+    /// (ε-greedy exploration, top-k, UCB) pay for the full backward —
+    /// exactly the paper's Algorithm 2 asymmetry.
     pub fn step_once(&mut self) -> Result<f32> {
         let batch = self.batcher.next_batch();
         let dims = [batch.batch, batch.seq_len];
+        let n_blocks = self.dirty.len();
 
-        // 1. upload batch + dirty parameter blocks
+        // 1. pre-step decision: exploit-style steps know their blocks now
+        let epoch = self.epoch();
+        let plan = self
+            .strategy
+            .decide(&SelectionCtx { step: self.step, epoch, grad_norms: &[] });
+        let (decided, masked) = match plan {
+            StepPlan::Decided(sel) => {
+                // all-block selections (Full/LoRA) keep their dedicated
+                // full kernels; proper subsets take the masked kernel
+                let use_masked = sel.len() < n_blocks && self.exe_train_masked.is_some();
+                (Some(sel), use_masked)
+            }
+            StepPlan::NeedsNorms => (None, false),
+        };
+
+        // 2. upload batch + dirty parameter blocks (+ the block mask)
         let t0 = Instant::now();
         let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
         let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
@@ -207,68 +253,107 @@ impl<'e, B: Backend> Trainer<'e, B> {
                 *dirty = false;
             }
         }
+        let mask_buf = if masked {
+            let sel = decided.as_ref().expect("masked implies decided");
+            let mut mask = vec![0i32; n_blocks];
+            for &b in sel {
+                mask[b] = 1;
+            }
+            Some(self.engine.upload_i32(&mask, &[n_blocks])?)
+        } else {
+            None
+        };
         let t_upload = t0.elapsed().as_secs_f64();
 
-        // 2. execute the fused train step
-        let mut args: Vec<&B::Buffer> = Vec::with_capacity(self.device_blocks.len() + 34);
+        // 3. execute the fused train step (masked when pre-decided)
+        let mut args: Vec<&B::Buffer> = Vec::with_capacity(self.device_blocks.len() + 35);
         if let Mode::Lora { base_device, .. } = &self.mode {
             args.extend(base_device.iter());
         }
         args.extend(self.device_blocks.iter());
         args.push(&tok_buf);
         args.push(&tgt_buf);
-        let mut out = self.engine.execute(&self.exe_train, &args)?;
+        let exe = if let Some(mask_buf) = mask_buf.as_ref() {
+            args.push(mask_buf);
+            self.exe_train_masked.as_ref().expect("masked exe loaded")
+        } else {
+            &self.exe_train
+        };
+        let mut out = self.engine.execute(exe, &args)?;
         let loss = out.scalar_f32(0)?;
         if !loss.is_finite() {
             return Err(anyhow!("non-finite loss at step {}: {loss}", self.step));
         }
 
-        // 3. gradients to host
+        // 4. gradients to host — a masked step returns (and downloads)
+        // only the selected blocks' flats
         let t1 = Instant::now();
-        for (i, g) in self.grads_host.iter_mut().enumerate() {
-            *g = out.take_vec(1 + i)?;
+        if masked {
+            let sel = decided.as_ref().expect("masked implies decided");
+            for (j, &b) in sel.iter().enumerate() {
+                self.grads_host[b] = out.take_vec(1 + j)?;
+            }
+        } else {
+            for (i, g) in self.grads_host.iter_mut().enumerate() {
+                *g = out.take_vec(1 + i)?;
+            }
         }
         let t_host = t1.elapsed().as_secs_f64() + out.download_s;
 
-        // 4. block norms + optional global clip
+        // 5. block norms + optional global clip, gated on who needs them.
+        // Norms are clipped *before* the tracker accumulates, so
+        // cumulative telemetry matches what selection/optimizer saw.
         let t2 = Instant::now();
-        self.tracker.observe(&self.grads_host);
-        if let Some(clip) = self.cfg.train.grad_clip {
-            let global: f64 =
-                self.tracker.last.iter().map(|&n| n * n).sum::<f64>().sqrt();
-            if global > clip as f64 {
-                let scale = (clip as f64 / global) as f32;
-                for g in self.grads_host.iter_mut() {
-                    for x in g.iter_mut() {
-                        *x *= scale;
-                    }
-                }
-                for n in self.tracker.last.iter_mut() {
-                    *n *= scale as f64;
-                }
+        let clip = self.cfg.train.grad_clip;
+        if masked {
+            // selection already decided; norms exist (and are reduced)
+            // only if clipping asks for them, and only over the selected
+            // gradients — the only ones that were ever computed
+            if let Some(clip) = clip {
+                let sel = decided.as_ref().expect("masked implies decided");
+                let sel_grads: Vec<&[f32]> =
+                    sel.iter().map(|&b| self.grads_host[b].as_slice()).collect();
+                let mut norms = grad_norm::block_norms(&sel_grads);
+                clip_global(clip, sel, &mut self.grads_host, &mut norms);
+                self.tracker.record_selected(sel, &norms);
             }
+        } else if decided.is_none() || clip.is_some() {
+            let mut norms = grad_norm::block_norms(&self.grads_host);
+            if let Some(clip) = clip {
+                let all: Vec<usize> = (0..n_blocks).collect();
+                clip_global(clip, &all, &mut self.grads_host, &mut norms);
+            }
+            self.tracker.record(&norms);
         }
 
-        // 5. select blocks
-        let epoch = self.epoch();
-        let ctx = SelectionCtx {
-            step: self.step,
-            epoch,
-            grad_norms: &self.tracker.last,
+        // 6. resolve the selection (norm-ranking strategies choose now)
+        let selected = match decided {
+            Some(sel) => sel,
+            None => {
+                let ctx = SelectionCtx {
+                    step: self.step,
+                    epoch,
+                    grad_norms: &self.tracker.last,
+                };
+                self.strategy.choose(&ctx)
+            }
         };
-        let selected = self.strategy.select(&ctx);
 
-        // 6. modeled accelerator compute time + residency accounting
+        // 7. modeled accelerator compute time + residency accounting:
+        // exploit-style steps cost the masked-kernel shape, norm-ranking
+        // steps (and fallbacks without the masked artifact) the full
+        // backward with a selective optimizer
         let t_step_sim = match (&self.mode, &self.cfg.method) {
             (Mode::Lora { double_rank, .. }, _) => self
                 .cost
                 .lora_step_s(self.preset.model.n_layers, if *double_rank { 2.0 } else { 1.0 }),
             (_, Method::Full) => self.cost.full_step_s(),
-            _ => self.cost.selective_step_s(&selected),
+            _ if masked => self.cost.selective_step_s(&selected),
+            _ => self.cost.explore_step_s(&selected),
         };
         let transfers = self.residency.step(&selected, t_step_sim);
 
-        // 7. selective AdamW
+        // 8. selective AdamW
         let lr = self.cfg.lr_at(self.step);
         let t3 = Instant::now();
         self.opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
@@ -278,7 +363,10 @@ impl<'e, B: Backend> Trainer<'e, B> {
         let t_optimizer = t3.elapsed().as_secs_f64();
         let t_hostproc = t2.elapsed().as_secs_f64() - t_optimizer;
 
-        // 8. metrics
+        // 9. metrics
+        if masked {
+            self.masked_steps += 1;
+        }
         let (decision, epsilon) = self.decision_label();
         self.metrics.push(StepRecord {
             step: self.step,
@@ -288,6 +376,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             selected,
             decision,
             epsilon,
+            masked,
             t_execute: out.execute_s,
             t_host: t_host + t_hostproc.max(0.0),
             t_optimizer,
@@ -355,7 +444,21 @@ impl<'e, B: Backend> Trainer<'e, B> {
             selection_histogram: self.metrics.selection_histogram(self.dirty.len()),
             explore_steps: explore,
             exploit_steps: exploit,
+            masked_steps: self.masked_steps,
+            norm_reduced_blocks: self.tracker.reduced_blocks(),
         }
+    }
+
+    /// Steps so far that ran the masked (selection-gated) backward.
+    pub fn masked_steps(&self) -> u64 {
+        self.masked_steps
+    }
+
+    /// Total per-block gradient-norm reductions performed so far — the
+    /// bench harness pins this to 0 across pure-exploit stretches with
+    /// clipping off (the paper's "avoids gradient access" property).
+    pub fn norm_reduced_blocks(&self) -> u64 {
+        self.tracker.reduced_blocks()
     }
 
     /// The *effective* model for evaluation: merged base+LoRA under LoRA,
@@ -375,6 +478,26 @@ impl<'e, B: Backend> Trainer<'e, B> {
 
     pub fn frequencies(&self) -> Option<&[u64]> {
         self.strategy.frequencies()
+    }
+}
+
+/// Rescale `norms` and the gradients of `blocks` in place so the global
+/// L2 norm over `norms` does not exceed `clip`. One code path for both
+/// step shapes: the full backward clips every block, the masked backward
+/// only the selected ones (the only gradients that exist).
+fn clip_global(clip: f32, blocks: &[usize], grads_host: &mut [Vec<f32>], norms: &mut [f64]) {
+    debug_assert_eq!(blocks.len(), norms.len());
+    let global: f64 = norms.iter().map(|&n| n * n).sum::<f64>().sqrt();
+    if global > clip as f64 {
+        let scale = (clip as f64 / global) as f32;
+        for &b in blocks {
+            for x in grads_host[b].iter_mut() {
+                *x *= scale;
+            }
+        }
+        for n in norms.iter_mut() {
+            *n *= scale as f64;
+        }
     }
 }
 

@@ -119,6 +119,17 @@ impl Workspace {
         self.capacity = self.capacity.saturating_sub(cap);
     }
 
+    /// Restart peak tracking from the current outstanding level. The
+    /// high-water mark is a since-creation maximum, so measuring the
+    /// footprint of one *phase* (e.g. a masked exploit step after full
+    /// explore steps warmed the arena) needs a reset between phases:
+    /// `reset_high_water(); run phase; stats().high_water_bytes` is then
+    /// that phase's true peak. Slabs, capacity and the grow/take counters
+    /// are untouched — this is an accounting reset, not a pool reset.
+    pub fn reset_high_water(&mut self) {
+        self.high_water = self.outstanding;
+    }
+
     pub fn stats(&self) -> WorkspaceStats {
         WorkspaceStats {
             high_water_bytes: self.high_water * 4,
@@ -197,6 +208,26 @@ mod tests {
         assert_eq!(ws.stats().high_water_bytes, peak);
         ws.give(a);
         ws.give(b);
+    }
+
+    #[test]
+    fn reset_high_water_restarts_peak_tracking() {
+        let mut ws = Workspace::new();
+        let a = ws.take(1000);
+        ws.give(a);
+        assert_eq!(ws.stats().high_water_bytes, 4000);
+        ws.reset_high_water();
+        assert_eq!(ws.stats().high_water_bytes, 0);
+        // a later phase reports its own peak out of the same warm pool
+        // (here the 1000-slab is the only one, so that's the peak)
+        let b = ws.take(100);
+        assert_eq!(ws.stats().high_water_bytes, b.capacity() * 4);
+        ws.give(b);
+        // outstanding buffers survive the reset in the baseline
+        let c = ws.take(100);
+        ws.reset_high_water();
+        assert_eq!(ws.stats().high_water_bytes, c.capacity() * 4);
+        ws.give(c);
     }
 
     #[test]

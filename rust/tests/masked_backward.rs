@@ -1,0 +1,218 @@
+//! Masked-backward contracts: the selection-gated `train_step_masked`
+//! kernel must be a *pure restriction* of the full backward —
+//!
+//! 1. selected blocks' gradients bit-match the full-backward oracle for
+//!    randomized masks (plus the adversarial corners: {first}, {last},
+//!    all, singletons),
+//! 2. exactly the selected gradients cross the backend boundary (output
+//!    arity = 1 + |selected|),
+//! 3. the masked arena path reaches a zero-allocation steady state, also
+//!    when masks and full steps interleave (the trainer's explore/exploit
+//!    mix),
+//! 4. through the trainer, a pure-exploit run touches no gradient norms
+//!    and updates only selected blocks.
+//!
+//! The finite-difference check through a masked step (independent of the
+//! full-step oracle) lives next to the kernels in `model/forward.rs`.
+
+use adagradselect::config::{Method, RunConfig};
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, Manifest, ReferenceBackend};
+use adagradselect::util::rng::Rng;
+use adagradselect::util::workspace::Workspace;
+
+use adagradselect::model::forward::{train_step_in, train_step_masked_in};
+
+fn tiny() -> (adagradselect::runtime::ModelSpec, Vec<adagradselect::runtime::BlockSpec>) {
+    let mut m = Manifest::builtin().preset("test-tiny").unwrap().model.clone();
+    // shrink so the randomized sweep stays fast; block table follows suit
+    m.d_model = 16;
+    m.n_heads = 2;
+    m.d_head = 8;
+    m.d_ff = 24;
+    m.vocab = 13;
+    m.seq_len = 6;
+    m.batch = 2;
+    m.n_layers = 3;
+    let blocks = adagradselect::runtime::presets::block_table(&m);
+    (m, blocks)
+}
+
+fn batch_for(rows: usize, vocab: usize) -> (Vec<i32>, Vec<i32>) {
+    let tokens: Vec<i32> = (0..rows).map(|i| 1 + (i as i32 * 3) % (vocab as i32 - 1)).collect();
+    let mut targets: Vec<i32> =
+        (0..rows).map(|i| 1 + (i as i32 * 5) % (vocab as i32 - 1)).collect();
+    targets[rows - 1] = 0; // one pad position
+    (tokens, targets)
+}
+
+#[test]
+fn masked_grads_bit_match_full_oracle_over_randomized_masks() {
+    let (spec, blocks) = tiny();
+    let n = blocks.len();
+    let state = ModelState::init(&blocks, 41);
+    let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+    let (tok, tgt) = batch_for(spec.batch * spec.seq_len, spec.vocab);
+
+    let mut ws = Workspace::new();
+    let (loss_full, grads_full) =
+        train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+
+    // corners: every singleton (incl. first=embed, last=head), all-true
+    let mut masks: Vec<Vec<bool>> = (0..n).map(|b| (0..n).map(|i| i == b).collect()).collect();
+    masks.push(vec![true; n]);
+    // randomized masks with at least one selected block
+    let mut rng = Rng::seed_from_u64(0xA5C3);
+    for _ in 0..20 {
+        let mut mask: Vec<bool> = (0..n).map(|_| rng.gen_f64() < 0.5).collect();
+        let force = rng.gen_range(0, n);
+        mask[force] = true;
+        masks.push(mask);
+    }
+
+    for mask in &masks {
+        let (loss, grads) =
+            train_step_masked_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0, mask).unwrap();
+        assert_eq!(loss.to_bits(), loss_full.to_bits(), "mask {mask:?}: loss diverged");
+        let selected: Vec<usize> = (0..n).filter(|&b| mask[b]).collect();
+        assert_eq!(
+            grads.len(),
+            selected.len(),
+            "mask {mask:?}: arity must be 1 + |selected|"
+        );
+        for (g, &b) in grads.iter().zip(&selected) {
+            assert_eq!(
+                g, &grads_full[b],
+                "mask {mask:?}: block {b} gradient is not a bit-match of the full backward"
+            );
+        }
+    }
+}
+
+#[test]
+fn backend_boundary_carries_only_selected_gradients() {
+    let engine = ReferenceBackend::new();
+    let p = engine.manifest().preset("test-tiny").unwrap().clone();
+    let exe = engine.load_preset_exe("test-tiny", "train_step_masked").unwrap();
+    let exe_full = engine.load_preset_exe("test-tiny", "train_step").unwrap();
+    let state = ModelState::init(&p.blocks, 9);
+    let bufs: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let (b, s) = (p.model.batch, p.model.seq_len);
+    let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 40) as i32).collect();
+    let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
+    let n = p.blocks.len();
+
+    let full = {
+        let mut args: Vec<_> = bufs.iter().collect();
+        args.push(&tok);
+        args.push(&tok);
+        engine.execute(&exe_full, &args).unwrap()
+    };
+    assert_eq!(full.outputs.len(), 1 + n);
+
+    // select {layer0, head}: 2 gradient outputs, matching the full ones
+    let mask_vec: Vec<i32> = (0..n).map(|i| i32::from(i == 1 || i == n - 1)).collect();
+    let mask = engine.upload_i32(&mask_vec, &[n]).unwrap();
+    let mut args: Vec<_> = bufs.iter().collect();
+    args.push(&tok);
+    args.push(&tok);
+    args.push(&mask);
+    let out = engine.execute(&exe, &args).unwrap();
+    assert_eq!(out.outputs.len(), 1 + 2, "unselected gradients crossed the boundary");
+    assert_eq!(out.outputs[0], full.outputs[0], "loss diverged");
+    assert_eq!(out.outputs[1], full.outputs[1 + 1], "layer0 grads diverged");
+    assert_eq!(out.outputs[2], full.outputs[1 + n - 1], "head grads diverged");
+
+    // empty and malformed masks are rejected at the boundary
+    let empty = engine.upload_i32(&vec![0; n], &[n]).unwrap();
+    let mut bad: Vec<_> = bufs.iter().collect();
+    bad.push(&tok);
+    bad.push(&tok);
+    bad.push(&empty);
+    assert!(engine.execute(&exe, &bad).is_err());
+}
+
+#[test]
+fn masked_arena_path_reaches_zero_alloc_steady_state() {
+    let (spec, blocks) = tiny();
+    let n = blocks.len();
+    let state = ModelState::init(&blocks, 17);
+    let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+    let (tok, tgt) = batch_for(spec.batch * spec.seq_len, spec.vocab);
+    let mask: Vec<bool> = (0..n).map(|b| b == 2 || b == n - 1).collect();
+
+    let mut ws = Workspace::new();
+    // warm-up covers both step shapes (the trainer's explore/exploit mix)
+    let (_, g0) = train_step_masked_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0, &mask)
+        .unwrap();
+    train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+    let warm = ws.stats();
+    for _ in 0..3 {
+        let (_, g) =
+            train_step_masked_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0, &mask).unwrap();
+        assert_eq!(g, g0, "arena reuse must stay bit-deterministic");
+        train_step_in(&mut ws, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+    }
+    let steady = ws.stats();
+    assert_eq!(steady.grows, warm.grows, "steady-state masked/full mix must not allocate");
+    assert_eq!(steady.high_water_bytes, warm.high_water_bytes);
+
+    // and the masked phase alone peaks below the full phase: fewer layer
+    // caches are ever resident (measured, not modeled)
+    let mut ws_masked = Workspace::new();
+    let mut ws_full = Workspace::new();
+    train_step_masked_in(&mut ws_masked, &spec, &blocks, &refs, &tok, &tgt, 0, &mask).unwrap();
+    train_step_in(&mut ws_full, &spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+    assert!(
+        ws_masked.stats().high_water_bytes < ws_full.stats().high_water_bytes,
+        "masked step peak {} must undercut full step peak {}",
+        ws_masked.stats().high_water_bytes,
+        ws_full.stats().high_water_bytes
+    );
+}
+
+#[test]
+fn pure_exploit_trainer_runs_masked_and_never_reduces_norms() {
+    let engine = ReferenceBackend::new();
+    let mut cfg = RunConfig::preset_defaults("test-tiny");
+    // ε₀ = 0 ⇒ every step exploits from step 0 (Dirichlet over the flat
+    // prior); clipping off ⇒ nothing else wants gradient norms
+    cfg.method = Method::AdaGradSelect {
+        pct: 30.0,
+        eps0: 0.0,
+        lambda: None,
+        delta: 1.0,
+        explore_after_epoch1: false,
+        uniform_exploit: false,
+    };
+    cfg.train.steps = 12;
+    cfg.train.steps_per_epoch = 6;
+    cfg.train.log_every = 0;
+    cfg.train.grad_clip = None;
+    let mut t = adagradselect::train::Trainer::new(&engine, cfg).unwrap();
+    let summary = t.run().unwrap();
+    assert_eq!(summary.exploit_steps, 12);
+    assert_eq!(summary.explore_steps, 0);
+    assert_eq!(summary.masked_steps, 12, "every exploit step must take the masked kernel");
+    assert_eq!(
+        summary.norm_reduced_blocks, 0,
+        "exploit steps must not reduce gradient norms (paper: exploitation avoids gradient access)"
+    );
+    assert!(summary.final_loss.is_finite());
+}
+
+#[test]
+fn explore_steps_still_reduce_all_norms() {
+    let engine = ReferenceBackend::new();
+    let mut cfg = RunConfig::preset_defaults("test-tiny");
+    cfg.method = Method::TopK { pct: 30.0 }; // ranks every step: all-norm reductions
+    cfg.train.steps = 4;
+    cfg.train.steps_per_epoch = 2;
+    cfg.train.log_every = 0;
+    cfg.train.grad_clip = None;
+    let mut t = adagradselect::train::Trainer::new(&engine, cfg).unwrap();
+    let summary = t.run().unwrap();
+    assert_eq!(summary.masked_steps, 0, "norm-ranking steps cannot run masked");
+    let n = summary.selection_histogram.len() as u64;
+    assert_eq!(summary.norm_reduced_blocks, 4 * n);
+}
