@@ -20,7 +20,7 @@
 use std::time::Duration;
 
 use adagradselect::model::ModelState;
-use adagradselect::runtime::{Backend, RefBuffer, ReferenceBackend};
+use adagradselect::runtime::{Backend, RefTensor, ReferenceBackend};
 use adagradselect::serve::{KvBackend, KvPool};
 use adagradselect::util::bench::{bench, header, BenchResult};
 use adagradselect::util::json::Value;
@@ -53,8 +53,8 @@ fn bench_preset(
     let p = engine.manifest().preset(name).unwrap().clone();
     let (b, s, d) = (p.model.batch, p.model.seq_len, p.model.n_heads * p.model.d_head);
     let state = ModelState::init(&p.blocks, 0);
-    let blocks: Vec<RefBuffer> =
-        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let blocks: Vec<RefTensor> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
 
     let prompt_len = s / 2;
     let prompt: Vec<i32> = (0..prompt_len).map(|i| 4 + (i % 50) as i32).collect();
@@ -105,7 +105,7 @@ fn bench_preset(
     let exe = engine.load_preset_exe(name, "decode_step").unwrap();
     let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 50) as i32).collect();
     let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
-    let mut args: Vec<&RefBuffer> = blocks.iter().collect();
+    let mut args: Vec<&RefTensor> = blocks.iter().collect();
     args.push(&tok);
     let oracle = bench(&format!("decode_reforward/{name}/b{b}"), budget, || {
         std::hint::black_box(engine.execute(&exe, &args).unwrap());

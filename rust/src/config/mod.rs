@@ -436,17 +436,29 @@ impl RunConfig {
     }
 
     /// Learning rate at a step: linear warmup then cosine decay.
+    ///
+    /// Delegates to [`crate::optimizer::lr_cosine`], the same f32-step
+    /// formula the device-resident `train_step_fused` entry evaluates
+    /// from its on-device schedule tensor — one definition on both sides
+    /// of the backend boundary, so host-loop and device-resident runs see
+    /// bit-identical learning rates.
     pub fn lr_at(&self, step: u64) -> f32 {
         let t = &self.train;
-        if t.warmup_steps > 0 && step < t.warmup_steps {
-            return t.lr * (step + 1) as f32 / t.warmup_steps as f32;
-        }
-        let total = t.steps.max(t.warmup_steps + 1);
-        let progress =
-            (step - t.warmup_steps) as f32 / (total - t.warmup_steps).max(1) as f32;
-        let progress = progress.clamp(0.0, 1.0);
-        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
-        t.lr * (t.min_lr_frac + (1.0 - t.min_lr_frac) * cos)
+        crate::optimizer::lr_cosine(
+            t.lr,
+            t.warmup_steps as f32,
+            t.steps as f32,
+            t.min_lr_frac,
+            step as f32,
+        )
+    }
+
+    /// The `train_step_fused` schedule tensor: `[lr, warmup_steps,
+    /// total_steps, min_lr_frac]`, uploaded once at trainer construction
+    /// and consumed on device by [`crate::optimizer::lr_cosine`].
+    pub fn lr_schedule_tensor(&self) -> [f32; 4] {
+        let t = &self.train;
+        [t.lr, t.warmup_steps as f32, t.steps as f32, t.min_lr_frac]
     }
 }
 

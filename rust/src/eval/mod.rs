@@ -70,7 +70,7 @@ impl<'e, B: Backend> Evaluator<'e, B> {
     }
 
     pub fn upload_state(&self, state: &ModelState) -> Result<Vec<B::Buffer>> {
-        state.flats.iter().map(|f| self.engine.upload_f32(f)).collect()
+        state.flats.iter().map(|f| self.engine.upload_f32(f, &[f.len()])).collect()
     }
 
     /// Greedy-decode continuations by re-running the **full** `[batch,
@@ -117,7 +117,7 @@ impl<'e, B: Backend> Evaluator<'e, B> {
             let tok_buf = self.engine.upload_i32(&flat, &[b, s])?;
             let mut args: Vec<&B::Buffer> = device_blocks.iter().collect();
             args.push(&tok_buf);
-            let out = self.engine.execute(&self.exe_decode, &args)?;
+            let out = self.engine.execute_to_host(&self.exe_decode, &args)?;
             let logits = out.vec_f32(0)?; // [b, s, v]
             for i in 0..prompts.len() {
                 if done[i] {
@@ -164,7 +164,7 @@ impl<'e, B: Backend> Evaluator<'e, B> {
             let mut args: Vec<&B::Buffer> = device_blocks.iter().collect();
             args.push(&tok_buf);
             args.push(&tgt_buf);
-            total += self.engine.execute(&self.exe_eval_loss, &args)?.scalar_f32(0)?;
+            total += self.engine.execute_to_host(&self.exe_eval_loss, &args)?.scalar_f32(0)?;
         }
         Ok(total / n_batches.max(1) as f32)
     }

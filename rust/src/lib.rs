@@ -15,7 +15,7 @@
 //!   executor: native transformer fwd/bwd ([`model::forward`]) over the
 //!   built-in preset catalog. Builds, trains and is verified everywhere —
 //!   no Python, no artifacts, no external crates.
-//! * **[`runtime::Engine`] (cargo feature `pjrt`)** — the PJRT path that
+//! * **`runtime::Engine` (cargo feature `pjrt`)** — the PJRT path that
 //!   loads HLO-text artifacts lowered once from the JAX/Pallas side
 //!   (`python/compile`, `make artifacts`) through the `xla` crate.
 //!

@@ -31,10 +31,13 @@ pub fn merge<B: Backend>(
     let mut merged = base.clone();
     for layer in 0..n_layers {
         let block_idx = 1 + layer; // blocks: embed | layer0.. | head
-        let base_buf = engine.upload_f32(&base.flats[block_idx])?;
-        let lora_buf = engine.upload_f32(&lora.flats[layer])?;
-        let mut out = engine.execute(&exe, &[&base_buf, &lora_buf])?;
-        merged.flats[block_idx] = out.take_vec(0)?;
+        let bf = &base.flats[block_idx];
+        let lf = &lora.flats[layer];
+        let base_buf = engine.upload_f32(bf, &[bf.len()])?;
+        let lora_buf = engine.upload_f32(lf, &[lf.len()])?;
+        // one output handle; the merged block is read back explicitly
+        let out = engine.execute(&exe, &[&base_buf, &lora_buf])?;
+        merged.flats[block_idx] = engine.read_f32(&out.outputs[0])?;
     }
     Ok(merged)
 }

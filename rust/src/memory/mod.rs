@@ -300,7 +300,7 @@ mod tests {
         let exe = engine.load_preset_exe("test-tiny", "train_step").unwrap();
         let state = ModelState::init(&p.blocks, 5);
         let blocks: Vec<_> =
-            state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+            state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
         let (b, s) = (p.model.batch, p.model.seq_len);
         let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 40) as i32).collect();
         let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();

@@ -109,12 +109,20 @@ impl SelectiveAdamW {
     }
 }
 
-/// The fused kernel: identical math to `python/compile/kernels/adamw.py`.
-pub fn fused_adamw(
+/// [`fused_adamw`] with a gradient pre-scale (global-norm clipping):
+/// every `g[i]` is replaced by `g[i] * scale` — rounded through f32
+/// exactly like the host loop's in-place clip multiply — before the
+/// moment updates. `scale == 1.0` is bit-identical to [`fused_adamw`]
+/// (f32 multiplication by 1.0 is exact), which is what keeps the
+/// device-resident composed step a bit-match of the host-loop oracle
+/// whether or not clipping fired.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_adamw_scaled(
     p: &mut [f32],
     g: &[f32],
     m: &mut [f32],
     v: &mut [f32],
+    scale: f32,
     lr: f32,
     step: u64,
     hp: AdamWParams,
@@ -125,7 +133,7 @@ pub fn fused_adamw(
     let (b1, b2) = (hp.b1, hp.b2);
     let (one_m_b1, one_m_b2) = (1.0 - b1, 1.0 - b2);
     for i in 0..p.len() {
-        let gi = g[i];
+        let gi = g[i] * scale;
         let mi = b1 * m[i] + one_m_b1 * gi;
         let vi = b2 * v[i] + one_m_b2 * gi * gi;
         m[i] = mi;
@@ -134,6 +142,40 @@ pub fn fused_adamw(
         let v_hat = vi / bc2;
         p[i] -= lr * (m_hat / (v_hat.sqrt() + hp.eps) + hp.wd * p[i]);
     }
+}
+
+/// Linear-warmup + cosine-decay schedule over f32 step arithmetic.
+///
+/// This is the single definition both sides of the backend boundary use:
+/// `RunConfig::lr_at` calls it with host-cast inputs, and the reference
+/// backend's `train_step_fused` entry calls it with the device-resident
+/// schedule/step tensors — all inputs pass through f32 the same way, so
+/// the device-computed learning rate is bit-identical to the host one
+/// (exact for step counts below 2^24).
+pub fn lr_cosine(lr: f32, warmup_steps: f32, total_steps: f32, min_lr_frac: f32, step: f32) -> f32 {
+    if warmup_steps > 0.0 && step < warmup_steps {
+        return lr * (step + 1.0) / warmup_steps;
+    }
+    let span = (total_steps - warmup_steps).max(1.0);
+    let progress = ((step - warmup_steps) / span).clamp(0.0, 1.0);
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+    lr * (min_lr_frac + (1.0 - min_lr_frac) * cos)
+}
+
+/// The fused kernel: identical math to `python/compile/kernels/adamw.py`.
+/// Delegates to [`fused_adamw_scaled`] with `scale == 1.0`, which is
+/// bit-identical (f32 multiplication by 1.0 is exact) — one inner loop to
+/// keep in lockstep, not two.
+pub fn fused_adamw(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    step: u64,
+    hp: AdamWParams,
+) {
+    fused_adamw_scaled(p, g, m, v, 1.0, lr, step, hp);
 }
 
 #[cfg(test)]

@@ -48,8 +48,8 @@ impl<B: Backend> HloAdamW<B> {
     ) -> Result<()> {
         assert!(p.len() == g.len() && p.len() == m.len() && p.len() == v.len());
         let n = p.len();
-        let lr_buf = engine.upload_f32(&[lr])?;
-        let step_buf = engine.upload_f32(&[step as f32])?;
+        let lr_buf = engine.upload_f32(&[lr], &[1])?;
+        let step_buf = engine.upload_f32(&[step as f32], &[1])?;
         let mut scratch = vec![0.0f32; self.chunk];
 
         let mut off = 0;
@@ -59,11 +59,11 @@ impl<B: Backend> HloAdamW<B> {
 
             let upload = |src: &[f32], scratch: &mut Vec<f32>| -> Result<B::Buffer> {
                 if len == self.chunk {
-                    engine.upload_f32(&src[range.clone()])
+                    engine.upload_f32(&src[range.clone()], &[self.chunk])
                 } else {
                     scratch[..len].copy_from_slice(&src[range.clone()]);
                     scratch[len..].fill(0.0);
-                    engine.upload_f32(scratch)
+                    engine.upload_f32(scratch, &[self.chunk])
                 }
             };
             let pb = upload(p, &mut scratch)?;
@@ -71,7 +71,7 @@ impl<B: Backend> HloAdamW<B> {
             let mb = upload(m, &mut scratch)?;
             let vb = upload(v, &mut scratch)?;
 
-            let out = engine.execute(&self.exe, &[&pb, &gb, &mb, &vb, &lr_buf, &step_buf])?;
+            let out = engine.execute_to_host(&self.exe, &[&pb, &gb, &mb, &vb, &lr_buf, &step_buf])?;
             p[range.clone()].copy_from_slice(&out.vec_f32(0)?[..len]);
             m[range.clone()].copy_from_slice(&out.vec_f32(1)?[..len]);
             v[range].copy_from_slice(&out.vec_f32(2)?[..len]);

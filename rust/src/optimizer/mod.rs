@@ -18,6 +18,8 @@ mod adamw;
 mod hlo_adamw;
 mod residency;
 
-pub use adamw::{fused_adamw, AdamWParams, BlockOptState, SelectiveAdamW};
+pub use adamw::{
+    fused_adamw, fused_adamw_scaled, lr_cosine, AdamWParams, BlockOptState, SelectiveAdamW,
+};
 pub use hlo_adamw::{native_hlo_parity as hlo_adamw_parity, HloAdamW};
 pub use residency::{PcieModel, ResidencyManager, ResidencyStats, StepTransfers};

@@ -6,6 +6,15 @@
 //! are evicted back to CPU. States for blocks that remain selected across
 //! consecutive steps stay resident on the GPU."
 //!
+//! Two kinds of transfer numbers coexist in this crate and must not be
+//! conflated. The backend's `TransferStats` counters (`runtime::Backend`)
+//! are **observed** bytes that actually crossed the executor boundary —
+//! since the device-resident trainer landed, an exploit step is *measured*
+//! to move only the batch/mask up and the loss scalar down. This module
+//! is the **model**: it prices the §3.3 optimizer-state prefetch/evict
+//! traffic a selective run would generate on the paper's PCIe testbed,
+//! which the reference substrate cannot observe.
+//!
 //! The real A6000/PCIe hardware isn't available here (repro band 0), so
 //! the manager executes the identical state machine against a
 //! deterministic transfer model:

@@ -1,44 +1,178 @@
-//! The pluggable compute-backend abstraction.
+//! The pluggable compute-backend abstraction: a device-resident,
+//! typed-tensor-handle API.
 //!
-//! Everything above this layer (trainer, optimizer, evaluator, experiment
-//! harness) is generic over [`Backend`]: an executor that can load an
-//! entrypoint (a "compiled executable"), hold uploaded tensors as opaque
-//! device buffers, and execute an entrypoint over buffers, returning the
-//! outputs as flat host `f32` vectors.
+//! Everything above this layer (trainer, optimizer, evaluator, serving
+//! engine, experiment harness) is generic over [`Backend`]: an executor
+//! that can load an entrypoint (a "compiled executable"), hold tensors as
+//! typed device-resident handles, execute an entrypoint over handles —
+//! returning *output handles*, not host data — and move bytes across the
+//! host↔device boundary only through explicit, byte-counted calls.
 //!
-//! Two implementations exist:
+//! # The handle model
 //!
-//! * [`crate::runtime::ReferenceBackend`] — the default: a pure-Rust CPU
-//!   executor whose "executables" dispatch to the native transformer
-//!   fwd/bwd in [`crate::model::forward`]. No artifacts, no Python, no
-//!   external crates; this is what CI builds and tests.
-//! * [`crate::runtime::Engine`] (cargo feature `pjrt`) — the PJRT path
-//!   that loads AOT-lowered HLO-text artifacts through the `xla` crate.
+//! * A `Backend::Buffer` is a **typed device tensor handle** with an
+//!   explicit dtype and shape ([`Backend::meta`]). Handles are cheap to
+//!   hold; the tensor they name lives on the executor's side of the
+//!   boundary (host vectors for the reference backend, `PjRtBuffer`s for
+//!   PJRT). A handle's tensor stays alive as long as any handle to it
+//!   does; dropping the last handle releases the buffer back to the
+//!   backend's pool.
+//! * **Uploads** ([`Backend::upload_f32`] / [`Backend::upload_i32`])
+//!   allocate a device tensor and copy host data in; **in-place writes**
+//!   ([`Backend::write_f32`] / [`Backend::write_i32`]) overwrite an
+//!   existing tensor without reallocation. Both count toward
+//!   [`TransferStats::h2d_bytes`].
+//! * **Execution** ([`Backend::execute`]) consumes argument handles and
+//!   returns [`DeviceOutputs`]: one *handle per output*. Nothing crosses
+//!   back to the host implicitly.
+//! * **Read-back** ([`Backend::read_f32`] / [`Backend::read_scalar_f32`])
+//!   is the only way host code sees device data, and every call counts
+//!   toward [`TransferStats::d2h_bytes`]. A training step that only reads
+//!   its loss scalar is *observably* a 4-byte download — the paper's
+//!   device-residency claim, measured instead of assumed.
 //!
-//! Entry names are shared between backends (`train_step`, `eval_loss`,
-//! `decode_step`, the serving pair `prefill` / `decode_step_kv`,
-//! `train_step_lora[2]`, `lora_merge[2]`, and the shared `adamw_update` /
-//! `grad_norm_sq` kernels), so a `Trainer<B>` behaves identically up to
-//! floating-point on either executor — the property the backend-parity
-//! test suite pins down. Backends that additionally implement
-//! [`crate::serve::KvBackend`] expose the serving pair as in-place
-//! kernels over slot-pooled caches; through plain [`Backend::execute`]
-//! the pair runs in its stateless cache-in/cache-out form.
+//! # Donation / in-place update semantics
+//!
+//! Some entrypoints update their inputs **in place** instead of returning
+//! fresh outputs (the XLA analogue is input→output buffer aliasing /
+//! donation). The contract is per-entry and documented in the entry
+//! catalog in [`crate::runtime`]: e.g. `adamw_update_inplace` overwrites
+//! its `p`/`m`/`v`/`t` arguments and returns nothing, and
+//! `train_step_fused` overwrites the selected blocks' parameters and
+//! optimizer moments while returning only the loss. Callers must not
+//! pass the same handle for two arguments of an in-place entry (the
+//! executor rejects the aliasing it can detect). Handles passed to
+//! non-donating entries are never mutated.
+//!
+//! # Transfer accounting
+//!
+//! [`Backend::transfer_stats`] exposes monotone counters for every byte
+//! that crossed the boundary plus every device-buffer allocation the
+//! backend performed. Snapshot before/after a region and diff with
+//! [`TransferStats::delta_since`]; the trainer does this per step and the
+//! bench suite enforces the exploit-step invariants (`d2h_bytes` == one
+//! f32 loss scalar, `h2d_bytes` == batch + mask upload, zero steady-state
+//! buffer allocations) on every CI run.
+//!
+//! # Migrating from the flat `HostOutputs` API
+//!
+//! Before this redesign, `execute` copied every output to the host
+//! eagerly and returned [`HostOutputs`]. That shape still exists as the
+//! provided convenience [`Backend::execute_to_host`] — identical
+//! semantics, one call — so host-consuming call sites migrate by renaming
+//! `execute` → `execute_to_host`. The differences to be aware of:
+//!
+//! * `upload_f32` now takes explicit dims (`&[data.len()]` for a flat
+//!   vector).
+//! * the download is now visible in `transfer_stats()` — code that
+//!   previously "got outputs for free" now observably pays for them;
+//! * hot loops should keep outputs as handles and read back only what
+//!   they need.
+//!
+//! Two implementations exist: [`crate::runtime::ReferenceBackend`]
+//! (default; pure-Rust CPU executor, what CI builds and tests) and the
+//! PJRT `Engine` behind the `pjrt` cargo feature. Entry names and
+//! layouts are shared between them — see the catalog in
+//! [`crate::runtime`].
 
 use std::rc::Rc;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::manifest::Manifest;
 
-/// Host-side copy of an executable's output tuple, backend-neutral: one
-/// flat `f32` vector per output (scalars are length-1 vectors).
+/// Element type of a device tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+        }
+    }
+}
+
+/// Shape + dtype of a device tensor handle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+}
+
+/// Monotone counters for host↔device traffic and device-buffer churn.
+///
+/// `h2d_bytes`/`d2h_bytes` count every byte moved by uploads, in-place
+/// writes and read-backs; `buffer_allocs`/`buffer_alloc_bytes` count
+/// device tensors the backend had to *allocate* (pool hits and in-place
+/// writes are free). Snapshot + [`TransferStats::delta_since`] gives the
+/// traffic of a region.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Host→device bytes (uploads + in-place writes).
+    pub h2d_bytes: u64,
+    /// Device→host bytes (explicit read-backs).
+    pub d2h_bytes: u64,
+    /// Number of host→device transfer calls.
+    pub h2d_transfers: u64,
+    /// Number of device→host transfer calls.
+    pub d2h_transfers: u64,
+    /// Fresh device-buffer allocations (buffer-pool misses).
+    pub buffer_allocs: u64,
+    /// Bytes of those fresh allocations.
+    pub buffer_alloc_bytes: u64,
+}
+
+impl TransferStats {
+    /// Counter-wise difference `self - earlier` (both from the same
+    /// backend, `earlier` snapshotted first).
+    pub fn delta_since(&self, earlier: &TransferStats) -> TransferStats {
+        TransferStats {
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            h2d_transfers: self.h2d_transfers - earlier.h2d_transfers,
+            d2h_transfers: self.d2h_transfers - earlier.d2h_transfers,
+            buffer_allocs: self.buffer_allocs - earlier.buffer_allocs,
+            buffer_alloc_bytes: self.buffer_alloc_bytes - earlier.buffer_alloc_bytes,
+        }
+    }
+}
+
+/// Output handles of one [`Backend::execute`] call: one device tensor
+/// handle per output (entries with pure in-place semantics return an
+/// empty vector). Nothing here has touched the host yet — read back what
+/// you need with [`Backend::read_f32`] / [`Backend::read_scalar_f32`].
+pub struct DeviceOutputs<T> {
+    pub outputs: Vec<T>,
+    /// Wallclock of the execute call (device compute + sync).
+    pub execute_s: f64,
+}
+
+/// Host-side copy of an executable's output tuple: one flat `f32` vector
+/// per output (scalars are length-1 vectors). Produced by the
+/// [`Backend::execute_to_host`] convenience — the migration shim for the
+/// pre-handle API, and still the right shape for cold paths that consume
+/// every output on the host anyway.
 pub struct HostOutputs {
     pub outputs: Vec<Vec<f32>>,
     /// Wallclock of the execute call (device compute + sync).
     pub execute_s: f64,
-    /// Wallclock of the device→host copy of the outputs (0 for host
-    /// backends, where outputs are produced in place).
+    /// Wallclock of the device→host copy of the outputs.
     pub download_s: f64,
 }
 
@@ -81,10 +215,11 @@ impl HostOutputs {
 
 /// A compute executor the training stack can run on.
 ///
-/// `Buffer` is an opaque device-resident tensor (host vectors for the
-/// reference backend, `PjRtBuffer` for PJRT); `Exe` is a loaded
+/// `Buffer` is a typed device tensor handle (see the module docs for the
+/// handle model, donation rules and read-back costs); `Exe` is a loaded
 /// entrypoint. Executables are cached by the backend, so `load_*_exe` is
-/// cheap after the first call for a given entry.
+/// cheap after the first call for a given entry, and loading asserts the
+/// manifest-declared input arity against the executable.
 pub trait Backend {
     type Buffer;
     type Exe;
@@ -101,14 +236,63 @@ pub trait Backend {
     /// Load a shared (preset-independent) executable, e.g. `"adamw_update"`.
     fn load_shared_exe(&self, entry: &str) -> Result<Rc<Self::Exe>>;
 
-    /// Upload a flat f32 vector.
-    fn upload_f32(&self, data: &[f32]) -> Result<Self::Buffer>;
+    /// Upload an f32 tensor of shape `dims` (use `&[data.len()]` for a
+    /// flat vector). Counts `data.len() * 4` bytes of H2D traffic.
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Self::Buffer>;
 
-    /// Upload an i32 matrix (row-major) of shape `dims`.
+    /// Upload an i32 tensor (row-major) of shape `dims`.
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Self::Buffer>;
 
-    /// Execute an entrypoint and return all outputs on the host.
-    fn execute(&self, exe: &Self::Exe, args: &[&Self::Buffer]) -> Result<HostOutputs>;
+    /// Overwrite an existing f32 device tensor in place with host data of
+    /// the same element count. H2D traffic, but **no allocation**: the
+    /// tensor every existing handle names is updated.
+    fn write_f32(&self, dst: &Self::Buffer, data: &[f32]) -> Result<()>;
+
+    /// [`Backend::write_f32`] for i32 tensors.
+    fn write_i32(&self, dst: &Self::Buffer, data: &[i32]) -> Result<()>;
+
+    /// Dtype + shape of a handle.
+    fn meta(&self, buf: &Self::Buffer) -> TensorMeta;
+
+    /// Execute an entrypoint over argument handles and return the output
+    /// *handles*. No output data crosses to the host here; in-place
+    /// entries mutate their donated arguments instead (see the entry
+    /// catalog in [`crate::runtime`]).
+    fn execute(
+        &self,
+        exe: &Self::Exe,
+        args: &[&Self::Buffer],
+    ) -> Result<DeviceOutputs<Self::Buffer>>;
+
+    /// Copy a device tensor back to the host (f32 tensors only). The
+    /// explicit — and only — D2H path; counts `numel * 4` bytes.
+    fn read_f32(&self, buf: &Self::Buffer) -> Result<Vec<f32>>;
+
+    /// Read back a single f32 scalar (first element of a length-≥1
+    /// tensor). Counts 4 bytes of D2H traffic.
+    fn read_scalar_f32(&self, buf: &Self::Buffer) -> Result<f32>;
+
+    /// Whether this executor honors the in-place (donation) entry
+    /// contract — entries like `adamw_update_inplace` actually mutating
+    /// the tensors their argument handles name. The trainer only selects
+    /// its device-resident mode on backends that return `true`; a
+    /// manifest exporting the entry names is not enough, because a purely
+    /// functional executor would silently discard every update.
+    fn supports_donation(&self) -> bool;
+
+    /// Monotone transfer/allocation counters (see [`TransferStats`]).
+    fn transfer_stats(&self) -> TransferStats;
+
+    /// Execute and copy **every** output back to the host — the
+    /// pre-handle `execute` semantics, kept for cold paths and migration.
+    /// The downloads are real: they show up in [`Backend::transfer_stats`].
+    fn execute_to_host(&self, exe: &Self::Exe, args: &[&Self::Buffer]) -> Result<HostOutputs> {
+        let out = self.execute(exe, args)?;
+        let t0 = Instant::now();
+        let host: Vec<Vec<f32>> =
+            out.outputs.iter().map(|b| self.read_f32(b)).collect::<Result<_>>()?;
+        Ok(HostOutputs::new(host, out.execute_s, t0.elapsed().as_secs_f64()))
+    }
 }
 
 #[cfg(test)]
@@ -124,5 +308,34 @@ mod tests {
         assert_eq!(taken, vec![1.0, 2.0]);
         assert!(out.vec_f32(1).unwrap().is_empty());
         assert!(out.scalar_f32(9).is_err());
+    }
+
+    #[test]
+    fn transfer_stats_delta() {
+        let a = TransferStats {
+            h2d_bytes: 100,
+            d2h_bytes: 4,
+            h2d_transfers: 2,
+            d2h_transfers: 1,
+            buffer_allocs: 3,
+            buffer_alloc_bytes: 100,
+        };
+        let mut b = a;
+        b.h2d_bytes += 40;
+        b.d2h_bytes += 4;
+        b.h2d_transfers += 1;
+        b.d2h_transfers += 1;
+        let d = b.delta_since(&a);
+        assert_eq!(d.h2d_bytes, 40);
+        assert_eq!(d.d2h_bytes, 4);
+        assert_eq!(d.buffer_allocs, 0);
+    }
+
+    #[test]
+    fn tensor_meta_accounting() {
+        let m = TensorMeta { dtype: DType::F32, dims: vec![4, 8] };
+        assert_eq!(m.numel(), 32);
+        assert_eq!(m.bytes(), 128);
+        assert_eq!(DType::I32.size(), 4);
     }
 }

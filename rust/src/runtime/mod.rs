@@ -3,12 +3,20 @@
 //! # The `Backend` trait
 //!
 //! The coordinator never talks to an executor directly — everything goes
-//! through [`Backend`]: load an entrypoint ([`Backend::load_preset_exe`] /
-//! [`Backend::load_shared_exe`]), move tensors ([`Backend::upload_f32`] /
-//! [`Backend::upload_i32`]), run ([`Backend::execute`]) and read the
-//! outputs back as flat `f32` vectors ([`HostOutputs`]). `Trainer`,
-//! `Evaluator`, the selective-AdamW kernel driver and the experiment
-//! harness are all generic over `B: Backend`.
+//! through [`Backend`], a **device-resident tensor-handle API**: load an
+//! entrypoint ([`Backend::load_preset_exe`] / [`Backend::load_shared_exe`];
+//! loading asserts the manifest-declared input arity), move tensors
+//! across the boundary explicitly ([`Backend::upload_f32`] /
+//! [`Backend::upload_i32`] / in-place [`Backend::write_f32`]), run
+//! ([`Backend::execute`], which returns output *handles*), and read back
+//! only what the host actually needs ([`Backend::read_f32`] /
+//! [`Backend::read_scalar_f32`]). Every byte that crosses is counted in
+//! [`Backend::transfer_stats`] — a device-resident exploit step is
+//! *observed* to download exactly its 4-byte loss scalar, not assumed to.
+//! `Trainer`, `Evaluator`, the serving engine and the experiment harness
+//! are all generic over `B: Backend`; see [`crate::runtime::backend`] for
+//! the handle model, donation rules, read-back costs and the
+//! `HostOutputs` migration note.
 //!
 //! # Implementations
 //!
@@ -18,36 +26,65 @@
 //!   ([`Manifest::builtin`], mirroring `python/compile/presets.py`), so no
 //!   artifacts, Python or HLO files are needed. This is what CI builds,
 //!   tests and trains end-to-end.
-//! * [`Engine`] — the PJRT path, behind the **`pjrt` cargo feature**: it
+//! * `Engine` — the PJRT path, behind the **`pjrt` cargo feature**: it
 //!   loads AOT-lowered HLO-text artifacts (`make artifacts`) through the
 //!   `xla` crate and keeps parameters device-resident between steps.
 //!   Default builds never compile or link `xla`; the feature is
 //!   type-checked in CI against the in-tree `rust/vendor/xla` API stub and
 //!   runs for real when the path dependency points at actual bindings.
 //!
-//! Both backends expose the same entry names (`train_step`, the
-//! selection-gated `train_step_masked` (blocks + tokens + targets + block
-//! mask, returning loss + the *selected* blocks' gradient flats only),
-//! `train_step_lora[2]`, `eval_loss`, `decode_step`, the serving pair
-//! `prefill` / `decode_step_kv`, `lora_merge[2]`, and the shared
-//! `adamw_update` / `grad_norm_sq` kernels) with identical
+//! # Entry catalog
+//!
+//! Both backends expose the same entry names with identical
 //! argument/output layouts, so checkpoints, configs and metrics are
 //! portable across them and the parity suite can hold one against the
-//! other. The serving subsystem built on top of these entries —
-//! KV-cache slot pool, continuous-batching scheduler, engine — lives in
-//! [`crate::serve`].
+//! other. With `n` = number of blocks, `nl` = LoRA blocks:
+//!
+//! | entry | inputs | outputs | in-place |
+//! |---|---|---|---|
+//! | `train_step` (+`_pallas`) | blocks·n, tokens, targets | loss, grad·n | — |
+//! | `train_step_masked` | blocks·n, tokens, targets, mask | loss, grad per *selected* block | — |
+//! | `train_step_fused` | blocks·n, m·n, v·n, t·n, sched, step, tokens, targets, mask | loss | p/m/v/t of selected blocks, step |
+//! | `train_step_lora[2]` | blocks·n, adapters·nl, tokens, targets | loss, adapter grad·nl | — |
+//! | `eval_loss` | blocks·n, tokens, targets | loss | — |
+//! | `decode_step` | blocks·n, tokens | logits | — |
+//! | `prefill` | blocks·n, tokens | logits, k, v | — |
+//! | `decode_step_kv` | blocks·n, k, v, token, pos | logits, k, v | — |
+//! | `lora_merge[2]` | base block, adapter block | merged block | — |
+//! | `adamw_update` (shared) | p, g, m, v, lr, step | p, m, v | — |
+//! | `adamw_update_inplace` (shared) | p, g, m, v, t, lr, scale | *(none)* | p, m, v, t |
+//! | `grad_norm_sq` (shared) | g | sum(g²) | — |
+//!
+//! The in-place entries carry the donation semantics of the redesigned
+//! API: the tensors their argument handles name are overwritten, nothing
+//! is reallocated, and nothing crosses the boundary. `train_step_fused`
+//! evaluates the cosine learning-rate schedule *on device* from its
+//! `sched`/`step` tensors (`optimizer::lr_cosine` — the same f32 formula
+//! `RunConfig::lr_at` uses), so a steady-state exploit step's entire
+//! boundary traffic is the batch + mask upload and the loss-scalar
+//! read-back. The `train_step_masked` and `train_step_fused` entries are
+//! reference-backend-first (mask-dependent output arity / buffer
+//! donation; an XLA lowering would pad arity and declare input→output
+//! aliasing); backends whose manifests lack them degrade gracefully — the
+//! trainer falls back to the full backward and the host-loop optimizer.
+//!
+//! The serving subsystem built on top of these entries — KV-cache slot
+//! pool, continuous-batching scheduler, engine — lives in [`crate::serve`];
+//! backends additionally implementing `serve::KvBackend` run the serving
+//! pair as in-place kernels over slot-pooled caches, while plain
+//! [`Backend::execute`] runs the stateless cache-in/cache-out form.
 
-mod backend;
+pub mod backend;
 #[cfg(feature = "pjrt")]
 mod engine;
 mod manifest;
 pub mod presets;
 mod reference;
 
-pub use backend::{Backend, HostOutputs};
+pub use backend::{Backend, DType, DeviceOutputs, HostOutputs, TensorMeta, TransferStats};
 #[cfg(feature = "pjrt")]
-pub use engine::{Engine, Exe};
+pub use engine::{Engine, EngineTensor, Exe};
 pub use manifest::{
     AdamWHyper, ArtifactInfo, BlockSpec, Manifest, ModelSpec, Preset, TensorSpec, TokenizerSpec,
 };
-pub use reference::{RefBuffer, RefExe, ReferenceBackend};
+pub use reference::{RefExe, RefTensor, ReferenceBackend, TensorData};

@@ -168,6 +168,13 @@ fn preset(model: ModelSpec, pallas: bool) -> Preset {
     // lowering would pad to fixed arity, so the AOT export keeps this
     // entry reference-backend-first.
     add("train_step_masked", n + 3);
+    // fully device-resident exploit step: blocks + m + v + t (per-block
+    // f32[1] step counts) + sched f32[4] + global step f32[1] + tokens +
+    // targets + mask. Updates the selected blocks' p/m/v/t in place
+    // (donated buffers) and returns only the loss scalar — like the
+    // masked entry, reference-backend-first (XLA would express the
+    // donation as input→output aliasing at fixed arity).
+    add("train_step_fused", 4 * n + 5);
     if pallas {
         add("train_step_pallas", n + 2);
     }
@@ -205,6 +212,14 @@ pub(crate) fn builtin_manifest() -> Manifest {
 
     let mut shared = HashMap::new();
     shared.insert("adamw_update".to_string(), artifact("adamw_update.hlo.txt".into(), 6));
+    // donating form over whole-block device tensors: (p, g, m, v, t, lr,
+    // scale), updates p/m/v/t in place, no outputs — the composed
+    // device-resident optimizer path (see `train_step_fused` for the
+    // fully fused one)
+    shared.insert(
+        "adamw_update_inplace".to_string(),
+        artifact("adamw_update_inplace.hlo.txt".into(), 7),
+    );
     shared.insert("grad_norm_sq".to_string(), artifact("grad_norm_sq.hlo.txt".into(), 1));
 
     Manifest {

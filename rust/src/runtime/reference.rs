@@ -3,21 +3,39 @@
 //! Implements [`Backend`] with no artifacts, no Python and no external
 //! crates: "executables" are dispatch tags into the native transformer
 //! fwd/bwd (`model::forward`) and the fused AdamW / grad-norm kernels, and
-//! "device buffers" are plain host vectors. Entry names and argument
-//! layouts are byte-for-byte the PJRT engine's, so the trainer, evaluator
-//! and benches run unchanged on either backend.
+//! "device tensors" are host vectors behind [`RefTensor`] handles. Entry
+//! names and argument layouts are byte-for-byte the PJRT engine's, so the
+//! trainer, evaluator and benches run unchanged on either backend.
 //!
 //! This is the trusted dense reference the selection methods are
 //! validated against (GRASS / BlockLLM-style parity methodology): CI
 //! trains real models through this backend on every push.
 //!
-//! The backend owns a [`Workspace`] arena shared by every entrypoint it
-//! executes: the first step warms the slab pool, after which the compute
-//! path (GEMMs, activations, attention scratch, per-projection gradient
-//! staging) performs zero heap allocations per step. The arena's
-//! high-water mark — the real per-step buffer footprint — is exposed via
-//! [`ReferenceBackend::workspace_stats`] and surfaced through the
-//! `memory` accounting and the `train_step` bench JSON.
+//! # Device-tensor handles and the buffer pool
+//!
+//! A [`RefTensor`] is a shared handle (`Rc<RefCell<..>>`) to one typed
+//! tensor. Handles make three things possible that the old flat
+//! upload/execute/download API could not express:
+//!
+//! * **In-place entries** (`train_step_fused`, `adamw_update_inplace`)
+//!   mutate the tensors their argument handles name — parameter and
+//!   moment buffers are updated without reallocation or host traffic,
+//!   the donation semantics of the [`Backend`] contract.
+//! * **Explicit read-back**: outputs come back as handles; only
+//!   [`Backend::read_f32`] moves bytes, and every byte is counted in
+//!   [`Backend::transfer_stats`].
+//! * **Buffer pooling**: when the last handle to a tensor drops, the
+//!   backend's registry reuses its storage for the next same-shaped
+//!   allocation. Steady-state training loops therefore perform zero
+//!   device-buffer allocations — `transfer_stats().buffer_allocs` is the
+//!   observable, and the bench suite pins it.
+//!
+//! The backend also owns a [`Workspace`] arena shared by every entrypoint
+//! it executes: the first step warms the slab pool, after which the
+//! compute path (GEMMs, activations, attention scratch, per-projection
+//! gradient staging) performs zero heap allocations per step. The arena's
+//! high-water mark — the real per-step activation/scratch footprint — is
+//! exposed via [`ReferenceBackend::workspace_stats`].
 //!
 //! The serving entries (`prefill`, `decode_step_kv`) are exposed here in
 //! their stateless functional form (caches as explicit inputs/outputs,
@@ -26,7 +44,7 @@
 //! against slot-pooled caches through the backend's arena — that is the
 //! zero-copy, zero-steady-state-allocation path.
 
-use std::cell::RefCell;
+use std::cell::{Cell, Ref, RefCell, RefMut};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
@@ -34,32 +52,81 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::model::forward;
-use crate::optimizer::{fused_adamw, AdamWParams};
+use crate::optimizer::{fused_adamw, fused_adamw_scaled, lr_cosine, AdamWParams};
 use crate::selection::grad_norm::block_norm_sq;
 use crate::util::workspace::{Workspace, WorkspaceStats};
 
-use super::backend::{Backend, HostOutputs};
+use super::backend::{Backend, DType, DeviceOutputs, TensorMeta, TransferStats};
 use super::manifest::{Manifest, Preset};
 
-/// Host-side "device buffer" for the reference backend.
-pub enum RefBuffer {
-    F32(Vec<f32>),
-    I32(Vec<i32>, Vec<usize>),
+/// Storage of one reference-backend "device" tensor.
+pub enum TensorData {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
 }
 
-impl RefBuffer {
-    fn as_f32(&self) -> Result<&[f32]> {
+impl TensorData {
+    fn meta(&self) -> TensorMeta {
         match self {
-            RefBuffer::F32(v) => Ok(v),
-            RefBuffer::I32(..) => Err(anyhow!("expected an f32 buffer, got i32")),
+            TensorData::F32 { dims, .. } => TensorMeta { dtype: DType::F32, dims: dims.clone() },
+            TensorData::I32 { dims, .. } => TensorMeta { dtype: DType::I32, dims: dims.clone() },
         }
     }
+}
 
-    fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            RefBuffer::I32(v, _) => Ok(v),
-            RefBuffer::F32(_) => Err(anyhow!("expected an i32 buffer, got f32")),
-        }
+/// Typed device-tensor handle of the reference backend. Cloning a handle
+/// shares the underlying tensor; the storage is recycled by the backend's
+/// buffer pool once the last handle drops.
+pub struct RefTensor {
+    cell: Rc<RefCell<TensorData>>,
+}
+
+impl Clone for RefTensor {
+    fn clone(&self) -> Self {
+        Self { cell: self.cell.clone() }
+    }
+}
+
+impl RefTensor {
+    fn new(data: TensorData) -> Self {
+        Self { cell: Rc::new(RefCell::new(data)) }
+    }
+
+    /// Borrow the tensor as an f32 slice (errors on i32 tensors).
+    pub fn as_f32(&self) -> Result<Ref<'_, [f32]>> {
+        Ref::filter_map(self.cell.borrow(), |d| match d {
+            TensorData::F32 { data, .. } => Some(data.as_slice()),
+            TensorData::I32 { .. } => None,
+        })
+        .map_err(|_| anyhow!("expected an f32 tensor, got i32"))
+    }
+
+    /// Borrow the tensor as an i32 slice (errors on f32 tensors).
+    pub fn as_i32(&self) -> Result<Ref<'_, [i32]>> {
+        Ref::filter_map(self.cell.borrow(), |d| match d {
+            TensorData::I32 { data, .. } => Some(data.as_slice()),
+            TensorData::F32 { .. } => None,
+        })
+        .map_err(|_| anyhow!("expected an i32 tensor, got f32"))
+    }
+
+    /// Mutably borrow as f32 — the in-place (donation) path. Errors if
+    /// the tensor is i32 or already borrowed (the same handle passed for
+    /// two arguments of an in-place entry).
+    fn as_f32_mut(&self) -> Result<RefMut<'_, [f32]>> {
+        let cell = self
+            .cell
+            .try_borrow_mut()
+            .map_err(|_| anyhow!("tensor is aliased by another argument of an in-place entry"))?;
+        RefMut::filter_map(cell, |d| match d {
+            TensorData::F32 { data, .. } => Some(data.as_mut_slice()),
+            TensorData::I32 { .. } => None,
+        })
+        .map_err(|_| anyhow!("expected an f32 tensor, got i32"))
+    }
+
+    fn meta(&self) -> TensorMeta {
+        self.cell.borrow().meta()
     }
 }
 
@@ -67,6 +134,7 @@ impl RefBuffer {
 enum Entry {
     TrainStep,
     TrainStepMasked,
+    TrainStepFused,
     TrainStepLora { double: bool },
     EvalLoss,
     DecodeStep,
@@ -74,12 +142,41 @@ enum Entry {
     DecodeStepKv,
     LoraMerge { double: bool },
     AdamWUpdate,
+    AdamWUpdateInplace,
     GradNormSq,
+}
+
+impl Entry {
+    /// Input arity of this entry for a preset with `n` base blocks and
+    /// `nl` LoRA blocks — the number the manifest's [`ArtifactInfo`]
+    /// (`n_inputs`) must agree with at load time.
+    ///
+    /// [`ArtifactInfo`]: super::manifest::ArtifactInfo
+    fn arity(self, n: usize, nl: usize) -> usize {
+        match self {
+            Entry::TrainStep => n + 2,
+            Entry::TrainStepMasked => n + 3,
+            // blocks + m + v + t (one scalar tensor per block) + sched +
+            // step + tokens + targets + mask
+            Entry::TrainStepFused => 4 * n + 5,
+            Entry::TrainStepLora { .. } => n + nl + 2,
+            Entry::EvalLoss => n + 2,
+            Entry::DecodeStep => n + 1,
+            Entry::Prefill => n + 1,
+            Entry::DecodeStepKv => n + 4,
+            Entry::LoraMerge { .. } => 2,
+            Entry::AdamWUpdate => 6,
+            Entry::AdamWUpdateInplace => 7,
+            Entry::GradNormSq => 1,
+        }
+    }
 }
 
 /// A "loaded executable": an entry tag bound to a preset (or shared).
 pub struct RefExe {
     pub name: String,
+    /// Input arity asserted against the manifest at load time.
+    pub n_inputs: usize,
     entry: Entry,
     preset: Option<String>,
 }
@@ -91,7 +188,15 @@ pub struct ReferenceBackend {
     /// Step-scoped buffer arena shared by all entrypoints (warm after the
     /// first execute; steady-state steps allocate nothing).
     ws: RefCell<Workspace>,
+    /// Device-buffer registry: every live tensor plus recyclable freed
+    /// storage (strong count 1 ⇒ only the registry holds it).
+    registry: RefCell<Vec<Rc<RefCell<TensorData>>>>,
+    stats: Cell<TransferStats>,
 }
+
+/// Registry size above which freed buffers are garbage-collected on the
+/// next registration (keeps long explore phases from hoarding storage).
+const REGISTRY_GC_LEN: usize = 512;
 
 impl Default for ReferenceBackend {
     fn default() -> Self {
@@ -112,6 +217,8 @@ impl ReferenceBackend {
             manifest,
             cache: RefCell::new(HashMap::new()),
             ws: RefCell::new(Workspace::new()),
+            registry: RefCell::new(Vec::new()),
+            stats: Cell::new(TransferStats::default()),
         }
     }
 
@@ -142,12 +249,97 @@ impl ReferenceBackend {
         f(&mut self.ws.borrow_mut())
     }
 
+    fn bump(&self, f: impl FnOnce(&mut TransferStats)) {
+        let mut s = self.stats.get();
+        f(&mut s);
+        self.stats.set(s);
+    }
+
+    /// Register freshly-allocated tensor storage (a buffer-pool miss).
+    fn adopt(&self, data: TensorData) -> RefTensor {
+        let bytes = match &data {
+            TensorData::F32 { data, .. } => data.len() * 4,
+            TensorData::I32 { data, .. } => data.len() * 4,
+        };
+        self.bump(|s| {
+            s.buffer_allocs += 1;
+            s.buffer_alloc_bytes += bytes as u64;
+        });
+        let mut reg = self.registry.borrow_mut();
+        if reg.len() >= REGISTRY_GC_LEN {
+            reg.retain(|c| Rc::strong_count(c) > 1);
+        }
+        let t = RefTensor::new(data);
+        reg.push(t.cell.clone());
+        t
+    }
+
+    /// Allocate an f32 tensor, preferring a freed same-size buffer from
+    /// the registry (a pool hit allocates nothing).
+    fn alloc_f32(&self, numel: usize, dims: Vec<usize>) -> RefTensor {
+        {
+            let reg = self.registry.borrow();
+            for cell in reg.iter() {
+                if Rc::strong_count(cell) != 1 {
+                    continue;
+                }
+                let mut d = cell.borrow_mut();
+                if let TensorData::F32 { data, dims: dd } = &mut *d {
+                    if data.len() == numel {
+                        *dd = dims;
+                        drop(d);
+                        return RefTensor { cell: cell.clone() };
+                    }
+                }
+            }
+        }
+        self.adopt(TensorData::F32 { data: vec![0.0; numel], dims })
+    }
+
+    /// Allocate an i32 tensor from the pool (see [`Self::alloc_f32`]).
+    fn alloc_i32(&self, numel: usize, dims: Vec<usize>) -> RefTensor {
+        {
+            let reg = self.registry.borrow();
+            for cell in reg.iter() {
+                if Rc::strong_count(cell) != 1 {
+                    continue;
+                }
+                let mut d = cell.borrow_mut();
+                if let TensorData::I32 { data, dims: dd } = &mut *d {
+                    if data.len() == numel {
+                        *dd = dims;
+                        drop(d);
+                        return RefTensor { cell: cell.clone() };
+                    }
+                }
+            }
+        }
+        self.adopt(TensorData::I32 { data: vec![0; numel], dims })
+    }
+
+    /// Hand a kernel-produced vector out as a device tensor (the output
+    /// buffer an XLA executable would have allocated for it).
+    fn out_f32(&self, data: Vec<f32>, dims: Vec<usize>) -> RefTensor {
+        self.adopt(TensorData::F32 { data, dims })
+    }
+
+    /// Pool-backed scalar/loss output: reuses freed storage, so hot loops
+    /// that drop their output handle each step allocate nothing.
+    fn out_f32_pooled(&self, data: &[f32], dims: Vec<usize>) -> RefTensor {
+        let t = self.alloc_f32(data.len(), dims);
+        if let TensorData::F32 { data: dst, .. } = &mut *t.cell.borrow_mut() {
+            dst.copy_from_slice(data);
+        }
+        t
+    }
+
     fn parse_entry(entry: &str) -> Result<Entry> {
         Ok(match entry {
             // the Pallas-attention artifact computes the same function;
             // the reference backend has exactly one attention path
             "train_step" | "train_step_pallas" => Entry::TrainStep,
             "train_step_masked" => Entry::TrainStepMasked,
+            "train_step_fused" => Entry::TrainStepFused,
             "train_step_lora" => Entry::TrainStepLora { double: false },
             "train_step_lora2" => Entry::TrainStepLora { double: true },
             "eval_loss" => Entry::EvalLoss,
@@ -157,6 +349,7 @@ impl ReferenceBackend {
             "lora_merge" => Entry::LoraMerge { double: false },
             "lora_merge2" => Entry::LoraMerge { double: true },
             "adamw_update" => Entry::AdamWUpdate,
+            "adamw_update_inplace" => Entry::AdamWUpdateInplace,
             "grad_norm_sq" => Entry::GradNormSq,
             other => return Err(anyhow!("reference backend has no entrypoint {other:?}")),
         })
@@ -170,29 +363,39 @@ impl ReferenceBackend {
         self.manifest.preset(name)
     }
 
-    fn run(&self, exe: &RefExe, args: &[&RefBuffer]) -> Result<Vec<Vec<f32>>> {
-        let want = |n: usize| -> Result<()> {
-            if args.len() != n {
-                return Err(anyhow!("{}: expected {n} inputs, got {}", exe.name, args.len()));
-            }
-            Ok(())
-        };
+    /// Borrow `args` as f32 slices (block tables of the forward kernels).
+    fn f32_guards<'a>(&self, args: &'a [&RefTensor]) -> Result<Vec<Ref<'a, [f32]>>> {
+        args.iter().map(|a| a.as_f32()).collect()
+    }
+
+    fn run(&self, exe: &RefExe, args: &[&RefTensor]) -> Result<Vec<RefTensor>> {
+        if args.len() != exe.n_inputs {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                exe.name,
+                exe.n_inputs,
+                args.len()
+            ));
+        }
         let pad = self.manifest.tokenizer.pad;
         match exe.entry {
             Entry::TrainStep => {
                 let p = self.preset(exe)?;
                 let n = p.blocks.len();
-                want(n + 2)?;
-                let flats: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
                 let tokens = args[n].as_i32()?;
                 let targets = args[n + 1].as_i32()?;
                 let mut ws = self.ws.borrow_mut();
                 let (loss, grads) = forward::train_step_in(
-                    &mut ws, &p.model, &p.blocks, &flats, tokens, targets, pad,
+                    &mut ws, &p.model, &p.blocks, &flats, &tokens, &targets, pad,
                 )?;
-                let mut out = vec![vec![loss]];
-                out.extend(grads);
+                drop(ws);
+                let mut out = vec![self.out_f32_pooled(&[loss], vec![1])];
+                out.extend(grads.into_iter().map(|g| {
+                    let dims = vec![g.len()];
+                    self.out_f32(g, dims)
+                }));
                 Ok(out)
             }
             Entry::TrainStepMasked => {
@@ -203,69 +406,156 @@ impl ReferenceBackend {
                 // boundary.
                 let p = self.preset(exe)?;
                 let n = p.blocks.len();
-                want(n + 3)?;
-                let flats: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
                 let tokens = args[n].as_i32()?;
                 let targets = args[n + 1].as_i32()?;
-                let mask_raw = args[n + 2].as_i32()?;
-                let mask: Vec<bool> = mask_raw.iter().map(|&x| x != 0).collect();
+                let mask: Vec<bool> = args[n + 2].as_i32()?.iter().map(|&x| x != 0).collect();
                 let mut ws = self.ws.borrow_mut();
                 let (loss, grads) = forward::train_step_masked_in(
-                    &mut ws, &p.model, &p.blocks, &flats, tokens, targets, pad, &mask,
+                    &mut ws, &p.model, &p.blocks, &flats, &tokens, &targets, pad, &mask,
                 )?;
-                let mut out = vec![vec![loss]];
-                out.extend(grads);
+                drop(ws);
+                let mut out = vec![self.out_f32_pooled(&[loss], vec![1])];
+                out.extend(grads.into_iter().map(|g| {
+                    let dims = vec![g.len()];
+                    self.out_f32(g, dims)
+                }));
                 Ok(out)
+            }
+            Entry::TrainStepFused => {
+                // The fully device-resident exploit step. Inputs:
+                // blocks[n] | m[n] | v[n] | t[n] (f32[1] step counts) |
+                // sched f32[4] = [lr, warmup, total, min_lr_frac] |
+                // step f32[1] (global step, for the lr schedule) |
+                // tokens | targets | mask i32[n].
+                //
+                // Runs the masked backward, then applies fused AdamW to
+                // the selected blocks **in place** (donated p/m/v/t
+                // buffers), advances their step counts and the global
+                // step. Single output: the loss scalar — gradients and
+                // optimizer state never cross the boundary. Global-norm
+                // clipping is not part of this entry; the trainer routes
+                // clipped runs through the composed
+                // masked-backward + `grad_norm_sq` + `adamw_update_inplace`
+                // path instead.
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                let (blocks_a, rest) = args.split_at(n);
+                let (m_a, rest) = rest.split_at(n);
+                let (v_a, rest) = rest.split_at(n);
+                let (t_a, rest) = rest.split_at(n);
+                let sched: Vec<f32> = rest[0].as_f32()?.to_vec();
+                if sched.len() != 4 {
+                    return Err(anyhow!("{}: sched must be f32[4]", exe.name));
+                }
+                let step_f = rest[1]
+                    .as_f32()?
+                    .first()
+                    .copied()
+                    .ok_or_else(|| anyhow!("{}: empty step input", exe.name))?;
+                let mask: Vec<bool> = rest[4].as_i32()?.iter().map(|&x| x != 0).collect();
+
+                let (loss, grads) = {
+                    let guards = self.f32_guards(blocks_a)?;
+                    let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
+                    let tokens = rest[2].as_i32()?;
+                    let targets = rest[3].as_i32()?;
+                    let mut ws = self.ws.borrow_mut();
+                    forward::train_step_masked_in(
+                        &mut ws, &p.model, &p.blocks, &flats, &tokens, &targets, pad, &mask,
+                    )?
+                };
+
+                let lr = lr_cosine(sched[0], sched[1], sched[2], sched[3], step_f);
+                let hp = AdamWParams::from(self.manifest.adamw);
+                let selected: Vec<usize> =
+                    (0..n).filter(|&b| mask.get(b).copied().unwrap_or(false)).collect();
+                for (j, &b) in selected.iter().enumerate() {
+                    let mut pm = blocks_a[b].as_f32_mut()?;
+                    let mut mm = m_a[b].as_f32_mut()?;
+                    let mut vm = v_a[b].as_f32_mut()?;
+                    let mut tm = t_a[b].as_f32_mut()?;
+                    let g = &grads[j];
+                    if pm.len() != g.len() || mm.len() != g.len() || vm.len() != g.len() {
+                        return Err(anyhow!("{}: block {b} p/m/v/grad size mismatch", exe.name));
+                    }
+                    if tm.is_empty() {
+                        return Err(anyhow!("{}: block {b} step count must be f32[1]", exe.name));
+                    }
+                    let before = tm[0];
+                    tm[0] += 1.0;
+                    if tm[0] == before {
+                        // f32 integers saturate at 2^24; the host-loop
+                        // oracle's u64 counter would keep going, so fail
+                        // loudly instead of silently diverging
+                        return Err(anyhow!(
+                            "{}: block {b} step count saturated f32 at {before}",
+                            exe.name
+                        ));
+                    }
+                    fused_adamw(&mut pm, g, &mut mm, &mut vm, lr, tm[0] as u64, hp);
+                }
+                let mut sm = rest[1].as_f32_mut()?;
+                if sm.is_empty() {
+                    return Err(anyhow!("{}: step must be f32[1]", exe.name));
+                }
+                let before = sm[0];
+                sm[0] += 1.0;
+                if sm[0] == before {
+                    return Err(anyhow!("{}: global step saturated f32 at {before}", exe.name));
+                }
+                drop(sm);
+                Ok(vec![self.out_f32_pooled(&[loss], vec![1])])
             }
             Entry::TrainStepLora { double } => {
                 let p = self.preset(exe)?;
                 let lblocks = if double { &p.lora_blocks2 } else { &p.lora_blocks };
                 let (n, nl) = (p.blocks.len(), lblocks.len());
-                want(n + nl + 2)?;
-                let base: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
-                let lora: Vec<&[f32]> =
-                    args[n..n + nl].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let base_g = self.f32_guards(&args[..n])?;
+                let base: Vec<&[f32]> = base_g.iter().map(|g| &**g).collect();
+                let lora_g = self.f32_guards(&args[n..n + nl])?;
+                let lora: Vec<&[f32]> = lora_g.iter().map(|g| &**g).collect();
                 let tokens = args[n + nl].as_i32()?;
                 let targets = args[n + nl + 1].as_i32()?;
                 let mut ws = self.ws.borrow_mut();
                 let (loss, grads) = forward::train_step_lora_in(
-                    &mut ws, &p.model, &p.blocks, lblocks, &base, &lora, tokens, targets, pad,
+                    &mut ws, &p.model, &p.blocks, lblocks, &base, &lora, &tokens, &targets, pad,
                 )?;
-                let mut out = vec![vec![loss]];
-                out.extend(grads);
+                drop(ws);
+                let mut out = vec![self.out_f32_pooled(&[loss], vec![1])];
+                out.extend(grads.into_iter().map(|g| {
+                    let dims = vec![g.len()];
+                    self.out_f32(g, dims)
+                }));
                 Ok(out)
             }
             Entry::EvalLoss => {
                 let p = self.preset(exe)?;
                 let n = p.blocks.len();
-                want(n + 2)?;
-                let flats: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
+                let tokens = args[n].as_i32()?;
+                let targets = args[n + 1].as_i32()?;
                 let mut ws = self.ws.borrow_mut();
                 let loss = forward::eval_loss_in(
-                    &mut ws,
-                    &p.model,
-                    &p.blocks,
-                    &flats,
-                    args[n].as_i32()?,
-                    args[n + 1].as_i32()?,
-                    pad,
+                    &mut ws, &p.model, &p.blocks, &flats, &tokens, &targets, pad,
                 )?;
-                Ok(vec![vec![loss]])
+                drop(ws);
+                Ok(vec![self.out_f32_pooled(&[loss], vec![1])])
             }
             Entry::DecodeStep => {
                 let p = self.preset(exe)?;
                 let n = p.blocks.len();
-                want(n + 1)?;
-                let flats: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
+                let tokens = args[n].as_i32()?;
                 let mut ws = self.ws.borrow_mut();
-                let logits = forward::decode_logits_in(
-                    &mut ws, &p.model, &p.blocks, &flats, args[n].as_i32()?,
-                )?;
-                Ok(vec![logits])
+                let logits =
+                    forward::decode_logits_in(&mut ws, &p.model, &p.blocks, &flats, &tokens)?;
+                drop(ws);
+                let dims = vec![logits.len()];
+                Ok(vec![self.out_f32(logits, dims)])
             }
             // The two serving entries in their stateless functional form
             // (cache-in/cache-out, mirroring what an XLA lowering returns):
@@ -274,9 +564,8 @@ impl ReferenceBackend {
             Entry::Prefill => {
                 let p = self.preset(exe)?;
                 let n = p.blocks.len();
-                want(n + 1)?;
-                let flats: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
                 let tokens = args[n].as_i32()?;
                 let m = &p.model;
                 let d = m.n_heads * m.d_head;
@@ -295,16 +584,20 @@ impl ReferenceBackend {
                         .collect();
                     let mut seq = forward::SeqKv { layers, pos: 0 };
                     let mut ws = self.ws.borrow_mut();
-                    forward::prefill_in(&mut ws, m, &p.blocks, &flats, tokens, &mut seq)?
+                    forward::prefill_in(&mut ws, m, &p.blocks, &flats, &tokens, &mut seq)?
                 };
-                Ok(vec![logits, k_store, v_store])
+                let (ld, kd) = (vec![logits.len()], vec![k_store.len()]);
+                Ok(vec![
+                    self.out_f32(logits, ld),
+                    self.out_f32(k_store, kd.clone()),
+                    self.out_f32(v_store, kd),
+                ])
             }
             Entry::DecodeStepKv => {
                 let p = self.preset(exe)?;
                 let n = p.blocks.len();
-                want(n + 4)?;
-                let flats: Vec<&[f32]> =
-                    args[..n].iter().map(|b| b.as_f32()).collect::<Result<_>>()?;
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
                 let m = &p.model;
                 let d = m.n_heads * m.d_head;
                 let mut k_store = args[n].as_f32()?.to_vec();
@@ -344,25 +637,29 @@ impl ReferenceBackend {
                     let mut ws = self.ws.borrow_mut();
                     forward::decode_step_kv_in(&mut ws, m, &p.blocks, &flats, &[token], &mut seqs)?
                 };
-                Ok(vec![logits, k_store, v_store])
+                let (ld, kd) = (vec![logits.len()], vec![k_store.len()]);
+                Ok(vec![
+                    self.out_f32(logits, ld),
+                    self.out_f32(k_store, kd.clone()),
+                    self.out_f32(v_store, kd),
+                ])
             }
             Entry::LoraMerge { double } => {
                 let p = self.preset(exe)?;
-                want(2)?;
                 let lblocks = if double { &p.lora_blocks2 } else { &p.lora_blocks };
                 if p.model.n_layers == 0 {
                     return Err(anyhow!("{}: preset has no layers", exe.name));
                 }
-                let merged = forward::lora_merge(
-                    &p.blocks[1],
-                    &lblocks[0],
-                    args[0].as_f32()?,
-                    args[1].as_f32()?,
-                )?;
-                Ok(vec![merged])
+                let base = args[0].as_f32()?;
+                let lora = args[1].as_f32()?;
+                let merged = forward::lora_merge(&p.blocks[1], &lblocks[0], &base, &lora)?;
+                let dims = vec![merged.len()];
+                Ok(vec![self.out_f32(merged, dims)])
             }
             Entry::AdamWUpdate => {
-                want(6)?;
+                // Functional form (p, g, m, v, lr, step) -> (p', m', v'):
+                // kept for the chunked HloAdamW parity path; the trainer's
+                // device-resident loop uses `adamw_update_inplace`.
                 let mut p = args[0].as_f32()?.to_vec();
                 let g = args[1].as_f32()?;
                 let mut m = args[2].as_f32()?.to_vec();
@@ -379,20 +676,62 @@ impl ReferenceBackend {
                     return Err(anyhow!("adamw_update: p/g/m/v length mismatch"));
                 }
                 let hp = AdamWParams::from(self.manifest.adamw);
-                fused_adamw(&mut p, g, &mut m, &mut v, lr, step_f.round() as u64, hp);
-                Ok(vec![p, m, v])
+                fused_adamw(&mut p, &g, &mut m, &mut v, lr, step_f.round() as u64, hp);
+                drop(g);
+                let dims = vec![p.len()];
+                Ok(vec![
+                    self.out_f32(p, dims.clone()),
+                    self.out_f32(m, dims.clone()),
+                    self.out_f32(v, dims),
+                ])
+            }
+            Entry::AdamWUpdateInplace => {
+                // Donating form (p, g, m, v, t, lr, scale): p/m/v are
+                // updated in place, t (the block's f32[1] step count) is
+                // advanced, and `g * scale` feeds the moments (the
+                // global-norm clip multiply). No outputs — the composed
+                // device-resident optimizer path over handles.
+                let g = args[1].as_f32()?;
+                let lr = *args[5]
+                    .as_f32()?
+                    .first()
+                    .ok_or_else(|| anyhow!("adamw_update_inplace: empty lr input"))?;
+                let scale = *args[6]
+                    .as_f32()?
+                    .first()
+                    .ok_or_else(|| anyhow!("adamw_update_inplace: empty scale input"))?;
+                let mut p = args[0].as_f32_mut()?;
+                let mut m = args[2].as_f32_mut()?;
+                let mut v = args[3].as_f32_mut()?;
+                let mut t = args[4].as_f32_mut()?;
+                if g.len() != p.len() || m.len() != p.len() || v.len() != p.len() {
+                    return Err(anyhow!("adamw_update_inplace: p/g/m/v length mismatch"));
+                }
+                if t.is_empty() {
+                    return Err(anyhow!("adamw_update_inplace: step count must be f32[1]"));
+                }
+                let hp = AdamWParams::from(self.manifest.adamw);
+                let before = t[0];
+                t[0] += 1.0;
+                if t[0] == before {
+                    // see TrainStepFused: f32 integers saturate at 2^24
+                    return Err(anyhow!("adamw_update_inplace: step saturated f32 at {before}"));
+                }
+                fused_adamw_scaled(&mut p, &g, &mut m, &mut v, scale, lr, t[0] as u64, hp);
+                Ok(Vec::new())
             }
             Entry::GradNormSq => {
-                want(1)?;
                 let g = args[0].as_f32()?;
-                Ok(vec![vec![block_norm_sq(g) as f32]])
+                let norm = block_norm_sq(&g) as f32;
+                drop(g);
+                Ok(vec![self.out_f32_pooled(&[norm], vec![1])])
             }
         }
     }
 }
 
 impl Backend for ReferenceBackend {
-    type Buffer = RefBuffer;
+    type Buffer = RefTensor;
     type Exe = RefExe;
 
     fn platform(&self) -> String {
@@ -406,14 +745,24 @@ impl Backend for ReferenceBackend {
     fn load_preset_exe(&self, preset: &str, entry: &str) -> Result<Rc<RefExe>> {
         // mirror the PJRT engine: loading fails for entries the preset
         // does not export (e.g. train_step_pallas on non-Pallas presets)
-        self.manifest.preset(preset)?.artifact(entry)?;
+        let p = self.manifest.preset(preset)?;
+        let info = p.artifact(entry)?;
         let key = format!("{preset}:{entry}");
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
         }
+        let tag = Self::parse_entry(entry)?;
+        let arity = tag.arity(p.blocks.len(), p.lora_blocks.len());
+        if info.n_inputs != arity {
+            return Err(anyhow!(
+                "{key}: manifest declares {} inputs, executable takes {arity}",
+                info.n_inputs
+            ));
+        }
         let exe = Rc::new(RefExe {
             name: key.clone(),
-            entry: Self::parse_entry(entry)?,
+            n_inputs: arity,
+            entry: tag,
             preset: Some(preset.to_string()),
         });
         self.cache.borrow_mut().insert(key, exe.clone());
@@ -421,7 +770,8 @@ impl Backend for ReferenceBackend {
     }
 
     fn load_shared_exe(&self, entry: &str) -> Result<Rc<RefExe>> {
-        self.manifest
+        let info = self
+            .manifest
             .shared
             .get(entry)
             .ok_or_else(|| anyhow!("no shared artifact {entry:?}"))?;
@@ -429,31 +779,123 @@ impl Backend for ReferenceBackend {
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
         }
-        let exe = Rc::new(RefExe {
-            name: key.clone(),
-            entry: Self::parse_entry(entry)?,
-            preset: None,
-        });
+        let tag = Self::parse_entry(entry)?;
+        let arity = tag.arity(0, 0);
+        if info.n_inputs != arity {
+            return Err(anyhow!(
+                "{key}: manifest declares {} inputs, executable takes {arity}",
+                info.n_inputs
+            ));
+        }
+        let exe = Rc::new(RefExe { name: key.clone(), n_inputs: arity, entry: tag, preset: None });
         self.cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
     }
 
-    fn upload_f32(&self, data: &[f32]) -> Result<RefBuffer> {
-        Ok(RefBuffer::F32(data.to_vec()))
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<RefTensor> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            return Err(anyhow!("upload f32: {} elements vs dims {dims:?}", data.len()));
+        }
+        let t = self.alloc_f32(numel, dims.to_vec());
+        if let TensorData::F32 { data: dst, .. } = &mut *t.cell.borrow_mut() {
+            dst.copy_from_slice(data);
+        }
+        self.bump(|s| {
+            s.h2d_bytes += (data.len() * 4) as u64;
+            s.h2d_transfers += 1;
+        });
+        Ok(t)
     }
 
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<RefBuffer> {
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<RefTensor> {
         let numel: usize = dims.iter().product();
         if numel != data.len() {
             return Err(anyhow!("upload i32: {} elements vs dims {dims:?}", data.len()));
         }
-        Ok(RefBuffer::I32(data.to_vec(), dims.to_vec()))
+        let t = self.alloc_i32(numel, dims.to_vec());
+        if let TensorData::I32 { data: dst, .. } = &mut *t.cell.borrow_mut() {
+            dst.copy_from_slice(data);
+        }
+        self.bump(|s| {
+            s.h2d_bytes += (data.len() * 4) as u64;
+            s.h2d_transfers += 1;
+        });
+        Ok(t)
     }
 
-    fn execute(&self, exe: &RefExe, args: &[&RefBuffer]) -> Result<HostOutputs> {
+    fn write_f32(&self, dst: &RefTensor, data: &[f32]) -> Result<()> {
+        let mut d = dst.as_f32_mut()?;
+        if d.len() != data.len() {
+            return Err(anyhow!("write f32: {} elements into tensor of {}", data.len(), d.len()));
+        }
+        d.copy_from_slice(data);
+        drop(d);
+        self.bump(|s| {
+            s.h2d_bytes += (data.len() * 4) as u64;
+            s.h2d_transfers += 1;
+        });
+        Ok(())
+    }
+
+    fn write_i32(&self, dst: &RefTensor, data: &[i32]) -> Result<()> {
+        let mut cell = dst
+            .cell
+            .try_borrow_mut()
+            .map_err(|_| anyhow!("tensor is aliased by another borrow"))?;
+        match &mut *cell {
+            TensorData::I32 { data: d, .. } if d.len() == data.len() => d.copy_from_slice(data),
+            TensorData::I32 { data: d, .. } => {
+                return Err(anyhow!("write i32: {} elements into tensor of {}", data.len(), d.len()))
+            }
+            TensorData::F32 { .. } => return Err(anyhow!("write i32 into an f32 tensor")),
+        }
+        drop(cell);
+        self.bump(|s| {
+            s.h2d_bytes += (data.len() * 4) as u64;
+            s.h2d_transfers += 1;
+        });
+        Ok(())
+    }
+
+    fn meta(&self, buf: &RefTensor) -> TensorMeta {
+        buf.meta()
+    }
+
+    fn execute(&self, exe: &RefExe, args: &[&RefTensor]) -> Result<DeviceOutputs<RefTensor>> {
         let t0 = Instant::now();
         let outputs = self.run(exe, args)?;
-        Ok(HostOutputs::new(outputs, t0.elapsed().as_secs_f64(), 0.0))
+        Ok(DeviceOutputs { outputs, execute_s: t0.elapsed().as_secs_f64() })
+    }
+
+    fn read_f32(&self, buf: &RefTensor) -> Result<Vec<f32>> {
+        let data = buf.as_f32()?.to_vec();
+        self.bump(|s| {
+            s.d2h_bytes += (data.len() * 4) as u64;
+            s.d2h_transfers += 1;
+        });
+        Ok(data)
+    }
+
+    fn read_scalar_f32(&self, buf: &RefTensor) -> Result<f32> {
+        let g = buf.as_f32()?;
+        let x = g.first().copied().ok_or_else(|| anyhow!("read scalar from empty tensor"))?;
+        drop(g);
+        self.bump(|s| {
+            s.d2h_bytes += 4;
+            s.d2h_transfers += 1;
+        });
+        Ok(x)
+    }
+
+    fn supports_donation(&self) -> bool {
+        // handles are RefCell-backed host vectors; in-place entries
+        // genuinely mutate them
+        true
+    }
+
+    fn transfer_stats(&self) -> TransferStats {
+        self.stats.get()
     }
 }
 
@@ -484,12 +926,24 @@ mod tests {
     }
 
     #[test]
+    fn manifest_arity_asserted_at_load() {
+        // a manifest that lies about an entry's input count must be
+        // rejected when the executable is loaded, not at execute time
+        let mut m = Manifest::builtin();
+        let preset = m.presets.get_mut("test-tiny").unwrap();
+        preset.artifacts.get_mut("train_step").unwrap().n_inputs = 3;
+        let b = ReferenceBackend::with_manifest(m);
+        let err = b.load_preset_exe("test-tiny", "train_step").unwrap_err();
+        assert!(format!("{err}").contains("declares 3 inputs"), "{err}");
+    }
+
+    #[test]
     fn grad_norm_sq_entry_matches_native() {
         let b = ReferenceBackend::new();
         let exe = b.load_shared_exe("grad_norm_sq").unwrap();
         let g = vec![2.0f32; 1000];
-        let buf = b.upload_f32(&g).unwrap();
-        let out = b.execute(&exe, &[&buf]).unwrap();
+        let buf = b.upload_f32(&g, &[g.len()]).unwrap();
+        let out = b.execute_to_host(&exe, &[&buf]).unwrap();
         let norm = out.scalar_f32(0).unwrap();
         assert!((norm - 4000.0).abs() < 1e-3, "{norm}");
     }
@@ -500,18 +954,19 @@ mod tests {
         let p = b.manifest().preset("test-tiny").unwrap().clone();
         let exe = b.load_preset_exe("test-tiny", "train_step").unwrap();
         let state = crate::model::ModelState::init(&p.blocks, 2);
-        let blocks: Vec<_> = state.flats.iter().map(|f| b.upload_f32(f).unwrap()).collect();
+        let blocks: Vec<_> =
+            state.flats.iter().map(|f| b.upload_f32(f, &[f.len()]).unwrap()).collect();
         let (bb, ss) = (p.model.batch, p.model.seq_len);
         let tokens: Vec<i32> = (0..bb * ss).map(|i| 4 + (i % 40) as i32).collect();
         let tok = b.upload_i32(&tokens, &[bb, ss]).unwrap();
         let mut args: Vec<_> = blocks.iter().collect();
         args.push(&tok);
         args.push(&tok);
-        let out0 = b.execute(&exe, &args).unwrap();
+        let out0 = b.execute_to_host(&exe, &args).unwrap();
         let warm = b.workspace_stats();
         assert!(warm.high_water_bytes > 0);
         for _ in 0..3 {
-            let out = b.execute(&exe, &args).unwrap();
+            let out = b.execute_to_host(&exe, &args).unwrap();
             assert_eq!(out.outputs, out0.outputs, "arena reuse must stay bit-deterministic");
         }
         let steady = b.workspace_stats();
@@ -520,9 +975,86 @@ mod tests {
     }
 
     #[test]
-    fn upload_i32_validates_dims() {
+    fn upload_validates_dims() {
         let b = ReferenceBackend::new();
         assert!(b.upload_i32(&[1, 2, 3], &[2, 2]).is_err());
         assert!(b.upload_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        assert!(b.upload_f32(&[1.0; 3], &[4]).is_err());
+        let t = b.upload_f32(&[1.0; 6], &[2, 3]).unwrap();
+        let meta = b.meta(&t);
+        assert_eq!(meta.dtype, DType::F32);
+        assert_eq!(meta.dims, vec![2, 3]);
+        assert_eq!(meta.bytes(), 24);
+    }
+
+    #[test]
+    fn transfer_counters_observe_boundary_bytes() {
+        let b = ReferenceBackend::new();
+        let before = b.transfer_stats();
+        let t = b.upload_f32(&[1.0; 8], &[8]).unwrap();
+        let after_up = b.transfer_stats().delta_since(&before);
+        assert_eq!(after_up.h2d_bytes, 32);
+        assert_eq!(after_up.h2d_transfers, 1);
+        assert_eq!(after_up.d2h_bytes, 0);
+
+        let v = b.read_f32(&t).unwrap();
+        assert_eq!(v, vec![1.0; 8]);
+        let after_read = b.transfer_stats().delta_since(&before);
+        assert_eq!(after_read.d2h_bytes, 32);
+
+        b.write_f32(&t, &[2.0; 8]).unwrap();
+        assert_eq!(b.read_scalar_f32(&t).unwrap(), 2.0);
+        let fin = b.transfer_stats().delta_since(&before);
+        assert_eq!(fin.h2d_bytes, 64);
+        assert_eq!(fin.d2h_bytes, 36);
+        // one tensor was ever allocated; the write reused it in place
+        assert_eq!(fin.buffer_allocs, 1);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_dropped_tensors() {
+        let b = ReferenceBackend::new();
+        let t = b.upload_f32(&[1.0; 64], &[64]).unwrap();
+        let one = b.transfer_stats().buffer_allocs;
+        drop(t);
+        // same-size upload after the drop must be a pool hit
+        let t2 = b.upload_f32(&[3.0; 64], &[64]).unwrap();
+        assert_eq!(b.transfer_stats().buffer_allocs, one, "freed buffer must be reused");
+        assert_eq!(b.read_f32(&t2).unwrap(), vec![3.0; 64]);
+        // a different size is a genuine new allocation
+        let _t3 = b.upload_f32(&[0.0; 65], &[65]).unwrap();
+        assert_eq!(b.transfer_stats().buffer_allocs, one + 1);
+    }
+
+    #[test]
+    fn adamw_update_inplace_donates_buffers() {
+        let b = ReferenceBackend::new();
+        let exe = b.load_shared_exe("adamw_update_inplace").unwrap();
+        let n = 32;
+        let (p_host, g_host) = (vec![0.5f32; n], vec![0.1f32; n]);
+        let zeros = vec![0.0f32; n];
+        let p = b.upload_f32(&p_host, &[n]).unwrap();
+        let g = b.upload_f32(&g_host, &[n]).unwrap();
+        let m = b.upload_f32(&zeros, &[n]).unwrap();
+        let v = b.upload_f32(&zeros, &[n]).unwrap();
+        let t = b.upload_f32(&[0.0], &[1]).unwrap();
+        let lr = b.upload_f32(&[1e-2], &[1]).unwrap();
+        let scale = b.upload_f32(&[1.0], &[1]).unwrap();
+        let out = b.execute(&exe, &[&p, &g, &m, &v, &t, &lr, &scale]).unwrap();
+        assert!(out.outputs.is_empty(), "in-place entry returns no outputs");
+
+        // native oracle over the same inputs
+        let mut po = p_host;
+        let mut mo = vec![0.0f32; n];
+        let mut vo = vec![0.0f32; n];
+        let hp = AdamWParams::from(b.manifest().adamw);
+        fused_adamw(&mut po, &g_host, &mut mo, &mut vo, 1e-2, 1, hp);
+        assert_eq!(b.read_f32(&p).unwrap(), po, "p updated in place");
+        assert_eq!(b.read_f32(&m).unwrap(), mo, "m updated in place");
+        assert_eq!(b.read_f32(&v).unwrap(), vo, "v updated in place");
+        assert_eq!(b.read_scalar_f32(&t).unwrap(), 1.0, "step count advanced");
+
+        // aliasing p and m is rejected, not silently corrupted
+        assert!(b.execute(&exe, &[&p, &g, &p, &v, &t, &lr, &scale]).is_err());
     }
 }

@@ -85,6 +85,22 @@ pub fn block_norms<S: AsRef<[f32]> + Sync>(grads: &[S]) -> Vec<f64> {
     par_map(grads, |_, g| block_norm(g.as_ref()))
 }
 
+/// [`block_norms`] rounded through the backend boundary: each norm is
+/// `sqrt(f64(f32(sum(g²))))` — exactly the value the device-resident
+/// trainer derives from reading back the `grad_norm_sq` entry's f32
+/// scalar. The host-loop trainer uses this variant so the two execution
+/// modes feed bit-identical norms into clipping, telemetry and the
+/// selection strategies (the bit-parity oracle contract).
+pub fn block_norms_boundary<S: AsRef<[f32]> + Sync>(grads: &[S]) -> Vec<f64> {
+    par_map(grads, |_, g| norm_from_sq_f32(block_norm_sq(g.as_ref()) as f32))
+}
+
+/// Reconstruct a block norm from the f32 squared-norm scalar that crossed
+/// the backend boundary (shared by both trainer execution modes).
+pub fn norm_from_sq_f32(norm_sq: f32) -> f64 {
+    (norm_sq as f64).sqrt()
+}
+
 /// `sqrt(sum(g^2))` in f64 accumulation (the blocks are small enough that
 /// one pass per block is fine; chunked to keep the accumulator in f64).
 pub fn block_norm(g: &[f32]) -> f64 {

@@ -131,8 +131,11 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 preset.blocks.len()
             ));
         }
-        let blocks =
-            state.flats.iter().map(|f| backend.upload_f32(f)).collect::<Result<Vec<_>>>()?;
+        let blocks = state
+            .flats
+            .iter()
+            .map(|f| backend.upload_f32(f, &[f.len()]))
+            .collect::<Result<Vec<_>>>()?;
         let pool = KvPool::new(&preset.model, cfg.slots.max(1));
         let kv_bytes = pool.bytes();
         Ok(Self {

@@ -19,7 +19,7 @@
 //! The [`KvBackend`] trait is the seam between the engine and a compute
 //! backend. [`crate::runtime::ReferenceBackend`] implements it in-place
 //! over its workspace arena (zero steady-state decode allocations); the
-//! PJRT [`crate::runtime::Engine`] implements it functionally through the
+//! PJRT `Engine` (cargo feature `pjrt`) implements it functionally through the
 //! lowered `prefill` / `decode_step_kv` artifacts (cache-in/cache-out,
 //! pending device-resident caches).
 //!
@@ -38,10 +38,10 @@ pub use engine::{Response, ServeConfig, ServeEngine, ServeStats};
 pub use kv::KvPool;
 pub use scheduler::{Request, Scheduler};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::model::forward::{self, SeqKv};
-use crate::runtime::{Backend, Preset, RefBuffer, ReferenceBackend};
+use crate::runtime::{Backend, Preset, RefTensor, ReferenceBackend};
 
 /// A compute backend that can run the KV-cached serving path.
 ///
@@ -73,14 +73,10 @@ pub trait KvBackend: Backend {
     ) -> Result<Vec<f32>>;
 }
 
-fn ref_flats<'a>(blocks: &'a [RefBuffer]) -> Result<Vec<&'a [f32]>> {
-    blocks
-        .iter()
-        .map(|b| match b {
-            RefBuffer::F32(v) => Ok(v.as_slice()),
-            RefBuffer::I32(..) => Err(anyhow!("expected f32 weight buffers")),
-        })
-        .collect()
+/// Borrow the weight handles as f32 slices (guards keep the dynamic
+/// borrows alive while the kernels run — handles are `RefCell`-backed).
+fn ref_guards<'a>(blocks: &'a [RefTensor]) -> Result<Vec<std::cell::Ref<'a, [f32]>>> {
+    blocks.iter().map(|b| b.as_f32()).collect()
 }
 
 /// In-place fast path: the kernels run directly against the backend's
@@ -89,11 +85,12 @@ impl KvBackend for ReferenceBackend {
     fn kv_prefill(
         &self,
         preset: &Preset,
-        blocks: &[RefBuffer],
+        blocks: &[RefTensor],
         prompt: &[i32],
         seq: &mut SeqKv<'_>,
     ) -> Result<Vec<f32>> {
-        let flats = ref_flats(blocks)?;
+        let guards = ref_guards(blocks)?;
+        let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
         self.with_workspace(|ws| {
             forward::prefill_in(ws, &preset.model, &preset.blocks, &flats, prompt, seq)
         })
@@ -102,11 +99,12 @@ impl KvBackend for ReferenceBackend {
     fn kv_decode_step(
         &self,
         preset: &Preset,
-        blocks: &[RefBuffer],
+        blocks: &[RefTensor],
         tokens: &[i32],
         seqs: &mut [SeqKv<'_>],
     ) -> Result<Vec<f32>> {
-        let flats = ref_flats(blocks)?;
+        let guards = ref_guards(blocks)?;
+        let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
         self.with_workspace(|ws| {
             forward::decode_step_kv_in(ws, &preset.model, &preset.blocks, &flats, tokens, seqs)
         })
@@ -133,13 +131,13 @@ impl KvBackend for crate::runtime::Engine {
         // prompt is an error, not a panic in the cache scatter below
         let cap = seq.capacity(d);
         if t == 0 || t > cap {
-            return Err(anyhow!("prefill: prompt length {t} outside 1..={cap}"));
+            return Err(anyhow::anyhow!("prefill: prompt length {t} outside 1..={cap}"));
         }
         let exe = self.load_preset_exe(&preset.model.name, "prefill")?;
         let tok = self.upload_i32(prompt, &[1, t])?;
         let mut args: Vec<&Self::Buffer> = blocks.iter().collect();
         args.push(&tok);
-        let mut out = self.execute(&exe, &args)?;
+        let mut out = self.execute_to_host(&exe, &args)?;
         let logits = out.take_vec(0)?;
         let k = out.take_vec(1)?;
         let v = out.take_vec(2)?;
@@ -165,13 +163,13 @@ impl KvBackend for crate::runtime::Engine {
                 seq.layers.iter().flat_map(|l| l.k.iter().copied()).collect();
             let v_flat: Vec<f32> =
                 seq.layers.iter().flat_map(|l| l.v.iter().copied()).collect();
-            let k_buf = self.upload_f32(&k_flat)?;
-            let v_buf = self.upload_f32(&v_flat)?;
+            let k_buf = self.upload_f32(&k_flat, &[k_flat.len()])?;
+            let v_buf = self.upload_f32(&v_flat, &[v_flat.len()])?;
             let tok_buf = self.upload_i32(&[tok], &[1])?;
             let pos_buf = self.upload_i32(&[seq.pos as i32], &[1])?;
             let mut args: Vec<&Self::Buffer> = blocks.iter().collect();
             args.extend([&k_buf, &v_buf, &tok_buf, &pos_buf]);
-            let mut out = self.execute(&exe, &args)?;
+            let mut out = self.execute_to_host(&exe, &args)?;
             all.extend(out.take_vec(0)?);
             let k_new = out.take_vec(1)?;
             let v_new = out.take_vec(2)?;

@@ -37,6 +37,12 @@ pub struct StepRecord {
     pub t_step_sim: f64,
     /// bytes of optimizer state resident after the step (simulated VRAM).
     pub vram_opt_bytes: usize,
+    /// observed host→device bytes this step (backend transfer counters —
+    /// measured at the boundary, not modeled).
+    pub h2d_bytes: u64,
+    /// observed device→host bytes this step (a device-resident exploit
+    /// step is exactly 4: the loss scalar).
+    pub d2h_bytes: u64,
 }
 
 /// Aggregated wallclock buckets over a run.
@@ -71,6 +77,8 @@ impl StepRecord {
             ("t_stall_sim", Value::num(self.t_stall_sim)),
             ("t_step_sim", Value::num(self.t_step_sim)),
             ("vram_opt_bytes", Value::num(self.vram_opt_bytes as f64)),
+            ("h2d_bytes", Value::num(self.h2d_bytes as f64)),
+            ("d2h_bytes", Value::num(self.d2h_bytes as f64)),
         ])
     }
 }
@@ -226,6 +234,8 @@ mod tests {
             t_stall_sim: 0.0,
             t_step_sim: 0.05,
             vram_opt_bytes: 0,
+            h2d_bytes: 0,
+            d2h_bytes: 0,
         }
     }
 

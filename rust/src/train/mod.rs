@@ -2,20 +2,29 @@
 //! AdamW, residency accounting, metrics.
 //!
 //! One [`Trainer`] drives one run on any `runtime::Backend` (the pure-Rust
-//! reference executor by default, PJRT under the `pjrt` feature):
+//! reference executor by default, PJRT under the `pjrt` feature), in one
+//! of two execution modes ([`ExecMode`]):
 //!
-//! 1. next batch (deterministic generator) → upload tokens/targets;
-//! 2. re-upload only *dirty* parameter blocks (those the optimizer touched
-//!    last step — the device-side mirror of selective updates);
-//! 3. execute the fused train-step HLO → loss + per-block grads;
-//! 4. per-block grad norms (rayon) → optional global clip;
-//! 5. `SelectionStrategy::select` → set of blocks to update;
-//! 6. residency manager prefetch/evict accounting (§3.3);
-//! 7. selective AdamW on the chosen blocks;
-//! 8. metrics (measured wallclock buckets + modeled accelerator time).
+//! * **Device-resident** (default when the manifest exports the in-place
+//!   entries): parameters and AdamW moments are uploaded once and live on
+//!   the device as tensor handles. A clip-free exploit step runs the
+//!   fused `train_step_fused` entry — the batch + mask go up, the 4-byte
+//!   loss scalar comes down, and *nothing else* crosses the boundary
+//!   (observed per step via the backend's transfer counters). Norm-ranking
+//!   steps execute the backward over handles, read back one f32 squared
+//!   norm per block through `grad_norm_sq`, and compose
+//!   `adamw_update_inplace` over the selected blocks' handles.
+//! * **Host loop** (the pre-redesign round-trip, retained as the
+//!   bit-parity oracle): gradients downloaded every step, AdamW on host
+//!   state, dirty blocks re-uploaded.
+//!
+//! Either way a step is: next batch → upload → selection-gated execute →
+//! (norms → choose) → selective AdamW → residency accounting (§3.3) →
+//! metrics (measured wallclock + observed transfer bytes + modeled
+//! accelerator time).
 
 mod costmodel;
 mod trainer;
 
 pub use costmodel::{CostModel, CostModelParams};
-pub use trainer::{Trainer, TrainSummary};
+pub use trainer::{ExecMode, Trainer, TrainSummary};

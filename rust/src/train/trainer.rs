@@ -18,6 +18,24 @@ use crate::telemetry::{MetricsLog, StepRecord, Timing};
 
 use super::costmodel::{CostModel, CostModelParams};
 
+/// How the trainer drives the backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Parameters and AdamW moments live on the device as tensor handles;
+    /// exploit steps run the fused in-place entry (upload batch + mask,
+    /// read back the loss scalar — nothing else crosses), norm-ranking
+    /// steps read back per-block norms and compose `adamw_update_inplace`
+    /// over handles. The default whenever the backend's manifest exports
+    /// the device-resident entries.
+    DeviceResident,
+    /// The pre-redesign host round-trip: gradients downloaded every step,
+    /// AdamW on host state, dirty blocks re-uploaded. Retained as the
+    /// bit-parity oracle the device-resident path is held to
+    /// (`tests/device_resident.rs`), and as the fallback for manifests
+    /// without the in-place entries.
+    HostLoop,
+}
+
 /// End-of-run summary (everything the experiment harness consumes).
 #[derive(Debug, Clone)]
 pub struct TrainSummary {
@@ -43,10 +61,17 @@ pub struct TrainSummary {
     pub exploit_steps: u64,
     /// Steps that ran the masked (selection-gated) backward kernel.
     pub masked_steps: u64,
+    /// Steps that ran the fully fused device-resident entry.
+    pub fused_steps: u64,
     /// Total per-block gradient-norm reductions performed across the run
     /// (0 for a pure-exploit run with clipping off — the paper's
     /// "avoids gradient access" property, observed).
     pub norm_reduced_blocks: u64,
+    /// Observed host→device bytes summed over the run's steps (backend
+    /// transfer counters, not the residency simulation).
+    pub h2d_bytes: u64,
+    /// Observed device→host bytes summed over the run's steps.
+    pub d2h_bytes: u64,
 }
 
 impl TrainSummary {
@@ -70,7 +95,10 @@ impl TrainSummary {
             ("explore_steps", Value::num(self.explore_steps as f64)),
             ("exploit_steps", Value::num(self.exploit_steps as f64)),
             ("masked_steps", Value::num(self.masked_steps as f64)),
+            ("fused_steps", Value::num(self.fused_steps as f64)),
             ("norm_reduced_blocks", Value::num(self.norm_reduced_blocks as f64)),
+            ("h2d_bytes", Value::num(self.h2d_bytes as f64)),
+            ("d2h_bytes", Value::num(self.d2h_bytes as f64)),
         ])
     }
 }
@@ -83,37 +111,108 @@ enum Mode<B: Backend> {
     Lora { base_device: Vec<B::Buffer>, double_rank: bool },
 }
 
+/// Device-resident optimizer state: AdamW moments and per-block step
+/// counts uploaded once at construction, plus the scalar tensors the
+/// in-place entries consume. Exists only in [`ExecMode::DeviceResident`].
+struct DeviceOpt<B: Backend> {
+    /// First moment per trainable block.
+    m: Vec<B::Buffer>,
+    /// Second moment per trainable block.
+    v: Vec<B::Buffer>,
+    /// Per-block step count (f32[1]; selective AdamW advances each block's
+    /// count only when that block is updated).
+    t: Vec<B::Buffer>,
+    /// `[lr, warmup_steps, total_steps, min_lr_frac]` for the on-device
+    /// schedule of `train_step_fused`.
+    sched: B::Buffer,
+    /// Global step (f32[1]) — advanced on device by the fused entry,
+    /// re-synced with a 4-byte write after composed steps.
+    step: B::Buffer,
+    /// Scratch scalars for the composed `adamw_update_inplace` path.
+    lr: B::Buffer,
+    scale: B::Buffer,
+}
+
 /// One fine-tuning run on any [`Backend`].
 pub struct Trainer<'e, B: Backend> {
     engine: &'e B,
     pub cfg: RunConfig,
     pub preset: Preset,
-    /// Trainable parameter table (base blocks, or adapters under LoRA).
+    /// Host mirror of the trainable parameter table (base blocks, or
+    /// adapters under LoRA). Authoritative in [`ExecMode::HostLoop`]; in
+    /// [`ExecMode::DeviceResident`] the device tensors are authoritative
+    /// and this mirror is refreshed by [`Trainer::sync_host_state`] /
+    /// [`Trainer::run`] / [`Trainer::eval_state`].
     pub state: ModelState,
     /// Frozen base state under LoRA (equals `state` otherwise).
     pub base_state: Option<ModelState>,
     mode: Mode<B>,
-    opt: SelectiveAdamW,
+    exec: ExecMode,
+    /// Host-loop optimizer state (None in device-resident mode — the
+    /// moments live on device in `dev`).
+    opt: Option<SelectiveAdamW>,
+    dev: Option<DeviceOpt<B>>,
     strategy: Box<dyn SelectionStrategy>,
     tracker: GradNormTracker,
     residency: ResidencyManager,
     batcher: TrainBatcher,
     exe_train: Rc<B::Exe>,
+    /// Input arity of `exe_train` per the manifest (asserted against the
+    /// executable at load time; sizes the argument vector exactly).
+    arity_train: usize,
     /// Selection-gated kernel (base mode only; `None` when the backend's
     /// manifest does not export `train_step_masked` — the trainer then
     /// falls back to the full backward for every step).
     exe_train_masked: Option<Rc<B::Exe>>,
+    arity_masked: usize,
+    /// Fully fused device-resident exploit entry (device mode, base
+    /// table, clipping off).
+    exe_train_fused: Option<Rc<B::Exe>>,
+    arity_fused: usize,
+    /// `grad_norm_sq` over gradient handles (device mode).
+    exe_grad_norm: Option<Rc<B::Exe>>,
+    /// `adamw_update_inplace` over handles (device mode).
+    exe_adamw: Option<Rc<B::Exe>>,
     device_blocks: Vec<B::Buffer>,
     dirty: Vec<bool>,
     pub metrics: MetricsLog,
     cost: CostModel,
+    /// Host-loop gradient staging. Masked steps shrink unselected entries
+    /// to empty so a stale gradient can never be read (and its memory is
+    /// released); empty in device-resident mode.
     grads_host: Vec<Vec<f32>>,
     step: u64,
     masked_steps: u64,
+    fused_steps: u64,
+    /// The value the device-side global step tensor currently holds, if
+    /// known (fused steps advance it on device; composed steps leave it
+    /// stale and the next fused step re-syncs with a 4-byte write).
+    device_step: Option<u64>,
+    h2d_bytes: u64,
+    d2h_bytes: u64,
 }
 
 impl<'e, B: Backend> Trainer<'e, B> {
+    /// Trainer in the best execution mode the backend supports:
+    /// device-resident when the manifest exports the in-place optimizer
+    /// entries, the host loop otherwise.
     pub fn new(engine: &'e B, cfg: RunConfig) -> Result<Self> {
+        let capable = engine.supports_donation()
+            && engine.manifest().shared.contains_key("adamw_update_inplace")
+            && engine.manifest().shared.contains_key("grad_norm_sq");
+        let exec = if capable { ExecMode::DeviceResident } else { ExecMode::HostLoop };
+        Self::new_with_mode(engine, cfg, exec)
+    }
+
+    /// Trainer pinned to the host-loop oracle (see [`ExecMode::HostLoop`]).
+    pub fn new_host_loop(engine: &'e B, cfg: RunConfig) -> Result<Self> {
+        Self::new_with_mode(engine, cfg, ExecMode::HostLoop)
+    }
+
+    /// Trainer in an explicit execution mode. Requesting
+    /// [`ExecMode::DeviceResident`] on a backend whose manifest lacks the
+    /// in-place entries is an error.
+    pub fn new_with_mode(engine: &'e B, cfg: RunConfig, exec: ExecMode) -> Result<Self> {
         let preset = engine.manifest().preset(&cfg.preset)?.clone();
         cfg.validate(&preset)?;
         let tok = Tokenizer::from_spec(&engine.manifest().tokenizer);
@@ -127,11 +226,10 @@ impl<'e, B: Backend> Trainer<'e, B> {
         let pcie = cfg.residency.pcie_model()?;
         let cost = CostModel::new(&preset, CostModelParams::default(), preset.model.lora_rank);
 
-        let (mode, state, base_state, exe_train, trainable_numels, selective) =
+        let (mode, state, base_state, train_entry, trainable_numels, selective) =
             match &cfg.method {
                 Method::Lora { double_rank } => {
                     let entry = if *double_rank { "train_step_lora2" } else { "train_step_lora" };
-                    let exe = engine.load_preset_exe(&cfg.preset, entry)?;
                     let base = ModelState::init(&preset.blocks, cfg.seed);
                     let ltable =
                         if *double_rank { &preset.lora_blocks2 } else { &preset.lora_blocks };
@@ -139,48 +237,109 @@ impl<'e, B: Backend> Trainer<'e, B> {
                     let base_device: Vec<B::Buffer> = base
                         .flats
                         .iter()
-                        .map(|f| engine.upload_f32(f))
+                        .map(|f| engine.upload_f32(f, &[f.len()]))
                         .collect::<Result<_>>()?;
                     let numels: Vec<usize> = ltable.iter().map(|b| b.numel).collect();
                     (
                         Mode::Lora { base_device, double_rank: *double_rank },
                         lora,
                         Some(base),
-                        exe,
+                        entry,
                         numels,
                         false,
                     )
                 }
                 _ => {
                     let entry = if cfg.pallas_kernel { "train_step_pallas" } else { "train_step" };
-                    let exe = engine.load_preset_exe(&cfg.preset, entry)?;
                     let state = ModelState::init(&preset.blocks, cfg.seed);
                     let numels = preset.block_numels();
                     let selective = !matches!(cfg.method, Method::Full);
-                    (Mode::Base, state, None, exe, numels, selective)
+                    (Mode::Base, state, None, entry, numels, selective)
                 }
             };
+        let exe_train = engine.load_preset_exe(&cfg.preset, train_entry)?;
+        let arity_train = preset.artifact(train_entry)?.n_inputs;
 
-        // the masked kernel only applies to the base parameter table;
-        // older artifact dirs without the entry degrade to full backward
-        let exe_train_masked = match &mode {
-            Mode::Base => engine.load_preset_exe(&cfg.preset, "train_step_masked").ok(),
-            Mode::Lora { .. } => None,
+        // the masked/fused kernels only apply to the base parameter table;
+        // older artifact dirs without the entries degrade gracefully
+        let (exe_train_masked, arity_masked) = match &mode {
+            Mode::Base => (
+                engine.load_preset_exe(&cfg.preset, "train_step_masked").ok(),
+                preset.artifact("train_step_masked").map(|a| a.n_inputs).unwrap_or(0),
+            ),
+            Mode::Lora { .. } => (None, 0),
         };
+
+        let device = matches!(exec, ExecMode::DeviceResident);
+        if device && !engine.supports_donation() {
+            return Err(anyhow!(
+                "device-resident mode needs a backend that honors in-place (donation) \
+                 entries; this executor runs them functionally (use the host loop)"
+            ));
+        }
+        if device
+            && (!engine.manifest().shared.contains_key("adamw_update_inplace")
+                || !engine.manifest().shared.contains_key("grad_norm_sq"))
+        {
+            return Err(anyhow!(
+                "device-resident mode needs the adamw_update_inplace and grad_norm_sq \
+                 entries; this manifest lacks them (use the host loop)"
+            ));
+        }
+        let (exe_train_fused, arity_fused) = match (&mode, device) {
+            (Mode::Base, true) => (
+                engine.load_preset_exe(&cfg.preset, "train_step_fused").ok(),
+                preset.artifact("train_step_fused").map(|a| a.n_inputs).unwrap_or(0),
+            ),
+            _ => (None, 0),
+        };
+        let exe_grad_norm =
+            if device { Some(engine.load_shared_exe("grad_norm_sq")?) } else { None };
+        let exe_adamw =
+            if device { Some(engine.load_shared_exe("adamw_update_inplace")?) } else { None };
 
         let n_trainable = trainable_numels.len();
         let strategy = build_strategy(&cfg, n_trainable)?;
-        let opt = SelectiveAdamW::new(&trainable_numels, adamw);
         let residency = ResidencyManager::new(
             &trainable_numels,
             cfg.residency.bytes_per_param,
             pcie,
             selective,
         );
-        let device_blocks: Vec<B::Buffer> =
-            state.flats.iter().map(|f| engine.upload_f32(f)).collect::<Result<_>>()?;
+        let device_blocks: Vec<B::Buffer> = state
+            .flats
+            .iter()
+            .map(|f| engine.upload_f32(f, &[f.len()]))
+            .collect::<Result<_>>()?;
         let metrics = MetricsLog::new(cfg.metrics_path.as_deref())?;
-        let grads_host = trainable_numels.iter().map(|&n| vec![0.0f32; n]).collect();
+
+        // optimizer state: moments uploaded once in device mode, host
+        // vectors in the host loop
+        let (opt, dev, grads_host) = if device {
+            let zeros_of = |n: usize| -> Result<B::Buffer> {
+                engine.upload_f32(&vec![0.0f32; n], &[n])
+            };
+            let m: Vec<B::Buffer> =
+                trainable_numels.iter().map(|&n| zeros_of(n)).collect::<Result<_>>()?;
+            let v: Vec<B::Buffer> =
+                trainable_numels.iter().map(|&n| zeros_of(n)).collect::<Result<_>>()?;
+            let t: Vec<B::Buffer> =
+                trainable_numels.iter().map(|_| zeros_of(1)).collect::<Result<_>>()?;
+            let dev = DeviceOpt {
+                m,
+                v,
+                t,
+                sched: engine.upload_f32(&cfg.lr_schedule_tensor(), &[4])?,
+                step: zeros_of(1)?,
+                lr: zeros_of(1)?,
+                scale: zeros_of(1)?,
+            };
+            (None, Some(dev), Vec::new())
+        } else {
+            let opt = SelectiveAdamW::new(&trainable_numels, adamw);
+            let grads = trainable_numels.iter().map(|&n| vec![0.0f32; n]).collect();
+            (Some(opt), None, grads)
+        };
 
         Ok(Self {
             engine,
@@ -189,13 +348,21 @@ impl<'e, B: Backend> Trainer<'e, B> {
             state,
             base_state,
             mode,
+            exec,
             opt,
+            dev,
             strategy,
             tracker: GradNormTracker::new(n_trainable),
             residency,
             batcher,
             exe_train,
+            arity_train,
             exe_train_masked,
+            arity_masked,
+            exe_train_fused,
+            arity_fused,
+            exe_grad_norm,
+            exe_adamw,
             device_blocks,
             dirty: vec![false; n_trainable],
             metrics,
@@ -203,6 +370,10 @@ impl<'e, B: Backend> Trainer<'e, B> {
             grads_host,
             step: 0,
             masked_steps: 0,
+            fused_steps: 0,
+            device_step: None,
+            h2d_bytes: 0,
+            d2h_bytes: 0,
         })
     }
 
@@ -214,47 +385,69 @@ impl<'e, B: Backend> Trainer<'e, B> {
         self.strategy.name()
     }
 
+    /// The execution mode this trainer resolved to.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec
+    }
+
     /// Run one training step; returns the loss.
     ///
     /// The step is selection-gated: [`SelectionStrategy::decide`] runs
     /// *before* the backward pass, and any pre-decided (exploit-style)
     /// step takes the masked kernel — weight-gradient GEMMs, d-stream
-    /// depth, activation caching, gradient download and norm reductions
-    /// all restricted to the selected blocks. Only norm-ranking steps
-    /// (ε-greedy exploration, top-k, UCB) pay for the full backward —
-    /// exactly the paper's Algorithm 2 asymmetry.
+    /// depth, activation caching and norm reductions all restricted to
+    /// the selected blocks. In device-resident mode a clip-free exploit
+    /// step goes further and runs the fused in-place entry: the only
+    /// boundary crossings are the batch + mask upload and the loss-scalar
+    /// read-back (observable in the step's `h2d_bytes`/`d2h_bytes`).
+    /// Only norm-ranking steps (ε-greedy exploration, top-k, UCB) pay for
+    /// the full backward — exactly the paper's Algorithm 2 asymmetry.
     pub fn step_once(&mut self) -> Result<f32> {
         let batch = self.batcher.next_batch();
         let dims = [batch.batch, batch.seq_len];
         let n_blocks = self.dirty.len();
+        let clip = self.cfg.train.grad_clip;
+        let transfers0 = self.engine.transfer_stats();
 
         // 1. pre-step decision: exploit-style steps know their blocks now
         let epoch = self.epoch();
         let plan = self
             .strategy
             .decide(&SelectionCtx { step: self.step, epoch, grad_norms: &[] });
-        let (decided, masked) = match plan {
-            StepPlan::Decided(sel) => {
-                // all-block selections (Full/LoRA) keep their dedicated
-                // full kernels; proper subsets take the masked kernel
-                let use_masked = sel.len() < n_blocks && self.exe_train_masked.is_some();
-                (Some(sel), use_masked)
-            }
-            StepPlan::NeedsNorms => (None, false),
+        let decided = match plan {
+            StepPlan::Decided(sel) => Some(sel),
+            StepPlan::NeedsNorms => None,
         };
+        let device = matches!(self.exec, ExecMode::DeviceResident);
+        // proper-subset decided selections take the masked kernel
+        let masked = match &decided {
+            Some(sel) => sel.len() < n_blocks && self.exe_train_masked.is_some(),
+            None => false,
+        };
+        // clip-free decided base-table steps take the fully fused entry
+        let fused = device
+            && decided.is_some()
+            && clip.is_none()
+            && self.exe_train_fused.is_some()
+            && matches!(self.mode, Mode::Base);
 
-        // 2. upload batch + dirty parameter blocks (+ the block mask)
+        // 2. upload the batch (+ block mask). The host loop also
+        // re-uploads parameter blocks the optimizer dirtied; the
+        // device-resident path never moves parameters.
         let t0 = Instant::now();
         let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
         let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
-        for (i, dirty) in self.dirty.iter_mut().enumerate() {
-            if *dirty {
-                self.device_blocks[i] = self.engine.upload_f32(&self.state.flats[i])?;
-                *dirty = false;
+        if !device {
+            for (i, dirty) in self.dirty.iter_mut().enumerate() {
+                if *dirty {
+                    let f = &self.state.flats[i];
+                    self.device_blocks[i] = self.engine.upload_f32(f, &[f.len()])?;
+                    *dirty = false;
+                }
             }
         }
-        let mask_buf = if masked {
-            let sel = decided.as_ref().expect("masked implies decided");
+        let mask_buf = if masked || fused {
+            let sel = decided.as_ref().expect("masked/fused implies decided");
             let mut mask = vec![0i32; n_blocks];
             for &b in sel {
                 mask[b] = 1;
@@ -263,70 +456,200 @@ impl<'e, B: Backend> Trainer<'e, B> {
         } else {
             None
         };
+        if fused && self.device_step != Some(self.step) {
+            // re-sync the on-device schedule step after composed steps
+            let dev = self.dev.as_ref().expect("device mode");
+            self.engine.write_f32(&dev.step, &[self.step as f32])?;
+        }
         let t_upload = t0.elapsed().as_secs_f64();
 
-        // 3. execute the fused train step (masked when pre-decided)
-        let mut args: Vec<&B::Buffer> = Vec::with_capacity(self.device_blocks.len() + 35);
-        if let Mode::Lora { base_device, .. } = &self.mode {
-            args.extend(base_device.iter());
-        }
-        args.extend(self.device_blocks.iter());
-        args.push(&tok_buf);
-        args.push(&tgt_buf);
-        let exe = if let Some(mask_buf) = mask_buf.as_ref() {
-            args.push(mask_buf);
-            self.exe_train_masked.as_ref().expect("masked exe loaded")
+        // 3.–6. execute + gradients/norms + selection + optimizer, per
+        // execution mode
+        let mb = mask_buf.as_ref();
+        let outcome = if fused {
+            let sel = decided.expect("fused implies decided");
+            self.substep_fused(&tok_buf, &tgt_buf, mb.expect("fused has mask"), sel)?
+        } else if device {
+            self.substep_composed(&tok_buf, &tgt_buf, mb, decided, masked, epoch, clip)?
         } else {
-            &self.exe_train
+            self.substep_host(&tok_buf, &tgt_buf, mb, decided, masked, epoch, clip)?
         };
-        let mut out = self.engine.execute(exe, &args)?;
-        let loss = out.scalar_f32(0)?;
+        let SubstepOutcome { loss, selected, t_execute, t_host, t_optimizer } = outcome;
         if !loss.is_finite() {
             return Err(anyhow!("non-finite loss at step {}: {loss}", self.step));
         }
 
-        // 4. gradients to host — a masked step returns (and downloads)
-        // only the selected blocks' flats
+        // 7. modeled accelerator compute time + residency accounting:
+        // exploit-style steps cost the masked-kernel shape, norm-ranking
+        // steps (and fallbacks without the masked artifact) the full
+        // backward with a selective optimizer
+        let t_step_sim = match (&self.mode, &self.cfg.method) {
+            (Mode::Lora { double_rank, .. }, _) => self
+                .cost
+                .lora_step_s(self.preset.model.n_layers, if *double_rank { 2.0 } else { 1.0 }),
+            (_, Method::Full) => self.cost.full_step_s(),
+            _ if masked || (fused && selected.len() < n_blocks) => {
+                self.cost.selective_step_s(&selected)
+            }
+            _ => self.cost.explore_step_s(&selected),
+        };
+        let transfers = self.residency.step(&selected, t_step_sim);
+        let observed = self.engine.transfer_stats().delta_since(&transfers0);
+        self.h2d_bytes += observed.h2d_bytes;
+        self.d2h_bytes += observed.d2h_bytes;
+
+        // 8. metrics
+        let masked_any = masked || (fused && selected.len() < n_blocks);
+        if masked_any {
+            self.masked_steps += 1;
+        }
+        if fused {
+            self.fused_steps += 1;
+        }
+        let lr = self.cfg.lr_at(self.step);
+        let (decision, epsilon) = self.decision_label();
+        self.metrics.push(StepRecord {
+            step: self.step,
+            epoch,
+            loss,
+            lr,
+            selected,
+            decision,
+            epsilon,
+            masked: masked_any,
+            t_execute,
+            t_host,
+            t_optimizer,
+            t_upload,
+            t_transfer_sim: transfers.transfer_s,
+            t_stall_sim: transfers.stall_s,
+            t_step_sim: t_step_sim + transfers.stall_s,
+            vram_opt_bytes: self.residency.vram_used(),
+            h2d_bytes: observed.h2d_bytes,
+            d2h_bytes: observed.d2h_bytes,
+        })?;
+
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// The fully fused device-resident exploit step: one execute, one
+    /// 4-byte loss read-back. Gradients, moments, learning rate and step
+    /// counts never cross the boundary.
+    fn substep_fused(
+        &mut self,
+        tok_buf: &B::Buffer,
+        tgt_buf: &B::Buffer,
+        mask_buf: &B::Buffer,
+        selected: Vec<usize>,
+    ) -> Result<SubstepOutcome> {
+        let dev = self.dev.as_ref().expect("device mode");
+        let exe = self.exe_train_fused.as_ref().expect("fused exe loaded");
+        let mut args: Vec<&B::Buffer> = Vec::with_capacity(self.arity_fused);
+        args.extend(self.device_blocks.iter());
+        args.extend(dev.m.iter());
+        args.extend(dev.v.iter());
+        args.extend(dev.t.iter());
+        args.push(&dev.sched);
+        args.push(&dev.step);
+        args.push(tok_buf);
+        args.push(tgt_buf);
+        args.push(mask_buf);
+        debug_assert_eq!(args.len(), self.arity_fused);
+        let out = self.engine.execute(exe, &args)?;
         let t1 = Instant::now();
-        if masked {
-            let sel = decided.as_ref().expect("masked implies decided");
-            for (j, &b) in sel.iter().enumerate() {
-                self.grads_host[b] = out.take_vec(1 + j)?;
-            }
+        let loss = self.engine.read_scalar_f32(&out.outputs[0])?;
+        self.device_step = Some(self.step + 1);
+        Ok(SubstepOutcome {
+            loss,
+            selected,
+            t_execute: out.execute_s,
+            t_host: t1.elapsed().as_secs_f64(),
+            t_optimizer: 0.0,
+        })
+    }
+
+    /// The composed device-resident step: masked/full backward producing
+    /// gradient *handles*, per-block `grad_norm_sq` read-backs when norms
+    /// are needed (ranking or clipping), then `adamw_update_inplace` over
+    /// handles for the selected blocks. Gradients stay on device.
+    #[allow(clippy::too_many_arguments)]
+    fn substep_composed(
+        &mut self,
+        tok_buf: &B::Buffer,
+        tgt_buf: &B::Buffer,
+        mask_buf: Option<&B::Buffer>,
+        decided: Option<Vec<usize>>,
+        masked: bool,
+        epoch: u32,
+        clip: Option<f32>,
+    ) -> Result<SubstepOutcome> {
+        let n_blocks = self.dirty.len();
+        let arity = if masked { self.arity_masked } else { self.arity_train };
+        let mut args: Vec<&B::Buffer> = Vec::with_capacity(arity);
+        if let Mode::Lora { base_device, .. } = &self.mode {
+            args.extend(base_device.iter());
+        }
+        args.extend(self.device_blocks.iter());
+        args.push(tok_buf);
+        args.push(tgt_buf);
+        let exe = if masked {
+            args.push(mask_buf.expect("masked step uploads a mask"));
+            self.exe_train_masked.as_ref().expect("masked exe loaded")
         } else {
-            for (i, g) in self.grads_host.iter_mut().enumerate() {
-                *g = out.take_vec(1 + i)?;
-            }
-        }
-        let t_host = t1.elapsed().as_secs_f64() + out.download_s;
+            &self.exe_train
+        };
+        debug_assert_eq!(args.len(), arity);
+        let out = self.engine.execute(exe, &args)?;
+        let t_execute = out.execute_s;
 
-        // 5. block norms + optional global clip, gated on who needs them.
-        // Norms are clipped *before* the tracker accumulates, so
-        // cumulative telemetry matches what selection/optimizer saw.
-        let t2 = Instant::now();
-        let clip = self.cfg.train.grad_clip;
-        if masked {
-            // selection already decided; norms exist (and are reduced)
-            // only if clipping asks for them, and only over the selected
-            // gradients — the only ones that were ever computed
-            if let Some(clip) = clip {
-                let sel = decided.as_ref().expect("masked implies decided");
-                let sel_grads: Vec<&[f32]> =
-                    sel.iter().map(|&b| self.grads_host[b].as_slice()).collect();
-                let mut norms = grad_norm::block_norms(&sel_grads);
-                clip_global(clip, sel, &mut self.grads_host, &mut norms);
-                self.tracker.record_selected(sel, &norms);
-            }
-        } else if decided.is_none() || clip.is_some() {
-            let mut norms = grad_norm::block_norms(&self.grads_host);
-            if let Some(clip) = clip {
-                let all: Vec<usize> = (0..n_blocks).collect();
-                clip_global(clip, &all, &mut self.grads_host, &mut norms);
-            }
-            self.tracker.record(&norms);
+        let t1 = Instant::now();
+        let mut outputs = out.outputs.into_iter();
+        let loss_h = outputs.next().ok_or_else(|| anyhow!("train step produced no outputs"))?;
+        let loss = self.engine.read_scalar_f32(&loss_h)?;
+        // gradient handles, and the block index each one belongs to
+        let grads: Vec<B::Buffer> = outputs.collect();
+        let grad_blocks: Vec<usize> = match (&decided, masked) {
+            (Some(sel), true) => sel.clone(),
+            _ => (0..n_blocks).collect(),
+        };
+        if grads.len() != grad_blocks.len() {
+            return Err(anyhow!(
+                "train step returned {} gradients for {} blocks",
+                grads.len(),
+                grad_blocks.len()
+            ));
         }
 
-        // 6. resolve the selection (norm-ranking strategies choose now)
+        // norms via the grad_norm_sq entry — read back one f32 per block
+        // (never the gradients themselves), exactly when ranking or
+        // clipping needs them
+        let mut scale = 1.0f32;
+        if decided.is_none() || clip.is_some() {
+            let exe_norm = self.exe_grad_norm.as_ref().expect("device mode");
+            let mut norms = Vec::with_capacity(grads.len());
+            for g in &grads {
+                let nout = self.engine.execute(exe_norm, &[g])?;
+                let sq = self.engine.read_scalar_f32(&nout.outputs[0])?;
+                norms.push(grad_norm::norm_from_sq_f32(sq));
+            }
+            if let Some(clip) = clip {
+                if let Some(s) = clip_scale(clip, &norms) {
+                    scale = s;
+                    for n in norms.iter_mut() {
+                        *n *= s as f64;
+                    }
+                }
+            }
+            if masked {
+                self.tracker.record_selected(&grad_blocks, &norms);
+            } else {
+                self.tracker.record(&norms);
+            }
+        }
+        let t_host = t1.elapsed().as_secs_f64();
+
+        // resolve the selection (norm-ranking strategies choose now)
         let selected = match decided {
             Some(sel) => sel,
             None => {
@@ -339,56 +662,149 @@ impl<'e, B: Backend> Trainer<'e, B> {
             }
         };
 
-        // 7. modeled accelerator compute time + residency accounting:
-        // exploit-style steps cost the masked-kernel shape, norm-ranking
-        // steps (and fallbacks without the masked artifact) the full
-        // backward with a selective optimizer
-        let t_step_sim = match (&self.mode, &self.cfg.method) {
-            (Mode::Lora { double_rank, .. }, _) => self
-                .cost
-                .lora_step_s(self.preset.model.n_layers, if *double_rank { 2.0 } else { 1.0 }),
-            (_, Method::Full) => self.cost.full_step_s(),
-            _ if masked => self.cost.selective_step_s(&selected),
-            _ => self.cost.explore_step_s(&selected),
-        };
-        let transfers = self.residency.step(&selected, t_step_sim);
+        // selective AdamW over handles, in place — parameters, moments
+        // and gradients all stay on device
+        let t3 = Instant::now();
+        let dev = self.dev.as_ref().expect("device mode");
+        let exe_ad = self.exe_adamw.as_ref().expect("device mode");
+        self.engine.write_f32(&dev.lr, &[self.cfg.lr_at(self.step)])?;
+        self.engine.write_f32(&dev.scale, &[scale])?;
+        for (j, &b) in selected.iter().enumerate() {
+            let gi = if masked { j } else { b };
+            let ad_args = [
+                &self.device_blocks[b],
+                &grads[gi],
+                &dev.m[b],
+                &dev.v[b],
+                &dev.t[b],
+                &dev.lr,
+                &dev.scale,
+            ];
+            self.engine.execute(exe_ad, &ad_args)?;
+        }
+        // the on-device schedule step was not advanced by this path
+        self.device_step = None;
+        Ok(SubstepOutcome {
+            loss,
+            selected,
+            t_execute,
+            t_host,
+            t_optimizer: t3.elapsed().as_secs_f64(),
+        })
+    }
 
-        // 8. selective AdamW
+    /// The retained host-loop oracle: download gradients, AdamW on host
+    /// state, dirty blocks re-uploaded next step.
+    #[allow(clippy::too_many_arguments)]
+    fn substep_host(
+        &mut self,
+        tok_buf: &B::Buffer,
+        tgt_buf: &B::Buffer,
+        mask_buf: Option<&B::Buffer>,
+        decided: Option<Vec<usize>>,
+        masked: bool,
+        epoch: u32,
+        clip: Option<f32>,
+    ) -> Result<SubstepOutcome> {
+        let n_blocks = self.dirty.len();
+        let arity = if masked { self.arity_masked } else { self.arity_train };
+        let mut args: Vec<&B::Buffer> = Vec::with_capacity(arity);
+        if let Mode::Lora { base_device, .. } = &self.mode {
+            args.extend(base_device.iter());
+        }
+        args.extend(self.device_blocks.iter());
+        args.push(tok_buf);
+        args.push(tgt_buf);
+        let exe = if masked {
+            args.push(mask_buf.expect("masked step uploads a mask"));
+            self.exe_train_masked.as_ref().expect("masked exe loaded")
+        } else {
+            &self.exe_train
+        };
+        debug_assert_eq!(args.len(), arity);
+        let mut out = self.engine.execute_to_host(exe, &args)?;
+        let loss = out.scalar_f32(0)?;
+
+        // gradients to host — a masked step returns (and downloads) only
+        // the selected blocks' flats; unselected staging entries are
+        // shrunk to empty so stale gradients can neither linger in memory
+        // nor be read by a later step
+        let t1 = Instant::now();
+        if masked {
+            let sel = decided.as_ref().expect("masked implies decided");
+            let mut si = 0usize;
+            for i in 0..n_blocks {
+                if si < sel.len() && sel[si] == i {
+                    self.grads_host[i] = out.take_vec(1 + si)?;
+                    si += 1;
+                } else {
+                    self.grads_host[i] = Vec::new();
+                }
+            }
+        } else {
+            for (i, g) in self.grads_host.iter_mut().enumerate() {
+                *g = out.take_vec(1 + i)?;
+            }
+        }
+        let t_host_dl = t1.elapsed().as_secs_f64() + out.download_s;
+
+        // block norms + optional global clip, gated on who needs them.
+        // Norms are clipped *before* the tracker accumulates, so
+        // cumulative telemetry matches what selection/optimizer saw; they
+        // round through f32 like the backend boundary, so the
+        // device-resident path sees bit-identical values.
+        let t2 = Instant::now();
+        if masked {
+            // selection already decided; norms exist (and are reduced)
+            // only if clipping asks for them, and only over the selected
+            // gradients — the only ones that were ever computed
+            if let Some(clip) = clip {
+                let sel = decided.as_ref().expect("masked implies decided");
+                let sel_grads: Vec<&[f32]> =
+                    sel.iter().map(|&b| self.grads_host[b].as_slice()).collect();
+                let mut norms = grad_norm::block_norms_boundary(&sel_grads);
+                clip_global(clip, sel, &mut self.grads_host, &mut norms);
+                self.tracker.record_selected(sel, &norms);
+            }
+        } else if decided.is_none() || clip.is_some() {
+            let mut norms = grad_norm::block_norms_boundary(&self.grads_host);
+            if let Some(clip) = clip {
+                let all: Vec<usize> = (0..n_blocks).collect();
+                clip_global(clip, &all, &mut self.grads_host, &mut norms);
+            }
+            self.tracker.record(&norms);
+        }
+
+        // resolve the selection (norm-ranking strategies choose now)
+        let selected = match decided {
+            Some(sel) => sel,
+            None => {
+                let ctx = SelectionCtx {
+                    step: self.step,
+                    epoch,
+                    grad_norms: &self.tracker.last,
+                };
+                self.strategy.choose(&ctx)
+            }
+        };
+
+        // selective AdamW on the host mirror
         let lr = self.cfg.lr_at(self.step);
         let t3 = Instant::now();
-        self.opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
+        let opt = self.opt.as_mut().expect("host loop has a host optimizer");
+        opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
         for &b in &selected {
             self.dirty[b] = true;
         }
         let t_optimizer = t3.elapsed().as_secs_f64();
         let t_hostproc = t2.elapsed().as_secs_f64() - t_optimizer;
-
-        // 9. metrics
-        if masked {
-            self.masked_steps += 1;
-        }
-        let (decision, epsilon) = self.decision_label();
-        self.metrics.push(StepRecord {
-            step: self.step,
-            epoch,
+        Ok(SubstepOutcome {
             loss,
-            lr,
             selected,
-            decision,
-            epsilon,
-            masked,
             t_execute: out.execute_s,
-            t_host: t_host + t_hostproc.max(0.0),
+            t_host: t_host_dl + t_hostproc.max(0.0),
             t_optimizer,
-            t_upload,
-            t_transfer_sim: transfers.transfer_s,
-            t_stall_sim: transfers.stall_s,
-            t_step_sim: t_step_sim + transfers.stall_s,
-            vram_opt_bytes: self.residency.vram_used(),
-        })?;
-
-        self.step += 1;
-        Ok(loss)
+        })
     }
 
     fn decision_label(&self) -> (String, f64) {
@@ -415,8 +831,21 @@ impl<'e, B: Backend> Trainer<'e, B> {
             }
         }
         self.metrics.flush()?;
+        // refresh the host mirror from the device (the run's checkpoint
+        // download — explicit, like every other read-back)
+        self.sync_host_state()?;
         let wallclock_s = t0.elapsed().as_secs_f64();
         Ok(self.summary(wallclock_s, last))
+    }
+
+    /// Copy the trained parameters back into the host mirror
+    /// ([`Trainer::state`]). A no-op in host-loop mode, an explicit
+    /// byte-counted read-back of every trainable block in device mode.
+    pub fn sync_host_state(&mut self) -> Result<()> {
+        if matches!(self.exec, ExecMode::DeviceResident) {
+            read_back(self.engine, &self.device_blocks, &mut self.state)?;
+        }
+        Ok(())
     }
 
     pub fn summary(&self, wallclock_s: f64, final_loss: f32) -> TrainSummary {
@@ -445,13 +874,21 @@ impl<'e, B: Backend> Trainer<'e, B> {
             explore_steps: explore,
             exploit_steps: exploit,
             masked_steps: self.masked_steps,
+            fused_steps: self.fused_steps,
             norm_reduced_blocks: self.tracker.reduced_blocks(),
+            h2d_bytes: self.h2d_bytes,
+            d2h_bytes: self.d2h_bytes,
         }
     }
 
     /// Steps so far that ran the masked (selection-gated) backward.
     pub fn masked_steps(&self) -> u64 {
         self.masked_steps
+    }
+
+    /// Steps so far that ran the fully fused device-resident entry.
+    pub fn fused_steps(&self) -> u64 {
+        self.fused_steps
     }
 
     /// Total per-block gradient-norm reductions performed so far — the
@@ -461,16 +898,39 @@ impl<'e, B: Backend> Trainer<'e, B> {
         self.tracker.reduced_blocks()
     }
 
+    /// Bytes of gradient staging currently held on the host: the sum of
+    /// the live `grads_host` entries. Masked host-loop steps shrink
+    /// unselected entries, so this tracks the *selected* blocks only —
+    /// the stale-gradient regression test pins it. Always 0 in
+    /// device-resident mode (gradients never reach the host).
+    pub fn host_grad_bytes(&self) -> usize {
+        self.grads_host.iter().map(|g| g.len() * 4).sum()
+    }
+
+    /// Observed boundary traffic summed over the run's steps.
+    pub fn observed_transfer_bytes(&self) -> (u64, u64) {
+        (self.h2d_bytes, self.d2h_bytes)
+    }
+
     /// The *effective* model for evaluation: merged base+LoRA under LoRA,
-    /// the live base blocks otherwise.
+    /// the live trainable blocks otherwise. In device-resident mode this
+    /// reads the current parameters back from the device.
     pub fn eval_state(&self) -> Result<ModelState> {
+        let live = match self.exec {
+            ExecMode::HostLoop => self.state.clone(),
+            ExecMode::DeviceResident => {
+                let mut st = self.state.clone();
+                read_back(self.engine, &self.device_blocks, &mut st)?;
+                st
+            }
+        };
         match &self.mode {
-            Mode::Base => Ok(self.state.clone()),
+            Mode::Base => Ok(live),
             Mode::Lora { double_rank, .. } => crate::lora::merge(
                 self.engine,
                 &self.cfg.preset,
                 self.base_state.as_ref().expect("lora has base"),
-                &self.state,
+                &live,
                 *double_rank,
             ),
         }
@@ -481,15 +941,45 @@ impl<'e, B: Backend> Trainer<'e, B> {
     }
 }
 
+/// Read every trainable block back into `dst` — the device-resident
+/// mode's checkpoint download, explicit and byte-counted like every
+/// other read-back (shared by [`Trainer::sync_host_state`] and
+/// [`Trainer::eval_state`]).
+fn read_back<B: Backend>(engine: &B, blocks: &[B::Buffer], dst: &mut ModelState) -> Result<()> {
+    for (f, buf) in dst.flats.iter_mut().zip(blocks) {
+        *f = engine.read_f32(buf)?;
+    }
+    Ok(())
+}
+
+/// What a mode-specific substep hands back to the shared accounting tail.
+struct SubstepOutcome {
+    loss: f32,
+    selected: Vec<usize>,
+    t_execute: f64,
+    t_host: f64,
+    t_optimizer: f64,
+}
+
+/// Scale factor that brings the global L2 norm over `norms` down to
+/// `clip`, or `None` when no clipping is needed. Shared by both execution
+/// modes so they make bit-identical clip decisions.
+fn clip_scale(clip: f32, norms: &[f64]) -> Option<f32> {
+    let global: f64 = norms.iter().map(|&n| n * n).sum::<f64>().sqrt();
+    if global > clip as f64 {
+        Some((clip as f64 / global) as f32)
+    } else {
+        None
+    }
+}
+
 /// Rescale `norms` and the gradients of `blocks` in place so the global
 /// L2 norm over `norms` does not exceed `clip`. One code path for both
 /// step shapes: the full backward clips every block, the masked backward
 /// only the selected ones (the only gradients that exist).
 fn clip_global(clip: f32, blocks: &[usize], grads_host: &mut [Vec<f32>], norms: &mut [f64]) {
     debug_assert_eq!(blocks.len(), norms.len());
-    let global: f64 = norms.iter().map(|&n| n * n).sum::<f64>().sqrt();
-    if global > clip as f64 {
-        let scale = (clip as f64 / global) as f32;
+    if let Some(scale) = clip_scale(clip, norms) {
         for &b in blocks {
             for x in grads_host[b].iter_mut() {
                 *x *= scale;

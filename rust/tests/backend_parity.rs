@@ -67,11 +67,11 @@ fn golden_loss_trajectory_matches_jax_reference() {
     let mut max_diff = 0.0f64;
     for t in 0..steps {
         let blocks: Vec<_> =
-            state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+            state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
         let mut args: Vec<_> = blocks.iter().collect();
         args.push(&tok);
         args.push(&tgt);
-        let mut out = engine.execute(&exe, &args).unwrap();
+        let mut out = engine.execute_to_host(&exe, &args).unwrap();
         let loss = out.scalar_f32(0).unwrap() as f64;
         let diff = (loss - golden_losses[t]).abs();
         max_diff = max_diff.max(diff);
@@ -179,12 +179,12 @@ fn identical_grad_norms_give_identical_selections_across_code_paths() {
 
     let norms_of = || {
         let blocks: Vec<_> =
-            state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+            state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
         let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
         let mut args: Vec<_> = blocks.iter().collect();
         args.push(&tok);
         args.push(&tok);
-        let out = engine.execute(&exe, &args).unwrap();
+        let out = engine.execute_to_host(&exe, &args).unwrap();
         (0..preset.blocks.len())
             .map(|i| block_norm(out.vec_f32(1 + i).unwrap()))
             .collect::<Vec<f64>>()

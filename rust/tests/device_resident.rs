@@ -1,0 +1,219 @@
+//! Device-resident training contracts:
+//!
+//! 1. the fused/composed device-resident trainer is a **bit-match** of
+//!    the retained host-loop oracle — loss trajectory and final
+//!    parameters over ≥24 steps, in base and LoRA modes, masked
+//!    (exploit) and full/norm-ranking step shapes, with and without
+//!    global-norm clipping;
+//! 2. the observed boundary traffic equals the analytic byte count for
+//!    both step shapes — an exploit step moves the batch + mask up and
+//!    exactly the 4-byte loss scalar down, a norm-ranking step adds one
+//!    f32 squared-norm read-back per block (never a gradient);
+//! 3. host-loop gradient staging shrinks to the selected blocks after a
+//!    masked step (the stale-gradient regression), and gradients never
+//!    reach the host at all in device-resident mode;
+//! 4. manifests without the in-place entries resolve to the host loop.
+
+use adagradselect::config::{Method, RunConfig};
+use adagradselect::runtime::{Backend, Manifest, ReferenceBackend};
+use adagradselect::train::{ExecMode, Trainer};
+
+const STEPS: u64 = 24;
+
+fn cfg(method: Method, clip: Option<f32>) -> RunConfig {
+    let mut cfg = RunConfig::preset_defaults("test-tiny");
+    cfg.method = method;
+    cfg.train.steps = STEPS;
+    cfg.train.steps_per_epoch = STEPS / 2;
+    cfg.train.log_every = 0;
+    cfg.train.grad_clip = clip;
+    cfg
+}
+
+/// Drive both execution modes over the same config and assert bitwise
+/// identity of the per-step losses, the selection trajectory, and the
+/// final (effective) parameters.
+fn assert_bit_parity(method: Method, clip: Option<f32>, label: &str) {
+    let engine = ReferenceBackend::new();
+    let mut dev = Trainer::new(&engine, cfg(method.clone(), clip)).unwrap();
+    assert_eq!(dev.exec_mode(), ExecMode::DeviceResident, "{label}");
+    let mut host = Trainer::new_host_loop(&engine, cfg(method, clip)).unwrap();
+    assert_eq!(host.exec_mode(), ExecMode::HostLoop, "{label}");
+
+    for step in 0..STEPS {
+        let ld = dev.step_once().unwrap();
+        let lh = host.step_once().unwrap();
+        assert_eq!(
+            ld.to_bits(),
+            lh.to_bits(),
+            "{label}: loss diverged at step {step}: device {ld} vs host {lh}"
+        );
+        let sd = &dev.metrics.records.last().unwrap().selected;
+        let sh = &host.metrics.records.last().unwrap().selected;
+        assert_eq!(sd, sh, "{label}: selection diverged at step {step}");
+    }
+
+    let sd = dev.eval_state().unwrap();
+    let sh = host.eval_state().unwrap();
+    for (i, (a, b)) in sd.flats.iter().zip(&sh.flats).enumerate() {
+        assert_eq!(a, b, "{label}: final parameters of block {i} are not a bit-match");
+    }
+    // gradients never reach the host in device mode
+    assert_eq!(dev.host_grad_bytes(), 0, "{label}: device mode staged gradients on the host");
+}
+
+#[test]
+fn fused_exploit_bit_matches_host_loop_oracle() {
+    // ε₀ = 0 ⇒ every step is a pre-decided (masked) exploit step; with
+    // clipping off the device path takes the fully fused entry
+    let method = Method::AdaGradSelect {
+        pct: 30.0,
+        eps0: 0.0,
+        lambda: None,
+        delta: 1.0,
+        explore_after_epoch1: false,
+        uniform_exploit: false,
+    };
+    let engine = ReferenceBackend::new();
+    let mut probe = Trainer::new(&engine, cfg(method.clone(), None)).unwrap();
+    for _ in 0..4 {
+        probe.step_once().unwrap();
+    }
+    assert_eq!(probe.fused_steps(), 4, "exploit steps must take the fused entry");
+    assert_eq!(probe.norm_reduced_blocks(), 0);
+
+    assert_bit_parity(method, None, "fused-exploit");
+}
+
+#[test]
+fn masked_composed_with_clipping_bit_matches_host_loop() {
+    // clipping forces the composed path (masked backward + selected-norm
+    // read-back + scaled in-place AdamW) — still no gradient download
+    let method = Method::Fixed { blocks: vec![1, 3] };
+    assert_bit_parity(method, Some(1.0), "masked-composed-clip");
+}
+
+#[test]
+fn norm_ranking_explore_bit_matches_host_loop() {
+    // top-k ranks every step: full backward, per-block norm read-backs,
+    // choose() from boundary-rounded norms
+    assert_bit_parity(Method::TopK { pct: 30.0 }, None, "topk-explore");
+}
+
+#[test]
+fn full_fine_tuning_with_clip_bit_matches_host_loop() {
+    assert_bit_parity(Method::Full, Some(1.0), "full-clip");
+}
+
+#[test]
+fn lora_bit_matches_host_loop() {
+    // adapters train through the composed handle path (with the default
+    // clip); eval_state merges base + read-back adapters
+    assert_bit_parity(Method::Lora { double_rank: false }, Some(1.0), "lora");
+}
+
+#[test]
+fn exploit_step_transfers_match_analytic_bytes() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset("test-tiny").unwrap().clone();
+    let n = preset.blocks.len();
+    let (b, s) = (preset.model.batch, preset.model.seq_len);
+    // fixed selection ⇒ identical mask and arena shape every step
+    let mut t =
+        Trainer::new(&engine, cfg(Method::Fixed { blocks: vec![n - 2, n - 1] }, None)).unwrap();
+    assert_eq!(t.exec_mode(), ExecMode::DeviceResident);
+    // warm-up: step-tensor sync + buffer-pool fill
+    t.step_once().unwrap();
+    t.step_once().unwrap();
+
+    for step in 0..6u64 {
+        let before = engine.transfer_stats();
+        t.step_once().unwrap();
+        let d = engine.transfer_stats().delta_since(&before);
+        assert_eq!(
+            d.h2d_bytes,
+            ((2 * b * s + n) * 4) as u64,
+            "step {step}: exploit h2d must be exactly tokens + targets + mask"
+        );
+        assert_eq!(d.d2h_bytes, 4, "step {step}: exploit d2h must be exactly the loss scalar");
+        assert_eq!(d.buffer_allocs, 0, "step {step}: steady state must not allocate buffers");
+    }
+    assert!(t.fused_steps() >= 8);
+}
+
+#[test]
+fn explore_step_transfers_match_analytic_bytes() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset("test-tiny").unwrap().clone();
+    let n = preset.blocks.len();
+    let (b, s) = (preset.model.batch, preset.model.seq_len);
+    // top-k needs norms every step: the full backward runs, one f32
+    // squared norm per block is read back, lr + clip-scale scalars are
+    // written — but gradients never cross
+    let mut t = Trainer::new(&engine, cfg(Method::TopK { pct: 30.0 }, None)).unwrap();
+    t.step_once().unwrap();
+    t.step_once().unwrap();
+
+    for step in 0..4u64 {
+        let before = engine.transfer_stats();
+        t.step_once().unwrap();
+        let d = engine.transfer_stats().delta_since(&before);
+        assert_eq!(
+            d.h2d_bytes,
+            ((2 * b * s) * 4 + 8) as u64,
+            "step {step}: explore h2d must be tokens + targets + lr + scale"
+        );
+        assert_eq!(
+            d.d2h_bytes,
+            (4 + 4 * n) as u64,
+            "step {step}: explore d2h must be the loss + one norm scalar per block"
+        );
+    }
+    assert_eq!(t.fused_steps(), 0, "norm-ranking steps cannot fuse");
+}
+
+#[test]
+fn stale_host_gradients_are_shrunk_after_masked_steps() {
+    let engine = ReferenceBackend::new();
+    let numels = engine.manifest().preset("test-tiny").unwrap().block_numels();
+    // pure-exploit: every host-loop step is masked, so after each step
+    // only the selected blocks may hold gradient staging
+    let method = Method::AdaGradSelect {
+        pct: 30.0,
+        eps0: 0.0,
+        lambda: None,
+        delta: 1.0,
+        explore_after_epoch1: false,
+        uniform_exploit: false,
+    };
+    let mut t = Trainer::new_host_loop(&engine, cfg(method, None)).unwrap();
+    for step in 0..8u64 {
+        t.step_once().unwrap();
+        let selected = t.metrics.records.last().unwrap().selected.clone();
+        let expect: usize = selected.iter().map(|&b| numels[b] * 4).sum();
+        assert_eq!(
+            t.host_grad_bytes(),
+            expect,
+            "step {step}: unselected grads_host entries must be shrunk, not kept stale"
+        );
+        let total: usize = numels.iter().map(|&x| x * 4).sum();
+        assert!(t.host_grad_bytes() < total, "step {step}: staging must shrink below full size");
+    }
+}
+
+#[test]
+fn manifests_without_inplace_entries_resolve_to_host_loop() {
+    let mut m = Manifest::builtin();
+    m.shared.remove("adamw_update_inplace");
+    let engine = ReferenceBackend::with_manifest(m);
+    let t = Trainer::new(&engine, cfg(Method::Full, Some(1.0))).unwrap();
+    assert_eq!(t.exec_mode(), ExecMode::HostLoop, "must degrade to the host loop");
+    // and asking for device residency explicitly is a clear error
+    let err = Trainer::new_with_mode(
+        &engine,
+        cfg(Method::Full, Some(1.0)),
+        ExecMode::DeviceResident,
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("adamw_update_inplace"), "{err}");
+}

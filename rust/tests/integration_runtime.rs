@@ -33,8 +33,8 @@ fn grad_norm_entry_matches_native() {
     let exe = engine.load_shared_exe("grad_norm_sq").unwrap();
     let n = engine.manifest().chunk_size;
     let g: Vec<f32> = (0..n).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
-    let buf = engine.upload_f32(&g).unwrap();
-    let out = engine.execute(&exe, &[&buf]).unwrap();
+    let buf = engine.upload_f32(&g, &[g.len()]).unwrap();
+    let out = engine.execute_to_host(&exe, &[&buf]).unwrap();
     let kernel = out.scalar_f32(0).unwrap() as f64;
     let native = block_norm_sq(&g);
     assert!((kernel - native).abs() / native < 1e-5, "kernel {kernel} native {native}");
@@ -52,13 +52,14 @@ fn run_train_step(
     let state = ModelState::init(&preset.blocks, seed);
     let (b, s) = (preset.model.batch, preset.model.seq_len);
     assert_eq!(tokens.len(), b * s);
-    let blocks: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let blocks: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
     let tok = engine.upload_i32(tokens, &[b, s]).unwrap();
     let tgt = engine.upload_i32(targets, &[b, s]).unwrap();
     let mut args: Vec<_> = blocks.iter().collect();
     args.push(&tok);
     args.push(&tgt);
-    let out = engine.execute(&exe, &args).unwrap();
+    let out = engine.execute_to_host(&exe, &args).unwrap();
     (0..1 + preset.blocks.len()).map(|i| out.vec_f32(i).unwrap().to_vec()).collect()
 }
 
@@ -112,11 +113,11 @@ fn decode_step_logits_shape_and_causality() {
 
     let run = |tokens: &[i32]| {
         let blocks: Vec<_> =
-            state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+            state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
         let mut args: Vec<_> = blocks.iter().collect();
         let tok = engine.upload_i32(tokens, &[b, s]).unwrap();
         args.push(&tok);
-        engine.execute(&exe, &args).unwrap().vec_f32(0).unwrap().to_vec()
+        engine.execute_to_host(&exe, &args).unwrap().vec_f32(0).unwrap().to_vec()
     };
     let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 40) as i32).collect();
     let logits = run(&tokens);
@@ -148,13 +149,14 @@ fn eval_loss_matches_train_step_loss() {
 
     let state = ModelState::init(&preset.blocks, 11);
     let exe = engine.load_preset_exe("test-tiny", "eval_loss").unwrap();
-    let blocks: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let blocks: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
     let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
     let tgt = engine.upload_i32(&targets, &[b, s]).unwrap();
     let mut args: Vec<_> = blocks.iter().collect();
     args.push(&tok);
     args.push(&tgt);
-    let eval = engine.execute(&exe, &args).unwrap().scalar_f32(0).unwrap();
+    let eval = engine.execute_to_host(&exe, &args).unwrap().scalar_f32(0).unwrap();
     assert!((eval - train_out[0][0]).abs() < 1e-6, "{eval} vs {}", train_out[0][0]);
 }
 
@@ -165,6 +167,8 @@ fn manifest_covers_all_presets_and_entries() {
         let p = engine.manifest().preset(name).unwrap();
         for entry in [
             "train_step",
+            "train_step_masked",
+            "train_step_fused",
             "train_step_lora",
             "eval_loss",
             "decode_step",
@@ -177,6 +181,11 @@ fn manifest_covers_all_presets_and_entries() {
                 .load_preset_exe(name, entry)
                 .unwrap_or_else(|_| panic!("{name}/{entry} does not load"));
         }
+    }
+    for shared in ["adamw_update", "adamw_update_inplace", "grad_norm_sq"] {
+        engine
+            .load_shared_exe(shared)
+            .unwrap_or_else(|_| panic!("shared {shared} does not load"));
     }
     assert_eq!(engine.platform(), "reference-cpu");
 }
@@ -191,7 +200,8 @@ fn prefill_and_decode_kv_entries_match_decode_step() {
     let preset = engine.manifest().preset("test-tiny").unwrap().clone();
     let state = ModelState::init(&preset.blocks, 6);
     let (b, s, v) = (preset.model.batch, preset.model.seq_len, preset.model.vocab);
-    let blocks: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let blocks: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
 
     let t = 7usize;
     let seq_tokens: Vec<i32> = (0..t + 1).map(|i| 4 + ((i * 5) % 40) as i32).collect();
@@ -203,14 +213,14 @@ fn prefill_and_decode_kv_entries_match_decode_step() {
     let tok = engine.upload_i32(&full, &[b, s]).unwrap();
     let mut args: Vec<_> = blocks.iter().collect();
     args.push(&tok);
-    let oracle = engine.execute(&exe_decode, &args).unwrap().take_vec(0).unwrap();
+    let oracle = engine.execute_to_host(&exe_decode, &args).unwrap().take_vec(0).unwrap();
 
     // prefill entry over the prompt prefix
     let exe_prefill = engine.load_preset_exe("test-tiny", "prefill").unwrap();
     let tok = engine.upload_i32(&seq_tokens[..t], &[1, t]).unwrap();
     let mut args: Vec<_> = blocks.iter().collect();
     args.push(&tok);
-    let mut out = engine.execute(&exe_prefill, &args).unwrap();
+    let mut out = engine.execute_to_host(&exe_prefill, &args).unwrap();
     let logits = out.take_vec(0).unwrap();
     let k_cache = out.take_vec(1).unwrap();
     let v_cache = out.take_vec(2).unwrap();
@@ -233,13 +243,15 @@ fn prefill_and_decode_kv_entries_match_decode_step() {
         out
     };
     let exe_kv = engine.load_preset_exe("test-tiny", "decode_step_kv").unwrap();
-    let k_buf = engine.upload_f32(&grow(&k_cache)).unwrap();
-    let v_buf = engine.upload_f32(&grow(&v_cache)).unwrap();
+    let k_grown = grow(&k_cache);
+    let v_grown = grow(&v_cache);
+    let k_buf = engine.upload_f32(&k_grown, &[k_grown.len()]).unwrap();
+    let v_buf = engine.upload_f32(&v_grown, &[v_grown.len()]).unwrap();
     let tok = engine.upload_i32(&seq_tokens[t..t + 1], &[1]).unwrap();
     let pos = engine.upload_i32(&[t as i32], &[1]).unwrap();
     let mut args: Vec<_> = blocks.iter().collect();
     args.extend([&k_buf, &v_buf, &tok, &pos]);
-    let mut out = engine.execute(&exe_kv, &args).unwrap();
+    let mut out = engine.execute_to_host(&exe_kv, &args).unwrap();
     let logits = out.take_vec(0).unwrap();
     assert_eq!(logits.len(), v);
     let want = &oracle[t * v..(t + 1) * v];

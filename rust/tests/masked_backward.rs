@@ -96,7 +96,8 @@ fn backend_boundary_carries_only_selected_gradients() {
     let exe = engine.load_preset_exe("test-tiny", "train_step_masked").unwrap();
     let exe_full = engine.load_preset_exe("test-tiny", "train_step").unwrap();
     let state = ModelState::init(&p.blocks, 9);
-    let bufs: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let bufs: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
     let (b, s) = (p.model.batch, p.model.seq_len);
     let tokens: Vec<i32> = (0..b * s).map(|i| 4 + (i % 40) as i32).collect();
     let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
@@ -106,7 +107,7 @@ fn backend_boundary_carries_only_selected_gradients() {
         let mut args: Vec<_> = bufs.iter().collect();
         args.push(&tok);
         args.push(&tok);
-        engine.execute(&exe_full, &args).unwrap()
+        engine.execute_to_host(&exe_full, &args).unwrap()
     };
     assert_eq!(full.outputs.len(), 1 + n);
 
@@ -117,7 +118,7 @@ fn backend_boundary_carries_only_selected_gradients() {
     args.push(&tok);
     args.push(&tok);
     args.push(&mask);
-    let out = engine.execute(&exe, &args).unwrap();
+    let out = engine.execute_to_host(&exe, &args).unwrap();
     assert_eq!(out.outputs.len(), 1 + 2, "unselected gradients crossed the boundary");
     assert_eq!(out.outputs[0], full.outputs[0], "loss diverged");
     assert_eq!(out.outputs[1], full.outputs[1 + 1], "layer0 grads diverged");
@@ -129,7 +130,7 @@ fn backend_boundary_carries_only_selected_gradients() {
     bad.push(&tok);
     bad.push(&tok);
     bad.push(&empty);
-    assert!(engine.execute(&exe, &bad).is_err());
+    assert!(engine.execute_to_host(&exe, &bad).is_err());
 }
 
 #[test]

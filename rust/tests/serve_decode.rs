@@ -12,7 +12,7 @@
 use adagradselect::data::Problem;
 use adagradselect::eval::Evaluator;
 use adagradselect::model::ModelState;
-use adagradselect::runtime::{Backend, RefBuffer, ReferenceBackend};
+use adagradselect::runtime::{Backend, RefTensor, ReferenceBackend};
 use adagradselect::serve::{KvBackend, KvPool, ServeConfig, ServeEngine};
 use adagradselect::util::rng::Rng;
 
@@ -57,7 +57,7 @@ fn kv_generate_matches_oracle_token_for_token() {
 /// Per-request oracle outputs keyed by prompt, for the engine tests.
 fn oracle_outputs(
     ev: &Evaluator<'_, ReferenceBackend>,
-    device: &[RefBuffer],
+    device: &[RefTensor],
     prompts: &[Vec<i32>],
 ) -> Vec<Vec<i32>> {
     prompts
@@ -220,8 +220,8 @@ fn steady_state_decode_performs_zero_slab_allocations() {
     let engine = engine();
     let preset = engine.manifest().preset(PRESET).unwrap().clone();
     let state = ModelState::init(&preset.blocks, 1);
-    let blocks: Vec<RefBuffer> =
-        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let blocks: Vec<RefTensor> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
 
     let n = 4usize;
     let mut pool = KvPool::new(&preset.model, n);

@@ -20,9 +20,9 @@ fn run_entries(engine: &ReferenceBackend, entries: &[&str]) -> Vec<Vec<Vec<f32>>
     let state = ModelState::init(&p.blocks, 11);
     let lora = ModelState::init(&p.lora_blocks, 12);
     let base_bufs: Vec<_> =
-        state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
     let lora_bufs: Vec<_> =
-        lora.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+        lora.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
     let tokens = tokens_for(b, s);
     let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
 
@@ -37,7 +37,7 @@ fn run_entries(engine: &ReferenceBackend, entries: &[&str]) -> Vec<Vec<Vec<f32>>
         if *entry != "decode_step" {
             args.push(&tok);
         }
-        let out = engine.execute(&exe, &args).unwrap();
+        let out = engine.execute_to_host(&exe, &args).unwrap();
         outs.push(out.outputs);
     }
     outs
@@ -108,7 +108,8 @@ fn train_step_alone_is_allocation_free_after_warmup() {
     let p = engine.manifest().preset("test-tiny").unwrap().clone();
     let (b, s) = (p.model.batch, p.model.seq_len);
     let state = ModelState::init(&p.blocks, 3);
-    let bufs: Vec<_> = state.flats.iter().map(|f| engine.upload_f32(f).unwrap()).collect();
+    let bufs: Vec<_> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
     let tokens = tokens_for(b, s);
     let tok = engine.upload_i32(&tokens, &[b, s]).unwrap();
     let exe = engine.load_preset_exe("test-tiny", "train_step").unwrap();
