@@ -13,7 +13,13 @@
 //! cargo run --release --example serve_eval -- --requests 64 --rate 8
 //! cargo run --release --example serve_eval -- --checkpoint results/e2e_final.ckpt --preset e2e
 //! cargo run --release --example serve_eval -- --requests 16 --oracle
+//! cargo run --release --example serve_eval -- --temperature 0.8 --top-k 40 --sample-seed 7
 //! ```
+//!
+//! `--temperature > 0` switches every request to seeded sampling
+//! (`--top-k`, `--top-p`, `--sample-seed` refine it); the draw at step
+//! `g` of request `i` depends only on `(sample-seed + i, g)`, so a
+//! sampled run is bit-reproducible regardless of batch interleaving.
 
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{extract_answer, MathGen, Split, Suite};
@@ -21,7 +27,7 @@ use adagradselect::eval::Evaluator;
 use adagradselect::memory::kv_cache_bytes;
 use adagradselect::model::ModelState;
 use adagradselect::runtime::{Backend, ReferenceBackend};
-use adagradselect::serve::{Response, ServeConfig, ServeEngine};
+use adagradselect::serve::{Response, SamplingParams, ServeConfig, ServeEngine};
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
 use adagradselect::util::rng::Rng;
@@ -45,8 +51,13 @@ fn main() -> Result<()> {
     let slots = args.usize_or("slots", 0)?;
     let rate = args.f64_or("rate", 0.0)?; // Poisson arrivals per second; 0 = all at t=0
     let seed = args.u64_or("seed", 7)?;
+    let temperature = args.f64_or("temperature", 0.0)? as f32; // 0 = greedy
+    let top_k = args.usize_or("top-k", 0)?;
+    let top_p = args.f64_or("top-p", 1.0)? as f32;
+    let sample_seed = args.u64_or("sample-seed", 0)?;
     let compare_oracle = args.bool_flag("oracle");
     args.finish()?;
+    let sampled = temperature > 0.0;
 
     let engine = ReferenceBackend::new();
     let state: ModelState = match checkpoint {
@@ -83,11 +94,23 @@ fn main() -> Result<()> {
     let mut rng = Rng::seed_from_u64(seed);
     let mut arrival = 0.0f64;
     let mut ids = Vec::with_capacity(requests);
-    for prob in &problems {
+    for (i, prob) in problems.iter().enumerate() {
         if rate > 0.0 {
             arrival += -(1.0 - rng.gen_f64()).ln() / rate;
         }
-        ids.push(srv.submit(tok.encode(&prob.prompt(), true, false), 0, arrival));
+        let prompt = tok.encode(&prob.prompt(), true, false);
+        ids.push(if sampled {
+            let params = SamplingParams {
+                temperature,
+                top_k,
+                top_p,
+                seed: sample_seed.wrapping_add(i as u64),
+                stop: Vec::new(),
+            };
+            srv.submit_sampled(prompt, 0, arrival, params)
+        } else {
+            srv.submit(prompt, 0, arrival)
+        });
     }
 
     let t_all = std::time::Instant::now();
@@ -154,12 +177,24 @@ fn main() -> Result<()> {
         gen_tokens as f64 / wall_s
     );
     println!(
-        "kv cache:        {:.2} MiB resident ({} slots x {} rows; formula {:.2} MiB)",
+        "kv cache:        peak {:.2} MiB of paged {:.2} MiB worst case ({} slots x {} rows; \
+         formula {:.2} MiB)",
+        stats.kv_peak_bytes as f64 / (1024.0 * 1024.0),
         stats.kv_bytes as f64 / (1024.0 * 1024.0),
         slots,
         p.model.seq_len,
         kv_cache_bytes(&p.model, slots, 4) as f64 / (1024.0 * 1024.0)
     );
+    println!(
+        "paging:          {} pages allocated, {} copy-on-write forks, {} prefix-hit tokens",
+        stats.pages_allocated, stats.cow_copies, stats.prefix_hit_tokens
+    );
+    if sampled {
+        println!(
+            "sampling:        temperature {temperature}, top-k {top_k}, top-p {top_p}, \
+             seed {sample_seed}"
+        );
+    }
     println!("exact match:     {correct}/{requests}");
 
     if compare_oracle {
@@ -190,11 +225,19 @@ fn main() -> Result<()> {
             gen_tokens as f64 / wall_s,
             oracle_tokens as f64 / oracle_s
         );
-        // token-for-token parity spot check
-        let mismatch = responses.iter().filter(|r| !r.truncated).any(|r: &Response| {
-            oracle_gens.get(by_id(r.id)).map(|g| g != &r.tokens).unwrap_or(true)
-        });
-        println!("parity:          {}", if mismatch { "MISMATCH" } else { "token-for-token ok" });
+        // token-for-token parity spot check (the oracle is greedy, so a
+        // sampled run has nothing to compare against)
+        if sampled {
+            println!("parity:          skipped (sampled run vs greedy oracle)");
+        } else {
+            let mismatch = responses.iter().filter(|r| !r.truncated).any(|r: &Response| {
+                oracle_gens.get(by_id(r.id)).map(|g| g != &r.tokens).unwrap_or(true)
+            });
+            println!(
+                "parity:          {}",
+                if mismatch { "MISMATCH" } else { "token-for-token ok" }
+            );
+        }
     }
     Ok(())
 }

@@ -63,6 +63,11 @@ fn bench_preset(
     // --- never committing a length, so pos stays 0)
     let mut pool = KvPool::new(&p.model, b);
     let slots: Vec<usize> = (0..b).map(|_| pool.alloc().unwrap()).collect();
+    for &slot in &slots {
+        // views() only auto-maps the next row; a whole prompt needs its
+        // pages mapped up front
+        pool.ensure_room(slot, prompt_len).unwrap();
+    }
     let prefill = bench(&format!("prefill/{name}/t{prompt_len}"), budget, || {
         let mut views = pool.views(&slots[..1]).unwrap();
         std::hint::black_box(
@@ -116,7 +121,8 @@ fn bench_preset(
     let per_token_cached = cached.mean_ns / b as f64;
     let per_token_oracle = oracle.mean_ns / b as f64;
     let speedup = per_token_oracle / per_token_cached;
-    let kv_pool_bytes = pool.bytes();
+    let kv_pool_bytes = pool.capacity_bytes();
+    let kv_in_use = pool.bytes();
     let kv_modeled = adagradselect::memory::kv_cache_bytes(&p.model, b, 4);
     println!(
         "    -> {name}: cached {:.1} µs/token vs reforward {:.1} µs/token = {speedup:.1}x; \
@@ -140,6 +146,7 @@ fn bench_preset(
         ("tokens_per_s_reforward", Value::num(1e9 / per_token_oracle)),
         ("cached_vs_reforward_speedup", Value::num(speedup)),
         ("kv_bytes_pool", Value::num(kv_pool_bytes as f64)),
+        ("kv_bytes_in_use", Value::num(kv_in_use as f64)),
         ("kv_bytes_modeled", Value::num(kv_modeled as f64)),
         ("steady_state_decode_grows_10_steps", Value::num(steady_grows as f64)),
     ]);

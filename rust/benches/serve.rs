@@ -1,0 +1,241 @@
+//! End-to-end paged-serving benchmark — the before/after for the paged
+//! KV pool + prefix sharing rewrite:
+//!
+//! * **churn throughput**: 24 short requests over 4 slots through the
+//!   full engine loop (admission → prefill → batched decode → release),
+//!   greedy and sampled — the sampled/greedy latency ratio is the
+//!   sampling overhead;
+//! * **paged vs slot-model memory**: the measured peak of pages in use
+//!   vs the old slot-model backing store (`slots × seq_len`), recorded
+//!   as a machine-independent invariant (`slot_model/paged_peak >= 1`)
+//!   that `scripts/bench_compare` enforces unconditionally;
+//! * **prefix sharing**: 8 requests behind one 32-token system-prompt
+//!   stem must prefill the stem **once** (every follower serves it from
+//!   the prefix cache) — invariant `prefix_stem_prefilled_once`;
+//! * **steady-state page allocations**: decode steps inside a page must
+//!   claim zero fresh pages and zero arena slabs — invariant
+//!   `steady_state_zero_page_allocs` plus the shared
+//!   `workspace.steady_state_grows_10_steps` gate.
+//!
+//! Writes `BENCH_serve.json` (override with `AGSEL_BENCH_SERVE_JSON`);
+//! CI uploads it next to `BENCH_decode.json` and gates it through
+//! `scripts/bench_compare` against
+//! `rust/benches/baselines/BENCH_serve.baseline.json`.
+
+use std::time::{Duration, Instant};
+
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, RefTensor, ReferenceBackend};
+use adagradselect::serve::{
+    KvBackend, KvPool, SamplingParams, ServeConfig, ServeEngine, ServeStats,
+};
+use adagradselect::util::bench::{bench, header, BenchResult};
+use adagradselect::util::json::Value;
+
+const PRESET: &str = "test-tiny";
+
+fn result_row(r: &BenchResult) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(&r.name)),
+        ("mean_ns", Value::num(r.mean_ns)),
+        ("p50_ns", Value::num(r.p50_ns)),
+        ("p95_ns", Value::num(r.p95_ns)),
+        ("iters", Value::num(r.iters as f64)),
+    ])
+}
+
+/// Deterministic prompt of `len` in-vocab tokens.
+fn prompt(len: usize, salt: u64) -> Vec<i32> {
+    (0..len).map(|i| 4 + ((i as u64 * 7 + salt * 13) % 50) as i32).collect()
+}
+
+/// Run `n` requests through a fresh engine; returns (wall seconds,
+/// generated tokens, stats).
+fn churn(
+    backend: &ReferenceBackend,
+    state: &ModelState,
+    n: u64,
+    params: Option<&SamplingParams>,
+) -> (f64, usize, ServeStats) {
+    let mut srv = ServeEngine::new(
+        backend,
+        PRESET,
+        state,
+        ServeConfig { slots: 4, max_new_tokens: 8 },
+    )
+    .unwrap();
+    for i in 0..n {
+        let p = prompt(10, 100 + i);
+        match params {
+            Some(sp) => {
+                let mut sp = sp.clone();
+                sp.seed = i; // per-request stream, like a real server
+                srv.submit_sampled(p, 0, 0.0, sp)
+            }
+            None => srv.submit(p, 0, 0.0),
+        };
+    }
+    let t0 = Instant::now();
+    let responses = srv.run_until_idle().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len() as u64, n, "every request completes");
+    assert!(responses.iter().all(|r| !r.truncated));
+    let generated: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    (dt, generated, srv.stats())
+}
+
+fn main() {
+    header("serve");
+    let quick = std::env::var_os("AGSEL_BENCH_QUICK").is_some();
+    let budget_ms: u64 = std::env::var("AGSEL_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 150 } else { 1000 });
+    let budget = Duration::from_millis(budget_ms);
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 13);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut invariants = Vec::new();
+
+    // --- churn: full engine loop, greedy vs sampled -------------------
+    let n_req = if quick { 16 } else { 24 };
+    let (greedy_s, greedy_toks, stats) = churn(&engine, &state, n_req, None);
+    let sp = SamplingParams { temperature: 0.9, top_k: 16, top_p: 0.95, ..Default::default() };
+    let (sampled_s, sampled_toks, sampled_stats) = churn(&engine, &state, n_req, Some(&sp));
+    let sampling_overhead = sampled_s / greedy_s;
+    let slot_model_bytes = stats.kv_bytes; // slots × seq_len provisioning
+    let paged_peak_bytes = stats.kv_peak_bytes.max(1);
+    let mem_ratio = slot_model_bytes as f64 / paged_peak_bytes as f64;
+    println!(
+        "    -> churn: {n_req} reqs, greedy {:.1} ms ({greedy_toks} toks), sampled {:.1} ms \
+         ({sampled_toks} toks); paged peak {:.1} KiB vs slot-model {:.1} KiB ({mem_ratio:.1}x)",
+        greedy_s * 1e3,
+        sampled_s * 1e3,
+        paged_peak_bytes as f64 / 1024.0,
+        slot_model_bytes as f64 / 1024.0,
+    );
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("churn/slot_model_vs_paged_peak_bytes")),
+        ("value", Value::num(mem_ratio)),
+        ("min", Value::num(1.0)),
+    ]));
+
+    // --- prefix sharing: one stem, many followers ---------------------
+    let page = adagradselect::serve::DEFAULT_PAGE_SIZE;
+    let stem = prompt(2 * page, 9);
+    let n_shared = 8usize;
+    let mut srv = ServeEngine::new(
+        &engine,
+        PRESET,
+        &state,
+        ServeConfig { slots: 2, max_new_tokens: 4 },
+    )
+    .unwrap();
+    for i in 0..n_shared {
+        let mut p = stem.clone();
+        p.extend(prompt(4, 40 + i as u64));
+        srv.submit(p, 0, 0.0);
+    }
+    srv.run_until_idle().unwrap();
+    let shared = srv.stats();
+    // every follower must cover the whole stem from the cache
+    let want_hits = (n_shared - 1) * stem.len();
+    let stem_once = if shared.prefix_hit_tokens == want_hits { 1.0 } else { 0.0 };
+    println!(
+        "    -> prefix: {} hit tokens (want {want_hits}), {} prefilled, {} cow copies",
+        shared.prefix_hit_tokens, shared.prefill_tokens, shared.cow_copies,
+    );
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("prefix/stem_prefilled_once")),
+        ("value", Value::num(stem_once)),
+        ("min", Value::num(1.0)),
+    ]));
+
+    // --- steady state: decode inside a page allocates nothing ---------
+    let blocks: Vec<RefTensor> =
+        state.flats.iter().map(|f| engine.upload_f32(f, &[f.len()]).unwrap()).collect();
+    let mut pool = KvPool::new(&preset.model, 4);
+    let slots: Vec<usize> = (0..4).map(|_| pool.alloc().unwrap()).collect();
+    let p4 = prompt(4, 3);
+    for &slot in &slots {
+        let mut views = pool.views(&[slot]).unwrap();
+        engine.kv_prefill(&preset, &blocks, &p4, &mut views[0]).unwrap();
+        pool.set_len(slot, p4.len());
+    }
+    let toks = vec![6i32; slots.len()];
+    let mut feed = |pool: &mut KvPool| {
+        let mut views = pool.views(&slots).unwrap();
+        engine.kv_decode_step(&preset, &blocks, &toks, &mut views).unwrap();
+        drop(views);
+        for &slot in &slots {
+            pool.advance(slot);
+        }
+    };
+    feed(&mut pool); // warm the arena
+    let (pages0, grows0) = (pool.pages_allocated(), engine.workspace_stats().grows);
+    for _ in 0..10 {
+        feed(&mut pool);
+    }
+    let page_allocs = pool.pages_allocated() - pages0;
+    let steady_grows = engine.workspace_stats().grows - grows0;
+    println!("    -> steady: {page_allocs} page allocs, {steady_grows} arena grows (want 0)");
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("steady_state_zero_page_allocs")),
+        ("value", Value::num(if page_allocs == 0 { 1.0 } else { 0.0 })),
+        ("min", Value::num(1.0)),
+    ]));
+
+    // --- sampling micro-latency: argmax vs full top-k/top-p draw ------
+    let logits: Vec<f32> =
+        (0..preset.model.vocab).map(|i| ((i * 37 % 101) as f32) / 7.0 - 5.0).collect();
+    let greedy_p = SamplingParams::default();
+    results.push(bench("sample/greedy_argmax", budget, || {
+        std::hint::black_box(adagradselect::serve::sample_token(&logits, &greedy_p, 0));
+    }));
+    let mut step = 0u64;
+    results.push(bench("sample/top_k16_top_p95", budget, || {
+        step += 1;
+        std::hint::black_box(adagradselect::serve::sample_token(&logits, &sp, step));
+    }));
+
+    let ws = engine.workspace_stats();
+    let serve_rows = vec![Value::obj(vec![
+        ("preset", Value::str(PRESET)),
+        ("n_requests", Value::num(n_req as f64)),
+        ("greedy_wall_s", Value::num(greedy_s)),
+        ("sampled_wall_s", Value::num(sampled_s)),
+        ("sampling_overhead", Value::num(sampling_overhead)),
+        ("greedy_tokens_per_s", Value::num(greedy_toks as f64 / greedy_s.max(1e-9))),
+        ("slot_model_bytes", Value::num(slot_model_bytes as f64)),
+        ("paged_peak_bytes", Value::num(paged_peak_bytes as f64)),
+        ("pages_allocated", Value::num(stats.pages_allocated as f64)),
+        ("cow_copies", Value::num(sampled_stats.cow_copies as f64)),
+        ("prefix_hit_tokens", Value::num(shared.prefix_hit_tokens as f64)),
+        ("prefix_prefill_tokens", Value::num(shared.prefill_tokens as f64)),
+    ])];
+
+    let summary = Value::obj(vec![
+        ("schema", Value::num(1.0)),
+        ("quick", Value::Bool(quick)),
+        ("budget_ms", Value::num(budget_ms as f64)),
+        ("calibrated", Value::Bool(false)),
+        ("results", Value::Arr(results.iter().map(result_row).collect())),
+        ("serve", Value::Arr(serve_rows)),
+        ("invariants", Value::Arr(invariants)),
+        (
+            "workspace",
+            Value::obj(vec![
+                ("high_water_bytes", Value::num(ws.high_water_bytes as f64)),
+                ("capacity_bytes", Value::num(ws.capacity_bytes as f64)),
+                ("grows_total", Value::num(ws.grows as f64)),
+                ("takes_total", Value::num(ws.takes as f64)),
+                ("steady_state_grows_10_steps", Value::num(steady_grows as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("AGSEL_BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&path, format!("{summary}\n")).expect("write bench summary");
+    println!("\nwrote {path}");
+}

@@ -199,6 +199,7 @@ impl<'e, B: KvBackend> Evaluator<'e, B> {
                 continue; // flagged by the caller as truncated
             }
             let slot = pool.alloc().expect("one slot per prompt");
+            pool.ensure_room(slot, p.len())?; // views only auto-map len + 1
             let logits = {
                 let mut views = pool.views(&[slot])?;
                 self.engine.kv_prefill(&self.preset, device_blocks, p, &mut views[0])?

@@ -75,9 +75,11 @@ impl MemoryReport {
         self
     }
 
-    /// Account a serving-time K/V cache — either the modeled
-    /// [`kv_cache_bytes`] or the measured `serve::KvPool::bytes()` (the
-    /// two agree by construction at `bytes_per_param = 4`).
+    /// Account a serving-time K/V cache — either the modeled worst case
+    /// ([`kv_cache_bytes`], which equals the paged pool's
+    /// `serve::KvPool::capacity_bytes()` at `bytes_per_param = 4` when
+    /// `seq_len` tiles into pages) or the measured in-use footprint
+    /// `serve::KvPool::bytes()`, which scales with cached tokens.
     pub fn with_kv_cache(mut self, kv_bytes: usize) -> Self {
         self.kv_cache = kv_bytes;
         self
@@ -96,11 +98,22 @@ impl MemoryReport {
     }
 }
 
-/// Serving-time K/V cache capacity: `2 (K and V) · n_layers · slots ·
-/// seq_len · n_heads·d_head · bytes`. This is exactly the backing store
-/// `serve::KvPool` allocates for `slots` concurrently resident sequences.
+/// Serving-time K/V cache worst case: `2 (K and V) · n_layers · slots ·
+/// seq_len · n_heads·d_head · bytes` — the slot-model capacity
+/// `serve::KvPool` provisions for `slots` concurrently resident full-
+/// context sequences (`KvPool::capacity_bytes()` when `seq_len` tiles
+/// into whole pages). Actual in-use bytes are page-granular; see
+/// [`kv_page_bytes`].
 pub fn kv_cache_bytes(m: &ModelSpec, slots: usize, bytes_per_param: usize) -> usize {
     2 * m.n_layers * slots * m.seq_len * m.n_heads * m.d_head * bytes_per_param
+}
+
+/// Bytes of one K/V page: `2 (K and V) · n_layers · page_size ·
+/// n_heads·d_head · bytes`. The paged pool's in-use footprint is
+/// `pages_in_use × kv_page_bytes` — it grows with *cached tokens*
+/// (rounded up to pages), not with `slots × seq_len`.
+pub fn kv_page_bytes(m: &ModelSpec, page_size: usize, bytes_per_param: usize) -> usize {
+    2 * m.n_layers * page_size * m.n_heads * m.d_head * bytes_per_param
 }
 
 /// §3.3: optimizer bytes for a selected parameter count.
@@ -228,12 +241,32 @@ mod tests {
         let p = preset();
         let slots = 6;
         let pool = KvPool::new(&p.model, slots);
-        assert_eq!(kv_cache_bytes(&p.model, slots, 4), pool.bytes());
+        // qwen-sim's seq_len tiles into whole pages, so the worst-case
+        // formula equals the paged pool's provisioned capacity exactly
+        assert_eq!(p.model.seq_len % pool.page_size(), 0);
+        assert_eq!(kv_cache_bytes(&p.model, slots, 4), pool.capacity_bytes());
+        assert_eq!(kv_page_bytes(&p.model, pool.page_size(), 4), pool.page_bytes());
         // and it rolls into the report total through the builder
         let rep = method_memory(&p, &Method::Full, 2);
-        let with_kv = rep.with_kv_cache(pool.bytes());
-        assert_eq!(with_kv.total(), rep.total() + pool.bytes());
+        let with_kv = rep.with_kv_cache(pool.capacity_bytes());
+        assert_eq!(with_kv.total(), rep.total() + pool.capacity_bytes());
         assert_eq!(rep.kv_cache, 0, "training reports carry no cache");
+    }
+
+    #[test]
+    fn paged_kv_bytes_grow_with_tokens_not_capacity() {
+        use crate::serve::KvPool;
+        let p = preset();
+        let mut pool = KvPool::new(&p.model, 6);
+        assert_eq!(pool.bytes(), 0, "an idle pool holds no pages");
+        let s = pool.alloc().unwrap();
+        pool.ensure_room(s, 1).unwrap();
+        // one cached token costs one page, not a whole slot
+        assert_eq!(pool.bytes(), kv_page_bytes(&p.model, pool.page_size(), 4));
+        // filling the slot converges on its share of the worst case
+        pool.ensure_room(s, p.model.seq_len).unwrap();
+        assert_eq!(pool.bytes() * 6, kv_cache_bytes(&p.model, 6, 4));
+        assert!(pool.bytes() < pool.capacity_bytes());
     }
 
     #[test]

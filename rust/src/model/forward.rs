@@ -18,8 +18,8 @@
 //!
 //! Besides the training entrypoints, this module holds the **incremental
 //! decoding** kernels behind the serving subsystem (`crate::serve`):
-//! [`prefill_in`] runs a prompt once and fills per-layer K/V caches
-//! ([`SeqKv`]), and [`decode_step_kv_in`] advances a whole batch of
+//! [`prefill_in`] runs a prompt once and fills a sequence's paged K/V
+//! cache ([`KvView`]), and [`decode_step_kv_in`] advances a whole batch of
 //! independent sequences by one token each, attending over their caches —
 //! one full forward per prompt plus one single-token step per generated
 //! token, instead of the `decode_step` oracle's full reforward per token.
@@ -55,6 +55,8 @@
 //! the JAX reference in `tests/backend_parity.rs`.
 
 #![allow(clippy::needless_range_loop)]
+
+use std::marker::PhantomData;
 
 use anyhow::{anyhow, Result};
 
@@ -1460,54 +1462,215 @@ pub fn decode_logits_in(
 // incremental decoding: prefill + KV-cached single-token steps
 // ---------------------------------------------------------------------------
 
-/// One layer's K/V cache for a single sequence: **rotary-encoded** keys
-/// and raw values, `[capacity, d]` row-major with `d = n_heads·d_head`.
-/// Rows `0..pos` of the owning [`SeqKv`] are valid.
-pub struct KvLayer<'a> {
-    pub k: &'a mut [f32],
-    pub v: &'a mut [f32],
-}
-
-/// One sequence's per-layer cache views plus its current length. Views
-/// are ephemeral — they are rebuilt from the owning pool for every kernel
-/// call (`serve::KvPool::views`); the kernels advance `pos` on the view,
-/// and the pool's lengths are advanced by the caller after a successful
-/// step.
-pub struct SeqKv<'a> {
-    /// Exactly `n_layers` entries, all planes the same size.
-    pub layers: Vec<KvLayer<'a>>,
+/// One sequence's K/V cache view, addressed through a **page table**.
+///
+/// Row `r` (one token's rotary-encoded key and raw value, `d =
+/// n_heads·d_head` floats per layer) lives in page `pages[r / page_size]`
+/// at in-page row `r % page_size`. Page storage is `[page, layer,
+/// page_size, d]` row-major, so a single page holds a `page_size`-token
+/// run for **all** layers — one refcount covers the whole-model K/V of
+/// that token run, which is what makes prefix sharing cheap.
+///
+/// Views are ephemeral — rebuilt from the owning pool
+/// (`serve::KvPool::views`) for every kernel call; the kernels advance
+/// `pos` on the view and the pool's lengths are synced by the caller
+/// after a successful step. The degenerate single-page form
+/// ([`KvView::contiguous`]) wraps plain `[n_layers, capacity, d]` buffers
+/// for the functional cache-in/cache-out artifacts and tests.
+///
+/// # Safety discipline
+///
+/// The view holds raw pointers into the pool's backing store so that
+/// several concurrently decoded sequences may map the **same** read-only
+/// shared prefix page while each maps its own exclusive tail pages. The
+/// pool enforces at view-construction time that every page covering rows
+/// `>= pos` (rows a kernel may write) is exclusively owned
+/// (refcount 1); kernels write only rows `>= pos`, serially, before any
+/// parallel read-only attention pass, and read only rows already
+/// written. Shared pages are therefore never written and never read
+/// while being written.
+pub struct KvView<'a> {
+    k: *mut f32,
+    v: *mut f32,
+    /// Page ids in row order; `pages.len() · page_size` rows are mapped.
+    pages: Vec<u32>,
     /// Tokens already cached (the next token's K/V land at row `pos`).
     pub pos: usize,
+    page_size: usize,
+    n_layers: usize,
+    d: usize,
+    /// Logical row capacity (the model context length). Mapped rows may
+    /// be fewer — the pool allocates pages on demand as decode advances —
+    /// and writing an unmapped row is a kernel error, not a grow.
+    capacity: usize,
+    _pool: PhantomData<&'a mut f32>,
 }
 
-impl SeqKv<'_> {
-    /// Rows available per layer plane (`plane_len / d`).
-    pub fn capacity(&self, d: usize) -> usize {
-        self.layers.first().map(|l| l.k.len() / d).unwrap_or(0)
+// Safety: the discipline documented on the type — concurrent access to a
+// page shared between views is read-only; writable rows live in pages
+// owned by exactly one view.
+unsafe impl Send for KvView<'_> {}
+unsafe impl Sync for KvView<'_> {}
+
+impl<'a> KvView<'a> {
+    /// Pool-side constructor (`serve::KvPool::views`); the pool upholds
+    /// the safety discipline documented on the type. The unconstrained
+    /// lifetime is pinned by the pool method's `&mut self` signature.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_pool(
+        k: *mut f32,
+        v: *mut f32,
+        pages: Vec<u32>,
+        pos: usize,
+        page_size: usize,
+        n_layers: usize,
+        d: usize,
+        capacity: usize,
+    ) -> Self {
+        Self { k, v, pages, pos, page_size, n_layers, d, capacity, _pool: PhantomData }
+    }
+
+    /// View over plain contiguous per-layer buffers (`[n_layers,
+    /// capacity, d]` row-major, K and V the same shape): one page as
+    /// large as the whole sequence. This is the functional
+    /// cache-in/cache-out form the lowered `prefill` / `decode_step_kv`
+    /// artifacts round-trip.
+    pub fn contiguous(
+        k: &'a mut [f32],
+        v: &'a mut [f32],
+        n_layers: usize,
+        d: usize,
+        pos: usize,
+    ) -> Result<Self> {
+        if n_layers == 0 || d == 0 || k.is_empty() {
+            return Err(anyhow!("kv view: empty cache ({} layers, d {d})", n_layers));
+        }
+        if k.len() != v.len() || k.len() % (n_layers * d) != 0 {
+            return Err(anyhow!(
+                "kv view: cache of {} (k) / {} (v) cannot tile into {n_layers} planes of width {d}",
+                k.len(),
+                v.len()
+            ));
+        }
+        let cap = k.len() / (n_layers * d);
+        Ok(Self {
+            k: k.as_mut_ptr(),
+            v: v.as_mut_ptr(),
+            pages: vec![0],
+            pos,
+            page_size: cap,
+            n_layers,
+            d,
+            capacity: cap,
+            _pool: PhantomData,
+        })
+    }
+
+    /// Logical row capacity (tokens this sequence may ever cache).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Rows with a mapped page behind them (always `>= pos`).
+    pub fn mapped_rows(&self) -> usize {
+        self.pages.len() * self.page_size
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    #[inline]
+    fn offset(&self, layer: usize, row: usize) -> usize {
+        let (page, r) = (row / self.page_size, row % self.page_size);
+        ((self.pages[page] as usize * self.n_layers + layer) * self.page_size + r) * self.d
+    }
+
+    #[inline]
+    fn k_row(&self, layer: usize, row: usize) -> &[f32] {
+        let off = self.offset(layer, row);
+        unsafe { std::slice::from_raw_parts(self.k.add(off), self.d) }
+    }
+
+    #[inline]
+    fn v_row(&self, layer: usize, row: usize) -> &[f32] {
+        let off = self.offset(layer, row);
+        unsafe { std::slice::from_raw_parts(self.v.add(off), self.d) }
+    }
+
+    /// Write one row's K and V (serial, exclusively-owned pages only —
+    /// see the safety discipline).
+    #[inline]
+    fn write_row(&mut self, layer: usize, row: usize, k: &[f32], v: &[f32]) {
+        let off = self.offset(layer, row);
+        unsafe {
+            std::slice::from_raw_parts_mut(self.k.add(off), self.d).copy_from_slice(k);
+            std::slice::from_raw_parts_mut(self.v.add(off), self.d).copy_from_slice(v);
+        }
+    }
+
+    /// Scatter `k_src.len() / d` consecutive rows starting at `start`
+    /// from contiguous `[rows, d]` buffers (functional-artifact cache
+    /// sync; the rows must be mapped).
+    pub fn write_rows(
+        &mut self,
+        layer: usize,
+        start: usize,
+        k_src: &[f32],
+        v_src: &[f32],
+    ) -> Result<()> {
+        if k_src.len() != v_src.len() || k_src.len() % self.d != 0 {
+            return Err(anyhow!("kv view: ragged row scatter ({} vs {})", k_src.len(), v_src.len()));
+        }
+        let n = k_src.len() / self.d;
+        if start + n > self.mapped_rows() {
+            return Err(anyhow!(
+                "kv view: scatter of rows {start}..{} beyond the {} mapped",
+                start + n,
+                self.mapped_rows()
+            ));
+        }
+        for i in 0..n {
+            let ks = &k_src[i * self.d..(i + 1) * self.d];
+            let vs = &v_src[i * self.d..(i + 1) * self.d];
+            self.write_row(layer, start + i, ks, vs);
+        }
+        Ok(())
+    }
+
+    /// Gather rows `0..n` of one layer into contiguous `[n, d]` buffers.
+    pub fn read_rows(
+        &self,
+        layer: usize,
+        n: usize,
+        k_dst: &mut [f32],
+        v_dst: &mut [f32],
+    ) -> Result<()> {
+        if k_dst.len() != n * self.d || v_dst.len() != n * self.d || n > self.mapped_rows() {
+            return Err(anyhow!("kv view: bad row gather (n {n}, mapped {})", self.mapped_rows()));
+        }
+        for i in 0..n {
+            k_dst[i * self.d..(i + 1) * self.d].copy_from_slice(self.k_row(layer, i));
+            v_dst[i * self.d..(i + 1) * self.d].copy_from_slice(self.v_row(layer, i));
+        }
+        Ok(())
     }
 }
 
-/// Validate one sequence's cache views against the model spec; returns
-/// the per-sequence row capacity. Runs before any arena take.
-fn check_seq_kv(seq: &SeqKv<'_>, spec: &ModelSpec, d: usize) -> Result<usize> {
-    if seq.layers.len() != spec.n_layers {
+/// Validate one sequence's cache view against the model spec; returns
+/// the logical row capacity. Runs before any arena take.
+fn check_kv_view(view: &KvView<'_>, spec: &ModelSpec, d: usize) -> Result<usize> {
+    if view.n_layers != spec.n_layers {
         return Err(anyhow!(
             "kv cache has {} layer planes, model has {} layers",
-            seq.layers.len(),
+            view.n_layers,
             spec.n_layers
         ));
     }
-    let cap = seq.capacity(d);
-    for (l, lv) in seq.layers.iter().enumerate() {
-        if lv.k.len() != lv.v.len() || lv.k.len() % d != 0 || lv.k.len() / d != cap {
-            return Err(anyhow!(
-                "kv cache layer {l}: inconsistent plane sizes (k {}, v {}, d {d})",
-                lv.k.len(),
-                lv.v.len()
-            ));
-        }
+    if view.d != d {
+        return Err(anyhow!("kv cache row width {} does not match the model's {d}", view.d));
     }
-    Ok(cap)
+    Ok(view.capacity)
 }
 
 /// Above this many multiply-adds the per-sequence attention loop of a
@@ -1523,7 +1686,7 @@ const DECODE_ATTN_PAR_MIN_MULADDS: usize = 1 << 18;
 fn attention_decode(
     ws: &mut Workspace,
     q: &[f32],
-    seqs: &[SeqKv<'_>],
+    seqs: &[KvView<'_>],
     layer: usize,
     positions: &[usize],
     n_heads: usize,
@@ -1544,7 +1707,7 @@ fn attention_decode(
     let prow_ptr = SendPtr(prow_all.as_mut_ptr());
     par_for_each_index(n, par, |i| {
         let pos = positions[i];
-        let lkv = &seqs[i].layers[layer];
+        let view = &seqs[i];
         // safety: each sequence index owns a disjoint stripe of att/prow
         let orow =
             unsafe { std::slice::from_raw_parts_mut(att_ptr.get().add(i * d), d) };
@@ -1555,7 +1718,7 @@ fn attention_decode(
             let qrow = &q[i * d + off..i * d + off + d_head];
             let mut maxv = f32::NEG_INFINITY;
             for (j, pj) in prow.iter_mut().enumerate().take(pos + 1) {
-                let krow = &lkv.k[j * d + off..j * d + off + d_head];
+                let krow = &view.k_row(layer, j)[off..off + d_head];
                 let mut dot = 0.0f32;
                 for t in 0..d_head {
                     dot += qrow[t] * krow[t];
@@ -1578,7 +1741,7 @@ fn attention_decode(
             }
             let ocol = &mut orow[off..off + d_head];
             for (j, &pj) in prow.iter().enumerate().take(pos + 1) {
-                let vrow = &lkv.v[j * d + off..j * d + off + d_head];
+                let vrow = &view.v_row(layer, j)[off..off + d_head];
                 for t in 0..d_head {
                     ocol[t] += pj * vrow[t];
                 }
@@ -1589,41 +1752,133 @@ fn attention_decode(
     att
 }
 
-/// Run a prompt once through the model, filling `seq`'s per-layer K/V
-/// caches (rows `0..t`), and return the **last position's** logits
-/// `[vocab]` (the only row greedy decoding needs). The `prefill`
-/// artifact; one call replaces the first full forward of the reforward
-/// decode loop.
+/// Causal attention for a prefill chunk: `t` fresh query rows at absolute
+/// positions `pos0..pos0+t`, each attending over the sequence's cache rows
+/// `0..=pos0+i` through the page table (the chunk's own K/V have already
+/// been scattered into the cache). For `pos0 == 0` this mirrors
+/// [`attention_fwd`]'s per-row arithmetic exactly — same dot, max, exp,
+/// normalize and accumulate order — which is what keeps paged prefill
+/// bit-identical to the contiguous oracle; for `pos0 > 0` it is the
+/// continued-prefill kernel behind prefix sharing (the shared stem's rows
+/// are read, not recomputed).
+#[allow(clippy::too_many_arguments)]
+fn attention_ctx(
+    ws: &mut Workspace,
+    q: &[f32],
+    view: &KvView<'_>,
+    layer: usize,
+    pos0: usize,
+    t: usize,
+    n_heads: usize,
+    d_head: usize,
+) -> Vec<f32> {
+    let d = n_heads * d_head;
+    let ctx = pos0 + t;
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut att = ws.take_zeroed(t * d);
+    let mut prow_all = ws.take(t * ctx);
+
+    let par = t * ctx * d >= DECODE_ATTN_PAR_MIN_MULADDS;
+    let att_ptr = SendPtr(att.as_mut_ptr());
+    let prow_ptr = SendPtr(prow_all.as_mut_ptr());
+    par_for_each_index(t, par, |i| {
+        let pos = pos0 + i;
+        // safety: each query row owns a disjoint stripe of att/prow
+        let orow =
+            unsafe { std::slice::from_raw_parts_mut(att_ptr.get().add(i * d), d) };
+        let prow =
+            unsafe { std::slice::from_raw_parts_mut(prow_ptr.get().add(i * ctx), ctx) };
+        for h in 0..n_heads {
+            let off = h * d_head;
+            let qrow = &q[i * d + off..i * d + off + d_head];
+            let mut maxv = f32::NEG_INFINITY;
+            for (j, pj) in prow.iter_mut().enumerate().take(pos + 1) {
+                let krow = &view.k_row(layer, j)[off..off + d_head];
+                let mut dot = 0.0f32;
+                for t in 0..d_head {
+                    dot += qrow[t] * krow[t];
+                }
+                let logit = dot * scale;
+                *pj = logit;
+                if logit > maxv {
+                    maxv = logit;
+                }
+            }
+            let mut sum = 0.0f32;
+            for pj in prow.iter_mut().take(pos + 1) {
+                let e = (*pj - maxv).exp();
+                *pj = e;
+                sum += e;
+            }
+            let isum = 1.0 / sum;
+            for pj in prow.iter_mut().take(pos + 1) {
+                *pj *= isum;
+            }
+            let ocol = &mut orow[off..off + d_head];
+            for (j, &pj) in prow.iter().enumerate().take(pos + 1) {
+                let vrow = &view.v_row(layer, j)[off..off + d_head];
+                for t in 0..d_head {
+                    ocol[t] += pj * vrow[t];
+                }
+            }
+        }
+    });
+    ws.give(prow_all);
+    att
+}
+
+/// Run a prompt (or a prompt **suffix**, continuing a shared cached
+/// prefix) through the model, filling `seq`'s paged K/V cache rows
+/// `pos..pos+t`, and return the **last position's** logits `[vocab]`
+/// (the only row greedy decoding needs). The `prefill` artifact; one
+/// call replaces the first full forward of the reforward decode loop.
 ///
-/// Bit-parity contract: the returned logits equal row `t-1` of the
+/// `seq.pos == 0` is the ordinary full-prompt prefill. `seq.pos > 0`
+/// continues from `pos` already-cached rows: the suffix tokens sit at
+/// absolute positions `pos..pos+t` and attend over the cached stem plus
+/// themselves through the page table — the prefix-sharing fast path,
+/// where a stem shared by N requests is prefilled once and only each
+/// request's divergent tail pays compute.
+///
+/// Bit-parity contract: the returned logits equal row `pos+t-1` of the
 /// `decode_step` artifact's output on the same (padded) token row, and
 /// the cached K/V equal what any later full reforward would recompute —
 /// every kernel here reuses the oracle path's per-row arithmetic
-/// unchanged, and per-row results are independent of the number of rows
-/// in the batch (pinned by `tests/serve_decode.rs`).
+/// unchanged (row `j`'s K/V depend only on tokens `0..=j`, so splitting
+/// the prompt at any boundary changes nothing), and per-row results are
+/// independent of the number of rows in the batch (pinned by
+/// `tests/serve_decode.rs`).
 pub fn prefill_in(
     ws: &mut Workspace,
     spec: &ModelSpec,
     blocks: &[BlockSpec],
     flats: &[&[f32]],
     tokens: &[i32],
-    seq: &mut SeqKv<'_>,
+    seq: &mut KvView<'_>,
 ) -> Result<Vec<f32>> {
     let dims = Dims::from_spec(spec);
     let (d, f) = (dims.d, dims.d_ff);
     let t = tokens.len();
+    let pos0 = seq.pos;
     // validate everything before the first arena take (see check_tokens)
     check_blocks(blocks, flats)?;
     check_tokens(tokens, dims.vocab)?;
-    let cap = check_seq_kv(seq, spec, d)?;
-    if t == 0 || t > cap {
-        return Err(anyhow!("prefill: prompt length {t} outside 1..={cap}"));
+    let cap = check_kv_view(seq, spec, d)?;
+    if t == 0 || pos0 + t > cap {
+        return Err(anyhow!(
+            "prefill: {t} tokens at position {pos0} outside the {cap}-row cache"
+        ));
     }
-    if seq.pos != 0 {
-        return Err(anyhow!("prefill: sequence already holds {} cached tokens", seq.pos));
+    if pos0 + t > seq.mapped_rows() {
+        return Err(anyhow!(
+            "prefill: rows {pos0}..{} exceed the {} mapped",
+            pos0 + t,
+            seq.mapped_rows()
+        ));
     }
 
-    let rope = rope_tables(ws, t, dims.d_head, spec.rope_theta);
+    let rope = rope_tables(ws, pos0 + t, dims.d_head, spec.rope_theta);
+    let positions: Vec<usize> = (pos0..pos0 + t).collect();
     let emb = tensor(flats[0], &blocks[0], "tok_emb")?;
     let mut h = embed_fwd(ws, emb, tokens, d, dims.vocab)?;
     for l in 0..spec.n_layers {
@@ -1632,15 +1887,16 @@ pub fn prefill_in(
         let (mut q, _) = proj_fwd(ws, &x1, p.w[0], None, t);
         let (mut k, _) = proj_fwd(ws, &x1, p.w[1], None, t);
         let (v, _) = proj_fwd(ws, &x1, p.w[2], None, t);
-        rope_apply(&mut q, t, dims.n_heads, dims.d_head, &rope, false);
-        rope_apply(&mut k, t, dims.n_heads, dims.d_head, &rope, false);
-        let lkv = &mut seq.layers[l];
-        lkv.k[..t * d].copy_from_slice(&k);
-        lkv.v[..t * d].copy_from_slice(&v);
-        let (att, probs) = attention_fwd(ws, &q, &k, &v, 1, t, dims.n_heads, dims.d_head);
+        // bit-identical to `rope_apply` for pos0 == 0 (pinned below)
+        rope_apply_at(&mut q, &positions, dims.n_heads, dims.d_head, &rope);
+        rope_apply_at(&mut k, &positions, dims.n_heads, dims.d_head, &rope);
+        for i in 0..t {
+            seq.write_row(l, pos0 + i, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+        }
+        let att = attention_ctx(ws, &q, seq, l, pos0, t, dims.n_heads, dims.d_head);
         let (attn_out, _) = proj_fwd(ws, &att, p.w[3], None, t);
         add_into(&mut h, &attn_out);
-        for buf in [attn_out, att, probs, q, k, v, x1, inv1] {
+        for buf in [attn_out, att, q, k, v, x1, inv1] {
             ws.give(buf);
         }
         let (x2, inv2) = rmsnorm_fwd(ws, &h, p.ln2, dims.norm_eps, t, d);
@@ -1674,7 +1930,7 @@ pub fn prefill_in(
     ws.give(invf);
     ws.give(h);
     rope.recycle(ws);
-    seq.pos = t;
+    seq.pos = pos0 + t;
     Ok(logits)
 }
 
@@ -1700,7 +1956,7 @@ pub fn decode_step_kv_in(
     blocks: &[BlockSpec],
     flats: &[&[f32]],
     tokens: &[i32],
-    seqs: &mut [SeqKv<'_>],
+    seqs: &mut [KvView<'_>],
 ) -> Result<Vec<f32>> {
     let dims = Dims::from_spec(spec);
     let (d, f) = (dims.d, dims.d_ff);
@@ -1712,7 +1968,7 @@ pub fn decode_step_kv_in(
     check_tokens(tokens, dims.vocab)?;
     let mut cap = 0usize;
     for (i, seq) in seqs.iter().enumerate() {
-        let c = check_seq_kv(seq, spec, d)?;
+        let c = check_kv_view(seq, spec, d)?;
         if i == 0 {
             cap = c;
         } else if c != cap {
@@ -1720,6 +1976,13 @@ pub fn decode_step_kv_in(
         }
         if seq.pos >= c {
             return Err(anyhow!("decode_step_kv: sequence {i} cache full ({} of {c})", seq.pos));
+        }
+        if seq.pos >= seq.mapped_rows() {
+            return Err(anyhow!(
+                "decode_step_kv: sequence {i} has no page mapped for row {} ({} mapped)",
+                seq.pos,
+                seq.mapped_rows()
+            ));
         }
     }
 
@@ -1740,9 +2003,7 @@ pub fn decode_step_kv_in(
         rope_apply_at(&mut k, &positions, dims.n_heads, dims.d_head, &rope);
         for (i, seq) in seqs.iter_mut().enumerate() {
             let pos = positions[i];
-            let lkv = &mut seq.layers[l];
-            lkv.k[pos * d..(pos + 1) * d].copy_from_slice(&k[i * d..(i + 1) * d]);
-            lkv.v[pos * d..(pos + 1) * d].copy_from_slice(&v[i * d..(i + 1) * d]);
+            seq.write_row(l, pos, &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
         }
         let att =
             attention_decode(ws, &q, seqs, l, &positions, dims.n_heads, dims.d_head, cap);
@@ -2091,20 +2352,13 @@ mod tests {
         (vec![0.0f32; spec.n_layers * plane], vec![0.0f32; spec.n_layers * plane])
     }
 
-    fn kv_views<'a>(
+    fn kv_view<'a>(
         spec: &ModelSpec,
-        cap: usize,
         k: &'a mut [f32],
         v: &'a mut [f32],
         pos: usize,
-    ) -> SeqKv<'a> {
-        let plane = cap * spec.d_model;
-        let layers = k
-            .chunks_mut(plane)
-            .zip(v.chunks_mut(plane))
-            .map(|(k, v)| KvLayer { k, v })
-            .collect();
-        SeqKv { layers, pos }
+    ) -> KvView<'a> {
+        KvView::contiguous(k, v, spec.n_layers, spec.d_model, pos).unwrap()
     }
 
     #[test]
@@ -2127,7 +2381,7 @@ mod tests {
         let cap = s;
         let (mut kc, mut vc) = kv_storage(&spec, cap);
         let mut ws = Workspace::new();
-        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 0);
+        let mut seq = kv_view(&spec, &mut kc, &mut vc, 0);
         let logits =
             prefill_in(&mut ws, &spec, &blocks, &refs, &seq_tokens[..t], &mut seq).unwrap();
         assert_eq!(seq.pos, t);
@@ -2142,7 +2396,7 @@ mod tests {
         for (step, &tok) in seq_tokens[t..].iter().enumerate() {
             let pos = t + step;
             let logits = {
-                let mut seqs = [kv_views(&spec, cap, &mut kc, &mut vc, pos)];
+                let mut seqs = [kv_view(&spec, &mut kc, &mut vc, pos)];
                 decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[tok], &mut seqs).unwrap()
             };
             assert_eq!(logits.len(), v);
@@ -2150,6 +2404,24 @@ mod tests {
             let diff =
                 logits.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
             assert!(diff < 1e-6, "decode step at pos {pos} diverges from oracle: {diff}");
+        }
+
+        // chunked prefill — the prefix-sharing compute path — must land on
+        // bit-identical cache contents and logits: prefill the first 2
+        // tokens, then continue with the third at pos 2
+        let (mut kc2, mut vc2) = kv_storage(&spec, cap);
+        let mut seq2 = kv_view(&spec, &mut kc2, &mut vc2, 0);
+        prefill_in(&mut ws, &spec, &blocks, &refs, &seq_tokens[..2], &mut seq2).unwrap();
+        assert_eq!(seq2.pos, 2);
+        let cont =
+            prefill_in(&mut ws, &spec, &blocks, &refs, &seq_tokens[2..t], &mut seq2).unwrap();
+        assert_eq!(seq2.pos, t);
+        assert_eq!(cont, logits, "continued prefill logits differ from single-shot");
+        let plane = cap * spec.d_model;
+        for l in 0..spec.n_layers {
+            let rows = l * plane..l * plane + t * spec.d_model;
+            assert_eq!(kc2[rows.clone()], kc[rows.clone()], "layer {l} K rows differ");
+            assert_eq!(vc2[rows.clone()], vc[rows], "layer {l} V rows differ");
         }
     }
 
@@ -2168,20 +2440,20 @@ mod tests {
         let mut stores: Vec<(Vec<f32>, Vec<f32>)> =
             (0..3).map(|_| kv_storage(&spec, cap)).collect();
         for (p, (kc, vc)) in prompts.iter().zip(stores.iter_mut()) {
-            let mut seq = kv_views(&spec, cap, kc, vc, 0);
+            let mut seq = kv_view(&spec, kc, vc, 0);
             prefill_in(&mut ws, &spec, &blocks, &refs, p, &mut seq).unwrap();
         }
         // solo decode of sequence 0 vs the same step inside a 3-batch
         let (mut kc0, mut vc0) = (stores[0].0.clone(), stores[0].1.clone());
         let solo = {
-            let mut seqs = [kv_views(&spec, cap, &mut kc0, &mut vc0, prompts[0].len())];
+            let mut seqs = [kv_view(&spec, &mut kc0, &mut vc0, prompts[0].len())];
             decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[8], &mut seqs).unwrap()
         };
         let batched = {
-            let mut seqs: Vec<SeqKv> = stores
+            let mut seqs: Vec<KvView> = stores
                 .iter_mut()
                 .zip(prompts.iter())
-                .map(|((kc, vc), p)| kv_views(&spec, cap, kc, vc, p.len()))
+                .map(|((kc, vc), p)| kv_view(&spec, kc, vc, p.len()))
                 .collect();
             decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[8, 9, 10], &mut seqs).unwrap()
         };
@@ -2199,21 +2471,24 @@ mod tests {
         let (mut kc, mut vc) = kv_storage(&spec, cap);
         let mut ws = Workspace::new();
         // prompt longer than capacity
-        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 0);
+        let mut seq = kv_view(&spec, &mut kc, &mut vc, 0);
         assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1, 2, 3, 4, 5], &mut seq).is_err());
-        // prefill into a non-empty sequence
-        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 2);
-        assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1], &mut seq).is_err());
+        // continued prefill overrunning the capacity (2 cached + 3 > 4)
+        let mut seq = kv_view(&spec, &mut kc, &mut vc, 2);
+        assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1, 2, 3], &mut seq).is_err());
         // decode with a full cache
-        let mut seqs = [kv_views(&spec, cap, &mut kc, &mut vc, cap)];
+        let mut seqs = [kv_view(&spec, &mut kc, &mut vc, cap)];
         assert!(decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[1], &mut seqs).is_err());
         // token / sequence count mismatch
-        let mut seqs = [kv_views(&spec, cap, &mut kc, &mut vc, 0)];
+        let mut seqs = [kv_view(&spec, &mut kc, &mut vc, 0)];
         assert!(decode_step_kv_in(&mut ws, &spec, &blocks, &refs, &[1, 2], &mut seqs).is_err());
-        // wrong layer count
-        let mut seq = kv_views(&spec, cap, &mut kc, &mut vc, 0);
-        seq.layers.pop();
+        // wrong layer count: a view claiming 1 plane against a deeper model
+        assert!(spec.n_layers > 1, "tiny spec must be multi-layer for this case");
+        let mut seq = KvView::contiguous(&mut kc, &mut vc, 1, spec.d_model, 0).unwrap();
         assert!(prefill_in(&mut ws, &spec, &blocks, &refs, &[1], &mut seq).is_err());
+        // a cache that does not tile into layer planes is rejected outright
+        let bad = KvView::contiguous(&mut kc[..spec.d_model + 1], &mut vc, 2, spec.d_model, 0);
+        assert!(bad.is_err());
     }
 
     #[test]

@@ -577,12 +577,15 @@ impl ReferenceBackend {
                 let mut k_store = vec![0.0f32; m.n_layers * t * d];
                 let mut v_store = vec![0.0f32; m.n_layers * t * d];
                 let logits = {
-                    let layers = k_store
-                        .chunks_mut(t * d)
-                        .zip(v_store.chunks_mut(t * d))
-                        .map(|(k, v)| forward::KvLayer { k, v })
-                        .collect();
-                    let mut seq = forward::SeqKv { layers, pos: 0 };
+                    // one whole-sequence page: the functional flat
+                    // [n_layers, t, d] layout, unchanged on the wire
+                    let mut seq = forward::KvView::contiguous(
+                        &mut k_store,
+                        &mut v_store,
+                        m.n_layers,
+                        d,
+                        0,
+                    )?;
                     let mut ws = self.ws.borrow_mut();
                     forward::prefill_in(&mut ws, m, &p.blocks, &flats, &tokens, &mut seq)?
                 };
@@ -625,14 +628,14 @@ impl ReferenceBackend {
                         m.n_layers
                     ));
                 }
-                let plane = k_store.len() / m.n_layers;
                 let logits = {
-                    let layers = k_store
-                        .chunks_mut(plane)
-                        .zip(v_store.chunks_mut(plane))
-                        .map(|(k, v)| forward::KvLayer { k, v })
-                        .collect();
-                    let seq = forward::SeqKv { layers, pos: pos as usize };
+                    let seq = forward::KvView::contiguous(
+                        &mut k_store,
+                        &mut v_store,
+                        m.n_layers,
+                        d,
+                        pos as usize,
+                    )?;
                     let mut seqs = [seq];
                     let mut ws = self.ws.borrow_mut();
                     forward::decode_step_kv_in(&mut ws, m, &p.blocks, &flats, &[token], &mut seqs)?

@@ -1,23 +1,41 @@
 //! The continuous-batching serving engine.
 //!
-//! One [`ServeEngine`] owns the uploaded model weights, a [`KvPool`] of
-//! per-sequence caches, and a [`Scheduler`] request queue. Every
-//! [`ServeEngine::step`] is one **mixed iteration**:
+//! One [`ServeEngine`] owns the uploaded model weights, a paged [`KvPool`]
+//! shared by all resident sequences, a [`PrefixCache`] of reusable prompt
+//! stems, and a [`Scheduler`] request queue. Every [`ServeEngine::step`]
+//! is one **mixed iteration**:
 //!
-//! 1. **Admission** — freed slots are filled with arrived prompts; each
-//!    admitted prompt runs one [`prefill`](crate::model::forward::prefill_in)
-//!    (filling its cache and producing its first token — TTFT ends here);
+//! 1. **Admission** — arrived prompts whose worst-case page demand fits
+//!    the remaining page budget are admitted (shortest job first, see
+//!    [`Scheduler::admit`]); each admitted prompt attaches any cached
+//!    prefix pages (copy-on-write at the divergence page), then runs one
+//!    [`prefill`](crate::model::forward::prefill_in) over the *uncovered
+//!    suffix only* (filling its cache and producing its first token —
+//!    TTFT ends here);
 //! 2. **Decode** — all active sequences advance by exactly one token via a
 //!    single batched [`decode_step_kv`](crate::model::forward::decode_step_kv_in)
-//!    call; finished sequences release their slot immediately, so the next
-//!    iteration's admission can reuse it mid-stream.
+//!    call, mapping fresh pages on demand as they cross page boundaries;
+//!    finished sequences release their slot and exclusive pages
+//!    immediately, so the next iteration's admission can reuse them
+//!    mid-stream.
 //!
 //! Requests therefore join and leave the batch continuously — no padding
 //! to a preset batch size and no head-of-batch stragglers burning compute
 //! for finished rows. Per-row kernel results are independent of
 //! batch-mates, so each request's token stream is identical to what a
 //! dedicated single-sequence decode (or the full-reforward oracle) would
-//! produce, regardless of arrival interleaving.
+//! produce, regardless of arrival interleaving. Sampled requests
+//! ([`SamplingParams`], via [`ServeEngine::submit_sampled`]) keep the
+//! same property: each draw depends only on the request's seed and step
+//! index, so sampled output is bit-reproducible across batch
+//! compositions too.
+//!
+//! Memory safety of admission: a request is only admitted when `free
+//! pages + cache-evictable pages` cover its worst-case demand **plus**
+//! the worst-case remaining growth of everything already active, so a
+//! mid-decode page fault cannot deadlock — any shortfall is served by
+//! evicting LRU prefix-cache entries (preemption of *running* sequences
+//! by page eviction is a non-goal here; see ROADMAP).
 //!
 //! The engine clock is wallclock-based but skips idle gaps: when nothing
 //! is active and the next arrival is in the future, the clock
@@ -28,18 +46,21 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::eval::argmax;
 use crate::model::ModelState;
 use crate::runtime::Preset;
 
 use super::kv::KvPool;
+use super::prefix::PrefixCache;
+use super::sampling::{sample_token, stop_len, SamplingParams};
 use super::scheduler::{Request, Scheduler};
 use super::{greedy_step, KvBackend};
 
 /// Engine construction knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Concurrently resident sequences (KV slots).
+    /// Concurrently resident sequences (KV slots). The paged pool is
+    /// provisioned for this many full-context sequences — the worst case;
+    /// in-use bytes track actual cached tokens.
     pub slots: usize,
     /// Per-request generation cap when `submit` is given `0`.
     pub max_new_tokens: usize,
@@ -49,8 +70,9 @@ pub struct ServeConfig {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Generated token ids (prompt and EOS excluded) — token-for-token
-    /// what the full-reforward oracle would produce.
+    /// Generated token ids (prompt, EOS and matched stop sequences
+    /// excluded) — for greedy requests, token-for-token what the
+    /// full-reforward oracle would produce.
     pub tokens: Vec<i32>,
     pub n_prompt: usize,
     /// Prompt was empty or longer than the KV capacity: rejected at
@@ -78,6 +100,8 @@ impl Response {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ServeStats {
     pub n_prefills: u64,
+    /// Prompt tokens actually run through prefill (prefix-cache hits
+    /// excluded — the savings show up here).
     pub prefill_tokens: usize,
     pub prefill_s: f64,
     pub decode_steps: u64,
@@ -85,8 +109,18 @@ pub struct ServeStats {
     /// tokens sampled through the decode path).
     pub decode_tokens: usize,
     pub decode_s: f64,
-    /// KV backing-store bytes (constant; allocated at construction).
+    /// KV backing-store bytes provisioned at construction (the
+    /// slot-model worst case; see `kv_peak_bytes` for measured use).
     pub kv_bytes: usize,
+    /// Peak bytes of KV pages actually in use.
+    pub kv_peak_bytes: usize,
+    /// Prompt tokens served from the prefix cache instead of prefill.
+    pub prefix_hit_tokens: usize,
+    /// Copy-on-write page forks performed.
+    pub cow_copies: u64,
+    /// Fresh KV pages claimed (monotone; flat while every active
+    /// sequence decodes within its last page).
+    pub pages_allocated: u64,
     pub peak_active: usize,
 }
 
@@ -99,6 +133,9 @@ struct ActiveSeq {
     max_new: usize,
     arrival_s: f64,
     first_token_s: f64,
+    params: SamplingParams,
+    /// Pages this sequence may ever need (admission reserved them).
+    worst_pages: usize,
 }
 
 /// KV-cached continuous-batching engine over any [`KvBackend`].
@@ -107,6 +144,7 @@ pub struct ServeEngine<'e, B: KvBackend> {
     preset: Preset,
     blocks: Vec<B::Buffer>,
     pool: KvPool,
+    cache: PrefixCache,
     sched: Scheduler,
     active: Vec<ActiveSeq>,
     max_new_default: usize,
@@ -137,12 +175,13 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             .map(|f| backend.upload_f32(f, &[f.len()]))
             .collect::<Result<Vec<_>>>()?;
         let pool = KvPool::new(&preset.model, cfg.slots.max(1));
-        let kv_bytes = pool.bytes();
+        let kv_bytes = pool.capacity_bytes();
         Ok(Self {
             backend,
             preset,
             blocks,
             pool,
+            cache: PrefixCache::new(),
             sched: Scheduler::new(),
             active: Vec::new(),
             max_new_default: cfg.max_new_tokens,
@@ -159,14 +198,26 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         self.t0.elapsed().as_secs_f64() + self.skip_s
     }
 
-    /// Enqueue a prompt arriving at `arrival_s` on the engine clock
-    /// (`max_new == 0` uses the engine default). Returns the request id.
+    /// Enqueue a greedy prompt arriving at `arrival_s` on the engine
+    /// clock (`max_new == 0` uses the engine default). Returns the
+    /// request id.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, arrival_s: f64) -> u64 {
-        let max_new = if max_new == 0 { self.max_new_default } else { max_new };
-        self.sched.submit(prompt, max_new, arrival_s)
+        self.submit_sampled(prompt, max_new, arrival_s, SamplingParams::default())
     }
 
-    /// Enqueue a prompt arriving now.
+    /// Enqueue a prompt with explicit sampling parameters.
+    pub fn submit_sampled(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        arrival_s: f64,
+        params: SamplingParams,
+    ) -> u64 {
+        let max_new = if max_new == 0 { self.max_new_default } else { max_new };
+        self.sched.submit_with(prompt, max_new, arrival_s, params)
+    }
+
+    /// Enqueue a greedy prompt arriving now.
     pub fn submit_now(&mut self, prompt: Vec<i32>) -> u64 {
         let now = self.now_s();
         self.submit(prompt, 0, now)
@@ -187,11 +238,18 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
     pub fn stats(&self) -> ServeStats {
         let mut s = self.stats;
         s.peak_active = self.pool.peak_in_use();
+        s.kv_peak_bytes = self.pool.peak_pages() * self.pool.page_bytes();
+        s.cow_copies = self.pool.cow_copies();
+        s.pages_allocated = self.pool.pages_allocated();
         s
     }
 
     pub fn kv_pool(&self) -> &KvPool {
         &self.pool
+    }
+
+    pub fn prefix_cache(&self) -> &PrefixCache {
+        &self.cache
     }
 
     fn response(a: ActiveSeq, finish_s: f64) -> Response {
@@ -206,24 +264,93 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         }
     }
 
+    /// Pages a request may ever need (prompt + full generation budget,
+    /// clamped to the context length); 0 for prompts the engine rejects
+    /// outright, so they drain through admission without holding memory.
+    fn worst_pages_for(&self, prompt_len: usize, max_new: usize) -> usize {
+        if prompt_len == 0 || prompt_len > self.pool.capacity() {
+            return 0;
+        }
+        self.pool.pages_for((prompt_len + max_new).min(self.pool.capacity()))
+    }
+
+    /// Pages admission may still promise: the free list plus whatever the
+    /// prefix cache could give back, minus the worst-case remaining
+    /// growth already promised to active sequences.
+    fn page_budget(&self) -> usize {
+        let reserved: usize = self
+            .active
+            .iter()
+            .map(|a| a.worst_pages.saturating_sub(self.pool.pages_held(a.slot)))
+            .sum();
+        (self.pool.n_free_pages() + self.cache.evictable(&self.pool)).saturating_sub(reserved)
+    }
+
+    /// `KvPool::ensure_room`, evicting prefix-cache entries to cover a
+    /// dry free list (admission guarantees the pages exist somewhere).
+    fn ensure_room_evicting(&mut self, slot: usize, rows: usize) -> Result<()> {
+        let missing = self
+            .pool
+            .pages_for(rows.min(self.pool.capacity()))
+            .saturating_sub(self.pool.pages_held(slot));
+        if missing > self.pool.n_free_pages() {
+            let shortfall = missing - self.pool.n_free_pages();
+            self.cache.evict(&mut self.pool, shortfall);
+        }
+        self.pool.ensure_room(slot, rows)
+    }
+
+    /// Copy-on-write fork with the same eviction fallback.
+    fn make_row_writable_evicting(&mut self, slot: usize, row: usize) -> Result<()> {
+        if self.pool.n_free_pages() == 0 {
+            self.cache.evict(&mut self.pool, 1);
+        }
+        self.pool.make_row_writable(slot, row)
+    }
+
+    /// Emit a sampled/greedy token into `a`, honoring stop sequences.
+    /// Returns true when the sequence is finished.
+    fn push_token(a: &mut ActiveSeq, emit: Option<i32>, finished: bool) -> bool {
+        let Some(tok) = emit else { return true };
+        a.generated.push(tok);
+        a.last = tok;
+        if let Some(k) = stop_len(&a.generated, &a.params.stop) {
+            let keep = a.generated.len() - k;
+            a.generated.truncate(keep);
+            return true;
+        }
+        finished
+    }
+
     /// One mixed prefill+decode iteration; returns the requests that
     /// finished during it.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
 
-        // --- admission: fill freed slots with arrived prompts. Rejected
-        // (over-length/empty) requests never occupy a slot, so the outer
-        // loop re-asks the scheduler until the free slots are actually
-        // spent or nothing admissible is left — a burst of bad prompts
-        // must not delay a valid one behind it by a decode iteration.
+        // --- admission: fill freed slots with arrived prompts that fit
+        // the page budget. Rejected (over-length/empty) requests never
+        // occupy a slot or a page, so the outer loop re-asks the
+        // scheduler until the free slots/pages are actually spent or
+        // nothing admissible is left — a burst of bad prompts must not
+        // delay a valid one behind it by a decode iteration.
         let now = self.now_s();
+        let (cap, page_size) = (self.pool.capacity(), self.pool.page_size());
+        let chunked = self.backend.supports_chunked_prefill();
+        let need = move |r: &Request| {
+            if r.prompt.is_empty() || r.prompt.len() > cap {
+                0
+            } else {
+                (r.prompt.len() + r.max_new).min(cap).div_ceil(page_size)
+            }
+        };
         loop {
-            let batch = self.sched.admit(now, self.pool.n_free());
+            let budget = self.page_budget();
+            let batch = self.sched.admit(now, self.pool.n_free(), budget, &need);
             if batch.is_empty() {
                 break;
             }
             for req in batch {
-                let Request { id, prompt, max_new, arrival_s } = req;
+                let Request { id, prompt, max_new, arrival_s, params } = req;
                 if prompt.is_empty() || prompt.len() > self.pool.capacity() {
                     done.push(Response {
                         id,
@@ -236,16 +363,41 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     });
                     continue;
                 }
+                let worst_pages = self.worst_pages_for(prompt.len(), max_new);
                 let slot = self.pool.alloc().expect("admit() never exceeds free slots");
+
+                // prefix sharing: attach cached stem pages (refcounted, no
+                // copy), leaving at least one token to prefill for logits
+                let mut covered = 0usize;
+                if chunked {
+                    let chain = self.cache.lookup(&prompt, page_size);
+                    covered = (chain.len() * page_size).min(prompt.len() - 1);
+                    if covered > 0 {
+                        let n_attach = covered.div_ceil(page_size);
+                        self.pool.attach_shared(slot, &chain[..n_attach], covered);
+                    }
+                }
+                self.ensure_room_evicting(slot, prompt.len())?;
+                if covered > 0 {
+                    // the divergence row may land mid-page: fork it first
+                    self.make_row_writable_evicting(slot, covered)?;
+                }
+
                 let t_pre = Instant::now();
                 let logits = {
                     let mut views = self.pool.views(&[slot])?;
-                    self.backend.kv_prefill(&self.preset, &self.blocks, &prompt, &mut views[0])?
+                    let suffix = &prompt[covered..];
+                    self.backend.kv_prefill(&self.preset, &self.blocks, suffix, &mut views[0])?
                 };
                 self.pool.set_len(slot, prompt.len());
                 self.stats.prefill_s += t_pre.elapsed().as_secs_f64();
                 self.stats.n_prefills += 1;
-                self.stats.prefill_tokens += prompt.len();
+                self.stats.prefill_tokens += prompt.len() - covered;
+                self.stats.prefix_hit_tokens += covered;
+                if chunked {
+                    let table = self.pool.table(slot).to_vec();
+                    self.cache.insert(&prompt, &table, &mut self.pool);
+                }
 
                 let first_token_s = self.now_s();
                 let mut a = ActiveSeq {
@@ -257,20 +409,18 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     max_new,
                     arrival_s,
                     first_token_s,
+                    params,
+                    worst_pages,
                 };
                 let (emit, finished) = greedy_step(
-                    argmax(&logits),
+                    sample_token(&logits, &a.params, 0),
                     self.eos,
                     self.pool.len(slot),
                     self.pool.capacity(),
                     0,
                     max_new,
                 );
-                if let Some(tok) = emit {
-                    a.generated.push(tok);
-                    a.last = tok;
-                }
-                if finished {
+                if Self::push_token(&mut a, emit, finished) {
                     self.pool.release(slot);
                     done.push(Self::response(a, first_token_s));
                 } else {
@@ -282,8 +432,14 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         // --- one batched decode iteration over every active sequence ---
         if !self.active.is_empty() {
             let t_dec = Instant::now();
-            let tokens: Vec<i32> = self.active.iter().map(|a| a.last).collect();
+            // map next-row pages up front (evicting prefix entries if the
+            // free list is dry) so the views build cannot fault mid-batch
             let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
+            for &s in &slots {
+                let rows = (self.pool.len(s) + 1).min(self.pool.capacity());
+                self.ensure_room_evicting(s, rows)?;
+            }
+            let tokens: Vec<i32> = self.active.iter().map(|a| a.last).collect();
             let logits = {
                 let mut views = self.pool.views(&slots)?;
                 self.backend.kv_decode_step(&self.preset, &self.blocks, &tokens, &mut views)?
@@ -298,18 +454,18 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             for (i, mut a) in self.active.drain(..).enumerate() {
                 self.pool.advance(a.slot); // the fed token is now cached
                 let (emit, finished) = greedy_step(
-                    argmax(&logits[i * vocab..(i + 1) * vocab]),
+                    sample_token(
+                        &logits[i * vocab..(i + 1) * vocab],
+                        &a.params,
+                        a.generated.len() as u64,
+                    ),
                     self.eos,
                     self.pool.len(a.slot),
                     self.pool.capacity(),
                     a.generated.len(),
                     a.max_new,
                 );
-                if let Some(tok) = emit {
-                    a.generated.push(tok);
-                    a.last = tok;
-                }
-                if finished {
+                if Self::push_token(&mut a, emit, finished) {
                     self.pool.release(a.slot);
                     done.push(Self::response(a, now));
                 } else {

@@ -1,65 +1,107 @@
-//! Slot-pooled K/V cache storage for the serving engine.
+//! Paged K/V cache storage for the serving engine.
 //!
 //! One [`KvPool`] owns the K/V backing store for every concurrently
-//! resident sequence: `n_slots` slots, each holding `n_layers` planes of
-//! `[capacity, d]` rotary-encoded keys and raw values (`d = n_heads ·
-//! d_head`). Storage is allocated once up front — admission, decoding and
-//! eviction never touch the allocator, they only move slot ids between
-//! the free stack and the active set.
+//! resident sequence, split into fixed-size **pages** of
+//! [`DEFAULT_PAGE_SIZE`] tokens. A page holds `page_size` rows of
+//! rotary-encoded keys and raw values for **all** layers (`[page, layer,
+//! page_size, d]` row-major, `d = n_heads · d_head`), so one refcount
+//! covers a token run's whole-model K/V. Each slot maps logical rows to
+//! pages through a per-slot **page table**; pages are claimed from a free
+//! list on demand as decode advances and returned when the sequence
+//! finishes — in-use bytes ([`KvPool::bytes`]) scale with tokens actually
+//! cached, not `slots × capacity` ([`KvPool::capacity_bytes`], the old
+//! slot model and still the worst case).
+//!
+//! Pages may be **shared** between slots (and with the serving engine's
+//! prefix cache) via refcounts: a prompt stem common to N requests is
+//! stored once, each slot's table pointing at the same pages. Shared
+//! pages are read-only; before a sequence writes into a row of a shared
+//! page, [`KvPool::make_row_writable`] copies that page out
+//! (copy-on-write) so the writer gets an exclusive one. The backing store
+//! is allocated once up front — page churn only moves ids between the
+//! free list and the tables, never touches the allocator.
 //!
 //! The pool is the single source of truth for per-slot lengths. Kernel
-//! calls borrow ephemeral [`SeqKv`] views ([`KvPool::views`]) that are
-//! rebuilt from the pool's lengths each step; after a successful step the
+//! calls borrow ephemeral [`KvView`] views ([`KvPool::views`]) that are
+//! rebuilt from the pool's tables each step; after a successful step the
 //! caller syncs the pool via [`KvPool::set_len`] (prefill) or
 //! [`KvPool::advance`] (decode).
 //!
-//! Memory: `bytes() = 2 · n_slots · n_layers · capacity · d · 4` — the
-//! same quantity [`crate::memory::kv_cache_bytes`] models and
-//! `MemoryReport::with_kv_cache` surfaces in the capacity accounting.
+//! Memory: [`crate::memory::kv_cache_bytes`] models the slot-capacity
+//! worst case (`== capacity_bytes()` when the page size divides the
+//! context length) and [`crate::memory::kv_page_bytes`] one page;
+//! `MemoryReport::with_kv_cache` surfaces the measured peak.
 
 use anyhow::{anyhow, Result};
 
-use crate::model::forward::{KvLayer, SeqKv};
+use crate::model::forward::KvView;
 use crate::runtime::ModelSpec;
 
-/// Fixed-capacity pool of per-sequence K/V cache slots.
+/// Tokens per KV page. 16 balances internal fragmentation (≤15 wasted
+/// rows per active sequence) against table length and free-list churn.
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Paged pool of K/V cache storage shared by all resident sequences.
 pub struct KvPool {
     n_layers: usize,
     d: usize,
+    /// Logical per-slot row capacity (the model context length).
     capacity: usize,
+    page_size: usize,
     n_slots: usize,
-    /// `[slot, layer, capacity, d]` row-major (one slot's planes are
-    /// contiguous).
+    n_pages: usize,
+    /// `[page, layer, page_size, d]` row-major.
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Per-page reference counts (0 = free).
+    refc: Vec<u32>,
+    /// Free page ids, pop order: lowest id first (determinism).
+    free_pages: Vec<u32>,
+    /// Per-slot page tables (row `r` lives in `tables[slot][r / page_size]`).
+    tables: Vec<Vec<u32>>,
     lens: Vec<usize>,
     in_use: Vec<bool>,
-    free: Vec<usize>,
+    free_slots: Vec<usize>,
     peak_in_use: usize,
+    peak_pages: usize,
+    pages_allocated: u64,
+    cow_copies: u64,
 }
 
 impl KvPool {
-    /// Pool with per-slot capacity equal to the model context length.
+    /// Pool with per-slot capacity equal to the model context length and
+    /// the default page size.
     pub fn new(model: &ModelSpec, n_slots: usize) -> Self {
         Self::with_capacity(model, n_slots, model.seq_len)
     }
 
-    /// Pool with an explicit per-slot row capacity.
+    /// Pool with an explicit per-slot row capacity. Backs `n_slots` full
+    /// sequences (the worst case), in pages of
+    /// `min(DEFAULT_PAGE_SIZE, capacity)` tokens.
     pub fn with_capacity(model: &ModelSpec, n_slots: usize, capacity: usize) -> Self {
         let d = model.n_heads * model.d_head;
-        let total = n_slots * model.n_layers * capacity * d;
+        let page_size = DEFAULT_PAGE_SIZE.min(capacity.max(1));
+        let n_pages = n_slots * capacity.div_ceil(page_size);
+        let total = n_pages * model.n_layers * page_size * d;
         Self {
             n_layers: model.n_layers,
             d,
             capacity,
+            page_size,
             n_slots,
+            n_pages,
             k: vec![0.0; total],
             v: vec![0.0; total],
+            refc: vec![0; n_pages],
+            free_pages: (0..n_pages as u32).rev().collect(),
+            tables: vec![Vec::new(); n_slots],
             lens: vec![0; n_slots],
             in_use: vec![false; n_slots],
-            // pop order: lowest slot id first (purely cosmetic/determinism)
-            free: (0..n_slots).rev().collect(),
+            free_slots: (0..n_slots).rev().collect(),
             peak_in_use: 0,
+            peak_pages: 0,
+            pages_allocated: 0,
+            cow_copies: 0,
         }
     }
 
@@ -67,13 +109,50 @@ impl KvPool {
         self.n_slots
     }
 
+    /// Free **slots** (sequence identities, not memory).
     pub fn n_free(&self) -> usize {
-        self.free.len()
+        self.free_slots.len()
     }
 
     /// Rows (tokens) each slot can hold.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Tokens per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages on the free list.
+    pub fn n_free_pages(&self) -> usize {
+        self.free_pages.len()
+    }
+
+    /// Pages currently backing cached rows (allocated, refcount ≥ 1).
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages - self.free_pages.len()
+    }
+
+    /// Highest `pages_in_use` since creation.
+    pub fn peak_pages(&self) -> usize {
+        self.peak_pages
+    }
+
+    /// Fresh page claims since creation (monotonic; a steady-state decode
+    /// step that stays inside its last page claims none).
+    pub fn pages_allocated(&self) -> u64 {
+        self.pages_allocated
+    }
+
+    /// Copy-on-write page copies since creation.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Pages needed to hold `rows` cached tokens.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_size)
     }
 
     /// Cached tokens in a slot.
@@ -85,58 +164,199 @@ impl KvPool {
         self.lens[slot] == 0
     }
 
+    /// Pages mapped by a slot's table.
+    pub fn pages_held(&self, slot: usize) -> usize {
+        self.tables[slot].len()
+    }
+
+    /// Rows a slot can cache without claiming another page.
+    pub fn mapped_rows(&self, slot: usize) -> usize {
+        self.tables[slot].len() * self.page_size
+    }
+
+    /// A slot's page table (row `r` lives in entry `r / page_size`).
+    pub fn table(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    /// A page's reference count (0 = free).
+    pub fn page_ref(&self, page: u32) -> u32 {
+        self.refc[page as usize]
+    }
+
     /// Highest number of slots simultaneously in use since creation.
     pub fn peak_in_use(&self) -> usize {
         self.peak_in_use
     }
 
-    /// Backing-store bytes (K + V), the measured KV footprint.
-    pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    /// Bytes per page (K + V, all layers).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.n_layers * self.page_size * self.d * std::mem::size_of::<f32>()
     }
 
-    /// Claim a free slot (length reset to 0), or `None` when the pool is
-    /// fully occupied.
+    /// **In-use** backing-store bytes (K + V of allocated pages) — the
+    /// measured KV footprint, which grows with cached tokens and shrinks
+    /// when sequences finish.
+    pub fn bytes(&self) -> usize {
+        self.pages_in_use() * self.page_bytes()
+    }
+
+    /// Full backing-store bytes — the slot-model worst case the pool was
+    /// provisioned for (what `bytes()` used to report when every slot
+    /// owned `capacity` rows unconditionally).
+    pub fn capacity_bytes(&self) -> usize {
+        self.n_pages * self.page_bytes()
+    }
+
+    /// Claim a free slot (length reset to 0, no pages mapped yet), or
+    /// `None` when the pool is fully occupied.
     pub fn alloc(&mut self) -> Option<usize> {
-        let slot = self.free.pop()?;
+        let slot = self.free_slots.pop()?;
+        debug_assert!(self.tables[slot].is_empty());
         self.lens[slot] = 0;
         self.in_use[slot] = true;
-        let active = self.n_slots - self.free.len();
+        let active = self.n_slots - self.free_slots.len();
         if active > self.peak_in_use {
             self.peak_in_use = active;
         }
         Some(slot)
     }
 
-    /// Return a finished sequence's slot to the pool.
+    /// Return a finished sequence's slot and its exclusive pages to the
+    /// pool (shared pages just drop one reference).
+    ///
+    /// Double-releases and out-of-range slots are a caller bug — they
+    /// panic under `debug_assertions` and return idempotently in release
+    /// builds instead of corrupting the free lists (a slot pushed twice
+    /// would later be handed to two sequences at once).
     pub fn release(&mut self, slot: usize) {
-        assert!(self.in_use[slot], "release of a slot that is not in use");
+        if slot >= self.n_slots || !self.in_use[slot] {
+            debug_assert!(false, "release of slot {slot} that is not in use");
+            return;
+        }
+        let table = std::mem::take(&mut self.tables[slot]);
+        for page in table {
+            self.release_page(page);
+        }
         self.in_use[slot] = false;
         self.lens[slot] = 0;
-        self.free.push(slot);
+        self.free_slots.push(slot);
     }
 
     /// Record that `slot` now caches `len` tokens (after a prefill).
     pub fn set_len(&mut self, slot: usize, len: usize) {
-        assert!(self.in_use[slot] && len <= self.capacity);
+        assert!(self.in_use[slot] && len <= self.capacity && len <= self.mapped_rows(slot));
         self.lens[slot] = len;
     }
 
     /// Record one more cached token (after a decode step).
     pub fn advance(&mut self, slot: usize) {
         assert!(self.in_use[slot] && self.lens[slot] < self.capacity);
+        assert!(self.lens[slot] < self.mapped_rows(slot), "advance into an unmapped row");
         self.lens[slot] += 1;
     }
 
-    fn plane_elems(&self) -> usize {
-        self.capacity * self.d
+    fn alloc_page(&mut self) -> Result<u32> {
+        let page = self
+            .free_pages
+            .pop()
+            .ok_or_else(|| anyhow!("kv pool: out of pages ({} total)", self.n_pages))?;
+        debug_assert_eq!(self.refc[page as usize], 0);
+        self.refc[page as usize] = 1;
+        self.pages_allocated += 1;
+        let in_use = self.pages_in_use();
+        if in_use > self.peak_pages {
+            self.peak_pages = in_use;
+        }
+        Ok(page)
     }
 
-    /// Build per-layer mutable cache views for a set of **distinct**,
-    /// in-use slots (one [`SeqKv`] per slot, `pos` taken from the pool's
-    /// lengths). The views borrow the pool mutably, so they must be
-    /// dropped before the lengths are synced back.
-    pub fn views(&mut self, slots: &[usize]) -> Result<Vec<SeqKv<'_>>> {
+    /// Take one more reference on a page (prefix-cache retention).
+    pub fn retain_page(&mut self, page: u32) {
+        debug_assert!(self.refc[page as usize] > 0, "retain of a free page");
+        self.refc[page as usize] += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list at zero.
+    pub fn release_page(&mut self, page: u32) {
+        let rc = &mut self.refc[page as usize];
+        debug_assert!(*rc > 0, "release of a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free_pages.push(page);
+        }
+    }
+
+    /// Map enough pages for `slot` to cache `rows` tokens. Errors when
+    /// `rows` exceeds the slot capacity or the free list runs dry (the
+    /// caller may free shareable pages — e.g. evict the prefix cache —
+    /// and retry).
+    pub fn ensure_room(&mut self, slot: usize, rows: usize) -> Result<()> {
+        assert!(self.in_use[slot], "ensure_room on a free slot");
+        if rows > self.capacity {
+            return Err(anyhow!("kv pool: {rows} rows exceed the {}-row capacity", self.capacity));
+        }
+        while self.tables[slot].len() < self.pages_for(rows) {
+            let page = self.alloc_page()?;
+            self.tables[slot].push(page);
+        }
+        Ok(())
+    }
+
+    /// Extend `slot`'s (empty) table with shared pages covering `covered`
+    /// already-computed rows — the prefix-sharing attach. Each page gains
+    /// a reference; none is copied.
+    pub fn attach_shared(&mut self, slot: usize, pages: &[u32], covered: usize) {
+        assert!(self.in_use[slot] && self.tables[slot].is_empty() && self.lens[slot] == 0);
+        assert!(covered <= pages.len() * self.page_size && covered <= self.capacity);
+        for &page in pages {
+            self.retain_page(page);
+            self.tables[slot].push(page);
+        }
+        self.lens[slot] = covered;
+        let in_use = self.pages_in_use();
+        if in_use > self.peak_pages {
+            self.peak_pages = in_use;
+        }
+    }
+
+    /// Make the page holding `row` exclusively owned by `slot`, copying it
+    /// out first when shared (**copy-on-write**). A no-op for unmapped
+    /// rows (nothing to copy — `ensure_room` hands out exclusive pages)
+    /// and for already-exclusive pages.
+    pub fn make_row_writable(&mut self, slot: usize, row: usize) -> Result<()> {
+        assert!(self.in_use[slot]);
+        let idx = row / self.page_size;
+        if idx >= self.tables[slot].len() {
+            return Ok(());
+        }
+        let old = self.tables[slot][idx];
+        if self.refc[old as usize] <= 1 {
+            return Ok(());
+        }
+        let fresh = self.alloc_page()?;
+        let elems = self.n_layers * self.page_size * self.d;
+        let (src, dst) = (old as usize * elems, fresh as usize * elems);
+        self.k.copy_within(src..src + elems, dst);
+        self.v.copy_within(src..src + elems, dst);
+        self.refc[old as usize] -= 1;
+        self.tables[slot][idx] = fresh;
+        self.cow_copies += 1;
+        Ok(())
+    }
+
+    /// Build mutable cache views for a set of **distinct**, in-use slots
+    /// (one [`KvView`] per slot, `pos` taken from the pool's lengths).
+    /// The views borrow the pool mutably, so they must be dropped before
+    /// the lengths are synced back.
+    ///
+    /// Each view is guaranteed room for its next row (`len + 1`, the
+    /// decode contract) — mapping a fresh page on a boundary if needed.
+    /// Callers prefilling further than that call [`KvPool::ensure_room`]
+    /// first. Errors if any page a kernel may write (covering rows
+    /// `>= len`) is still shared — writers must run
+    /// [`KvPool::make_row_writable`] beforehand.
+    pub fn views(&mut self, slots: &[usize]) -> Result<Vec<KvView<'_>>> {
         let mut seen = vec![false; self.n_slots];
         for &s in slots {
             if s >= self.n_slots {
@@ -150,27 +370,38 @@ impl KvPool {
             }
             seen[s] = true;
         }
-        let plane = self.plane_elems();
+        for &s in slots {
+            let next = (self.lens[s] + 1).min(self.capacity);
+            self.ensure_room(s, next)?;
+            // pages covering writable rows (>= len) must be exclusive;
+            // fully-covered pages may be shared (read-only under the
+            // KvView safety discipline)
+            for (pi, &page) in self.tables[s].iter().enumerate() {
+                if (pi + 1) * self.page_size > self.lens[s] && self.refc[page as usize] != 1 {
+                    return Err(anyhow!(
+                        "kv pool: slot {s} would write shared page {page} (make_row_writable first)"
+                    ));
+                }
+            }
+        }
         let kp = self.k.as_mut_ptr();
         let vp = self.v.as_mut_ptr();
+        // safety: slots are distinct and in use (checked above); writable
+        // pages are exclusive to their slot (checked above) and shared
+        // pages are only ever read — the KvView discipline
         Ok(slots
             .iter()
             .map(|&s| {
-                let layers = (0..self.n_layers)
-                    .map(|l| {
-                        let off = (s * self.n_layers + l) * plane;
-                        // safety: slots are distinct and in range (checked
-                        // above), so every (slot, layer) plane is a disjoint
-                        // subslice of k/v; lifetimes are tied to &mut self
-                        unsafe {
-                            KvLayer {
-                                k: std::slice::from_raw_parts_mut(kp.add(off), plane),
-                                v: std::slice::from_raw_parts_mut(vp.add(off), plane),
-                            }
-                        }
-                    })
-                    .collect();
-                SeqKv { layers, pos: self.lens[s] }
+                KvView::from_pool(
+                    kp,
+                    vp,
+                    self.tables[s].clone(),
+                    self.lens[s],
+                    self.page_size,
+                    self.n_layers,
+                    self.d,
+                    self.capacity,
+                )
             })
             .collect())
     }
@@ -194,6 +425,7 @@ mod tests {
         let b = pool.alloc().unwrap();
         assert_ne!(a, b);
         assert!(pool.alloc().is_none(), "pool exhausted");
+        pool.ensure_room(a, 5).unwrap();
         pool.set_len(a, 5);
         assert_eq!(pool.len(a), 5);
         pool.release(a);
@@ -201,29 +433,36 @@ mod tests {
         let c = pool.alloc().unwrap();
         assert_eq!(c, a, "freed slot is reused");
         assert_eq!(pool.len(c), 0, "reused slot starts empty");
+        assert_eq!(pool.pages_held(c), 0, "reused slot starts with no pages");
         assert_eq!(pool.peak_in_use(), 2);
     }
 
     #[test]
     fn views_are_disjoint_and_sized() {
         let m = model();
+        let d = m.n_heads * m.d_head;
         let mut pool = KvPool::new(&m, 3);
         let a = pool.alloc().unwrap();
         let b = pool.alloc().unwrap();
+        pool.ensure_room(b, 3).unwrap();
         pool.set_len(b, 3);
-        let d = m.n_heads * m.d_head;
         let mut views = pool.views(&[a, b]).unwrap();
         assert_eq!(views.len(), 2);
-        assert_eq!(views[0].layers.len(), m.n_layers);
+        assert_eq!(views[0].n_layers(), m.n_layers);
         assert_eq!(views[0].pos, 0);
         assert_eq!(views[1].pos, 3);
-        assert_eq!(views[0].capacity(d), m.seq_len);
+        assert_eq!(views[0].capacity(), m.seq_len);
         // writes through one view land in that slot only
-        views[0].layers[0].k[0] = 7.0;
-        views[1].layers[0].k[0] = 9.0;
+        let (krow, vrow) = (vec![7.0f32; d], vec![70.0f32; d]);
+        views[0].write_rows(0, 0, &krow, &vrow).unwrap();
+        let (krow_b, vrow_b) = (vec![9.0f32; d], vec![90.0f32; d]);
+        views[1].write_rows(0, 0, &krow_b, &vrow_b).unwrap();
         drop(views);
         let views = pool.views(&[a]).unwrap();
-        assert_eq!(views[0].layers[0].k[0], 7.0);
+        let (mut kr, mut vr) = (vec![0.0f32; d], vec![0.0f32; d]);
+        views[0].read_rows(0, 1, &mut kr, &mut vr).unwrap();
+        assert_eq!(kr, krow);
+        assert_eq!(vr, vrow);
     }
 
     #[test]
@@ -238,10 +477,132 @@ mod tests {
     }
 
     #[test]
-    fn bytes_match_layout() {
+    fn bytes_scale_with_pages_not_capacity() {
         let m = model();
-        let pool = KvPool::new(&m, 4);
+        let mut pool = KvPool::new(&m, 4);
         let d = m.n_heads * m.d_head;
-        assert_eq!(pool.bytes(), 2 * 4 * m.n_layers * m.seq_len * d * 4);
+        let page_bytes = 2 * m.n_layers * pool.page_size() * d * 4;
+        // the full store still covers slots × capacity
+        assert_eq!(
+            pool.capacity_bytes(),
+            4 * m.seq_len.div_ceil(pool.page_size()) * page_bytes
+        );
+        assert_eq!(pool.bytes(), 0, "nothing cached, nothing in use");
+        let a = pool.alloc().unwrap();
+        assert_eq!(pool.bytes(), 0, "a bare slot maps no pages");
+        pool.ensure_room(a, 1).unwrap();
+        assert_eq!(pool.bytes(), page_bytes);
+        pool.ensure_room(a, pool.page_size() + 1).unwrap();
+        assert_eq!(pool.bytes(), 2 * page_bytes, "second page on crossing the boundary");
+        assert!(pool.bytes() <= pool.capacity_bytes());
+        pool.release(a);
+        assert_eq!(pool.bytes(), 0, "release returns pages to the free list");
+        assert_eq!(pool.peak_pages(), 2);
+    }
+
+    #[test]
+    fn decode_views_auto_map_the_next_row() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 1);
+        let a = pool.alloc().unwrap();
+        let p = pool.page_size();
+        pool.ensure_room(a, p).unwrap();
+        pool.set_len(a, p); // boundary: next row needs a fresh page
+        let grabbed = pool.pages_allocated();
+        let views = pool.views(&[a]).unwrap();
+        assert!(views[0].mapped_rows() >= p + 1);
+        drop(views);
+        assert_eq!(pool.pages_allocated(), grabbed + 1);
+        // within-page steps claim nothing: steady-state decode is
+        // allocation-free at page granularity too
+        pool.advance(a);
+        let grabbed = pool.pages_allocated();
+        for _ in 0..p - 1 {
+            let v = pool.views(&[a]).unwrap();
+            drop(v);
+            pool.advance(a);
+        }
+        assert_eq!(pool.pages_allocated(), grabbed, "no page churn inside a page");
+    }
+
+    #[test]
+    fn shared_pages_refcount_and_cow() {
+        let m = model();
+        let d = m.n_heads * m.d_head;
+        let mut pool = KvPool::new(&m, 3);
+        let p = pool.page_size();
+        let a = pool.alloc().unwrap();
+        pool.ensure_room(a, p + 1).unwrap();
+        pool.set_len(a, p + 1);
+        let stem = pool.table(a)[0];
+        // b shares a's first page (a full, read-only stem page)
+        let b = pool.alloc().unwrap();
+        pool.attach_shared(b, &[stem], p);
+        assert_eq!(pool.page_ref(stem), 2);
+        assert_eq!(pool.len(b), p);
+        // b decodes on: the next row sits in a fresh exclusive page, the
+        // shared one is never written
+        let views = pool.views(&[b]).unwrap();
+        assert_eq!(views[0].pos, p);
+        drop(views);
+        pool.advance(b);
+        assert_ne!(pool.table(b)[1], stem);
+        // a COW write into the shared page forks it first
+        let c = pool.alloc().unwrap();
+        pool.attach_shared(c, &[stem], p - 1); // last stem row diverges
+        let before = pool.cow_copies();
+        assert!(pool.views(&[c]).is_err(), "writable shared page must be rejected");
+        pool.make_row_writable(c, p - 1).unwrap();
+        assert_eq!(pool.cow_copies(), before + 1);
+        assert_ne!(pool.table(c)[0], stem);
+        assert_eq!(pool.page_ref(stem), 2, "fork dropped c's reference");
+        // the fork carried the page contents over
+        let mut kv = (vec![0.0f32; (p - 1) * d], vec![0.0f32; (p - 1) * d]);
+        let views = pool.views(&[c]).unwrap();
+        views[0].read_rows(0, p - 1, &mut kv.0, &mut kv.1).unwrap();
+        drop(views);
+        let mut kv_a = (vec![0.0f32; (p - 1) * d], vec![0.0f32; (p - 1) * d]);
+        let views = pool.views(&[a]).unwrap();
+        views[0].read_rows(0, p - 1, &mut kv_a.0, &mut kv_a.1).unwrap();
+        drop(views);
+        assert_eq!(kv, kv_a);
+        // releases unwind the sharing without double-freeing
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.page_ref(stem), 1);
+        pool.release(a);
+        assert_eq!(pool.bytes(), 0);
+        assert_eq!(pool.n_free_pages(), pool.pages_for(m.seq_len) * 3);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn release_is_idempotent_in_release_builds() {
+        // regression: a double release used to push the slot onto the
+        // free list twice, handing it to two sequences at once
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let a = pool.alloc().unwrap();
+        pool.ensure_room(a, 1).unwrap();
+        pool.release(a);
+        pool.release(a); // double release: ignored
+        pool.release(9); // out of range: ignored
+        assert_eq!(pool.n_free(), 2);
+        assert_eq!(pool.n_free_pages(), 2 * m.seq_len.div_ceil(pool.page_size()));
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_ne!(b, c, "a double-released slot must not be handed out twice");
+        assert!(pool.alloc().is_none());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "not in use")]
+    fn release_twice_panics_in_debug_builds() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
     }
 }

@@ -1,46 +1,64 @@
-//! KV-cached serving subsystem: prefill/decode split + continuous
-//! batching.
+//! KV-cached serving subsystem: paged caches, prefix sharing, sampling,
+//! and continuous batching.
 //!
-//! Three layers (bottom-up):
+//! Four layers (bottom-up):
 //!
 //! * **Incremental kernels** — [`crate::model::forward::prefill_in`] and
-//!   [`crate::model::forward::decode_step_kv_in`]: one full forward per
-//!   prompt, then one single-token batched step per generated token,
-//!   attending over per-layer K/V caches. Exposed across backends as the
-//!   `prefill` / `decode_step_kv` artifact entries.
-//! * **[`KvPool`]** (`serve::kv`) — slot-pooled cache storage with
-//!   allocation, per-slot lengths and eviction on completion; its
+//!   [`crate::model::forward::decode_step_kv_in`]: one forward per prompt
+//!   (or per prompt *suffix*, continuing a cached prefix), then one
+//!   single-token batched step per generated token, attending over paged
+//!   K/V caches through per-sequence page tables. Exposed across backends
+//!   as the `prefill` / `decode_step_kv` artifact entries.
+//! * **[`KvPool`]** (`serve::kv`) — paged cache storage: fixed-size pages
+//!   ([`kv::DEFAULT_PAGE_SIZE`] tokens), per-slot page tables, on-demand
+//!   allocation as decode advances, refcounted sharing with copy-on-write
+//!   — in-use bytes scale with cached tokens, not `slots × capacity`. Its
 //!   footprint feeds `MemoryReport::with_kv_cache`.
+//! * **[`PrefixCache`]** (`serve::prefix`) — retains full pages of
+//!   finished prompts keyed by their token runs, so N requests sharing a
+//!   system-prompt stem store and prefill it once (LRU-evicted back to
+//!   the pool under page pressure).
 //! * **[`Scheduler`] + [`ServeEngine`]** (`serve::scheduler` /
-//!   `serve::engine`) — a request queue and a mixed prefill+decode
-//!   iteration loop that admits new prompts into freed slots mid-decode
-//!   and reports TTFT / per-token latency / throughput.
+//!   `serve::engine`) — a request queue admitted by **free pages** with a
+//!   shortest-job tiebreak (plus an anti-starvation guard), and a mixed
+//!   prefill+decode iteration loop that admits new prompts mid-decode and
+//!   reports TTFT / per-token latency / throughput. Requests carry
+//!   [`SamplingParams`] (temperature / top-k / top-p over the
+//!   deterministic [`crate::util::rng::Rng`], plus stop sequences);
+//!   greedy is the `temperature == 0` special case.
 //!
 //! The [`KvBackend`] trait is the seam between the engine and a compute
 //! backend. [`crate::runtime::ReferenceBackend`] implements it in-place
-//! over its workspace arena (zero steady-state decode allocations); the
-//! PJRT `Engine` (cargo feature `pjrt`) implements it functionally through the
-//! lowered `prefill` / `decode_step_kv` artifacts (cache-in/cache-out,
-//! pending device-resident caches).
+//! over its workspace arena (zero steady-state decode allocations,
+//! chunked prefill supported); the PJRT `Engine` (cargo feature `pjrt`)
+//! implements it functionally through the lowered `prefill` /
+//! `decode_step_kv` artifacts (cache-in/cache-out, pending
+//! device-resident caches).
 //!
 //! Parity contract: KV-cached greedy decode is **token-for-token
 //! identical** to the retained full-reforward oracle
-//! (`Evaluator::generate_oracle` over the `decode_step` artifact), and
-//! per-row results are independent of batch-mates — so scheduler output
-//! does not depend on arrival interleaving. Both properties are pinned in
-//! `tests/serve_decode.rs`.
+//! (`Evaluator::generate_oracle` over the `decode_step` artifact), with
+//! or without prefix sharing, and per-row results are independent of
+//! batch-mates — so scheduler output does not depend on arrival
+//! interleaving. Sampled decode is bit-reproducible from
+//! `SamplingParams::seed` regardless of batch composition. Pinned in
+//! `tests/serve_decode.rs` and `tests/serve_sampling.rs`.
 
 pub mod engine;
 pub mod kv;
+pub mod prefix;
+pub mod sampling;
 pub mod scheduler;
 
 pub use engine::{Response, ServeConfig, ServeEngine, ServeStats};
-pub use kv::KvPool;
+pub use kv::{KvPool, DEFAULT_PAGE_SIZE};
+pub use prefix::PrefixCache;
+pub use sampling::{sample_token, stop_len, SamplingParams};
 pub use scheduler::{Request, Scheduler};
 
 use anyhow::Result;
 
-use crate::model::forward::{self, SeqKv};
+use crate::model::forward::{self, KvView};
 use crate::runtime::{Backend, Preset, RefTensor, ReferenceBackend};
 
 /// A compute backend that can run the KV-cached serving path.
@@ -50,15 +68,17 @@ use crate::runtime::{Backend, Preset, RefTensor, ReferenceBackend};
 /// keep the greedy parity contract: logits bit-equal to what the
 /// full-reforward `decode_step` entry produces for the same sequence.
 pub trait KvBackend: Backend {
-    /// Run `prompt` once, filling `seq`'s per-layer caches; returns the
-    /// last position's logits `[vocab]`. Advances `seq.pos` to the prompt
-    /// length (the caller syncs its pool).
+    /// Run `prompt` once, filling `seq`'s cache rows `pos..pos+len`;
+    /// returns the last position's logits `[vocab]`. `seq.pos > 0`
+    /// continues a partially-cached sequence (only meaningful when
+    /// [`KvBackend::supports_chunked_prefill`] is true). Advances
+    /// `seq.pos` past the prompt (the caller syncs its pool).
     fn kv_prefill(
         &self,
         preset: &Preset,
         blocks: &[Self::Buffer],
         prompt: &[i32],
-        seq: &mut SeqKv<'_>,
+        seq: &mut KvView<'_>,
     ) -> Result<Vec<f32>>;
 
     /// Advance each sequence by one token (`tokens[i]` lands at
@@ -69,8 +89,16 @@ pub trait KvBackend: Backend {
         preset: &Preset,
         blocks: &[Self::Buffer],
         tokens: &[i32],
-        seqs: &mut [SeqKv<'_>],
+        seqs: &mut [KvView<'_>],
     ) -> Result<Vec<f32>>;
+
+    /// Whether [`KvBackend::kv_prefill`] accepts `seq.pos > 0`
+    /// (continuing a cached prefix). Backends running the single-shot
+    /// functional artifact return false; the engine then skips
+    /// prefix-cache attachment and prefills whole prompts.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
 }
 
 /// Borrow the weight handles as f32 slices (guards keep the dynamic
@@ -87,7 +115,7 @@ impl KvBackend for ReferenceBackend {
         preset: &Preset,
         blocks: &[RefTensor],
         prompt: &[i32],
-        seq: &mut SeqKv<'_>,
+        seq: &mut KvView<'_>,
     ) -> Result<Vec<f32>> {
         let guards = ref_guards(blocks)?;
         let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
@@ -101,7 +129,7 @@ impl KvBackend for ReferenceBackend {
         preset: &Preset,
         blocks: &[RefTensor],
         tokens: &[i32],
-        seqs: &mut [SeqKv<'_>],
+        seqs: &mut [KvView<'_>],
     ) -> Result<Vec<f32>> {
         let guards = ref_guards(blocks)?;
         let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
@@ -109,13 +137,19 @@ impl KvBackend for ReferenceBackend {
             forward::decode_step_kv_in(ws, &preset.model, &preset.blocks, &flats, tokens, seqs)
         })
     }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
 }
 
 /// Functional path over the lowered `prefill` / `decode_step_kv`
 /// artifacts: caches round-trip host↔device per call (XLA-style
 /// cache-in/cache-out until device-resident cache buffers land). Compiled
 /// against the in-tree `xla` stub in CI; runs for real only with actual
-/// PJRT bindings.
+/// PJRT bindings. Single-shot prefill only (`supports_chunked_prefill`
+/// stays false), so the engine never hands it a partially-cached
+/// sequence.
 #[cfg(feature = "pjrt")]
 impl KvBackend for crate::runtime::Engine {
     fn kv_prefill(
@@ -123,15 +157,21 @@ impl KvBackend for crate::runtime::Engine {
         preset: &Preset,
         blocks: &[Self::Buffer],
         prompt: &[i32],
-        seq: &mut SeqKv<'_>,
+        seq: &mut KvView<'_>,
     ) -> Result<Vec<f32>> {
         let d = preset.model.n_heads * preset.model.d_head;
         let t = prompt.len();
         // mirror the reference impl's contract: an over-long (or empty)
         // prompt is an error, not a panic in the cache scatter below
-        let cap = seq.capacity(d);
+        let cap = seq.capacity();
         if t == 0 || t > cap {
             return Err(anyhow::anyhow!("prefill: prompt length {t} outside 1..={cap}"));
+        }
+        if seq.pos != 0 {
+            return Err(anyhow::anyhow!(
+                "prefill: the functional artifact cannot continue {} cached tokens",
+                seq.pos
+            ));
         }
         let exe = self.load_preset_exe(&preset.model.name, "prefill")?;
         let tok = self.upload_i32(prompt, &[1, t])?;
@@ -141,9 +181,8 @@ impl KvBackend for crate::runtime::Engine {
         let logits = out.take_vec(0)?;
         let k = out.take_vec(1)?;
         let v = out.take_vec(2)?;
-        for (l, layer) in seq.layers.iter_mut().enumerate() {
-            layer.k[..t * d].copy_from_slice(&k[l * t * d..(l + 1) * t * d]);
-            layer.v[..t * d].copy_from_slice(&v[l * t * d..(l + 1) * t * d]);
+        for l in 0..preset.model.n_layers {
+            seq.write_rows(l, 0, &k[l * t * d..(l + 1) * t * d], &v[l * t * d..(l + 1) * t * d])?;
         }
         seq.pos = t;
         Ok(logits)
@@ -154,15 +193,27 @@ impl KvBackend for crate::runtime::Engine {
         preset: &Preset,
         blocks: &[Self::Buffer],
         tokens: &[i32],
-        seqs: &mut [SeqKv<'_>],
+        seqs: &mut [KvView<'_>],
     ) -> Result<Vec<f32>> {
+        let d = preset.model.n_heads * preset.model.d_head;
+        let n_layers = preset.model.n_layers;
         let exe = self.load_preset_exe(&preset.model.name, "decode_step_kv")?;
         let mut all = Vec::with_capacity(tokens.len() * preset.model.vocab);
         for (&tok, seq) in tokens.iter().zip(seqs.iter_mut()) {
-            let k_flat: Vec<f32> =
-                seq.layers.iter().flat_map(|l| l.k.iter().copied()).collect();
-            let v_flat: Vec<f32> =
-                seq.layers.iter().flat_map(|l| l.v.iter().copied()).collect();
+            // functional cache of exactly pos+1 rows: the cached prefix
+            // plus room for the new token (the artifact is length-agnostic
+            // — per-position rotary values do not depend on table size)
+            let rows = seq.pos + 1;
+            let mut k_flat = vec![0.0f32; n_layers * rows * d];
+            let mut v_flat = vec![0.0f32; n_layers * rows * d];
+            for l in 0..n_layers {
+                seq.read_rows(
+                    l,
+                    rows,
+                    &mut k_flat[l * rows * d..(l + 1) * rows * d],
+                    &mut v_flat[l * rows * d..(l + 1) * rows * d],
+                )?;
+            }
             let k_buf = self.upload_f32(&k_flat, &[k_flat.len()])?;
             let v_buf = self.upload_f32(&v_flat, &[v_flat.len()])?;
             let tok_buf = self.upload_i32(&[tok], &[1])?;
@@ -173,10 +224,11 @@ impl KvBackend for crate::runtime::Engine {
             all.extend(out.take_vec(0)?);
             let k_new = out.take_vec(1)?;
             let v_new = out.take_vec(2)?;
-            let plane = k_new.len() / seq.layers.len().max(1);
-            for (l, layer) in seq.layers.iter_mut().enumerate() {
-                layer.k.copy_from_slice(&k_new[l * plane..(l + 1) * plane]);
-                layer.v.copy_from_slice(&v_new[l * plane..(l + 1) * plane]);
+            let plane = k_new.len() / n_layers.max(1);
+            for l in 0..n_layers {
+                let ks = &k_new[l * plane..(l + 1) * plane];
+                let vs = &v_new[l * plane..(l + 1) * plane];
+                seq.write_rows(l, 0, ks, vs)?;
             }
             seq.pos += 1;
         }
@@ -184,10 +236,11 @@ impl KvBackend for crate::runtime::Engine {
     }
 }
 
-/// Decide the fate of a freshly-sampled greedy token — the stop
-/// conditions of the full-reforward oracle loop, written once and shared
-/// by the serving engine and `Evaluator::generate` so cached decode can
-/// never drift from `generate_oracle`:
+/// Decide the fate of a freshly-sampled token — the stop conditions of
+/// the full-reforward oracle loop, written once and shared by the serving
+/// engine and `Evaluator::generate` so cached decode can never drift from
+/// `generate_oracle` (the sampled path reuses it verbatim: only where
+/// `next` comes from differs — [`sample_token`] instead of argmax):
 ///
 /// * a row that already emitted `max_new` tokens samples nothing more;
 /// * a NaN-poisoned row (`next == None`) or an EOS stops without emitting;

@@ -1,0 +1,274 @@
+//! Prefix cache: retains full K/V pages of finished prompt stems keyed by
+//! their token runs, so requests sharing a system prompt / few-shot
+//! preamble store and prefill the stem **once**.
+//!
+//! Keys are page-aligned full token prefixes (`prompt[..k·page_size]` for
+//! every full page `k`), each mapped to the page holding that prefix's
+//! last `page_size` rows. A lookup walks the chain `k = 1, 2, …` until
+//! the first miss; the hit pages are attached to the new slot via
+//! [`KvPool::attach_shared`] (refcount, no copy) and only the divergent
+//! suffix is prefilled. Because row `j`'s K/V depend only on tokens
+//! `0..=j` (causality) and every key is the *entire* token run up to that
+//! page, any re-composed chain is bit-correct — including pages cached by
+//! different requests at different times.
+//!
+//! Entries hold one pool reference per page, so a cached page survives
+//! its sequences; under page pressure the engine evicts LRU entries whose
+//! page is referenced by the cache alone ([`PrefixCache::evict`]),
+//! returning those pages to the free list. Deeper pages of a chain are
+//! stamped older than shallower ones so chains unwind tail-first.
+
+use std::collections::HashMap;
+
+use super::kv::KvPool;
+
+struct Entry {
+    page: u32,
+    /// LRU stamp: `(clock << 16) | (0xFFFF - depth)` — later touches win,
+    /// and within one touch deeper pages stamp older, so eviction peels
+    /// chains from the tail and never orphans a reachable parent first.
+    stamp: u64,
+}
+
+/// Map from page-aligned token prefixes to cached K/V pages.
+#[derive(Default)]
+pub struct PrefixCache {
+    entries: HashMap<Vec<i32>, Entry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cached entries (diagnostics).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Prefix-page lookups that hit / missed (one count per request).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// One LRU stamp: all pages touched by a single lookup/insert share
+    /// the clock tick, with depth as the tiebreak (deeper = older), so
+    /// chains unwind tail-first under eviction.
+    fn stamp(now: u64, depth: usize) -> u64 {
+        (now << 16) | (0xFFFF - depth.min(0xFFFE) as u64)
+    }
+
+    /// Longest chain of cached pages covering a prefix of `prompt`
+    /// (page-aligned). Returns the page ids in row order; the caller
+    /// attaches them with [`KvPool::attach_shared`] **before** anything
+    /// else can evict them. Counts one hit (non-empty chain) or miss.
+    pub fn lookup(&mut self, prompt: &[i32], page_size: usize) -> Vec<u32> {
+        let now = self.clock;
+        self.clock += 1;
+        let mut chain = Vec::new();
+        let mut k = 1;
+        while k * page_size <= prompt.len() {
+            match self.entries.get_mut(&prompt[..k * page_size]) {
+                Some(e) => {
+                    e.stamp = Self::stamp(now, k - 1);
+                    chain.push(e.page);
+                }
+                None => break,
+            }
+            k += 1;
+        }
+        if chain.is_empty() {
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+        }
+        chain
+    }
+
+    /// Register `slot`'s freshly-prefilled prompt pages: every full page
+    /// of `prompt` not yet cached gains an entry and one pool reference.
+    /// First writer wins — an existing entry is only LRU-touched, its
+    /// page stays (equal keys imply bit-identical contents, so there is
+    /// nothing to reconcile).
+    pub fn insert(&mut self, prompt: &[i32], table: &[u32], pool: &mut KvPool) {
+        let page_size = pool.page_size();
+        let now = self.clock;
+        self.clock += 1;
+        let mut k = 1;
+        while k * page_size <= prompt.len() && k <= table.len() {
+            let key = &prompt[..k * page_size];
+            let stamp = Self::stamp(now, k - 1);
+            match self.entries.get_mut(key) {
+                Some(e) => e.stamp = stamp,
+                None => {
+                    let page = table[k - 1];
+                    pool.retain_page(page);
+                    self.entries.insert(key.to_vec(), Entry { page, stamp });
+                }
+            }
+            k += 1;
+        }
+    }
+
+    /// Entries whose page only the cache still references — the pages
+    /// [`PrefixCache::evict`] could free right now.
+    pub fn evictable(&self, pool: &KvPool) -> usize {
+        self.entries.values().filter(|e| pool.page_ref(e.page) == 1).count()
+    }
+
+    /// Evict up to `n` LRU entries whose page is unreferenced outside the
+    /// cache, releasing their pages; returns how many pages were freed.
+    /// Entries still shared with live sequences are skipped (freeing them
+    /// would gain nothing — the page cannot return to the free list).
+    pub fn evict(&mut self, pool: &mut KvPool, n: usize) -> usize {
+        let mut freed = 0;
+        while freed < n {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| pool.page_ref(e.page) == 1)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone());
+            let Some(key) = victim else { break };
+            let e = self.entries.remove(&key).expect("victim key present");
+            pool.release_page(e.page);
+            self.evictions += 1;
+            freed += 1;
+        }
+        freed
+    }
+
+    /// Drop every entry, releasing all cache-held references.
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        for (_, e) in self.entries.drain() {
+            pool.release_page(e.page);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, ModelSpec};
+
+    fn model() -> ModelSpec {
+        Manifest::builtin().preset("test-tiny").unwrap().model.clone()
+    }
+
+    /// A slot with `rows` cached rows and an arbitrary (zeroed) table.
+    fn filled_slot(pool: &mut KvPool, rows: usize) -> usize {
+        let s = pool.alloc().unwrap();
+        pool.ensure_room(s, rows).unwrap();
+        pool.set_len(s, rows);
+        s
+    }
+
+    #[test]
+    fn lookup_walks_the_longest_cached_chain() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let mut cache = PrefixCache::new();
+        let p = pool.page_size();
+        let prompt: Vec<i32> = (0..(2 * p + 3) as i32).collect();
+        assert!(cache.lookup(&prompt, p).is_empty(), "cold cache misses");
+        let s = filled_slot(&mut pool, prompt.len());
+        let table = pool.table(s).to_vec();
+        cache.insert(&prompt, &table, &mut pool);
+        assert_eq!(cache.len(), 2, "only full pages are cached");
+        // full-chain hit
+        assert_eq!(cache.lookup(&prompt, p), table[..2].to_vec());
+        // shared stem, divergent second page: chain stops after page 1
+        let mut other = prompt.clone();
+        other[p + 1] ^= 1;
+        assert_eq!(cache.lookup(&other, p), table[..1].to_vec());
+        // different first token: no chain at all
+        let mut cold = prompt.clone();
+        cold[0] ^= 1;
+        assert!(cache.lookup(&cold, p).is_empty());
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.misses(), 2);
+        // cache references pin the pages across the slot's release
+        pool.release(s);
+        assert_eq!(pool.page_ref(table[0]), 1, "cache still holds page 0");
+        assert_eq!(cache.evictable(&pool), 2);
+    }
+
+    #[test]
+    fn insert_is_first_writer_wins() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let mut cache = PrefixCache::new();
+        let p = pool.page_size();
+        let prompt: Vec<i32> = (0..p as i32).collect();
+        let a = filled_slot(&mut pool, p);
+        let table_a = pool.table(a).to_vec();
+        cache.insert(&prompt, &table_a, &mut pool);
+        let b = filled_slot(&mut pool, p);
+        let table_b = pool.table(b).to_vec();
+        cache.insert(&prompt, &table_b, &mut pool);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.lookup(&prompt, p), table_a[..1].to_vec(), "first entry kept");
+        assert_eq!(pool.page_ref(table_a[0]), 2, "slot + cache, not double-cached");
+    }
+
+    #[test]
+    fn evict_frees_lru_unreferenced_pages_only() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 3);
+        let mut cache = PrefixCache::new();
+        let p = pool.page_size();
+        let live: Vec<i32> = (0..p as i32).collect();
+        let dead: Vec<i32> = (100..100 + p as i32).collect();
+        let a = filled_slot(&mut pool, p);
+        let table_a = pool.table(a).to_vec();
+        cache.insert(&live, &table_a, &mut pool);
+        let b = filled_slot(&mut pool, p);
+        let table_b = pool.table(b).to_vec();
+        let dead_page = table_b[0];
+        cache.insert(&dead, &table_b, &mut pool);
+        pool.release(b); // only the cache references `dead_page` now
+        assert_eq!(cache.evictable(&pool), 1, "the live entry is pinned by slot a");
+        let free_before = pool.n_free_pages();
+        assert_eq!(cache.evict(&mut pool, 10), 1, "only the dead entry can free a page");
+        assert_eq!(pool.n_free_pages(), free_before + 1);
+        assert_eq!(pool.page_ref(dead_page), 0);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.lookup(&live, p).len() == 1, "live entry survived");
+        // releasing the slot makes the survivor evictable too
+        pool.release(a);
+        cache.clear(&mut pool);
+        assert_eq!(pool.bytes(), 0, "clear returns every cached page");
+    }
+
+    #[test]
+    fn chains_unwind_tail_first() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 1);
+        let mut cache = PrefixCache::new();
+        let p = pool.page_size();
+        let prompt: Vec<i32> = (0..(2 * p) as i32).collect();
+        let s = filled_slot(&mut pool, 2 * p);
+        let table = pool.table(s).to_vec();
+        cache.insert(&prompt, &table, &mut pool);
+        pool.release(s);
+        // evicting one page must drop the chain's tail, keeping the stem
+        assert_eq!(cache.evict(&mut pool, 1), 1);
+        assert_eq!(cache.lookup(&prompt, p), table[..1].to_vec(), "stem page survives");
+    }
+}

@@ -1,0 +1,185 @@
+//! Seeded sampling over next-token logits: temperature / top-k / top-p
+//! plus stop sequences, all on the repo's deterministic
+//! [`crate::util::rng::Rng`].
+//!
+//! Reproducibility contract: the token sampled at generation step `g` of
+//! a request depends only on (`logits`, [`SamplingParams`], `g`) — each
+//! step derives a fresh RNG from `seed ^ hash(g)` instead of streaming
+//! one RNG across steps. Since per-row logits are independent of
+//! batch-mates (pinned in `tests/serve_decode.rs`), a sampled generation
+//! is **bit-reproducible regardless of batch composition, slot
+//! assignment, and arrival interleaving** — pinned in
+//! `tests/serve_sampling.rs`.
+//!
+//! Greedy (`temperature == 0`) delegates to the same NaN-hardened argmax
+//! the oracle decode loop uses, so a greedy `SamplingParams` is
+//! token-for-token the oracle path.
+
+use crate::util::rng::Rng;
+
+/// Per-request sampling configuration, carried on
+/// [`crate::serve::Request`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0` means greedy argmax (the default).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits before sampling (0 = all).
+    pub top_k: usize,
+    /// Keep the smallest logit-sorted prefix with cumulative probability
+    /// `>= top_p` (1.0 = all).
+    pub top_p: f32,
+    /// Seed for the per-request sampling stream.
+    pub seed: u64,
+    /// Stop sequences: generation ends when the emitted tail equals any
+    /// of these token runs (the matched run is trimmed from the output).
+    pub stop: Vec<Vec<i32>>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0, stop: Vec::new() }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy mode: plain argmax, no RNG involved.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// Sample a token id from `logits` for generation step `n_generated` of a
+/// request. Greedy params short-circuit to the oracle argmax. Returns
+/// `None` when no finite logit survives (NaN-poisoned row — the caller
+/// stops the sequence, same as greedy).
+pub fn sample_token(logits: &[f32], params: &SamplingParams, n_generated: u64) -> Option<usize> {
+    if params.is_greedy() {
+        return crate::eval::argmax(logits);
+    }
+    // candidates: finite logits, sorted by descending logit (ascending
+    // index on ties — same tie order as argmax)
+    let mut cand: Vec<(usize, f32)> =
+        logits.iter().copied().enumerate().filter(|(_, l)| !l.is_nan()).collect();
+    if cand.is_empty() {
+        return None;
+    }
+    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    if params.top_k > 0 && cand.len() > params.top_k {
+        cand.truncate(params.top_k);
+    }
+    // f64 softmax keeps the cumulative sums deterministic and stable
+    let maxl = cand[0].1;
+    let invt = 1.0 / params.temperature as f64;
+    let mut probs: Vec<f64> =
+        cand.iter().map(|&(_, l)| (((l - maxl) as f64) * invt).exp()).collect();
+    let mut total: f64 = probs.iter().sum();
+    if params.top_p < 1.0 {
+        // nucleus: smallest sorted prefix reaching top_p (≥ 1 kept)
+        let target = total * params.top_p.max(0.0) as f64;
+        let mut cum = 0.0;
+        let mut keep = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= target {
+                keep = i + 1;
+                break;
+            }
+        }
+        probs.truncate(keep);
+        total = cum;
+    }
+    // one fresh RNG per (seed, step): sampling depends on the step index,
+    // never on how many RNG draws other requests or earlier batches made
+    let mut rng =
+        Rng::seed_from_u64(params.seed ^ n_generated.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let u = rng.gen_f64() * total;
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return Some(cand[i].0);
+        }
+    }
+    // float round-off fell past the last bucket
+    Some(cand[probs.len() - 1].0)
+}
+
+/// If the emitted tail of `generated` matches any stop sequence, return
+/// the longest match's length (to trim); `None` otherwise. Empty stop
+/// sequences never match.
+pub fn stop_len(generated: &[i32], stop: &[Vec<i32>]) -> Option<usize> {
+    stop.iter()
+        .filter(|s| !s.is_empty() && generated.ends_with(s))
+        .map(|s| s.len())
+        .max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.4, 0.0, 1.5]
+    }
+
+    #[test]
+    fn greedy_params_are_exact_argmax() {
+        let l = logits();
+        let p = SamplingParams::default();
+        assert!(p.is_greedy());
+        assert_eq!(sample_token(&l, &p, 0), crate::eval::argmax(&l));
+        assert_eq!(sample_token(&l, &p, 7), Some(1));
+    }
+
+    #[test]
+    fn top_k_one_is_argmax_at_any_temperature() {
+        let l = logits();
+        let p = SamplingParams { temperature: 5.0, top_k: 1, ..Default::default() };
+        for g in 0..20 {
+            assert_eq!(sample_token(&l, &p, g), Some(1));
+        }
+    }
+
+    #[test]
+    fn sampling_is_reproducible_per_seed_and_step() {
+        let l = logits();
+        let p = SamplingParams { temperature: 1.0, seed: 42, ..Default::default() };
+        let a: Vec<_> = (0..50).map(|g| sample_token(&l, &p, g)).collect();
+        let b: Vec<_> = (0..50).map(|g| sample_token(&l, &p, g)).collect();
+        assert_eq!(a, b, "same seed and steps, same draws");
+        assert!(a.iter().any(|&t| t != a[0]), "temperature 1 must actually vary");
+        let other = SamplingParams { seed: 43, ..p };
+        let c: Vec<_> = (0..50).map(|g| sample_token(&l, &other, g)).collect();
+        assert_ne!(a, c, "different seeds diverge");
+    }
+
+    #[test]
+    fn top_p_collapses_to_the_nucleus() {
+        // two near-ties far above the rest: a tight nucleus keeps only them
+        let l = vec![10.0, 9.9, -5.0, -6.0, -7.0];
+        let p = SamplingParams { temperature: 1.0, top_p: 0.5, seed: 9, ..Default::default() };
+        for g in 0..100 {
+            let t = sample_token(&l, &p, g).unwrap();
+            assert!(t <= 1, "step {g} sampled outside the nucleus: {t}");
+        }
+    }
+
+    #[test]
+    fn nan_poisoned_rows_sample_nothing() {
+        let l = vec![f32::NAN, f32::NAN];
+        let p = SamplingParams { temperature: 1.0, ..Default::default() };
+        assert_eq!(sample_token(&l, &p, 0), None);
+        // NaNs are skipped, not propagated
+        let l = vec![f32::NAN, 1.0];
+        assert_eq!(sample_token(&l, &p, 0), Some(1));
+    }
+
+    #[test]
+    fn stop_len_matches_tails_only() {
+        let stop = vec![vec![7, 8], vec![8], vec![]];
+        assert_eq!(stop_len(&[1, 7, 8], &stop), Some(2), "longest match wins");
+        assert_eq!(stop_len(&[1, 8], &stop), Some(1));
+        assert_eq!(stop_len(&[7, 8, 1], &stop), None, "mid-sequence is no match");
+        assert_eq!(stop_len(&[], &stop), None, "empty stop sequences never fire");
+    }
+}

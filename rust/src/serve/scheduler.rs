@@ -1,16 +1,31 @@
 //! Request queue + admission policy for continuous batching.
 //!
-//! The scheduler is deliberately dumb and fully deterministic: requests
-//! wait in a FIFO ordered by arrival time, and [`Scheduler::admit`] hands
-//! out at most `free_slots` requests whose arrival time has passed. All
-//! timing is the caller's notion of "now" (the engine's virtual clock),
-//! so the same submission set replays identically in tests.
+//! Requests wait in a queue ordered by arrival time; [`Scheduler::admit`]
+//! hands out at most `free_slots` arrived requests whose **worst-case
+//! page demand** (computed by the caller's `page_need` closure) fits the
+//! remaining page budget — admit-by-free-pages, so a request is only
+//! started when the paged [`super::KvPool`] can see it through to
+//! completion without deadlocking against its batch-mates. Among arrived
+//! candidates, admission prefers the **shortest job** (fewest pages
+//! needed), falling back to arrival order and then submission id among
+//! equals — fully deterministic: all timing is the caller's notion of
+//! "now" (the engine's virtual clock), so the same submission set replays
+//! identically in tests.
 //!
-//! Head-of-line behavior is intentional: a prompt that cannot be admitted
-//! yet (not arrived) blocks later arrivals, preserving request order —
-//! the property the interleaving-independence tests lean on.
+//! Shortest-job-first alone can starve a long prompt behind an endless
+//! stream of short ones, so the scheduler tracks how many admission
+//! rounds the queue head has been bypassed; after
+//! [`STARVATION_ROUNDS`] rounds the head becomes the only admissible
+//! request until it fits. A prompt that has not *arrived* yet still
+//! blocks nothing — only arrived requests compete.
 
 use std::collections::VecDeque;
+
+use super::sampling::SamplingParams;
+
+/// Admission rounds the queue head may be bypassed by shorter jobs
+/// before the scheduler insists on admitting it first.
+pub const STARVATION_ROUNDS: u32 = 8;
 
 /// One queued generation request.
 #[derive(Debug, Clone)]
@@ -20,14 +35,20 @@ pub struct Request {
     pub max_new: usize,
     /// Engine-clock time at which the request becomes visible.
     pub arrival_s: f64,
+    /// Decoding configuration (greedy by default).
+    pub params: SamplingParams,
 }
 
-/// FIFO request queue ordered by arrival time.
+/// Arrival-ordered request queue with paged admission.
 #[derive(Debug, Default)]
 pub struct Scheduler {
     pending: VecDeque<Request>,
     next_id: u64,
     n_submitted: u64,
+    /// Anti-starvation bookkeeping: the head request last bypassed, and
+    /// how many admission rounds it has been bypassed in a row.
+    starved_id: Option<u64>,
+    head_skips: u32,
 }
 
 impl Scheduler {
@@ -35,10 +56,21 @@ impl Scheduler {
         Self::default()
     }
 
-    /// Enqueue a request; returns its id. Arrivals are kept sorted, so
-    /// out-of-order submission times are fine (O(1) for the common
-    /// monotone case).
+    /// Enqueue a greedy request; returns its id. Arrivals are kept
+    /// sorted, so out-of-order submission times are fine (O(1) for the
+    /// common monotone case).
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, arrival_s: f64) -> u64 {
+        self.submit_with(prompt, max_new, arrival_s, SamplingParams::default())
+    }
+
+    /// Enqueue a request with explicit sampling parameters.
+    pub fn submit_with(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        arrival_s: f64,
+        params: SamplingParams,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.n_submitted += 1;
@@ -48,21 +80,90 @@ impl Scheduler {
             .rposition(|r| r.arrival_s <= arrival_s)
             .map(|i| i + 1)
             .unwrap_or(0);
-        self.pending.insert(at, Request { id, prompt, max_new, arrival_s });
+        self.pending.insert(at, Request { id, prompt, max_new, arrival_s, params });
         id
     }
 
-    /// Pop up to `free_slots` requests that have arrived by `now_s`,
-    /// strictly in queue order.
-    pub fn admit(&mut self, now_s: f64, free_slots: usize) -> Vec<Request> {
-        let mut out = Vec::new();
-        while out.len() < free_slots {
-            match self.pending.front() {
-                Some(r) if r.arrival_s <= now_s => out.push(self.pending.pop_front().unwrap()),
-                _ => break,
+    /// Pop up to `free_slots` arrived requests whose summed page demand
+    /// fits `free_pages`. `page_need` maps a request to its worst-case
+    /// page demand (0 for requests the engine will reject outright, so
+    /// they drain without holding memory). Selection: shortest job
+    /// (fewest pages) first, then arrival, then id — except when the
+    /// queue head has been bypassed [`STARVATION_ROUNDS`] times, in which
+    /// case it is admitted first or nothing is.
+    pub fn admit(
+        &mut self,
+        now_s: f64,
+        free_slots: usize,
+        free_pages: usize,
+        page_need: &dyn Fn(&Request) -> usize,
+    ) -> Vec<Request> {
+        let n_arrived =
+            self.pending.iter().take_while(|r| r.arrival_s <= now_s).count();
+        if n_arrived == 0 || free_slots == 0 {
+            return Vec::new();
+        }
+        let needs: Vec<usize> =
+            self.pending.iter().take(n_arrived).map(|r| page_need(r)).collect();
+        // candidate order: cheapest first, arrival/id as deterministic ties
+        let mut order: Vec<usize> = (0..n_arrived).collect();
+        order.sort_by(|&a, &b| {
+            needs[a]
+                .cmp(&needs[b])
+                .then(
+                    self.pending[a]
+                        .arrival_s
+                        .partial_cmp(&self.pending[b].arrival_s)
+                        .expect("arrival times are finite"),
+                )
+                .then(self.pending[a].id.cmp(&self.pending[b].id))
+        });
+
+        let head_id = self.pending[0].id;
+        let starving =
+            self.starved_id == Some(head_id) && self.head_skips >= STARVATION_ROUNDS;
+
+        let mut budget = free_pages;
+        let mut picked: Vec<usize> = Vec::new();
+        for &i in &order {
+            if picked.len() >= free_slots {
+                break;
+            }
+            if starving && picked.is_empty() && i != 0 {
+                // the starving head is served first or nobody is
+                if needs[0] > budget {
+                    break;
+                }
+                continue;
+            }
+            if needs[i] <= budget {
+                budget -= needs[i];
+                picked.push(i);
             }
         }
-        out
+
+        // starvation bookkeeping: did this round bypass the head again?
+        if picked.contains(&0) {
+            self.starved_id = None;
+            self.head_skips = 0;
+        } else if !picked.is_empty() {
+            if self.starved_id == Some(head_id) {
+                self.head_skips += 1;
+            } else {
+                self.starved_id = Some(head_id);
+                self.head_skips = 1;
+            }
+        }
+
+        // extract in candidate order (indices shift as we remove)
+        picked.sort_unstable();
+        let mut out: Vec<(usize, Request)> = Vec::with_capacity(picked.len());
+        for (removed, &i) in picked.iter().enumerate() {
+            out.push((i, self.pending.remove(i - removed).expect("picked index in range")));
+        }
+        // hand back in selection (cheapest-first) order, deterministically
+        out.sort_by_key(|&(i, _)| order.iter().position(|&o| o == i).unwrap());
+        out.into_iter().map(|(_, r)| r).collect()
     }
 
     pub fn n_pending(&self) -> usize {
@@ -84,6 +185,12 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    /// Unit page demand + unbounded budget: the slot-count FIFO the
+    /// engine used before paging.
+    fn admit_slots(s: &mut Scheduler, now_s: f64, free_slots: usize) -> Vec<Request> {
+        s.admit(now_s, free_slots, usize::MAX, &|_| 1)
+    }
+
     #[test]
     fn fifo_admission_respects_arrivals_and_slots() {
         let mut s = Scheduler::new();
@@ -94,13 +201,13 @@ mod tests {
         assert_eq!(s.n_pending(), 3);
 
         // nothing arrived before t=0? a has
-        let got = s.admit(0.5, 8);
+        let got = admit_slots(&mut s, 0.5, 8);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![a]);
         // b+c arrived by t=2 but only one slot free
-        let got = s.admit(2.0, 1);
+        let got = admit_slots(&mut s, 2.0, 1);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![b]);
         assert_eq!(s.next_arrival_s(), Some(2.0));
-        let got = s.admit(2.0, 1);
+        let got = admit_slots(&mut s, 2.0, 1);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![c]);
         assert_eq!(s.n_pending(), 0);
         assert_eq!(s.n_submitted(), 3);
@@ -111,9 +218,9 @@ mod tests {
         let mut s = Scheduler::new();
         s.submit(vec![1], 4, 5.0);
         s.submit(vec![2], 4, 6.0);
-        assert!(s.admit(4.9, 8).is_empty(), "nothing has arrived yet");
+        assert!(admit_slots(&mut s, 4.9, 8).is_empty(), "nothing has arrived yet");
         assert_eq!(s.n_pending(), 2);
-        let got = s.admit(10.0, 8);
+        let got = admit_slots(&mut s, 10.0, 8);
         assert_eq!(got.len(), 2);
         assert_eq!(got[0].id, 0, "queue order preserved");
     }
@@ -123,7 +230,65 @@ mod tests {
         let mut s = Scheduler::new();
         let late = s.submit(vec![1], 4, 9.0);
         let early = s.submit(vec![2], 4, 1.0);
-        let got = s.admit(100.0, 8);
+        let got = admit_slots(&mut s, 100.0, 8);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![early, late]);
+    }
+
+    #[test]
+    fn admission_is_gated_by_page_budget() {
+        let mut s = Scheduler::new();
+        let big = s.submit(vec![0; 64], 4, 0.0);
+        let small = s.submit(vec![0; 4], 4, 0.0);
+        // 3 pages free: the 5-page head cannot start, the 1-page job can
+        let need = |r: &Request| r.prompt.len().div_ceil(16) + 1;
+        let got = s.admit(1.0, 8, 3, &need);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![small]);
+        assert_eq!(s.n_pending(), 1, "the big request stays queued, not dropped");
+        // with room, the head goes through
+        let got = s.admit(1.0, 8, 8, &need);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![big]);
+    }
+
+    #[test]
+    fn shortest_job_first_with_arrival_ties() {
+        let mut s = Scheduler::new();
+        let long = s.submit(vec![0; 40], 4, 0.0);
+        let short_a = s.submit(vec![0; 4], 4, 0.0);
+        let short_b = s.submit(vec![0; 4], 4, 0.0);
+        let need = |r: &Request| r.prompt.len().div_ceil(16);
+        let got = s.admit(0.0, 3, usize::MAX, &need);
+        assert_eq!(
+            got.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![short_a, short_b, long],
+            "cheapest first; equals keep submission order"
+        );
+    }
+
+    #[test]
+    fn bypassed_head_is_eventually_forced_through() {
+        let mut s = Scheduler::new();
+        let long = s.submit(vec![0; 64], 8, 0.0);
+        let need = |r: &Request| r.prompt.len().div_ceil(16);
+        // a stream of short jobs keeps fitting the 2-page budget; the
+        // 4-page head is bypassed until the starvation guard trips and
+        // admission goes quiet (head or nothing)
+        let mut rounds = 0u32;
+        loop {
+            s.submit(vec![0; 8], 4, 0.0);
+            let got = s.admit(1.0, 1, 2, &need);
+            if got.is_empty() {
+                break; // guard tripped: nothing but the head may start
+            }
+            assert!(got.iter().all(|r| r.id != long), "2 pages cannot fit the head");
+            rounds += 1;
+            assert!(rounds <= 2 * STARVATION_ROUNDS, "starvation guard never tripped");
+        }
+        // while starving, shorter jobs stay blocked no matter how many queue
+        for _ in 0..3 {
+            assert!(s.admit(1.0, 1, 2, &need).is_empty(), "head or nothing");
+        }
+        // once the budget covers the head (pool drained), it goes first
+        let got = s.admit(1.0, 2, 8, &need);
+        assert_eq!(got[0].id, long, "the starving head is admitted first");
     }
 }

@@ -1,0 +1,115 @@
+//! Scheduler admission properties, fuzzed over random queues:
+//!
+//! * **Never over-admits** — a batch never exceeds the free slots, and
+//!   its summed page demand never exceeds the page budget (so a request
+//!   whose prompt cannot be paged in is never started);
+//! * **Deterministic order among equals** — candidates with equal page
+//!   demand are admitted in arrival order (ids as the final tiebreak);
+//! * **No starvation under churn** — with an endless stream of short
+//!   jobs and a budget that can only fit the long head alone, every
+//!   request still completes within a bounded number of rounds.
+
+use adagradselect::serve::scheduler::STARVATION_ROUNDS;
+use adagradselect::serve::{Request, Scheduler};
+use adagradselect::util::rng::Rng;
+
+/// Worst-case page demand mirroring the engine's closure: one page per
+/// 16 tokens of prompt + generation budget, 0 for rejected prompts.
+fn page_need(r: &Request) -> usize {
+    if r.prompt.is_empty() || r.prompt.len() > 256 {
+        0
+    } else {
+        (r.prompt.len() + r.max_new).min(256).div_ceil(16)
+    }
+}
+
+#[test]
+fn admission_never_exceeds_slots_or_page_budget() {
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for trial in 0..200 {
+        let mut s = Scheduler::new();
+        let n = 1 + rng.gen_range(0, 12);
+        for _ in 0..n {
+            let len = rng.gen_range(0, 300); // includes empty + over-long
+            let arrival = rng.gen_range(0, 10) as f64;
+            s.submit(vec![7; len], 1 + rng.gen_range(0, 32), arrival);
+        }
+        let mut admitted = 0usize;
+        let mut rounds = 0usize;
+        while s.n_pending() > 0 {
+            let free_slots = 1 + rng.gen_range(0, 4);
+            let budget = rng.gen_range(0, 40);
+            let now = rng.gen_range(0, 12) as f64;
+            let got = s.admit(now, free_slots, budget, &page_need);
+            assert!(got.len() <= free_slots, "trial {trial}: admitted past free slots");
+            let spent: usize = got.iter().map(page_need).sum();
+            assert!(
+                spent <= budget,
+                "trial {trial}: admitted {spent} pages against a {budget}-page budget"
+            );
+            for r in &got {
+                assert!(r.arrival_s <= now, "trial {trial}: admitted a future arrival");
+            }
+            admitted += got.len();
+            rounds += 1;
+            assert!(rounds < 10_000, "trial {trial}: queue never drained");
+        }
+        assert_eq!(admitted, n, "trial {trial}: requests were dropped or duplicated");
+    }
+}
+
+#[test]
+fn equal_demand_requests_keep_arrival_order() {
+    let mut rng = Rng::seed_from_u64(9);
+    for _ in 0..50 {
+        let mut s = Scheduler::new();
+        // same prompt length + max_new => identical page demand
+        let n = 3 + rng.gen_range(0, 6);
+        let ids: Vec<u64> =
+            (0..n).map(|i| s.submit(vec![3; 20], 4, i as f64 * 0.25)).collect();
+        let got = s.admit(100.0, n, usize::MAX, &page_need);
+        assert_eq!(
+            got.iter().map(|r| r.id).collect::<Vec<_>>(),
+            ids,
+            "equal-demand admission must preserve arrival order"
+        );
+    }
+}
+
+#[test]
+fn churn_of_short_jobs_cannot_starve_a_long_request() {
+    // budget of 4 pages; the long head needs all 4, short jobs need 1.
+    // Keep two short jobs arriving per round — SJF alone would bypass the
+    // head forever; the starvation guard must force it through.
+    let mut s = Scheduler::new();
+    let long = s.submit(vec![5; 60], 4, 0.0);
+    let mut completed = Vec::new();
+    let mut long_done_round = None;
+    for round in 0..(4 * STARVATION_ROUNDS as usize) {
+        s.submit(vec![5; 8], 8, 0.0);
+        s.submit(vec![5; 8], 8, 0.0);
+        for r in s.admit(1.0, 2, 4, &page_need) {
+            if r.id == long {
+                long_done_round = Some(round);
+            }
+            completed.push(r.id);
+        }
+        if long_done_round.is_some() {
+            break;
+        }
+    }
+    let round = long_done_round.expect("the long request starved");
+    assert!(
+        round <= STARVATION_ROUNDS as usize + 1,
+        "head admitted only after {round} rounds"
+    );
+    // afterwards the queue drains normally
+    while s.n_pending() > 0 {
+        let got = s.admit(1.0, 4, 16, &page_need);
+        assert!(!got.is_empty());
+        completed.extend(got.iter().map(|r| r.id));
+    }
+    completed.sort_unstable();
+    completed.dedup();
+    assert_eq!(completed.len() as u64, s.n_submitted(), "every request completed once");
+}

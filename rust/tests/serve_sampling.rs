@@ -1,0 +1,239 @@
+//! Sampled serving and prefix-sharing contracts:
+//!
+//! * **Greedy degeneration** — a default (`temperature == 0`)
+//!   `SamplingParams` request is token-for-token the greedy oracle;
+//! * **Seeded reproducibility** — sampled output depends only on
+//!   (request, seed): identical across slot counts, batch compositions
+//!   and submission orders;
+//! * **Stop sequences** — generation ends at the first matching tail and
+//!   the matched run is trimmed from the output;
+//! * **Prefix sharing** — requests with a common prompt stem prefill the
+//!   stem once (the rest is served from the prefix cache), with outputs
+//!   still equal to each request's isolated oracle — including the
+//!   copy-on-write fork when a resubmitted prompt diverges mid-page.
+
+use adagradselect::eval::Evaluator;
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, RefTensor, ReferenceBackend};
+use adagradselect::serve::{stop_len, SamplingParams, ServeConfig, ServeEngine};
+
+const PRESET: &str = "test-tiny";
+
+fn engine() -> ReferenceBackend {
+    ReferenceBackend::new()
+}
+
+/// Deterministic prompt of `len` in-vocab tokens.
+fn prompt(len: usize, salt: u64) -> Vec<i32> {
+    (0..len).map(|i| 4 + ((i as u64 * 7 + salt * 13) % 50) as i32).collect()
+}
+
+/// Per-request isolated greedy oracle outputs.
+fn oracle_outputs(
+    ev: &Evaluator<'_, ReferenceBackend>,
+    device: &[RefTensor],
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<i32>> {
+    prompts
+        .iter()
+        .map(|p| ev.generate_oracle(device, std::slice::from_ref(p)).unwrap().remove(0))
+        .collect()
+}
+
+/// Run `prompts` through a fresh engine, returning outputs by prompt
+/// index. `params[i]` rides on prompt `i`; `order` permutes submission.
+fn serve(
+    backend: &ReferenceBackend,
+    state: &ModelState,
+    slots: usize,
+    max_new: usize,
+    prompts: &[Vec<i32>],
+    params: &[SamplingParams],
+    order: &[usize],
+) -> (Vec<Vec<i32>>, adagradselect::serve::ServeStats) {
+    let mut srv = ServeEngine::new(
+        backend,
+        PRESET,
+        state,
+        ServeConfig { slots, max_new_tokens: max_new },
+    )
+    .unwrap();
+    let mut by_id = vec![usize::MAX; prompts.len()];
+    for &pi in order {
+        let id = srv.submit_sampled(prompts[pi].clone(), 0, 0.0, params[pi].clone());
+        by_id[id as usize] = pi;
+    }
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), prompts.len(), "every request completes exactly once");
+    let mut out = vec![Vec::new(); prompts.len()];
+    let mut seen = vec![false; prompts.len()];
+    for r in responses {
+        let pi = by_id[r.id as usize];
+        assert!(!seen[pi], "request {pi} completed twice");
+        assert!(!r.truncated);
+        seen[pi] = true;
+        out[pi] = r.tokens;
+    }
+    (out, srv.stats())
+}
+
+#[test]
+fn greedy_sampling_params_match_the_oracle() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 3);
+    let max_new = 8usize;
+    let ev = Evaluator::new(&backend, PRESET, max_new).unwrap();
+    let device = ev.upload_state(&state).unwrap();
+
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(3 + 9 * i, i as u64)).collect();
+    let want = oracle_outputs(&ev, &device, &prompts);
+    let params = vec![SamplingParams::default(); prompts.len()];
+    let order: Vec<usize> = (0..prompts.len()).collect();
+    let (got, _) = serve(&backend, &state, 2, max_new, &prompts, &params, &order);
+    assert_eq!(got, want, "temperature-0 sampling must be the greedy oracle");
+}
+
+#[test]
+fn sampled_decode_is_reproducible_across_batch_compositions() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 5);
+    let max_new = 10usize;
+    let vocab = preset.model.vocab as i32;
+    let eos = backend.manifest().tokenizer.eos;
+
+    let n = 6usize;
+    let prompts: Vec<Vec<i32>> = (0..n).map(|i| prompt(4 + 5 * i, i as u64)).collect();
+    let params: Vec<SamplingParams> = (0..n)
+        .map(|i| SamplingParams {
+            temperature: 0.8,
+            top_k: 8,
+            top_p: 0.95,
+            seed: 100 + i as u64,
+            stop: Vec::new(),
+        })
+        .collect();
+
+    let fwd: Vec<usize> = (0..n).collect();
+    let rev: Vec<usize> = (0..n).rev().collect();
+    // one slot: strictly sequential; three slots: continuous batching with
+    // churn; reversed: different batch-mates and slot assignments
+    let (solo, _) = serve(&backend, &state, 1, max_new, &prompts, &params, &fwd);
+    let (batched, _) = serve(&backend, &state, 3, max_new, &prompts, &params, &fwd);
+    let (reversed, _) = serve(&backend, &state, 3, max_new, &prompts, &params, &rev);
+    assert_eq!(solo, batched, "slot count must not change sampled output");
+    assert_eq!(solo, reversed, "submission order must not change sampled output");
+    for (pi, toks) in solo.iter().enumerate() {
+        assert!(!toks.is_empty(), "request {pi} sampled nothing");
+        assert!(toks.len() <= max_new);
+        for &t in toks {
+            assert!(t >= 0 && t < vocab && t != eos, "request {pi} emitted invalid {t}");
+        }
+    }
+    // a different seed must actually change something somewhere
+    let reseeded: Vec<SamplingParams> =
+        params.iter().map(|p| SamplingParams { seed: p.seed + 777, ..p.clone() }).collect();
+    let (other, _) = serve(&backend, &state, 3, max_new, &prompts, &reseeded, &fwd);
+    assert_ne!(solo, other, "reseeding never changing output means the RNG is ignored");
+}
+
+#[test]
+fn stop_sequences_trim_and_finish() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 7);
+    let max_new = 10usize;
+
+    // learn the greedy continuation, then stop on a tail drawn from it
+    let p = prompt(6, 3);
+    let prompts = vec![p.clone()];
+    let greedy = vec![SamplingParams::default()];
+    let order = [0usize];
+    let (full, _) = serve(&backend, &state, 1, max_new, &prompts, &greedy, &order);
+    let w = &full[0];
+    assert!(w.len() >= 3, "need a few greedy tokens to build a stop sequence");
+    let stop = vec![w[1..3].to_vec()];
+
+    // expected: greedy walk halted at the first matching tail, trimmed
+    let mut want = Vec::new();
+    for &t in w {
+        want.push(t);
+        if let Some(k) = stop_len(&want, &stop) {
+            let keep = want.len() - k;
+            want.truncate(keep);
+            break;
+        }
+    }
+    let stopped = vec![SamplingParams { stop: stop.clone(), ..Default::default() }];
+    let (got, _) = serve(&backend, &state, 1, max_new, &prompts, &stopped, &order);
+    assert_eq!(got[0], want, "stop sequence must trim the matched tail");
+    assert!(got[0].len() < w.len(), "the stop must actually shorten the output");
+}
+
+#[test]
+fn shared_prompt_stems_prefill_once_with_oracle_parity() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 9);
+    let max_new = 6usize;
+    let ev = Evaluator::new(&backend, PRESET, max_new).unwrap();
+    let device = ev.upload_state(&state).unwrap();
+    let page = adagradselect::serve::DEFAULT_PAGE_SIZE;
+
+    // 8 requests sharing a 24-token system-prompt stem, distinct suffixes
+    let stem = prompt(24, 9);
+    let n = 8usize;
+    let prompts: Vec<Vec<i32>> = (0..n)
+        .map(|i| {
+            let mut p = stem.clone();
+            p.extend(prompt(4, 40 + i as u64));
+            p
+        })
+        .collect();
+    let want = oracle_outputs(&ev, &device, &prompts);
+
+    let params = vec![SamplingParams::default(); n];
+    let order: Vec<usize> = (0..n).collect();
+    let (got, stats) = serve(&backend, &state, 2, max_new, &prompts, &params, &order);
+    assert_eq!(got, want, "prefix sharing must not change greedy output");
+
+    // the stem's full page is prefilled by the first request only; every
+    // later one serves it from the prefix cache
+    let total: usize = prompts.iter().map(|p| p.len()).sum();
+    assert_eq!(stats.prefix_hit_tokens, (n - 1) * page, "each follower hits the stem page");
+    assert_eq!(stats.prefill_tokens, total - stats.prefix_hit_tokens);
+    assert_eq!(stats.n_prefills as usize, n, "suffixes still prefill once each");
+}
+
+#[test]
+fn resubmitted_prompts_fork_their_divergence_page_copy_on_write() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 11);
+    let max_new = 4usize;
+    let ev = Evaluator::new(&backend, PRESET, max_new).unwrap();
+    let device = ev.upload_state(&state).unwrap();
+    let page = adagradselect::serve::DEFAULT_PAGE_SIZE;
+
+    // a page-aligned prompt submitted twice: the rerun attaches both
+    // cached pages but must fork the last one (its final row is re-run to
+    // produce logits), writing without corrupting the cached copy
+    let p_aligned = prompt(2 * page, 5);
+    // and a mid-page prompt: the rerun attaches the full page and
+    // prefills the partial tail into a fresh page (no fork needed)
+    let p_partial = prompt(page + 4, 6);
+    let prompts = vec![p_aligned.clone(), p_aligned, p_partial.clone(), p_partial];
+    let want = oracle_outputs(&ev, &device, &prompts);
+
+    let params = vec![SamplingParams::default(); prompts.len()];
+    let order: Vec<usize> = (0..prompts.len()).collect();
+    let (got, stats) = serve(&backend, &state, 1, max_new, &prompts, &params, &order);
+    assert_eq!(got, want, "copy-on-write must not change greedy output");
+    assert!(stats.cow_copies >= 1, "the aligned rerun must fork its last page");
+    assert!(
+        stats.prefix_hit_tokens >= (2 * page - 1) + page,
+        "both reruns must hit the cache (got {} hit tokens)",
+        stats.prefix_hit_tokens
+    );
+}

@@ -13,6 +13,29 @@ continuous-batching engine semantics op-for-op to numpy f32, and checks:
    requests; outputs independent of arrival interleaving
 7. workspace take/give sequence of a decode step is fixed-size => a
    best-fit arena reaches zero-growth steady state even as positions grow
+
+PR 6 (paged KV + prefix sharing + seeded sampling) extends this with
+op-for-op Python ports of serve::kv::KvPool, serve::prefix::PrefixCache,
+serve::scheduler::Scheduler::admit and serve::sampling, plus a tag-level
+port of ServeEngine::step (every K/V row carries a hash of its own token
+prefix instead of floats, so any sharing/COW/interleaving bug shows up
+as a tag mismatch):
+
+8.  paged pool bookkeeping: alloc/release cycles, bytes ~ pages in use,
+    attach/COW refcounts, release idempotence, page-offset addressing
+    disjointness ([page, layer, page_size, d] vs a dense mirror)
+9.  prefix cache: longest-chain lookup, first-writer-wins insert,
+    LRU eviction skips referenced pages, chains unwind tail-first
+10. scheduler: admit never exceeds slots/page budget, equal-need
+    requests keep arrival order, the starvation guard forces the head
+11. sampling: greedy == argmax, per-(seed,step) determinism and step
+    independence, top-k/top-p support constraints, empirical
+    distribution ~ softmax, stop_len fuzz vs a naive oracle
+12. engine simulation: paged + prefix-shared + sampled serving is
+    token-identical to a per-request oracle across slot counts and
+    arrival orders, never faults on pages (admission budget proof),
+    stems prefill once, divergence pages fork (COW), refcounts balance
+    after every step and drain to zero
 """
 import numpy as np
 
@@ -406,5 +429,875 @@ for nn in (3, 2, 4):              # shrinking/regrowing active set
     run_seq(decode_takes(nn, S))
 assert ar.grows == g0, (ar.grows, g0)
 print("7 arena steady-state: ok (0 growth over 33 post-warm decode steps)")
+
+# =======================================================================
+# PR 6: paged KV pool + prefix sharing + scheduler + seeded sampling
+# =======================================================================
+import math
+
+M64 = (1 << 64) - 1
+
+
+class RngX:
+    """xoshiro256++ with SplitMix64 seeding (mirrors util::rng::Rng; the
+    same port as scripts/gen_golden.py, pinned there to published
+    vectors)."""
+
+    def __init__(self, seed):
+        x = seed & M64
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & M64
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        x = (s[0] + s[3]) & M64
+        result = ((((x << 23) | (x >> 41)) & M64) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & M64
+        return result
+
+    def gen_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+# SplitMix64 canonical seed-0 vector pins the seeding path
+_sm = RngX(0)
+assert _sm.s[0] == 0xE220A8397B1DCDAF, hex(_sm.s[0])
+assert _sm.s[1] == 0x6E789E6AA1B965F4, hex(_sm.s[1])
+
+
+class PagedPool:
+    """serve::kv::KvPool bookkeeping, ported op-for-op (release-build
+    semantics). The [layer, page_size, d] float payload of a page is
+    replaced by one content *tag* per row — COW copies tags, so any
+    sharing bug becomes a tag mismatch at read time."""
+
+    def __init__(self, n_slots, capacity, page_size=16):
+        self.page_size = min(page_size, max(capacity, 1))
+        self.capacity = capacity
+        self.n_slots = n_slots
+        self.n_pages = n_slots * -(-capacity // self.page_size)
+        self.rows = [[None] * self.page_size for _ in range(self.n_pages)]
+        self.refc = [0] * self.n_pages
+        self.free_pages = list(range(self.n_pages))[::-1]
+        self.tables = [[] for _ in range(n_slots)]
+        self.lens = [0] * n_slots
+        self.in_use = [False] * n_slots
+        self.free_slots = list(range(n_slots))[::-1]
+        self.peak_pages = 0
+        self.pages_allocated = 0
+        self.cow_copies = 0
+        self.peak_in_use = 0
+
+    def pages_for(self, rows):
+        return -(-rows // self.page_size)
+
+    def n_free(self):
+        return len(self.free_slots)
+
+    def n_free_pages(self):
+        return len(self.free_pages)
+
+    def pages_in_use(self):
+        return self.n_pages - len(self.free_pages)
+
+    def pages_held(self, slot):
+        return len(self.tables[slot])
+
+    def alloc(self):
+        if not self.free_slots:
+            return None
+        slot = self.free_slots.pop()
+        assert not self.tables[slot]
+        self.lens[slot] = 0
+        self.in_use[slot] = True
+        self.peak_in_use = max(self.peak_in_use, self.n_slots - len(self.free_slots))
+        return slot
+
+    def release(self, slot):
+        if slot >= self.n_slots or not self.in_use[slot]:
+            return  # release-build idempotence (the PR 6 bugfix)
+        table, self.tables[slot] = self.tables[slot], []
+        for page in table:
+            self.release_page(page)
+        self.in_use[slot] = False
+        self.lens[slot] = 0
+        self.free_slots.append(slot)
+
+    def set_len(self, slot, ln):
+        assert self.in_use[slot] and ln <= self.capacity
+        assert ln <= len(self.tables[slot]) * self.page_size
+        self.lens[slot] = ln
+
+    def advance(self, slot):
+        assert self.in_use[slot] and self.lens[slot] < self.capacity
+        assert self.lens[slot] < len(self.tables[slot]) * self.page_size
+        self.lens[slot] += 1
+
+    def alloc_page(self):
+        if not self.free_pages:
+            raise RuntimeError("kv pool: out of pages")
+        page = self.free_pages.pop()
+        assert self.refc[page] == 0
+        self.refc[page] = 1
+        self.pages_allocated += 1
+        self.peak_pages = max(self.peak_pages, self.pages_in_use())
+        return page
+
+    def retain_page(self, page):
+        assert self.refc[page] > 0
+        self.refc[page] += 1
+
+    def release_page(self, page):
+        assert self.refc[page] > 0
+        self.refc[page] -= 1
+        if self.refc[page] == 0:
+            self.free_pages.append(page)
+
+    def ensure_room(self, slot, rows):
+        assert self.in_use[slot]
+        assert rows <= self.capacity
+        while len(self.tables[slot]) < self.pages_for(rows):
+            self.tables[slot].append(self.alloc_page())
+
+    def attach_shared(self, slot, pages, covered):
+        assert self.in_use[slot] and not self.tables[slot] and self.lens[slot] == 0
+        assert covered <= len(pages) * self.page_size and covered <= self.capacity
+        for page in pages:
+            self.retain_page(page)
+            self.tables[slot].append(page)
+        self.lens[slot] = covered
+        self.peak_pages = max(self.peak_pages, self.pages_in_use())
+
+    def make_row_writable(self, slot, row):
+        assert self.in_use[slot]
+        idx = row // self.page_size
+        if idx >= len(self.tables[slot]):
+            return
+        old = self.tables[slot][idx]
+        if self.refc[old] <= 1:
+            return
+        fresh = self.alloc_page()
+        self.rows[fresh] = list(self.rows[old])
+        self.refc[old] -= 1
+        self.tables[slot][idx] = fresh
+        self.cow_copies += 1
+
+    def views_check(self, slots):
+        """KvPool::views contract: distinct in-use slots, next row
+        auto-mapped, pages covering writable rows (>= len) exclusive."""
+        assert len(set(slots)) == len(slots)
+        for s in slots:
+            assert self.in_use[s]
+            self.ensure_room(s, min(self.lens[s] + 1, self.capacity))
+            for pi, page in enumerate(self.tables[s]):
+                if (pi + 1) * self.page_size > self.lens[s]:
+                    assert self.refc[page] == 1, (s, page, "shared writable page")
+
+    def write_row(self, slot, row, tagv):
+        page = self.tables[slot][row // self.page_size]
+        assert self.refc[page] == 1, "write into a shared page"
+        self.rows[page][row % self.page_size] = tagv
+
+    def read_row(self, slot, row):
+        return self.rows[self.tables[slot][row // self.page_size]][row % self.page_size]
+
+    def check_refcounts(self, cache=None):
+        held = [0] * self.n_pages
+        for s in range(self.n_slots):
+            for page in self.tables[s]:
+                held[page] += 1
+        if cache is not None:
+            for page, _stamp in cache.entries.values():
+                held[page] += 1
+        assert held == self.refc, "refcount drift vs actual references"
+        assert sorted(self.free_pages) == [p for p in range(self.n_pages) if self.refc[p] == 0]
+        assert len(set(self.free_pages)) == len(self.free_pages), "free-list duplicate"
+        assert len(set(self.free_slots)) == len(self.free_slots), "free-slot duplicate"
+
+
+class PrefixCacheSim:
+    """serve::prefix::PrefixCache, ported op-for-op."""
+
+    def __init__(self):
+        self.entries = {}  # tuple(prefix tokens) -> [page, stamp]
+        self.clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def stamp(now, depth):
+        return (now << 16) | (0xFFFF - min(depth, 0xFFFE))
+
+    def lookup(self, prompt, page_size):
+        now = self.clock
+        self.clock += 1
+        chain, k = [], 1
+        while k * page_size <= len(prompt):
+            e = self.entries.get(tuple(prompt[: k * page_size]))
+            if e is None:
+                break
+            e[1] = self.stamp(now, k - 1)
+            chain.append(e[0])
+            k += 1
+        if chain:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return chain
+
+    def insert(self, prompt, table, pool):
+        ps = pool.page_size
+        now = self.clock
+        self.clock += 1
+        k = 1
+        while k * ps <= len(prompt) and k <= len(table):
+            key = tuple(prompt[: k * ps])
+            st = self.stamp(now, k - 1)
+            e = self.entries.get(key)
+            if e is not None:
+                e[1] = st
+            else:
+                pool.retain_page(table[k - 1])
+                self.entries[key] = [table[k - 1], st]
+            k += 1
+
+    def evictable(self, pool):
+        return sum(1 for page, _ in self.entries.values() if pool.refc[page] == 1)
+
+    def evict(self, pool, n):
+        freed = 0
+        while freed < n:
+            cands = [(e[1], k) for k, e in self.entries.items() if pool.refc[e[0]] == 1]
+            if not cands:
+                break
+            key = min(cands)[1]
+            page, _ = self.entries.pop(key)
+            pool.release_page(page)
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def clear(self, pool):
+        for page, _ in self.entries.values():
+            pool.release_page(page)
+        self.entries.clear()
+
+
+class SchedulerSim:
+    """serve::scheduler::Scheduler::admit, ported op-for-op."""
+
+    STARVATION_ROUNDS = 8
+
+    def __init__(self):
+        self.pending = []  # dicts: id, prompt, max_new, arrival, params
+        self.next_id = 0
+        self.starved_id = None
+        self.head_skips = 0
+
+    def submit(self, prompt, max_new, arrival_s, params=None):
+        rid = self.next_id
+        self.next_id += 1
+        at = 0
+        for i in range(len(self.pending) - 1, -1, -1):
+            if self.pending[i]["arrival"] <= arrival_s:
+                at = i + 1
+                break
+        self.pending.insert(
+            at,
+            dict(id=rid, prompt=list(prompt), max_new=max_new, arrival=arrival_s, params=params),
+        )
+        return rid
+
+    def next_arrival(self):
+        return self.pending[0]["arrival"] if self.pending else None
+
+    def admit(self, now_s, free_slots, free_pages, page_need):
+        n_arrived = 0
+        for r in self.pending:
+            if r["arrival"] <= now_s:
+                n_arrived += 1
+            else:
+                break
+        if n_arrived == 0 or free_slots == 0:
+            return []
+        needs = [page_need(r) for r in self.pending[:n_arrived]]
+        order = sorted(
+            range(n_arrived),
+            key=lambda i: (needs[i], self.pending[i]["arrival"], self.pending[i]["id"]),
+        )
+        head_id = self.pending[0]["id"]
+        starving = self.starved_id == head_id and self.head_skips >= self.STARVATION_ROUNDS
+        budget = free_pages
+        picked = []  # indices, in selection (cheapest-first) order
+        for i in order:
+            if len(picked) >= free_slots:
+                break
+            if starving and not picked and i != 0:
+                if needs[0] > budget:
+                    break
+                continue
+            if needs[i] <= budget:
+                budget -= needs[i]
+                picked.append(i)
+        if 0 in picked:
+            self.starved_id = None
+            self.head_skips = 0
+        elif picked:
+            if self.starved_id == head_id:
+                self.head_skips += 1
+            else:
+                self.starved_id = head_id
+                self.head_skips = 1
+        out = [self.pending[i] for i in picked]
+        for i in sorted(picked, reverse=True):
+            del self.pending[i]
+        return out
+
+
+def rust_argmax(logits):
+    """eval::argmax: NaN-skipping, first max wins, all-NaN -> None."""
+    best, best_v = None, None
+    for i, l in enumerate(logits):
+        if math.isnan(l):
+            continue
+        if best_v is None or l > best_v:
+            best, best_v = i, float(l)
+    return best
+
+
+def sample_token_sim(logits, params, n_generated):
+    """serve::sampling::sample_token (params: dict with temperature,
+    top_k, top_p, seed, stop)."""
+    if params["temperature"] <= 0.0:
+        return rust_argmax(logits)
+    cand = [(i, np.float32(l)) for i, l in enumerate(logits) if not math.isnan(l)]
+    if not cand:
+        return None
+    cand.sort(key=lambda t: (-float(t[1]), t[0]))
+    if params["top_k"] > 0 and len(cand) > params["top_k"]:
+        cand = cand[: params["top_k"]]
+    maxl = cand[0][1]
+    invt = 1.0 / float(np.float32(params["temperature"]))
+    probs = [math.exp(float(l - maxl) * invt) for _, l in cand]
+    total = sum(probs)
+    if params["top_p"] < 1.0:
+        target = total * max(float(np.float32(params["top_p"])), 0.0)
+        cum, keep = 0.0, len(probs)
+        for i, p in enumerate(probs):
+            cum += p
+            if cum >= target:
+                keep = i + 1
+                break
+        probs = probs[:keep]
+        total = cum
+    rng = RngX(params["seed"] ^ ((n_generated * 0x9E3779B97F4A7C15) & M64))
+    u = rng.gen_f64() * total
+    acc = 0.0
+    for i, p in enumerate(probs):
+        acc += p
+        if u < acc:
+            return cand[i][0]
+    return cand[len(probs) - 1][0]
+
+
+def stop_len_sim(generated, stop):
+    hits = [len(s) for s in stop if s and generated[-len(s):] == list(s)]
+    return max(hits) if hits else None
+
+
+# ---- 8: paged pool bookkeeping + page addressing ----------------------
+pp = PagedPool(2, 64, 16)
+assert pp.n_pages == 8 and pp.pages_in_use() == 0
+a8 = pp.alloc()
+pp.ensure_room(a8, 17)
+assert pp.pages_held(a8) == 2 and pp.pages_in_use() == 2
+pp.set_len(a8, 17)
+pp.release(a8)
+assert pp.pages_in_use() == 0 and pp.n_free() == 2
+pp.release(a8)  # double release: idempotent, free lists stay unique
+pp.check_refcounts()
+assert pp.n_free() == 2
+# attach/COW refcounts mirror the kv.rs unit tests
+a8 = pp.alloc()
+pp.ensure_room(a8, 17)
+pp.set_len(a8, 17)
+stem_page = pp.tables[a8][0]
+for j in range(16):
+    pp.write_row(a8, j, ("row", j))
+b8 = pp.alloc()
+pp.attach_shared(b8, [stem_page], 15)  # divergence mid-page
+assert pp.refc[stem_page] == 2
+try:
+    pp.views_check([b8])
+    raise AssertionError("shared writable page must be rejected")
+except AssertionError as e:
+    if "rejected" in str(e):
+        raise
+before = pp.cow_copies
+pp.make_row_writable(b8, 15)
+assert pp.cow_copies == before + 1 and pp.tables[b8][0] != stem_page
+assert pp.refc[stem_page] == 1, "fork drops the slot's reference"
+assert all(pp.read_row(b8, j) == ("row", j) for j in range(15)), "fork copied content"
+pp.views_check([b8])
+pp.release(b8)
+pp.release(a8)
+pp.check_refcounts()
+assert pp.pages_in_use() == 0
+# [page, layer, page_size, d] addressing: disjoint and dense-equivalent
+NLAY, DD, PSZ = 3, 5, 4
+table9 = [4, 1, 3]
+flat9 = np.full(6 * NLAY * PSZ * DD, np.nan, F)
+dense9 = np.zeros((NLAY, PSZ * len(table9), DD), F)
+offs = set()
+r9 = np.random.default_rng(9)
+for layer in range(NLAY):
+    for row in range(PSZ * len(table9)):
+        off = ((table9[row // PSZ] * NLAY + layer) * PSZ + row % PSZ) * DD
+        assert off not in offs
+        offs.add(off)
+        vals = r9.standard_normal(DD).astype(F)
+        flat9[off:off + DD] = vals
+        dense9[layer, row] = vals
+for layer in range(NLAY):
+    for row in range(PSZ * len(table9)):
+        off = ((table9[row // PSZ] * NLAY + layer) * PSZ + row % PSZ) * DD
+        assert np.array_equal(flat9[off:off + DD], dense9[layer, row])
+print("8 paged pool bookkeeping + page addressing: ok")
+
+# ---- 9: prefix cache semantics ----------------------------------------
+pp = PagedPool(2, 64, 16)
+pc = PrefixCacheSim()
+prompt9 = list(range(2 * 16 + 3))
+assert pc.lookup(prompt9, 16) == []
+s9 = pp.alloc()
+pp.ensure_room(s9, len(prompt9))
+pp.set_len(s9, len(prompt9))
+t9 = list(pp.tables[s9])
+pc.insert(prompt9, t9, pp)
+assert len(pc.entries) == 2, "only full pages are cached"
+assert pc.lookup(prompt9, 16) == t9[:2]
+other9 = list(prompt9)
+other9[17] ^= 1
+assert pc.lookup(other9, 16) == t9[:1], "chain stops at the divergent page"
+pp.release(s9)
+assert pp.refc[t9[0]] == 1 and pc.evictable(pp) == 2
+# first-writer-wins: a second insert under the same key only touches LRU
+s9b = pp.alloc()
+pp.ensure_room(s9b, 16)
+pp.set_len(s9b, 16)
+pc.insert(prompt9[:16], list(pp.tables[s9b]), pp)
+assert pc.entries[tuple(prompt9[:16])][0] == t9[0], "first entry kept"
+pp.release(s9b)
+# eviction: LRU first, chains unwind tail-first, pinned entries skipped
+assert pc.evict(pp, 1) == 1
+assert pc.lookup(prompt9, 16) == t9[:1], "stem page survives tail eviction"
+pc.clear(pp)
+pp.check_refcounts(pc)
+assert pp.pages_in_use() == 0
+print("9 prefix cache lookup/insert/evict: ok")
+
+# ---- 10: scheduler admission fuzz -------------------------------------
+def need_10(r, cap=64, ps=16):
+    L = len(r["prompt"])
+    if L == 0 or L > cap:
+        return 0
+    return -(-min(L + r["max_new"], cap) // ps)
+
+fz = np.random.default_rng(0xC0FFEE)
+for trial in range(200):
+    sch = SchedulerSim()
+    n = int(fz.integers(1, 12))
+    for _ in range(n):
+        sch.submit([1] * int(fz.integers(0, 80)), int(fz.integers(1, 20)), float(fz.random() * 5))
+    got_total, rounds = 0, 0
+    while sch.pending:
+        rounds += 1
+        if rounds > 2000:  # drain with full resources; must empty out
+            got = sch.admit(1e9, 100, 10**9, need_10)
+            got_total += len(got)
+            continue
+        now = float(fz.random() * 10)
+        free_slots = int(fz.integers(0, 4))
+        budget = int(fz.integers(0, 9))
+        got = sch.admit(now, free_slots, budget, need_10)
+        assert len(got) <= free_slots, "over-admitted slots"
+        assert sum(need_10(g) for g in got) <= budget, "over-admitted pages"
+        assert all(g["arrival"] <= now for g in got), "admitted the future"
+        got_total += len(got)
+        assert rounds < 2100
+    assert got_total == n, "requests dropped"
+# equal demand keeps arrival order
+sch = SchedulerSim()
+for t in (3.0, 1.0, 2.0):
+    sch.submit([1] * 8, 4, t)
+got = sch.admit(10.0, 8, 10**9, lambda r: 1)
+assert [g["arrival"] for g in got] == [1.0, 2.0, 3.0]
+# starvation guard: the bypassed head is eventually head-or-nothing
+sch = SchedulerSim()
+long_id = sch.submit([1] * 64, 8, 0.0)
+need_s = lambda r: -(-len(r["prompt"]) // 16)
+rounds = 0
+while True:
+    sch.submit([1] * 8, 4, 0.0)
+    got = sch.admit(1.0, 1, 2, need_s)
+    if not got:
+        break
+    assert all(g["id"] != long_id for g in got), "2 pages cannot fit the head"
+    rounds += 1
+    assert rounds <= 2 * SchedulerSim.STARVATION_ROUNDS, "guard never tripped"
+for _ in range(3):
+    assert sch.admit(1.0, 1, 2, need_s) == [], "head or nothing while starving"
+got = sch.admit(1.0, 2, 8, need_s)
+assert got[0]["id"] == long_id, "starving head admitted first"
+print(f"10 scheduler admission: ok (200 fuzz trials; guard at round {rounds})")
+
+# ---- 11: seeded sampling properties -----------------------------------
+lg11 = np.array([0.1, 2.5, -1.0, 2.4, 0.0, 1.5], F)
+greedy11 = dict(temperature=0.0, top_k=0, top_p=1.0, seed=0, stop=[])
+assert sample_token_sim(lg11, greedy11, 0) == rust_argmax(lg11) == 1
+assert rust_argmax([F("nan"), F(1.0)]) == 1 and rust_argmax([F("nan")] * 2) is None
+p11 = dict(temperature=1.0, top_k=0, top_p=1.0, seed=42, stop=[])
+draws_a = [sample_token_sim(lg11, p11, g) for g in range(50)]
+draws_b = [sample_token_sim(lg11, p11, g) for g in reversed(range(50))]
+assert draws_a == draws_b[::-1], "draw depends only on (seed, step), not call order"
+assert len(set(draws_a)) > 1, "temperature 1 must vary"
+p11c = dict(p11, seed=43)
+assert draws_a != [sample_token_sim(lg11, p11c, g) for g in range(50)], "seeds diverge"
+pk = dict(temperature=5.0, top_k=1, top_p=1.0, seed=7, stop=[])
+assert all(sample_token_sim(lg11, pk, g) == 1 for g in range(20)), "top-k 1 is argmax"
+pk2 = dict(temperature=1.0, top_k=2, top_p=1.0, seed=3, stop=[])
+assert all(sample_token_sim(lg11, pk2, g) in (1, 3) for g in range(200))
+lgp = np.array([10.0, 9.9, -5.0, -6.0, -7.0], F)
+pnuc = dict(temperature=1.0, top_k=0, top_p=0.5, seed=9, stop=[])
+assert all(sample_token_sim(lgp, pnuc, g) <= 1 for g in range(300)), "nucleus"
+pnan = dict(temperature=1.0, top_k=0, top_p=1.0, seed=0, stop=[])
+assert sample_token_sim([F("nan")] * 3, pnan, 0) is None
+# empirical distribution ~ softmax over 20k step-keyed draws
+lgd = np.array([2.0, 1.0, 0.0, -1.0], F)
+pd11 = dict(temperature=1.0, top_k=0, top_p=1.0, seed=5, stop=[])
+counts = np.zeros(4)
+NDRAW = 20000
+for g in range(NDRAW):
+    counts[sample_token_sim(lgd, pd11, g)] += 1
+e = np.exp(lgd.astype(np.float64))
+dmax = float(np.abs(counts / NDRAW - e / e.sum()).max())
+assert dmax < 0.015, dmax
+# stop_len vs a naive longest-tail oracle
+fz = np.random.default_rng(11)
+for _ in range(2000):
+    gen = [int(t) for t in fz.integers(0, 4, size=int(fz.integers(0, 8)))]
+    stops = [[int(t) for t in fz.integers(0, 4, size=int(fz.integers(0, 3)))]
+             for _ in range(int(fz.integers(0, 4)))]
+    naive = max(
+        (len(s) for s in stops if 0 < len(s) <= len(gen) and gen[len(gen) - len(s):] == s),
+        default=None,
+    )
+    assert stop_len_sim(gen, stops) == naive
+print(f"11 seeded sampling: ok (empirical-vs-softmax max diff {dmax:.4f})")
+
+# ---- 12: engine simulation over the paged pool ------------------------
+EOS_T = 2
+VOC = 24
+
+
+def tag12(prefix):
+    h = 1469598103934665603
+    for t in prefix:
+        h = ((h ^ (t & 0xFFFF)) * 1099511628211) & M64
+    return h
+
+
+def model_logits_sim(toks):
+    """Deterministic fake model: logits are a pure function of the token
+    history, like the causal kernels verified in sections 1-5."""
+    return np.random.default_rng(tag12(toks) % (1 << 32)).standard_normal(VOC).astype(F)
+
+
+def push_tok(gen, stop, emit, finished):
+    """ServeEngine::push_token on a bare list."""
+    if emit is None:
+        return True
+    gen.append(emit)
+    k = stop_len_sim(gen, stop)
+    if k is not None:
+        del gen[len(gen) - k:]
+        return True
+    return finished
+
+
+def oracle_gen(prompt, max_new, cap, params=None):
+    """Per-request oracle: the greedy_step loop over the fake model."""
+    toks, gen = list(prompt), []
+    stop = params["stop"] if params else []
+
+    def sample(g):
+        lg = model_logits_sim(toks)
+        return rust_argmax(lg) if params is None else sample_token_sim(lg, params, g)
+
+    emit, fin = greedy_step(sample(0), EOS_T, len(toks), cap, 0, max_new)
+    fin = push_tok(gen, stop, emit, fin)
+    while not fin:
+        toks.append(gen[-1])
+        emit, f2 = greedy_step(sample(len(gen)), EOS_T, len(toks), cap, len(gen), max_new)
+        fin = push_tok(gen, stop, emit, f2)
+    return gen
+
+
+class EngineSim:
+    """ServeEngine::step ported to the tag level: admission loop with the
+    page budget, prefix attach + COW, prefill/decode row writes, release
+    on finish. Row reads assert the slot sees exactly its own history."""
+
+    def __init__(self, slots, capacity, page_size=16, chunked=True):
+        self.pool = PagedPool(slots, capacity, page_size)
+        self.cache = PrefixCacheSim()
+        self.sched = SchedulerSim()
+        self.active = []
+        self.chunked = chunked
+        self.now = 0.0
+        self.stats = dict(n_prefills=0, prefill_tokens=0, prefix_hit_tokens=0)
+
+    def submit(self, prompt, max_new, arrival_s, params=None):
+        return self.sched.submit(prompt, max_new, arrival_s, params)
+
+    def page_budget(self):
+        reserved = sum(
+            max(0, a["worst"] - self.pool.pages_held(a["slot"])) for a in self.active
+        )
+        return max(
+            0, self.pool.n_free_pages() + self.cache.evictable(self.pool) - reserved
+        )
+
+    def ensure_room_evicting(self, slot, rows):
+        missing = self.pool.pages_for(min(rows, self.pool.capacity)) - self.pool.pages_held(slot)
+        if missing > self.pool.n_free_pages():
+            self.cache.evict(self.pool, missing - self.pool.n_free_pages())
+        self.pool.ensure_room(slot, rows)
+
+    def make_row_writable_evicting(self, slot, row):
+        if self.pool.n_free_pages() == 0:
+            self.cache.evict(self.pool, 1)
+        self.pool.make_row_writable(slot, row)
+
+    def sample(self, toks, params, g):
+        lg = model_logits_sim(toks)
+        return rust_argmax(lg) if params is None else sample_token_sim(lg, params, g)
+
+    def assert_rows(self, slot, toks, n):
+        for j in range(n):
+            assert self.pool.read_row(slot, j) == tag12(toks[: j + 1]), (
+                "row contamination", slot, j)
+
+    def finish(self, a, done):
+        self.pool.release(a["slot"])
+        done.append((a["id"], "OK", a["generated"]))
+
+    def step(self):
+        done = []
+        cap, ps = self.pool.capacity, self.pool.page_size
+
+        def need(r):
+            if not r["prompt"] or len(r["prompt"]) > cap:
+                return 0
+            return -(-min(len(r["prompt"]) + r["max_new"], cap) // ps)
+
+        while True:
+            budget = self.page_budget()
+            batch = self.sched.admit(self.now, self.pool.n_free(), budget, need)
+            if not batch:
+                break
+            for req in batch:
+                prompt, max_new = req["prompt"], req["max_new"]
+                if not prompt or len(prompt) > cap:
+                    done.append((req["id"], "REJECT", []))
+                    continue
+                worst = self.pool.pages_for(min(len(prompt) + max_new, cap))
+                slot = self.pool.alloc()
+                assert slot is not None, "admit() never exceeds free slots"
+                covered = 0
+                if self.chunked:
+                    chain = self.cache.lookup(prompt, ps)
+                    covered = min(len(chain) * ps, len(prompt) - 1)
+                    if covered > 0:
+                        self.pool.attach_shared(slot, chain[: -(-covered // ps)], covered)
+                self.ensure_room_evicting(slot, len(prompt))
+                if covered > 0:
+                    self.make_row_writable_evicting(slot, covered)
+                self.pool.views_check([slot])
+                self.assert_rows(slot, prompt, covered)  # attached stem is bit-right
+                for j in range(covered, len(prompt)):
+                    self.pool.write_row(slot, j, tag12(prompt[: j + 1]))
+                self.pool.set_len(slot, len(prompt))
+                self.stats["n_prefills"] += 1
+                self.stats["prefill_tokens"] += len(prompt) - covered
+                self.stats["prefix_hit_tokens"] += covered
+                if self.chunked:
+                    self.cache.insert(prompt, list(self.pool.tables[slot]), self.pool)
+                a = dict(id=req["id"], slot=slot, last=0, generated=[],
+                         toks=list(prompt), max_new=max_new, params=req["params"],
+                         worst=worst)
+                emit, fin = greedy_step(self.sample(prompt, a["params"], 0), EOS_T,
+                                        self.pool.lens[slot], cap, 0, max_new)
+                if emit is not None:
+                    a["last"] = emit
+                if push_tok(a["generated"], a["params"]["stop"] if a["params"] else [],
+                            emit, fin):
+                    self.finish(a, done)
+                else:
+                    self.active.append(a)
+        if self.active:
+            for a in self.active:
+                rows = min(self.pool.lens[a["slot"]] + 1, cap)
+                self.ensure_room_evicting(a["slot"], rows)
+            self.pool.views_check([a["slot"] for a in self.active])
+            still = []
+            for a in self.active:
+                slot = a["slot"]
+                ln = self.pool.lens[slot]
+                self.assert_rows(slot, a["toks"], ln)  # attention reads own rows only
+                a["toks"].append(a["last"])
+                self.pool.write_row(slot, ln, tag12(a["toks"]))
+                self.pool.advance(slot)
+                g = len(a["generated"])
+                emit, fin = greedy_step(self.sample(a["toks"], a["params"], g), EOS_T,
+                                        self.pool.lens[slot], cap, g, a["max_new"])
+                if emit is not None:
+                    a["last"] = emit
+                if push_tok(a["generated"], a["params"]["stop"] if a["params"] else [],
+                            emit, fin):
+                    self.finish(a, done)
+                else:
+                    still.append(a)
+            self.active = still
+        self.pool.check_refcounts(self.cache)
+        assert self.pool.pages_in_use() <= self.pool.n_pages
+        return done
+
+    def run_until_idle(self):
+        out, iters = [], 0
+        while True:
+            if not self.active:
+                na = self.sched.next_arrival()
+                if na is None:
+                    break
+                self.now = max(self.now, na)
+            out.extend(self.step())
+            iters += 1
+            assert iters < 50000, "engine sim livelock"
+        return out
+
+
+PS12, CAP12 = 16, 64
+stem_a = [5 + (i % 7) for i in range(2 * PS12)]
+stem_b = [9, 10] * PS12
+r12 = np.random.default_rng(123)
+reqs12 = []
+for i in range(28):
+    kind = i % 7
+    if kind < 2:
+        p = stem_a + [int(t) for t in r12.integers(3, VOC, size=int(r12.integers(1, 6)))]
+    elif kind == 2:
+        p = stem_b + [int(t) for t in r12.integers(3, VOC, size=int(r12.integers(1, 6)))]
+    elif kind == 3:
+        p = list(stem_a)  # page-aligned resubmission: the COW case
+    elif kind == 4:
+        p = []  # invalid: empty
+    elif kind == 5:
+        p = [int(t) for t in r12.integers(3, VOC, size=CAP12 + 3)]  # over-length
+    else:
+        p = [int(t) for t in r12.integers(3, VOC, size=int(r12.integers(1, CAP12)))]
+    reqs12.append((p, int(r12.integers(1, 40))))  # large max_new stresses the budget
+
+expected = {
+    i: ("REJECT", []) if (not p or len(p) > CAP12) else ("OK", oracle_gen(p, mn, CAP12))
+    for i, (p, mn) in enumerate(reqs12)
+}
+for slots in (1, 2, 3):
+    for order_name, idxs, arrivals in (
+        ("batch", range(len(reqs12)), lambda i: 0.0),
+        ("reversed", range(len(reqs12) - 1, -1, -1), lambda i: 0.0),
+        ("staggered", range(len(reqs12)), lambda i: i * 0.25),
+    ):
+        eng = EngineSim(slots, CAP12, PS12)
+        idmap = {}
+        for i in idxs:
+            idmap[eng.submit(reqs12[i][0], reqs12[i][1], arrivals(i))] = i
+        out = eng.run_until_idle()
+        assert len(out) == len(reqs12), "dropped or duplicated requests"
+        for rid, status, gen in out:
+            want = expected[idmap[rid]]
+            assert (status, gen) == want, (slots, order_name, idmap[rid], gen, want[1])
+        # drain: only cache-held pages remain; clearing frees everything
+        assert not eng.active and eng.pool.n_free() == slots
+        eng.cache.clear(eng.pool)
+        eng.pool.check_refcounts(eng.cache)
+        assert eng.pool.pages_in_use() == 0, "page leak"
+print("12a engine sim: paged+prefix outputs == oracle over 3 slot counts x 3 orders")
+
+# stems prefill once: 1 miss + 7 full-chain hits, bytes stay paged
+eng = EngineSim(2, CAP12, PS12)
+followers = [stem_a + [int(t) for t in r12.integers(3, VOC, size=4)] for _ in range(8)]
+idmap = {eng.submit(p, 6, i * 1000.0): i for i, p in enumerate(followers)}
+out = eng.run_until_idle()
+assert eng.stats["prefix_hit_tokens"] == 7 * 2 * PS12, eng.stats
+assert eng.stats["prefill_tokens"] == sum(len(p) for p in followers) - 7 * 2 * PS12
+assert eng.stats["n_prefills"] == 8
+assert eng.cache.hits == 7 and eng.cache.misses == 1
+for rid, status, gen in out:
+    assert (status, gen) == ("OK", oracle_gen(followers[idmap[rid]], 6, CAP12))
+assert eng.pool.peak_pages < eng.pool.n_pages, "peak must beat the slot model here"
+
+# resubmissions fork their divergence page (COW): a page-aligned full
+# resubmission (covered = 2p-1, row 31 inside attached page 1) and a
+# one-page resubmission (covered = p-1, row 15 inside attached page 0)
+eng = EngineSim(1, CAP12, PS12)
+eng.submit(stem_a, 4, 0.0)
+eng.submit(stem_a, 4, 1000.0)
+part = stem_a[:PS12]
+eng.submit(part, 4, 2000.0)
+eng.submit(part, 4, 3000.0)
+out = eng.run_until_idle()
+assert eng.pool.cow_copies == 3, eng.pool.cow_copies
+assert eng.stats["prefix_hit_tokens"] == (2 * PS12 - 1) + 2 * (PS12 - 1)
+for rid, status, gen in out:
+    want = oracle_gen(stem_a if rid < 2 else part, 4, CAP12)
+    assert (status, gen) == ("OK", want), (rid, gen, want)
+print("12b engine sim: stem prefilled once; COW forks on both divergence shapes")
+
+# sampled decode: bit-reproducible across batch compositions, stops trim
+sp12 = dict(temperature=0.9, top_k=8, top_p=0.95, seed=0, stop=[])
+sreqs = [([int(t) for t in r12.integers(3, VOC, size=int(r12.integers(1, 24)))],
+          int(r12.integers(2, 10)), dict(sp12, seed=500 + i)) for i in range(10)]
+sexp = {i: oracle_gen(p, mn, CAP12, pr) for i, (p, mn, pr) in enumerate(sreqs)}
+for slots, rev in ((1, False), (3, False), (3, True)):
+    eng = EngineSim(slots, CAP12, PS12)
+    idxs = range(len(sreqs) - 1, -1, -1) if rev else range(len(sreqs))
+    idmap = {eng.submit(sreqs[i][0], sreqs[i][1], 0.0, sreqs[i][2]): i for i in idxs}
+    for rid, status, gen in eng.run_until_idle():
+        assert (status, gen) == ("OK", sexp[idmap[rid]]), (slots, rev)
+# a stop sequence cut from the greedy continuation trims and finishes
+base = sreqs[0][0]
+w = oracle_gen(base, 12, CAP12)
+if len(w) >= 3:
+    stopp = dict(temperature=0.0, top_k=0, top_p=1.0, seed=0, stop=[w[1:3]])
+    eng = EngineSim(2, CAP12, PS12)
+    rid = eng.submit(base, 12, 0.0, stopp)
+    (got,) = [g for r, _, g in eng.run_until_idle() if r == rid]
+    assert got == oracle_gen(base, 12, CAP12, stopp)
+    assert len(got) < len(w), "matched stop run must trim the output"
+print("12c engine sim: sampled decode batch-invariant; stop sequences trim")
 
 print("\nALL KV-SERVING VERIFICATION CHECKS PASSED")
