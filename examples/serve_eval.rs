@@ -20,6 +20,17 @@
 //! (`--top-k`, `--top-p`, `--sample-seed` refine it); the draw at step
 //! `g` of request `i` depends only on `(sample-seed + i, g)`, so a
 //! sampled run is bit-reproducible regardless of batch interleaving.
+//!
+//! `--kv-pages N` overcommits the KV pool below the `slots × context`
+//! worst case: admission turns optimistic and the engine preempts (and
+//! later resumes, bit-identically) running requests when pages run dry.
+//! `--priority-mix "2,1,1"` cycles submitted requests through priority
+//! tiers (here: one priority-2 request, then two priority-1) — higher
+//! tiers admit first and are preempted last:
+//!
+//! ```bash
+//! cargo run --release --example serve_eval -- --requests 32 --kv-pages 12 --priority-mix 2,0,0,0
+//! ```
 
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{extract_answer, MathGen, Split, Suite};
@@ -31,7 +42,7 @@ use adagradselect::serve::{Response, SamplingParams, ServeConfig, ServeEngine};
 use adagradselect::train::Trainer;
 use adagradselect::util::cli::Args;
 use adagradselect::util::rng::Rng;
-use adagradselect::Result;
+use adagradselect::{anyhow, Result};
 
 fn pct(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -55,9 +66,23 @@ fn main() -> Result<()> {
     let top_k = args.usize_or("top-k", 0)?;
     let top_p = args.f64_or("top-p", 1.0)? as f32;
     let sample_seed = args.u64_or("sample-seed", 0)?;
+    let kv_pages = args.usize_or("kv-pages", 0)?; // 0 = worst-case pool
+    let priority_mix = args.str_opt("priority-mix");
     let compare_oracle = args.bool_flag("oracle");
     args.finish()?;
     let sampled = temperature > 0.0;
+    // e.g. "2,0,0,0": request i gets the (i mod len)-th tier
+    let priorities: Vec<u8> = match &priority_mix {
+        None => vec![0],
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<u8>()
+                    .map_err(|_| anyhow!("--priority-mix: bad tier {t:?} in {s:?}"))
+            })
+            .collect::<Result<_>>()?,
+    };
 
     let engine = ReferenceBackend::new();
     let state: ModelState = match checkpoint {
@@ -89,7 +114,7 @@ fn main() -> Result<()> {
         &engine,
         &preset,
         &state,
-        ServeConfig { slots, max_new_tokens: max_new },
+        ServeConfig { slots, max_new_tokens: max_new, kv_pages, ..Default::default() },
     )?;
     let mut rng = Rng::seed_from_u64(seed);
     let mut arrival = 0.0f64;
@@ -99,18 +124,19 @@ fn main() -> Result<()> {
             arrival += -(1.0 - rng.gen_f64()).ln() / rate;
         }
         let prompt = tok.encode(&prob.prompt(), true, false);
-        ids.push(if sampled {
-            let params = SamplingParams {
+        let priority = priorities[i % priorities.len()];
+        let params = if sampled {
+            SamplingParams {
                 temperature,
                 top_k,
                 top_p,
                 seed: sample_seed.wrapping_add(i as u64),
                 stop: Vec::new(),
-            };
-            srv.submit_sampled(prompt, 0, arrival, params)
+            }
         } else {
-            srv.submit(prompt, 0, arrival)
-        });
+            SamplingParams::default()
+        };
+        ids.push(srv.submit_prio(prompt, 0, arrival, priority, params));
     }
 
     let t_all = std::time::Instant::now();
@@ -189,6 +215,16 @@ fn main() -> Result<()> {
         "paging:          {} pages allocated, {} copy-on-write forks, {} prefix-hit tokens",
         stats.pages_allocated, stats.cow_copies, stats.prefix_hit_tokens
     );
+    println!(
+        "preemption:      {} evictions, {} cached tokens recycled ({} pool: {} pages)",
+        stats.n_preemptions,
+        stats.preempted_tokens,
+        if kv_pages == 0 { "worst-case" } else { "overcommitted" },
+        srv.kv_pool().n_pages(),
+    );
+    if let Some(mix) = &priority_mix {
+        println!("priorities:      cycling tiers [{mix}] across requests");
+    }
     if sampled {
         println!(
             "sampling:        temperature {temperature}, top-k {top_k}, top-p {top_p}, \

@@ -15,7 +15,14 @@
 //! * **steady-state page allocations**: decode steps inside a page must
 //!   claim zero fresh pages and zero arena slabs — invariant
 //!   `steady_state_zero_page_allocs` plus the shared
-//!   `workspace.steady_state_grows_10_steps` gate.
+//!   `workspace.steady_state_grows_10_steps` gate;
+//! * **preemption under burst**: the same contended trace (8 requests,
+//!   an overcommitted 4-page pool) replayed under optimistic vs
+//!   worst-case reservation — optimistic admission must preempt at least
+//!   once yet keep mean decode batch occupancy at or above the
+//!   worst-case baseline (`preempt/bursty_utilization_vs_worst_case`),
+//!   while the uncontended churn trace must never preempt
+//!   (`churn/zero_preemptions_uncontended`).
 //!
 //! Writes `BENCH_serve.json` (override with `AGSEL_BENCH_SERVE_JSON`);
 //! CI uploads it next to `BENCH_decode.json` and gates it through
@@ -27,7 +34,7 @@ use std::time::{Duration, Instant};
 use adagradselect::model::ModelState;
 use adagradselect::runtime::{Backend, RefTensor, ReferenceBackend};
 use adagradselect::serve::{
-    KvBackend, KvPool, SamplingParams, ServeConfig, ServeEngine, ServeStats,
+    KvBackend, KvPool, Reservation, SamplingParams, ServeConfig, ServeEngine, ServeStats,
 };
 use adagradselect::util::bench::{bench, header, BenchResult};
 use adagradselect::util::json::Value;
@@ -49,6 +56,34 @@ fn prompt(len: usize, salt: u64) -> Vec<i32> {
     (0..len).map(|i| 4 + ((i as u64 * 7 + salt * 13) % 50) as i32).collect()
 }
 
+/// Replay one bursty contended trace — 8 requests arriving at once on a
+/// 2-slot engine whose pool is overcommitted to 4 pages — under the given
+/// reservation policy. Returns (mean decode batch occupancy, stats):
+/// occupancy is `decode_tokens / decode_steps`, a machine-independent
+/// utilization measure (worst-case reservation serializes this trace, so
+/// its occupancy pins the baseline at 1.0).
+fn bursty(
+    backend: &ReferenceBackend,
+    state: &ModelState,
+    reservation: Reservation,
+) -> (f64, ServeStats) {
+    let mut srv = ServeEngine::new(
+        backend,
+        PRESET,
+        state,
+        ServeConfig { slots: 2, max_new_tokens: 8, kv_pages: 4, reservation },
+    )
+    .unwrap();
+    let n = 8u64;
+    for i in 0..n {
+        srv.submit(prompt(31, 300 + i), 0, 0.0);
+    }
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len() as u64, n, "every bursty request completes");
+    let stats = srv.stats();
+    (stats.decode_tokens as f64 / stats.decode_steps.max(1) as f64, stats)
+}
+
 /// Run `n` requests through a fresh engine; returns (wall seconds,
 /// generated tokens, stats).
 fn churn(
@@ -61,7 +96,7 @@ fn churn(
         backend,
         PRESET,
         state,
-        ServeConfig { slots: 4, max_new_tokens: 8 },
+        ServeConfig { slots: 4, max_new_tokens: 8, ..Default::default() },
     )
     .unwrap();
     for i in 0..n {
@@ -120,6 +155,39 @@ fn main() {
         ("value", Value::num(mem_ratio)),
         ("min", Value::num(1.0)),
     ]));
+    // the churn trace is uncontended (worst-case-sized pool): the
+    // preemption backstop must never fire on it
+    let no_preempt =
+        if stats.n_preemptions == 0 && sampled_stats.n_preemptions == 0 { 1.0 } else { 0.0 };
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("churn/zero_preemptions_uncontended")),
+        ("value", Value::num(no_preempt)),
+        ("min", Value::num(1.0)),
+    ]));
+
+    // --- bursty contention: optimistic + preemption vs worst case -----
+    let (wc_util, wc_stats) = bursty(&engine, &state, Reservation::WorstCase);
+    let (opt_util, opt_stats) = bursty(&engine, &state, Reservation::Optimistic);
+    println!(
+        "    -> bursty: occupancy {opt_util:.2} optimistic ({} preemptions, {} tokens \
+         at risk) vs {wc_util:.2} worst-case ({} preemptions)",
+        opt_stats.n_preemptions, opt_stats.preempted_tokens, wc_stats.n_preemptions,
+    );
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("preempt/bursty_utilization_vs_worst_case")),
+        ("value", Value::num(opt_util / wc_util.max(1e-9))),
+        ("min", Value::num(1.0)),
+    ]));
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("preempt/bursty_preemptions")),
+        ("value", Value::num(opt_stats.n_preemptions as f64)),
+        ("min", Value::num(1.0)),
+    ]));
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("preempt/worst_case_never_preempts")),
+        ("value", Value::num(if wc_stats.n_preemptions == 0 { 1.0 } else { 0.0 })),
+        ("min", Value::num(1.0)),
+    ]));
 
     // --- prefix sharing: one stem, many followers ---------------------
     let page = adagradselect::serve::DEFAULT_PAGE_SIZE;
@@ -129,7 +197,7 @@ fn main() {
         &engine,
         PRESET,
         &state,
-        ServeConfig { slots: 2, max_new_tokens: 4 },
+        ServeConfig { slots: 2, max_new_tokens: 4, ..Default::default() },
     )
     .unwrap();
     for i in 0..n_shared {
@@ -213,6 +281,10 @@ fn main() {
         ("cow_copies", Value::num(sampled_stats.cow_copies as f64)),
         ("prefix_hit_tokens", Value::num(shared.prefix_hit_tokens as f64)),
         ("prefix_prefill_tokens", Value::num(shared.prefill_tokens as f64)),
+        ("bursty_util_optimistic", Value::num(opt_util)),
+        ("bursty_util_worst_case", Value::num(wc_util)),
+        ("bursty_preemptions", Value::num(opt_stats.n_preemptions as f64)),
+        ("bursty_preempted_tokens", Value::num(opt_stats.preempted_tokens as f64)),
     ])];
 
     let summary = Value::obj(vec![

@@ -267,7 +267,7 @@ impl<'e, B: KvBackend> Evaluator<'e, B> {
             self.engine,
             &self.preset.model.name,
             state,
-            ServeConfig { slots, max_new_tokens: self.max_new_tokens },
+            ServeConfig { slots, max_new_tokens: self.max_new_tokens, ..Default::default() },
         )?;
         let ids: Vec<u64> = problems
             .iter()

@@ -5,13 +5,17 @@
 //! stems, and a [`Scheduler`] request queue. Every [`ServeEngine::step`]
 //! is one **mixed iteration**:
 //!
-//! 1. **Admission** — arrived prompts whose worst-case page demand fits
-//!    the remaining page budget are admitted (shortest job first, see
-//!    [`Scheduler::admit`]); each admitted prompt attaches any cached
-//!    prefix pages (copy-on-write at the divergence page), then runs one
+//! 1. **Admission** — arrived prompts whose page demand fits the
+//!    remaining page budget are admitted (highest priority first, then
+//!    shortest job, see [`Scheduler::admit`]); each admitted prompt
+//!    attaches any cached prefix pages (copy-on-write at the divergence
+//!    page), then runs one
 //!    [`prefill`](crate::model::forward::prefill_in) over the *uncovered
 //!    suffix only* (filling its cache and producing its first token —
-//!    TTFT ends here);
+//!    TTFT ends here). A **resumed** (previously preempted) request
+//!    re-feeds its prompt *plus* its already-generated tokens the same
+//!    way, picking up the sampling stream at its step index, so its
+//!    final output is bit-identical to an uninterrupted run;
 //! 2. **Decode** — all active sequences advance by exactly one token via a
 //!    single batched [`decode_step_kv`](crate::model::forward::decode_step_kv_in)
 //!    call, mapping fresh pages on demand as they cross page boundaries;
@@ -28,14 +32,34 @@
 //! ([`SamplingParams`], via [`ServeEngine::submit_sampled`]) keep the
 //! same property: each draw depends only on the request's seed and step
 //! index, so sampled output is bit-reproducible across batch
-//! compositions too.
+//! compositions too — including across preemptions, since a resumed
+//! sequence re-enters the per-step `seed ^ splitmix(g)` stream at the
+//! same `g`.
 //!
-//! Memory safety of admission: a request is only admitted when `free
-//! pages + cache-evictable pages` cover its worst-case demand **plus**
-//! the worst-case remaining growth of everything already active, so a
-//! mid-decode page fault cannot deadlock — any shortfall is served by
-//! evicting LRU prefix-cache entries (preemption of *running* sequences
-//! by page eviction is a non-goal here; see ROADMAP).
+//! Memory safety of admission is a policy choice ([`Reservation`]):
+//!
+//! * **Worst case** — a request is only admitted when `free pages +
+//!   cache-evictable pages` cover its worst-case demand **plus** the
+//!   worst-case remaining growth of everything already active, so a
+//!   mid-decode page fault cannot happen. Safe but pessimistic: one
+//!   long-tail request pins pages it may never touch while the queue
+//!   waits.
+//! * **Optimistic** (the default) — admission reserves only each active
+//!   sequence's *next decode row*; pages are claimed just in time as
+//!   sequences actually grow. When a decode step cannot map its next
+//!   page even after evicting the prefix cache, the **preemption
+//!   backstop** picks a victim (lowest priority, then most exclusive
+//!   pages — frees the most memory — then fewest cached tokens to
+//!   rebuild), parks its full pages in the prefix cache, releases its
+//!   slot, and requeues it for later resumption. The pool is floored at
+//!   one full-context sequence, so the backstop can always make the
+//!   failing sequence fit by shrinking the active set — no out-of-pages
+//!   deadlock.
+//!
+//! With the default worst-case pool ([`ServeConfig::kv_pages`] = 0)
+//! optimistic admission never needs the backstop; overcommitting the pool
+//! (`kv_pages` below `slots × pages-per-sequence`) trades preemption work
+//! for strictly less memory.
 //!
 //! The engine clock is wallclock-based but skips idle gaps: when nothing
 //! is active and the next arrival is in the future, the clock
@@ -55,15 +79,44 @@ use super::sampling::{sample_token, stop_len, SamplingParams};
 use super::scheduler::{Request, Scheduler};
 use super::{greedy_step, KvBackend};
 
+/// How admission accounts for pages not yet written.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Reservation {
+    /// Reserve only each active sequence's next decode row; a mid-decode
+    /// page shortfall preempts a victim instead of having been prevented
+    /// up front (the default).
+    #[default]
+    Optimistic,
+    /// Reserve every request's worst-case remaining growth at admission;
+    /// never preempts, at the cost of idle reserved pages.
+    WorstCase,
+}
+
 /// Engine construction knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Concurrently resident sequences (KV slots). The paged pool is
-    /// provisioned for this many full-context sequences — the worst case;
-    /// in-use bytes track actual cached tokens.
+    /// Concurrently resident sequences (KV slots).
     pub slots: usize,
     /// Per-request generation cap when `submit` is given `0`.
     pub max_new_tokens: usize,
+    /// KV pages to provision; `0` means the `slots × full-context` worst
+    /// case (in-use bytes always track actual cached tokens). Smaller
+    /// values overcommit the pool — admission then leans on preemption
+    /// under pressure. Floored at one full-context sequence.
+    pub kv_pages: usize,
+    /// Page-reservation policy for admission (see [`Reservation`]).
+    pub reservation: Reservation,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            slots: 1,
+            max_new_tokens: 16,
+            kv_pages: 0,
+            reservation: Reservation::Optimistic,
+        }
+    }
 }
 
 /// One finished request.
@@ -80,8 +133,12 @@ pub struct Response {
     pub truncated: bool,
     pub arrival_s: f64,
     /// Engine-clock time the first token (or the rejection) was produced.
+    /// Stamped at the *first* emission only — a preemption and requeue
+    /// never resets it, so TTFT reflects the original first token.
     pub first_token_s: f64,
     pub finish_s: f64,
+    /// Times this request was preempted and later resumed.
+    pub n_preemptions: u32,
 }
 
 impl Response {
@@ -122,6 +179,12 @@ pub struct ServeStats {
     /// sequence decodes within its last page).
     pub pages_allocated: u64,
     pub peak_active: usize,
+    /// Running sequences preempted by the page backstop (each one was
+    /// requeued and later resumed).
+    pub n_preemptions: u64,
+    /// Cached tokens released by preemptions — the work at risk; resumes
+    /// recover it from the prefix cache or re-prefill it.
+    pub preempted_tokens: usize,
 }
 
 struct ActiveSeq {
@@ -129,13 +192,18 @@ struct ActiveSeq {
     slot: usize,
     last: i32,
     generated: Vec<i32>,
+    /// The original prompt, kept so a preemption can requeue the request.
+    prompt: Vec<i32>,
     n_prompt: usize,
     max_new: usize,
     arrival_s: f64,
     first_token_s: f64,
     params: SamplingParams,
-    /// Pages this sequence may ever need (admission reserved them).
+    /// Pages this sequence may ever need (worst-case admission reserves
+    /// them; optimistic admission only consults them for diagnostics).
     worst_pages: usize,
+    priority: u8,
+    n_preemptions: u32,
 }
 
 /// KV-cached continuous-batching engine over any [`KvBackend`].
@@ -147,6 +215,7 @@ pub struct ServeEngine<'e, B: KvBackend> {
     cache: PrefixCache,
     sched: Scheduler,
     active: Vec<ActiveSeq>,
+    reservation: Reservation,
     max_new_default: usize,
     eos: i32,
     t0: Instant,
@@ -174,7 +243,16 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             .iter()
             .map(|f| backend.upload_f32(f, &[f.len()]))
             .collect::<Result<Vec<_>>>()?;
-        let pool = KvPool::new(&preset.model, cfg.slots.max(1));
+        let pool = if cfg.kv_pages == 0 {
+            KvPool::new(&preset.model, cfg.slots.max(1))
+        } else {
+            KvPool::with_pages(
+                &preset.model,
+                cfg.slots.max(1),
+                preset.model.seq_len,
+                cfg.kv_pages,
+            )
+        };
         let kv_bytes = pool.capacity_bytes();
         Ok(Self {
             backend,
@@ -184,6 +262,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             cache: PrefixCache::new(),
             sched: Scheduler::new(),
             active: Vec::new(),
+            reservation: cfg.reservation,
             max_new_default: cfg.max_new_tokens,
             eos: backend.manifest().tokenizer.eos,
             t0: Instant::now(),
@@ -213,8 +292,21 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         arrival_s: f64,
         params: SamplingParams,
     ) -> u64 {
+        self.submit_prio(prompt, max_new, arrival_s, 0, params)
+    }
+
+    /// Enqueue a prompt in an explicit priority tier (higher admits
+    /// first and is preempted last).
+    pub fn submit_prio(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        arrival_s: f64,
+        priority: u8,
+        params: SamplingParams,
+    ) -> u64 {
         let max_new = if max_new == 0 { self.max_new_default } else { max_new };
-        self.sched.submit_with(prompt, max_new, arrival_s, params)
+        self.sched.submit_prio(prompt, max_new, arrival_s, priority, params)
     }
 
     /// Enqueue a greedy prompt arriving now.
@@ -252,6 +344,13 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         &self.cache
     }
 
+    /// Drop every prefix-cache entry, returning cache-held pages to the
+    /// free list (pages shared with live sequences keep their other
+    /// references). Mostly for leak accounting in tests.
+    pub fn clear_prefix_cache(&mut self) {
+        self.cache.clear(&mut self.pool);
+    }
+
     fn response(a: ActiveSeq, finish_s: f64) -> Response {
         Response {
             id: a.id,
@@ -261,6 +360,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             arrival_s: a.arrival_s,
             first_token_s: a.first_token_s,
             finish_s,
+            n_preemptions: a.n_preemptions,
         }
     }
 
@@ -275,15 +375,90 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
     }
 
     /// Pages admission may still promise: the free list plus whatever the
-    /// prefix cache could give back, minus the worst-case remaining
-    /// growth already promised to active sequences.
+    /// prefix cache could give back, minus what is already promised to
+    /// active sequences — their worst-case remaining growth under
+    /// [`Reservation::WorstCase`], just their next decode row under
+    /// [`Reservation::Optimistic`] (the preemption backstop covers the
+    /// rest).
     fn page_budget(&self) -> usize {
-        let reserved: usize = self
-            .active
-            .iter()
-            .map(|a| a.worst_pages.saturating_sub(self.pool.pages_held(a.slot)))
-            .sum();
-        (self.pool.n_free_pages() + self.cache.evictable(&self.pool)).saturating_sub(reserved)
+        let mut held = 0usize;
+        let mut reserved = 0usize;
+        for a in &self.active {
+            let h = self.pool.pages_held(a.slot);
+            held += h;
+            reserved += match self.reservation {
+                Reservation::WorstCase => a.worst_pages.saturating_sub(h),
+                Reservation::Optimistic => {
+                    let next = (self.pool.len(a.slot) + 1).min(self.pool.capacity());
+                    self.pool.pages_for(next).saturating_sub(h)
+                }
+            };
+        }
+        let free = self.pool.n_free_pages();
+        let evictable = self.cache.evictable(&self.pool);
+        // the saturating_sub below silently clamps an accounting bug to a
+        // permanently-stalled budget of 0 — fail loudly instead: what is
+        // promised can never exceed what exists (held + free + evictable)
+        debug_assert!(
+            reserved <= held + free + evictable,
+            "page-budget drift: {reserved} pages promised but only \
+             {held} held + {free} free + {evictable} evictable exist"
+        );
+        (free + evictable).saturating_sub(reserved)
+    }
+
+    /// Preemption victim: lowest priority first, then the sequence whose
+    /// release frees the most exclusive pages, then the fewest cached
+    /// tokens (least work to rebuild), newest id last — fully
+    /// deterministic. `None` when fewer than two sequences are active
+    /// (the last survivor is never preempted: the pool floor guarantees
+    /// one full-context sequence always fits).
+    fn pick_victim(&self) -> Option<usize> {
+        if self.active.len() <= 1 {
+            return None;
+        }
+        (0..self.active.len()).min_by_key(|&i| {
+            let a = &self.active[i];
+            (
+                a.priority,
+                std::cmp::Reverse(self.pool.exclusive_pages(a.slot)),
+                self.pool.len(a.slot),
+                std::cmp::Reverse(a.id),
+            )
+        })
+    }
+
+    /// Preempt `active[idx]`: park its full KV pages in the prefix cache
+    /// (still evictable — pressure reclaims them like any cached stem, but
+    /// an undisturbed resume re-attaches instead of re-prefilling),
+    /// release its slot and exclusive pages, and requeue the request with
+    /// its generated-so-far tokens as resume state.
+    fn preempt(&mut self, idx: usize) {
+        let a = self.active.remove(idx);
+        let len = self.pool.len(a.slot);
+        if self.backend.supports_chunked_prefill() && !a.generated.is_empty() {
+            // cached rows = prompt + generated[..g-1] (the last emitted
+            // token was not fed yet)
+            let mut run = a.prompt.clone();
+            run.extend_from_slice(&a.generated[..a.generated.len() - 1]);
+            debug_assert_eq!(run.len(), len, "cached rows must match the fed history");
+            let table = self.pool.table(a.slot).to_vec();
+            self.cache.insert(&run, &table, &mut self.pool);
+        }
+        self.pool.release(a.slot);
+        self.stats.n_preemptions += 1;
+        self.stats.preempted_tokens += len;
+        self.sched.requeue(Request {
+            id: a.id,
+            prompt: a.prompt,
+            max_new: a.max_new,
+            arrival_s: a.arrival_s,
+            params: a.params,
+            priority: a.priority,
+            generated: a.generated,
+            n_preemptions: a.n_preemptions + 1,
+            first_token_s: Some(a.first_token_s),
+        });
     }
 
     /// `KvPool::ensure_room`, evicting prefix-cache entries to cover a
@@ -336,11 +511,23 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         let now = self.now_s();
         let (cap, page_size) = (self.pool.capacity(), self.pool.page_size());
         let chunked = self.backend.supports_chunked_prefill();
+        let reservation = self.reservation;
         let need = move |r: &Request| {
             if r.prompt.is_empty() || r.prompt.len() > cap {
                 0
             } else {
-                (r.prompt.len() + r.max_new).min(cap).div_ceil(page_size)
+                match reservation {
+                    // everything the request may ever touch
+                    Reservation::WorstCase => {
+                        (r.prompt.len() + r.max_new).min(cap).div_ceil(page_size)
+                    }
+                    // just the fed history plus the first decode row; the
+                    // preemption backstop underwrites later growth
+                    Reservation::Optimistic => {
+                        let fed = r.prompt.len() + r.generated.len();
+                        (fed + 1).min(cap).div_ceil(page_size)
+                    }
+                }
             }
         };
         loop {
@@ -350,7 +537,17 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 break;
             }
             for req in batch {
-                let Request { id, prompt, max_new, arrival_s, params } = req;
+                let Request {
+                    id,
+                    prompt,
+                    max_new,
+                    arrival_s,
+                    params,
+                    priority,
+                    generated,
+                    n_preemptions,
+                    first_token_s,
+                } = req;
                 if prompt.is_empty() || prompt.len() > self.pool.capacity() {
                     done.push(Response {
                         id,
@@ -360,24 +557,32 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                         arrival_s,
                         first_token_s: now,
                         finish_s: now,
+                        n_preemptions,
                     });
                     continue;
                 }
                 let worst_pages = self.worst_pages_for(prompt.len(), max_new);
                 let slot = self.pool.alloc().expect("admit() never exceeds free slots");
 
+                // the rows to (re-)feed: the prompt plus, after a
+                // preemption, every token generated so far — identical
+                // cache state to the uninterrupted run at this step
+                let mut run = prompt.clone();
+                run.extend_from_slice(&generated);
+
                 // prefix sharing: attach cached stem pages (refcounted, no
-                // copy), leaving at least one token to prefill for logits
+                // copy), leaving at least one token to prefill for logits.
+                // A resumed request's own parked pages come back this way.
                 let mut covered = 0usize;
                 if chunked {
-                    let chain = self.cache.lookup(&prompt, page_size);
-                    covered = (chain.len() * page_size).min(prompt.len() - 1);
+                    let chain = self.cache.lookup(&run, page_size);
+                    covered = (chain.len() * page_size).min(run.len() - 1);
                     if covered > 0 {
                         let n_attach = covered.div_ceil(page_size);
                         self.pool.attach_shared(slot, &chain[..n_attach], covered);
                     }
                 }
-                self.ensure_room_evicting(slot, prompt.len())?;
+                self.ensure_room_evicting(slot, run.len())?;
                 if covered > 0 {
                     // the divergence row may land mid-page: fork it first
                     self.make_row_writable_evicting(slot, covered)?;
@@ -386,43 +591,50 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 let t_pre = Instant::now();
                 let logits = {
                     let mut views = self.pool.views(&[slot])?;
-                    let suffix = &prompt[covered..];
+                    let suffix = &run[covered..];
                     self.backend.kv_prefill(&self.preset, &self.blocks, suffix, &mut views[0])?
                 };
-                self.pool.set_len(slot, prompt.len());
+                self.pool.set_len(slot, run.len());
                 self.stats.prefill_s += t_pre.elapsed().as_secs_f64();
                 self.stats.n_prefills += 1;
-                self.stats.prefill_tokens += prompt.len() - covered;
+                self.stats.prefill_tokens += run.len() - covered;
                 self.stats.prefix_hit_tokens += covered;
                 if chunked {
                     let table = self.pool.table(slot).to_vec();
-                    self.cache.insert(&prompt, &table, &mut self.pool);
+                    self.cache.insert(&run, &table, &mut self.pool);
                 }
 
-                let first_token_s = self.now_s();
+                // first emission only: a resumed request keeps the stamp
+                // from before its preemption
+                let stamp = self.now_s();
+                let g0 = generated.len();
                 let mut a = ActiveSeq {
                     id,
                     slot,
                     last: 0,
-                    generated: Vec::new(),
-                    n_prompt: prompt.len(),
+                    generated,
+                    prompt,
+                    n_prompt: run.len() - g0,
                     max_new,
                     arrival_s,
-                    first_token_s,
+                    first_token_s: first_token_s.unwrap_or(stamp),
                     params,
                     worst_pages,
+                    priority,
+                    n_preemptions,
                 };
                 let (emit, finished) = greedy_step(
-                    sample_token(&logits, &a.params, 0),
+                    sample_token(&logits, &a.params, g0 as u64),
                     self.eos,
                     self.pool.len(slot),
                     self.pool.capacity(),
-                    0,
+                    g0,
                     max_new,
                 );
                 if Self::push_token(&mut a, emit, finished) {
+                    let finish_s = self.now_s();
                     self.pool.release(slot);
-                    done.push(Self::response(a, first_token_s));
+                    done.push(Self::response(a, finish_s));
                 } else {
                     self.active.push(a);
                 }
@@ -433,12 +645,29 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         if !self.active.is_empty() {
             let t_dec = Instant::now();
             // map next-row pages up front (evicting prefix entries if the
-            // free list is dry) so the views build cannot fault mid-batch
-            let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
-            for &s in &slots {
-                let rows = (self.pool.len(s) + 1).min(self.pool.capacity());
-                self.ensure_room_evicting(s, rows)?;
+            // free list is dry) so the views build cannot fault mid-batch.
+            // Under optimistic reservation the free list may still run
+            // dry here — the preemption backstop shrinks the active set
+            // (never below one sequence: the pool floor fits it) and the
+            // mapping pass restarts over the survivors.
+            'mapping: loop {
+                for i in 0..self.active.len() {
+                    let s = self.active[i].slot;
+                    let rows = (self.pool.len(s) + 1).min(self.pool.capacity());
+                    if self.ensure_room_evicting(s, rows).is_err() {
+                        let v = self.pick_victim().ok_or_else(|| {
+                            anyhow!(
+                                "kv pool: out of pages for the last active sequence \
+                                 (accounting bug: the pool floor guarantees it fits)"
+                            )
+                        })?;
+                        self.preempt(v);
+                        continue 'mapping;
+                    }
+                }
+                break;
             }
+            let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
             let tokens: Vec<i32> = self.active.iter().map(|a| a.last).collect();
             let logits = {
                 let mut views = self.pool.views(&slots)?;

@@ -79,9 +79,24 @@ impl KvPool {
     /// sequences (the worst case), in pages of
     /// `min(DEFAULT_PAGE_SIZE, capacity)` tokens.
     pub fn with_capacity(model: &ModelSpec, n_slots: usize, capacity: usize) -> Self {
+        let page_size = DEFAULT_PAGE_SIZE.min(capacity.max(1));
+        Self::with_pages(model, n_slots, capacity, n_slots * capacity.div_ceil(page_size))
+    }
+
+    /// Pool with an explicit page count — **overcommitted** relative to
+    /// the `n_slots × capacity` worst case, for engines that preempt
+    /// running sequences instead of reserving worst-case memory up front.
+    /// `n_pages` is raised to at least one full-context sequence, so a
+    /// lone sequence can always run to completion (the no-deadlock floor).
+    pub fn with_pages(
+        model: &ModelSpec,
+        n_slots: usize,
+        capacity: usize,
+        n_pages: usize,
+    ) -> Self {
         let d = model.n_heads * model.d_head;
         let page_size = DEFAULT_PAGE_SIZE.min(capacity.max(1));
-        let n_pages = n_slots * capacity.div_ceil(page_size);
+        let n_pages = n_pages.max(capacity.div_ceil(page_size));
         let total = n_pages * model.n_layers * page_size * d;
         Self {
             n_layers: model.n_layers,
@@ -127,6 +142,18 @@ impl KvPool {
     /// Pages on the free list.
     pub fn n_free_pages(&self) -> usize {
         self.free_pages.len()
+    }
+
+    /// Total pages the pool was provisioned with.
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages in `slot`'s table that only `slot` references — the pages a
+    /// preemption of this sequence would return to the free list
+    /// immediately (shared prefix pages just drop one reference).
+    pub fn exclusive_pages(&self, slot: usize) -> usize {
+        self.tables[slot].iter().filter(|&&p| self.refc[p as usize] == 1).count()
     }
 
     /// Pages currently backing cached rows (allocated, refcount ≥ 1).
@@ -573,6 +600,42 @@ mod tests {
         pool.release(a);
         assert_eq!(pool.bytes(), 0);
         assert_eq!(pool.n_free_pages(), pool.pages_for(m.seq_len) * 3);
+    }
+
+    #[test]
+    fn page_limited_pools_floor_at_one_full_sequence() {
+        let m = model();
+        let per_seq = m.seq_len.div_ceil(DEFAULT_PAGE_SIZE.min(m.seq_len));
+        // overcommit: 3 slots share fewer pages than 3 worst cases
+        let pool = KvPool::with_pages(&m, 3, m.seq_len, per_seq + 1);
+        assert_eq!(pool.n_pages(), per_seq + 1);
+        assert!(pool.n_pages() < 3 * per_seq);
+        // a degenerate request is raised to the single-sequence floor
+        let pool = KvPool::with_pages(&m, 3, m.seq_len, 1);
+        assert_eq!(pool.n_pages(), per_seq, "one full sequence must always fit");
+        // the default constructor is the worst case
+        let pool = KvPool::new(&m, 3);
+        assert_eq!(pool.n_pages(), 3 * per_seq);
+    }
+
+    #[test]
+    fn exclusive_pages_ignore_shared_prefix_pages() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let p = pool.page_size();
+        let a = pool.alloc().unwrap();
+        pool.ensure_room(a, p + 1).unwrap();
+        pool.set_len(a, p + 1);
+        assert_eq!(pool.exclusive_pages(a), 2);
+        // b shares a's first page: neither slot owns it exclusively
+        let stem = pool.table(a)[0];
+        let b = pool.alloc().unwrap();
+        pool.attach_shared(b, &[stem], p);
+        assert_eq!(pool.exclusive_pages(a), 1);
+        assert_eq!(pool.exclusive_pages(b), 0);
+        pool.release(b);
+        assert_eq!(pool.exclusive_pages(a), 2, "release restores exclusivity");
+        pool.release(a);
     }
 
     #[cfg(not(debug_assertions))]

@@ -19,10 +19,17 @@
 //!   system-prompt stem store and prefill it once (LRU-evicted back to
 //!   the pool under page pressure).
 //! * **[`Scheduler`] + [`ServeEngine`]** (`serve::scheduler` /
-//!   `serve::engine`) — a request queue admitted by **free pages** with a
-//!   shortest-job tiebreak (plus an anti-starvation guard), and a mixed
-//!   prefill+decode iteration loop that admits new prompts mid-decode and
-//!   reports TTFT / per-token latency / throughput. Requests carry
+//!   `serve::engine`) — a request queue admitted by **free pages**,
+//!   highest [`Request::priority`] first with a shortest-job tiebreak
+//!   (plus an anti-starvation guard), and a mixed prefill+decode
+//!   iteration loop that admits new prompts mid-decode and reports TTFT /
+//!   per-token latency / throughput. Admission reserves pages
+//!   optimistically by default ([`Reservation`]): a mid-decode page
+//!   shortfall **preempts** a running sequence (lowest priority, most
+//!   exclusive pages, fewest cached tokens), parks its full pages in the
+//!   prefix cache and requeues it — resumption re-feeds prompt +
+//!   generated tokens and rejoins the sampling stream at the same step,
+//!   so output is bit-identical to an uninterrupted run. Requests carry
 //!   [`SamplingParams`] (temperature / top-k / top-p over the
 //!   deterministic [`crate::util::rng::Rng`], plus stop sequences);
 //!   greedy is the `temperature == 0` special case.
@@ -41,7 +48,9 @@
 //! or without prefix sharing, and per-row results are independent of
 //! batch-mates — so scheduler output does not depend on arrival
 //! interleaving. Sampled decode is bit-reproducible from
-//! `SamplingParams::seed` regardless of batch composition. Pinned in
+//! `SamplingParams::seed` regardless of batch composition — and both
+//! properties survive preemption: a preempted-and-resumed sequence emits
+//! the same tokens as an uninterrupted run. Pinned in
 //! `tests/serve_decode.rs` and `tests/serve_sampling.rs`.
 
 pub mod engine;
@@ -50,7 +59,7 @@ pub mod prefix;
 pub mod sampling;
 pub mod scheduler;
 
-pub use engine::{Response, ServeConfig, ServeEngine, ServeStats};
+pub use engine::{Reservation, Response, ServeConfig, ServeEngine, ServeStats};
 pub use kv::{KvPool, DEFAULT_PAGE_SIZE};
 pub use prefix::PrefixCache;
 pub use sampling::{sample_token, stop_len, SamplingParams};

@@ -17,6 +17,15 @@
 //! page is referenced by the cache alone ([`PrefixCache::evict`]),
 //! returning those pages to the free list. Deeper pages of a chain are
 //! stamped older than shallower ones so chains unwind tail-first.
+//!
+//! The cache doubles as the engine's **preemption parking lot**: a
+//! preempted sequence's full pages are inserted keyed by its fed history
+//! (prompt + generated tokens), so an undisturbed resume re-attaches them
+//! instead of re-prefilling — and under further pressure they are
+//! reclaimed like any other cached stem, which is exactly the
+//! release-under-pressure semantics preemption wants. (Follow-on in
+//! ROADMAP: priority-aware retention, so high-priority parked state
+//! outlives best-effort stems.)
 
 use std::collections::HashMap;
 

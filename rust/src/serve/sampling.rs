@@ -56,14 +56,17 @@ pub fn sample_token(logits: &[f32], params: &SamplingParams, n_generated: u64) -
     if params.is_greedy() {
         return crate::eval::argmax(logits);
     }
-    // candidates: finite logits, sorted by descending logit (ascending
-    // index on ties — same tie order as argmax)
+    // candidates: non-NaN logits, sorted by descending logit (ascending
+    // index on ties — same tie order as argmax). total_cmp keeps the
+    // sort panic-free even if a NaN ever slips past the filter (the same
+    // skip-NaN policy as eval::argmax; an all-NaN row returns None and
+    // the caller ends the sequence)
     let mut cand: Vec<(usize, f32)> =
         logits.iter().copied().enumerate().filter(|(_, l)| !l.is_nan()).collect();
     if cand.is_empty() {
         return None;
     }
-    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    cand.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     if params.top_k > 0 && cand.len() > params.top_k {
         cand.truncate(params.top_k);
     }

@@ -1,23 +1,32 @@
 //! Request queue + admission policy for continuous batching.
 //!
 //! Requests wait in a queue ordered by arrival time; [`Scheduler::admit`]
-//! hands out at most `free_slots` arrived requests whose **worst-case
-//! page demand** (computed by the caller's `page_need` closure) fits the
-//! remaining page budget — admit-by-free-pages, so a request is only
-//! started when the paged [`super::KvPool`] can see it through to
-//! completion without deadlocking against its batch-mates. Among arrived
-//! candidates, admission prefers the **shortest job** (fewest pages
-//! needed), falling back to arrival order and then submission id among
-//! equals — fully deterministic: all timing is the caller's notion of
-//! "now" (the engine's virtual clock), so the same submission set replays
-//! identically in tests.
+//! hands out at most `free_slots` arrived requests whose **page demand**
+//! (computed by the caller's `page_need` closure — worst-case or
+//! optimistic, the engine's choice) fits the remaining page budget —
+//! admit-by-free-pages, so a request is only started when the paged
+//! [`super::KvPool`] can see it through (or, under optimistic
+//! reservation, until the engine's preemption backstop steps in). Among
+//! arrived candidates, admission orders by **priority** (higher
+//! [`Request::priority`] first), then prefers the **shortest job**
+//! (fewest pages needed), falling back to arrival order and then
+//! submission id among equals — fully deterministic: all timing is the
+//! caller's notion of "now" (the engine's virtual clock), so the same
+//! submission set replays identically in tests.
 //!
 //! Shortest-job-first alone can starve a long prompt behind an endless
 //! stream of short ones, so the scheduler tracks how many admission
 //! rounds the queue head has been bypassed; after
 //! [`STARVATION_ROUNDS`] rounds the head becomes the only admissible
-//! request until it fits. A prompt that has not *arrived* yet still
-//! blocks nothing — only arrived requests compete.
+//! request until it fits (this fairness guard deliberately outranks
+//! priority: a starving low-priority head briefly blocks admission rather
+//! than being bypassed forever). A prompt that has not *arrived* yet
+//! still blocks nothing — only arrived requests compete.
+//!
+//! Preempted sequences return through [`Scheduler::requeue`], which keeps
+//! the request's id and original arrival time and carries its
+//! already-generated tokens, so a re-admission resumes instead of
+//! restarting and latency accounting stays anchored to the true arrival.
 
 use std::collections::VecDeque;
 
@@ -37,6 +46,17 @@ pub struct Request {
     pub arrival_s: f64,
     /// Decoding configuration (greedy by default).
     pub params: SamplingParams,
+    /// Admission priority: higher values admit first and are preempted
+    /// last (0 = default best-effort tier).
+    pub priority: u8,
+    /// Tokens already emitted before a preemption (empty for a fresh
+    /// request); counts against `max_new` and is re-fed on re-admission.
+    pub generated: Vec<i32>,
+    /// Times this request has been preempted and requeued.
+    pub n_preemptions: u32,
+    /// Engine-clock stamp of the first emitted token, carried across a
+    /// requeue so TTFT never counts queue re-entry as a fresh start.
+    pub first_token_s: Option<f64>,
 }
 
 /// Arrival-ordered request queue with paged admission.
@@ -71,26 +91,56 @@ impl Scheduler {
         arrival_s: f64,
         params: SamplingParams,
     ) -> u64 {
+        self.submit_prio(prompt, max_new, arrival_s, 0, params)
+    }
+
+    /// Enqueue a request with an explicit priority tier.
+    pub fn submit_prio(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        arrival_s: f64,
+        priority: u8,
+        params: SamplingParams,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.n_submitted += 1;
-        let at = self
-            .pending
-            .iter()
-            .rposition(|r| r.arrival_s <= arrival_s)
-            .map(|i| i + 1)
-            .unwrap_or(0);
-        self.pending.insert(at, Request { id, prompt, max_new, arrival_s, params });
+        self.requeue(Request {
+            id,
+            prompt,
+            max_new,
+            arrival_s,
+            params,
+            priority,
+            generated: Vec::new(),
+            n_preemptions: 0,
+            first_token_s: None,
+        });
         id
     }
 
+    /// Re-enqueue a preempted request, keeping its id, priority, original
+    /// arrival time and resume state (`generated`, `first_token_s`).
+    /// Because the original arrival is old, the victim re-sorts near the
+    /// queue front; it does not count as a new submission.
+    pub fn requeue(&mut self, req: Request) {
+        let at = self
+            .pending
+            .iter()
+            .rposition(|r| r.arrival_s <= req.arrival_s)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        self.pending.insert(at, req);
+    }
+
     /// Pop up to `free_slots` arrived requests whose summed page demand
-    /// fits `free_pages`. `page_need` maps a request to its worst-case
-    /// page demand (0 for requests the engine will reject outright, so
-    /// they drain without holding memory). Selection: shortest job
-    /// (fewest pages) first, then arrival, then id — except when the
-    /// queue head has been bypassed [`STARVATION_ROUNDS`] times, in which
-    /// case it is admitted first or nothing is.
+    /// fits `free_pages`. `page_need` maps a request to its page demand
+    /// (0 for requests the engine will reject outright, so they drain
+    /// without holding memory). Selection: highest priority first, then
+    /// shortest job (fewest pages), then arrival, then id — except when
+    /// the queue head has been bypassed [`STARVATION_ROUNDS`] times, in
+    /// which case it is admitted first or nothing is.
     pub fn admit(
         &mut self,
         now_s: f64,
@@ -105,11 +155,14 @@ impl Scheduler {
         }
         let needs: Vec<usize> =
             self.pending.iter().take(n_arrived).map(|r| page_need(r)).collect();
-        // candidate order: cheapest first, arrival/id as deterministic ties
+        // candidate order: highest priority, then cheapest, arrival/id as
+        // deterministic ties
         let mut order: Vec<usize> = (0..n_arrived).collect();
         order.sort_by(|&a, &b| {
-            needs[a]
-                .cmp(&needs[b])
+            self.pending[b]
+                .priority
+                .cmp(&self.pending[a].priority)
+                .then(needs[a].cmp(&needs[b]))
                 .then(
                     self.pending[a]
                         .arrival_s
@@ -262,6 +315,62 @@ mod tests {
             vec![short_a, short_b, long],
             "cheapest first; equals keep submission order"
         );
+    }
+
+    #[test]
+    fn priority_outranks_shortest_job() {
+        let mut s = Scheduler::new();
+        let cheap_low = s.submit(vec![0; 4], 4, 0.0);
+        let costly_high =
+            s.submit_prio(vec![0; 40], 4, 0.0, 2, SamplingParams::default());
+        let cheap_mid = s.submit_prio(vec![0; 4], 4, 0.0, 1, SamplingParams::default());
+        let need = |r: &Request| r.prompt.len().div_ceil(16);
+        let got = s.admit(0.0, 3, usize::MAX, &need);
+        assert_eq!(
+            got.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![costly_high, cheap_mid, cheap_low],
+            "priority first, page demand only breaks ties within a tier"
+        );
+    }
+
+    #[test]
+    fn requeue_keeps_id_arrival_and_resume_state() {
+        let mut s = Scheduler::new();
+        let a = s.submit(vec![1], 8, 0.0);
+        let b = s.submit(vec![2], 8, 5.0);
+        let mut got = admit_slots(&mut s, 10.0, 2);
+        assert_eq!(got.len(), 2);
+        // preempt `a` after two generated tokens
+        let mut victim = got.remove(0);
+        assert_eq!(victim.id, a);
+        victim.generated = vec![7, 9];
+        victim.n_preemptions = 1;
+        victim.first_token_s = Some(0.5);
+        s.requeue(victim);
+        assert_eq!(s.n_pending(), 1);
+        assert_eq!(s.n_submitted(), 2, "a requeue is not a new submission");
+        assert_eq!(s.next_arrival_s(), Some(0.0), "original arrival preserved");
+        let got = admit_slots(&mut s, 10.0, 2);
+        assert_eq!(got[0].id, a);
+        assert_ne!(got[0].id, b);
+        assert_eq!(got[0].generated, vec![7, 9], "resume state survives the queue");
+        assert_eq!(got[0].n_preemptions, 1);
+        assert_eq!(got[0].first_token_s, Some(0.5));
+    }
+
+    #[test]
+    fn requeued_victim_sorts_by_original_arrival() {
+        let mut s = Scheduler::new();
+        let old = s.submit(vec![1], 8, 0.0);
+        let _mid = s.submit(vec![2], 8, 1.0);
+        let mut got = admit_slots(&mut s, 2.0, 1);
+        let victim = got.remove(0);
+        assert_eq!(victim.id, old);
+        s.submit(vec![3], 8, 2.0);
+        s.requeue(victim);
+        // the victim's t=0 arrival puts it back at the queue head
+        let got = admit_slots(&mut s, 3.0, 3);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>()[0], old);
     }
 
     #[test]

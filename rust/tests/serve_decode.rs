@@ -89,7 +89,7 @@ fn serve_engine_never_mixes_rows_and_is_interleaving_independent() {
             &engine,
             PRESET,
             &state,
-            ServeConfig { slots: 3, max_new_tokens: max_new },
+            ServeConfig { slots: 3, max_new_tokens: max_new, ..Default::default() },
         )
         .unwrap();
         let order: Vec<usize> =
@@ -131,7 +131,7 @@ fn serve_engine_respects_staggered_arrivals() {
         &engine,
         PRESET,
         &state,
-        ServeConfig { slots: 2, max_new_tokens: 4 },
+        ServeConfig { slots: 2, max_new_tokens: 4, ..Default::default() },
     )
     .unwrap();
     // one immediate, one far-future arrival: the idle engine must
@@ -155,7 +155,7 @@ fn truncated_and_empty_prompts_are_flagged_not_scored() {
         &engine,
         PRESET,
         &state,
-        ServeConfig { slots: 2, max_new_tokens: 4 },
+        ServeConfig { slots: 2, max_new_tokens: 4, ..Default::default() },
     )
     .unwrap();
     let long = srv.submit(prompt(preset.model.seq_len + 40, 0), 0, 0.0);
@@ -201,7 +201,7 @@ fn rejected_prompts_do_not_consume_admission_slots() {
         &engine,
         PRESET,
         &state,
-        ServeConfig { slots: 1, max_new_tokens: 4 },
+        ServeConfig { slots: 1, max_new_tokens: 4, ..Default::default() },
     )
     .unwrap();
     srv.submit(prompt(preset.model.seq_len + 5, 0), 0, 0.0);

@@ -10,12 +10,21 @@
 //! * **Prefix sharing** — requests with a common prompt stem prefill the
 //!   stem once (the rest is served from the prefix cache), with outputs
 //!   still equal to each request's isolated oracle — including the
-//!   copy-on-write fork when a resubmitted prompt diverges mid-page.
+//!   copy-on-write fork when a resubmitted prompt diverges mid-page;
+//! * **Preemption** — on an overcommitted pool the page backstop preempts
+//!   and later resumes running sequences, with greedy *and* seeded
+//!   outputs bit-identical to an uninterrupted run, TTFT stamped at the
+//!   first emission only, and no page leaked through the
+//!   evict→requeue→finish churn;
+//! * **NaN robustness** — NaN logits end a request cleanly instead of
+//!   panicking the engine mid-batch.
 
 use adagradselect::eval::Evaluator;
 use adagradselect::model::ModelState;
 use adagradselect::runtime::{Backend, RefTensor, ReferenceBackend};
-use adagradselect::serve::{stop_len, SamplingParams, ServeConfig, ServeEngine};
+use adagradselect::serve::{
+    stop_len, Response, SamplingParams, ServeConfig, ServeEngine, ServeStats,
+};
 
 const PRESET: &str = "test-tiny";
 
@@ -55,7 +64,7 @@ fn serve(
         backend,
         PRESET,
         state,
-        ServeConfig { slots, max_new_tokens: max_new },
+        ServeConfig { slots, max_new_tokens: max_new, ..Default::default() },
     )
     .unwrap();
     let mut by_id = vec![usize::MAX; prompts.len()];
@@ -75,6 +84,238 @@ fn serve(
         out[pi] = r.tokens;
     }
     (out, srv.stats())
+}
+
+/// Drive a (possibly page-constrained) engine to completion by manual
+/// stepping, returning responses by prompt index, final stats, and the
+/// engine-clock time of the first preemption (if any). All arrivals are
+/// at t=0, so no idle fast-forward is needed; the step bound turns a
+/// livelock bug into a test failure instead of a hang.
+fn serve_steps(
+    backend: &ReferenceBackend,
+    state: &ModelState,
+    cfg: ServeConfig,
+    prompts: &[Vec<i32>],
+    params: &[SamplingParams],
+) -> (Vec<Response>, ServeStats, Option<f64>) {
+    let mut srv = ServeEngine::new(backend, PRESET, state, cfg).unwrap();
+    let mut by_id = vec![usize::MAX; prompts.len()];
+    for (pi, p) in prompts.iter().enumerate() {
+        let id = srv.submit_sampled(p.clone(), 0, 0.0, params[pi].clone());
+        by_id[id as usize] = pi;
+    }
+    let mut responses: Vec<Option<Response>> = vec![None; prompts.len()];
+    let mut first_preempt_s = None;
+    for step in 0.. {
+        assert!(step < 10_000, "engine stalled: preemption must preserve progress");
+        if srv.is_idle() {
+            break;
+        }
+        let before = srv.stats().n_preemptions;
+        let done = srv.step().unwrap();
+        if first_preempt_s.is_none() && srv.stats().n_preemptions > before {
+            first_preempt_s = Some(srv.now_s());
+        }
+        for r in done {
+            let pi = by_id[r.id as usize];
+            assert!(responses[pi].is_none(), "request {pi} completed twice");
+            assert!(!r.truncated);
+            responses[pi] = Some(r);
+        }
+    }
+    let stats = srv.stats();
+    // page-leak cross-check: with every sequence drained, the only live
+    // pages are the prefix cache's (one per entry); dropping the cache
+    // must return the pool to empty with every slot free
+    assert_eq!(
+        srv.kv_pool().pages_in_use(),
+        srv.prefix_cache().len(),
+        "pages leaked past the prefix cache after preemption churn"
+    );
+    srv.clear_prefix_cache();
+    assert_eq!(srv.kv_pool().pages_in_use(), 0, "cache clear must free every page");
+    assert_eq!(srv.kv_pool().n_free(), cfg.slots, "a slot leaked");
+    let responses =
+        responses.into_iter().map(|r| r.expect("request never completed")).collect();
+    (responses, stats, first_preempt_s)
+}
+
+/// Page-constrained configs that force the backstop: 31-token prompts
+/// fill two pages minus one row, so every sequence claims its third page
+/// two decode steps in — on a floor-sized pool the concurrent claims
+/// cannot all fit.
+const PRESSURE_PROMPT_LEN: usize = 31;
+
+#[test]
+fn preempted_greedy_decode_matches_the_uninterrupted_oracle() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 13);
+    let max_new = 8usize;
+    let ev = Evaluator::new(&backend, PRESET, max_new).unwrap();
+    let device = ev.upload_state(&state).unwrap();
+
+    let mut total_preempts = 0u64;
+    // three prompt sets x (slots, kv_pages) schedules: different victim
+    // choices and resume interleavings, same per-request output
+    for salt in [21u64, 25, 29] {
+        let prompts: Vec<Vec<i32>> =
+            (0..3).map(|i| prompt(PRESSURE_PROMPT_LEN, salt + i)).collect();
+        let want = oracle_outputs(&ev, &device, &prompts);
+        let params = vec![SamplingParams::default(); prompts.len()];
+        for (slots, kv_pages) in [(2usize, 4usize), (2, 5), (3, 4)] {
+            let cfg = ServeConfig {
+                slots,
+                max_new_tokens: max_new,
+                kv_pages,
+                ..Default::default()
+            };
+            let (responses, stats, _) =
+                serve_steps(&backend, &state, cfg, &prompts, &params);
+            let got: Vec<Vec<i32>> = responses.iter().map(|r| r.tokens.clone()).collect();
+            assert_eq!(
+                got, want,
+                "salt {salt} slots {slots} kv_pages {kv_pages}: \
+                 preemption changed greedy output"
+            );
+            total_preempts += stats.n_preemptions;
+            let resumed: u32 = responses.iter().map(|r| r.n_preemptions).sum();
+            assert_eq!(resumed as u64, stats.n_preemptions, "per-request counts drift");
+        }
+        // the same prompts on an unconstrained pool never preempt
+        let cfg = ServeConfig { slots: 2, max_new_tokens: max_new, ..Default::default() };
+        let (_, stats, at) = serve_steps(&backend, &state, cfg, &prompts, &params);
+        assert_eq!(stats.n_preemptions, 0, "worst-case pool must never preempt");
+        assert!(at.is_none());
+    }
+    assert!(
+        total_preempts >= 1,
+        "no schedule forced a preemption — the pressure configs are miscalibrated"
+    );
+}
+
+#[test]
+fn preempted_sampled_decode_is_bit_identical_to_uninterrupted() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 13);
+    let max_new = 8usize;
+
+    let mut total_preempts = 0u64;
+    for salt in [33u64, 37, 41] {
+        let prompts: Vec<Vec<i32>> =
+            (0..3).map(|i| prompt(PRESSURE_PROMPT_LEN, salt + i)).collect();
+        let params: Vec<SamplingParams> = (0..3)
+            .map(|i| SamplingParams {
+                temperature: 0.9,
+                top_k: 12,
+                top_p: 0.95,
+                seed: 500 + salt + i as u64,
+                stop: Vec::new(),
+            })
+            .collect();
+        // uninterrupted baseline: worst-case pool, same slot count
+        let base_cfg = ServeConfig { slots: 2, max_new_tokens: max_new, ..Default::default() };
+        let (base, base_stats, _) = serve_steps(&backend, &state, base_cfg, &prompts, &params);
+        assert_eq!(base_stats.n_preemptions, 0);
+        let cfg = ServeConfig {
+            slots: 2,
+            max_new_tokens: max_new,
+            kv_pages: 4,
+            ..Default::default()
+        };
+        let (got, stats, _) = serve_steps(&backend, &state, cfg, &prompts, &params);
+        for pi in 0..prompts.len() {
+            assert_eq!(
+                got[pi].tokens, base[pi].tokens,
+                "salt {salt} request {pi}: a resume re-entered the sampling \
+                 stream at the wrong step"
+            );
+        }
+        total_preempts += stats.n_preemptions;
+    }
+    assert!(total_preempts >= 1, "no sampled schedule forced a preemption");
+}
+
+#[test]
+fn ttft_is_stamped_at_first_emission_never_at_resume() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 13);
+    let max_new = 8usize;
+
+    let mut checked = 0usize;
+    for salt in [21u64, 25, 29, 33] {
+        let prompts: Vec<Vec<i32>> =
+            (0..2).map(|i| prompt(PRESSURE_PROMPT_LEN, salt + i)).collect();
+        let params = vec![SamplingParams::default(); prompts.len()];
+        let cfg = ServeConfig {
+            slots: 2,
+            max_new_tokens: max_new,
+            kv_pages: 4,
+            ..Default::default()
+        };
+        let (responses, stats, first_preempt_s) =
+            serve_steps(&backend, &state, cfg, &prompts, &params);
+        if stats.n_preemptions == 0 {
+            continue;
+        }
+        let t_preempt = first_preempt_s.expect("stats counted a preemption");
+        for r in responses.iter().filter(|r| r.n_preemptions >= 1) {
+            // the victim emitted its first token before it was preempted;
+            // a requeue-time re-stamp would push first_token_s past the
+            // preemption instant
+            assert!(
+                r.first_token_s <= t_preempt,
+                "first_token_s was re-stamped on resume ({} > {t_preempt})",
+                r.first_token_s
+            );
+            assert!(r.ttft_s() >= 0.0 && r.first_token_s >= r.arrival_s);
+            assert!(
+                r.finish_s >= t_preempt,
+                "a preempted request can only finish after its preemption"
+            );
+            assert!(r.latency_s() >= r.ttft_s());
+            checked += 1;
+        }
+    }
+    assert!(checked >= 1, "no run preempted a request past its first token");
+}
+
+#[test]
+fn nan_logits_finish_requests_cleanly_instead_of_panicking() {
+    let backend = engine();
+    let preset = backend.manifest().preset(PRESET).unwrap().clone();
+    // poison every weight: the forward pass yields all-NaN logits
+    let mut state = ModelState::init(&preset.blocks, 3);
+    for f in &mut state.flats {
+        for x in f.iter_mut() {
+            *x = f32::NAN;
+        }
+    }
+    let mut srv = ServeEngine::new(
+        &backend,
+        PRESET,
+        &state,
+        ServeConfig { slots: 2, max_new_tokens: 6, ..Default::default() },
+    )
+    .unwrap();
+    // both the sampled sort path and the greedy argmax path see the NaNs
+    let sampled = srv.submit_sampled(
+        prompt(5, 1),
+        0,
+        0.0,
+        SamplingParams { temperature: 1.0, top_k: 4, ..Default::default() },
+    );
+    let greedy = srv.submit(prompt(7, 2), 0, 0.0);
+    let responses = srv.run_until_idle().unwrap();
+    assert_eq!(responses.len(), 2, "NaN rows must finish, not wedge the queue");
+    for r in &responses {
+        assert!(r.id == sampled || r.id == greedy);
+        assert!(!r.truncated, "NaN poisoning is an empty generation, not a rejection");
+        assert!(r.tokens.is_empty(), "an all-NaN row can emit nothing");
+        assert!(r.finish_s >= r.arrival_s);
+    }
 }
 
 #[test]

@@ -36,6 +36,20 @@ as a tag mismatch):
     arrival orders, never faults on pages (admission budget proof),
     stems prefill once, divergence pages fork (COW), refcounts balance
     after every step and drain to zero
+
+PR 7 (preempt-and-requeue, priorities, SLA-aware victim policy) adds:
+
+13. preemptive serving: priority-first admission and requeue keep ids,
+    arrivals and resume state; on an overcommitted pool the optimistic
+    budget + preemption backstop produce greedy AND seeded outputs
+    bit-identical to the uninterrupted oracle across forced-eviction
+    schedules x slot counts; the victim policy spares high-priority
+    requests; TTFT is stamped at the first emission only; worst-case
+    reservation never preempts while optimistic matches or beats its
+    decode utilization on the bench's bursty trace; refcounts balance
+    and pages drain to zero through evict->requeue->finish churn; the
+    budget identity reserved <= held + free + evictable holds at every
+    admission; random workloads always drain (forward progress)
 """
 import numpy as np
 
@@ -434,6 +448,7 @@ print("7 arena steady-state: ok (0 growth over 33 post-warm decode steps)")
 # PR 6: paged KV pool + prefix sharing + scheduler + seeded sampling
 # =======================================================================
 import math
+import struct
 
 M64 = (1 << 64) - 1
 
@@ -778,6 +793,13 @@ def rust_argmax(logits):
     return best
 
 
+def f32_total_key(x):
+    """f32::total_cmp's integer key (sign-magnitude to two's complement),
+    so the sort below orders -0.0 < +0.0 exactly like the Rust sort."""
+    b = struct.unpack("<i", struct.pack("<f", float(np.float32(x))))[0]
+    return b ^ 0x7FFFFFFF if b < 0 else b
+
+
 def sample_token_sim(logits, params, n_generated):
     """serve::sampling::sample_token (params: dict with temperature,
     top_k, top_p, seed, stop)."""
@@ -786,7 +808,7 @@ def sample_token_sim(logits, params, n_generated):
     cand = [(i, np.float32(l)) for i, l in enumerate(logits) if not math.isnan(l)]
     if not cand:
         return None
-    cand.sort(key=lambda t: (-float(t[1]), t[0]))
+    cand.sort(key=lambda t: (-f32_total_key(t[1]), t[0]))
     if params["top_k"] > 0 and len(cand) > params["top_k"]:
         cand = cand[: params["top_k"]]
     maxl = cand[0][1]
@@ -1299,5 +1321,459 @@ if len(w) >= 3:
     assert got == oracle_gen(base, 12, CAP12, stopp)
     assert len(got) < len(w), "matched stop run must trim the output"
 print("12c engine sim: sampled decode batch-invariant; stop sequences trim")
+
+
+# ---- 13: preemption, priorities, optimistic reservation ----------------
+class SchedulerSim13(SchedulerSim):
+    """PR 7 scheduler: priority tiers lead the candidate order; requeue
+    keeps the id, original arrival and resume state (generated tokens,
+    preemption count, first-token stamp)."""
+
+    def submit(self, prompt, max_new, arrival_s, params=None, priority=0):
+        rid = self.next_id
+        self.next_id += 1
+        self.requeue(dict(id=rid, prompt=list(prompt), max_new=max_new,
+                          arrival=arrival_s, params=params, priority=priority,
+                          generated=[], n_preemptions=0, first_token=None))
+        return rid
+
+    def requeue(self, req):
+        at = 0
+        for i in range(len(self.pending) - 1, -1, -1):
+            if self.pending[i]["arrival"] <= req["arrival"]:
+                at = i + 1
+                break
+        self.pending.insert(at, req)
+
+    def admit(self, now_s, free_slots, free_pages, page_need):
+        n_arrived = 0
+        for r in self.pending:
+            if r["arrival"] <= now_s:
+                n_arrived += 1
+            else:
+                break
+        if n_arrived == 0 or free_slots == 0:
+            return []
+        needs = [page_need(r) for r in self.pending[:n_arrived]]
+        order = sorted(
+            range(n_arrived),
+            key=lambda i: (-self.pending[i]["priority"], needs[i],
+                           self.pending[i]["arrival"], self.pending[i]["id"]),
+        )
+        head_id = self.pending[0]["id"]
+        starving = self.starved_id == head_id and self.head_skips >= self.STARVATION_ROUNDS
+        budget = free_pages
+        picked = []
+        for i in order:
+            if len(picked) >= free_slots:
+                break
+            if starving and not picked and i != 0:
+                if needs[0] > budget:
+                    break
+                continue
+            if needs[i] <= budget:
+                budget -= needs[i]
+                picked.append(i)
+        if 0 in picked:
+            self.starved_id = None
+            self.head_skips = 0
+        elif picked:
+            if self.starved_id == head_id:
+                self.head_skips += 1
+            else:
+                self.starved_id = head_id
+                self.head_skips = 1
+        out = [self.pending[i] for i in picked]
+        for i in sorted(picked, reverse=True):
+            del self.pending[i]
+        return out
+
+
+class EngineSim13(EngineSim):
+    """PR 7 engine: optimistic vs worst-case page reservation, a
+    ``kv_pages`` overcommit knob (floored at one full-context sequence),
+    the SLA-aware victim policy, preempt-and-requeue with bit-identical
+    resume, and TTFT stamped at the first emission only. The virtual
+    clock ticks once per step so stamp ordering is checkable.
+    Completions are ``(id, status, generated, meta)`` where meta carries
+    arrival/first_token/finish/n_preemptions."""
+
+    def __init__(self, slots, capacity, page_size=16, kv_pages=0,
+                 reservation="optimistic"):
+        super().__init__(slots, capacity, page_size)
+        if kv_pages:
+            npg = max(kv_pages, self.pool.pages_for(capacity))
+            self.pool.n_pages = npg
+            self.pool.rows = [[None] * self.pool.page_size for _ in range(npg)]
+            self.pool.refc = [0] * npg
+            self.pool.free_pages = list(range(npg))[::-1]
+        self.sched = SchedulerSim13()
+        self.reservation = reservation
+        self.stats.update(n_preemptions=0, preempted_tokens=0,
+                          decode_steps=0, decode_tokens=0)
+
+    def submit(self, prompt, max_new, arrival_s, params=None, priority=0):
+        return self.sched.submit(prompt, max_new, arrival_s, params, priority)
+
+    def page_budget(self):
+        held = reserved = 0
+        for a in self.active:
+            h = self.pool.pages_held(a["slot"])
+            held += h
+            if self.reservation == "worst":
+                reserved += max(0, a["worst"] - h)
+            else:
+                nxt = min(self.pool.lens[a["slot"]] + 1, self.pool.capacity)
+                reserved += max(0, self.pool.pages_for(nxt) - h)
+        free = self.pool.n_free_pages()
+        ev = self.cache.evictable(self.pool)
+        # the engine's debug_assert, hard here: what admission promises
+        # can never exceed what exists
+        assert reserved <= held + free + ev, (
+            "page-budget drift", reserved, held, free, ev)
+        return max(0, free + ev - reserved)
+
+    def exclusive_pages(self, slot):
+        return sum(1 for p in self.pool.tables[slot] if self.pool.refc[p] == 1)
+
+    def pick_victim(self):
+        if len(self.active) <= 1:
+            return None  # the pool floor fits the last survivor
+        return min(
+            range(len(self.active)),
+            key=lambda i: (self.active[i]["priority"],
+                           -self.exclusive_pages(self.active[i]["slot"]),
+                           self.pool.lens[self.active[i]["slot"]],
+                           -self.active[i]["id"]))
+
+    def preempt(self, idx):
+        a = self.active.pop(idx)
+        ln = self.pool.lens[a["slot"]]
+        if self.chunked and a["generated"]:
+            # cached rows = prompt + generated[:-1]: the last emitted
+            # token was not fed yet
+            run = a["prompt"] + a["generated"][:-1]
+            assert len(run) == ln, "cached rows must match the fed history"
+            self.cache.insert(run, list(self.pool.tables[a["slot"]]), self.pool)
+        self.pool.release(a["slot"])
+        self.stats["n_preemptions"] += 1
+        self.stats["preempted_tokens"] += ln
+        self.sched.requeue(dict(
+            id=a["id"], prompt=a["prompt"], max_new=a["max_new"],
+            arrival=a["arrival"], params=a["params"], priority=a["priority"],
+            generated=a["generated"], n_preemptions=a["n_preemptions"] + 1,
+            first_token=a["first_token"]))
+
+    def finish(self, a, done):
+        self.pool.release(a["slot"])
+        done.append((a["id"], "OK", a["generated"],
+                     dict(arrival=a["arrival"], first_token=a["first_token"],
+                          finish=self.now, n_preemptions=a["n_preemptions"])))
+
+    def step(self):
+        done = []
+        self.now += 1.0
+        cap, ps = self.pool.capacity, self.pool.page_size
+
+        def need(r):
+            if not r["prompt"] or len(r["prompt"]) > cap:
+                return 0
+            if self.reservation == "worst":
+                return -(-min(len(r["prompt"]) + r["max_new"], cap) // ps)
+            fed = len(r["prompt"]) + len(r["generated"])
+            return -(-min(fed + 1, cap) // ps)
+
+        while True:
+            budget = self.page_budget()
+            batch = self.sched.admit(self.now, self.pool.n_free(), budget, need)
+            if not batch:
+                break
+            for req in batch:
+                prompt, max_new = req["prompt"], req["max_new"]
+                if not prompt or len(prompt) > cap:
+                    done.append((req["id"], "REJECT", [],
+                                 dict(arrival=req["arrival"],
+                                      first_token=self.now, finish=self.now,
+                                      n_preemptions=req["n_preemptions"])))
+                    continue
+                worst = self.pool.pages_for(min(len(prompt) + max_new, cap))
+                slot = self.pool.alloc()
+                assert slot is not None, "admit() never exceeds free slots"
+                # rows to (re-)feed: the prompt plus, after a preemption,
+                # every token generated so far
+                run = prompt + req["generated"]
+                covered = 0
+                if self.chunked:
+                    chain = self.cache.lookup(run, ps)
+                    covered = min(len(chain) * ps, len(run) - 1)
+                    if covered > 0:
+                        self.pool.attach_shared(slot, chain[: -(-covered // ps)],
+                                                covered)
+                self.ensure_room_evicting(slot, len(run))
+                if covered > 0:
+                    self.make_row_writable_evicting(slot, covered)
+                self.pool.views_check([slot])
+                self.assert_rows(slot, run, covered)
+                for j in range(covered, len(run)):
+                    self.pool.write_row(slot, j, tag12(run[: j + 1]))
+                self.pool.set_len(slot, len(run))
+                self.stats["n_prefills"] += 1
+                self.stats["prefill_tokens"] += len(run) - covered
+                self.stats["prefix_hit_tokens"] += covered
+                if self.chunked:
+                    self.cache.insert(run, list(self.pool.tables[slot]), self.pool)
+                # first emission only: a resumed request keeps its stamp
+                g0 = len(req["generated"])
+                ft = req["first_token"] if req["first_token"] is not None else self.now
+                a = dict(id=req["id"], slot=slot, last=0,
+                         generated=list(req["generated"]), prompt=list(prompt),
+                         toks=list(run), max_new=max_new, params=req["params"],
+                         worst=worst, priority=req["priority"],
+                         n_preemptions=req["n_preemptions"],
+                         arrival=req["arrival"], first_token=ft)
+                emit, fin = greedy_step(self.sample(run, a["params"], g0), EOS_T,
+                                        self.pool.lens[slot], cap, g0, max_new)
+                if emit is not None:
+                    a["last"] = emit
+                if push_tok(a["generated"],
+                            a["params"]["stop"] if a["params"] else [], emit, fin):
+                    self.finish(a, done)
+                else:
+                    self.active.append(a)
+        if self.active:
+            # map next-row pages; when the free list runs dry even after
+            # eviction, the preemption backstop shrinks the active set and
+            # the mapping pass restarts over the survivors
+            while True:
+                preempted = False
+                for i in range(len(self.active)):
+                    s = self.active[i]["slot"]
+                    rows = min(self.pool.lens[s] + 1, cap)
+                    try:
+                        self.ensure_room_evicting(s, rows)
+                    except RuntimeError:
+                        v = self.pick_victim()
+                        assert v is not None, \
+                            "out of pages for the last active sequence"
+                        self.preempt(v)
+                        preempted = True
+                        break
+                if not preempted:
+                    break
+            self.pool.views_check([a["slot"] for a in self.active])
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += len(self.active)
+            still = []
+            for a in self.active:
+                slot = a["slot"]
+                ln = self.pool.lens[slot]
+                self.assert_rows(slot, a["toks"], ln)
+                a["toks"].append(a["last"])
+                self.pool.write_row(slot, ln, tag12(a["toks"]))
+                self.pool.advance(slot)
+                g = len(a["generated"])
+                emit, fin = greedy_step(self.sample(a["toks"], a["params"], g),
+                                        EOS_T, self.pool.lens[slot], cap, g,
+                                        a["max_new"])
+                if emit is not None:
+                    a["last"] = emit
+                if push_tok(a["generated"],
+                            a["params"]["stop"] if a["params"] else [], emit, fin):
+                    self.finish(a, done)
+                else:
+                    still.append(a)
+            self.active = still
+        self.pool.check_refcounts(self.cache)
+        assert self.pool.pages_in_use() <= self.pool.n_pages
+        return done
+
+
+def drain_and_check_leaks(eng, slots):
+    """After a drain: no active sequences, every slot free, and the only
+    in-use pages are the prefix cache's (one page per entry); clearing
+    the cache frees everything."""
+    assert not eng.active and eng.pool.n_free() == slots
+    assert eng.pool.pages_in_use() == len(eng.cache.entries), "page leak"
+    eng.cache.clear(eng.pool)
+    eng.pool.check_refcounts(eng.cache)
+    assert eng.pool.pages_in_use() == 0, "page leak after cache clear"
+
+
+# 13a: priority-first admission + requeue resume-state semantics
+s13 = SchedulerSim13()
+cheap_low = s13.submit([0] * 4, 4, 0.0)
+costly_high = s13.submit([0] * 40, 4, 0.0, priority=2)
+cheap_mid = s13.submit([0] * 4, 4, 0.0, priority=1)
+need13 = lambda r: -(-len(r["prompt"]) // 16)
+got = s13.admit(0.0, 3, 10 ** 9, need13)
+assert [r["id"] for r in got] == [costly_high, cheap_mid, cheap_low], \
+    "priority first, page demand only breaks ties within a tier"
+a13 = s13.submit([1], 8, 0.0)
+s13.submit([2], 8, 5.0)
+victim = s13.admit(10.0, 2, 10 ** 9, lambda r: 1)[0]
+assert victim["id"] == a13
+victim.update(generated=[7, 9], n_preemptions=1, first_token=0.5)
+s13.requeue(victim)
+s13.submit([3], 8, 7.0)
+got = s13.admit(10.0, 3, 10 ** 9, lambda r: 1)
+assert got[0]["id"] == a13, "the t=0 arrival resumes at the queue head"
+assert got[0]["generated"] == [7, 9] and got[0]["first_token"] == 0.5
+assert got[0]["n_preemptions"] == 1
+print("13a priority admission + requeue keeps id/arrival/resume state: ok")
+
+# 13b: forced preemption keeps greedy AND sampled output bit-identical to
+# the uninterrupted oracle; worst-case reservation never preempts; pages
+# and refcounts balance through the evict->requeue->finish churn
+P13 = 31
+
+
+def prompt13(salt):
+    # pairwise-distinct 31-token prompts sharing no prefix (tokens >= 3)
+    return [3 + ((j * 5 + salt * 11) % (VOC - 3)) for j in range(P13)]
+
+
+preq13 = [(prompt13(i), 8) for i in range(3)]
+pexp13 = {i: oracle_gen(p, mn, CAP12) for i, (p, mn) in enumerate(preq13)}
+preempt_totals = {}
+for slots, kvp in ((2, 4), (2, 5), (3, 4)):
+    eng = EngineSim13(slots, CAP12, PS12, kv_pages=kvp)
+    assert eng.pool.n_pages == kvp, "the overcommit knob was ignored"
+    idmap = {eng.submit(p, mn, 0.0): i for i, (p, mn) in enumerate(preq13)}
+    out = eng.run_until_idle()
+    assert len(out) == len(preq13), "dropped or duplicated requests"
+    meta_preempts = 0
+    for rid, status, gen, meta in out:
+        assert (status, gen) == ("OK", pexp13[idmap[rid]]), \
+            ("preempted run diverged from the oracle", slots, kvp, idmap[rid])
+        meta_preempts += meta["n_preemptions"]
+    assert meta_preempts == eng.stats["n_preemptions"], \
+        "per-request preemption counts must sum to the engine counter"
+    preempt_totals[(slots, kvp)] = eng.stats["n_preemptions"]
+    drain_and_check_leaks(eng, slots)
+assert sum(preempt_totals.values()) >= 1, \
+    ("no schedule exercised the backstop", preempt_totals)
+# the uncontended worst-case pool never preempts and matches too
+eng = EngineSim13(2, CAP12, PS12)
+idmap = {eng.submit(p, mn, 0.0): i for i, (p, mn) in enumerate(preq13)}
+for rid, status, gen, _ in eng.run_until_idle():
+    assert (status, gen) == ("OK", pexp13[idmap[rid]])
+assert eng.stats["n_preemptions"] == 0, "uncontended pool must not preempt"
+# worst-case reservation on the overcommitted pool: serializes, never
+# preempts, still bit-identical
+eng = EngineSim13(2, CAP12, PS12, kv_pages=4, reservation="worst")
+idmap = {eng.submit(p, mn, 0.0): i for i, (p, mn) in enumerate(preq13)}
+for rid, status, gen, _ in eng.run_until_idle():
+    assert (status, gen) == ("OK", pexp13[idmap[rid]])
+assert eng.stats["n_preemptions"] == 0, "worst-case reservation must not preempt"
+drain_and_check_leaks(eng, 2)
+# seeded sampling across a forced preemption: same per-step seed ^
+# splitmix(g) stream, so constrained == unconstrained bit-for-bit
+sp13 = dict(temperature=0.9, top_k=12, top_p=0.95, seed=0, stop=[])
+sreq13 = [(prompt13(i), 8, dict(sp13, seed=700 + i)) for i in range(3)]
+sexp13 = {i: oracle_gen(p, mn, CAP12, pr) for i, (p, mn, pr) in enumerate(sreq13)}
+eng = EngineSim13(2, CAP12, PS12, kv_pages=4)
+idmap = {eng.submit(p, mn, 0.0, pr): i for i, (p, mn, pr) in enumerate(sreq13)}
+sampled_preempts = 0
+for rid, status, gen, meta in eng.run_until_idle():
+    assert (status, gen) == ("OK", sexp13[idmap[rid]]), \
+        ("sampled resume diverged", idmap[rid])
+    sampled_preempts += meta["n_preemptions"]
+assert sampled_preempts == eng.stats["n_preemptions"]
+drain_and_check_leaks(eng, 2)
+n_exercised = sum(1 for v in preempt_totals.values() if v) + (1 if sampled_preempts else 0)
+assert n_exercised >= 1
+print(f"13b preempted greedy+sampled == oracle over 3 pool shapes "
+      f"({sum(preempt_totals.values())}+{sampled_preempts} preemptions); "
+      f"worst-case/uncontended: 0")
+
+# 13c: the victim policy spares the high tier; TTFT is stamped at the
+# first emission and never re-stamped across preemption/resume
+eng = EngineSim13(2, CAP12, PS12, kv_pages=4)
+hi_id = eng.submit(prompt13(0), 8, 0.0, priority=2)
+for i in (1, 2, 3):
+    eng.submit(prompt13(i), 8, 0.0)
+seen_first = {}
+out13c = []
+steps = 0
+while eng.active or eng.sched.next_arrival() is not None:
+    if not eng.active:
+        eng.now = max(eng.now, eng.sched.next_arrival())
+    out13c.extend(eng.step())
+    for a in eng.active:
+        if a["id"] in seen_first:
+            assert a["first_token"] == seen_first[a["id"]], \
+                "TTFT re-stamped across a preemption"
+        else:
+            seen_first[a["id"]] = a["first_token"]
+    steps += 1
+    assert steps < 5000, "no forward progress"
+assert len(out13c) == 4
+for rid, status, gen, meta in out13c:
+    assert status == "OK"
+    if rid in seen_first:
+        assert meta["first_token"] == seen_first[rid]
+    assert meta["arrival"] <= meta["first_token"] <= meta["finish"]
+    if rid == hi_id:
+        assert meta["n_preemptions"] == 0, \
+            "the high-priority request must never be the victim"
+assert eng.stats["n_preemptions"] >= 1, "the contended run must preempt"
+drain_and_check_leaks(eng, 2)
+print(f"13c victim policy spares the high tier; TTFT stamped once "
+      f"({eng.stats['n_preemptions']} preemptions)")
+
+# 13d: the bench's bursty gate — on a contended trace, optimistic
+# admission matches or beats worst-case decode occupancy
+def bursty13(reservation):
+    eng = EngineSim13(2, CAP12, PS12, kv_pages=4, reservation=reservation)
+    for i in range(8):
+        eng.submit(prompt13(i), 8, 0.0)
+    out = eng.run_until_idle()
+    assert len(out) == 8 and all(s == "OK" for _, s, _, _ in out)
+    drain_and_check_leaks(eng, 2)
+    return (eng.stats["decode_tokens"] / max(eng.stats["decode_steps"], 1),
+            eng.stats["n_preemptions"])
+
+
+wc_util, wc_pre = bursty13("worst")
+opt_util, opt_pre = bursty13("optimistic")
+assert wc_pre == 0, "worst-case reservation must never preempt"
+assert opt_util >= wc_util, (opt_util, wc_util)
+assert opt_pre >= 1, "the bursty trace must exercise the backstop"
+print(f"13d bursty occupancy: optimistic {opt_util:.2f} >= worst-case "
+      f"{wc_util:.2f} ({opt_pre} preemptions)")
+
+# 13e: forward-progress fuzz — random lengths, priorities and arrival
+# waves over an overcommitted pool always drain, exactly once each
+r13 = np.random.default_rng(777)
+fuzz_preempts = 0
+for _trial in range(4):
+    slots = 2 + int(r13.integers(0, 2))
+    kvp = 4 + int(r13.integers(0, 2))
+    eng = EngineSim13(slots, CAP12, PS12, kv_pages=kvp)
+    ids = set()
+
+    def wave(count, at):
+        for _ in range(count):
+            ln = 1 + int(r13.integers(0, 48))
+            p = [3 + int(t) for t in r13.integers(0, VOC - 3, size=ln)]
+            ids.add(eng.submit(p, 1 + int(r13.integers(0, 8)), at,
+                               priority=int(r13.integers(0, 4))))
+
+    wave(4 + int(r13.integers(0, 4)), 0.0)
+    out, steps = [], 0
+    while eng.active or eng.sched.next_arrival() is not None:
+        if not eng.active:
+            eng.now = max(eng.now, eng.sched.next_arrival())
+        out.extend(eng.step())
+        steps += 1
+        if steps == 2:
+            wave(2 + int(r13.integers(0, 3)), eng.now)
+        assert steps < 5000, "no forward progress"
+    got_ids = sorted(o[0] for o in out)
+    assert got_ids == sorted(ids), "dropped or duplicated requests"
+    fuzz_preempts += eng.stats["n_preemptions"]
+    drain_and_check_leaks(eng, slots)
+print(f"13e forward-progress fuzz: 4 random overcommitted workloads drained "
+      f"({fuzz_preempts} preemptions)")
 
 print("\nALL KV-SERVING VERIFICATION CHECKS PASSED")
