@@ -10,6 +10,13 @@
 //! ```bash
 //! cargo run --release --example e2e_train -- --steps 400 --method adagradselect
 //! ```
+//!
+//! `--metrics-out PATH` writes the trainer's metric registry (step
+//! counters, loss/lr and transfer gauges, the step-latency histogram) as
+//! a Prometheus-style exposition at `PATH` plus a JSON snapshot at
+//! `PATH.json`; `--trace-out PATH` records phase spans
+//! (decide/h2d/execute/norms/choose/optimizer/d2h) and writes a Chrome
+//! trace-event file for chrome://tracing or Perfetto.
 
 use std::path::PathBuf;
 
@@ -31,6 +38,8 @@ fn main() -> Result<()> {
     let method = args.str_or("method", "adagradselect");
     let eval_every = args.u64_or("eval-every", 100)?;
     let out = PathBuf::from(args.str_or("out", "results"));
+    let metrics_out = args.str_opt("metrics-out");
+    let trace_out = args.str_opt("trace-out");
     args.finish()?;
     std::fs::create_dir_all(&out).ok();
 
@@ -58,6 +67,9 @@ fn main() -> Result<()> {
     );
 
     let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    if trace_out.is_some() {
+        trainer.telemetry().enable_tracing(1 << 16);
+    }
     let ev = Evaluator::new(&engine, &preset, 32)?;
     let gsm_eval = MathGen::new(Suite::Gsm8kSim, Split::Eval, 0).problems(0, 64);
 
@@ -99,6 +111,17 @@ fn main() -> Result<()> {
             res.n,
             res.format_rate * 100.0
         );
+    }
+    if let Some(path) = &metrics_out {
+        use adagradselect::telemetry::{write_prometheus, write_snapshot_json};
+        let reg = &trainer.telemetry().registry;
+        write_prometheus(path, reg)?;
+        write_snapshot_json(format!("{path}.json"), reg)?;
+        println!("metrics -> {path} (exposition) and {path}.json (snapshot)");
+    }
+    if let Some(path) = &trace_out {
+        adagradselect::telemetry::write_chrome_trace(path, &trainer.telemetry().tracer)?;
+        println!("trace -> {path} (chrome://tracing / ui.perfetto.dev)");
     }
     state.save(out.join("e2e_final.ckpt"))?;
     println!(

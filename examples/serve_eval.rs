@@ -31,6 +31,18 @@
 //! ```bash
 //! cargo run --release --example serve_eval -- --requests 32 --kv-pages 12 --priority-mix 2,0,0,0
 //! ```
+//!
+//! `--metrics-out PATH` writes the engine's metric registry as a
+//! Prometheus-style text exposition at `PATH` and a JSON snapshot at
+//! `PATH.json` (and cross-checks the histogram percentiles against this
+//! report's hand-sorted figures). `--trace-out PATH` enables span
+//! tracing for the run and writes a Chrome trace-event file — open it in
+//! chrome://tracing or <https://ui.perfetto.dev>:
+//!
+//! ```bash
+//! cargo run --release --example serve_eval -- --requests 64 --rate 8 \
+//!     --metrics-out results/serve.prom --trace-out results/serve_trace.json
+//! ```
 
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::data::{extract_answer, MathGen, Split, Suite};
@@ -68,6 +80,8 @@ fn main() -> Result<()> {
     let sample_seed = args.u64_or("sample-seed", 0)?;
     let kv_pages = args.usize_or("kv-pages", 0)?; // 0 = worst-case pool
     let priority_mix = args.str_opt("priority-mix");
+    let metrics_out = args.str_opt("metrics-out");
+    let trace_out = args.str_opt("trace-out");
     let compare_oracle = args.bool_flag("oracle");
     args.finish()?;
     let sampled = temperature > 0.0;
@@ -116,6 +130,9 @@ fn main() -> Result<()> {
         &state,
         ServeConfig { slots, max_new_tokens: max_new, kv_pages, ..Default::default() },
     )?;
+    if trace_out.is_some() {
+        srv.telemetry().enable_tracing(1 << 16);
+    }
     let mut rng = Rng::seed_from_u64(seed);
     let mut arrival = 0.0f64;
     let mut ids = Vec::with_capacity(requests);
@@ -191,6 +208,19 @@ fn main() -> Result<()> {
             stats.peak_active
         );
     }
+    let reg = &srv.telemetry().registry;
+    if let Some(itl) = reg.hist_by_name("serve_itl_seconds") {
+        if reg.hist_count(itl) > 0 {
+            println!(
+                "itl:             p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms ({} samples, \
+                 streaming histogram)",
+                reg.hist_quantile(itl, 0.5) * 1e3,
+                reg.hist_quantile(itl, 0.95) * 1e3,
+                reg.hist_quantile(itl, 0.99) * 1e3,
+                reg.hist_count(itl),
+            );
+        }
+    }
     println!(
         "prefill:         {:.2} ms/prompt ({} prompts, {} tokens)",
         stats.prefill_s / stats.n_prefills.max(1) as f64 * 1e3,
@@ -232,6 +262,54 @@ fn main() -> Result<()> {
         );
     }
     println!("exact match:     {correct}/{requests}");
+
+    if let Some(path) = &metrics_out {
+        use adagradselect::telemetry::{write_prometheus, write_snapshot_json};
+        write_prometheus(path, reg)?;
+        let snap_path = format!("{path}.json");
+        write_snapshot_json(&snap_path, reg)?;
+        // the streaming histograms must reproduce the hand-sorted
+        // percentiles above to within one log bucket (both pick rank
+        // floor((n-1)·q); the histogram answers with the bucket midpoint)
+        let bucket_frac = 2f64.powf(1.0 / 8.0) - 1.0;
+        for (name, sorted) in
+            [("serve_ttft_seconds", &ttft), ("serve_latency_seconds", &latency)]
+        {
+            let id = reg
+                .hist_by_name(name)
+                .ok_or_else(|| anyhow!("metric {name} not registered"))?;
+            if reg.hist_count(id) != sorted.len() as u64 {
+                return Err(anyhow!(
+                    "{name}: {} histogram samples vs {} hand-collected",
+                    reg.hist_count(id),
+                    sorted.len()
+                ));
+            }
+            for q in [0.5, 0.95] {
+                let h = reg.hist_quantile(id, q);
+                let e = pct(sorted, q);
+                if (h - e).abs() > e * bucket_frac + 1e-9 {
+                    return Err(anyhow!(
+                        "{name} p{:.0}: histogram {h:.6}s vs sorted {e:.6}s \
+                         (outside one bucket width)",
+                        q * 100.0
+                    ));
+                }
+            }
+        }
+        println!("metrics:         wrote {path} (exposition) and {snap_path} (snapshot); \
+                  percentiles agree with the sorted figures above");
+    }
+    if let Some(path) = &trace_out {
+        let tracer = &srv.telemetry().tracer;
+        adagradselect::telemetry::write_chrome_trace(path, tracer)?;
+        println!(
+            "trace:           wrote {path} ({} spans, {} overwritten) — open in \
+             chrome://tracing or ui.perfetto.dev",
+            tracer.n_events(),
+            tracer.dropped(),
+        );
+    }
 
     if compare_oracle {
         // the retained full-reforward loop on the same problems, one

@@ -22,7 +22,15 @@
 //!   once yet keep mean decode batch occupancy at or above the
 //!   worst-case baseline (`preempt/bursty_utilization_vs_worst_case`),
 //!   while the uncontended churn trace must never preempt
-//!   (`churn/zero_preemptions_uncontended`).
+//!   (`churn/zero_preemptions_uncontended`);
+//! * **telemetry overhead**: the churn trace replayed with the metric
+//!   registry + span tracer fully on vs disabled — invariant
+//!   `telemetry/overhead_ratio` (value = off/on wall, best of 3, min
+//!   0.95 ⇒ at most ~5% instrumentation overhead) plus
+//!   `telemetry/steady_state_zero_allocs` (the telemetry allocation
+//!   fingerprint is unchanged across 10 instrumented decode steps).
+//!   A sample span trace of the probe run is written to `trace.json`
+//!   (override with `AGSEL_BENCH_TRACE_JSON`) for chrome://tracing.
 //!
 //! Writes `BENCH_serve.json` (override with `AGSEL_BENCH_SERVE_JSON`);
 //! CI uploads it next to `BENCH_decode.json` and gates it through
@@ -85,12 +93,15 @@ fn bursty(
 }
 
 /// Run `n` requests through a fresh engine; returns (wall seconds,
-/// generated tokens, stats).
+/// generated tokens, stats). `telemetry` false disables the metric
+/// registry; true keeps it on **and** enables span tracing, so the two
+/// settings bracket the full instrumentation cost.
 fn churn(
     backend: &ReferenceBackend,
     state: &ModelState,
     n: u64,
     params: Option<&SamplingParams>,
+    telemetry: bool,
 ) -> (f64, usize, ServeStats) {
     let mut srv = ServeEngine::new(
         backend,
@@ -99,6 +110,11 @@ fn churn(
         ServeConfig { slots: 4, max_new_tokens: 8, ..Default::default() },
     )
     .unwrap();
+    if telemetry {
+        srv.telemetry().enable_tracing(8192);
+    } else {
+        srv.telemetry().set_enabled(false);
+    }
     for i in 0..n {
         let p = prompt(10, 100 + i);
         match params {
@@ -135,9 +151,9 @@ fn main() {
 
     // --- churn: full engine loop, greedy vs sampled -------------------
     let n_req = if quick { 16 } else { 24 };
-    let (greedy_s, greedy_toks, stats) = churn(&engine, &state, n_req, None);
+    let (greedy_s, greedy_toks, stats) = churn(&engine, &state, n_req, None, true);
     let sp = SamplingParams { temperature: 0.9, top_k: 16, top_p: 0.95, ..Default::default() };
-    let (sampled_s, sampled_toks, sampled_stats) = churn(&engine, &state, n_req, Some(&sp));
+    let (sampled_s, sampled_toks, sampled_stats) = churn(&engine, &state, n_req, Some(&sp), true);
     let sampling_overhead = sampled_s / greedy_s;
     let slot_model_bytes = stats.kv_bytes; // slots × seq_len provisioning
     let paged_peak_bytes = stats.kv_peak_bytes.max(1);
@@ -254,6 +270,60 @@ fn main() {
         ("min", Value::num(1.0)),
     ]));
 
+    // --- telemetry: instrumentation overhead + zero-allocation probe --
+    let reps = if quick { 2 } else { 3 };
+    let (mut on_best, mut off_best) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..reps {
+        on_best = on_best.min(churn(&engine, &state, n_req, None, true).0);
+        off_best = off_best.min(churn(&engine, &state, n_req, None, false).0);
+    }
+    let tel_ratio = off_best / on_best.max(1e-12);
+    println!(
+        "    -> telemetry: churn {:.1} ms instrumented vs {:.1} ms off (off/on {tel_ratio:.3})",
+        on_best * 1e3,
+        off_best * 1e3,
+    );
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("telemetry/overhead_ratio")),
+        ("value", Value::num(tel_ratio)),
+        ("min", Value::num(0.95)),
+    ]));
+    // instrumented steady-state decode must not grow any telemetry
+    // allocation: counters/gauges are cells, histogram buckets and the
+    // span ring are preallocated — the combined fingerprint is identity-
+    // based, so any reallocation flips it
+    let mut srv = ServeEngine::new(
+        &engine,
+        PRESET,
+        &state,
+        ServeConfig { slots: 1, max_new_tokens: 64, ..Default::default() },
+    )
+    .unwrap();
+    srv.telemetry().enable_tracing(4096);
+    srv.submit(prompt(8, 77), 0, 0.0);
+    for _ in 0..4 {
+        srv.step().unwrap(); // admission + prefill + warm decode steps
+    }
+    let fp0 = srv.telemetry().fingerprint();
+    for _ in 0..10 {
+        srv.step().unwrap();
+    }
+    let tel_no_alloc = if srv.telemetry().fingerprint() == fp0 { 1.0 } else { 0.0 };
+    println!(
+        "    -> telemetry: allocation fingerprint {} across 10 instrumented decode steps",
+        if tel_no_alloc == 1.0 { "stable" } else { "CHANGED" },
+    );
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("telemetry/steady_state_zero_allocs")),
+        ("value", Value::num(tel_no_alloc)),
+        ("min", Value::num(1.0)),
+    ]));
+    let trace_path =
+        std::env::var("AGSEL_BENCH_TRACE_JSON").unwrap_or_else(|_| "trace.json".to_string());
+    adagradselect::telemetry::write_chrome_trace(&trace_path, &srv.telemetry().tracer)
+        .expect("write sample trace");
+    println!("    -> telemetry: sample span trace at {trace_path}");
+
     // --- sampling micro-latency: argmax vs full top-k/top-p draw ------
     let logits: Vec<f32> =
         (0..preset.model.vocab).map(|i| ((i * 37 % 101) as f32) / 7.0 - 5.0).collect();
@@ -285,6 +355,8 @@ fn main() {
         ("bursty_util_worst_case", Value::num(wc_util)),
         ("bursty_preemptions", Value::num(opt_stats.n_preemptions as f64)),
         ("bursty_preempted_tokens", Value::num(opt_stats.preempted_tokens as f64)),
+        ("telemetry_on_wall_s", Value::num(on_best)),
+        ("telemetry_off_wall_s", Value::num(off_best)),
     ])];
 
     let summary = Value::obj(vec![

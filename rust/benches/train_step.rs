@@ -18,7 +18,12 @@
 //!   batch + mask upload, zero steady-state device-buffer allocations and
 //!   zero arena growth;
 //! * decode-step latency (the serving path);
-//! * a steady-state allocation probe over the backend's workspace arena.
+//! * a steady-state allocation probe over the backend's workspace arena;
+//! * telemetry cost: fixed-selection trainer steps with the metric
+//!   registry + span tracer fully on vs disabled — invariant
+//!   `telemetry/overhead_ratio` (value = off/on wall, best of 3, min
+//!   0.95) — and `telemetry/steady_state_zero_allocs` (the telemetry
+//!   allocation fingerprint is unchanged across 10 instrumented steps).
 //!
 //! Besides the human-readable rows, the run writes a machine-readable
 //! summary to `BENCH_train_step.json` (override with
@@ -391,6 +396,79 @@ fn main() {
             t.fused_steps() == t.metrics.records.len() as u64 && t.norm_reduced_blocks() == 0,
         ));
         results.push(r);
+    }
+
+    // --- telemetry: trainer-step overhead + zero-allocation probe ---
+    // Fixed selection keeps every step identical, so the on/off pair
+    // differ only in instrumentation; best-of-3 windows reject scheduler
+    // noise.
+    {
+        let engine4 = ReferenceBackend::new();
+        let p = engine4.manifest().preset(heavy).unwrap().clone();
+        let n = p.blocks.len();
+        let make_cfg = || {
+            let mut cfg = RunConfig::preset_defaults(heavy);
+            cfg.method = Method::Fixed { blocks: vec![n - 2, n - 1] };
+            cfg.train.steps = u64::MAX;
+            cfg.train.log_every = 0;
+            cfg.train.grad_clip = None;
+            cfg
+        };
+        let window = if quick { 4 } else { 8 };
+        let run = |telemetry: bool| -> f64 {
+            let mut t = Trainer::new(&engine4, make_cfg()).unwrap();
+            if telemetry {
+                t.telemetry().enable_tracing(8192);
+            } else {
+                t.telemetry().set_enabled(false);
+            }
+            for _ in 0..2 {
+                t.step_once().unwrap(); // warm: device sync + buffer pool
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                for _ in 0..window {
+                    t.step_once().unwrap();
+                }
+                best = best.min(t0.elapsed().as_secs_f64() / window as f64);
+            }
+            best
+        };
+        let on_s = run(true);
+        let off_s = run(false);
+        let tel_ratio = off_s / on_s.max(1e-12);
+        println!(
+            "\n-- telemetry: {:.2} ms/step instrumented vs {:.2} ms off (off/on {tel_ratio:.3}) --",
+            on_s * 1e3,
+            off_s * 1e3,
+        );
+        invariants.push(Value::obj(vec![
+            ("name", Value::str("telemetry/overhead_ratio")),
+            ("value", Value::num(tel_ratio)),
+            ("min", Value::num(0.95)),
+        ]));
+        // instrumented steady-state steps must not grow any telemetry
+        // allocation (cells, preallocated buckets, preallocated ring)
+        let mut t = Trainer::new(&engine4, make_cfg()).unwrap();
+        t.telemetry().enable_tracing(4096);
+        for _ in 0..2 {
+            t.step_once().unwrap();
+        }
+        let fp0 = t.telemetry().fingerprint();
+        for _ in 0..10 {
+            t.step_once().unwrap();
+        }
+        let tel_no_alloc = if t.telemetry().fingerprint() == fp0 { 1.0 } else { 0.0 };
+        println!(
+            "-- telemetry: allocation fingerprint {} across 10 instrumented steps --",
+            if tel_no_alloc == 1.0 { "stable" } else { "CHANGED" },
+        );
+        invariants.push(Value::obj(vec![
+            ("name", Value::str("telemetry/steady_state_zero_allocs")),
+            ("value", Value::num(tel_no_alloc)),
+            ("min", Value::num(1.0)),
+        ]));
     }
 
     // --- full coordinator step per method (the Fig. 1 comparison) ---

@@ -139,6 +139,29 @@ pub struct TransferStats {
 }
 
 impl TransferStats {
+    /// Field names in [`TransferStats::gauge_values`] order, for
+    /// registering one telemetry gauge per counter.
+    pub const GAUGE_NAMES: [&'static str; 6] = [
+        "h2d_bytes",
+        "d2h_bytes",
+        "h2d_transfers",
+        "d2h_transfers",
+        "buffer_allocs",
+        "buffer_alloc_bytes",
+    ];
+
+    /// The counters as `f64` gauge values, in [`TransferStats::GAUGE_NAMES`] order.
+    pub fn gauge_values(&self) -> [f64; 6] {
+        [
+            self.h2d_bytes as f64,
+            self.d2h_bytes as f64,
+            self.h2d_transfers as f64,
+            self.d2h_transfers as f64,
+            self.buffer_allocs as f64,
+            self.buffer_alloc_bytes as f64,
+        ]
+    }
+
     /// Counter-wise difference `self - earlier` (both from the same
     /// backend, `earlier` snapshotted first).
     pub fn delta_since(&self, earlier: &TransferStats) -> TransferStats {

@@ -66,18 +66,25 @@
 //! fast-forwards instead of sleeping, so open-loop (Poisson) arrival
 //! traces replay at full speed while latency accounting stays faithful.
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::model::ModelState;
 use crate::runtime::Preset;
+use crate::telemetry::{CounterId, GaugeId, HistId, SpanId, Telemetry};
 
 use super::kv::KvPool;
 use super::prefix::PrefixCache;
 use super::sampling::{sample_token, stop_len, SamplingParams};
 use super::scheduler::{Request, Scheduler};
 use super::{greedy_step, KvBackend};
+
+/// Preemption counters are labeled by priority tier; tiers at or above
+/// this land in the last (`"7+"`) bucket so the label set — and thus the
+/// registry — stays fixed at construction.
+const N_PRIORITY_TIERS: usize = 8;
 
 /// How admission accounts for pages not yet written.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -198,12 +205,103 @@ struct ActiveSeq {
     max_new: usize,
     arrival_s: f64,
     first_token_s: f64,
+    /// Engine-clock time of the latest emission, for the inter-token
+    /// latency histogram (reset on resume, so ITL stays a pure decode-
+    /// cadence metric and requeue waits show up in queue-wait instead).
+    last_emit_s: f64,
     params: SamplingParams,
     /// Pages this sequence may ever need (worst-case admission reserves
     /// them; optimistic admission only consults them for diagnostics).
     worst_pages: usize,
     priority: u8,
     n_preemptions: u32,
+}
+
+/// Registered metric/span handles for the serve engine (all ids, cheap
+/// to copy; the values live in the engine's [`Telemetry`] registry).
+#[derive(Clone, Copy)]
+struct ServeMetrics {
+    admissions: CounterId,
+    rejected: CounterId,
+    requeues: CounterId,
+    finished: CounterId,
+    preemptions_by_tier: [CounterId; N_PRIORITY_TIERS],
+    preempted_tokens: CounterId,
+    prefills: CounterId,
+    prefill_tokens: CounterId,
+    decode_steps: CounterId,
+    decode_tokens: CounterId,
+    prefix_hit_tokens: CounterId,
+    prefix_miss_tokens: CounterId,
+    pages_allocated: CounterId,
+    cow_copies: CounterId,
+    prefix_evictions: CounterId,
+    active: GaugeId,
+    pending: GaugeId,
+    free_pages: GaugeId,
+    kv_bytes_in_use: GaugeId,
+    ttft: HistId,
+    itl: HistId,
+    queue_wait: HistId,
+    latency: HistId,
+    sp_step: SpanId,
+    sp_admission: SpanId,
+    sp_prefill: SpanId,
+    sp_decode: SpanId,
+}
+
+impl ServeMetrics {
+    fn register(tel: &mut Telemetry) -> Self {
+        let r = &mut tel.registry;
+        let admissions = r.counter("serve_admissions_total");
+        let rejected = r.counter("serve_rejected_total");
+        let requeues = r.counter("serve_requeues_total");
+        let finished = r.counter("serve_finished_total");
+        let preemptions_by_tier = std::array::from_fn(|i| {
+            let label =
+                if i == N_PRIORITY_TIERS - 1 { format!("{i}+") } else { i.to_string() };
+            r.counter_with("serve_preemptions_total", &[("tier", &label)])
+        });
+        Self {
+            admissions,
+            rejected,
+            requeues,
+            finished,
+            preemptions_by_tier,
+            preempted_tokens: r.counter("serve_preempted_tokens_total"),
+            prefills: r.counter("serve_prefills_total"),
+            prefill_tokens: r.counter("serve_prefill_tokens_total"),
+            decode_steps: r.counter("serve_decode_steps_total"),
+            decode_tokens: r.counter("serve_decode_tokens_total"),
+            prefix_hit_tokens: r.counter("serve_prefix_hit_tokens_total"),
+            prefix_miss_tokens: r.counter("serve_prefix_miss_tokens_total"),
+            pages_allocated: r.counter("serve_kv_pages_allocated_total"),
+            cow_copies: r.counter("serve_kv_cow_copies_total"),
+            prefix_evictions: r.counter("serve_prefix_evictions_total"),
+            active: r.gauge("serve_active_sequences"),
+            pending: r.gauge("serve_pending_requests"),
+            free_pages: r.gauge("serve_kv_free_pages"),
+            kv_bytes_in_use: r.gauge("serve_kv_bytes_in_use"),
+            ttft: r.histogram("serve_ttft_seconds"),
+            itl: r.histogram("serve_itl_seconds"),
+            queue_wait: r.histogram("serve_queue_wait_seconds"),
+            latency: r.histogram("serve_latency_seconds"),
+            sp_step: tel.tracer.register("serve/step"),
+            sp_admission: tel.tracer.register("serve/admission"),
+            sp_prefill: tel.tracer.register("serve/prefill"),
+            sp_decode: tel.tracer.register("serve/decode_step"),
+        }
+    }
+}
+
+/// Pool/cache-internal monotone counters already mirrored into the
+/// registry — [`ServeEngine::sync_registry`] adds only the per-step
+/// delta so registry counters stay monotone too.
+#[derive(Debug, Clone, Copy, Default)]
+struct SyncedPoolCounters {
+    pages_allocated: u64,
+    cow_copies: u64,
+    prefix_evictions: u64,
 }
 
 /// KV-cached continuous-batching engine over any [`KvBackend`].
@@ -221,6 +319,11 @@ pub struct ServeEngine<'e, B: KvBackend> {
     t0: Instant,
     skip_s: f64,
     stats: ServeStats,
+    /// Shared so RAII span guards can borrow the hub while `&mut self`
+    /// methods (preemption, pool mutation) run inside the span.
+    tel: Rc<Telemetry>,
+    m: ServeMetrics,
+    synced: SyncedPoolCounters,
 }
 
 impl<'e, B: KvBackend> ServeEngine<'e, B> {
@@ -254,6 +357,8 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             )
         };
         let kv_bytes = pool.capacity_bytes();
+        let mut tel = Telemetry::new();
+        let m = ServeMetrics::register(&mut tel);
         Ok(Self {
             backend,
             preset,
@@ -268,7 +373,19 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             t0: Instant::now(),
             skip_s: 0.0,
             stats: ServeStats { kv_bytes, ..Default::default() },
+            tel: Rc::new(tel),
+            m,
+            synced: SyncedPoolCounters::default(),
         })
+    }
+
+    /// The engine's observability hub: metric registry (recording by
+    /// default) plus span tracer (enable via
+    /// [`Telemetry::enable_tracing`]). Telemetry never changes tokens,
+    /// clocks fed to sampling, or transfer behavior — instrumented and
+    /// uninstrumented runs are bit-identical.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
     }
 
     /// Engine-clock seconds since construction: wallclock plus any idle
@@ -448,6 +565,10 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         self.pool.release(a.slot);
         self.stats.n_preemptions += 1;
         self.stats.preempted_tokens += len;
+        let tier = (a.priority as usize).min(N_PRIORITY_TIERS - 1);
+        self.tel.registry.inc(self.m.preemptions_by_tier[tier]);
+        self.tel.registry.add(self.m.preempted_tokens, len as u64);
+        self.tel.registry.inc(self.m.requeues);
         self.sched.requeue(Request {
             id: a.id,
             prompt: a.prompt,
@@ -459,6 +580,29 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             n_preemptions: a.n_preemptions + 1,
             first_token_s: Some(a.first_token_s),
         });
+    }
+
+    /// Mirror pool/cache-internal monotone counters into the registry
+    /// (as deltas, so the registry stays monotone) and refresh the
+    /// occupancy gauges. Runs once per [`ServeEngine::step`] — cold
+    /// path, no allocation.
+    fn sync_registry(&mut self) {
+        let tel = Rc::clone(&self.tel);
+        let m = self.m;
+        let pa = self.pool.pages_allocated();
+        tel.registry.add(m.pages_allocated, pa - self.synced.pages_allocated);
+        self.synced.pages_allocated = pa;
+        let cow = self.pool.cow_copies();
+        tel.registry.add(m.cow_copies, cow - self.synced.cow_copies);
+        self.synced.cow_copies = cow;
+        let ev = self.cache.evictions();
+        tel.registry.add(m.prefix_evictions, ev - self.synced.prefix_evictions);
+        self.synced.prefix_evictions = ev;
+        tel.registry.set(m.active, self.active.len() as f64);
+        tel.registry.set(m.pending, self.sched.n_pending() as f64);
+        tel.registry.set(m.free_pages, self.pool.n_free_pages() as f64);
+        let in_use = self.pool.pages_in_use() * self.pool.page_bytes();
+        tel.registry.set(m.kv_bytes_in_use, in_use as f64);
     }
 
     /// `KvPool::ensure_room`, evicting prefix-cache entries to cover a
@@ -500,6 +644,9 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
     /// One mixed prefill+decode iteration; returns the requests that
     /// finished during it.
     pub fn step(&mut self) -> Result<Vec<Response>> {
+        let tel = Rc::clone(&self.tel);
+        let m = self.m;
+        let _sp_step = tel.tracer.span(m.sp_step);
         let mut done = Vec::new();
 
         // --- admission: fill freed slots with arrived prompts that fit
@@ -530,6 +677,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 }
             }
         };
+        let sp_admission = tel.tracer.span(m.sp_admission);
         loop {
             let budget = self.page_budget();
             let batch = self.sched.admit(now, self.pool.n_free(), budget, &need);
@@ -549,6 +697,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     first_token_s,
                 } = req;
                 if prompt.is_empty() || prompt.len() > self.pool.capacity() {
+                    tel.registry.inc(m.rejected);
                     done.push(Response {
                         id,
                         tokens: Vec::new(),
@@ -560,6 +709,11 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                         n_preemptions,
                     });
                     continue;
+                }
+                let fresh = first_token_s.is_none();
+                tel.registry.inc(m.admissions);
+                if fresh {
+                    tel.registry.observe(m.queue_wait, (now - arrival_s).max(0.0));
                 }
                 let worst_pages = self.worst_pages_for(prompt.len(), max_new);
                 let slot = self.pool.alloc().expect("admit() never exceeds free slots");
@@ -590,6 +744,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
 
                 let t_pre = Instant::now();
                 let logits = {
+                    let _sp = tel.tracer.span(m.sp_prefill).arg((run.len() - covered) as f64);
                     let mut views = self.pool.views(&[slot])?;
                     let suffix = &run[covered..];
                     self.backend.kv_prefill(&self.preset, &self.blocks, suffix, &mut views[0])?
@@ -599,6 +754,10 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 self.stats.n_prefills += 1;
                 self.stats.prefill_tokens += run.len() - covered;
                 self.stats.prefix_hit_tokens += covered;
+                tel.registry.inc(m.prefills);
+                tel.registry.add(m.prefill_tokens, (run.len() - covered) as u64);
+                tel.registry.add(m.prefix_hit_tokens, covered as u64);
+                tel.registry.add(m.prefix_miss_tokens, (run.len() - covered) as u64);
                 if chunked {
                     let table = self.pool.table(slot).to_vec();
                     self.cache.insert(&run, &table, &mut self.pool);
@@ -607,6 +766,9 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 // first emission only: a resumed request keeps the stamp
                 // from before its preemption
                 let stamp = self.now_s();
+                if fresh {
+                    tel.registry.observe(m.ttft, (stamp - arrival_s).max(0.0));
+                }
                 let g0 = generated.len();
                 let mut a = ActiveSeq {
                     id,
@@ -618,6 +780,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     max_new,
                     arrival_s,
                     first_token_s: first_token_s.unwrap_or(stamp),
+                    last_emit_s: stamp,
                     params,
                     worst_pages,
                     priority,
@@ -633,6 +796,8 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 );
                 if Self::push_token(&mut a, emit, finished) {
                     let finish_s = self.now_s();
+                    tel.registry.inc(m.finished);
+                    tel.registry.observe(m.latency, (finish_s - a.arrival_s).max(0.0));
                     self.pool.release(slot);
                     done.push(Self::response(a, finish_s));
                 } else {
@@ -640,9 +805,11 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 }
             }
         }
+        drop(sp_admission);
 
         // --- one batched decode iteration over every active sequence ---
         if !self.active.is_empty() {
+            let mut sp_decode = tel.tracer.span(m.sp_decode);
             let t_dec = Instant::now();
             // map next-row pages up front (evicting prefix entries if the
             // free list is dry) so the views build cannot fault mid-batch.
@@ -667,6 +834,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 }
                 break;
             }
+            sp_decode.set_arg(self.active.len() as f64);
             let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
             let tokens: Vec<i32> = self.active.iter().map(|a| a.last).collect();
             let logits = {
@@ -676,6 +844,8 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             self.stats.decode_s += t_dec.elapsed().as_secs_f64();
             self.stats.decode_steps += 1;
             self.stats.decode_tokens += self.active.len();
+            tel.registry.inc(m.decode_steps);
+            tel.registry.add(m.decode_tokens, self.active.len() as u64);
 
             let vocab = self.preset.model.vocab;
             let now = self.now_s();
@@ -694,7 +864,13 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     a.generated.len(),
                     a.max_new,
                 );
+                if emit.is_some() {
+                    tel.registry.observe(m.itl, (now - a.last_emit_s).max(0.0));
+                    a.last_emit_s = now;
+                }
                 if Self::push_token(&mut a, emit, finished) {
+                    tel.registry.inc(m.finished);
+                    tel.registry.observe(m.latency, (now - a.arrival_s).max(0.0));
                     self.pool.release(a.slot);
                     done.push(Self::response(a, now));
                 } else {
@@ -703,6 +879,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             }
             self.active = still;
         }
+        self.sync_registry();
         Ok(done)
     }
 

@@ -65,6 +65,7 @@ pub struct KvPool {
     peak_in_use: usize,
     peak_pages: usize,
     pages_allocated: u64,
+    pages_released: u64,
     cow_copies: u64,
 }
 
@@ -116,6 +117,7 @@ impl KvPool {
             peak_in_use: 0,
             peak_pages: 0,
             pages_allocated: 0,
+            pages_released: 0,
             cow_copies: 0,
         }
     }
@@ -170,6 +172,12 @@ impl KvPool {
     /// step that stays inside its last page claims none).
     pub fn pages_allocated(&self) -> u64 {
         self.pages_allocated
+    }
+
+    /// Pages returned to the free list since creation (monotonic;
+    /// `pages_allocated - pages_released == pages_in_use` at any time).
+    pub fn pages_released(&self) -> u64 {
+        self.pages_released
     }
 
     /// Copy-on-write page copies since creation.
@@ -310,6 +318,7 @@ impl KvPool {
         debug_assert!(*rc > 0, "release of a free page");
         *rc -= 1;
         if *rc == 0 {
+            self.pages_released += 1;
             self.free_pages.push(page);
         }
     }
@@ -525,6 +534,11 @@ mod tests {
         pool.release(a);
         assert_eq!(pool.bytes(), 0, "release returns pages to the free list");
         assert_eq!(pool.peak_pages(), 2);
+        assert_eq!(pool.pages_released(), pool.pages_allocated(), "books balance when idle");
+        assert_eq!(
+            pool.pages_allocated() - pool.pages_released(),
+            pool.pages_in_use() as u64
+        );
     }
 
     #[test]

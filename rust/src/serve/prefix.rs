@@ -47,6 +47,8 @@ pub struct PrefixCache {
     hits: u64,
     misses: u64,
     evictions: u64,
+    hit_tokens: u64,
+    miss_tokens: u64,
 }
 
 impl PrefixCache {
@@ -74,6 +76,19 @@ impl PrefixCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Prompt tokens covered by cached pages across all lookups (the
+    /// token-weighted counterpart of [`PrefixCache::hits`] — long shared
+    /// stems weigh more than short ones).
+    pub fn hit_tokens(&self) -> u64 {
+        self.hit_tokens
+    }
+
+    /// Prompt tokens lookups could *not* cover — the tokens a prefill
+    /// still had to compute.
+    pub fn miss_tokens(&self) -> u64 {
+        self.miss_tokens
     }
 
     /// One LRU stamp: all pages touched by a single lookup/insert share
@@ -107,6 +122,9 @@ impl PrefixCache {
         } else {
             self.hits += 1;
         }
+        let covered = (chain.len() * page_size) as u64;
+        self.hit_tokens += covered;
+        self.miss_tokens += prompt.len() as u64 - covered;
         chain
     }
 

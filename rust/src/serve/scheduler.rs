@@ -69,6 +69,7 @@ pub struct Scheduler {
     /// how many admission rounds it has been bypassed in a row.
     starved_id: Option<u64>,
     head_skips: u32,
+    n_requeued: u64,
 }
 
 impl Scheduler {
@@ -106,7 +107,7 @@ impl Scheduler {
         let id = self.next_id;
         self.next_id += 1;
         self.n_submitted += 1;
-        self.requeue(Request {
+        self.insert_sorted(Request {
             id,
             prompt,
             max_new,
@@ -123,8 +124,15 @@ impl Scheduler {
     /// Re-enqueue a preempted request, keeping its id, priority, original
     /// arrival time and resume state (`generated`, `first_token_s`).
     /// Because the original arrival is old, the victim re-sorts near the
-    /// queue front; it does not count as a new submission.
+    /// queue front; it does not count as a new submission (it counts in
+    /// [`Scheduler::n_requeued`] instead).
     pub fn requeue(&mut self, req: Request) {
+        self.n_requeued += 1;
+        self.insert_sorted(req);
+    }
+
+    /// Arrival-sorted insert shared by fresh submissions and requeues.
+    fn insert_sorted(&mut self, req: Request) {
         let at = self
             .pending
             .iter()
@@ -132,6 +140,12 @@ impl Scheduler {
             .map(|i| i + 1)
             .unwrap_or(0);
         self.pending.insert(at, req);
+    }
+
+    /// Requests re-enqueued after a preemption (monotone; fresh
+    /// submissions never count).
+    pub fn n_requeued(&self) -> u64 {
+        self.n_requeued
     }
 
     /// Pop up to `free_slots` arrived requests whose summed page demand
@@ -346,9 +360,11 @@ mod tests {
         victim.generated = vec![7, 9];
         victim.n_preemptions = 1;
         victim.first_token_s = Some(0.5);
+        assert_eq!(s.n_requeued(), 0, "fresh submissions never count as requeues");
         s.requeue(victim);
         assert_eq!(s.n_pending(), 1);
         assert_eq!(s.n_submitted(), 2, "a requeue is not a new submission");
+        assert_eq!(s.n_requeued(), 1);
         assert_eq!(s.next_arrival_s(), Some(0.0), "original arrival preserved");
         let got = admit_slots(&mut s, 10.0, 2);
         assert_eq!(got[0].id, a);

@@ -1,0 +1,96 @@
+//! File-writing helpers for the observability layer: Prometheus-style
+//! text exposition, JSON metric snapshots, and Chrome trace-event
+//! (`trace.json`) dumps. These are the cold-path companions to
+//! `registry`/`trace` — all formatting happens here, never on hot loops.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::registry::MetricRegistry;
+use super::trace::Tracer;
+
+/// Create the parent directory of `path` if needed, propagating
+/// failures with context (a silently missing dir would surface later as
+/// a confusing `File::create` error — see `MetricsLog::new`).
+pub(crate) fn ensure_parent(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating output dir {}", dir.display()))?;
+        }
+    }
+    Ok(())
+}
+
+fn write_text(path: &Path, text: &str) -> Result<()> {
+    ensure_parent(path)?;
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(text.as_bytes())?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Write the registry as Prometheus-style text exposition.
+pub fn write_prometheus(path: impl AsRef<Path>, reg: &MetricRegistry) -> Result<()> {
+    write_text(path.as_ref(), &reg.prometheus())
+}
+
+/// Write the registry as a JSON snapshot (counters/gauges by name,
+/// histograms as count/sum/min/max/p50/p90/p95/p99 summaries).
+pub fn write_snapshot_json(path: impl AsRef<Path>, reg: &MetricRegistry) -> Result<()> {
+    write_text(path.as_ref(), &format!("{}\n", reg.snapshot()))
+}
+
+/// Write the tracer's ring as a Chrome trace-event file; open it in
+/// `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn write_chrome_trace(path: impl AsRef<Path>, tracer: &Tracer) -> Result<()> {
+    write_text(path.as_ref(), &format!("{}\n", tracer.chrome_trace()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    #[test]
+    fn writes_all_three_formats_creating_dirs() {
+        let dir = std::env::temp_dir().join(format!("agsel-export-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut reg = MetricRegistry::new();
+        let c = reg.counter("demo_total");
+        let h = reg.histogram("demo_seconds");
+        reg.add(c, 3);
+        reg.observe(h, 0.25);
+        let tracer = Tracer::new();
+        let id = tracer.register("work");
+        tracer.enable(8);
+        drop(tracer.span(id));
+
+        // nested path exercises ensure_parent
+        let prom = dir.join("nested/metrics.prom");
+        write_prometheus(&prom, &reg).unwrap();
+        let text = std::fs::read_to_string(&prom).unwrap();
+        assert!(text.contains("demo_total 3"));
+
+        let snap = dir.join("metrics.json");
+        write_snapshot_json(&snap, &reg).unwrap();
+        let parsed = Value::parse(&std::fs::read_to_string(&snap).unwrap()).unwrap();
+        let hist = parsed.get("histograms").unwrap().get("demo_seconds").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_u64().unwrap(), 1);
+
+        let trace = dir.join("trace.json");
+        write_chrome_trace(&trace, &tracer).unwrap();
+        let parsed = Value::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
+        match parsed.get("traceEvents").unwrap() {
+            Value::Arr(events) => assert_eq!(events.len(), 1),
+            other => panic!("traceEvents not an array: {other:?}"),
+        }
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

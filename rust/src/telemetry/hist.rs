@@ -1,0 +1,256 @@
+//! Log-bucketed streaming histogram for latency-style measurements.
+//!
+//! Values land in geometrically-spaced buckets — [`BUCKETS_PER_OCTAVE`]
+//! buckets per factor-of-two, so every bucket is ~9% wide — covering
+//! [`MIN_VALUE`] (1 ns) through ~1100 s. The bucket array is allocated
+//! once at construction and never grows, so recording on a hot loop is a
+//! single index increment: no allocation, no sorting, O(1) per sample.
+//! Quantiles are answered by a cumulative walk and are exact to within
+//! one bucket width; histograms over the same bucket layout merge by
+//! elementwise addition, which makes per-worker histograms aggregatable.
+//!
+//! The quantile rank convention matches the hand-sorted percentile
+//! helper in `examples/serve_eval.rs` (`sorted[floor((n-1)·q)]`) so the
+//! two report comparable figures.
+
+/// Buckets per factor-of-two of value. 8 → each bucket spans
+/// 2^(1/8) ≈ 1.090x, i.e. quantiles are exact to within ~9%.
+pub const BUCKETS_PER_OCTAVE: usize = 8;
+/// Octaves covered above [`MIN_VALUE`]: 40 doublings of 1 ns ≈ 1100 s.
+pub const N_OCTAVES: usize = 40;
+/// Total preallocated buckets (320).
+pub const N_BUCKETS: usize = BUCKETS_PER_OCTAVE * N_OCTAVES;
+/// Lower bound of bucket 0 (seconds). Values at or below it (including
+/// zero and negatives) are clamped into bucket 0; values above the top
+/// bucket clamp into bucket `N_BUCKETS - 1`.
+pub const MIN_VALUE: f64 = 1e-9;
+
+/// A fixed-layout streaming histogram (see module docs).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value (clamped into `[0, N_BUCKETS)`).
+    pub fn bucket_index(v: f64) -> usize {
+        if v.is_nan() || v <= MIN_VALUE {
+            return 0; // NaN, negatives, zero and sub-nanosecond all land here
+        }
+        (((v / MIN_VALUE).log2() * BUCKETS_PER_OCTAVE as f64) as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Inclusive lower bound of bucket `i` (seconds).
+    pub fn bucket_lower(i: usize) -> f64 {
+        MIN_VALUE * 2f64.powf(i as f64 / BUCKETS_PER_OCTAVE as f64)
+    }
+
+    /// Exclusive upper bound of bucket `i` (seconds).
+    pub fn bucket_upper(i: usize) -> f64 {
+        Self::bucket_lower(i + 1)
+    }
+
+    /// Width of bucket `i` (seconds) — the resolution of any quantile
+    /// whose exact value falls in that bucket.
+    pub fn bucket_width(i: usize) -> f64 {
+        Self::bucket_upper(i) - Self::bucket_lower(i)
+    }
+
+    /// Record one sample. NaN and infinities are dropped (a poisoned
+    /// timestamp must not poison `sum`); everything else clamps into the
+    /// bucket range. O(1), allocation-free.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]`, exact to within one bucket width.
+    ///
+    /// Rank convention is `floor((count - 1) · q)` over the sorted
+    /// samples — the same as the example harness's hand-sorted `pct()` —
+    /// and the reported value is the geometric midpoint of the rank's
+    /// bucket, clamped to the observed `[min, max]`; `q = 0` returns the
+    /// exact min and `q = 1` the exact max. Returns NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let rank = ((self.count - 1) as f64 * q) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                // geometric midpoint: sqrt(lower * upper) = lower * 2^(1/16)
+                let mid = Self::bucket_lower(i) * 2f64.powf(0.5 / BUCKETS_PER_OCTAVE as f64);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one. Equivalent to having
+    /// recorded both sample streams into a single histogram (same fixed
+    /// bucket layout, so counts add elementwise).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Reset to empty without touching the bucket allocation.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.count = 0;
+        self.sum = 0.0;
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded samples (not bucket-quantized).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact smallest recorded sample (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded sample (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Raw bucket counts (fixed length [`N_BUCKETS`]).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(LogHistogram::bucket_index(0.0), 0);
+        assert_eq!(LogHistogram::bucket_index(-1.0), 0);
+        assert_eq!(LogHistogram::bucket_index(f64::NAN), 0);
+        assert_eq!(LogHistogram::bucket_index(MIN_VALUE), 0);
+        assert_eq!(LogHistogram::bucket_index(1e12), N_BUCKETS - 1);
+        // a value inside bucket i round-trips through the bounds
+        for i in [0usize, 1, 7, 8, 100, N_BUCKETS - 1] {
+            let mid = (LogHistogram::bucket_lower(i) * LogHistogram::bucket_upper(i)).sqrt();
+            assert_eq!(LogHistogram::bucket_index(mid), i, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.min().is_nan() && h.max().is_nan());
+        h.record(0.125);
+        assert_eq!(h.count(), 1);
+        // single sample: every quantile clamps to the exact value
+        assert_eq!(h.quantile(0.0), 0.125);
+        assert_eq!(h.quantile(0.5), 0.125);
+        assert_eq!(h.quantile(1.0), 0.125);
+        assert_eq!(h.sum(), 0.125);
+    }
+
+    #[test]
+    fn non_finite_dropped_zero_clamped() {
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.quantile(0.5), 0.0); // clamped to observed min
+    }
+
+    #[test]
+    fn extremes_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0.003, 0.017, 0.3, 1.4] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0.003);
+        assert_eq!(h.quantile(1.0), 1.4);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1.72).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut h = LogHistogram::new();
+        h.record(1.0);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.counts().iter().sum::<u64>(), 0);
+        assert!(h.quantile(0.5).is_nan());
+    }
+}

@@ -1,5 +1,16 @@
-//! Metrics: per-step records, JSONL logging, timing breakdowns, CSV
-//! writers for the experiment harness.
+//! Observability: a unified metric registry (counters / gauges /
+//! log-bucketed histograms with Prometheus-style exposition and JSON
+//! snapshots), a span tracer with Chrome trace-event export, and the
+//! original training artifacts — per-step JSONL records, timing
+//! aggregates, CSV writers for the experiment harness.
+//!
+//! The live-instrumentation half lives in submodules:
+//! [`registry`] (named metrics), [`hist`] (streaming histograms),
+//! [`trace`] (RAII spans + ring buffer), [`export`] (file writers).
+//! Both the trainer and the serve engine own a [`Telemetry`] hub and
+//! expose it via a `telemetry()` accessor; everything is enabled-by-
+//! default for metrics, opt-in for tracing, and guaranteed
+//! allocation-free on hot loops once construction is done.
 
 use std::io::Write;
 use std::path::Path;
@@ -7,6 +18,62 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::util::json::Value;
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use export::{write_chrome_trace, write_prometheus, write_snapshot_json};
+pub use hist::LogHistogram;
+pub use registry::{CounterId, GaugeId, HistId, MetricRegistry};
+pub use trace::{Span, SpanId, Tracer};
+
+/// The per-component observability hub: one metric registry plus one
+/// span tracer, owned by a trainer or serve engine and shared with its
+/// instrumented internals behind an `Rc`.
+///
+/// Metrics record by default; tracing is off until
+/// [`Telemetry::enable_tracing`] preallocates a ring. All toggles use
+/// interior mutability so callers only ever need `&Telemetry`.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    pub registry: MetricRegistry,
+    pub tracer: Tracer,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Master switch: turns the registry on/off and (if a ring was ever
+    /// allocated) pauses/resumes the tracer. Off = every instrumented
+    /// hot-path op is a single branch with no writes.
+    pub fn set_enabled(&self, on: bool) {
+        self.registry.set_enabled(on);
+        if !on {
+            self.tracer.disable();
+        } else if self.tracer.has_ring() {
+            // resume span recording only if enable_tracing() ran before
+            self.tracer.resume();
+        }
+    }
+
+    /// Start span recording into a preallocated ring of `capacity`
+    /// events (oldest events are overwritten once full).
+    pub fn enable_tracing(&self, capacity: usize) {
+        self.tracer.enable(capacity);
+    }
+
+    /// Combined allocation fingerprint of the registry tables,
+    /// histogram buckets, and trace ring. Unchanged across instrumented
+    /// steady-state steps — the bench suite asserts this to enforce the
+    /// zero-allocation contract.
+    pub fn fingerprint(&self) -> u64 {
+        self.registry.fingerprint() ^ self.tracer.fingerprint().rotate_left(17)
+    }
+}
 
 /// One training-step record (JSONL row).
 #[derive(Debug, Clone)]
@@ -46,6 +113,12 @@ pub struct StepRecord {
 }
 
 /// Aggregated wallclock buckets over a run.
+///
+/// The first four fields (`execute_s`, `host_s`, `optimizer_s`,
+/// `upload_s`) are **observed** host wallclock; the three `*_sim`
+/// fields are **modeled** times from the residency cost model and live
+/// on a separate axis — see [`Timing::total_s`] and
+/// [`Timing::simulated_s`] for how the two are totaled.
 #[derive(Debug, Clone, Default)]
 pub struct Timing {
     pub execute_s: f64,
@@ -54,7 +127,13 @@ pub struct Timing {
     pub upload_s: f64,
     pub transfer_sim_s: f64,
     pub stall_sim_s: f64,
+    /// Modeled accelerator step time; already **includes** the modeled
+    /// PCIe stalls (`stall_sim_s` is broken out for attribution only).
     pub step_sim_s: f64,
+    /// Sum of the four **observed** buckets only. The `*_sim` buckets
+    /// are deliberately excluded — mixing a modeled accelerator's time
+    /// into a host wallclock total would double-count the overlap; use
+    /// [`Timing::simulated_s`] for the modeled counterpart.
     pub total_s: f64,
 }
 
@@ -84,6 +163,13 @@ impl StepRecord {
 }
 
 impl Timing {
+    /// Total **modeled** time: the cost model's accelerator step
+    /// wallclock, which already folds in PCIe stalls. `transfer_sim_s`
+    /// overlaps compute by construction and is not added on top.
+    pub fn simulated_s(&self) -> f64 {
+        self.step_sim_s
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("execute_s", Value::num(self.execute_s)),
@@ -108,9 +194,7 @@ impl MetricsLog {
     pub fn new(path: Option<&Path>) -> Result<Self> {
         let writer = match path {
             Some(p) => {
-                if let Some(dir) = p.parent() {
-                    std::fs::create_dir_all(dir).ok();
-                }
+                export::ensure_parent(p)?;
                 Some(std::io::BufWriter::new(
                     std::fs::File::create(p).with_context(|| format!("creating {p:?}"))?,
                 ))
@@ -136,6 +220,9 @@ impl MetricsLog {
         Ok(())
     }
 
+    /// Aggregate the per-step wallclock buckets. `total_s` sums the
+    /// observed buckets only (see [`Timing`] for the observed/simulated
+    /// split).
     pub fn timing(&self) -> Timing {
         let mut t = Timing::default();
         for r in &self.records {
@@ -172,6 +259,17 @@ impl MetricsLog {
     }
 }
 
+/// Quote a CSV field per RFC 4180: fields containing a comma, a double
+/// quote, or a line break are wrapped in double quotes with inner
+/// quotes doubled. Selection lists like `"0,3,5"` stay one column.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
 /// Minimal CSV writer used by the experiment harness.
 pub struct CsvWriter {
     file: std::io::BufWriter<std::fs::File>,
@@ -179,18 +277,18 @@ pub struct CsvWriter {
 
 impl CsvWriter {
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
-        if let Some(dir) = path.as_ref().parent() {
-            std::fs::create_dir_all(dir).ok();
-        }
+        export::ensure_parent(path.as_ref())?;
         let mut file = std::io::BufWriter::new(
             std::fs::File::create(path.as_ref())
                 .with_context(|| format!("creating {:?}", path.as_ref()))?,
         );
+        let header: Vec<String> = header.iter().copied().map(csv_field).collect();
         writeln!(file, "{}", header.join(","))?;
         Ok(Self { file })
     }
 
     pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        let fields: Vec<String> = fields.iter().map(|f| csv_field(f)).collect();
         writeln!(self.file, "{}", fields.join(","))?;
         Ok(())
     }
@@ -201,13 +299,20 @@ impl CsvWriter {
     }
 }
 
+/// Escape a markdown table cell: `|` would otherwise split the cell.
+fn md_cell(s: &str) -> String {
+    s.replace('|', "\\|")
+}
+
 /// Pretty-print a markdown table (also used for EXPERIMENTS.md snippets).
 pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
     let mut s = String::new();
+    let header: Vec<String> = header.iter().copied().map(md_cell).collect();
     s.push_str(&format!("| {} |\n", header.join(" | ")));
     s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
     for r in rows {
-        s.push_str(&format!("| {} |\n", r.join(" | ")));
+        let cells: Vec<String> = r.iter().map(|c| md_cell(c)).collect();
+        s.push_str(&format!("| {} |\n", cells.join(" | ")));
     }
     s
 }
@@ -256,9 +361,63 @@ mod tests {
     }
 
     #[test]
+    fn bare_filename_needs_no_dir_creation() {
+        // a relative path with no parent component must not trip the
+        // (now propagated) create_dir_all — its parent is the empty path
+        export::ensure_parent(Path::new("agsel-bare-metrics.jsonl")).unwrap();
+    }
+
+    #[test]
+    fn total_s_excludes_simulated_buckets() {
+        let mut log = MetricsLog::new(None).unwrap();
+        let mut r = rec(0, 1.0, vec![]);
+        r.t_transfer_sim = 100.0;
+        r.t_stall_sim = 50.0;
+        r.t_step_sim = 200.0;
+        log.push(r).unwrap();
+        let t = log.timing();
+        // observed-only total: 0.1 + 0.01 + 0.02 + 0.03
+        assert!((t.total_s - 0.16).abs() < 1e-9, "total_s must exclude *_sim: {}", t.total_s);
+        // the modeled counterpart is the cost model's step time
+        assert!((t.simulated_s() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_quotes_commas_and_quotes() {
+        let tmp = std::env::temp_dir().join(format!("agsel-csv-{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&tmp, &["step", "selected", "note"]).unwrap();
+        w.row(&["1".into(), "0,3,5".into(), "said \"hi\"".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "step,selected,note");
+        // the selection list stays one quoted column; quotes are doubled
+        assert_eq!(lines.next().unwrap(), "1,\"0,3,5\",\"said \"\"hi\"\"\"");
+    }
+
+    #[test]
     fn markdown_table_format() {
         let md = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert!(md.contains("| a | b |"));
         assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn markdown_table_escapes_pipes() {
+        let md = markdown_table(&["expr"], &[vec!["a|b".into()]]);
+        assert!(md.contains("| a\\|b |"), "pipe must be escaped: {md}");
+    }
+
+    #[test]
+    fn telemetry_hub_defaults() {
+        let tel = Telemetry::new();
+        assert!(tel.registry.is_enabled());
+        assert!(!tel.tracer.is_enabled());
+        tel.enable_tracing(4);
+        assert!(tel.tracer.is_enabled());
+        tel.set_enabled(false);
+        assert!(!tel.registry.is_enabled());
+        assert!(!tel.tracer.is_enabled());
     }
 }

@@ -1,0 +1,471 @@
+//! Named metric registry: monotone counters, gauges, and log-bucketed
+//! histograms behind typed handles.
+//!
+//! Registration happens once at construction time (`&mut self`, returns
+//! a copyable id); the hot-path operations ([`MetricRegistry::inc`],
+//! [`MetricRegistry::add`], [`MetricRegistry::set`],
+//! [`MetricRegistry::observe`]) take `&self` via interior mutability so
+//! instrumented components can share one registry without locking — the
+//! runtime is single-threaded per engine, like the rest of the serve
+//! layer. Disabling the registry turns every hot op into a single
+//! branch: no writes, no allocation.
+//!
+//! Two export formats, both zero-dependency: a Prometheus-style text
+//! exposition ([`MetricRegistry::prometheus`]) and a JSON snapshot
+//! ([`MetricRegistry::snapshot`]) built on the in-tree `util::json`.
+
+use std::cell::{Cell, RefCell};
+
+use crate::util::json::Value;
+
+use super::hist::LogHistogram;
+
+/// Handle to a registered counter (cheap to copy, index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a registered histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Metric family name plus its rendered label set.
+#[derive(Debug, Clone)]
+struct Meta {
+    family: String,
+    /// `family` or `family{k="v",...}` — the exposition/snapshot key.
+    full: String,
+}
+
+impl Meta {
+    fn new(family: &str, labels: &[(&str, &str)]) -> Self {
+        let full = if labels.is_empty() {
+            family.to_string()
+        } else {
+            let body: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            format!("{family}{{{}}}", body.join(","))
+        };
+        Self { family: family.to_string(), full }
+    }
+}
+
+#[derive(Debug)]
+struct Counter {
+    meta: Meta,
+    v: Cell<u64>,
+}
+
+#[derive(Debug)]
+struct Gauge {
+    meta: Meta,
+    v: Cell<f64>,
+}
+
+#[derive(Debug)]
+struct Hist {
+    meta: Meta,
+    v: RefCell<LogHistogram>,
+}
+
+/// See module docs.
+#[derive(Debug)]
+pub struct MetricRegistry {
+    enabled: Cell<bool>,
+    counters: Vec<Counter>,
+    gauges: Vec<Gauge>,
+    hists: Vec<Hist>,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricRegistry {
+    /// A fresh, enabled registry with no metrics.
+    pub fn new() -> Self {
+        Self {
+            enabled: Cell::new(true),
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            hists: Vec::new(),
+        }
+    }
+
+    /// Turn recording on or off. Off = every hot op is one branch.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.set(on);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.get()
+    }
+
+    // ---- registration (construction time, &mut) ----
+
+    /// Register a monotone counter. `family` should follow Prometheus
+    /// naming (`snake_case`, `_total` suffix for counters).
+    pub fn counter(&mut self, family: &str) -> CounterId {
+        self.counter_with(family, &[])
+    }
+
+    /// Register a labeled counter (one handle per label combination —
+    /// label sets are fixed at registration so the hot path never
+    /// formats or hashes label strings).
+    pub fn counter_with(&mut self, family: &str, labels: &[(&str, &str)]) -> CounterId {
+        self.counters.push(Counter { meta: Meta::new(family, labels), v: Cell::new(0) });
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register a gauge (a settable point-in-time value).
+    pub fn gauge(&mut self, family: &str) -> GaugeId {
+        self.gauge_with(family, &[])
+    }
+
+    pub fn gauge_with(&mut self, family: &str, labels: &[(&str, &str)]) -> GaugeId {
+        self.gauges.push(Gauge { meta: Meta::new(family, labels), v: Cell::new(0.0) });
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register a log-bucketed streaming histogram (seconds-valued by
+    /// convention; see `telemetry::hist` for resolution).
+    pub fn histogram(&mut self, family: &str) -> HistId {
+        self.histogram_with(family, &[])
+    }
+
+    pub fn histogram_with(&mut self, family: &str, labels: &[(&str, &str)]) -> HistId {
+        self.hists
+            .push(Hist { meta: Meta::new(family, labels), v: RefCell::new(LogHistogram::new()) });
+        HistId(self.hists.len() - 1)
+    }
+
+    // ---- hot-path ops (&self, branch-only when disabled) ----
+
+    /// Increment a counter by one.
+    pub fn inc(&self, id: CounterId) {
+        self.add(id, 1);
+    }
+
+    /// Increment a counter by `n`.
+    pub fn add(&self, id: CounterId, n: u64) {
+        if self.enabled.get() {
+            let c = &self.counters[id.0].v;
+            c.set(c.get() + n);
+        }
+    }
+
+    /// Set a gauge to `v`.
+    pub fn set(&self, id: GaugeId, v: f64) {
+        if self.enabled.get() {
+            self.gauges[id.0].v.set(v);
+        }
+    }
+
+    /// Record one histogram sample.
+    pub fn observe(&self, id: HistId, v: f64) {
+        if self.enabled.get() {
+            self.hists[id.0].v.borrow_mut().record(v);
+        }
+    }
+
+    // ---- reads ----
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].v.get()
+    }
+
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0].v.get()
+    }
+
+    pub fn hist_count(&self, id: HistId) -> u64 {
+        self.hists[id.0].v.borrow().count()
+    }
+
+    pub fn hist_sum(&self, id: HistId) -> f64 {
+        self.hists[id.0].v.borrow().sum()
+    }
+
+    /// Quantile of a histogram (NaN when empty); exact to one bucket width.
+    pub fn hist_quantile(&self, id: HistId, q: f64) -> f64 {
+        self.hists[id.0].v.borrow().quantile(q)
+    }
+
+    /// Owned copy of a histogram (for merging or offline analysis).
+    pub fn hist_clone(&self, id: HistId) -> LogHistogram {
+        self.hists[id.0].v.borrow().clone()
+    }
+
+    /// Look up a counter by its full exposition name, e.g.
+    /// `serve_preemptions_total{tier="0"}`.
+    pub fn counter_by_name(&self, full: &str) -> Option<CounterId> {
+        self.counters.iter().position(|c| c.meta.full == full).map(CounterId)
+    }
+
+    pub fn gauge_by_name(&self, full: &str) -> Option<GaugeId> {
+        self.gauges.iter().position(|g| g.meta.full == full).map(GaugeId)
+    }
+
+    pub fn hist_by_name(&self, full: &str) -> Option<HistId> {
+        self.hists.iter().position(|h| h.meta.full == full).map(HistId)
+    }
+
+    /// All counters as `(full_name, value)` in registration order.
+    /// Counter values are deterministic for a deterministic workload
+    /// (unlike wallclock-valued histogram contents), which makes this
+    /// the right surface for reproducibility tests.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.counters.iter().map(|c| (c.meta.full.clone(), c.v.get())).collect()
+    }
+
+    /// All histograms as `(full_name, sample_count)` in registration
+    /// order — counts are deterministic even when the recorded values
+    /// are wallclock times.
+    pub fn hist_counts(&self) -> Vec<(String, u64)> {
+        self.hists.iter().map(|h| (h.meta.full.clone(), h.v.borrow().count())).collect()
+    }
+
+    /// Identity fingerprint of every heap allocation the registry owns.
+    /// Stable across hot-path operations (buckets and metric tables are
+    /// preallocated at registration), so benches assert zero
+    /// steady-state allocations by comparing fingerprints across steps.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = fnv(0xcbf2_9ce4_8422_2325, self.counters.as_ptr() as u64);
+        h = fnv(h, self.counters.len() as u64);
+        h = fnv(h, self.gauges.as_ptr() as u64);
+        h = fnv(h, self.gauges.len() as u64);
+        h = fnv(h, self.hists.as_ptr() as u64);
+        h = fnv(h, self.hists.len() as u64);
+        for hist in &self.hists {
+            h = fnv(h, hist.v.borrow().counts().as_ptr() as u64);
+        }
+        h
+    }
+
+    // ---- export ----
+
+    /// Prometheus-style text exposition: `# TYPE` lines per family,
+    /// cumulative `_bucket{le="..."}` lines (populated buckets only,
+    /// plus `+Inf`), `_sum`/`_count` per histogram.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for c in &self.counters {
+            type_line(&mut out, &mut seen, &c.meta.family, "counter");
+            out.push_str(&format!("{} {}\n", c.meta.full, c.v.get()));
+        }
+        for g in &self.gauges {
+            type_line(&mut out, &mut seen, &g.meta.family, "gauge");
+            out.push_str(&format!("{} {}\n", g.meta.full, g.v.get()));
+        }
+        for hist in &self.hists {
+            type_line(&mut out, &mut seen, &hist.meta.family, "histogram");
+            let h = hist.v.borrow();
+            let (name, labels) = split_labels(&hist.meta.full);
+            // suffix for _sum/_count: the registered labels, if any
+            let sfx = if labels.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", labels.trim_end_matches(','))
+            };
+            let mut cum = 0u64;
+            for (i, &c) in h.counts().iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{{labels}le=\"{:.6e}\"}} {cum}\n",
+                    LogHistogram::bucket_upper(i)
+                ));
+            }
+            out.push_str(&format!("{name}_bucket{{{labels}le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{name}_sum{sfx} {}\n", h.sum()));
+            out.push_str(&format!("{name}_count{sfx} {}\n", h.count()));
+        }
+        out
+    }
+
+    /// JSON snapshot: counters and gauges by full name, histograms as
+    /// `{count, sum, min, max, p50, p90, p95, p99}` summaries.
+    pub fn snapshot(&self) -> Value {
+        let counters: Vec<(String, Value)> = self
+            .counters
+            .iter()
+            .map(|c| (c.meta.full.clone(), Value::num(c.v.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Value)> =
+            self.gauges.iter().map(|g| (g.meta.full.clone(), Value::num(g.v.get()))).collect();
+        let hists: Vec<(String, Value)> = self
+            .hists
+            .iter()
+            .map(|hist| {
+                let h = hist.v.borrow();
+                let quant = |q: f64| {
+                    let v = h.quantile(q);
+                    if v.is_nan() {
+                        Value::Null
+                    } else {
+                        Value::num(v)
+                    }
+                };
+                (
+                    hist.meta.full.clone(),
+                    Value::obj(vec![
+                        ("count", Value::num(h.count() as f64)),
+                        ("sum", Value::num(h.sum())),
+                        ("min", quant(0.0)),
+                        ("max", quant(1.0)),
+                        ("p50", quant(0.50)),
+                        ("p90", quant(0.90)),
+                        ("p95", quant(0.95)),
+                        ("p99", quant(0.99)),
+                    ]),
+                )
+            })
+            .collect();
+        Value::obj(vec![
+            ("counters", obj_owned(counters)),
+            ("gauges", obj_owned(gauges)),
+            ("histograms", obj_owned(hists)),
+        ])
+    }
+}
+
+fn obj_owned(fields: Vec<(String, Value)>) -> Value {
+    Value::obj(fields.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+}
+
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+fn type_line<'a>(out: &mut String, seen: &mut Vec<&'a str>, family: &'a str, kind: &str) {
+    if !seen.contains(&family) {
+        out.push_str(&format!("# TYPE {family} {kind}\n"));
+        seen.push(family);
+    }
+}
+
+/// Split `family{k="v"}` into (`family`, `k="v",`) so histogram bucket
+/// lines can splice the `le` label after the registered ones.
+fn split_labels(full: &str) -> (&str, String) {
+    match full.split_once('{') {
+        Some((name, rest)) => (name, format!("{},", rest.trim_end_matches('}'))),
+        None => (full, String::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_hists_roundtrip() {
+        let mut r = MetricRegistry::new();
+        let c = r.counter("demo_events_total");
+        let g = r.gauge("demo_depth");
+        let h = r.histogram("demo_seconds");
+        r.inc(c);
+        r.add(c, 2);
+        r.set(g, 7.5);
+        r.observe(h, 0.25);
+        r.observe(h, 0.5);
+        assert_eq!(r.counter_value(c), 3);
+        assert_eq!(r.gauge_value(g), 7.5);
+        assert_eq!(r.hist_count(h), 2);
+        assert!((r.hist_sum(h) - 0.75).abs() < 1e-12);
+        assert_eq!(r.counter_by_name("demo_events_total"), Some(c));
+        assert_eq!(r.hist_by_name("demo_seconds"), Some(h));
+    }
+
+    #[test]
+    fn disabled_is_a_noop() {
+        let mut r = MetricRegistry::new();
+        let c = r.counter("x_total");
+        let g = r.gauge("x");
+        let h = r.histogram("x_seconds");
+        r.set_enabled(false);
+        r.inc(c);
+        r.set(g, 1.0);
+        r.observe(h, 1.0);
+        assert_eq!(r.counter_value(c), 0);
+        assert_eq!(r.gauge_value(g), 0.0);
+        assert_eq!(r.hist_count(h), 0);
+        r.set_enabled(true);
+        r.inc(c);
+        assert_eq!(r.counter_value(c), 1);
+    }
+
+    #[test]
+    fn labeled_counters_render() {
+        let mut r = MetricRegistry::new();
+        let a = r.counter_with("tiers_total", &[("tier", "0")]);
+        let b = r.counter_with("tiers_total", &[("tier", "1")]);
+        r.add(a, 5);
+        r.inc(b);
+        let text = r.prometheus();
+        // one TYPE line for the family, one sample line per label set
+        assert_eq!(text.matches("# TYPE tiers_total counter").count(), 1);
+        assert!(text.contains("tiers_total{tier=\"0\"} 5"));
+        assert!(text.contains("tiers_total{tier=\"1\"} 1"));
+        assert_eq!(r.counter_by_name("tiers_total{tier=\"1\"}"), Some(b));
+    }
+
+    #[test]
+    fn exposition_histogram_is_cumulative() {
+        let mut r = MetricRegistry::new();
+        let h = r.histogram("lat_seconds");
+        for v in [0.001, 0.001, 0.01, 0.1] {
+            r.observe(h, v);
+        }
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE lat_seconds histogram"));
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("lat_seconds_count 4"));
+        // cumulative counts along the bucket lines are non-decreasing
+        let mut last = 0u64;
+        let buckets = text
+            .lines()
+            .filter(|l| l.starts_with("lat_seconds_bucket{le=\"") && !l.contains("+Inf"));
+        for line in buckets {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last, "non-monotone bucket line: {line}");
+            last = n;
+        }
+        assert_eq!(last, 4);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let mut r = MetricRegistry::new();
+        let c = r.counter("a_total");
+        let h = r.histogram("b_seconds");
+        r.add(c, 9);
+        r.observe(h, 0.5);
+        let snap = r.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("a_total").unwrap().as_u64().unwrap(), 9);
+        let hist = snap.get("histograms").unwrap().get("b_seconds").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(hist.get("p50").unwrap().as_f64().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn fingerprint_stable_across_ops() {
+        let mut r = MetricRegistry::new();
+        let c = r.counter("a_total");
+        let h = r.histogram("b_seconds");
+        let fp = r.fingerprint();
+        for i in 0..1000 {
+            r.inc(c);
+            r.observe(h, i as f64 * 1e-4);
+        }
+        assert_eq!(r.fingerprint(), fp);
+    }
+}

@@ -1,0 +1,322 @@
+//! Lightweight span tracer with Chrome trace-event export.
+//!
+//! Span names are interned once at construction ([`Tracer::register`]
+//! returns a copyable [`SpanId`]); opening a span on a hot path is then
+//! one branch when disabled and, when enabled, two `Instant` reads plus
+//! one fixed-size write into a preallocated ring buffer — no
+//! allocation, no formatting, no syscalls. When the ring fills, the
+//! oldest events are overwritten (and counted in
+//! [`Tracer::dropped`]), so tracing a long run keeps the most recent
+//! window rather than growing without bound.
+//!
+//! [`Tracer::chrome_trace`] renders the ring as a Chrome trace-event
+//! JSON document (`"ph": "X"` complete events, microsecond timestamps)
+//! that loads directly in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev).
+
+use std::cell::{Cell, RefCell};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Interned span name handle (index into the tracer's name table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanId(u16);
+
+/// One completed span: fixed-size, `Copy`, ring-buffer friendly.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    name: u16,
+    tid: u16,
+    start_us: f64,
+    dur_us: f64,
+    /// Optional numeric payload; NaN = absent.
+    arg: f64,
+}
+
+impl Event {
+    const ZERO: Event = Event { name: 0, tid: 0, start_us: 0.0, dur_us: 0.0, arg: f64::NAN };
+}
+
+/// See module docs.
+#[derive(Debug)]
+pub struct Tracer {
+    t0: Instant,
+    enabled: Cell<bool>,
+    names: RefCell<Vec<String>>,
+    /// Fully materialized at [`Tracer::enable`]; `ring.len()` is the capacity.
+    ring: RefCell<Vec<Event>>,
+    head: Cell<usize>,
+    len: Cell<usize>,
+    dropped: Cell<u64>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    /// A fresh tracer, **disabled** and with an empty (zero-capacity)
+    /// ring; spans cost one branch until [`Tracer::enable`] is called.
+    pub fn new() -> Self {
+        Self {
+            t0: Instant::now(),
+            enabled: Cell::new(false),
+            names: RefCell::new(Vec::new()),
+            ring: RefCell::new(Vec::new()),
+            head: Cell::new(0),
+            len: Cell::new(0),
+            dropped: Cell::new(0),
+        }
+    }
+
+    /// Intern a span name (construction time, not hot-path).
+    pub fn register(&self, name: &str) -> SpanId {
+        let mut names = self.names.borrow_mut();
+        if let Some(i) = names.iter().position(|n| n == name) {
+            return SpanId(i as u16);
+        }
+        assert!(names.len() < u16::MAX as usize, "too many span names");
+        names.push(name.to_string());
+        SpanId((names.len() - 1) as u16)
+    }
+
+    /// Preallocate a ring of `capacity` events, clear any prior
+    /// contents, and start recording.
+    pub fn enable(&self, capacity: usize) {
+        let mut ring = self.ring.borrow_mut();
+        ring.clear();
+        ring.resize(capacity.max(1), Event::ZERO);
+        self.head.set(0);
+        self.len.set(0);
+        self.dropped.set(0);
+        self.enabled.set(true);
+    }
+
+    /// Stop recording (the ring keeps its events for export).
+    pub fn disable(&self) {
+        self.enabled.set(false);
+    }
+
+    /// Resume recording into the existing ring (no-op without one).
+    pub fn resume(&self) {
+        if self.has_ring() {
+            self.enabled.set(true);
+        }
+    }
+
+    /// Whether [`Tracer::enable`] has ever allocated a ring.
+    pub fn has_ring(&self) -> bool {
+        !self.ring.borrow().is_empty()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.get()
+    }
+
+    /// Open a span. Drop the returned guard to record the event; when
+    /// the tracer is disabled the guard is inert and the clock is never
+    /// read.
+    pub fn span(&self, id: SpanId) -> Span<'_> {
+        if !self.enabled.get() {
+            return Span { tracer: None, id, tid: 0, arg: f64::NAN, start: None };
+        }
+        Span { tracer: Some(self), id, tid: 0, arg: f64::NAN, start: Some(Instant::now()) }
+    }
+
+    /// Completed events currently held in the ring.
+    pub fn n_events(&self) -> usize {
+        self.len.get()
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    /// Identity fingerprint of the ring and name-table allocations;
+    /// stable across span recording (the ring never grows), used by the
+    /// zero-steady-state-allocation bench invariant.
+    pub fn fingerprint(&self) -> u64 {
+        let ring = self.ring.borrow();
+        let names = self.names.borrow();
+        (ring.as_ptr() as u64)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(ring.len() as u64)
+            .wrapping_add((names.len() as u64) << 32)
+    }
+
+    fn push(&self, e: Event) {
+        let mut ring = self.ring.borrow_mut();
+        let cap = ring.len();
+        if cap == 0 {
+            return;
+        }
+        let h = self.head.get();
+        if self.len.get() == cap {
+            self.dropped.set(self.dropped.get() + 1);
+        } else {
+            self.len.set(self.len.get() + 1);
+        }
+        ring[h] = e;
+        self.head.set((h + 1) % cap);
+    }
+
+    /// Render the ring (oldest first) as a Chrome trace-event JSON
+    /// document. Open the written file in `chrome://tracing` or
+    /// Perfetto; `args.v` carries the span's numeric payload when set.
+    pub fn chrome_trace(&self) -> Value {
+        let names = self.names.borrow();
+        let ring = self.ring.borrow();
+        let cap = ring.len().max(1);
+        let len = self.len.get();
+        let start = if len == ring.len() { self.head.get() } else { 0 };
+        let mut events = Vec::with_capacity(len);
+        for k in 0..len {
+            let e = ring[(start + k) % cap];
+            let name = names.get(e.name as usize).map(|s| s.as_str()).unwrap_or("?");
+            let mut fields = vec![
+                ("name", Value::str(name)),
+                ("cat", Value::str("agsel")),
+                ("ph", Value::str("X")),
+                ("ts", Value::num(e.start_us)),
+                ("dur", Value::num(e.dur_us)),
+                ("pid", Value::num(1.0)),
+                ("tid", Value::num(e.tid as f64)),
+            ];
+            if e.arg.is_finite() {
+                fields.push(("args", Value::obj(vec![("v", Value::num(e.arg))])));
+            }
+            events.push(Value::obj(fields));
+        }
+        Value::obj(vec![
+            ("traceEvents", Value::Arr(events)),
+            ("displayTimeUnit", Value::str("ms")),
+            ("droppedEvents", Value::num(self.dropped.get() as f64)),
+        ])
+    }
+}
+
+/// RAII span guard: records a completed event into the tracer's ring
+/// when dropped. Obtained from [`Tracer::span`].
+#[must_use = "a span records on drop; binding it to _ drops immediately"]
+pub struct Span<'t> {
+    tracer: Option<&'t Tracer>,
+    id: SpanId,
+    tid: u16,
+    arg: f64,
+    start: Option<Instant>,
+}
+
+impl Span<'_> {
+    /// Attach a numeric payload (e.g. batch size, token count) —
+    /// builder style, usable at open.
+    pub fn arg(mut self, v: f64) -> Self {
+        self.arg = v;
+        self
+    }
+
+    /// Set the payload after the span is open (e.g. once a batch has
+    /// been assembled mid-span).
+    pub fn set_arg(&mut self, v: f64) {
+        self.arg = v;
+    }
+
+    /// Tag the span with a logical thread lane for the trace viewer.
+    pub fn tid(mut self, tid: u16) -> Self {
+        self.tid = tid;
+        self
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let (Some(t), Some(start)) = (self.tracer, self.start) {
+            t.push(Event {
+                name: self.id.0,
+                tid: self.tid,
+                start_us: start.duration_since(t.t0).as_secs_f64() * 1e6,
+                dur_us: start.elapsed().as_secs_f64() * 1e6,
+                arg: self.arg,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Tracer::new();
+        let id = t.register("step");
+        drop(t.span(id));
+        assert_eq!(t.n_events(), 0);
+    }
+
+    #[test]
+    fn records_and_exports() {
+        let t = Tracer::new();
+        let step = t.register("step");
+        let decode = t.register("decode");
+        t.enable(16);
+        {
+            let _outer = t.span(step);
+            drop(t.span(decode).arg(4.0));
+        }
+        assert_eq!(t.n_events(), 2);
+        let doc = t.chrome_trace();
+        let events = match doc.get("traceEvents").unwrap() {
+            Value::Arr(v) => v,
+            other => panic!("traceEvents not an array: {other:?}"),
+        };
+        assert_eq!(events.len(), 2);
+        // inner span completed first
+        assert_eq!(events[0].get("name").unwrap().as_str().unwrap(), "decode");
+        assert_eq!(events[0].get("args").unwrap().get("v").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(events[1].get("name").unwrap().as_str().unwrap(), "step");
+        assert_eq!(events[1].get("ph").unwrap().as_str().unwrap(), "X");
+        // the outer span starts no later than the inner and covers it
+        let ts0 = events[0].get("ts").unwrap().as_f64().unwrap();
+        let ts1 = events[1].get("ts").unwrap().as_f64().unwrap();
+        assert!(ts1 <= ts0);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let t = Tracer::new();
+        let id = t.register("x");
+        t.enable(4);
+        let fp = t.fingerprint();
+        for _ in 0..10 {
+            drop(t.span(id));
+        }
+        assert_eq!(t.n_events(), 4);
+        assert_eq!(t.dropped(), 6);
+        // wrap-around never reallocated the ring
+        assert_eq!(t.fingerprint(), fp);
+        let doc = t.chrome_trace();
+        let events = match doc.get("traceEvents").unwrap() {
+            Value::Arr(v) => v,
+            _ => unreachable!(),
+        };
+        assert_eq!(events.len(), 4);
+        // chronological order survives the wrap
+        let ts: Vec<f64> =
+            events.iter().map(|e| e.get("ts").unwrap().as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn reenable_clears() {
+        let t = Tracer::new();
+        let id = t.register("x");
+        t.enable(8);
+        drop(t.span(id));
+        t.enable(8);
+        assert_eq!(t.n_events(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+}

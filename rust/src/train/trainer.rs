@@ -8,13 +8,15 @@ use crate::data::{MathGen, Split, Suite, Tokenizer, TrainBatcher};
 use crate::memory::{method_memory, MemoryReport};
 use crate::model::ModelState;
 use crate::optimizer::{AdamWParams, ResidencyManager, SelectiveAdamW};
-use crate::runtime::{Backend, Preset};
+use crate::runtime::{Backend, Preset, TransferStats};
 use crate::selection::{
     grad_norm, k_from_pct, AdaGradSelect, AdaGradSelectParams, FixedSubsetSelector,
     FullSelector, GradNormTracker, RandomSelector, RoundRobinSelector, SelectionCtx,
     SelectionStrategy, StepPlan, TopKSelector, UcbSelector,
 };
-use crate::telemetry::{MetricsLog, StepRecord, Timing};
+use crate::telemetry::{
+    CounterId, GaugeId, HistId, MetricsLog, SpanId, StepRecord, Telemetry, Timing,
+};
 
 use super::costmodel::{CostModel, CostModelParams};
 
@@ -133,6 +135,53 @@ struct DeviceOpt<B: Backend> {
     scale: B::Buffer,
 }
 
+/// Telemetry handles for the trainer's hot path, registered once at
+/// construction so per-step recording is id-indexed (no name lookups or
+/// formatting inside [`Trainer::step_once`]).
+#[derive(Clone, Copy)]
+struct TrainMetrics {
+    steps: CounterId,
+    masked_steps: CounterId,
+    fused_steps: CounterId,
+    loss: GaugeId,
+    lr: GaugeId,
+    /// One gauge per [`TransferStats::GAUGE_NAMES`] entry, `train_`-prefixed.
+    transfers: [GaugeId; 6],
+    step_seconds: HistId,
+    sp_decide: SpanId,
+    sp_h2d: SpanId,
+    sp_execute: SpanId,
+    sp_norms: SpanId,
+    sp_choose: SpanId,
+    sp_optimizer: SpanId,
+    sp_d2h: SpanId,
+}
+
+impl TrainMetrics {
+    fn register(tel: &mut Telemetry) -> Self {
+        let r = &mut tel.registry;
+        let transfers = std::array::from_fn(|i| {
+            r.gauge(&format!("train_{}", TransferStats::GAUGE_NAMES[i]))
+        });
+        Self {
+            steps: r.counter("train_steps_total"),
+            masked_steps: r.counter("train_masked_steps_total"),
+            fused_steps: r.counter("train_fused_steps_total"),
+            loss: r.gauge("train_loss"),
+            lr: r.gauge("train_lr"),
+            transfers,
+            step_seconds: r.histogram("train_step_seconds"),
+            sp_decide: tel.tracer.register("train/decide"),
+            sp_h2d: tel.tracer.register("train/h2d"),
+            sp_execute: tel.tracer.register("train/execute"),
+            sp_norms: tel.tracer.register("train/norms"),
+            sp_choose: tel.tracer.register("train/choose"),
+            sp_optimizer: tel.tracer.register("train/optimizer"),
+            sp_d2h: tel.tracer.register("train/d2h"),
+        }
+    }
+}
+
 /// One fine-tuning run on any [`Backend`].
 pub struct Trainer<'e, B: Backend> {
     engine: &'e B,
@@ -176,6 +225,10 @@ pub struct Trainer<'e, B: Backend> {
     device_blocks: Vec<B::Buffer>,
     dirty: Vec<bool>,
     pub metrics: MetricsLog,
+    /// Shared observability hub (registry + tracer); `Rc` so hot-path
+    /// span guards can borrow a local clone while `&mut self` methods run.
+    tel: Rc<Telemetry>,
+    tm: TrainMetrics,
     cost: CostModel,
     /// Host-loop gradient staging. Masked steps shrink unselected entries
     /// to empty so a stale gradient can never be read (and its memory is
@@ -312,6 +365,8 @@ impl<'e, B: Backend> Trainer<'e, B> {
             .map(|f| engine.upload_f32(f, &[f.len()]))
             .collect::<Result<_>>()?;
         let metrics = MetricsLog::new(cfg.metrics_path.as_deref())?;
+        let mut tel = Telemetry::new();
+        let tm = TrainMetrics::register(&mut tel);
 
         // optimizer state: moments uploaded once in device mode, host
         // vectors in the host loop
@@ -366,6 +421,8 @@ impl<'e, B: Backend> Trainer<'e, B> {
             device_blocks,
             dirty: vec![false; n_trainable],
             metrics,
+            tel: Rc::new(tel),
+            tm,
             cost,
             grads_host,
             step: 0,
@@ -390,6 +447,14 @@ impl<'e, B: Backend> Trainer<'e, B> {
         self.exec
     }
 
+    /// The trainer's observability hub: per-step counters, loss/lr and
+    /// transfer gauges, a step-latency histogram, and phase spans
+    /// (enable with `telemetry().tracer.enable(n)`). Purely an observer:
+    /// model outputs are bit-identical with telemetry on or off.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
     /// Run one training step; returns the loss.
     ///
     /// The step is selection-gated: [`SelectionStrategy::decide`] runs
@@ -408,12 +473,16 @@ impl<'e, B: Backend> Trainer<'e, B> {
         let n_blocks = self.dirty.len();
         let clip = self.cfg.train.grad_clip;
         let transfers0 = self.engine.transfer_stats();
+        let tel = Rc::clone(&self.tel);
+        let t_step = Instant::now();
 
         // 1. pre-step decision: exploit-style steps know their blocks now
         let epoch = self.epoch();
-        let plan = self
-            .strategy
-            .decide(&SelectionCtx { step: self.step, epoch, grad_norms: &[] });
+        let plan = {
+            let _sp = tel.tracer.span(self.tm.sp_decide);
+            self.strategy
+                .decide(&SelectionCtx { step: self.step, epoch, grad_norms: &[] })
+        };
         let decided = match plan {
             StepPlan::Decided(sel) => Some(sel),
             StepPlan::NeedsNorms => None,
@@ -434,6 +503,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // 2. upload the batch (+ block mask). The host loop also
         // re-uploads parameter blocks the optimizer dirtied; the
         // device-resident path never moves parameters.
+        let sp_h2d = tel.tracer.span(self.tm.sp_h2d);
         let t0 = Instant::now();
         let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
         let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
@@ -462,6 +532,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             self.engine.write_f32(&dev.step, &[self.step as f32])?;
         }
         let t_upload = t0.elapsed().as_secs_f64();
+        drop(sp_h2d);
 
         // 3.–6. execute + gradients/norms + selection + optimizer, per
         // execution mode
@@ -529,6 +600,22 @@ impl<'e, B: Backend> Trainer<'e, B> {
             d2h_bytes: observed.d2h_bytes,
         })?;
 
+        let reg = &tel.registry;
+        reg.inc(self.tm.steps);
+        if masked_any {
+            reg.inc(self.tm.masked_steps);
+        }
+        if fused {
+            reg.inc(self.tm.fused_steps);
+        }
+        reg.set(self.tm.loss, loss as f64);
+        reg.set(self.tm.lr, lr as f64);
+        let totals = self.engine.transfer_stats();
+        for (g, v) in self.tm.transfers.iter().zip(totals.gauge_values()) {
+            reg.set(*g, v);
+        }
+        reg.observe(self.tm.step_seconds, t_step.elapsed().as_secs_f64());
+
         self.step += 1;
         Ok(loss)
     }
@@ -543,6 +630,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         mask_buf: &B::Buffer,
         selected: Vec<usize>,
     ) -> Result<SubstepOutcome> {
+        let tel = Rc::clone(&self.tel);
         let dev = self.dev.as_ref().expect("device mode");
         let exe = self.exe_train_fused.as_ref().expect("fused exe loaded");
         let mut args: Vec<&B::Buffer> = Vec::with_capacity(self.arity_fused);
@@ -556,9 +644,15 @@ impl<'e, B: Backend> Trainer<'e, B> {
         args.push(tgt_buf);
         args.push(mask_buf);
         debug_assert_eq!(args.len(), self.arity_fused);
-        let out = self.engine.execute(exe, &args)?;
+        let out = {
+            let _sp = tel.tracer.span(self.tm.sp_execute).arg(selected.len() as f64);
+            self.engine.execute(exe, &args)?
+        };
         let t1 = Instant::now();
-        let loss = self.engine.read_scalar_f32(&out.outputs[0])?;
+        let loss = {
+            let _sp = tel.tracer.span(self.tm.sp_d2h);
+            self.engine.read_scalar_f32(&out.outputs[0])?
+        };
         self.device_step = Some(self.step + 1);
         Ok(SubstepOutcome {
             loss,
@@ -584,6 +678,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         epoch: u32,
         clip: Option<f32>,
     ) -> Result<SubstepOutcome> {
+        let tel = Rc::clone(&self.tel);
         let n_blocks = self.dirty.len();
         let arity = if masked { self.arity_masked } else { self.arity_train };
         let mut args: Vec<&B::Buffer> = Vec::with_capacity(arity);
@@ -600,13 +695,19 @@ impl<'e, B: Backend> Trainer<'e, B> {
             &self.exe_train
         };
         debug_assert_eq!(args.len(), arity);
-        let out = self.engine.execute(exe, &args)?;
+        let out = {
+            let _sp = tel.tracer.span(self.tm.sp_execute);
+            self.engine.execute(exe, &args)?
+        };
         let t_execute = out.execute_s;
 
         let t1 = Instant::now();
         let mut outputs = out.outputs.into_iter();
         let loss_h = outputs.next().ok_or_else(|| anyhow!("train step produced no outputs"))?;
-        let loss = self.engine.read_scalar_f32(&loss_h)?;
+        let loss = {
+            let _sp = tel.tracer.span(self.tm.sp_d2h);
+            self.engine.read_scalar_f32(&loss_h)?
+        };
         // gradient handles, and the block index each one belongs to
         let grads: Vec<B::Buffer> = outputs.collect();
         let grad_blocks: Vec<usize> = match (&decided, masked) {
@@ -626,6 +727,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // clipping needs them
         let mut scale = 1.0f32;
         if decided.is_none() || clip.is_some() {
+            let _sp = tel.tracer.span(self.tm.sp_norms).arg(grads.len() as f64);
             let exe_norm = self.exe_grad_norm.as_ref().expect("device mode");
             let mut norms = Vec::with_capacity(grads.len());
             for g in &grads {
@@ -653,6 +755,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         let selected = match decided {
             Some(sel) => sel,
             None => {
+                let _sp = tel.tracer.span(self.tm.sp_choose);
                 let ctx = SelectionCtx {
                     step: self.step,
                     epoch,
@@ -665,6 +768,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // selective AdamW over handles, in place — parameters, moments
         // and gradients all stay on device
         let t3 = Instant::now();
+        let sp_opt = tel.tracer.span(self.tm.sp_optimizer).arg(selected.len() as f64);
         let dev = self.dev.as_ref().expect("device mode");
         let exe_ad = self.exe_adamw.as_ref().expect("device mode");
         self.engine.write_f32(&dev.lr, &[self.cfg.lr_at(self.step)])?;
@@ -682,6 +786,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             ];
             self.engine.execute(exe_ad, &ad_args)?;
         }
+        drop(sp_opt);
         // the on-device schedule step was not advanced by this path
         self.device_step = None;
         Ok(SubstepOutcome {
@@ -706,6 +811,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         epoch: u32,
         clip: Option<f32>,
     ) -> Result<SubstepOutcome> {
+        let tel = Rc::clone(&self.tel);
         let n_blocks = self.dirty.len();
         let arity = if masked { self.arity_masked } else { self.arity_train };
         let mut args: Vec<&B::Buffer> = Vec::with_capacity(arity);
@@ -722,7 +828,10 @@ impl<'e, B: Backend> Trainer<'e, B> {
             &self.exe_train
         };
         debug_assert_eq!(args.len(), arity);
-        let mut out = self.engine.execute_to_host(exe, &args)?;
+        let mut out = {
+            let _sp = tel.tracer.span(self.tm.sp_execute);
+            self.engine.execute_to_host(exe, &args)?
+        };
         let loss = out.scalar_f32(0)?;
 
         // gradients to host — a masked step returns (and downloads) only
@@ -730,6 +839,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // shrunk to empty so stale gradients can neither linger in memory
         // nor be read by a later step
         let t1 = Instant::now();
+        let sp_d2h = tel.tracer.span(self.tm.sp_d2h);
         if masked {
             let sel = decided.as_ref().expect("masked implies decided");
             let mut si = 0usize;
@@ -746,6 +856,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
                 *g = out.take_vec(1 + i)?;
             }
         }
+        drop(sp_d2h);
         let t_host_dl = t1.elapsed().as_secs_f64() + out.download_s;
 
         // block norms + optional global clip, gated on who needs them.
@@ -754,6 +865,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // round through f32 like the backend boundary, so the
         // device-resident path sees bit-identical values.
         let t2 = Instant::now();
+        let sp_norms = tel.tracer.span(self.tm.sp_norms);
         if masked {
             // selection already decided; norms exist (and are reduced)
             // only if clipping asks for them, and only over the selected
@@ -774,11 +886,13 @@ impl<'e, B: Backend> Trainer<'e, B> {
             }
             self.tracker.record(&norms);
         }
+        drop(sp_norms);
 
         // resolve the selection (norm-ranking strategies choose now)
         let selected = match decided {
             Some(sel) => sel,
             None => {
+                let _sp = tel.tracer.span(self.tm.sp_choose);
                 let ctx = SelectionCtx {
                     step: self.step,
                     epoch,
@@ -791,11 +905,13 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // selective AdamW on the host mirror
         let lr = self.cfg.lr_at(self.step);
         let t3 = Instant::now();
+        let sp_opt = tel.tracer.span(self.tm.sp_optimizer).arg(selected.len() as f64);
         let opt = self.opt.as_mut().expect("host loop has a host optimizer");
         opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
         for &b in &selected {
             self.dirty[b] = true;
         }
+        drop(sp_opt);
         let t_optimizer = t3.elapsed().as_secs_f64();
         let t_hostproc = t2.elapsed().as_secs_f64() - t_optimizer;
         Ok(SubstepOutcome {

@@ -1,0 +1,224 @@
+//! Property tests for the observability layer: histogram quantile
+//! accuracy against exact sorted quantiles, merge/feed equivalence, and
+//! end-to-end determinism + export validity of the serve engine's
+//! registry and tracer.
+
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, ReferenceBackend};
+use adagradselect::serve::{ServeConfig, ServeEngine};
+use adagradselect::telemetry::hist::{LogHistogram, BUCKETS_PER_OCTAVE};
+use adagradselect::util::json::Value;
+use adagradselect::util::rng::Rng;
+
+const PRESET: &str = "test-tiny";
+
+/// The hand-sorted percentile the histogram is held to: rank
+/// `floor((n-1)·q)` over the sorted samples.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    sorted[((sorted.len() - 1) as f64 * q) as usize]
+}
+
+/// Log-uniform draws spanning 10^-6 .. 10^2 seconds — eight decades, the
+/// realistic latency range, hitting many distinct buckets.
+fn draws(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 10f64.powf(rng.gen_range_f64(-6.0, 2.0))).collect()
+}
+
+#[test]
+fn quantile_within_one_bucket_of_exact() {
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for n in [1usize, 2, 7, 100, 1000] {
+        let samples = draws(&mut rng, n);
+        let mut h = LogHistogram::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let e = exact_quantile(&sorted, q);
+            let a = h.quantile(q);
+            let width = LogHistogram::bucket_width(LogHistogram::bucket_index(e));
+            assert!(
+                (a - e).abs() <= width + 1e-12,
+                "n={n} q={q}: hist {a} vs exact {e} (allowed width {width})"
+            );
+        }
+        // the extremes are exact, not just bucket-accurate
+        assert_eq!(h.quantile(0.0), sorted[0]);
+        assert_eq!(h.quantile(1.0), sorted[n - 1]);
+    }
+}
+
+#[test]
+fn merge_equals_feeding_concatenation() {
+    let mut rng = Rng::seed_from_u64(42);
+    let xs = draws(&mut rng, 500);
+    let ys = draws(&mut rng, 313);
+    let (mut a, mut b, mut whole) =
+        (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+    for &v in &xs {
+        a.record(v);
+        whole.record(v);
+    }
+    for &v in &ys {
+        b.record(v);
+        whole.record(v);
+    }
+    a.merge(&b);
+    assert_eq!(a.counts(), whole.counts(), "bucket counts differ");
+    assert_eq!(a.count(), whole.count());
+    assert!((a.sum() - whole.sum()).abs() <= 1e-9 * whole.sum().abs());
+    assert_eq!(a.min(), whole.min());
+    assert_eq!(a.max(), whole.max());
+    for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+        assert_eq!(a.quantile(q), whole.quantile(q), "quantile {q} differs");
+    }
+}
+
+#[test]
+fn count_and_sum_are_exact() {
+    let mut rng = Rng::seed_from_u64(7);
+    let samples = draws(&mut rng, 257);
+    let mut h = LogHistogram::new();
+    let mut sum = 0.0f64;
+    for &v in &samples {
+        h.record(v);
+        sum += v;
+    }
+    assert_eq!(h.count(), samples.len() as u64);
+    assert!((h.sum() - sum).abs() <= f64::EPSILON * sum.abs() * samples.len() as f64);
+}
+
+/// Deterministic prompt of `len` in-vocab tokens.
+fn prompt(len: usize, salt: u64) -> Vec<i32> {
+    (0..len).map(|i| 4 + ((i as u64 * 7 + salt * 13) % 50) as i32).collect()
+}
+
+fn run_workload<'e>(
+    engine: &'e ReferenceBackend,
+    state: &ModelState,
+) -> (Vec<Vec<i32>>, ServeEngine<'e, ReferenceBackend>) {
+    let mut srv = ServeEngine::new(
+        engine,
+        PRESET,
+        state,
+        ServeConfig { slots: 2, max_new_tokens: 6, kv_pages: 4, ..Default::default() },
+    )
+    .unwrap();
+    srv.telemetry().enable_tracing(1 << 12);
+    for i in 0..6u64 {
+        srv.submit(prompt(12 + (i as usize % 3), i), 0, 0.0);
+    }
+    let mut responses = srv.run_until_idle().unwrap();
+    responses.sort_by_key(|r| r.id);
+    let tokens = responses.into_iter().map(|r| r.tokens).collect();
+    (tokens, srv)
+}
+
+#[test]
+fn serve_counters_are_deterministic_across_runs() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 11);
+    let (tok_a, srv_a) = run_workload(&engine, &state);
+    let (tok_b, srv_b) = run_workload(&engine, &state);
+    assert_eq!(tok_a, tok_b, "token streams must be bit-identical");
+    // every counter (admissions, preemptions by tier, page/prefix
+    // traffic, ...) and every histogram's sample count is replayable;
+    // histogram *contents* are wallclock-valued and deliberately not
+    // compared
+    let (reg_a, reg_b) = (&srv_a.telemetry().registry, &srv_b.telemetry().registry);
+    assert_eq!(reg_a.counters_snapshot(), reg_b.counters_snapshot());
+    assert_eq!(reg_a.hist_counts(), reg_b.hist_counts());
+}
+
+#[test]
+fn telemetry_disabled_is_output_invariant() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 11);
+    let (tok_on, _) = run_workload(&engine, &state);
+    let mut srv = ServeEngine::new(
+        &engine,
+        PRESET,
+        &state,
+        ServeConfig { slots: 2, max_new_tokens: 6, kv_pages: 4, ..Default::default() },
+    )
+    .unwrap();
+    srv.telemetry().set_enabled(false);
+    for i in 0..6u64 {
+        srv.submit(prompt(12 + (i as usize % 3), i), 0, 0.0);
+    }
+    let mut responses = srv.run_until_idle().unwrap();
+    responses.sort_by_key(|r| r.id);
+    let tok_off: Vec<Vec<i32>> = responses.into_iter().map(|r| r.tokens).collect();
+    assert_eq!(tok_on, tok_off, "telemetry must never change model outputs");
+}
+
+#[test]
+fn serve_exposition_and_trace_are_well_formed() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset(PRESET).unwrap().clone();
+    let state = ModelState::init(&preset.blocks, 3);
+    let (_, srv) = run_workload(&engine, &state);
+    let tel = srv.telemetry();
+
+    // exposition: TYPE lines, the advertised serve metric families, and
+    // cumulative histogram bucket lines ending in +Inf
+    let text = tel.registry.prometheus();
+    for family in [
+        "serve_admissions_total",
+        "serve_decode_steps_total",
+        "serve_kv_pages_allocated_total",
+        "serve_ttft_seconds",
+        "serve_itl_seconds",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing TYPE for {family}");
+    }
+    assert!(text.contains("serve_ttft_seconds_bucket{le=\"+Inf\"}"));
+    let admissions: u64 = text
+        .lines()
+        .find(|l| l.starts_with("serve_admissions_total "))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap();
+    assert!(admissions >= 6, "six requests were admitted at least once: {admissions}");
+
+    // JSON snapshot parses and the percentile fields are ordered
+    let snap = Value::parse(&tel.registry.snapshot().to_string()).unwrap();
+    let ttft = snap.get("histograms").unwrap().get("serve_ttft_seconds").unwrap();
+    assert_eq!(ttft.get("count").unwrap().as_u64().unwrap(), 6);
+    let p50 = ttft.get("p50").unwrap().as_f64().unwrap();
+    let p99 = ttft.get("p99").unwrap().as_f64().unwrap();
+    assert!(p50 <= p99 && p50 > 0.0);
+
+    // Chrome trace: parses, has spans of every serve phase, complete
+    // events only, microsecond fields present
+    let doc = Value::parse(&tel.tracer.chrome_trace().to_string()).unwrap();
+    let events = match doc.get("traceEvents").unwrap() {
+        Value::Arr(v) => v,
+        other => panic!("traceEvents not an array: {other:?}"),
+    };
+    assert!(!events.is_empty());
+    let mut names: Vec<String> = Vec::new();
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        names.push(e.get("name").unwrap().as_str().unwrap().to_string());
+    }
+    for want in ["serve/step", "serve/admission", "serve/prefill", "serve/decode_step"] {
+        assert!(names.iter().any(|n| n == want), "no {want} span in trace");
+    }
+}
+
+/// One bucket spans a 2^(1/BUCKETS_PER_OCTAVE) factor — the resolution
+/// contract the README advertises (~9%).
+#[test]
+fn bucket_resolution_is_about_nine_percent() {
+    let step = 2f64.powf(1.0 / BUCKETS_PER_OCTAVE as f64);
+    assert!((step - 1.0902).abs() < 1e-3);
+    let i = LogHistogram::bucket_index(0.010);
+    assert!(LogHistogram::bucket_lower(i) <= 0.010 && 0.010 < LogHistogram::bucket_upper(i));
+}

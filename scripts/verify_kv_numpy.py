@@ -50,6 +50,15 @@ PR 7 (preempt-and-requeue, priorities, SLA-aware victim policy) adds:
     and pages drain to zero through evict->requeue->finish churn; the
     budget identity reserved <= held + free + evictable holds at every
     admission; random workloads always drain (forward progress)
+
+PR 8 (unified telemetry) adds:
+
+14. streaming log-bucketed histogram (telemetry::hist::LogHistogram):
+    the bucket_index formula ports exactly; quantile(q) (rank
+    floor((n-1)q), geometric bucket midpoint clamped to [min, max]) is
+    within one bucket width of the exact sorted quantile on log-uniform
+    and lognormal draws; q=0/q=1 are exact; merge(a, b) equals feeding
+    the concatenation; count/sum are exact
 """
 import numpy as np
 
@@ -1775,5 +1784,110 @@ for _trial in range(4):
     drain_and_check_leaks(eng, slots)
 print(f"13e forward-progress fuzz: 4 random overcommitted workloads drained "
       f"({fuzz_preempts} preemptions)")
+
+# ---- 14: streaming log-bucketed histogram (telemetry::hist) ------------
+# Op-for-op port of LogHistogram: fixed 320 preallocated buckets, 8 per
+# octave starting at 1e-9, rank-based quantiles at geometric bucket
+# midpoints clamped to the exact observed [min, max].
+H_MIN, H_BPO, H_NB = 1e-9, 8, 320
+
+
+def h_bucket_index(v):
+    if not np.isfinite(v) or v <= H_MIN:
+        return 0
+    return min(int((np.log2(v) - np.log2(H_MIN)) * H_BPO), H_NB - 1)
+
+
+def h_lower(i):
+    return H_MIN * 2.0 ** (i / H_BPO)
+
+
+def h_width(i):
+    return h_lower(i + 1) - h_lower(i)
+
+
+class HistSim14:
+    def __init__(self):
+        self.counts = np.zeros(H_NB, dtype=np.uint64)
+        self.n, self.total = 0, 0.0
+        self.lo, self.hi = np.inf, -np.inf
+
+    def record(self, v):
+        if not np.isfinite(v):
+            return
+        self.counts[h_bucket_index(v)] += 1
+        self.n += 1
+        self.total += v
+        self.lo, self.hi = min(self.lo, v), max(self.hi, v)
+
+    def merge(self, other):
+        self.counts += other.counts
+        self.n += other.n
+        self.total += other.total
+        self.lo, self.hi = min(self.lo, other.lo), max(self.hi, other.hi)
+
+    def quantile(self, q):
+        if self.n == 0:
+            return float("nan")
+        if q <= 0.0:
+            return self.lo
+        if q >= 1.0:
+            return self.hi
+        rank = int((self.n - 1) * q)
+        seen = 0
+        for i in range(H_NB):
+            seen += int(self.counts[i])
+            if seen > rank:
+                mid = h_lower(i) * 2.0 ** (1.0 / (2 * H_BPO))
+                return min(max(mid, self.lo), self.hi)
+        return self.hi
+
+
+r14 = np.random.default_rng(1414)
+n_checked = 0
+for dist in ("loguniform", "lognormal"):
+    for n in (1, 2, 7, 100, 2000):
+        if dist == "loguniform":
+            samples = 10.0 ** r14.uniform(-6.0, 2.0, size=n)
+        else:
+            samples = np.exp(r14.normal(-5.0, 2.0, size=n))
+        h = HistSim14()
+        for v in samples:
+            h.record(float(v))
+        srt = np.sort(samples)
+        assert h.n == n and abs(h.total - samples.sum()) <= 1e-9 * samples.sum()
+        for q in (0.0, 0.5, 0.9, 0.95, 0.99, 1.0):
+            exact = float(srt[int((n - 1) * q)])
+            got = h.quantile(q)
+            tol = h_width(h_bucket_index(exact)) + 1e-15
+            assert abs(got - exact) <= tol, (dist, n, q, got, exact, tol)
+            n_checked += 1
+        assert h.quantile(0.0) == float(srt[0]), "q=0 must be exact"
+        assert h.quantile(1.0) == float(srt[-1]), "q=1 must be exact"
+
+# merge(a, b) == feed(a ++ b), bucket-for-bucket and quantile-for-quantile
+xs = 10.0 ** r14.uniform(-6.0, 2.0, size=500)
+ys = np.exp(r14.normal(-5.0, 2.0, size=313))
+ha, hb, hw = HistSim14(), HistSim14(), HistSim14()
+for v in xs:
+    ha.record(float(v))
+    hw.record(float(v))
+for v in ys:
+    hb.record(float(v))
+    hw.record(float(v))
+ha.merge(hb)
+assert np.array_equal(ha.counts, hw.counts) and ha.n == hw.n
+assert ha.lo == hw.lo and ha.hi == hw.hi
+for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+    assert ha.quantile(q) == hw.quantile(q), q
+
+# bucket formula edges: underflow clamps to 0, overflow to the top bucket
+assert h_bucket_index(0.0) == 0 and h_bucket_index(H_MIN) == 0
+assert h_bucket_index(float("nan")) == 0
+assert h_bucket_index(1e300) == H_NB - 1
+mid_ratio = 2.0 ** (1.0 / H_BPO)
+assert abs(mid_ratio - 1.0902) < 1e-3, "one bucket spans ~9%"
+print(f"14 log-bucketed histogram: {n_checked} quantiles within one bucket "
+      f"width of exact; merge == concat-feed; edges clamp")
 
 print("\nALL KV-SERVING VERIFICATION CHECKS PASSED")
