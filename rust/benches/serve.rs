@@ -288,6 +288,15 @@ fn main() {
         ("value", Value::num(tel_ratio)),
         ("min", Value::num(0.95)),
     ]));
+    // the audit feature must be compiled out of bench builds: a bench
+    // binary carrying shadow-state validators would silently measure
+    // the audited hot path (value 1.0 iff audit is off; min 1.0 makes
+    // an audited bench run fail bench_compare loudly)
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("audit/compiled_out")),
+        ("value", Value::num(if cfg!(feature = "audit") { 0.0 } else { 1.0 })),
+        ("min", Value::num(1.0)),
+    ]));
     // instrumented steady-state decode must not grow any telemetry
     // allocation: counters/gauges are cells, histogram buckets and the
     // span ring are preallocated — the combined fingerprint is identity-

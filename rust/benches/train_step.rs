@@ -501,6 +501,14 @@ fn main() {
         results.push(r);
     }
 
+    // the audit feature must be compiled out of bench builds (see the
+    // serve bench's matching invariant): 1.0 iff audit is off
+    invariants.push(Value::obj(vec![
+        ("name", Value::str("audit/compiled_out")),
+        ("value", Value::num(if cfg!(feature = "audit") { 0.0 } else { 1.0 })),
+        ("min", Value::num(1.0)),
+    ]));
+
     // --- machine-readable summary next to BENCH_selection.json ---
     let ws_stats = engine.workspace_stats();
     let summary = Value::obj(vec![

@@ -1,0 +1,43 @@
+//! Scheduler page-budget auditor.
+
+/// Re-check the admission-control solvency law: every page the engine
+/// has *promised* to running sequences (`reserved`) must be backed by a
+/// page it can actually produce — one already `held` by a slot's table,
+/// one on the `free` list, or one reclaimable from the prefix cache
+/// (`evictable`, entries only the cache references). If the promise
+/// exceeds the backing, a decode step can hit an unrecoverable
+/// out-of-pages error even though admission said yes.
+///
+/// The caller re-derives all four quantities from the live structures
+/// (active list, pool, cache) rather than trusting the engine's own
+/// `page_budget` arithmetic — that is the point of the audit.
+pub fn check_budget(reserved: usize, held: usize, free: usize, evictable: usize) -> Vec<String> {
+    let mut violations = Vec::new();
+    let backing = held + free + evictable;
+    if reserved > backing {
+        violations.push(format!(
+            "budget: {reserved} pages promised but only {backing} exist \
+             ({held} held + {free} free + {evictable} evictable)"
+        ));
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solvent_budget_is_clean() {
+        assert!(check_budget(0, 0, 0, 0).is_empty());
+        assert!(check_budget(6, 2, 3, 1).is_empty());
+        assert!(check_budget(5, 2, 3, 1).is_empty());
+    }
+
+    #[test]
+    fn overcommitted_budget_fires() {
+        let v = check_budget(10, 2, 3, 1);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("10 pages promised"), "{v:?}");
+    }
+}

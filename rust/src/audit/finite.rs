@@ -1,0 +1,51 @@
+//! Finite-ness (NaN / inf) probes for kernel boundaries.
+
+/// Scan a kernel output for non-finite values. Reports the first bad
+/// index plus a total count, so a single poisoned lane and a fully
+/// saturated buffer are distinguishable in the violation text.
+pub fn check_finite(name: &str, xs: &[f32]) -> Vec<String> {
+    let mut violations = Vec::new();
+    let bad = xs.iter().filter(|x| !x.is_finite()).count();
+    if bad > 0 {
+        let first = xs.iter().position(|x| !x.is_finite()).unwrap_or(0);
+        violations.push(format!(
+            "finite: {name}: {bad}/{} non-finite values (first at index {first}: {})",
+            xs.len(),
+            xs[first]
+        ));
+    }
+    violations
+}
+
+/// Panic on the first non-finite value — the hot-path hook form, used
+/// under `cfg(feature = "audit")` at kernel boundaries.
+pub fn assert_finite(name: &str, xs: &[f32]) {
+    let v = check_finite(name, xs);
+    assert!(v.is_empty(), "audit failed:\n{}", v.join("\n"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finite_buffers_are_clean() {
+        assert!(check_finite("x", &[]).is_empty());
+        assert!(check_finite("x", &[0.0, -1.5, f32::MAX, f32::MIN_POSITIVE]).is_empty());
+    }
+
+    #[test]
+    fn nan_and_inf_fire() {
+        let v = check_finite("logits", &[1.0, f32::NAN, f32::INFINITY]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("logits") && v[0].contains("2/3"), "{v:?}");
+        assert!(v[0].contains("index 1"), "{v:?}");
+        assert!(!check_finite("g", &[f32::NEG_INFINITY]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "audit failed")]
+    fn assert_form_panics() {
+        assert_finite("x", &[f32::NAN]);
+    }
+}

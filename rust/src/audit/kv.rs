@@ -1,0 +1,193 @@
+//! Paged-KV shadow refcount auditor.
+
+use crate::serve::kv::KvPool;
+use crate::serve::prefix::PrefixCache;
+
+/// Rebuild every page's reference count from scratch — walk all in-use
+/// slots' page tables plus the prefix cache's entry pages — and compare
+/// against the pool's incremental `refc` bookkeeping, then re-check the
+/// free list, the allocation ledger and the slot accounting. Catches
+/// leaks (a page no table maps but `refc > 0` keeps off the free list),
+/// double-releases (shadow count above the recorded one), and COW drift
+/// (a fork that forgot to drop the old page's reference).
+pub fn check_kv_pool(pool: &KvPool, cache: &PrefixCache) -> Vec<String> {
+    let mut violations = Vec::new();
+    let n_pages = pool.n_pages();
+
+    // shadow refcounts: one reference per table entry, one per cache entry
+    let mut shadow = vec![0u32; n_pages];
+    let mut slots_in_use = 0usize;
+    for slot in 0..pool.n_slots() {
+        if !pool.is_in_use(slot) {
+            if !pool.table(slot).is_empty() {
+                violations.push(format!(
+                    "kv: free slot {slot} still maps {} pages",
+                    pool.table(slot).len()
+                ));
+            }
+            continue;
+        }
+        slots_in_use += 1;
+        if pool.len(slot) > pool.mapped_rows(slot) {
+            violations.push(format!(
+                "kv: slot {slot} caches {} rows but maps only {}",
+                pool.len(slot),
+                pool.mapped_rows(slot)
+            ));
+        }
+        if pool.len(slot) > pool.capacity() {
+            violations.push(format!(
+                "kv: slot {slot} caches {} rows beyond the {}-row capacity",
+                pool.len(slot),
+                pool.capacity()
+            ));
+        }
+        for &page in pool.table(slot) {
+            if (page as usize) < n_pages {
+                shadow[page as usize] += 1;
+            } else {
+                violations.push(format!(
+                    "kv: slot {slot} maps page {page} out of range 0..{n_pages}"
+                ));
+            }
+        }
+    }
+    for page in cache.entry_pages() {
+        if (page as usize) < n_pages {
+            shadow[page as usize] += 1;
+        } else {
+            violations
+                .push(format!("kv: prefix cache holds page {page} out of range 0..{n_pages}"));
+        }
+    }
+    for (page, &expect) in shadow.iter().enumerate() {
+        let got = pool.page_ref(page as u32);
+        if got != expect {
+            violations.push(format!(
+                "kv: page {page} refcount drift: pool records {got}, \
+                 tables + prefix cache reference it {expect} time(s)"
+            ));
+        }
+    }
+
+    // free list: in range, duplicate-free, refcount zero — and complete
+    // (every zero-refcount page is on it, else the page leaked)
+    let mut on_free_list = vec![false; n_pages];
+    for &page in pool.free_page_ids() {
+        if page as usize >= n_pages {
+            violations.push(format!("kv: free list holds page {page} out of range 0..{n_pages}"));
+            continue;
+        }
+        if on_free_list[page as usize] {
+            violations.push(format!("kv: page {page} appears twice on the free list"));
+        }
+        on_free_list[page as usize] = true;
+        if pool.page_ref(page) != 0 {
+            violations.push(format!(
+                "kv: free-listed page {page} has refcount {}",
+                pool.page_ref(page)
+            ));
+        }
+    }
+    for page in 0..n_pages {
+        if pool.page_ref(page as u32) == 0 && !on_free_list[page] {
+            violations.push(format!("kv: page {page} leaked (refcount 0 but not on the free list)"));
+        }
+    }
+
+    // allocation ledger: claims minus returns must equal live pages
+    let live = pool.pages_in_use() as u64;
+    if pool.pages_allocated() < pool.pages_released() {
+        violations.push(format!(
+            "kv: ledger underflow: {} pages released but only {} allocated",
+            pool.pages_released(),
+            pool.pages_allocated()
+        ));
+    } else if pool.pages_allocated() - pool.pages_released() != live {
+        violations.push(format!(
+            "kv: ledger drift: allocated {} - released {} != {live} pages in use",
+            pool.pages_allocated(),
+            pool.pages_released()
+        ));
+    }
+
+    // slot accounting: free slots + in-use slots must cover the pool
+    if pool.n_free() + slots_in_use != pool.n_slots() {
+        violations.push(format!(
+            "kv: slot drift: {} free + {slots_in_use} in use != {} slots",
+            pool.n_free(),
+            pool.n_slots()
+        ));
+    }
+
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, ModelSpec};
+
+    fn model() -> ModelSpec {
+        Manifest::builtin().preset("test-tiny").unwrap().model.clone()
+    }
+
+    #[test]
+    fn sound_pool_is_clean_through_share_and_cow() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 3);
+        let cache = PrefixCache::new();
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "fresh pool");
+        let p = pool.page_size();
+        let a = pool.alloc().unwrap();
+        pool.ensure_room(a, p + 1).unwrap();
+        pool.set_len(a, p + 1);
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "after prefill");
+        let stem = pool.table(a)[0];
+        let b = pool.alloc().unwrap();
+        pool.attach_shared(b, &[stem], p - 1);
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "after share");
+        pool.make_row_writable(b, p - 1).unwrap();
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "after COW fork");
+        pool.release(b);
+        pool.release(a);
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "after release");
+    }
+
+    #[test]
+    fn refcount_drift_fires() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let cache = PrefixCache::new();
+        let a = pool.alloc().unwrap();
+        pool.ensure_room(a, 1).unwrap();
+        // an extra reference nothing maps: exactly what a leaked
+        // prefix-cache retain or a missed COW decrement looks like
+        let page = pool.table(a)[0];
+        pool.retain_page(page);
+        let v = check_kv_pool(&pool, &cache);
+        assert!(
+            v.iter().any(|s| s.contains("refcount drift")),
+            "auditor must flag the drift: {v:?}"
+        );
+    }
+
+    #[test]
+    fn cache_references_are_counted() {
+        let m = model();
+        let mut pool = KvPool::new(&m, 2);
+        let mut cache = PrefixCache::new();
+        let a = pool.alloc().unwrap();
+        let p = pool.page_size();
+        pool.ensure_room(a, p).unwrap();
+        pool.set_len(a, p);
+        let tokens: Vec<i32> = (0..p as i32).collect();
+        let table = pool.table(a).to_vec();
+        cache.insert(&tokens, &table, &mut pool);
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "cache retain is not drift");
+        pool.release(a);
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "cache keeps the stem alive");
+        cache.clear(&mut pool);
+        assert!(check_kv_pool(&pool, &cache).is_empty(), "clear releases cleanly");
+    }
+}

@@ -1,0 +1,32 @@
+//! Shadow-state invariant auditors for the unsafe hot paths.
+//!
+//! Each validator re-derives a subsystem's invariants **from first
+//! principles** — independent of the counters the subsystem maintains
+//! incrementally — and reports every violation as a human-readable
+//! string. An empty report means the state is sound; a non-empty one
+//! means incremental bookkeeping has drifted from reality (a leaked
+//! page, a double-release, a budget promise the pool cannot back, an
+//! aliased arena slab, a NaN escaping a kernel).
+//!
+//! The validators themselves compile unconditionally (so `cargo check`
+//! and the default test lane keep them honest), but the *hooks* that run
+//! them on the hot paths — [`crate::serve::ServeEngine`]'s post-step
+//! check and the trainer's per-step backend audit — are gated behind the
+//! `audit` cargo feature. With the feature off the hooks are compiled
+//! out entirely: zero branches, zero cost, bit-identical outputs (the
+//! `audit/compiled_out` bench invariant pins this). With
+//! `--features audit` every engine step and train step pays a full
+//! re-derivation pass and panics/errors on the first violation.
+//!
+//! ```text
+//! cargo test --features audit            # full suite with validators on
+//! cargo test --features audit --test audit_props   # randomized churn
+//! ```
+
+pub mod budget;
+pub mod finite;
+pub mod kv;
+
+pub use budget::check_budget;
+pub use finite::{assert_finite, check_finite};
+pub use kv::check_kv_pool;

@@ -261,7 +261,7 @@ impl<'e, B: KvBackend> Evaluator<'e, B> {
     /// stream through `batch` KV slots — no padding to the preset batch,
     /// finished rows free their slot for the next problem mid-decode.
     pub fn accuracy(&self, state: &ModelState, problems: &[Problem]) -> Result<EvalResult> {
-        let t0 = std::time::Instant::now();
+        let t0 = crate::telemetry::Stopwatch::start();
         let slots = self.preset.model.batch.max(1);
         let mut srv = ServeEngine::new(
             self.engine,
@@ -299,7 +299,7 @@ impl<'e, B: KvBackend> Evaluator<'e, B> {
             accuracy: n_correct as f64 / n.max(1) as f64,
             format_rate: n_formatted as f64 / n.max(1) as f64,
             n_truncated,
-            wallclock_s: t0.elapsed().as_secs_f64(),
+            wallclock_s: t0.elapsed_s(),
         })
     }
 }

@@ -23,6 +23,12 @@
 //! generic, and the backend-parity test suite holds the reference
 //! executor to the JAX-derived golden trajectories.
 
+// Every unsafe operation must sit in its own `unsafe { }` block with its
+// own SAFETY argument, even inside `unsafe fn` — enforced here and by
+// `scripts/lint_repo.py` (which requires the SAFETY comments themselves).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod audit;
 pub mod config;
 pub mod data;
 pub mod eval;

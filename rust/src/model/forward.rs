@@ -352,10 +352,15 @@ fn attention_fwd(
     let mut att = ws.take_zeroed(b * s * d);
     let mut probs = ws.take_zeroed(b * n_heads * s * s);
 
+    // the b per-batch stripes tile each buffer exactly: [bi·s·d, (bi+1)·s·d)
+    // over att and [bi·h·s·s, (bi+1)·h·s·s) over probs never overlap
+    debug_assert_eq!(att.len(), b * s * d);
+    debug_assert_eq!(probs.len(), b * n_heads * s * s);
     let att_ptr = SendPtr(att.as_mut_ptr());
     let probs_ptr = SendPtr(probs.as_mut_ptr());
     par_for_each_index(b, true, |bi| {
-        // safety: each batch index owns disjoint stripes of att/probs
+        debug_assert!((bi + 1) * s * d <= b * s * d, "att stripe {bi} out of bounds");
+        // SAFETY: each batch index owns disjoint stripes of att/probs
         let att_b = unsafe {
             std::slice::from_raw_parts_mut(att_ptr.get().add(bi * s * d), s * d)
         };
@@ -431,12 +436,24 @@ fn attention_bwd(
     // reading it, so stale contents are never observed)
     let mut dp_all = ws.take(b * s);
 
+    // the b per-batch stripes tile each gradient buffer exactly —
+    // [bi·s·d, (bi+1)·s·d) over dq/dk/dv and [bi·s, (bi+1)·s) over the
+    // dp scratch are pairwise disjoint across workers
+    debug_assert_eq!(dq.len(), b * s * d);
+    debug_assert_eq!(dk.len(), b * s * d);
+    debug_assert_eq!(dv.len(), b * s * d);
+    debug_assert!(dp_all.len() >= b * s);
     let dq_ptr = SendPtr(dq.as_mut_ptr());
     let dk_ptr = SendPtr(dk.as_mut_ptr());
     let dv_ptr = SendPtr(dv.as_mut_ptr());
     let dp_ptr = SendPtr(dp_all.as_mut_ptr());
     par_for_each_index(b, true, |bi| {
-        // safety: each batch index owns disjoint stripes of dq/dk/dv/dp
+        // steady-state: stripe rails are debug-only
+        debug_assert!(
+            (bi + 1) * s * d <= b * s * d && (bi + 1) * s <= b * s,
+            "gradient stripe {bi} out of bounds"
+        );
+        // SAFETY: each batch index owns disjoint stripes of dq/dk/dv/dp
         let dq_b =
             unsafe { std::slice::from_raw_parts_mut(dq_ptr.get().add(bi * s * d), s * d) };
         let dk_b =
@@ -1506,18 +1523,38 @@ pub struct KvView<'a> {
     _pool: PhantomData<&'a mut f32>,
 }
 
-// Safety: the discipline documented on the type — concurrent access to a
-// page shared between views is read-only; writable rows live in pages
-// owned by exactly one view.
+// SAFETY: the constructor contract ([`KvView::from_pool`]) plus the
+// discipline documented on the type — concurrent access to a page shared
+// between views is read-only; writable rows (>= pos) live in pages owned
+// by exactly one view, so no two threads ever hold overlapping mutable
+// regions; the `'a` borrow keeps the backing store alive and pinned.
 unsafe impl Send for KvView<'_> {}
+// SAFETY: as above — `&KvView` only permits reads, and shared pages are
+// read-only by the same contract.
 unsafe impl Sync for KvView<'_> {}
 
 impl<'a> KvView<'a> {
-    /// Pool-side constructor (`serve::KvPool::views`); the pool upholds
-    /// the safety discipline documented on the type. The unconstrained
-    /// lifetime is pinned by the pool method's `&mut self` signature.
+    /// Pool-side constructor (`serve::KvPool::views`).
+    ///
+    /// # Safety
+    ///
+    /// The caller (the pool — this is the one seam where the borrow
+    /// checker hands over to a stated invariant) must guarantee, for the
+    /// view's whole lifetime `'a`:
+    ///
+    /// * `k`/`v` point to live backing stores of at least
+    ///   `max(pages)+1` pages of `n_layers · page_size · d` `f32`s each,
+    ///   neither moved nor freed while any view exists —
+    ///   `KvPool::views` pins this with its `&mut self` borrow, which
+    ///   `'a` transitively freezes;
+    /// * every id in `pages` is in range for those stores;
+    /// * every page covering rows `>= pos` (rows kernels may write) is
+    ///   mapped by **this view only** (pool refcount 1), so mutable
+    ///   access is exclusive;
+    /// * pages covering rows `< pos` may be shared across views but are
+    ///   then never written through any of them.
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn from_pool(
+    pub(crate) unsafe fn from_pool(
         k: *mut f32,
         v: *mut f32,
         pages: Vec<u32>,
@@ -1527,6 +1564,13 @@ impl<'a> KvView<'a> {
         d: usize,
         capacity: usize,
     ) -> Self {
+        debug_assert!(!k.is_null() && !v.is_null(), "kv view over null backing store");
+        debug_assert!(page_size > 0 && n_layers > 0 && d > 0);
+        debug_assert!(
+            pos <= pages.len() * page_size,
+            "pos {pos} beyond the {} mapped rows",
+            pages.len() * page_size
+        );
         Self { k, v, pages, pos, page_size, n_layers, d, capacity, _pool: PhantomData }
     }
 
@@ -1589,12 +1633,18 @@ impl<'a> KvView<'a> {
     #[inline]
     fn k_row(&self, layer: usize, row: usize) -> &[f32] {
         let off = self.offset(layer, row);
+        // SAFETY: offset() bounds-checks the page index, every mapped
+        // page id is in range for the backing store (constructor
+        // contract), and reads of cached rows never race a write (shared
+        // pages are read-only, writable pages are exclusive).
         unsafe { std::slice::from_raw_parts(self.k.add(off), self.d) }
     }
 
     #[inline]
     fn v_row(&self, layer: usize, row: usize) -> &[f32] {
         let off = self.offset(layer, row);
+        // SAFETY: as k_row — in-bounds by the constructor contract,
+        // race-free by the shared-read/exclusive-write discipline.
         unsafe { std::slice::from_raw_parts(self.v.add(off), self.d) }
     }
 
@@ -1603,6 +1653,9 @@ impl<'a> KvView<'a> {
     #[inline]
     fn write_row(&mut self, layer: usize, row: usize, k: &[f32], v: &[f32]) {
         let off = self.offset(layer, row);
+        // SAFETY: in-bounds as above; `&mut self` plus the pool's
+        // refcount-1 guarantee on writable pages makes these regions
+        // exclusive to this view, so the mutable slices alias nothing.
         unsafe {
             std::slice::from_raw_parts_mut(self.k.add(off), self.d).copy_from_slice(k);
             std::slice::from_raw_parts_mut(self.v.add(off), self.d).copy_from_slice(v);
@@ -1708,7 +1761,7 @@ fn attention_decode(
     par_for_each_index(n, par, |i| {
         let pos = positions[i];
         let view = &seqs[i];
-        // safety: each sequence index owns a disjoint stripe of att/prow
+        // SAFETY: each sequence index owns a disjoint stripe of att/prow
         let orow =
             unsafe { std::slice::from_raw_parts_mut(att_ptr.get().add(i * d), d) };
         let prow =
@@ -1783,7 +1836,7 @@ fn attention_ctx(
     let prow_ptr = SendPtr(prow_all.as_mut_ptr());
     par_for_each_index(t, par, |i| {
         let pos = pos0 + i;
-        // safety: each query row owns a disjoint stripe of att/prow
+        // SAFETY: each query row owns a disjoint stripe of att/prow
         let orow =
             unsafe { std::slice::from_raw_parts_mut(att_ptr.get().add(i * d), d) };
         let prow =

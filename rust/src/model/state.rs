@@ -100,7 +100,7 @@ impl ModelState {
             w.write_all(&(name.len() as u32).to_le_bytes())?;
             w.write_all(name.as_bytes())?;
             w.write_all(&(flat.len() as u64).to_le_bytes())?;
-            // safety: f32 slice as bytes (LE on all supported targets)
+            // SAFETY: f32 slice as bytes (LE on all supported targets)
             let bytes =
                 unsafe { std::slice::from_raw_parts(flat.as_ptr() as *const u8, flat.len() * 4) };
             w.write_all(bytes)?;
@@ -132,6 +132,10 @@ impl ModelState {
             r.read_exact(&mut u64buf)?;
             let numel = u64::from_le_bytes(u64buf) as usize;
             let mut flat = vec![0.0f32; numel];
+            // SAFETY: the byte view covers exactly the freshly-allocated
+            // vec's numel f32s; every u8 pattern is a valid f32 (LE on
+            // all supported targets) and `flat` is not touched until the
+            // view is dropped at the end of the statement
             let bytes = unsafe {
                 std::slice::from_raw_parts_mut(flat.as_mut_ptr() as *mut u8, numel * 4)
             };

@@ -76,11 +76,11 @@
 //! [`crate::runtime`].
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::manifest::Manifest;
+use crate::telemetry::Stopwatch;
 
 /// Element type of a device tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -311,10 +311,18 @@ pub trait Backend {
     /// The downloads are real: they show up in [`Backend::transfer_stats`].
     fn execute_to_host(&self, exe: &Self::Exe, args: &[&Self::Buffer]) -> Result<HostOutputs> {
         let out = self.execute(exe, args)?;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let host: Vec<Vec<f32>> =
             out.outputs.iter().map(|b| self.read_f32(b)).collect::<Result<_>>()?;
-        Ok(HostOutputs::new(host, out.execute_s, t0.elapsed().as_secs_f64()))
+        Ok(HostOutputs::new(host, out.execute_s, t0.elapsed_s()))
+    }
+
+    /// Shadow-state audit of backend-internal bookkeeping (e.g. the
+    /// reference executor's workspace-arena accounting); empty = sound.
+    /// The trainer's `audit`-gated per-step hook calls this; the default
+    /// is a no-op for backends with nothing to re-derive.
+    fn audit_report(&self) -> Vec<String> {
+        Vec::new()
     }
 }
 

@@ -25,13 +25,13 @@ use std::cell::{Cell, Ref, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 use xla::{HloModuleProto, PjRtBuffer, PjRtClient, XlaComputation};
 
 use super::backend::{Backend, DType, DeviceOutputs, TensorMeta, TransferStats};
 use super::manifest::Manifest;
+use crate::telemetry::Stopwatch;
 
 /// Typed device-tensor handle of the PJRT engine (see module docs for the
 /// swap-based in-place semantics).
@@ -81,7 +81,7 @@ impl Engine {
             return Ok(exe.clone());
         }
         let path = self.dir.join(file);
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let proto = HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
         let comp = XlaComputation::from_proto(&proto);
@@ -92,7 +92,7 @@ impl Engine {
         let exe = Rc::new(Exe {
             exe,
             name: file.to_string(),
-            compile_s: t0.elapsed().as_secs_f64(),
+            compile_s: t0.elapsed_s(),
         });
         self.cache.borrow_mut().insert(file.to_string(), exe.clone());
         Ok(exe)
@@ -233,10 +233,10 @@ impl Backend for Engine {
     fn execute(&self, exe: &Exe, args: &[&EngineTensor]) -> Result<DeviceOutputs<EngineTensor>> {
         let guards: Vec<Ref<'_, PjRtBuffer>> = args.iter().map(|a| a.buf.borrow()).collect();
         let refs: Vec<&PjRtBuffer> = guards.iter().map(|g| &**g).collect();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let out = exe.run_device(&refs)?;
         drop(guards);
-        let execute_s = t0.elapsed().as_secs_f64();
+        let execute_s = t0.elapsed_s();
 
         let root = out[0]
             .to_literal_sync()

@@ -47,13 +47,13 @@
 use std::cell::{Cell, Ref, RefCell, RefMut};
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::model::forward;
 use crate::optimizer::{fused_adamw, fused_adamw_scaled, lr_cosine, AdamWParams};
 use crate::selection::grad_norm::block_norm_sq;
+use crate::telemetry::Stopwatch;
 use crate::util::workspace::{Workspace, WorkspaceStats};
 
 use super::backend::{Backend, DType, DeviceOutputs, TensorMeta, TransferStats};
@@ -866,9 +866,9 @@ impl Backend for ReferenceBackend {
     }
 
     fn execute(&self, exe: &RefExe, args: &[&RefTensor]) -> Result<DeviceOutputs<RefTensor>> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let outputs = self.run(exe, args)?;
-        Ok(DeviceOutputs { outputs, execute_s: t0.elapsed().as_secs_f64() })
+        Ok(DeviceOutputs { outputs, execute_s: t0.elapsed_s() })
     }
 
     fn read_f32(&self, buf: &RefTensor) -> Result<Vec<f32>> {
@@ -899,6 +899,10 @@ impl Backend for ReferenceBackend {
 
     fn transfer_stats(&self) -> TransferStats {
         self.stats.get()
+    }
+
+    fn audit_report(&self) -> Vec<String> {
+        self.ws.borrow().audit_check()
     }
 }
 

@@ -67,13 +67,12 @@
 //! traces replay at full speed while latency accounting stays faithful.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::model::ModelState;
 use crate::runtime::Preset;
-use crate::telemetry::{CounterId, GaugeId, HistId, SpanId, Telemetry};
+use crate::telemetry::{CounterId, GaugeId, HistId, SpanId, Stopwatch, Telemetry};
 
 use super::kv::KvPool;
 use super::prefix::PrefixCache;
@@ -316,7 +315,7 @@ pub struct ServeEngine<'e, B: KvBackend> {
     reservation: Reservation,
     max_new_default: usize,
     eos: i32,
-    t0: Instant,
+    t0: Stopwatch,
     skip_s: f64,
     stats: ServeStats,
     /// Shared so RAII span guards can borrow the hub while `&mut self`
@@ -370,7 +369,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             reservation: cfg.reservation,
             max_new_default: cfg.max_new_tokens,
             eos: backend.manifest().tokenizer.eos,
-            t0: Instant::now(),
+            t0: Stopwatch::start(),
             skip_s: 0.0,
             stats: ServeStats { kv_bytes, ..Default::default() },
             tel: Rc::new(tel),
@@ -391,7 +390,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
     /// Engine-clock seconds since construction: wallclock plus any idle
     /// gaps [`ServeEngine::run_until_idle`] fast-forwarded across.
     pub fn now_s(&self) -> f64 {
-        self.t0.elapsed().as_secs_f64() + self.skip_s
+        self.t0.elapsed_s() + self.skip_s
     }
 
     /// Enqueue a greedy prompt arriving at `arrival_s` on the engine
@@ -466,6 +465,51 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
     /// references). Mostly for leak accounting in tests.
     pub fn clear_prefix_cache(&mut self) {
         self.cache.clear(&mut self.pool);
+    }
+
+    /// Every invariant violation the shadow-state auditors can find in
+    /// the engine right now (empty = sound): the full KV refcount/ledger
+    /// re-derivation plus the page-budget solvency law, both recomputed
+    /// from the live structures rather than the engine's own counters.
+    #[cfg(feature = "audit")]
+    pub fn audit_violations(&self) -> Vec<String> {
+        let mut v = crate::audit::check_kv_pool(&self.pool, &self.cache);
+        // re-derive the budget inputs from first principles (the active
+        // list and the pool), independent of page_budget()'s arithmetic
+        let mut held = 0usize;
+        let mut reserved = 0usize;
+        for a in &self.active {
+            let h = self.pool.pages_held(a.slot);
+            held += h;
+            reserved += match self.reservation {
+                Reservation::WorstCase => a.worst_pages.saturating_sub(h),
+                Reservation::Optimistic => {
+                    let next = (self.pool.len(a.slot) + 1).min(self.pool.capacity());
+                    self.pool.pages_for(next).saturating_sub(h)
+                }
+            };
+        }
+        v.extend(crate::audit::check_budget(
+            reserved,
+            held,
+            self.pool.n_free_pages(),
+            self.cache.evictable(&self.pool),
+        ));
+        v
+    }
+
+    /// Post-step audit hook: panic on the first invariant violation.
+    #[cfg(feature = "audit")]
+    fn audit_check(&self) {
+        let v = self.audit_violations();
+        assert!(v.is_empty(), "serve audit failed after step:\n{}", v.join("\n"));
+    }
+
+    /// Mutable pool access for audit negative tests (corrupt the state,
+    /// then prove the auditor fires). Not part of the serving API.
+    #[cfg(feature = "audit")]
+    pub fn kv_pool_mut(&mut self) -> &mut KvPool {
+        &mut self.pool
     }
 
     fn response(a: ActiveSeq, finish_s: f64) -> Response {
@@ -716,7 +760,14 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     tel.registry.observe(m.queue_wait, (now - arrival_s).max(0.0));
                 }
                 let worst_pages = self.worst_pages_for(prompt.len(), max_new);
-                let slot = self.pool.alloc().expect("admit() never exceeds free slots");
+                let Some(slot) = self.pool.alloc() else {
+                    // admit() is capped at n_free(), so this is an
+                    // accounting bug — surface it instead of panicking
+                    // the serving loop
+                    return Err(anyhow!(
+                        "admit() returned request {id} but no KV slot is free"
+                    ));
+                };
 
                 // the rows to (re-)feed: the prompt plus, after a
                 // preemption, every token generated so far — identical
@@ -742,15 +793,17 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                     self.make_row_writable_evicting(slot, covered)?;
                 }
 
-                let t_pre = Instant::now();
+                let t_pre = Stopwatch::start();
                 let logits = {
                     let _sp = tel.tracer.span(m.sp_prefill).arg((run.len() - covered) as f64);
                     let mut views = self.pool.views(&[slot])?;
                     let suffix = &run[covered..];
                     self.backend.kv_prefill(&self.preset, &self.blocks, suffix, &mut views[0])?
                 };
+                #[cfg(feature = "audit")]
+                crate::audit::assert_finite("serve/prefill_logits", &logits);
                 self.pool.set_len(slot, run.len());
-                self.stats.prefill_s += t_pre.elapsed().as_secs_f64();
+                self.stats.prefill_s += t_pre.elapsed_s();
                 self.stats.n_prefills += 1;
                 self.stats.prefill_tokens += run.len() - covered;
                 self.stats.prefix_hit_tokens += covered;
@@ -810,7 +863,7 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
         // --- one batched decode iteration over every active sequence ---
         if !self.active.is_empty() {
             let mut sp_decode = tel.tracer.span(m.sp_decode);
-            let t_dec = Instant::now();
+            let t_dec = Stopwatch::start();
             // map next-row pages up front (evicting prefix entries if the
             // free list is dry) so the views build cannot fault mid-batch.
             // Under optimistic reservation the free list may still run
@@ -841,7 +894,9 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
                 let mut views = self.pool.views(&slots)?;
                 self.backend.kv_decode_step(&self.preset, &self.blocks, &tokens, &mut views)?
             };
-            self.stats.decode_s += t_dec.elapsed().as_secs_f64();
+            #[cfg(feature = "audit")]
+            crate::audit::assert_finite("serve/decode_logits", &logits);
+            self.stats.decode_s += t_dec.elapsed_s();
             self.stats.decode_steps += 1;
             self.stats.decode_tokens += self.active.len();
             tel.registry.inc(m.decode_steps);
@@ -880,6 +935,8 @@ impl<'e, B: KvBackend> ServeEngine<'e, B> {
             self.active = still;
         }
         self.sync_registry();
+        #[cfg(feature = "audit")]
+        self.audit_check();
         Ok(done)
     }
 

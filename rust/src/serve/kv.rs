@@ -214,6 +214,18 @@ impl KvPool {
         &self.tables[slot]
     }
 
+    /// Whether `slot` is currently allocated to a sequence.
+    pub fn is_in_use(&self, slot: usize) -> bool {
+        self.in_use[slot]
+    }
+
+    /// The free list's page ids (pop order: last first). Exposed for the
+    /// shadow-state auditor, which re-checks that the list is in range,
+    /// duplicate-free, and holds exactly the zero-refcount pages.
+    pub fn free_page_ids(&self) -> &[u32] {
+        &self.free_pages
+    }
+
     /// A page's reference count (0 = free).
     pub fn page_ref(&self, page: u32) -> u32 {
         self.refc[page as usize]
@@ -422,12 +434,16 @@ impl KvPool {
         }
         let kp = self.k.as_mut_ptr();
         let vp = self.v.as_mut_ptr();
-        // safety: slots are distinct and in use (checked above); writable
-        // pages are exclusive to their slot (checked above) and shared
-        // pages are only ever read — the KvView discipline
+        // SAFETY: `kp`/`vp` point into this pool's backing store, which
+        // the views' `&mut self` borrow keeps alive and un-reallocated
+        // for their whole lifetime. Slots are distinct and in use
+        // (checked above), every table entry is < n_pages (pool
+        // invariant), writable pages (covering rows >= len) are exclusive
+        // to their slot (checked above), and shared pages are only ever
+        // read — the KvView constructor contract.
         Ok(slots
             .iter()
-            .map(|&s| {
+            .map(|&s| unsafe {
                 KvView::from_pool(
                     kp,
                     vp,

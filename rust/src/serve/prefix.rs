@@ -153,6 +153,12 @@ impl PrefixCache {
         }
     }
 
+    /// Page ids held by cache entries, in arbitrary order (one per entry;
+    /// the shadow-refcount auditor counts these against the pool).
+    pub fn entry_pages(&self) -> impl Iterator<Item = u32> + '_ {
+        self.entries.values().map(|e| e.page)
+    }
+
     /// Entries whose page only the cache still references — the pages
     /// [`PrefixCache::evict`] could free right now.
     pub fn evictable(&self, pool: &KvPool) -> usize {
@@ -173,7 +179,10 @@ impl PrefixCache {
                 .min_by_key(|(_, e)| e.stamp)
                 .map(|(k, _)| k.clone());
             let Some(key) = victim else { break };
-            let e = self.entries.remove(&key).expect("victim key present");
+            let Some(e) = self.entries.remove(&key) else {
+                debug_assert!(false, "victim key vanished between scan and removal");
+                break;
+            };
             pool.release_page(e.page);
             self.evictions += 1;
             freed += 1;

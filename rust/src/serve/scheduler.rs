@@ -177,12 +177,10 @@ impl Scheduler {
                 .priority
                 .cmp(&self.pending[a].priority)
                 .then(needs[a].cmp(&needs[b]))
-                .then(
-                    self.pending[a]
-                        .arrival_s
-                        .partial_cmp(&self.pending[b].arrival_s)
-                        .expect("arrival times are finite"),
-                )
+                // total_cmp: arrival times are finite in practice, but a
+                // NaN must not panic the scheduler (it sorts last-ish
+                // deterministically instead)
+                .then(self.pending[a].arrival_s.total_cmp(&self.pending[b].arrival_s))
                 .then(self.pending[a].id.cmp(&self.pending[b].id))
         });
 
@@ -226,10 +224,20 @@ impl Scheduler {
         picked.sort_unstable();
         let mut out: Vec<(usize, Request)> = Vec::with_capacity(picked.len());
         for (removed, &i) in picked.iter().enumerate() {
-            out.push((i, self.pending.remove(i - removed).expect("picked index in range")));
+            let Some(req) = self.pending.remove(i - removed) else {
+                debug_assert!(false, "picked index {i} out of range after {removed} removals");
+                continue;
+            };
+            out.push((i, req));
         }
-        // hand back in selection (cheapest-first) order, deterministically
-        out.sort_by_key(|&(i, _)| order.iter().position(|&o| o == i).unwrap());
+        // hand back in selection (cheapest-first) order, deterministically;
+        // rank[i] = i's position in `order` (every picked index came from
+        // `order`, so the usize::MAX sentinel is never compared)
+        let mut rank = vec![usize::MAX; n_arrived];
+        for (pos, &o) in order.iter().enumerate() {
+            rank[o] = pos;
+        }
+        out.sort_by_key(|&(i, _)| rank[i]);
         out.into_iter().map(|(_, r)| r).collect()
     }
 

@@ -1,0 +1,44 @@
+//! The crate's single sanctioned wall-clock funnel.
+//!
+//! `scripts/lint_repo.py` (rule `clock-outside-telemetry`) forbids raw
+//! `std::time` reads outside `telemetry/`, the bench harness and
+//! examples/tests, so every instrumented subsystem (trainer phases,
+//! serve step timing, backend execute) times itself through
+//! [`Stopwatch`] instead of calling `Instant::now()` directly. Funneling
+//! every timing source through one type keeps the door open for a
+//! simulated or deterministic-replay clock later: swap this file, not a
+//! few dozen scattered call sites.
+
+use std::time::Instant;
+
+/// A started monotonic timer — `Instant::now()` plus `elapsed`, nothing
+/// more, so it stays a zero-cost newtype over the std clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`], as `f64` (the unit
+    /// every telemetry histogram and stats struct in the crate uses).
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotonic_nonnegative() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a, "elapsed must not run backwards");
+    }
+}

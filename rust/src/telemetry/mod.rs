@@ -19,11 +19,13 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Value;
 
+pub mod clock;
 pub mod export;
 pub mod hist;
 pub mod registry;
 pub mod trace;
 
+pub use clock::Stopwatch;
 pub use export::{write_chrome_trace, write_prometheus, write_snapshot_json};
 pub use hist::LogHistogram;
 pub use registry::{CounterId, GaugeId, HistId, MetricRegistry};

@@ -1,5 +1,4 @@
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -15,7 +14,7 @@ use crate::selection::{
     SelectionStrategy, StepPlan, TopKSelector, UcbSelector,
 };
 use crate::telemetry::{
-    CounterId, GaugeId, HistId, MetricsLog, SpanId, StepRecord, Telemetry, Timing,
+    CounterId, GaugeId, HistId, MetricsLog, SpanId, StepRecord, Stopwatch, Telemetry, Timing,
 };
 
 use super::costmodel::{CostModel, CostModelParams};
@@ -474,7 +473,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         let clip = self.cfg.train.grad_clip;
         let transfers0 = self.engine.transfer_stats();
         let tel = Rc::clone(&self.tel);
-        let t_step = Instant::now();
+        let t_step = Stopwatch::start();
 
         // 1. pre-step decision: exploit-style steps know their blocks now
         let epoch = self.epoch();
@@ -504,7 +503,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // re-uploads parameter blocks the optimizer dirtied; the
         // device-resident path never moves parameters.
         let sp_h2d = tel.tracer.span(self.tm.sp_h2d);
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let tok_buf = self.engine.upload_i32(&batch.tokens, &dims)?;
         let tgt_buf = self.engine.upload_i32(&batch.targets, &dims)?;
         if !device {
@@ -531,7 +530,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             let dev = self.dev.as_ref().expect("device mode");
             self.engine.write_f32(&dev.step, &[self.step as f32])?;
         }
-        let t_upload = t0.elapsed().as_secs_f64();
+        let t_upload = t0.elapsed_s();
         drop(sp_h2d);
 
         // 3.–6. execute + gradients/norms + selection + optimizer, per
@@ -614,7 +613,18 @@ impl<'e, B: Backend> Trainer<'e, B> {
         for (g, v) in self.tm.transfers.iter().zip(totals.gauge_values()) {
             reg.set(*g, v);
         }
-        reg.observe(self.tm.step_seconds, t_step.elapsed().as_secs_f64());
+        reg.observe(self.tm.step_seconds, t_step.elapsed_s());
+
+        // Shadow-state audit: ask the backend to re-derive its own
+        // invariants (workspace arena ledger etc.). Compiled out unless
+        // the `audit` feature is on.
+        #[cfg(feature = "audit")]
+        {
+            let v = self.engine.audit_report();
+            if !v.is_empty() {
+                return Err(anyhow!("backend audit failed at step {}: {}", self.step, v.join("; ")));
+            }
+        }
 
         self.step += 1;
         Ok(loss)
@@ -648,7 +658,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             let _sp = tel.tracer.span(self.tm.sp_execute).arg(selected.len() as f64);
             self.engine.execute(exe, &args)?
         };
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let loss = {
             let _sp = tel.tracer.span(self.tm.sp_d2h);
             self.engine.read_scalar_f32(&out.outputs[0])?
@@ -658,7 +668,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             loss,
             selected,
             t_execute: out.execute_s,
-            t_host: t1.elapsed().as_secs_f64(),
+            t_host: t1.elapsed_s(),
             t_optimizer: 0.0,
         })
     }
@@ -701,7 +711,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         };
         let t_execute = out.execute_s;
 
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let mut outputs = out.outputs.into_iter();
         let loss_h = outputs.next().ok_or_else(|| anyhow!("train step produced no outputs"))?;
         let loss = {
@@ -749,7 +759,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
                 self.tracker.record(&norms);
             }
         }
-        let t_host = t1.elapsed().as_secs_f64();
+        let t_host = t1.elapsed_s();
 
         // resolve the selection (norm-ranking strategies choose now)
         let selected = match decided {
@@ -767,7 +777,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
 
         // selective AdamW over handles, in place — parameters, moments
         // and gradients all stay on device
-        let t3 = Instant::now();
+        let t3 = Stopwatch::start();
         let sp_opt = tel.tracer.span(self.tm.sp_optimizer).arg(selected.len() as f64);
         let dev = self.dev.as_ref().expect("device mode");
         let exe_ad = self.exe_adamw.as_ref().expect("device mode");
@@ -794,7 +804,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
             selected,
             t_execute,
             t_host,
-            t_optimizer: t3.elapsed().as_secs_f64(),
+            t_optimizer: t3.elapsed_s(),
         })
     }
 
@@ -838,7 +848,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // the selected blocks' flats; unselected staging entries are
         // shrunk to empty so stale gradients can neither linger in memory
         // nor be read by a later step
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let sp_d2h = tel.tracer.span(self.tm.sp_d2h);
         if masked {
             let sel = decided.as_ref().expect("masked implies decided");
@@ -857,14 +867,14 @@ impl<'e, B: Backend> Trainer<'e, B> {
             }
         }
         drop(sp_d2h);
-        let t_host_dl = t1.elapsed().as_secs_f64() + out.download_s;
+        let t_host_dl = t1.elapsed_s() + out.download_s;
 
         // block norms + optional global clip, gated on who needs them.
         // Norms are clipped *before* the tracker accumulates, so
         // cumulative telemetry matches what selection/optimizer saw; they
         // round through f32 like the backend boundary, so the
         // device-resident path sees bit-identical values.
-        let t2 = Instant::now();
+        let t2 = Stopwatch::start();
         let sp_norms = tel.tracer.span(self.tm.sp_norms);
         if masked {
             // selection already decided; norms exist (and are reduced)
@@ -904,7 +914,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
 
         // selective AdamW on the host mirror
         let lr = self.cfg.lr_at(self.step);
-        let t3 = Instant::now();
+        let t3 = Stopwatch::start();
         let sp_opt = tel.tracer.span(self.tm.sp_optimizer).arg(selected.len() as f64);
         let opt = self.opt.as_mut().expect("host loop has a host optimizer");
         opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
@@ -912,8 +922,8 @@ impl<'e, B: Backend> Trainer<'e, B> {
             self.dirty[b] = true;
         }
         drop(sp_opt);
-        let t_optimizer = t3.elapsed().as_secs_f64();
-        let t_hostproc = t2.elapsed().as_secs_f64() - t_optimizer;
+        let t_optimizer = t3.elapsed_s();
+        let t_hostproc = t2.elapsed_s() - t_optimizer;
         Ok(SubstepOutcome {
             loss,
             selected,
@@ -933,7 +943,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
     /// Run the configured number of steps.
     pub fn run(&mut self) -> Result<TrainSummary> {
         let total = self.cfg.train.steps;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut last = f32::NAN;
         while self.step < total {
             last = self.step_once()?;
@@ -950,7 +960,7 @@ impl<'e, B: Backend> Trainer<'e, B> {
         // refresh the host mirror from the device (the run's checkpoint
         // download — explicit, like every other read-back)
         self.sync_host_state()?;
-        let wallclock_s = t0.elapsed().as_secs_f64();
+        let wallclock_s = t0.elapsed_s();
         Ok(self.summary(wallclock_s, last))
     }
 

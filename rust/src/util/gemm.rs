@@ -239,7 +239,7 @@ fn gemm_view(
             par_for_each_index(n_ic, par, |ji| {
                 let i0 = ji * MC;
                 let mc_eff = (m - i0).min(MC);
-                // safety: in the parallel case each ji owns a disjoint
+                // SAFETY: in the parallel case each ji owns a disjoint
                 // apack region; in the serial case stripes run one at a
                 // time and share region 0. Row stripes of `out` are
                 // disjoint either way.
@@ -262,7 +262,7 @@ fn gemm_view(
                         micro_kernel(kc_eff, apanel, bpanel, &mut tile);
                         for i in 0..mr {
                             let row = i0 + r0 + i;
-                            // safety: rows of this stripe belong to ji only
+                            // SAFETY: rows of this stripe belong to ji only
                             let crow = unsafe {
                                 std::slice::from_raw_parts_mut(
                                     out_ptr.get().add(row * n + jc + j0),

@@ -27,24 +27,43 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync)
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let mut out: Vec<MaybeUninit<R>> = Vec::with_capacity(n);
-    // safety: MaybeUninit<R> requires no initialization
+    // SAFETY: MaybeUninit<R> requires no initialization
     unsafe { out.set_len(n) };
     let cursor = AtomicUsize::new(0);
     let out_ptr = SendPtr(out.as_mut_ptr());
+    // debug builds prove (rather than assume) the exactly-once claim
+    // discipline the unsafe writes below rely on
+    #[cfg(debug_assertions)]
+    let claimed: Vec<std::sync::atomic::AtomicBool> =
+        (0..n).map(|_| std::sync::atomic::AtomicBool::new(false)).collect();
     std::thread::scope(|scope| {
         for _ in 0..nw {
+            // steady-state: worker claim loop — debug-only rails
             scope.spawn(|| loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
+                #[cfg(debug_assertions)]
+                debug_assert!(
+                    !claimed[i].swap(true, Ordering::Relaxed),
+                    "par_map index {i} claimed twice: overlapping writes"
+                );
                 let r = f(i, &items[i]);
-                // safety: each index is claimed exactly once
+                // SAFETY: the fetch_add cursor hands each index to exactly
+                // one worker (asserted above in debug builds), so this
+                // write is the slot's sole initialization and no other
+                // thread touches it
                 unsafe { out_ptr.get().add(i).write(MaybeUninit::new(r)) };
             });
         }
     });
-    // safety: the scope joined all workers and the cursor handed out every
+    #[cfg(debug_assertions)]
+    debug_assert!(
+        claimed.iter().all(|c| c.load(Ordering::Relaxed)),
+        "par_map left an output slot uninitialized"
+    );
+    // SAFETY: the scope joined all workers and the cursor handed out every
     // index in 0..n exactly once, so all n slots are initialized.
     // MaybeUninit<R> and R have identical layout.
     let mut out = ManuallyDrop::new(out);
@@ -70,7 +89,7 @@ pub fn par_for_each_mut<T: Send>(items: &mut [T], f: impl Fn(usize, &mut T) + Sy
                 if i >= n {
                     break;
                 }
-                // safety: each index claimed exactly once => disjoint &mut
+                // SAFETY: each index claimed exactly once => disjoint &mut
                 let item = unsafe { &mut *base.get().add(i) };
                 f(i, item);
             });
@@ -111,7 +130,13 @@ pub fn par_for_each_index(n: usize, par: bool, f: impl Fn(usize) + Sync) {
 /// A raw pointer that asserts Send+Sync so scoped workers can write to
 /// disjoint regions of one buffer. Callers guarantee disjointness.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+// SAFETY: SendPtr is a plain address with no aliasing claim of its own;
+// every construction site pairs it with a disjointness argument (each
+// worker dereferences a region no other worker touches), and the
+// std::thread::scope join synchronizes the writes before the owner reads.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: sharing &SendPtr only exposes the address (see `get`); the
+// disjointness contract above is what makes concurrent use sound.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
@@ -201,7 +226,7 @@ mod tests {
         let stride = buf.len() / n_blocks;
         let ptr = SendPtr(buf.as_mut_ptr());
         par_for_each_index(n_blocks, true, |b| {
-            // safety: each index owns a disjoint stride of the buffer
+            // SAFETY: each index owns a disjoint stride of the buffer
             let chunk =
                 unsafe { std::slice::from_raw_parts_mut(ptr.get().add(b * stride), stride) };
             for (j, x) in chunk.iter_mut().enumerate() {

@@ -130,6 +130,36 @@ impl Workspace {
         self.high_water = self.outstanding;
     }
 
+    /// Shadow-state audit: re-derive the arena's accounting invariants
+    /// from the free list itself and report every violation (empty =
+    /// sound). Catches foreign `give`s and double-gives (capacity no
+    /// longer equals free + outstanding), free-list ordering corruption
+    /// (best-fit `partition_point` would silently degrade), and peak
+    /// tracking running behind the live outstanding level.
+    pub fn audit_check(&self) -> Vec<String> {
+        let mut violations = Vec::new();
+        let free: usize = self.free.iter().map(|v| v.capacity()).sum();
+        if free + self.outstanding != self.capacity {
+            violations.push(format!(
+                "workspace: capacity drift: {free} free + {} outstanding != {} owned \
+                 (foreign or double give?)",
+                self.outstanding, self.capacity
+            ));
+        }
+        if !self.free.windows(2).all(|w| w[0].capacity() <= w[1].capacity()) {
+            violations.push(
+                "workspace: free list not sorted by capacity (best-fit take broken)".to_string(),
+            );
+        }
+        if self.high_water < self.outstanding {
+            violations.push(format!(
+                "workspace: high water {} below outstanding {}",
+                self.high_water, self.outstanding
+            ));
+        }
+        violations
+    }
+
     pub fn stats(&self) -> WorkspaceStats {
         WorkspaceStats {
             high_water_bytes: self.high_water * 4,
@@ -243,6 +273,36 @@ mod tests {
         let b = ws.take(16);
         assert_eq!(b.len(), 16);
         ws.give(b);
+    }
+
+    #[test]
+    fn audit_check_is_clean_through_normal_use() {
+        let mut ws = Workspace::new();
+        assert!(ws.audit_check().is_empty(), "fresh arena");
+        let a = ws.take(100);
+        let b = ws.take_zeroed(200);
+        assert!(ws.audit_check().is_empty(), "buffers outstanding");
+        ws.give(a);
+        ws.give(b);
+        assert!(ws.audit_check().is_empty(), "buffers recycled");
+        let c = ws.take(50);
+        let cap = c.capacity();
+        ws.disown_cap(cap);
+        drop(c);
+        assert!(ws.audit_check().is_empty(), "after disown");
+        ws.reset_high_water();
+        assert!(ws.audit_check().is_empty(), "after peak reset");
+    }
+
+    #[test]
+    fn audit_check_flags_foreign_gives() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100);
+        ws.give(a);
+        // a vector the arena never handed out skews the accounting
+        ws.give(vec![0.0f32; 64]);
+        let v = ws.audit_check();
+        assert!(v.iter().any(|s| s.contains("capacity drift")), "{v:?}");
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Shadow-state audit contracts (`--features audit` only).
+//!
+//! Positive half: randomized serve churn — overcommitted pool, mixed
+//! priorities, preemption, prefix sharing — with the engine's internal
+//! auditors armed on every step, plus a test-side shadow refcount model
+//! that must match `KvPool::page_ref` after every transition.
+//!
+//! Negative half: each auditor is driven to fire on a deliberately
+//! corrupted state, proving the validators can actually detect the class
+//! of bug they claim to (a validator that never fires is dead weight).
+
+#![cfg(feature = "audit")]
+
+use adagradselect::audit::{check_budget, check_finite, check_kv_pool};
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, ReferenceBackend};
+use adagradselect::serve::{
+    KvPool, PrefixCache, Reservation, SamplingParams, ServeConfig, ServeEngine,
+};
+use adagradselect::util::workspace::Workspace;
+
+const PRESET: &str = "test-tiny";
+
+fn prompt(len: usize, salt: u64) -> Vec<i32> {
+    (0..len).map(|i| 4 + ((i as u64 * 7 + salt * 13) % 50) as i32).collect()
+}
+
+/// Minimal LCG so the churn trace is deterministic and self-contained.
+struct Lcg(u64);
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+// ---------------------------------------------------------------------
+// positive: auditors stay silent through heavy churn
+// ---------------------------------------------------------------------
+
+/// Randomized churn with the engine's per-step audit armed: over-
+/// committed pages force preemption + prefix-cache parking, shared
+/// prompt stems force refcounted pages, and `ServeEngine::step` panics
+/// internally if any shadow validator reports drift. The test-side
+/// check re-runs `audit_violations()` after every step as well, so a
+/// violation is caught even if the internal hook were disarmed.
+#[test]
+fn serve_churn_under_audit_stays_sound() {
+    let backend = ReferenceBackend::new();
+    let state = ModelState::init(
+        &backend.manifest().preset(PRESET).unwrap().blocks,
+        3,
+    );
+    for &reservation in &[Reservation::Optimistic, Reservation::WorstCase] {
+        let mut srv = ServeEngine::new(
+            &backend,
+            PRESET,
+            &state,
+            ServeConfig {
+                slots: 3,
+                max_new_tokens: 8,
+                // small page budget: admission overcommits and decode
+                // growth forces preemptions mid-run
+                kv_pages: 6,
+                reservation,
+            },
+        )
+        .unwrap();
+
+        let mut rng = Lcg(0x5EED ^ reservation as u64);
+        let mut submitted = 0usize;
+        let mut done = 0usize;
+        let mut steps = 0usize;
+        // a shared stem exercises prefix-cache refcounts on top of the
+        // per-slot tables
+        let stem = prompt(9, 99);
+        while done < 24 && steps < 600 {
+            if submitted < 24 && rng.next() % 3 != 0 {
+                let mut p = if rng.next() % 2 == 0 { stem.clone() } else { Vec::new() };
+                p.extend(prompt(1 + (rng.next() % 11) as usize, submitted as u64));
+                let prio = (rng.next() % 3) as u8;
+                srv.submit_prio(p, 0, steps as f64, prio, SamplingParams::default());
+                submitted += 1;
+            }
+            done += srv.step().unwrap().len();
+            steps += 1;
+            let v = srv.audit_violations();
+            assert!(
+                v.is_empty(),
+                "audit violations after step {steps} ({reservation:?}): {v:?}"
+            );
+        }
+        assert_eq!(done, 24, "churn did not drain ({reservation:?})");
+        assert_eq!(srv.n_active() + srv.n_pending(), 0);
+    }
+}
+
+/// Standalone pool churn with a *test-side* shadow refcount model:
+/// random alloc / grow / share-via-prefix-cache / release, and after
+/// every transition the shadow count (recomputed from slot tables +
+/// cache entries) must equal `page_ref` for every page — independently
+/// of the `audit::kv` validator, which also runs each round.
+#[test]
+fn shadow_refcounts_match_pool_through_random_churn() {
+    let backend = ReferenceBackend::new();
+    let model = backend.manifest().preset(PRESET).unwrap().model.clone();
+    let mut pool = KvPool::with_pages(&model, 4, 64, 10);
+    let mut cache = PrefixCache::new();
+    let mut rng = Lcg(42);
+    let mut live: Vec<usize> = Vec::new();
+
+    for round in 0..400 {
+        match rng.next() % 4 {
+            0 => {
+                if let Some(slot) = pool.alloc() {
+                    let rows = 1 + (rng.next() % 24) as usize;
+                    if pool.ensure_room(slot, rows).is_ok() {
+                        pool.set_len(slot, rows);
+                        live.push(slot);
+                    } else {
+                        pool.release(slot);
+                    }
+                }
+            }
+            1 => {
+                if let Some(&slot) = live.last() {
+                    let rows = (pool.len(slot) + 1 + (rng.next() % 8) as usize).min(64);
+                    if pool.ensure_room(slot, rows).is_ok() {
+                        pool.set_len(slot, rows);
+                    }
+                }
+            }
+            2 => {
+                if !live.is_empty() {
+                    let i = (rng.next() as usize) % live.len();
+                    let slot = live.swap_remove(i);
+                    // park full pages in the prefix cache half the time,
+                    // so some pages stay referenced after release
+                    if rng.next() % 2 == 0 && pool.len(slot) >= pool.page_size() {
+                        let toks = prompt(pool.len(slot), slot as u64 + round);
+                        let table = pool.table(slot).to_vec();
+                        cache.insert(&toks, &table, &mut pool);
+                    }
+                    pool.release(slot);
+                }
+            }
+            _ => {
+                // a prefix hit attaches shared pages to a fresh slot
+                // (lookup itself retains nothing — attach_shared does)
+                let toks = prompt(16, (rng.next() % 5) as u64 + round);
+                let hit = cache.lookup(&toks, pool.page_size());
+                if !hit.is_empty() {
+                    if let Some(slot) = pool.alloc() {
+                        let covered = hit.len() * pool.page_size();
+                        pool.attach_shared(slot, &hit, covered);
+                        live.push(slot);
+                    }
+                }
+            }
+        }
+
+        // the audit-module validator must agree...
+        let v = check_kv_pool(&pool, &cache);
+        assert!(v.is_empty(), "round {round}: validator reported {v:?}");
+
+        // ...and so must this test's own shadow model, built only from
+        // public observers
+        let mut shadow = vec![0u32; pool.n_pages()];
+        for s in 0..pool.n_slots() {
+            if pool.is_in_use(s) {
+                for &p in pool.table(s) {
+                    shadow[p as usize] += 1;
+                }
+            }
+        }
+        for p in cache.entry_pages() {
+            shadow[p as usize] += 1;
+        }
+        for (p, &want) in shadow.iter().enumerate() {
+            assert_eq!(
+                pool.page_ref(p as u32),
+                want,
+                "round {round}: page {p} refcount drifted from shadow"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// negative: every auditor must fire on a corrupted state
+// ---------------------------------------------------------------------
+
+/// Corrupting a live page's refcount out from under the pool makes the
+/// KV auditor report refcount drift (and the free-list/ledger checks
+/// stay specific: only the drift fires).
+#[test]
+fn kv_auditor_fires_on_refcount_drift() {
+    let backend = ReferenceBackend::new();
+    let state = ModelState::init(
+        &backend.manifest().preset(PRESET).unwrap().blocks,
+        3,
+    );
+    let mut srv = ServeEngine::new(
+        &backend,
+        PRESET,
+        &state,
+        ServeConfig { slots: 2, max_new_tokens: 4, ..Default::default() },
+    )
+    .unwrap();
+    srv.submit(prompt(6, 1), 0, 0.0);
+    // run one step so a slot holds mapped pages
+    srv.step().unwrap();
+    assert!(srv.audit_violations().is_empty(), "engine must start sound");
+
+    let mapped = {
+        let pool = srv.kv_pool_mut();
+        let slot = (0..pool.n_slots())
+            .find(|&s| pool.is_in_use(s) && !pool.table(s).is_empty())
+            .expect("one slot holds pages after a step");
+        let page = pool.table(slot)[0];
+        pool.retain_page(page); // refcount now disagrees with the tables
+        page
+    };
+    let v = srv.audit_violations();
+    assert!(
+        v.iter().any(|m| m.contains("refcount drift") && m.contains(&format!("{mapped}"))),
+        "expected refcount drift on page {mapped}, got {v:?}"
+    );
+}
+
+/// The budget auditor fires iff reservations exceed what held + free +
+/// evictable pages can cover.
+#[test]
+fn budget_auditor_fires_on_overpromise() {
+    assert!(check_budget(6, 2, 3, 1).is_empty(), "solvent budget must be clean");
+    let v = check_budget(10, 2, 3, 1);
+    assert!(
+        v.iter().any(|m| m.contains("10 pages promised")),
+        "expected an overpromise report, got {v:?}"
+    );
+}
+
+/// Feeding the workspace arena a buffer it never lent out breaks the
+/// capacity ledger, which `audit_check` must flag as drift.
+#[test]
+fn workspace_auditor_fires_on_foreign_give() {
+    let mut ws = Workspace::new();
+    let a = ws.take(32);
+    ws.give(a);
+    assert!(ws.audit_check().is_empty(), "normal take/give must be clean");
+    ws.give(vec![0.0f32; 64]);
+    let v = ws.audit_check();
+    assert!(
+        v.iter().any(|m| m.contains("capacity drift")),
+        "expected capacity drift, got {v:?}"
+    );
+}
+
+/// The finite probe reports NaN/inf with the offending index.
+#[test]
+fn finite_probe_fires_on_nan() {
+    assert!(check_finite("clean", &[0.0, -1.5, 7.25]).is_empty());
+    let v = check_finite("poisoned", &[0.0, f32::NAN, f32::INFINITY]);
+    assert!(
+        v.iter().any(|m| m.contains("poisoned") && m.contains("index 1")),
+        "expected a non-finite report naming index 1, got {v:?}"
+    );
+}

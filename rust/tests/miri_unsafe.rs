@@ -1,0 +1,169 @@
+//! Miri-targeted exercises of every unsafe hot path, through public
+//! APIs only.
+//!
+//! This file is the curated subset the `soundness` CI workflow runs
+//! under Miri: small shapes (Miri is ~3 orders of magnitude slower than
+//! native), no clocks, no filesystem — just the pointer discipline:
+//!
+//! ```text
+//! MIRIFLAGS="-Zmiri-strict-provenance -Zmiri-num-cpus=4" \
+//!     cargo +nightly miri test --test miri_unsafe
+//! ```
+//!
+//! `-Zmiri-num-cpus=4` matters: Miri reports one CPU by default, which
+//! would route `util::par` onto its serial path and leave the SendPtr
+//! stripe-disjointness logic unexecuted. The flag makes the workers
+//! actually spawn, so Miri's data-race detector sees the real
+//! concurrent writes. `-Zmiri-strict-provenance` keeps the raw-pointer
+//! arithmetic in `KvView` honest.
+//!
+//! These tests also run natively in the default lane (they are ordinary
+//! `#[test]`s), where the new `debug_assert` disjointness rails in
+//! `par_map` / `attention_bwd` fire on any overlap.
+
+use adagradselect::model::forward::KvView;
+use adagradselect::runtime::Backend;
+use adagradselect::runtime::ReferenceBackend;
+use adagradselect::serve::KvPool;
+use adagradselect::util::gemm::{gemm_nn, gemm_tn, oracle};
+use adagradselect::util::par::{par_for_each_index, par_for_each_mut, par_map};
+use adagradselect::util::workspace::Workspace;
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+// ---------------------------------------------------------------------
+// util::par — SendPtr stripes under real threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn par_map_matches_serial_map() {
+    let items: Vec<u64> = (0..23).collect();
+    let par: Vec<u64> = par_map(&items, |i, &x| x * x + i as u64);
+    let ser: Vec<u64> = items.iter().enumerate().map(|(i, &x)| x * x + i as u64).collect();
+    assert_eq!(par, ser);
+}
+
+#[test]
+fn par_map_handles_empty_and_single() {
+    let empty: Vec<u32> = par_map(&[] as &[u32], |_, &x| x);
+    assert!(empty.is_empty());
+    let one = par_map(&[7u32], |i, &x| x + i as u32);
+    assert_eq!(one, vec![7]);
+}
+
+#[test]
+fn par_for_each_mut_touches_every_item_once() {
+    let mut xs: Vec<u64> = vec![0; 29];
+    par_for_each_mut(&mut xs, |i, x| *x += i as u64 + 1);
+    for (i, &x) in xs.iter().enumerate() {
+        assert_eq!(x, i as u64 + 1);
+    }
+}
+
+#[test]
+fn par_for_each_index_counts_exactly_once() {
+    let hits: Vec<AtomicU32> = (0..31).map(|_| AtomicU32::new(0)).collect();
+    par_for_each_index(hits.len(), true, |i| {
+        hits[i].fetch_add(1, Ordering::Relaxed);
+    });
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// KvView / KvPool — raw-pointer paged cache access
+// ---------------------------------------------------------------------
+
+#[test]
+fn kv_views_roundtrip_disjoint_slots() {
+    let backend = ReferenceBackend::new();
+    let model = backend.manifest().preset("test-tiny").unwrap().model.clone();
+    let mut pool = KvPool::new(&model, 2);
+    let d = model.n_heads * model.d_head;
+    let rows = pool.page_size(); // one full page per slot
+    let a = pool.alloc().unwrap();
+    let b = pool.alloc().unwrap();
+    pool.ensure_room(a, rows).unwrap();
+    pool.ensure_room(b, rows).unwrap();
+
+    let ka: Vec<f32> = (0..rows * d).map(|i| i as f32).collect();
+    let kb: Vec<f32> = (0..rows * d).map(|i| -(i as f32)).collect();
+    {
+        let mut views = pool.views(&[a, b]).unwrap();
+        views[0].write_rows(0, 0, &ka, &ka).unwrap();
+        views[1].write_rows(0, 0, &kb, &kb).unwrap();
+    }
+    // re-view and read back: each slot sees only its own rows
+    let views = pool.views(&[a, b]).unwrap();
+    let mut got_k = vec![0.0f32; rows * d];
+    let mut got_v = vec![0.0f32; rows * d];
+    views[0].read_rows(0, rows, &mut got_k, &mut got_v).unwrap();
+    assert_eq!(got_k, ka);
+    views[1].read_rows(0, rows, &mut got_k, &mut got_v).unwrap();
+    assert_eq!(got_k, kb);
+    pool.release(a);
+    pool.release(b);
+}
+
+#[test]
+fn kv_view_contiguous_roundtrip() {
+    let (n_layers, d, rows) = (2usize, 4usize, 3usize);
+    let mut k = vec![0.0f32; n_layers * rows * d];
+    let mut v = vec![0.0f32; n_layers * rows * d];
+    let src_k: Vec<f32> = (0..rows * d).map(|i| 1.0 + i as f32).collect();
+    let src_v: Vec<f32> = (0..rows * d).map(|i| -1.0 - i as f32).collect();
+    let mut view = KvView::contiguous(&mut k, &mut v, n_layers, d, 0).unwrap();
+    for layer in 0..n_layers {
+        view.write_rows(layer, 0, &src_k, &src_v).unwrap();
+    }
+    let mut got_k = vec![0.0f32; rows * d];
+    let mut got_v = vec![0.0f32; rows * d];
+    for layer in 0..n_layers {
+        view.read_rows(layer, rows, &mut got_k, &mut got_v).unwrap();
+        assert_eq!(got_k, src_k, "layer {layer} K");
+        assert_eq!(got_v, src_v, "layer {layer} V");
+    }
+}
+
+// ---------------------------------------------------------------------
+// workspace arena + gemm — slab reuse and the byte-cast kernels
+// ---------------------------------------------------------------------
+
+#[test]
+fn workspace_reuse_stays_sound() {
+    let mut ws = Workspace::new();
+    let a = ws.take(64);
+    assert_eq!(a.len(), 64);
+    ws.give(a);
+    let b = ws.take_zeroed(64); // reuses the slab, must come back zeroed
+    assert!(b.iter().all(|&x| x == 0.0));
+    ws.give(b);
+    assert!(ws.audit_check().is_empty(), "{:?}", ws.audit_check());
+}
+
+#[test]
+fn gemm_matches_oracle_on_small_shapes() {
+    let mut ws = Workspace::new();
+    let (m, k, n) = (3usize, 4usize, 5usize);
+    let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.61).cos()).collect();
+
+    let mut fast = vec![0.0f32; m * n];
+    let mut slow = vec![0.0f32; m * n];
+    gemm_nn(&mut ws, &mut fast, &a, &b, m, k, n, 1.0, false);
+    oracle::matmul_nn(&mut slow, &a, &b, m, k, n, 1.0, false);
+    for (x, y) in fast.iter().zip(&slow) {
+        assert!((x - y).abs() <= 1e-5, "gemm_nn {x} vs oracle {y}");
+    }
+
+    // transposed-A variant: a is [k, m]
+    let at: Vec<f32> = (0..k * m).map(|i| (i as f32 * 0.23).sin()).collect();
+    let mut fast_t = vec![0.0f32; m * n];
+    let mut slow_t = vec![0.0f32; m * n];
+    gemm_tn(&mut ws, &mut fast_t, &at, &b, m, k, n, 1.0, false);
+    oracle::matmul_tn(&mut slow_t, &at, &b, m, k, n, 1.0, false);
+    for (x, y) in fast_t.iter().zip(&slow_t) {
+        assert!((x - y).abs() <= 1e-5, "gemm_tn {x} vs oracle {y}");
+    }
+}

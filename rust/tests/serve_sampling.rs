@@ -283,6 +283,10 @@ fn ttft_is_stamped_at_first_emission_never_at_resume() {
 }
 
 #[test]
+// Under `--features audit` the engine's finite-logits probe traps NaN
+// at the kernel boundary (by design), so graceful degradation cannot
+// be observed; this test covers the production (audit-off) behavior.
+#[cfg_attr(feature = "audit", ignore = "audit probes trap NaN logits before sampling")]
 fn nan_logits_finish_requests_cleanly_instead_of_panicking() {
     let backend = engine();
     let preset = backend.manifest().preset(PRESET).unwrap().clone();

@@ -1,0 +1,6 @@
+//! Fixture: a raw clock read outside telemetry/ must be flagged.
+
+pub fn timestamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,11 @@
+//! Fixture: bare assert! in a steady-state-marked block must be flagged.
+
+pub fn steady_loop(xs: &[f32]) -> f32 {
+    let mut acc = 0.0;
+    // steady-state: invariants here must be debug-only
+    for &x in xs {
+        assert!(x.is_finite());
+        acc += x;
+    }
+    acc
+}

@@ -1,0 +1,5 @@
+//! Fixture: unsafe without a SAFETY comment must be flagged.
+
+pub fn read_one(buf: &[f32], i: usize) -> f32 {
+    unsafe { *buf.as_ptr().add(i) }
+}

@@ -1,0 +1,17 @@
+//! Fixture: unwrap/expect in a serve hot path must be flagged.
+
+pub fn pick(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn pick2(v: Option<u32>) -> u32 {
+    v.expect("always present")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_here_is_fine() {
+        assert_eq!(super::pick(Some(1)), 1);
+    }
+}

@@ -1,0 +1,43 @@
+//! Fixture: code every lint rule should accept.
+
+/// Reads one element out of a raw buffer.
+pub fn read_one(buf: &[f32], i: usize) -> f32 {
+    assert!(i < buf.len());
+    // SAFETY: the bounds check above guarantees `i` is in range, and
+    // the shared borrow keeps the buffer alive for the read.
+    unsafe { *buf.as_ptr().add(i) }
+}
+
+/// A doc-commented unsafe fn is covered by its `# Safety` section.
+///
+/// # Safety
+///
+/// `p` must be non-null and valid for reads of one `f32`.
+pub unsafe fn read_raw(p: *const f32) -> f32 {
+    // SAFETY: caller contract (see `# Safety` above)
+    unsafe { *p }
+}
+
+pub fn steady_loop(xs: &[f32]) -> f32 {
+    let mut acc = 0.0;
+    // steady-state: per-element invariants are debug-only
+    for &x in xs {
+        debug_assert!(x.is_finite());
+        acc += x;
+    }
+    acc
+}
+
+pub fn fallible(v: Option<u32>) -> u32 {
+    // unwrap_or is fine even in serve/ paths
+    v.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

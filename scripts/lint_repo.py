@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Repo-local soundness lint for the Rust tree (stdlib only).
+
+Four rules, each keyed to an invariant the compiler cannot check:
+
+  unsafe-needs-safety      every `unsafe` block / impl / fn must be
+                           preceded (within a few lines) by a
+                           `// SAFETY:` comment or a `/// # Safety`
+                           doc section stating the proof obligation.
+  no-unwrap-in-hot-path    `unwrap()` / `expect(` are banned in
+                           `src/serve/` and `src/runtime/` outside
+                           test code — hot paths return Result, they
+                           do not abort the process.
+  steady-state-assert      a block opened under a `// steady-state:`
+                           marker must use `debug_assert` rather than
+                           bare `assert!` so the invariant costs
+                           nothing in release builds.
+  clock-outside-telemetry  `std::time` clock reads (Instant / SystemTime)
+                           are confined to `src/telemetry/`,
+                           `src/util/bench.rs`, benches, examples and
+                           tests; everything else goes through
+                           `telemetry::Stopwatch` so tests and Miri see
+                           a single, mockable time seam.
+
+Failures print `path:line: rule-id: message`, one per line, and the
+process exits 1. Run from anywhere:
+
+    python3 scripts/lint_repo.py           # lint the repo
+    python3 scripts/lint_repo.py DIR ...   # lint specific roots (tests)
+"""
+import os
+import re
+import sys
+
+RULE_SAFETY = "unsafe-needs-safety"
+RULE_UNWRAP = "no-unwrap-in-hot-path"
+RULE_STEADY = "steady-state-assert"
+RULE_CLOCK = "clock-outside-telemetry"
+
+# how many *code* lines above an `unsafe` keyword we accept its SAFETY
+# comment; comment / doc / attribute lines are free so one comment can
+# govern a short group of unsafe expressions or sit atop a doc block
+SAFETY_LOOKBACK = 6
+SAFETY_WALK_CAP = 40
+
+# `unsafe` as a word — does not match `unsafe_op_in_unsafe_fn` etc.
+# (underscore is a word char, so \b already excludes those).
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+SAFETY_COMMENT_RE = re.compile(r"//\s*SAFETY:|#\s*Safety")
+UNWRAP_RE = re.compile(r"\.(unwrap|expect)\s*\(")
+UNWRAP_OK_RE = re.compile(r"\.(unwrap_or|unwrap_or_else|unwrap_or_default|unwrap_unchecked|expect_err)\b")
+STEADY_MARK_RE = re.compile(r"//\s*steady-state:")
+BARE_ASSERT_RE = re.compile(r"(?<!debug_)\bassert(_eq|_ne)?!\s*[\(\[]")
+CLOCK_RE = re.compile(r"\b(?:std::time::)?(Instant|SystemTime)\s*::\s*now\s*\(|use\s+std::time")
+
+# directories / files where clock reads are legitimate (posix-style
+# fragments matched against the normalized relative path)
+CLOCK_ALLOW = ("src/telemetry/", "src/util/bench.rs", "benches/", "examples/", "tests/")
+# paths where unwrap/expect are banned outside test code
+HOT_PATHS = ("src/serve/", "src/runtime/")
+
+
+def has_safety_comment(lines, idx):
+    """Walk upward from the unsafe at `idx` looking for its proof.
+
+    Comment, doc-comment and attribute lines are free; at most
+    SAFETY_LOOKBACK other lines may separate the comment from the
+    `unsafe` keyword (so one `// SAFETY:` can cover a short group of
+    consecutive unsafe expressions), capped at SAFETY_WALK_CAP lines.
+    """
+    budget = SAFETY_LOOKBACK
+    for i in range(idx, max(-1, idx - SAFETY_WALK_CAP), -1):
+        line = lines[i]
+        if SAFETY_COMMENT_RE.search(line):
+            return True
+        stripped = line.strip()
+        free = (stripped.startswith("//") or stripped.startswith("#[")
+                or stripped.startswith("#!["))
+        if i != idx and not free:
+            budget -= 1
+            if budget < 0:
+                return False
+    return False
+
+
+def is_test_region(lines, idx):
+    """True if line idx sits under a `#[cfg(test)]` module.
+
+    Heuristic: the nearest enclosing `mod`-opening brace preceded by
+    `#[cfg(test)]`. Good enough for this tree, where test modules are
+    the conventional trailing `#[cfg(test)] mod tests { .. }`.
+    """
+    depth = 0
+    for i in range(idx, -1, -1):
+        line = lines[i]
+        depth += line.count("}") - line.count("{")
+        if depth < 0 and "mod " in line:
+            for j in range(max(0, i - 3), i + 1):
+                if "#[cfg(test)]" in lines[j]:
+                    return True
+            depth = 0  # keep walking up through outer scopes
+    return False
+
+
+def lint_file(path, rel, findings):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except (OSError, UnicodeDecodeError) as e:
+        findings.append(f"{rel}:1: io: cannot read file: {e}")
+        return
+
+    in_hot_path = any(frag in rel for frag in HOT_PATHS)
+    clock_allowed = any(frag in rel for frag in CLOCK_ALLOW)
+
+    steady_until = -1  # line index bound of the active steady-state block
+    steady_line = -1
+
+    for idx, raw in enumerate(lines):
+        lineno = idx + 1
+        # strip line comments for code-pattern rules, but keep the raw
+        # text for comment-pattern rules
+        code = raw.split("//", 1)[0] if "//" in raw else raw
+
+        # --- rule: unsafe-needs-safety ------------------------------
+        if UNSAFE_RE.search(code) and not has_safety_comment(lines, idx):
+            findings.append(
+                f"{rel}:{lineno}: {RULE_SAFETY}: `unsafe` without a "
+                f"`// SAFETY:` comment within {SAFETY_LOOKBACK} lines above"
+            )
+
+        # --- rule: no-unwrap-in-hot-path ----------------------------
+        if in_hot_path and UNWRAP_RE.search(code) and not UNWRAP_OK_RE.search(code):
+            if not is_test_region(lines, idx):
+                findings.append(
+                    f"{rel}:{lineno}: {RULE_UNWRAP}: unwrap()/expect() in a "
+                    "serve/runtime hot path (return an error instead)"
+                )
+
+        # --- rule: steady-state-assert ------------------------------
+        if STEADY_MARK_RE.search(raw):
+            steady_line = lineno
+            steady_until = idx + 12  # marker governs the next block
+        if idx <= steady_until and BARE_ASSERT_RE.search(code):
+            findings.append(
+                f"{rel}:{lineno}: {RULE_STEADY}: bare assert! in a block "
+                f"marked `// steady-state:` (line {steady_line}); use "
+                "debug_assert! so release builds pay nothing"
+            )
+
+        # --- rule: clock-outside-telemetry --------------------------
+        if not clock_allowed and CLOCK_RE.search(code):
+            if not is_test_region(lines, idx):
+                findings.append(
+                    f"{rel}:{lineno}: {RULE_CLOCK}: std::time clock read "
+                    "outside telemetry/ (use telemetry::Stopwatch)"
+                )
+
+
+def iter_rust_files(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in ("vendor", "target", ".git")]
+        for name in sorted(filenames):
+            if name.endswith(".rs"):
+                yield os.path.join(dirpath, name)
+
+
+def main(argv):
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if len(argv) > 1:
+        roots = argv[1:]
+        base = os.path.commonpath([os.path.abspath(r) for r in roots])
+    else:
+        roots = [os.path.join(repo, "rust", "src"),
+                 os.path.join(repo, "rust", "tests"),
+                 os.path.join(repo, "rust", "benches"),
+                 os.path.join(repo, "examples")]
+        base = repo
+    findings = []
+    n_files = 0
+    for root in roots:
+        if not os.path.isdir(root):
+            continue
+        for path in iter_rust_files(root):
+            n_files += 1
+            rel = os.path.relpath(path, base).replace(os.sep, "/")
+            lint_file(path, rel, findings)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"lint_repo: FAIL: {len(findings)} finding(s) across {n_files} files")
+        return 1
+    print(f"lint_repo: OK ({n_files} files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Self-test for bench_compare's failure modes (stdlib only).
+
+Covers the fail-loudly contract: malformed or truncated BENCH JSON must
+exit nonzero and name the offending file, valid inputs must keep
+working, and declared invariants must still gate. Run with:
+
+    python3 scripts/test_bench_compare.py
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BENCH_COMPARE = os.path.join(HERE, "bench_compare")
+
+VALID = {
+    "calibrated": True,
+    "workspace": {"steady_state_grows_10_steps": 0, "high_water_bytes": 1048576},
+    "results": [{"name": "train_step/tiny", "mean_ns": 1000000.0}],
+    "invariants": [{"name": "audit/compiled_out", "value": 1.0, "min": 1.0}],
+}
+
+failures = []
+
+
+def check(name, ok, detail=""):
+    status = "ok" if ok else "FAIL"
+    print(f"  {name}: {status}")
+    if not ok:
+        failures.append(name)
+        if detail:
+            print(detail)
+
+
+def run(*args):
+    p = subprocess.run(
+        [sys.executable, BENCH_COMPARE, *args], capture_output=True, text=True
+    )
+    return p.returncode, p.stdout + p.stderr
+
+
+def write(d, name, text):
+    path = os.path.join(d, name)
+    with open(path, "w") as fh:
+        fh.write(text)
+    return path
+
+
+def main():
+    print("test_bench_compare:")
+    with tempfile.TemporaryDirectory() as d:
+        base = write(d, "baseline.json", json.dumps(VALID))
+        cur = write(d, "current.json", json.dumps(VALID))
+
+        code, out = run(base, cur)
+        check("valid baseline+current passes", code == 0, out)
+
+        trunc = write(d, "truncated.json", json.dumps(VALID)[:40])
+        code, out = run(base, trunc)
+        check("truncated current exits 1", code == 1, out)
+        check("truncated current names the file", "truncated.json" in out, out)
+        check("truncated current says malformed", "malformed bench JSON" in out, out)
+
+        code, out = run(trunc, cur)
+        check("truncated baseline exits 1", code == 1, out)
+        check("truncated baseline names the file", "truncated.json" in out, out)
+
+        garbage = write(d, "garbage.json", "not json at all {{{")
+        code, out = run(base, garbage)
+        check("garbage current exits 1", code == 1, out)
+        check("garbage current names the file", "garbage.json" in out, out)
+
+        notobj = write(d, "notobj.json", "[1, 2, 3]")
+        code, out = run(base, notobj)
+        check("non-object current exits 1", code == 1, out)
+        check("non-object current names the file", "notobj.json" in out, out)
+
+        missing = os.path.join(d, "does-not-exist.json")
+        code, out = run(base, missing)
+        check("missing current exits 1", code == 1, out)
+        check("missing current names the file", "does-not-exist.json" in out, out)
+
+        bad_inv = dict(VALID)
+        bad_inv["invariants"] = [
+            {"name": "audit/compiled_out", "value": 0.0, "min": 1.0}
+        ]
+        badp = write(d, "bad_inv.json", json.dumps(bad_inv))
+        code, out = run(base, badp)
+        check("violated invariant exits 1", code == 1, out)
+        check("violated invariant is named", "audit/compiled_out" in out, out)
+
+    if failures:
+        print(f"test_bench_compare: FAIL ({len(failures)} check(s))")
+        return 1
+    print("test_bench_compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

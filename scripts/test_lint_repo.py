@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Self-test for lint_repo.py against the checked-in fixture corpus.
+
+Runs the linter over scripts/lint_fixtures/{pass,fail} and asserts that
+the pass corpus is clean, that every fail fixture fires exactly the rule
+it was written to exercise, and that nothing else fires. Run with:
+
+    python3 scripts/test_lint_repo.py
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+LINT = os.path.join(HERE, "lint_repo.py")
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+
+failures = []
+
+
+def check(name, ok, detail=""):
+    status = "ok" if ok else "FAIL"
+    print(f"  {name}: {status}")
+    if not ok:
+        failures.append(name)
+        if detail:
+            print(detail)
+
+
+def run(root):
+    p = subprocess.run(
+        [sys.executable, LINT, root], capture_output=True, text=True
+    )
+    return p.returncode, p.stdout
+
+
+def main():
+    print("test_lint_repo:")
+
+    code, out = run(os.path.join(FIXTURES, "pass"))
+    check("pass corpus is clean (exit 0)", code == 0, out)
+    check("pass corpus has no findings", "FAIL" not in out, out)
+
+    code, out = run(os.path.join(FIXTURES, "fail"))
+    check("fail corpus exits nonzero", code == 1, out)
+
+    expected = [
+        ("bad_unsafe.rs:4", "unsafe-needs-safety"),
+        ("serve/bad_unwrap.rs:4", "no-unwrap-in-hot-path"),
+        ("serve/bad_unwrap.rs:8", "no-unwrap-in-hot-path"),
+        ("bad_steady.rs:7", "steady-state-assert"),
+        ("bad_clock.rs:4", "clock-outside-telemetry"),
+    ]
+    for loc, rule in expected:
+        hit = any(loc in line and rule in line for line in out.splitlines())
+        check(f"fires {rule} at {loc}", hit, out)
+
+    # each fail fixture fires exactly its own rule: no cross-talk, and
+    # the test-module unwrap inside bad_unwrap.rs is not flagged
+    finding_lines = [l for l in out.splitlines() if ": " in l and ".rs:" in l]
+    check(
+        f"exactly {len(expected)} findings (got {len(finding_lines)})",
+        len(finding_lines) == len(expected),
+        out,
+    )
+    check(
+        "test-module unwrap not flagged",
+        not any("bad_unwrap.rs:15" in l for l in finding_lines),
+        out,
+    )
+
+    if failures:
+        print(f"test_lint_repo: FAIL ({len(failures)} check(s))")
+        return 1
+    print("test_lint_repo: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
