@@ -17,6 +17,12 @@
 //!   `d2h_bytes` == one 4-byte loss scalar per step, `h2d_bytes` == the
 //!   batch + mask upload, zero steady-state device-buffer allocations and
 //!   zero arena growth;
+//! * sharded data-parallel steps (2 workers) in both collective shapes —
+//!   the selection-gated all-reduce's byte counts pinned as exact
+//!   invariants (exploit legs move selected params only, explore gathers
+//!   every block plus one squared norm per block on the broadcast, both
+//!   agreeing with the `CostModel` communication terms) along with zero
+//!   steady-state allocations on every worker backend;
 //! * decode-step latency (the serving path);
 //! * a steady-state allocation probe over the backend's workspace arena;
 //! * telemetry cost: fixed-selection trainer steps with the metric
@@ -41,7 +47,7 @@ use std::time::Duration;
 use adagradselect::config::{Method, RunConfig};
 use adagradselect::model::ModelState;
 use adagradselect::runtime::{Backend, ReferenceBackend};
-use adagradselect::train::{ExecMode, Trainer};
+use adagradselect::train::{CostModel, CostModelParams, ExecMode, ShardedTrainer, Trainer};
 use adagradselect::util::bench::{bench, header, BenchResult};
 use adagradselect::util::gemm::{gemm_nn, gemm_tn, oracle};
 use adagradselect::util::json::Value;
@@ -469,6 +475,117 @@ fn main() {
             ("value", Value::num(tel_no_alloc)),
             ("min", Value::num(1.0)),
         ]));
+    }
+
+    // --- sharded data-parallel step: the selection-gated all-reduce ---
+    // Byte exactness at the CommStats counters for both step shapes
+    // (exploit all-reduce == selected params × 4 per leg × workers,
+    // explore gather == every block, norm broadcast == one f32 squared
+    // norm per block per worker), agreement with the CostModel's
+    // communication terms, and zero steady-state allocations on every
+    // worker backend — all enforced by bench_compare as exact invariants.
+    {
+        let shards = 2usize;
+        let p = engine.manifest().preset(heavy).unwrap().clone();
+        let numels = p.block_numels();
+        let n_blocks = numels.len();
+        let p_total: u64 = numels.iter().map(|&d| d as u64).sum();
+        let sel = vec![n_blocks - 2, n_blocks - 1];
+        let p_sel: u64 = sel.iter().map(|&b| numels[b] as u64).sum();
+        let cost = CostModel::new(&p, CostModelParams::default(), p.model.lora_rank);
+        let probe_steps = 4u64;
+        let make_cfg = |method: Method| {
+            let mut cfg = RunConfig::preset_defaults(heavy);
+            cfg.method = method;
+            cfg.train.steps = u64::MAX;
+            cfg.train.log_every = 0;
+            cfg.train.grad_clip = None;
+            cfg
+        };
+
+        // exploit shape: a fixed selection keeps upload shapes and arena
+        // footprints identical across steps
+        let mut t =
+            ShardedTrainer::new(make_cfg(Method::Fixed { blocks: sel.clone() }), shards).unwrap();
+        for _ in 0..2 {
+            t.step_once().unwrap();
+        }
+        let r = bench(&format!("sharded_step/{heavy}/x{shards}/exploit"), budget, || {
+            t.step_once().unwrap();
+        });
+        let c0 = t.comm_stats();
+        let w0 = t.worker_stats().unwrap();
+        for _ in 0..probe_steps {
+            t.step_once().unwrap();
+        }
+        let d = t.comm_stats().delta_since(&c0);
+        let w1 = t.worker_stats().unwrap();
+        let want_leg = probe_steps * shards as u64 * p_sel * 4;
+        let exploit_exact = d.grad_gather_bytes == want_leg
+            && d.grad_bcast_bytes == want_leg
+            && d.norm_bcast_bytes == 0
+            && d.allreduce_ops == probe_steps;
+        let exploit_model = cost.exploit_comm_bytes(&sel, 2 * shards) * probe_steps as f64;
+        let exploit_model_match =
+            (d.grad_gather_bytes + d.grad_bcast_bytes) as f64 == exploit_model;
+        let zero_allocs = w0.iter().zip(&w1).all(|(a, b)| {
+            b.transfers.delta_since(&a.transfers).buffer_allocs == 0 && a.ws_grows == b.ws_grows
+        });
+        println!(
+            "\n-- sharded x{shards} ({heavy}): exploit all-reduce {} B/step \
+             (gather {} + bcast {}), {} steady-state worker allocs --",
+            (d.grad_gather_bytes + d.grad_bcast_bytes) / probe_steps,
+            d.grad_gather_bytes / probe_steps,
+            d.grad_bcast_bytes / probe_steps,
+            if zero_allocs { "zero" } else { "NONZERO" },
+        );
+        results.push(r);
+
+        // explore shape: top-k ranks every step — full gather, squared
+        // norms ride the broadcast
+        let mut t = ShardedTrainer::new(make_cfg(Method::TopK { pct: 30.0 }), shards).unwrap();
+        for _ in 0..2 {
+            t.step_once().unwrap();
+        }
+        let r = bench(&format!("sharded_step/{heavy}/x{shards}/explore"), budget, || {
+            t.step_once().unwrap();
+        });
+        let c0 = t.comm_stats();
+        for _ in 0..probe_steps {
+            t.step_once().unwrap();
+        }
+        let d = t.comm_stats().delta_since(&c0);
+        let want_gather = probe_steps * shards as u64 * p_total * 4;
+        let want_norms = probe_steps * shards as u64 * n_blocks as u64 * 4;
+        let explore_exact = d.grad_gather_bytes == want_gather
+            && d.norm_bcast_bytes == want_norms
+            && d.allreduce_ops == 2 * probe_steps;
+        let explore_model = cost.explore_comm_bytes(shards, shards) * probe_steps as f64;
+        let explore_model_match =
+            (d.grad_gather_bytes + d.norm_bcast_bytes) as f64 == explore_model;
+        println!(
+            "-- sharded x{shards} ({heavy}): explore gather {} B/step, norm bcast {} B/step \
+             (exploit gather is {:.1}x smaller) --",
+            d.grad_gather_bytes / probe_steps,
+            d.norm_bcast_bytes / probe_steps,
+            want_gather as f64 / want_leg.max(1) as f64,
+        );
+        results.push(r);
+
+        let inv = |name: &str, ok: bool| {
+            Value::obj(vec![
+                ("name", Value::str(name)),
+                ("value", Value::num(if ok { 1.0 } else { 0.0 })),
+                ("min", Value::num(1.0)),
+            ])
+        };
+        invariants.push(inv("sharded_exploit_allreduce_bytes_exact", exploit_exact));
+        invariants.push(inv("sharded_explore_allreduce_bytes_exact", explore_exact));
+        invariants.push(inv(
+            "sharded_comm_matches_cost_model",
+            exploit_model_match && explore_model_match,
+        ));
+        invariants.push(inv("sharded_steady_state_zero_allocs", zero_allocs));
     }
 
     // --- full coordinator step per method (the Fig. 1 comparison) ---

@@ -18,21 +18,67 @@ pub struct Batch {
 }
 
 /// Infinite deterministic batch stream over a generator.
+///
+/// Under data-parallel sharding ([`TrainBatcher::shard`]) each rank
+/// draws `batch / n` rows per step and the ranks *partition* the
+/// unsharded stream step-aligned: on every step, rank `r` owns the
+/// contiguous row range `[r·b_local, (r+1)·b_local)` of that step's
+/// unsharded batch, so concatenating the rank batches in rank order
+/// reproduces the unsharded batch byte-for-byte. (An alternative
+/// design — reseeding each rank's generator with `seed ^ rank` — would
+/// give disjoint but *different* problems than the single-worker
+/// stream, breaking the bit-parity contract the sharded trainer is
+/// held to, so the cursor partition is used instead.)
 pub struct TrainBatcher {
     gen: MathGen,
     tok: Tokenizer,
     batch: usize,
     seq_len: usize,
     cursor: u64,
+    /// Number of shards the global stream is split across (1 = unsharded).
+    n_shards: u64,
+    /// This batcher's rank in `0..n_shards`.
+    rank: u64,
 }
 
 impl TrainBatcher {
     pub fn new(gen: MathGen, tok: Tokenizer, batch: usize, seq_len: usize) -> Self {
-        Self { gen, tok, batch, seq_len, cursor: 0 }
+        Self { gen, tok, batch, seq_len, cursor: 0, n_shards: 1, rank: 0 }
+    }
+
+    /// Restrict this batcher to shard `rank` of `n`: it yields
+    /// `batch / n` rows per step — rank `r`'s contiguous slice of the
+    /// step's unsharded batch — so the union over ranks, taken in rank
+    /// order within each step, equals the unsharded stream in order.
+    /// `n` must divide the batch size; `shard(1, 0)` is the identity.
+    pub fn shard(mut self, n: usize, rank: usize) -> Self {
+        assert!(n > 0 && rank < n, "shard rank {rank} out of range for {n} shards");
+        assert!(
+            self.batch % n == 0,
+            "{n} shards do not divide batch size {}",
+            self.batch
+        );
+        self.batch /= n;
+        self.n_shards = n as u64;
+        self.rank = rank as u64;
+        self
     }
 
     pub fn cursor(&self) -> u64 {
         self.cursor
+    }
+
+    /// Rows this batcher yields per step (the local batch size).
+    pub fn rows_per_step(&self) -> usize {
+        self.batch
+    }
+
+    /// Map a local row counter to the global problem index: step
+    /// `cursor / b_local` starts at `step · b_local · n` in the
+    /// unsharded stream, rank `r` owns the `r`-th `b_local`-row slice.
+    fn global_index(&self, cursor: u64) -> u64 {
+        let b = self.batch as u64;
+        (cursor / b) * (b * self.n_shards) + self.rank * b + (cursor % b)
     }
 
     /// Encode one problem row into (tokens, targets), both `seq_len` long.
@@ -52,7 +98,7 @@ impl TrainBatcher {
         let mut tokens = Vec::with_capacity(self.batch * self.seq_len);
         let mut targets = Vec::with_capacity(self.batch * self.seq_len);
         for _ in 0..self.batch {
-            let p = self.gen.problem(self.cursor);
+            let p = self.gen.problem(self.global_index(self.cursor));
             self.cursor += 1;
             let (t, g) = self.encode_row(&p.full_text());
             tokens.extend(t);
@@ -110,6 +156,34 @@ mod tests {
         let c = b.next_batch();
         assert_ne!(a.tokens, c.tokens);
         assert_eq!(b.cursor(), 8);
+    }
+
+    #[test]
+    fn shard_union_equals_unsharded_stream_in_order() {
+        for n in [1usize, 2, 4] {
+            let mut full = batcher();
+            let mut shards: Vec<TrainBatcher> =
+                (0..n).map(|r| batcher().shard(n, r)).collect();
+            for step in 0..3 {
+                let want = full.next_batch();
+                let mut tokens = Vec::new();
+                let mut targets = Vec::new();
+                for s in shards.iter_mut() {
+                    let b = s.next_batch();
+                    assert_eq!(b.batch, 4 / n, "step {step}: local batch");
+                    tokens.extend(b.tokens);
+                    targets.extend(b.targets);
+                }
+                assert_eq!(tokens, want.tokens, "step {step}, {n} shards");
+                assert_eq!(targets, want.targets, "step {step}, {n} shards");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "do not divide")]
+    fn shard_rejects_non_dividing_counts() {
+        let _ = batcher().shard(3, 0);
     }
 
     #[test]

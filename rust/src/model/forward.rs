@@ -186,6 +186,60 @@ fn add_into(out: &mut [f32], x: &[f32]) {
 }
 
 // ---------------------------------------------------------------------------
+// fixed-shape tree reductions over batch entries
+//
+// f32 addition is not associative, so "sum over the batch" must name an
+// exact association order or results differ across batch partitions.
+// Every cross-entry reduction in the backward pass (loss sum, dW = xᵀ·dy,
+// RMSNorm dw, the embedding scatter) therefore combines one partial per
+// batch entry with a floor-half binary tree: a batch of B entries splits
+// B/2 | B-B/2 recursively, and the two halves' results are added.
+//
+// The payoff is shard decomposability: when a power-of-two shard count n
+// divides B, every shard boundary lands on an internal node of that tree,
+// so a shard's local tree over its B/n entries is a subtree of the global
+// one — the sharded trainer's coordinator folds the n rank partials with
+// the same tree and reproduces the single-worker gradient **bitwise**
+// (pinned by tests/sharded_parity.rs).
+// ---------------------------------------------------------------------------
+
+/// Floor-half binary-tree sum of f32 partials (the canonical cross-entry
+/// reduction order; see the section comment above).
+pub fn tree_sum_f32(xs: &[f32]) -> f32 {
+    match xs.len() {
+        0 => 0.0,
+        1 => xs[0],
+        n => tree_sum_f32(&xs[..n / 2]) + tree_sum_f32(&xs[n / 2..]),
+    }
+}
+
+/// Tree-combine `parts.len() / d` contiguous chunks of length `d` with
+/// the floor-half tree of [`tree_sum_f32`]; the result lands in chunk 0.
+pub fn tree_add_chunks(parts: &mut [f32], d: usize) {
+    let n = if d == 0 { 0 } else { parts.len() / d };
+    debug_assert_eq!(parts.len(), n * d, "parts must tile into chunks of {d}");
+    tree_add_chunks_rec(parts, d, n);
+}
+
+fn tree_add_chunks_rec(parts: &mut [f32], d: usize, n: usize) {
+    if n <= 1 {
+        return;
+    }
+    let half = n / 2;
+    let (lo, hi) = parts.split_at_mut(half * d);
+    tree_add_chunks_rec(lo, d, half);
+    tree_add_chunks_rec(hi, d, n - half);
+    add_into(&mut lo[..d], &hi[..d]);
+}
+
+/// Mean loss from an undivided cross-entry loss sum and the non-pad
+/// target count. Factored out so shard workers can apply the division
+/// with the **global** count and bit-match the single-worker loss.
+pub fn loss_from_sum(sum: f32, n_mask: usize) -> f32 {
+    sum / n_mask.max(1) as f32
+}
+
+// ---------------------------------------------------------------------------
 // normalization, rotary embedding, attention, activations
 // ---------------------------------------------------------------------------
 
@@ -215,7 +269,9 @@ fn rmsnorm_fwd(
 }
 
 /// RMSNorm backward. `dw` (when given) receives `Σ_r dy·x·inv` per
-/// coordinate; the return value is `dx`.
+/// coordinate, accumulated per batch entry of `entry_rows` rows and
+/// combined with the fixed entry tree (see [`tree_add_chunks`]); the
+/// return value is `dx`.
 #[allow(clippy::too_many_arguments)]
 fn rmsnorm_bwd(
     ws: &mut Workspace,
@@ -225,9 +281,13 @@ fn rmsnorm_bwd(
     dy: &[f32],
     rows: usize,
     d: usize,
+    entry_rows: usize,
     mut dw: Option<&mut [f32]>,
 ) -> Vec<f32> {
+    debug_assert!(entry_rows > 0 && rows % entry_rows == 0);
     let mut dx = ws.take(rows * d);
+    let entries = rows / entry_rows;
+    let mut parts = dw.is_some().then(|| ws.take_zeroed(entries * d));
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -241,11 +301,18 @@ fn rmsnorm_bwd(
         for j in 0..d {
             dxr[j] = dyr[j] * w[j] * iv - xr[j] * c;
         }
-        if let Some(dw) = dw.as_deref_mut() {
+        if let Some(parts) = parts.as_deref_mut() {
+            let e = r / entry_rows;
+            let pe = &mut parts[e * d..(e + 1) * d];
             for j in 0..d {
-                dw[j] += dyr[j] * xr[j] * iv;
+                pe[j] += dyr[j] * xr[j] * iv;
             }
         }
+    }
+    if let (Some(dw), Some(mut parts)) = (dw.take(), parts) {
+        tree_add_chunks(&mut parts, d);
+        add_into(dw, &parts[..d]);
+        ws.give(parts);
     }
     dx
 }
@@ -533,44 +600,63 @@ fn check_targets(targets: &[i32], vocab: usize, pad: i32) -> Result<()> {
     Ok(())
 }
 
-/// Mean cross-entropy over non-pad target positions; with `want_grad`,
-/// also `dL/dlogits` (in a workspace buffer).
+/// Masked cross-entropy over non-pad target positions. Returns the
+/// **undivided** loss sum (per-entry f64 partials of `entry_rows` rows
+/// each, cast to f32 and combined with the fixed entry tree — see
+/// [`tree_add_chunks`]), the local non-pad target count, and with
+/// `want_grad` the gradient `dL/dlogits` (in a workspace buffer).
+///
+/// `denom` is the non-pad count dividing the gradient: `None` means the
+/// local count (single-worker steps); shard workers pass the globally
+/// summed count so replica gradients match the full-batch step bitwise.
+/// Callers recover the mean loss via [`loss_from_sum`].
+#[allow(clippy::too_many_arguments)]
 fn masked_ce(
     ws: &mut Workspace,
     logits: &[f32],
     targets: &[i32],
     rows: usize,
+    entry_rows: usize,
     vocab: usize,
     pad: i32,
     want_grad: bool,
-) -> Result<(f32, Option<Vec<f32>>)> {
+    denom: Option<usize>,
+) -> Result<(f32, usize, Option<Vec<f32>>)> {
     check_targets(targets, vocab, pad)?;
+    debug_assert!(entry_rows > 0 && rows % entry_rows == 0);
     let mut dlogits = if want_grad { Some(ws.take_zeroed(rows * vocab)) } else { None };
-    let n_mask = targets.iter().filter(|&&t| t != pad).count().max(1) as f32;
-    let inv = 1.0 / n_mask;
-    let mut loss_sum = 0.0f64;
-    for r in 0..rows {
-        let t = targets[r];
-        if t == pad {
-            continue; // gradient row stays zero
-        }
-        let lrow = &logits[r * vocab..(r + 1) * vocab];
-        let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for &x in lrow {
-            sum += (x - maxv).exp();
-        }
-        let logz = maxv + sum.ln();
-        loss_sum -= (lrow[t as usize] - logz) as f64;
-        if let Some(dl) = dlogits.as_deref_mut() {
-            let drow = &mut dl[r * vocab..(r + 1) * vocab];
-            for (dj, &x) in drow.iter_mut().zip(lrow) {
-                *dj = (x - maxv).exp() / sum * inv;
+    let count = targets.iter().filter(|&&t| t != pad).count();
+    let inv = 1.0 / denom.unwrap_or(count).max(1) as f32;
+    let entries = rows / entry_rows;
+    let mut parts = ws.take_zeroed(entries);
+    for e in 0..entries {
+        let mut entry_sum = 0.0f64;
+        for r in e * entry_rows..(e + 1) * entry_rows {
+            let t = targets[r];
+            if t == pad {
+                continue; // gradient row stays zero
             }
-            drow[t as usize] -= inv;
+            let lrow = &logits[r * vocab..(r + 1) * vocab];
+            let maxv = lrow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for &x in lrow {
+                sum += (x - maxv).exp();
+            }
+            let logz = maxv + sum.ln();
+            entry_sum -= (lrow[t as usize] - logz) as f64;
+            if let Some(dl) = dlogits.as_deref_mut() {
+                let drow = &mut dl[r * vocab..(r + 1) * vocab];
+                for (dj, &x) in drow.iter_mut().zip(lrow) {
+                    *dj = (x - maxv).exp() / sum * inv;
+                }
+                drow[t as usize] -= inv;
+            }
         }
+        parts[e] = entry_sum as f32;
     }
-    Ok(((loss_sum / n_mask as f64) as f32, dlogits))
+    let loss_sum = tree_sum_f32(&parts[..entries]);
+    ws.give(parts);
+    Ok((loss_sum, count, dlogits))
 }
 
 // ---------------------------------------------------------------------------
@@ -691,9 +777,57 @@ fn proj_fwd(
     }
 }
 
+/// Weight-gradient product `dw = scale · xᵀ·dy` computed as one GEMM per
+/// batch entry (`entry_rows` rows, K = entry_rows instead of K = m) and
+/// combined with the fixed entry tree — the restructuring that makes the
+/// cross-entry reduction shard-decomposable (see [`tree_add_chunks`]).
+/// Assign mode: `dw` need not be pre-zeroed. A single entry degenerates
+/// to the plain fused-transpose GEMM, which is exactly the tree leaf.
+#[allow(clippy::too_many_arguments)]
+fn weight_grad_tree(
+    ws: &mut Workspace,
+    dw: &mut [f32],
+    x: &[f32],
+    dy: &[f32],
+    m: usize,
+    entry_rows: usize,
+    d_in: usize,
+    d_out: usize,
+    scale: f32,
+) {
+    debug_assert!(entry_rows > 0 && m % entry_rows == 0);
+    let entries = m / entry_rows;
+    if entries <= 1 {
+        matmul_ta_into(ws, dw, x, dy, m, d_in, d_out, scale);
+        return;
+    }
+    let chunk = d_in * d_out;
+    let mut parts = ws.take(entries * chunk);
+    for e in 0..entries {
+        let xe = &x[e * entry_rows * d_in..(e + 1) * entry_rows * d_in];
+        let dye = &dy[e * entry_rows * d_out..(e + 1) * entry_rows * d_out];
+        matmul_ta_into(
+            ws,
+            &mut parts[e * chunk..(e + 1) * chunk],
+            xe,
+            dye,
+            entry_rows,
+            d_in,
+            d_out,
+            scale,
+        );
+    }
+    tree_add_chunks(&mut parts, chunk);
+    dw.copy_from_slice(&parts[..chunk]);
+    ws.give(parts);
+}
+
 /// Backward through [`proj_fwd`]: accumulates `dx`, optionally emits the
-/// base weight gradient and the adapter gradients (both written in
-/// assign mode — no pre-zeroed buffers needed).
+/// base weight gradient (per-entry tree reduction over batch entries of
+/// `entry_rows` rows — see [`weight_grad_tree`]) and the adapter
+/// gradients (plain whole-batch GEMMs; the LoRA path is not
+/// shard-decomposed). All written in assign mode — no pre-zeroed buffers
+/// needed.
 #[allow(clippy::too_many_arguments)]
 fn proj_bwd(
     ws: &mut Workspace,
@@ -703,6 +837,7 @@ fn proj_bwd(
     w: (&[f32], usize, usize),
     lora: Option<(&[f32], &[f32], usize)>,
     m: usize,
+    entry_rows: usize,
     dx: &mut [f32],
     dw: Option<&mut [f32]>,
     dab: Option<(&mut [f32], &mut [f32])>,
@@ -710,7 +845,7 @@ fn proj_bwd(
     let (wm, d_in, d_out) = w;
     matmul_tb_acc(ws, dx, dy, wm, m, d_in, d_out, 1.0);
     if let Some(dw) = dw {
-        matmul_ta_into(ws, dw, x, dy, m, d_in, d_out, 1.0);
+        weight_grad_tree(ws, dw, x, dy, m, entry_rows, d_in, d_out, 1.0);
     }
     if let (Some((a, bm, r)), Some(xa), Some((da, db))) = (lora, xa, dab) {
         // d(xa) = 2 · dy @ Bᵀ; dx += d(xa) @ Aᵀ; dA = xᵀ d(xa); dB = 2·xaᵀ dy
@@ -882,6 +1017,7 @@ fn layer_bwd(
                 (wm, d_in, d_out),
                 lo,
                 m,
+                dims.s,
                 $dx,
                 dw_buf.as_deref_mut(),
                 ab_buf.as_mut().map(|(a, b)| (&mut a[..], &mut b[..])),
@@ -927,6 +1063,7 @@ fn layer_bwd(
         &dx2,
         m,
         d,
+        dims.s,
         if want_base { Some(&mut ln_buf[..]) } else { None },
     );
     ws.give(dx2);
@@ -962,6 +1099,7 @@ fn layer_bwd(
         &dx1,
         m,
         d,
+        dims.s,
         if want_base { Some(&mut ln_buf[..]) } else { None },
     );
     ws.give(dx1);
@@ -1118,7 +1256,7 @@ pub fn train_step(
     pad: i32,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     let mut ws = Workspace::new();
-    run_train_step(&mut ws, spec, blocks, flats, None, tokens, targets, pad, None)
+    train_step_in(&mut ws, spec, blocks, flats, tokens, targets, pad)
 }
 
 /// [`train_step`] against a caller-held [`Workspace`]: after the first
@@ -1133,7 +1271,9 @@ pub fn train_step_in(
     targets: &[i32],
     pad: i32,
 ) -> Result<(f32, Vec<Vec<f32>>)> {
-    run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, None)
+    let (sum, count, grads) =
+        run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, None, None)?;
+    Ok((loss_from_sum(sum, count), grads))
 }
 
 /// Masked train step — the compute-gating kernel behind selective
@@ -1162,7 +1302,7 @@ pub fn train_step_masked(
     mask: &[bool],
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     let mut ws = Workspace::new();
-    run_train_step(&mut ws, spec, blocks, flats, None, tokens, targets, pad, Some(mask))
+    train_step_masked_in(&mut ws, spec, blocks, flats, tokens, targets, pad, mask)
 }
 
 /// [`train_step_masked`] against a caller-held [`Workspace`]. Steady
@@ -1179,7 +1319,71 @@ pub fn train_step_masked_in(
     pad: i32,
     mask: &[bool],
 ) -> Result<(f32, Vec<Vec<f32>>)> {
-    run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, Some(mask))
+    let (sum, count, grads) =
+        run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, Some(mask), None)?;
+    Ok((loss_from_sum(sum, count), grads))
+}
+
+/// Shard-local train step: [`train_step_in`] over a **local** batch
+/// slice of a larger data-parallel step (the `train_step_shard`
+/// artifact). Differences from the single-worker entry:
+///
+/// * `denom` is the **globally** summed non-pad target count (all shards'
+///   batches), so the gradient scaling `1/denom` matches the full-batch
+///   step bitwise;
+/// * the returned loss is the **undivided** shard-local tree sum — the
+///   coordinator tree-folds the rank partials and divides once.
+///
+/// Because every cross-entry reduction in the backward is a fixed-shape
+/// entry tree (see [`tree_add_chunks`]), the returned gradient flats are
+/// exactly this shard's subtree partials: tree-folding them across ranks
+/// reproduces the full-batch gradients bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_shard_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+    denom: usize,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let (sum, _count, grads) =
+        run_train_step(ws, spec, blocks, flats, None, tokens, targets, pad, None, Some(denom))?;
+    Ok((sum, grads))
+}
+
+/// Masked variant of [`train_step_shard_in`] (the
+/// `train_step_masked_shard` artifact): the selection-gated backward of
+/// [`train_step_masked_in`] over a shard-local batch, returning the
+/// undivided loss partial plus the selected blocks' gradient subtree
+/// partials.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_masked_shard_in(
+    ws: &mut Workspace,
+    spec: &ModelSpec,
+    blocks: &[BlockSpec],
+    flats: &[&[f32]],
+    tokens: &[i32],
+    targets: &[i32],
+    pad: i32,
+    mask: &[bool],
+    denom: usize,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let (sum, _count, grads) = run_train_step(
+        ws,
+        spec,
+        blocks,
+        flats,
+        None,
+        tokens,
+        targets,
+        pad,
+        Some(mask),
+        Some(denom),
+    )?;
+    Ok((sum, grads))
 }
 
 /// LoRA train step: base blocks frozen, gradients only for the adapter
@@ -1229,7 +1433,7 @@ pub fn train_step_lora_in(
             lora_flats.len()
         ));
     }
-    run_train_step(
+    let (sum, count, grads) = run_train_step(
         ws,
         spec,
         blocks,
@@ -1239,14 +1443,20 @@ pub fn train_step_lora_in(
         targets,
         pad,
         None,
-    )
+        None,
+    )?;
+    Ok((loss_from_sum(sum, count), grads))
 }
 
 /// Core fused train step. With `mask: Some(..)` the backward pass is
 /// gated on the selected blocks (see [`train_step_masked`]); with `None`
-/// every block's gradient is produced. The returned vector holds exactly
-/// the requested gradient flats in ascending block order (all blocks for
-/// the full/LoRA paths, the selected subset for the masked path).
+/// every block's gradient is produced. The returned tuple is `(undivided
+/// loss sum, local non-pad target count, gradient flats)` — the flats in
+/// ascending block order (all blocks for the full/LoRA paths, the
+/// selected subset for the masked path). `denom: Some(n)` overrides the
+/// cross-entropy denominator with a globally summed non-pad count (the
+/// shard entries); `None` uses the local count. Callers recover the mean
+/// loss via [`loss_from_sum`].
 #[allow(clippy::too_many_arguments)]
 fn run_train_step(
     ws: &mut Workspace,
@@ -1258,7 +1468,8 @@ fn run_train_step(
     targets: &[i32],
     pad: i32,
     mask: Option<&[bool]>,
-) -> Result<(f32, Vec<Vec<f32>>)> {
+    denom: Option<usize>,
+) -> Result<(f32, usize, Vec<Vec<f32>>)> {
     let dims = Dims::from_spec(spec);
     let m = dims.rows();
     if targets.len() != tokens.len() {
@@ -1297,7 +1508,8 @@ fn run_train_step(
     let ForwardOut { h, mut caches } =
         forward(ws, spec, blocks, flats, lora, tokens, &rope, cache_from)?;
     let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
-    let (loss, dlogits) = masked_ce(ws, &logits, targets, m, dims.vocab, pad, true)?;
+    let (loss_sum, count, dlogits) =
+        masked_ce(ws, &logits, targets, m, dims.s, dims.vocab, pad, true, denom)?;
     let dlogits = dlogits.expect("want_grad");
     ws.give(logits);
 
@@ -1331,11 +1543,12 @@ fn run_train_step(
         &dxf,
         m,
         dims.d,
+        dims.s,
         if want_head { Some(&mut ln_buf[..]) } else { None },
     );
     if want_head {
         let mut d_w_out = ws.take(dims.d * dims.vocab);
-        matmul_ta_into(ws, &mut d_w_out, &xf, &dlogits, m, dims.d, dims.vocab, 1.0);
+        weight_grad_tree(ws, &mut d_w_out, &xf, &dlogits, m, dims.s, dims.d, dims.vocab, 1.0);
         let hg = grads[head_idx].as_mut().expect("head grads requested");
         write_tensor(hg, head_spec, "w_out", &d_w_out)?;
         write_tensor(hg, head_spec, "ln_f", &ln_buf)?;
@@ -1381,18 +1594,32 @@ fn run_train_step(
     if want_base && block_wanted(0) {
         let emb_spec = tensor_spec(&blocks[0], "tok_emb")?;
         let demb_full = grads[0].as_mut().expect("embed grads requested");
-        let demb = &mut demb_full[emb_spec.offset..emb_spec.offset + dims.vocab * dims.d];
-        for (r, &t) in tokens.iter().enumerate() {
-            let dst = &mut demb[t as usize * dims.d..(t as usize + 1) * dims.d];
-            let src = &dh[r * dims.d..(r + 1) * dims.d];
-            for (o, &v) in dst.iter_mut().zip(src) {
-                *o += v;
+        let plane = dims.vocab * dims.d;
+        let demb = &mut demb_full[emb_spec.offset..emb_spec.offset + plane];
+        if dims.b <= 1 {
+            // single entry: the sequential scatter IS the tree leaf
+            for (r, &t) in tokens.iter().enumerate() {
+                let dst = &mut demb[t as usize * dims.d..(t as usize + 1) * dims.d];
+                add_into(dst, &dh[r * dims.d..(r + 1) * dims.d]);
             }
+        } else {
+            // scatter each entry into its own embedding plane, then
+            // tree-combine — token ids colliding across entries must
+            // reduce in the fixed entry order, not the row order
+            let mut parts = ws.take_zeroed(dims.b * plane);
+            for (r, &t) in tokens.iter().enumerate() {
+                let base = (r / dims.s) * plane + t as usize * dims.d;
+                let dst = &mut parts[base..base + dims.d];
+                add_into(dst, &dh[r * dims.d..(r + 1) * dims.d]);
+            }
+            tree_add_chunks(&mut parts, plane);
+            add_into(demb, &parts[..plane]);
+            ws.give(parts);
         }
     }
     ws.give(dh);
     rope.recycle(ws);
-    Ok((loss, grads.into_iter().flatten().collect()))
+    Ok((loss_sum, count, grads.into_iter().flatten().collect()))
 }
 
 /// Loss-only evaluation (the `eval_loss` artifact).
@@ -1430,14 +1657,15 @@ pub fn eval_loss_in(
         forward(ws, spec, blocks, flats, None, tokens, &rope, spec.n_layers)?;
     debug_assert!(caches.is_empty());
     let (logits, xf, invf) = head_logits(ws, spec, blocks, flats, &h)?;
-    let (loss, dlogits) = masked_ce(ws, &logits, targets, dims.rows(), dims.vocab, pad, false)?;
+    let (sum, count, dlogits) =
+        masked_ce(ws, &logits, targets, dims.rows(), dims.s, dims.vocab, pad, false, None)?;
     debug_assert!(dlogits.is_none());
     ws.give(logits);
     ws.give(xf);
     ws.give(invf);
     ws.give(h);
     rope.recycle(ws);
-    Ok(loss)
+    Ok(loss_from_sum(sum, count))
 }
 
 /// Full logits `[batch, seq, vocab]` (the `decode_step` artifact).
@@ -2374,6 +2602,76 @@ mod tests {
     }
 
     #[test]
+    fn tree_reductions_have_fixed_shape() {
+        // floor-half tree: [a,b,c,d] must reduce as (a+b)+(c+d), and the
+        // chunked form must agree with the scalar form elementwise
+        let xs = [1.0e7f32, 1.0, -1.0e7, 1.0];
+        let expect = (xs[0] + xs[1]) + (xs[2] + xs[3]);
+        assert_eq!(tree_sum_f32(&xs).to_bits(), expect.to_bits());
+        // odd count: a + (b+c)
+        let ys = [3.0f32, 5.0, 7.0];
+        assert_eq!(tree_sum_f32(&ys).to_bits(), (ys[0] + (ys[1] + ys[2])).to_bits());
+        let mut chunks = vec![1.0e7f32, 2.0, 1.0, 3.0, -1.0e7, 4.0, 1.0, 5.0];
+        tree_add_chunks(&mut chunks, 2);
+        assert_eq!(chunks[0].to_bits(), expect.to_bits());
+        assert_eq!(chunks[1], (2.0f32 + 3.0) + (4.0 + 5.0));
+    }
+
+    #[test]
+    fn shard_partials_tree_fold_to_full_batch() {
+        // the backward's cross-entry reductions are entry trees, so a
+        // power-of-two batch partition must reproduce the full-batch
+        // loss and gradients bitwise when rank partials are tree-folded
+        // — the contract the sharded trainer's all-reduce is built on
+        let mut spec = tiny_spec();
+        spec.batch = 4;
+        let blocks = block_table(&spec);
+        let state = ModelState::init(&blocks, 19);
+        let refs: Vec<&[f32]> = state.flats.iter().map(|f| f.as_slice()).collect();
+        let (tok, tgt) = tokens_for(&spec, 1);
+        let (loss_full, grads_full) = train_step(&spec, &blocks, &refs, &tok, &tgt, 0).unwrap();
+        let denom = tgt.iter().filter(|&&t| t != 0).count();
+
+        for n_shards in [1usize, 2, 4] {
+            let b_local = spec.batch / n_shards;
+            let mut sspec = spec.clone();
+            sspec.batch = b_local;
+            let rows = b_local * spec.seq_len;
+            let mut loss_parts = Vec::new();
+            let mut grad_parts: Vec<Vec<Vec<f32>>> = Vec::new();
+            let mut ws = Workspace::new();
+            for r in 0..n_shards {
+                let lo = r * rows;
+                let (ls, gs) = train_step_shard_in(
+                    &mut ws,
+                    &sspec,
+                    &blocks,
+                    &refs,
+                    &tok[lo..lo + rows],
+                    &tgt[lo..lo + rows],
+                    0,
+                    denom,
+                )
+                .unwrap();
+                loss_parts.push(ls);
+                grad_parts.push(gs);
+            }
+            let loss = loss_from_sum(tree_sum_f32(&loss_parts), denom);
+            assert_eq!(loss.to_bits(), loss_full.to_bits(), "{n_shards} shards");
+            for b in 0..blocks.len() {
+                let mut acc: Vec<f32> =
+                    grad_parts.iter().flat_map(|g| g[b].iter().copied()).collect();
+                tree_add_chunks(&mut acc, blocks[b].numel);
+                assert_eq!(
+                    &acc[..blocks[b].numel],
+                    &grads_full[b][..],
+                    "{n_shards} shards block {b} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn workspace_reuse_is_bit_deterministic() {
         // the same step through a shared arena must produce bit-identical
         // results on every call — stale slab contents must never leak
@@ -2590,7 +2888,7 @@ mod tests {
         let mut ws = Workspace::new();
         let (_y, inv) = rmsnorm_fwd(&mut ws, &x, &w, eps_norm, rows, d);
         let mut dw = vec![0.0f32; d];
-        let dx = rmsnorm_bwd(&mut ws, &x, &w, &inv, &cvec, rows, d, Some(&mut dw[..]));
+        let dx = rmsnorm_bwd(&mut ws, &x, &w, &inv, &cvec, rows, d, rows, Some(&mut dw[..]));
 
         let h = 1e-3f32;
         for i in 0..rows * d {
@@ -2686,6 +2984,7 @@ mod tests {
             xa.as_deref(),
             (&wm, d_in, d_out),
             Some((&a, &bm, r)),
+            m,
             m,
             &mut dx,
             Some(&mut dw[..]),

@@ -176,6 +176,73 @@ impl TransferStats {
     }
 }
 
+/// Monotone counters for inter-worker (shard↔coordinator) communication
+/// in sharded data-parallel training — the wire-traffic sibling of
+/// [`TransferStats`], which counts the host↔device boundary.
+///
+/// The byte model is a parameter-server star: the coordinator gathers
+/// per-shard partials, reduces them in a fixed tree order, and
+/// broadcasts the result back, so every logical all-reduce costs one
+/// gather leg plus one broadcast leg, each multiplied by the worker
+/// count. The selection gate shows up directly in these counters:
+/// exploit steps gather/broadcast only the *selected* blocks' gradient
+/// flats (`grad_gather_bytes`/`grad_bcast_bytes` scale with selected
+/// params, not total params), while explore steps additionally
+/// broadcast the reduced per-block squared norms the strategies consume
+/// (`norm_bcast_bytes`, `n_blocks` f32s per worker). Everything else —
+/// step commands, loss partials, valid-target counts, the global loss
+/// denominator, the clip scale — is `ctrl_bytes`. Exported as
+/// `train_comm_*` registry gauges by `train::sharded::ShardedTrainer`
+/// and enforced per step by the bench invariants.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Gradient-partial bytes gathered from workers (gather leg).
+    pub grad_gather_bytes: u64,
+    /// Reduced-gradient bytes broadcast back to workers (bcast leg).
+    pub grad_bcast_bytes: u64,
+    /// Reduced per-block squared-norm bytes broadcast on explore steps.
+    pub norm_bcast_bytes: u64,
+    /// Control-plane bytes (commands, loss partials, counts, scales).
+    pub ctrl_bytes: u64,
+    /// Number of logical all-reduce operations performed.
+    pub allreduce_ops: u64,
+}
+
+impl CommStats {
+    /// Field names in [`CommStats::gauge_values`] order, for registering
+    /// one telemetry gauge per counter.
+    pub const GAUGE_NAMES: [&'static str; 5] = [
+        "grad_gather_bytes",
+        "grad_bcast_bytes",
+        "norm_bcast_bytes",
+        "ctrl_bytes",
+        "allreduce_ops",
+    ];
+
+    /// The counters as `f64` gauge values, in [`CommStats::GAUGE_NAMES`] order.
+    pub fn gauge_values(&self) -> [f64; 5] {
+        [
+            self.grad_gather_bytes as f64,
+            self.grad_bcast_bytes as f64,
+            self.norm_bcast_bytes as f64,
+            self.ctrl_bytes as f64,
+            self.allreduce_ops as f64,
+        ]
+    }
+
+    /// Counter-wise difference `self - earlier` (both from the same
+    /// trainer, `earlier` snapshotted first).
+    pub fn delta_since(&self, earlier: &CommStats) -> CommStats {
+        CommStats {
+            grad_gather_bytes: self.grad_gather_bytes - earlier.grad_gather_bytes,
+            grad_bcast_bytes: self.grad_bcast_bytes - earlier.grad_bcast_bytes,
+            norm_bcast_bytes: self.norm_bcast_bytes - earlier.norm_bcast_bytes,
+            ctrl_bytes: self.ctrl_bytes - earlier.ctrl_bytes,
+            allreduce_ops: self.allreduce_ops - earlier.allreduce_ops,
+        }
+    }
+}
+
 /// Output handles of one [`Backend::execute`] call: one device tensor
 /// handle per output (entries with pure in-place semantics return an
 /// empty vector). Nothing here has touched the host yet — read back what
@@ -360,6 +427,32 @@ mod tests {
         assert_eq!(d.h2d_bytes, 40);
         assert_eq!(d.d2h_bytes, 4);
         assert_eq!(d.buffer_allocs, 0);
+    }
+
+    #[test]
+    fn comm_stats_delta_and_gauges() {
+        let a = CommStats {
+            grad_gather_bytes: 800,
+            grad_bcast_bytes: 800,
+            norm_bcast_bytes: 32,
+            ctrl_bytes: 20,
+            allreduce_ops: 2,
+        };
+        let mut b = a;
+        b.grad_gather_bytes += 400;
+        b.grad_bcast_bytes += 400;
+        b.ctrl_bytes += 8;
+        b.allreduce_ops += 1;
+        let d = b.delta_since(&a);
+        assert_eq!(d.grad_gather_bytes, 400);
+        assert_eq!(d.grad_bcast_bytes, 400);
+        assert_eq!(d.norm_bcast_bytes, 0);
+        assert_eq!(d.ctrl_bytes, 8);
+        assert_eq!(d.allreduce_ops, 1);
+        let g = a.gauge_values();
+        assert_eq!(g.len(), CommStats::GAUGE_NAMES.len());
+        assert_eq!(g[0], 800.0);
+        assert_eq!(g[4], 2.0);
     }
 
     #[test]

@@ -44,6 +44,8 @@
 //! |---|---|---|---|
 //! | `train_step` (+`_pallas`) | blocks·n, tokens, targets | loss, grad·n | — |
 //! | `train_step_masked` | blocks·n, tokens, targets, mask | loss, grad per *selected* block | — |
+//! | `train_step_shard` | blocks·n, tokens, targets, denom | loss *partial*, grad partial·n | — |
+//! | `train_step_masked_shard` | blocks·n, tokens, targets, denom, mask | loss *partial*, grad partial per *selected* block | — |
 //! | `train_step_fused` | blocks·n, m·n, v·n, t·n, sched, step, tokens, targets, mask | loss | p/m/v/t of selected blocks, step |
 //! | `train_step_lora[2]` | blocks·n, adapters·nl, tokens, targets | loss, adapter grad·nl | — |
 //! | `eval_loss` | blocks·n, tokens, targets | loss | — |
@@ -68,6 +70,16 @@
 //! aliasing); backends whose manifests lack them degrade gracefully — the
 //! trainer falls back to the full backward and the host-loop optimizer.
 //!
+//! The `*_shard` entries are the data-parallel forms consumed by
+//! `train::sharded::ShardedTrainer`: the local batch is derived from the
+//! token tensor (one executable serves any shard width dividing the
+//! preset batch), `denom` is the globally summed non-pad target count
+//! (i32[1]), and the outputs are **undivided** loss partials plus
+//! gradient *subtree partials* that a coordinator tree-fold combines
+//! bit-exactly into the single-worker `train_step` result — see
+//! `model::forward::train_step_shard_in` for the decomposition contract
+//! and [`backend::CommStats`] for the wire-byte accounting.
+//!
 //! The serving subsystem built on top of these entries — KV-cache slot
 //! pool, continuous-batching scheduler, engine — lives in [`crate::serve`];
 //! backends additionally implementing `serve::KvBackend` run the serving
@@ -81,7 +93,9 @@ mod manifest;
 pub mod presets;
 mod reference;
 
-pub use backend::{Backend, DType, DeviceOutputs, HostOutputs, TensorMeta, TransferStats};
+pub use backend::{
+    Backend, CommStats, DType, DeviceOutputs, HostOutputs, TensorMeta, TransferStats,
+};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineTensor, Exe};
 pub use manifest::{

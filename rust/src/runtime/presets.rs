@@ -168,6 +168,14 @@ fn preset(model: ModelSpec, pallas: bool) -> Preset {
     // lowering would pad to fixed arity, so the AOT export keeps this
     // entry reference-backend-first.
     add("train_step_masked", n + 3);
+    // shard-local data-parallel steps: blocks + tokens + targets + denom
+    // (i32[1] global non-pad target count), masked form appends the block
+    // mask. Batch is derived from the token tensor so one executable
+    // serves any shard width; outputs are *undivided* loss partials +
+    // gradient subtree partials that tree-fold bit-exactly across ranks
+    // (see train/sharded.rs).
+    add("train_step_shard", n + 3);
+    add("train_step_masked_shard", n + 4);
     // fully device-resident exploit step: blocks + m + v + t (per-block
     // f32[1] step counts) + sched f32[4] + global step f32[1] + tokens +
     // targets + mask. Updates the selected blocks' p/m/v/t in place

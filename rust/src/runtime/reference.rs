@@ -134,6 +134,8 @@ impl RefTensor {
 enum Entry {
     TrainStep,
     TrainStepMasked,
+    TrainStepShard,
+    TrainStepMaskedShard,
     TrainStepFused,
     TrainStepLora { double: bool },
     EvalLoss,
@@ -156,6 +158,10 @@ impl Entry {
         match self {
             Entry::TrainStep => n + 2,
             Entry::TrainStepMasked => n + 3,
+            // blocks + tokens + targets + denom (global non-pad count)
+            Entry::TrainStepShard => n + 3,
+            // ... + mask
+            Entry::TrainStepMaskedShard => n + 4,
             // blocks + m + v + t (one scalar tensor per block) + sched +
             // step + tokens + targets + mask
             Entry::TrainStepFused => 4 * n + 5,
@@ -339,6 +345,8 @@ impl ReferenceBackend {
             // the reference backend has exactly one attention path
             "train_step" | "train_step_pallas" => Entry::TrainStep,
             "train_step_masked" => Entry::TrainStepMasked,
+            "train_step_shard" => Entry::TrainStepShard,
+            "train_step_masked_shard" => Entry::TrainStepMaskedShard,
             "train_step_fused" => Entry::TrainStepFused,
             "train_step_lora" => Entry::TrainStepLora { double: false },
             "train_step_lora2" => Entry::TrainStepLora { double: true },
@@ -420,6 +428,83 @@ impl ReferenceBackend {
                 out.extend(grads.into_iter().map(|g| {
                     let dims = vec![g.len()];
                     self.out_f32(g, dims)
+                }));
+                Ok(out)
+            }
+            Entry::TrainStepShard | Entry::TrainStepMaskedShard => {
+                // Shard-local data-parallel step: blocks..., tokens,
+                // targets, denom (i32[1], the globally summed non-pad
+                // target count), and for the masked form a trailing
+                // mask i32[n_blocks]. The local batch is derived from
+                // the token tensor, so one loaded executable serves any
+                // shard width that divides the preset batch. Outputs:
+                // the **undivided** shard loss partial + gradient
+                // subtree partials (all blocks, or the selected subset
+                // in ascending block order for the masked form) — the
+                // coordinator tree-folds rank partials bit-exactly
+                // (see forward::train_step_shard_in).
+                let p = self.preset(exe)?;
+                let n = p.blocks.len();
+                let guards = self.f32_guards(&args[..n])?;
+                let flats: Vec<&[f32]> = guards.iter().map(|g| &**g).collect();
+                let tokens = args[n].as_i32()?;
+                let targets = args[n + 1].as_i32()?;
+                let denom_t = args[n + 2].as_i32()?;
+                let denom = *denom_t
+                    .first()
+                    .ok_or_else(|| anyhow!("{}: empty denom input", exe.name))?;
+                if denom < 0 {
+                    return Err(anyhow!("{}: negative denom {denom}", exe.name));
+                }
+                let s = p.model.seq_len;
+                if s == 0 || tokens.len() % s != 0 || tokens.is_empty() {
+                    return Err(anyhow!(
+                        "{}: {} tokens do not tile into rows of seq_len {s}",
+                        exe.name,
+                        tokens.len()
+                    ));
+                }
+                let mut spec = p.model.clone();
+                spec.batch = tokens.len() / s;
+                let mask: Option<Vec<bool>> = if exe.entry == Entry::TrainStepMaskedShard {
+                    Some(args[n + 3].as_i32()?.iter().map(|&x| x != 0).collect())
+                } else {
+                    None
+                };
+                let mut ws = self.ws.borrow_mut();
+                let (loss_partial, grads) = match &mask {
+                    Some(m) => forward::train_step_masked_shard_in(
+                        &mut ws,
+                        &spec,
+                        &p.blocks,
+                        &flats,
+                        &tokens,
+                        &targets,
+                        pad,
+                        m,
+                        denom as usize,
+                    )?,
+                    None => forward::train_step_shard_in(
+                        &mut ws,
+                        &spec,
+                        &p.blocks,
+                        &flats,
+                        &tokens,
+                        &targets,
+                        pad,
+                        denom as usize,
+                    )?,
+                };
+                drop(ws);
+                // grads go through the pool (not `out_f32`): the sharded
+                // trainer drops its output handles every step, so a
+                // steady-state shard loop reuses the same grad buffers —
+                // `buffer_allocs` stays flat, the invariant the sharded
+                // bench and tests/sharded_parity.rs pin.
+                let mut out = vec![self.out_f32_pooled(&[loss_partial], vec![1])];
+                out.extend(grads.into_iter().map(|g| {
+                    let dims = vec![g.len()];
+                    self.out_f32_pooled(&g, dims)
                 }));
                 Ok(out)
             }

@@ -194,6 +194,42 @@ impl CostModel {
         flops / self.params.flops_per_s + kernels * self.params.launch_s
     }
 
+    /// Per-step all-reduce bytes of an **exploit** (pre-decided) sharded
+    /// step: only the selected blocks' gradient flats cross the wire, so
+    /// the traffic is `selected_params × 4` bytes per collective leg —
+    /// `legs` is the fan-out factor of the topology (the sharded
+    /// trainer's parameter-server star pays `2 × n_workers` legs: one
+    /// gather + one broadcast per worker; a ring all-reduce would pay
+    /// `2 × (n - 1)`).
+    ///
+    /// This is the *communication* face of the same explore/exploit
+    /// asymmetry the compute terms above model: exploitation moves
+    /// `O(selected params)` bytes, exploration moves `O(total params)`
+    /// gradients **plus** `n_blocks` f32 reduced norms (the ranking
+    /// signal every replica's strategy consumes) — compare
+    /// [`CostModel::explore_comm_bytes`]. Selection gates the wire
+    /// exactly like it gates the weight-gradient GEMMs.
+    pub fn exploit_comm_bytes(&self, selected: &[usize], legs: usize) -> f64 {
+        let p_sel: f64 = selected.iter().map(|&b| self.numel[b]).sum();
+        p_sel * 4.0 * legs as f64
+    }
+
+    /// Per-step all-reduce bytes of an **explore** (norm-ranking) sharded
+    /// step: every block's gradient is reduced (the strategies need this
+    /// step's full norm vector), costing `total_params × 4` bytes per
+    /// gradient leg, plus the `n_blocks` f32s of reduced-norm traffic
+    /// per broadcast leg (`norm_legs`) that carry the ranking signal to
+    /// the replicas. The norm term is tiny next to the gradient term —
+    /// which is exactly the paper's point: once a step is *decided*, the
+    /// whole `O(total_params)` wire cost collapses to the selected
+    /// subset, and the norms that would re-rank blocks are never
+    /// computed, let alone sent.
+    pub fn explore_comm_bytes(&self, legs: usize, norm_legs: usize) -> f64 {
+        let p_total: f64 = self.numel.iter().sum();
+        let n_blocks = self.numel.len() as f64;
+        p_total * 4.0 * legs as f64 + n_blocks * 4.0 * norm_legs as f64
+    }
+
     /// LoRA step: base forward + adapter forward everywhere, backward
     /// through everything, weight grads only for adapters.
     pub fn lora_step_s(&self, n_layers: usize, rank_mult: f64) -> f64 {
@@ -281,5 +317,25 @@ mod tests {
         let c = model();
         let all: Vec<usize> = (0..c.fwd.len()).collect();
         assert_eq!(c.full_step_s(), c.selective_step_s(&all));
+    }
+
+    #[test]
+    fn comm_asymmetry_mirrors_compute_asymmetry() {
+        let c = model();
+        let sel: Vec<usize> = (20..26).collect();
+        let legs = 2 * 4; // 4-worker star: gather + bcast per worker
+        let exploit = c.exploit_comm_bytes(&sel, legs);
+        let explore = c.explore_comm_bytes(legs, 4);
+        // exploit traffic scales with *selected* params only
+        let p_sel: f64 = sel.iter().map(|&b| c.numel[b]).sum();
+        assert_eq!(exploit, p_sel * 4.0 * legs as f64);
+        // explore pays the full gradient volume plus the norm broadcast
+        let p_total: f64 = c.numel.iter().sum();
+        assert!(explore > p_total * 4.0 * legs as f64);
+        assert!(explore > exploit, "explore {explore} vs exploit {exploit}");
+        // selecting everything still leaves explore ahead by the norms
+        let all: Vec<usize> = (0..c.numel.len()).collect();
+        let diff = c.explore_comm_bytes(legs, 4) - c.exploit_comm_bytes(&all, legs);
+        assert_eq!(diff, c.numel.len() as f64 * 4.0 * 4.0);
     }
 }

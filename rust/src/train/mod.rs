@@ -22,9 +22,23 @@
 //! (norms → choose) → selective AdamW → residency accounting (§3.3) →
 //! metrics (measured wallclock + observed transfer bytes + modeled
 //! accelerator time).
+//!
+//! # Sharded data parallelism
+//!
+//! [`ShardedTrainer`] scales the same step across N worker backends (one
+//! OS thread each) over deterministic per-shard batch splits, with a
+//! **selection-gated all-reduce**: exploit steps move only the selected
+//! blocks' reduced gradient flats over the wire, explore steps gather
+//! every block once so the coordinator can reduce, rank norms and
+//! broadcast the choice signal. A fixed floor-half reduction order makes
+//! the result bit-identical to the single-worker [`Trainer`] at equal
+//! effective batch, across runs and shard counts — see
+//! [`sharded`](self) module docs and `tests/sharded_parity.rs`.
 
 mod costmodel;
+mod sharded;
 mod trainer;
 
 pub use costmodel::{CostModel, CostModelParams};
+pub use sharded::{ShardedTrainer, WorkerStats};
 pub use trainer::{ExecMode, Trainer, TrainSummary};

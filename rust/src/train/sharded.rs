@@ -1,0 +1,821 @@
+//! Sharded data-parallel training with a selection-gated all-reduce.
+//!
+//! [`ShardedTrainer`] runs N worker [`ReferenceBackend`] instances (one
+//! OS thread each) over deterministic per-shard batch splits
+//! ([`TrainBatcher::shard`]) and reduces their gradients through a
+//! coordinator with a **fixed reduction order**, so the result is
+//! bit-identical to the single-worker [`super::Trainer`] at equal
+//! effective batch size — across runs *and* across shard counts.
+//!
+//! # The two-phase selection-gated collective
+//!
+//! The paper's explore/exploit asymmetry gates the wire exactly like it
+//! gates compute:
+//!
+//! * **Exploit** (pre-decided) steps run the masked shard backward, so
+//!   only the *selected* blocks' gradient partials are gathered and only
+//!   their reduced flats are broadcast back — `O(selected params)` bytes
+//!   per leg, never `O(total params)`.
+//! * **Explore** (norm-ranking) steps need this step's full per-block
+//!   norm vector before the strategy can choose, and per-shard norm
+//!   scalars cannot be combined into the norms of the *summed* gradients
+//!   (the cross terms are lost), so every block's gradient partial is
+//!   gathered; the coordinator reduces, computes the norms once, and
+//!   broadcasts the `n_blocks` pre-clip f32 squared norms to the worker
+//!   replicas — the ranking signal their strategy/tracker replicas
+//!   consume to stay in lockstep.
+//!
+//! Every byte is counted in a [`CommStats`] (exported as `train_comm_*`
+//! registry gauges; the collective is wrapped in a `train/allreduce`
+//! tracer span so Chrome traces show the communication phase). The wire
+//! model is a parameter-server star: each logical all-reduce costs one
+//! gather leg plus one broadcast leg, each multiplied by the worker
+//! count — see
+//! [`CostModel::exploit_comm_bytes`](super::CostModel::exploit_comm_bytes) /
+//! [`CostModel::explore_comm_bytes`](super::CostModel::explore_comm_bytes)
+//! for the modeled counterpart.
+//!
+//! # Why replicas never diverge
+//!
+//! Every rank (and the coordinator) holds a full replica of the model
+//! state, the AdamW optimizer, the selection strategy and the grad-norm
+//! tracker, all seeded identically from the [`RunConfig`]. Each step:
+//!
+//! 1. every replica's strategy runs `decide` (same RNG trajectory);
+//! 2. workers run the shard backward over *disjoint, step-aligned*
+//!    slices of the unsharded batch stream, producing **undivided** loss
+//!    partials and gradient *subtree partials* (the shard kernels divide
+//!    by a globally summed target count and defer the cross-shard sum);
+//! 3. the coordinator folds the rank partials in a fixed floor-half
+//!    binary tree (`model::forward::tree_add_chunks`) — the same tree
+//!    the in-kernel per-entry reduction uses, with shard boundaries on
+//!    its internal nodes, so the fold bit-matches the single-worker
+//!    full-batch backward;
+//! 4. norms/clipping/selection run once on the coordinator over the
+//!    reduced gradients, and the post-clip selected flats (plus the
+//!    pre-clip squared norms and clip scale) are broadcast;
+//! 5. every replica applies the identical selective-AdamW update.
+//!
+//! Divergence is therefore structurally impossible: all replicas update
+//! from the same reduced gradients with the same selection and the same
+//! learning rate. The parity contract is pinned by
+//! `tests/sharded_parity.rs` (per-step loss bits + final-param bits vs
+//! the single-worker trainer across {1, 2, 4} shards).
+
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Method, RunConfig};
+use crate::data::{Batch, MathGen, Split, Suite, Tokenizer, TrainBatcher};
+use crate::model::forward::{loss_from_sum, tree_add_chunks, tree_sum_f32};
+use crate::model::ModelState;
+use crate::optimizer::{AdamWParams, SelectiveAdamW};
+use crate::runtime::{
+    Backend, CommStats, Manifest, Preset, RefExe, RefTensor, ReferenceBackend, TransferStats,
+};
+use crate::selection::{grad_norm, GradNormTracker, SelectionCtx, SelectionStrategy, StepPlan};
+use crate::telemetry::{CounterId, GaugeId, SpanId, Telemetry};
+
+use super::trainer::{build_strategy, clip_scale};
+
+/// Bytes charged to [`CommStats::ctrl_bytes`] per fixed-size control
+/// message leg (step command, per-shard target count, global denom).
+const CTRL_WORD_BYTES: u64 = 8;
+
+/// Coordinator → worker commands. One step is the sequence
+/// `Step → Denom → Update`; `Stats` and `Shutdown` are out-of-band.
+enum Cmd {
+    /// Begin a step: decide locally (replica RNG), draw the shard batch,
+    /// report the local non-pad target count.
+    Step,
+    /// The globally summed target count — run the shard backward with it.
+    Denom { denom: usize },
+    /// The reduced collective results: pre-clip f32 squared norms (when
+    /// this step reduced norms), the global clip scale (when clipping
+    /// fired), and the post-clip reduced gradient flats of the selected
+    /// blocks in ascending block order. Apply the identical update.
+    Update { norms_sq: Option<Vec<f32>>, scale: Option<f32>, grads: Vec<Vec<f32>> },
+    /// Report runtime counters (bench zero-alloc invariants).
+    Stats,
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+enum Msg {
+    /// Local non-pad target count of this step's shard batch.
+    Count { count: usize },
+    /// Undivided shard loss partial + gradient subtree partials (all
+    /// blocks, or the selected subset on masked steps).
+    Grads { loss_partial: f32, grads: Vec<Vec<f32>> },
+    /// Step applied; the worker backend's audit report (empty = sound).
+    Done { audit: Vec<String> },
+    Stats(WorkerStats),
+    /// Terminal worker error; the worker thread exits after sending.
+    Err { msg: String },
+}
+
+/// Per-worker runtime counters, snapshotted via [`ShardedTrainer::worker_stats`].
+/// The bench suite pins the steady state: zero fresh device-buffer
+/// allocations (`transfers.buffer_allocs` delta) and zero workspace-arena
+/// growth (`ws_grows` delta) per step once warm.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerStats {
+    /// The worker backend's host↔device transfer counters.
+    pub transfers: TransferStats,
+    /// The worker backend's workspace-arena slab allocations.
+    pub ws_grows: u64,
+}
+
+/// Telemetry handles registered once at construction (id-indexed hot
+/// path, like the single-worker trainer's `TrainMetrics`).
+#[derive(Clone, Copy)]
+struct ShardMetrics {
+    steps: CounterId,
+    masked_steps: CounterId,
+    loss: GaugeId,
+    /// One gauge per [`CommStats::GAUGE_NAMES`] entry, `train_comm_`-prefixed.
+    comm: [GaugeId; 5],
+    sp_allreduce: SpanId,
+}
+
+impl ShardMetrics {
+    fn register(tel: &mut Telemetry) -> Self {
+        let r = &mut tel.registry;
+        let comm = std::array::from_fn(|i| {
+            r.gauge(&format!("train_comm_{}", CommStats::GAUGE_NAMES[i]))
+        });
+        Self {
+            steps: r.counter("train_steps_total"),
+            masked_steps: r.counter("train_masked_steps_total"),
+            loss: r.gauge("train_loss"),
+            comm,
+            sp_allreduce: tel.tracer.register("train/allreduce"),
+        }
+    }
+}
+
+struct WorkerHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// N-way sharded data-parallel trainer over worker [`ReferenceBackend`]s.
+/// See the module docs for the collective design and the determinism
+/// contract. Base parameter table only (LoRA's adapter backward is not
+/// shard-decomposed).
+pub struct ShardedTrainer {
+    pub cfg: RunConfig,
+    pub preset: Preset,
+    /// Coordinator replica of the trainable parameters — always current
+    /// (the coordinator applies every update it broadcasts), so parity
+    /// tests and checkpointing read it without touching a worker.
+    pub state: ModelState,
+    n_shards: usize,
+    workers: Vec<WorkerHandle>,
+    opt: SelectiveAdamW,
+    strategy: Box<dyn SelectionStrategy>,
+    tracker: GradNormTracker,
+    /// Reduced (post-fold, post-clip) gradient staging, `substep_host`
+    /// semantics: unselected entries are shrunk to empty each step so a
+    /// stale gradient can never be read.
+    grads_host: Vec<Vec<f32>>,
+    /// Per-block rank-concatenated gather buffer (`n_shards × numel`),
+    /// reused across steps; the tree fold runs in place over it.
+    gather: Vec<Vec<f32>>,
+    /// Per-rank loss partials of the current step, reused across steps.
+    loss_parts: Vec<f32>,
+    comm: CommStats,
+    tel: Rc<Telemetry>,
+    tm: ShardMetrics,
+    step: u64,
+    masked_steps: u64,
+}
+
+impl ShardedTrainer {
+    /// Build the coordinator and spawn `n_shards` worker threads, each
+    /// owning its own [`ReferenceBackend`] and full training-state
+    /// replica. `n_shards` must be a power of two dividing the preset
+    /// batch size (so shard boundaries land on internal nodes of the
+    /// kernels' floor-half reduction tree — the bit-parity prerequisite).
+    pub fn new(cfg: RunConfig, n_shards: usize) -> Result<Self> {
+        let manifest = Manifest::builtin();
+        let preset = manifest.preset(&cfg.preset)?.clone();
+        cfg.validate(&preset)?;
+        if n_shards == 0 || !n_shards.is_power_of_two() {
+            return Err(anyhow!(
+                "n_shards must be a power of two (got {n_shards}): the rank fold must \
+                 align with the kernels' floor-half reduction tree"
+            ));
+        }
+        if preset.model.batch % n_shards != 0 {
+            return Err(anyhow!(
+                "{n_shards} shards do not divide preset batch {}",
+                preset.model.batch
+            ));
+        }
+        if matches!(cfg.method, Method::Lora { .. }) {
+            return Err(anyhow!(
+                "sharded training covers the base parameter table only \
+                 (the LoRA adapter backward is not shard-decomposed)"
+            ));
+        }
+        let n_blocks = preset.blocks.len();
+        let numels = preset.block_numels();
+        let state = ModelState::init(&preset.blocks, cfg.seed);
+        let adamw: AdamWParams = manifest.adamw.into();
+        let opt = SelectiveAdamW::new(&numels, adamw);
+        let strategy = build_strategy(&cfg, n_blocks)?;
+        let mut tel = Telemetry::new();
+        let tm = ShardMetrics::register(&mut tel);
+
+        let mut workers = Vec::with_capacity(n_shards);
+        for rank in 0..n_shards {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let (msg_tx, msg_rx) = channel::<Msg>();
+            let wcfg = cfg.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("shard-{rank}"))
+                .spawn(move || worker_main(wcfg, n_shards, rank, cmd_rx, msg_tx))?;
+            workers.push(WorkerHandle { tx: cmd_tx, rx: msg_rx, join: Some(join) });
+        }
+
+        Ok(Self {
+            cfg,
+            preset,
+            state,
+            n_shards,
+            workers,
+            opt,
+            strategy,
+            tracker: GradNormTracker::new(n_blocks),
+            grads_host: vec![Vec::new(); n_blocks],
+            gather: numels.iter().map(|&d| vec![0.0f32; d * n_shards]).collect(),
+            loss_parts: Vec::with_capacity(n_shards),
+            comm: CommStats::default(),
+            tel: Rc::new(tel),
+            tm,
+            step: 0,
+            masked_steps: 0,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn epoch(&self) -> u32 {
+        1 + (self.step / self.cfg.train.steps_per_epoch.max(1)) as u32
+    }
+
+    pub fn strategy_name(&self) -> String {
+        self.strategy.name()
+    }
+
+    /// Steps so far that took the masked (selection-gated) shard backward.
+    pub fn masked_steps(&self) -> u64 {
+        self.masked_steps
+    }
+
+    /// Cumulative inter-worker communication counters (see [`CommStats`]).
+    pub fn comm_stats(&self) -> CommStats {
+        self.comm
+    }
+
+    /// The coordinator's observability hub: step/masked-step counters,
+    /// the loss gauge, the `train_comm_*` gauges and the
+    /// `train/allreduce` tracer span. Purely an observer — model outputs
+    /// are bit-identical with telemetry on or off.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Snapshot every worker's runtime counters (transfer stats +
+    /// workspace-arena growth) — the bench suite's zero-alloc probe.
+    pub fn worker_stats(&self) -> Result<Vec<WorkerStats>> {
+        for (r, w) in self.workers.iter().enumerate() {
+            w.tx.send(Cmd::Stats).map_err(|_| anyhow!("worker {r} disconnected"))?;
+        }
+        (0..self.n_shards)
+            .map(|r| match self.recv(r)? {
+                Msg::Stats(s) => Ok(s),
+                _ => Err(anyhow!("worker {r}: unexpected reply to Stats")),
+            })
+            .collect()
+    }
+
+    fn recv(&self, rank: usize) -> Result<Msg> {
+        match self.workers[rank].rx.recv() {
+            Ok(Msg::Err { msg }) => Err(anyhow!("worker {rank}: {msg}")),
+            Ok(m) => Ok(m),
+            Err(_) => Err(anyhow!("worker {rank} disconnected")),
+        }
+    }
+
+    /// Run one data-parallel step across all shards; returns the global
+    /// loss (bit-identical to the single-worker trainer's).
+    pub fn step_once(&mut self) -> Result<f32> {
+        let n = self.n_shards;
+        let n_blocks = self.grads_host.len();
+        let numels = self.preset.block_numels();
+        let clip = self.cfg.train.grad_clip;
+        let tel = Rc::clone(&self.tel);
+
+        // 1. replicated pre-step decision (workers run the same decide on
+        // their own strategy replicas — Cmd::Step carries no selection)
+        let epoch = self.epoch();
+        let plan = self
+            .strategy
+            .decide(&SelectionCtx { step: self.step, epoch, grad_norms: &[] });
+        let decided = match plan {
+            StepPlan::Decided(sel) => Some(sel),
+            StepPlan::NeedsNorms => None,
+        };
+        let masked = matches!(&decided, Some(sel) if sel.len() < n_blocks);
+
+        // 2. global loss denominator: sum the shards' non-pad target
+        // counts so every shard kernel divides by the same number
+        for (r, w) in self.workers.iter().enumerate() {
+            w.tx.send(Cmd::Step).map_err(|_| anyhow!("worker {r} disconnected"))?;
+        }
+        self.comm.ctrl_bytes += CTRL_WORD_BYTES * n as u64;
+        let mut denom = 0usize;
+        for r in 0..n {
+            match self.recv(r)? {
+                Msg::Count { count } => denom += count,
+                _ => return Err(anyhow!("worker {r}: unexpected reply to Step")),
+            }
+        }
+        self.comm.ctrl_bytes += CTRL_WORD_BYTES * n as u64;
+        for (r, w) in self.workers.iter().enumerate() {
+            w.tx.send(Cmd::Denom { denom }).map_err(|_| anyhow!("worker {r} disconnected"))?;
+        }
+        self.comm.ctrl_bytes += CTRL_WORD_BYTES * n as u64;
+
+        // 3. gather phase of the all-reduce: receive rank partials in
+        // rank order, fold them in the fixed floor-half tree (the same
+        // shape the shard kernels used per entry, with shard boundaries
+        // on its internal nodes — the bit-parity alignment)
+        let grad_blocks: Vec<usize> = match (&decided, masked) {
+            (Some(sel), true) => sel.clone(),
+            _ => (0..n_blocks).collect(),
+        };
+        let sp_gather = tel.tracer.span(self.tm.sp_allreduce).arg(grad_blocks.len() as f64);
+        self.loss_parts.clear();
+        for r in 0..n {
+            match self.recv(r)? {
+                Msg::Grads { loss_partial, grads } => {
+                    if grads.len() != grad_blocks.len() {
+                        return Err(anyhow!(
+                            "worker {r} sent {} gradients for {} blocks",
+                            grads.len(),
+                            grad_blocks.len()
+                        ));
+                    }
+                    self.loss_parts.push(loss_partial);
+                    self.comm.ctrl_bytes += 4; // the loss partial
+                    for (j, &b) in grad_blocks.iter().enumerate() {
+                        let d = numels[b];
+                        if grads[j].len() != d {
+                            return Err(anyhow!(
+                                "worker {r} block {b}: {} elements, expected {d}",
+                                grads[j].len()
+                            ));
+                        }
+                        self.comm.grad_gather_bytes += (d * 4) as u64;
+                        self.gather[b][r * d..(r + 1) * d].copy_from_slice(&grads[j]);
+                    }
+                }
+                _ => return Err(anyhow!("worker {r}: unexpected reply to Denom")),
+            }
+        }
+        let loss = loss_from_sum(tree_sum_f32(&self.loss_parts), denom);
+        for i in 0..n_blocks {
+            self.grads_host[i] = Vec::new();
+        }
+        for &b in &grad_blocks {
+            let d = numels[b];
+            tree_add_chunks(&mut self.gather[b], d);
+            self.grads_host[b] = self.gather[b][..d].to_vec();
+        }
+        self.comm.allreduce_ops += 1;
+        drop(sp_gather);
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {}: {loss}", self.step));
+        }
+
+        // 4. norms + clip + tracker over the *reduced* gradients —
+        // mirrors the single-worker host loop's gating exactly
+        let (norms_sq, scale) = if masked {
+            match clip {
+                Some(c) => {
+                    let sel = decided.as_ref().expect("masked implies decided");
+                    let (sq, s) = self.norms_and_clip(sel, Some(c), true);
+                    (Some(sq), s)
+                }
+                None => (None, None),
+            }
+        } else if decided.is_none() || clip.is_some() {
+            let all: Vec<usize> = (0..n_blocks).collect();
+            let (sq, s) = self.norms_and_clip(&all, clip, false);
+            (Some(sq), s)
+        } else {
+            (None, None)
+        };
+
+        // resolve the selection (norm-ranking strategies choose now, on
+        // norms derived from the reduced full-batch gradients)
+        let selected = match decided {
+            Some(sel) => sel,
+            None => self.strategy.choose(&SelectionCtx {
+                step: self.step,
+                epoch,
+                grad_norms: &self.tracker.last,
+            }),
+        };
+
+        // 5. the coordinator applies the same update it broadcasts
+        let lr = self.cfg.lr_at(self.step);
+        self.opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
+
+        // 6. broadcast phase of the all-reduce: post-clip selected flats
+        // (+ pre-clip squared norms and clip scale for the replicas'
+        // trackers), identical payload to every rank
+        let sp_bcast = tel.tracer.span(self.tm.sp_allreduce).arg(selected.len() as f64);
+        let bcast_bytes: usize = selected.iter().map(|&b| self.grads_host[b].len() * 4).sum();
+        for (r, w) in self.workers.iter().enumerate() {
+            let grads: Vec<Vec<f32>> =
+                selected.iter().map(|&b| self.grads_host[b].clone()).collect();
+            w.tx.send(Cmd::Update { norms_sq: norms_sq.clone(), scale, grads })
+                .map_err(|_| anyhow!("worker {r} disconnected"))?;
+        }
+        self.comm.grad_bcast_bytes += (bcast_bytes * n) as u64;
+        if let Some(nsq) = &norms_sq {
+            self.comm.norm_bcast_bytes += (nsq.len() * 4 * n) as u64;
+            self.comm.allreduce_ops += 1;
+        }
+        if scale.is_some() {
+            self.comm.ctrl_bytes += 4 * n as u64;
+        }
+        drop(sp_bcast);
+
+        // 7. every worker's audit report — all ranks, not just rank 0,
+        // so the workspace-arena auditors see every shard's backend
+        for r in 0..n {
+            match self.recv(r)? {
+                Msg::Done { audit } => {
+                    if !audit.is_empty() {
+                        return Err(anyhow!(
+                            "worker {r} audit failed at step {}: {}",
+                            self.step,
+                            audit.join("; ")
+                        ));
+                    }
+                }
+                _ => return Err(anyhow!("worker {r}: unexpected reply to Update")),
+            }
+        }
+
+        // 8. metrics
+        if masked {
+            self.masked_steps += 1;
+        }
+        let reg = &tel.registry;
+        reg.inc(self.tm.steps);
+        if masked {
+            reg.inc(self.tm.masked_steps);
+        }
+        reg.set(self.tm.loss, loss as f64);
+        for (g, v) in self.tm.comm.iter().zip(self.comm.gauge_values()) {
+            reg.set(*g, v);
+        }
+
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Run until `steps` total steps have been taken; returns the last loss.
+    pub fn run_steps(&mut self, steps: u64) -> Result<f32> {
+        let mut last = f32::NAN;
+        while self.step < steps {
+            last = self.step_once()?;
+        }
+        Ok(last)
+    }
+
+    /// Pre-clip f32 squared norms over `blocks`' reduced gradients,
+    /// global clip applied in place, post-clip norms folded into the
+    /// tracker — byte-for-byte the single-worker host loop's
+    /// `block_norms_boundary` + `clip_global` + record sequence. Returns
+    /// what the worker replicas need to reproduce the tracker exactly:
+    /// the pre-clip squared norms and the clip scale (if it fired).
+    fn norms_and_clip(
+        &mut self,
+        blocks: &[usize],
+        clip: Option<f32>,
+        selected_only: bool,
+    ) -> (Vec<f32>, Option<f32>) {
+        let sq: Vec<f32> = blocks
+            .iter()
+            .map(|&b| grad_norm::block_norm_sq(&self.grads_host[b]) as f32)
+            .collect();
+        let mut norms: Vec<f64> = sq.iter().map(|&s| grad_norm::norm_from_sq_f32(s)).collect();
+        let mut scale = None;
+        if let Some(c) = clip {
+            if let Some(s) = clip_scale(c, &norms) {
+                for &b in blocks {
+                    for x in self.grads_host[b].iter_mut() {
+                        *x *= s;
+                    }
+                }
+                for nn in norms.iter_mut() {
+                    *nn *= s as f64;
+                }
+                scale = Some(s);
+            }
+        }
+        if selected_only {
+            self.tracker.record_selected(blocks, &norms);
+        } else {
+            self.tracker.record(&norms);
+        }
+        (sq, scale)
+    }
+}
+
+impl Drop for ShardedTrainer {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Per-step context a worker carries between the `Step`, `Denom` and
+/// `Update` commands of one step.
+struct PendingStep {
+    decided: Option<Vec<usize>>,
+    masked: bool,
+    batch: Batch,
+    epoch: u32,
+}
+
+/// One worker's full training-state replica. Not `Send` (it owns a
+/// [`ReferenceBackend`]) — constructed and driven entirely inside its
+/// thread by [`worker_main`].
+struct Worker {
+    backend: ReferenceBackend,
+    cfg: RunConfig,
+    state: ModelState,
+    opt: SelectiveAdamW,
+    strategy: Box<dyn SelectionStrategy>,
+    tracker: GradNormTracker,
+    batcher: TrainBatcher,
+    exe_shard: Rc<RefExe>,
+    exe_masked_shard: Rc<RefExe>,
+    device_blocks: Vec<RefTensor>,
+    dirty: Vec<bool>,
+    /// Reduced-gradient staging for the optimizer (unselected entries
+    /// shrunk to empty, host-loop semantics).
+    grads_host: Vec<Vec<f32>>,
+    pad: i32,
+    step: u64,
+}
+
+impl Worker {
+    fn new(cfg: RunConfig, n_shards: usize, rank: usize) -> Result<Self> {
+        let backend = ReferenceBackend::new();
+        let preset = backend.manifest().preset(&cfg.preset)?.clone();
+        let tok = Tokenizer::from_spec(&backend.manifest().tokenizer);
+        let pad = tok.pad;
+        let suite = Suite::parse(&cfg.data.train_suite)
+            .ok_or_else(|| anyhow!("unknown suite {:?}", cfg.data.train_suite))?;
+        let gen = MathGen::new(suite, Split::Train, cfg.data.seed);
+        let batcher = TrainBatcher::new(gen, tok, preset.model.batch, preset.model.seq_len)
+            .shard(n_shards, rank);
+        let state = ModelState::init(&preset.blocks, cfg.seed);
+        let numels = preset.block_numels();
+        let n_blocks = numels.len();
+        let adamw: AdamWParams = backend.manifest().adamw.into();
+        let opt = SelectiveAdamW::new(&numels, adamw);
+        let strategy = build_strategy(&cfg, n_blocks)?;
+        let exe_shard = backend.load_preset_exe(&cfg.preset, "train_step_shard")?;
+        let exe_masked_shard = backend.load_preset_exe(&cfg.preset, "train_step_masked_shard")?;
+        let device_blocks: Vec<RefTensor> = state
+            .flats
+            .iter()
+            .map(|f| backend.upload_f32(f, &[f.len()]))
+            .collect::<Result<_>>()?;
+        Ok(Self {
+            backend,
+            cfg,
+            state,
+            opt,
+            strategy,
+            tracker: GradNormTracker::new(n_blocks),
+            batcher,
+            exe_shard,
+            exe_masked_shard,
+            device_blocks,
+            dirty: vec![false; n_blocks],
+            grads_host: vec![Vec::new(); n_blocks],
+            pad,
+            step: 0,
+        })
+    }
+
+    fn epoch(&self) -> u32 {
+        1 + (self.step / self.cfg.train.steps_per_epoch.max(1)) as u32
+    }
+
+    /// `Cmd::Step`: decide on the local strategy replica (same RNG
+    /// trajectory as every other replica), draw this rank's shard batch,
+    /// report its non-pad target count.
+    fn begin_step(&mut self, tx: &Sender<Msg>, pending: &mut Option<PendingStep>) -> Result<()> {
+        let epoch = self.epoch();
+        let plan = self
+            .strategy
+            .decide(&SelectionCtx { step: self.step, epoch, grad_norms: &[] });
+        let decided = match plan {
+            StepPlan::Decided(sel) => Some(sel),
+            StepPlan::NeedsNorms => None,
+        };
+        let masked = matches!(&decided, Some(sel) if sel.len() < self.dirty.len());
+        let batch = self.batcher.next_batch();
+        let count = batch.targets.iter().filter(|&&t| t != self.pad).count();
+        *pending = Some(PendingStep { decided, masked, batch, epoch });
+        tx.send(Msg::Count { count }).map_err(|_| anyhow!("coordinator disconnected"))?;
+        Ok(())
+    }
+
+    /// `Cmd::Denom`: run the shard backward with the global denominator
+    /// and send the undivided loss partial + gradient subtree partials.
+    fn execute_shard(
+        &mut self,
+        tx: &Sender<Msg>,
+        pending: &Option<PendingStep>,
+        denom: usize,
+    ) -> Result<()> {
+        let ps = pending.as_ref().ok_or_else(|| anyhow!("Denom before Step"))?;
+        let n_blocks = self.dirty.len();
+        // re-upload parameter blocks the optimizer dirtied last step
+        for (i, dirty) in self.dirty.iter_mut().enumerate() {
+            if *dirty {
+                let f = &self.state.flats[i];
+                self.device_blocks[i] = self.backend.upload_f32(f, &[f.len()])?;
+                *dirty = false;
+            }
+        }
+        let dims = [ps.batch.batch, ps.batch.seq_len];
+        let tok_buf = self.backend.upload_i32(&ps.batch.tokens, &dims)?;
+        let tgt_buf = self.backend.upload_i32(&ps.batch.targets, &dims)?;
+        let den_buf = self.backend.upload_i32(&[denom as i32], &[1])?;
+        let mask_buf = if ps.masked {
+            let sel = ps.decided.as_ref().expect("masked implies decided");
+            let mut mask = vec![0i32; n_blocks];
+            for &b in sel {
+                mask[b] = 1;
+            }
+            Some(self.backend.upload_i32(&mask, &[n_blocks])?)
+        } else {
+            None
+        };
+        let exe = if ps.masked { &self.exe_masked_shard } else { &self.exe_shard };
+        let mut args: Vec<&RefTensor> = Vec::with_capacity(exe.n_inputs);
+        args.extend(self.device_blocks.iter());
+        args.push(&tok_buf);
+        args.push(&tgt_buf);
+        args.push(&den_buf);
+        if let Some(m) = &mask_buf {
+            args.push(m);
+        }
+        debug_assert_eq!(args.len(), exe.n_inputs);
+        let mut out = self.backend.execute_to_host(exe, &args)?;
+        let loss_partial = out.scalar_f32(0)?;
+        let n_out = out.outputs.len();
+        let grads: Vec<Vec<f32>> =
+            (1..n_out).map(|i| out.take_vec(i)).collect::<Result<_>>()?;
+        tx.send(Msg::Grads { loss_partial, grads })
+            .map_err(|_| anyhow!("coordinator disconnected"))?;
+        Ok(())
+    }
+
+    /// `Cmd::Update`: reconstruct the tracker from the broadcast norms
+    /// (pre-clip squared values, then the clip scale — bit-matching the
+    /// coordinator's `norms_and_clip`), resolve the selection on the
+    /// local replica, apply the identical selective-AdamW update, and
+    /// report this backend's audit.
+    fn apply_update(
+        &mut self,
+        tx: &Sender<Msg>,
+        pending: &mut Option<PendingStep>,
+        norms_sq: Option<Vec<f32>>,
+        scale: Option<f32>,
+        grads: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let ps = pending.take().ok_or_else(|| anyhow!("Update before Step"))?;
+        if let Some(nsq) = norms_sq {
+            let mut norms: Vec<f64> =
+                nsq.iter().map(|&s| grad_norm::norm_from_sq_f32(s)).collect();
+            if let Some(sc) = scale {
+                for n in norms.iter_mut() {
+                    *n *= sc as f64;
+                }
+            }
+            if ps.masked {
+                let sel = ps.decided.as_ref().expect("masked implies decided");
+                self.tracker.record_selected(sel, &norms);
+            } else {
+                self.tracker.record(&norms);
+            }
+        }
+        let selected = match ps.decided {
+            Some(sel) => sel,
+            None => self.strategy.choose(&SelectionCtx {
+                step: self.step,
+                epoch: ps.epoch,
+                grad_norms: &self.tracker.last,
+            }),
+        };
+        if grads.len() != selected.len() {
+            return Err(anyhow!(
+                "update carried {} gradients for {} selected blocks",
+                grads.len(),
+                selected.len()
+            ));
+        }
+        for g in self.grads_host.iter_mut() {
+            *g = Vec::new();
+        }
+        for (g, &b) in grads.into_iter().zip(&selected) {
+            self.grads_host[b] = g;
+        }
+        let lr = self.cfg.lr_at(self.step);
+        self.opt.update_selected(&selected, &mut self.state.flats, &self.grads_host, lr);
+        for &b in &selected {
+            self.dirty[b] = true;
+        }
+        self.step += 1;
+        // audit *this* worker's backend — the coordinator checks every
+        // rank's report, not just rank 0's
+        let audit = self.backend.audit_report();
+        tx.send(Msg::Done { audit }).map_err(|_| anyhow!("coordinator disconnected"))?;
+        Ok(())
+    }
+
+    fn stats(&self) -> WorkerStats {
+        WorkerStats {
+            transfers: self.backend.transfer_stats(),
+            ws_grows: self.backend.workspace_stats().grows,
+        }
+    }
+}
+
+/// Worker thread entry point: build the replica, then serve commands
+/// until `Shutdown` or a terminal error (reported as [`Msg::Err`]).
+fn worker_main(
+    cfg: RunConfig,
+    n_shards: usize,
+    rank: usize,
+    rx: Receiver<Cmd>,
+    tx: Sender<Msg>,
+) {
+    let mut w = match Worker::new(cfg, n_shards, rank) {
+        Ok(w) => w,
+        Err(e) => {
+            let _ = tx.send(Msg::Err { msg: format!("init: {e}") });
+            return;
+        }
+    };
+    let mut pending: Option<PendingStep> = None;
+    for cmd in rx.iter() {
+        let r = match cmd {
+            Cmd::Shutdown => break,
+            Cmd::Step => w.begin_step(&tx, &mut pending),
+            Cmd::Denom { denom } => w.execute_shard(&tx, &pending, denom),
+            Cmd::Update { norms_sq, scale, grads } => {
+                w.apply_update(&tx, &mut pending, norms_sq, scale, grads)
+            }
+            Cmd::Stats => {
+                let s = w.stats();
+                tx.send(Msg::Stats(s)).map_err(|_| anyhow!("coordinator disconnected"))
+            }
+        };
+        if let Err(e) = r {
+            let _ = tx.send(Msg::Err { msg: e.to_string() });
+            return;
+        }
+    }
+}

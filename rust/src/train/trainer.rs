@@ -1090,7 +1090,7 @@ struct SubstepOutcome {
 /// Scale factor that brings the global L2 norm over `norms` down to
 /// `clip`, or `None` when no clipping is needed. Shared by both execution
 /// modes so they make bit-identical clip decisions.
-fn clip_scale(clip: f32, norms: &[f64]) -> Option<f32> {
+pub(crate) fn clip_scale(clip: f32, norms: &[f64]) -> Option<f32> {
     let global: f64 = norms.iter().map(|&n| n * n).sum::<f64>().sqrt();
     if global > clip as f64 {
         Some((clip as f64 / global) as f32)
@@ -1103,7 +1103,12 @@ fn clip_scale(clip: f32, norms: &[f64]) -> Option<f32> {
 /// L2 norm over `norms` does not exceed `clip`. One code path for both
 /// step shapes: the full backward clips every block, the masked backward
 /// only the selected ones (the only gradients that exist).
-fn clip_global(clip: f32, blocks: &[usize], grads_host: &mut [Vec<f32>], norms: &mut [f64]) {
+pub(crate) fn clip_global(
+    clip: f32,
+    blocks: &[usize],
+    grads_host: &mut [Vec<f32>],
+    norms: &mut [f64],
+) {
     debug_assert_eq!(blocks.len(), norms.len());
     if let Some(scale) = clip_scale(clip, norms) {
         for &b in blocks {
@@ -1117,7 +1122,10 @@ fn clip_global(clip: f32, blocks: &[usize], grads_host: &mut [Vec<f32>], norms: 
     }
 }
 
-fn build_strategy(cfg: &RunConfig, n_blocks: usize) -> Result<Box<dyn SelectionStrategy>> {
+pub(crate) fn build_strategy(
+    cfg: &RunConfig,
+    n_blocks: usize,
+) -> Result<Box<dyn SelectionStrategy>> {
     Ok(match &cfg.method {
         Method::Full | Method::Lora { .. } => Box::new(FullSelector::new(n_blocks)),
         Method::TopK { pct } => {

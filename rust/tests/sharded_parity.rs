@@ -1,0 +1,301 @@
+//! Sharded data-parallel training contracts:
+//!
+//! 1. [`ShardedTrainer`] is a **bit-match** of the single-worker
+//!    host-loop `Trainer` at equal effective batch — per-step loss bits
+//!    and final parameter bits over ≥24 steps, across {1, 2, 4} shards ×
+//!    {pure-exploit, top-k explore, masked+clip, full+clip} step shapes;
+//! 2. the all-reduced per-block gradient norms bit-match the norms of
+//!    the full-batch gradients (the property the explore phase's
+//!    gather-then-reduce design exists to guarantee: per-shard norm
+//!    scalars lose the cross terms, reduced flats don't);
+//! 3. the selection-gated collective's byte accounting is exact — an
+//!    exploit step moves `n_workers · selected_params · 4` bytes per
+//!    all-reduce leg, an explore step gathers every block and adds one
+//!    squared-norm f32 per block to the broadcast;
+//! 4. the steady state allocates nothing on any worker: device-buffer
+//!    allocs and workspace-arena grows are zero per step once warm.
+
+use adagradselect::config::{Method, RunConfig};
+use adagradselect::data::{MathGen, Split, Suite, Tokenizer, TrainBatcher};
+use adagradselect::model::forward::{loss_from_sum, tree_add_chunks, tree_sum_f32};
+use adagradselect::model::ModelState;
+use adagradselect::runtime::{Backend, ReferenceBackend};
+use adagradselect::selection::grad_norm::block_norm_sq;
+use adagradselect::train::{ShardedTrainer, Trainer};
+
+const STEPS: u64 = 24;
+
+fn cfg(method: Method, clip: Option<f32>) -> RunConfig {
+    let mut cfg = RunConfig::preset_defaults("test-tiny");
+    cfg.method = method;
+    cfg.train.steps = STEPS;
+    cfg.train.steps_per_epoch = STEPS / 2;
+    cfg.train.log_every = 0;
+    cfg.train.grad_clip = clip;
+    cfg
+}
+
+fn exploit_method() -> Method {
+    // ε₀ = 0 ⇒ every step is a pre-decided (masked) exploit step
+    Method::AdaGradSelect {
+        pct: 30.0,
+        eps0: 0.0,
+        lambda: None,
+        delta: 1.0,
+        explore_after_epoch1: false,
+        uniform_exploit: false,
+    }
+}
+
+/// Drive the sharded trainer at each shard count against the
+/// single-worker host-loop oracle and assert bitwise identity of the
+/// per-step losses and the final parameters.
+fn assert_shard_parity(method: Method, clip: Option<f32>, label: &str) {
+    for n_shards in [1usize, 2, 4] {
+        let engine = ReferenceBackend::new();
+        let mut single = Trainer::new_host_loop(&engine, cfg(method.clone(), clip)).unwrap();
+        let mut sharded = ShardedTrainer::new(cfg(method.clone(), clip), n_shards).unwrap();
+        assert_eq!(sharded.n_shards(), n_shards);
+
+        for step in 0..STEPS {
+            let ls = single.step_once().unwrap();
+            let ld = sharded.step_once().unwrap();
+            assert_eq!(
+                ld.to_bits(),
+                ls.to_bits(),
+                "{label}/{n_shards} shards: loss diverged at step {step}: \
+                 sharded {ld} vs single {ls}"
+            );
+        }
+
+        for (i, (a, b)) in sharded.state.flats.iter().zip(&single.state.flats).enumerate() {
+            assert_eq!(
+                a, b,
+                "{label}/{n_shards} shards: final parameters of block {i} are not a bit-match"
+            );
+        }
+    }
+}
+
+#[test]
+fn exploit_bit_matches_single_worker() {
+    assert_shard_parity(exploit_method(), None, "exploit");
+}
+
+#[test]
+fn topk_explore_bit_matches_single_worker() {
+    // top-k ranks every step: full gather, coordinator norms, broadcast
+    // squared norms drive every replica's choose()
+    assert_shard_parity(Method::TopK { pct: 30.0 }, None, "topk-explore");
+}
+
+#[test]
+fn masked_clipped_bit_matches_single_worker() {
+    // masked backward + selected-block norms + global clip: the scale
+    // and the selected squared norms ride the broadcast
+    assert_shard_parity(Method::Fixed { blocks: vec![1, 3] }, Some(1.0), "masked-clip");
+}
+
+#[test]
+fn full_fine_tuning_with_clip_bit_matches_single_worker() {
+    assert_shard_parity(Method::Full, Some(1.0), "full-clip");
+}
+
+#[test]
+fn run_reproduces_across_invocations() {
+    // same config, same shard count, fresh processes-worth of state:
+    // identical loss trajectory (determinism across runs, not just vs
+    // the single worker)
+    let run = || {
+        let mut t = ShardedTrainer::new(cfg(Method::TopK { pct: 30.0 }, Some(1.0)), 2).unwrap();
+        (0..8).map(|_| t.step_once().unwrap().to_bits()).collect::<Vec<u32>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn sharded_trainer_rejects_bad_shapes() {
+    // 3 does not divide test-tiny's batch of 4 (and is not a power of two)
+    assert!(ShardedTrainer::new(cfg(Method::Full, None), 3).is_err());
+    assert!(ShardedTrainer::new(cfg(Method::Full, None), 0).is_err());
+    // LoRA's adapter backward is not shard-decomposed
+    assert!(ShardedTrainer::new(cfg(Method::Lora { double_rank: false }, None), 2).is_err());
+}
+
+/// Property: folding per-shard gradient partials through the fixed
+/// floor-half tree reproduces the full-batch gradients — and therefore
+/// the per-block norms — bit-for-bit, at every power-of-two shard count.
+#[test]
+fn all_reduced_block_norms_bit_match_full_batch_norms() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset("test-tiny").unwrap().clone();
+    let (b, s) = (preset.model.batch, preset.model.seq_len);
+    let n_blocks = preset.blocks.len();
+    let state = ModelState::init(&preset.blocks, 7);
+    let blocks: Vec<_> = state
+        .flats
+        .iter()
+        .map(|f| engine.upload_f32(f, &[f.len()]).unwrap())
+        .collect();
+
+    let tok = Tokenizer::from_spec(&engine.manifest().tokenizer);
+    let pad = tok.pad;
+    let mut batcher = TrainBatcher::new(MathGen::new(Suite::Gsm8kSim, Split::Train, 0), tok, b, s);
+    let batch = batcher.next_batch();
+    let denom = batch.targets.iter().filter(|&&t| t != pad).count();
+
+    // full-batch oracle: the single-worker entry
+    let exe_full = engine.load_preset_exe("test-tiny", "train_step").unwrap();
+    let tok_buf = engine.upload_i32(&batch.tokens, &[b, s]).unwrap();
+    let tgt_buf = engine.upload_i32(&batch.targets, &[b, s]).unwrap();
+    let mut args: Vec<_> = blocks.iter().collect();
+    args.push(&tok_buf);
+    args.push(&tgt_buf);
+    let mut full = engine.execute_to_host(&exe_full, &args).unwrap();
+    let loss_full = full.scalar_f32(0).unwrap();
+    let grads_full: Vec<Vec<f32>> =
+        (1..=n_blocks).map(|i| full.take_vec(i).unwrap()).collect();
+
+    let exe_shard = engine.load_preset_exe("test-tiny", "train_step_shard").unwrap();
+    let den_buf = engine.upload_i32(&[denom as i32], &[1]).unwrap();
+    for n_shards in [1usize, 2, 4] {
+        let rows = b / n_shards;
+        let mut loss_parts = Vec::new();
+        let mut gather: Vec<Vec<f32>> =
+            grads_full.iter().map(|g| vec![0.0f32; g.len() * n_shards]).collect();
+        for r in 0..n_shards {
+            let lo = r * rows * s;
+            let hi = (r + 1) * rows * s;
+            let tok_buf = engine.upload_i32(&batch.tokens[lo..hi], &[rows, s]).unwrap();
+            let tgt_buf = engine.upload_i32(&batch.targets[lo..hi], &[rows, s]).unwrap();
+            let mut args: Vec<_> = blocks.iter().collect();
+            args.push(&tok_buf);
+            args.push(&tgt_buf);
+            args.push(&den_buf);
+            let mut out = engine.execute_to_host(&exe_shard, &args).unwrap();
+            loss_parts.push(out.scalar_f32(0).unwrap());
+            for i in 0..n_blocks {
+                let g = out.take_vec(1 + i).unwrap();
+                let d = grads_full[i].len();
+                gather[i][r * d..(r + 1) * d].copy_from_slice(&g);
+            }
+        }
+        let loss = loss_from_sum(tree_sum_f32(&loss_parts), denom);
+        assert_eq!(
+            loss.to_bits(),
+            loss_full.to_bits(),
+            "{n_shards} shards: reduced loss is not a bit-match"
+        );
+        for i in 0..n_blocks {
+            let d = grads_full[i].len();
+            tree_add_chunks(&mut gather[i], d);
+            assert_eq!(
+                &gather[i][..d],
+                &grads_full[i][..],
+                "{n_shards} shards: reduced gradient of block {i} is not a bit-match"
+            );
+            assert_eq!(
+                block_norm_sq(&gather[i][..d]).to_bits(),
+                block_norm_sq(&grads_full[i]).to_bits(),
+                "{n_shards} shards: all-reduced norm of block {i} is not a bit-match"
+            );
+        }
+    }
+}
+
+/// The selection gate on the wire: per-step byte deltas of the
+/// [`CommStats`](adagradselect::runtime::CommStats) counters equal the
+/// analytic model for both step shapes.
+#[test]
+fn comm_bytes_match_analytic_model() {
+    let engine = ReferenceBackend::new();
+    let preset = engine.manifest().preset("test-tiny").unwrap().clone();
+    let numels = preset.block_numels();
+    let n_blocks = numels.len();
+    let p_total: u64 = numels.iter().map(|&d| d as u64).sum();
+    let sel = vec![n_blocks - 2, n_blocks - 1];
+    let p_sel: u64 = sel.iter().map(|&b| numels[b] as u64).sum();
+    let n = 2usize;
+
+    // exploit: only the selected blocks' flats cross, each leg × workers
+    let mut t = ShardedTrainer::new(cfg(Method::Fixed { blocks: sel.clone() }, None), n).unwrap();
+    for step in 0..4u64 {
+        let before = t.comm_stats();
+        t.step_once().unwrap();
+        let d = t.comm_stats().delta_since(&before);
+        assert_eq!(
+            d.grad_gather_bytes,
+            n as u64 * p_sel * 4,
+            "step {step}: exploit gather must move selected params only"
+        );
+        assert_eq!(d.grad_bcast_bytes, n as u64 * p_sel * 4, "step {step}: exploit bcast");
+        assert_eq!(d.norm_bcast_bytes, 0, "step {step}: exploit steps broadcast no norms");
+        assert_eq!(d.allreduce_ops, 1, "step {step}: one grad all-reduce");
+    }
+
+    // explore: every block is gathered; the broadcast carries the
+    // selected flats plus one pre-clip squared norm per block
+    let mut t = ShardedTrainer::new(cfg(Method::TopK { pct: 30.0 }, None), n).unwrap();
+    for step in 0..4u64 {
+        let before = t.comm_stats();
+        t.step_once().unwrap();
+        let d = t.comm_stats().delta_since(&before);
+        assert_eq!(
+            d.grad_gather_bytes,
+            n as u64 * p_total * 4,
+            "step {step}: explore gather must move every block"
+        );
+        assert_eq!(
+            d.norm_bcast_bytes,
+            n as u64 * n_blocks as u64 * 4,
+            "step {step}: explore bcast carries one squared norm per block"
+        );
+        assert!(
+            d.grad_bcast_bytes < n as u64 * p_total * 4,
+            "step {step}: explore bcast must still be selection-gated"
+        );
+        assert_eq!(d.allreduce_ops, 2, "step {step}: grad + norm collectives");
+    }
+}
+
+#[test]
+fn steady_state_allocates_nothing_on_any_worker() {
+    // fixed selection ⇒ identical upload shapes and arena footprint
+    // every step, so the pools and arenas must reach a fixed point
+    let mut t = ShardedTrainer::new(cfg(Method::Fixed { blocks: vec![1, 3] }, None), 2).unwrap();
+    // warm-up: buffer pools and workspace arenas reach steady shape
+    for _ in 0..3 {
+        t.step_once().unwrap();
+    }
+    let before = t.worker_stats().unwrap();
+    for _ in 0..4 {
+        t.step_once().unwrap();
+    }
+    let after = t.worker_stats().unwrap();
+    for (r, (a, b)) in before.iter().zip(&after).enumerate() {
+        let d = b.transfers.delta_since(&a.transfers);
+        assert_eq!(d.buffer_allocs, 0, "worker {r}: steady state must not allocate buffers");
+        assert_eq!(b.ws_grows, a.ws_grows, "worker {r}: workspace arena must not grow");
+    }
+}
+
+#[test]
+fn comm_gauges_export_the_counters() {
+    let mut t = ShardedTrainer::new(cfg(Method::TopK { pct: 30.0 }, Some(1.0)), 2).unwrap();
+    for _ in 0..3 {
+        t.step_once().unwrap();
+    }
+    let stats = t.comm_stats();
+    let reg = &t.telemetry().registry;
+    for (name, want) in [
+        ("train_comm_grad_gather_bytes", stats.grad_gather_bytes as f64),
+        ("train_comm_grad_bcast_bytes", stats.grad_bcast_bytes as f64),
+        ("train_comm_norm_bcast_bytes", stats.norm_bcast_bytes as f64),
+        ("train_comm_ctrl_bytes", stats.ctrl_bytes as f64),
+        ("train_comm_allreduce_ops", stats.allreduce_ops as f64),
+    ] {
+        let id = reg.gauge_by_name(name).unwrap_or_else(|| panic!("{name} not registered"));
+        assert_eq!(reg.gauge_value(id), want, "{name}");
+        assert!(want > 0.0, "{name} must observe traffic after 3 steps");
+    }
+}

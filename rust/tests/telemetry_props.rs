@@ -213,6 +213,46 @@ fn serve_exposition_and_trace_are_well_formed() {
     }
 }
 
+/// The sharded trainer's communication telemetry is replayable: two runs
+/// of the same config produce bit-identical `train_comm_*` gauges (the
+/// collective's byte accounting is deterministic, not wallclock-shaped)
+/// and identical step counters.
+#[test]
+fn sharded_train_comm_gauges_are_deterministic_across_runs() {
+    use adagradselect::config::{Method, RunConfig};
+    use adagradselect::train::ShardedTrainer;
+
+    let run = || {
+        let mut cfg = RunConfig::preset_defaults(PRESET);
+        cfg.method = Method::TopK { pct: 30.0 };
+        cfg.train.steps = 6;
+        cfg.train.steps_per_epoch = 3;
+        cfg.train.log_every = 0;
+        let mut t = ShardedTrainer::new(cfg, 2).unwrap();
+        for _ in 0..6 {
+            t.step_once().unwrap();
+        }
+        t
+    };
+    let (a, b) = (run(), run());
+    let (reg_a, reg_b) = (&a.telemetry().registry, &b.telemetry().registry);
+    assert_eq!(reg_a.counters_snapshot(), reg_b.counters_snapshot());
+    for name in [
+        "train_comm_grad_gather_bytes",
+        "train_comm_grad_bcast_bytes",
+        "train_comm_norm_bcast_bytes",
+        "train_comm_ctrl_bytes",
+        "train_comm_allreduce_ops",
+    ] {
+        let ia = reg_a.gauge_by_name(name).unwrap_or_else(|| panic!("{name} not registered"));
+        let ib = reg_b.gauge_by_name(name).unwrap_or_else(|| panic!("{name} not registered"));
+        let (va, vb) = (reg_a.gauge_value(ia), reg_b.gauge_value(ib));
+        assert_eq!(va, vb, "{name} must be replayable");
+        assert!(va > 0.0, "{name} must observe traffic after 6 steps");
+    }
+    assert_eq!(a.comm_stats(), b.comm_stats(), "CommStats counters must be replayable");
+}
+
 /// One bucket spans a 2^(1/BUCKETS_PER_OCTAVE) factor — the resolution
 /// contract the README advertises (~9%).
 #[test]
